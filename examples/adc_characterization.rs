@@ -1,0 +1,66 @@
+//! ADC characterization bench-top: everything the paper measured on the
+//! 65 nm chip, against the behavioural converter — staircase, DNL/INL,
+//! per-mode latency/energy, asymmetric-search savings, and the Table I
+//! comparison. A compact tour of the `adc` + `energy` modules.
+//!
+//! Run: `cargo run --release --example adc_characterization`
+
+use adcim::adc::metrics::{linearity, staircase};
+use adcim::adc::{binomial_mav_pmf, Adc, AsymmetricSearch, ImmersedAdc, ImmersedMode};
+use adcim::analog::NoiseModel;
+use adcim::energy::{adc_area_um2, adc_energy_pj, adc_latency_cycles, AdcStyle};
+use adcim::util::Rng;
+
+fn main() {
+    let bits = 5u8;
+    let mut rng = Rng::new(0xcafe);
+    let noise = NoiseModel::default();
+
+    println!("== memory-immersed converter, {bits}-bit, paper geometry (16x32 arrays) ==\n");
+    for mode in [ImmersedMode::Sar, ImmersedMode::Flash, ImmersedMode::Hybrid { flash_bits: 2 }] {
+        let mut adc = ImmersedAdc::sample(bits, 1.0, mode, 32, 20.0, &noise, &mut rng);
+        let lin = linearity(&mut adc, 32, &mut rng);
+        let c = adc.convert(0.6180, &mut rng);
+        println!(
+            "{:<26} cycles {:>2}  comparisons {:>2}  energy {:>7.1} fJ  |DNL|max {:.3}  |INL|max {:.3}",
+            format!("{mode:?}"),
+            c.cycles,
+            c.comparisons,
+            c.energy_fj,
+            lin.max_abs_dnl(),
+            lin.max_abs_inl()
+        );
+    }
+
+    // Staircase sample (Fig 12a).
+    println!("\nstaircase (every 16th point):");
+    let mut adc =
+        ImmersedAdc::sample(bits, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+    for (v, code) in staircase(&mut adc, 128, &mut rng).iter().step_by(16) {
+        let stars = "#".repeat(*code as usize / 2);
+        println!("  {v:.3} V  {code:>3}  {stars}");
+    }
+
+    // Asymmetric search (Fig 10).
+    let pmf = binomial_mav_pmf(32, 0.5, bits);
+    let tree = AsymmetricSearch::build(bits, &pmf);
+    println!(
+        "\nasymmetric search: E[comparisons] {:.2} vs 5 symmetric ({}% fewer)",
+        tree.expected_comparisons(),
+        ((1.0 - tree.expected_comparisons() / 5.0) * 100.0).round()
+    );
+
+    // Table I shape.
+    println!("\n== Table I reproduction (5-bit, 10 MHz) ==");
+    println!("{:<30} {:>12} {:>12} {:>8}", "style", "area µm²", "energy pJ", "cycles");
+    for s in AdcStyle::ALL {
+        println!(
+            "{:<30} {:>12.2} {:>12.2} {:>8}",
+            s.name(),
+            adc_area_um2(s, bits),
+            adc_energy_pj(s, bits),
+            adc_latency_cycles(s, bits)
+        );
+    }
+    println!("\nadc_characterization OK");
+}

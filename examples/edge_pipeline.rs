@@ -1,0 +1,108 @@
+//! End-to-end edge-serving driver — the E2E validation run recorded in
+//! EXPERIMENTS.md: a stream of synthetic sensor frames flows through the
+//! full stack (router → dynamic batcher → worker pool), once on the
+//! **digital reference** engine (the AOT-compiled JAX/Pallas model on
+//! PJRT) and once on the **analog CiM pool** (the paper's crossbar +
+//! collaborative-ADC simulator with the same trained weights), proving
+//! all three layers compose. Reports accuracy, latency and throughput.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example edge_pipeline
+
+use std::time::{Duration, Instant};
+
+use adcim::cim::{CrossbarConfig, EarlyTermination};
+use adcim::config::ServerConfig;
+use adcim::coordinator::{
+    AnalogEngine, DigitalEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::nn::Dataset;
+use adcim::runtime::Artifacts;
+
+const FRAMES: usize = 512;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::open(Artifacts::default_dir())?;
+    let manifest = artifacts.manifest()?;
+    println!(
+        "artifacts: batch {}, input {}, classes {} (trained by python/compile/aot.py)",
+        manifest.batch, manifest.input, manifest.classes
+    );
+    let data = Dataset::digits(FRAMES, 12, 0xed6e);
+
+    // ---- digital reference path (PJRT) -------------------------------
+    let digital: Vec<Box<dyn InferenceEngine>> = (0..2)
+        .map(|_| Box::new(DigitalEngine::load(&artifacts, false).unwrap()) as Box<_>)
+        .collect();
+    run_load("digital (PJRT, AOT JAX/Pallas)", digital, &data, &manifest)?;
+
+    // ---- analog CiM pool (same weights, simulated hardware) ----------
+    let analog: Vec<Box<dyn InferenceEngine>> = (0..2)
+        .map(|w| {
+            Box::new(
+                AnalogEngine::load(
+                    &artifacts,
+                    CrossbarConfig::default(),
+                    Some(EarlyTermination::exact(6.0)),
+                    manifest.input_bits,
+                    w as u64,
+                )
+                .unwrap(),
+            ) as Box<_>
+        })
+        .collect();
+    run_load("analog (CiM crossbar pool)", analog, &data, &manifest)?;
+
+    Ok(())
+}
+
+fn run_load(
+    label: &str,
+    engines: Vec<Box<dyn InferenceEngine>>,
+    data: &Dataset,
+    manifest: &adcim::runtime::Manifest,
+) -> anyhow::Result<()> {
+    println!("\n== {label} ==");
+    let cfg = ServerConfig {
+        workers: engines.len(),
+        batch: manifest.batch,
+        batch_deadline_us: 2000,
+        queue_depth: 4096,
+        engine: String::new(),
+    };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::LeastLoaded)?;
+
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    for (i, img) in data.images.iter().enumerate() {
+        let flat = img.clone().reshape(&[manifest.input]);
+        if server.submit(InferenceRequest::new(i as u64, (i % 8) as u32, flat.data().to_vec())) {
+            submitted += 1;
+        }
+    }
+    let mut correct = 0usize;
+    let mut got = 0u64;
+    while got < submitted {
+        match server.recv_response(Duration::from_secs(30)) {
+            Some(r) => {
+                if r.class == data.labels[r.id as usize] {
+                    correct += 1;
+                }
+                got += 1;
+            }
+            None => break,
+        }
+    }
+    let wall = t0.elapsed();
+    let shed = server.shed_count();
+    let snap = server.shutdown();
+    println!("   {snap}");
+    println!(
+        "   served {got}/{submitted} frames in {:.2}s  ({:.0} frames/s wall), shed {shed}",
+        wall.as_secs_f64(),
+        got as f64 / wall.as_secs_f64()
+    );
+    println!("   accuracy {:.3} ({correct}/{got})", correct as f64 / got.max(1) as f64);
+    anyhow::ensure!(got == submitted, "lost responses: {got}/{submitted}");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Quickstart: the library in five minutes.
+//!
+//! 1. Build a Walsh–Hadamard transform and run it through the analog
+//!    crossbar simulator.
+//! 2. Digitize a crossbar MAV with the memory-immersed collaborative
+//!    ADC (SAR / hybrid / asymmetric-search modes).
+//! 3. Train a tiny frequency-domain digit classifier and evaluate it on
+//!    the simulated hardware at two operating points.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use adcim::adc::{binomial_mav_pmf, Adc, AsymmetricSearch, ImmersedAdc, ImmersedMode};
+use adcim::analog::OperatingPoint;
+use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig};
+use adcim::nn::model::bwht_mlp;
+use adcim::nn::train::{train, TrainConfig};
+use adcim::nn::Dataset;
+use adcim::util::Rng;
+use adcim::wht::fwht_inplace;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // --- 1. The transform, digitally and in analog -------------------
+    println!("== 1. Walsh–Hadamard transform on the analog crossbar ==");
+    let m = 32;
+    let x: Vec<u32> = (0..m).map(|i| (i as u32 * 7) % 16).collect();
+    // Digital reference: FWHT of the integer vector.
+    let mut reference: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    fwht_inplace(&mut reference);
+
+    // Analog: 4 input bitplanes through the simulated crossbar with
+    // 1-bit product-sum quantization (the paper's ADC-free scheme).
+    let crossbar = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+    let mut engine = BitplaneEngine::new(crossbar, 4);
+    let out = engine.transform(&x, &mut rng);
+    let corr = correlation(&out.values, &reference);
+    println!("   1-bit-quantized analog output correlates {corr:.3} with exact transform");
+    println!("   (training absorbs the rest — see step 3)");
+
+    // --- 2. Memory-immersed digitization ------------------------------
+    println!("\n== 2. Collaborative digitization of a crossbar MAV ==");
+    let bits = 5;
+    let plane = BitVec::from_bits(&(0..m).map(|i| i % 3 == 0).collect::<Vec<_>>());
+    let mav = engine.crossbar_mut().compute_mav(&plane, &mut rng)[0];
+    for mode in [ImmersedMode::Sar, ImmersedMode::Hybrid { flash_bits: 2 }] {
+        let mut adc = ImmersedAdc::ideal(bits, 1.0, mode);
+        let c = adc.convert(mav, &mut rng);
+        println!(
+            "   {mode:?}: MAV {mav:.3} V -> code {} in {} cycles ({} comparisons)",
+            c.code, c.cycles, c.comparisons
+        );
+    }
+    let tree = AsymmetricSearch::build(bits, &binomial_mav_pmf(m, 0.5, bits));
+    let mut adc = ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar);
+    let c = tree.convert(&mut adc, mav, &mut rng);
+    println!(
+        "   asymmetric search: code {} in {} comparisons (expected {:.2} vs 5 symmetric)",
+        c.code,
+        c.comparisons,
+        tree.expected_comparisons()
+    );
+
+    // --- 3. A frequency-domain classifier on simulated hardware -------
+    println!("\n== 3. BWHT digit classifier: float vs analog inference ==");
+    let data = Dataset::digits(300, 12, 7);
+    let flat = |d: Dataset| Dataset {
+        images: d.images.into_iter().map(|i| i.reshape(&[144])).collect(),
+        labels: d.labels,
+        classes: d.classes,
+        side: d.side,
+    };
+    let (tr, te) = data.split(0.8);
+    let (tr, te) = (flat(tr), flat(te));
+    let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(1));
+    let log = train(&mut model, &tr, &te, TrainConfig { epochs: 4, ..Default::default() });
+    println!("   float test accuracy: {:.3}", log.epoch_test_acc.last().unwrap());
+
+    for (label, op) in [
+        ("nominal 1.0 V / 1 GHz", OperatingPoint::new(1.0, 1.0)),
+        ("starved 0.55 V / 4 GHz", OperatingPoint::new(0.55, 4.0)),
+    ] {
+        let cfg = CrossbarConfig { op, ..Default::default() };
+        let acc = adcim::report::support::analog_accuracy(&mut model, &te, cfg, 4, None, 9);
+        println!("   analog @ {label}: accuracy {acc:.3}");
+    }
+    println!("\nquickstart OK");
+}
+
+fn correlation(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    dot / (na * nb + 1e-12)
+}

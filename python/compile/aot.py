@@ -1,0 +1,156 @@
+"""AOT compile path: train the L2 model, lower to HLO *text*, export.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs (consumed by the rust runtime; python never runs at serve time):
+
+- ``model_float.hlo.txt`` — float forward with trained weights baked in:
+  f32[BATCH, 144] image batch -> tuple(f32[BATCH, 10]) logits.
+- ``model_quant.hlo.txt``  — the ADC-free forward (4-bit inputs, 1-bit
+  product-sum BWHT) with the same weights.
+- ``bwht_kernel.hlo.txt``  — the L1 Pallas BWHT layer alone (micro path).
+- ``model.weights.bin`` / ``model.manifest.txt`` — raw little-endian f32
+  weights + name/shape/offset manifest.
+- ``test_batch.bin`` / ``test_labels.txt`` / ``expected_logits.bin`` —
+  a held-out batch and the float-path logits the rust integration tests
+  compare against bit-for-bit (same HLO, same PJRT CPU backend).
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 16
+TRAIN_N = 600
+TEST_N = 160
+FLOAT_EPOCHS = 12
+QUANT_EPOCHS = 8
+INPUT_BITS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned).
+
+    ``print_large_constants=True`` is essential: the default elides the
+    baked weight tensors as ``{...}``, which the text parser silently
+    reads back as zeros — the model would compile and run but ignore its
+    input entirely.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_weights(params, out_dir):
+    """Flat little-endian f32 blob + manifest (name shape offset)."""
+    flat = []
+    manifest = []
+    offset = 0
+    for name in sorted(params.keys()):
+        arr = np.asarray(params[name], dtype=np.float32)
+        flat.append(arr.ravel())
+        manifest.append(
+            {"name": name, "shape": list(arr.shape), "offset": offset,
+             "len": int(arr.size)})
+        offset += arr.size
+    blob = np.concatenate(flat) if flat else np.zeros(0, np.float32)
+    blob.tofile(os.path.join(out_dir, "model.weights.bin"))
+    with open(os.path.join(out_dir, "model.manifest.txt"), "w") as f:
+        json.dump({"params": manifest, "total_f32": int(blob.size),
+                   "batch": BATCH, "input": model.INPUT,
+                   "classes": model.CLASSES, "hidden": model.HIDDEN,
+                   "input_bits": INPUT_BITS}, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=FLOAT_EPOCHS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # ---- train -----------------------------------------------------
+    xs, ys = model.digits_dataset(TRAIN_N + TEST_N, seed=3)
+    xtr, ytr = xs[:TRAIN_N], ys[:TRAIN_N]
+    xte, yte = xs[TRAIN_N:], ys[TRAIN_N:]
+    params = model.init_params(jax.random.PRNGKey(0))
+    params, fl = model.train(params, xtr, ytr, epochs=args.epochs, lr=0.1)
+    acc_f = model.accuracy(params, xte, yte)
+    # Quantization-aware fine-tune against the 1-bit product-sum path,
+    # with the threshold-widening pull of Fig 6.
+    params, ql = model.train(params, xtr, ytr, epochs=QUANT_EPOCHS, lr=0.03,
+                             input_bits=INPUT_BITS, t_reg=0.002)
+    acc_q = model.accuracy(params, xte, yte, input_bits=INPUT_BITS)
+    print(f"float acc {acc_f:.3f} | quant({INPUT_BITS}b,1b-sum) acc {acc_q:.3f}")
+    print(f"float loss curve  {[round(x, 3) for x in fl]}")
+    print(f"quant loss curve  {[round(x, 3) for x in ql]}")
+
+    # ---- lower to HLO text ------------------------------------------
+    spec = jax.ShapeDtypeStruct((BATCH, model.INPUT), jnp.float32)
+
+    def fwd_float(x):
+        return (model.apply_float(params, x),)
+
+    def fwd_quant(x):
+        return (model.apply_quantized(params, x, INPUT_BITS),)
+
+    for name, fn in [("model_float", fwd_float), ("model_quant", fwd_quant)]:
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # L1 kernel alone (fixed trained thresholds baked in).
+    kspec = jax.ShapeDtypeStruct((BATCH, model.HIDDEN), jnp.float32)
+    t_trained = params["t"]
+
+    def kernel_fn(x):
+        from .kernels import bwht as k
+        return (k.bwht_layer(x, t_trained),)
+
+    text = to_hlo_text(jax.jit(kernel_fn).lower(kspec))
+    with open(os.path.join(args.out_dir, "bwht_kernel.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"wrote bwht_kernel.hlo.txt ({len(text)} chars)")
+
+    # ---- weights + golden vectors ------------------------------------
+    export_weights(params, args.out_dir)
+    batch = xte[:BATCH].astype(np.float32)
+    batch.tofile(os.path.join(args.out_dir, "test_batch.bin"))
+    with open(os.path.join(args.out_dir, "test_labels.txt"), "w") as f:
+        f.write(" ".join(str(int(l)) for l in yte[:BATCH]))
+    logits = np.asarray(model.apply_float(params, jnp.asarray(batch)),
+                        dtype=np.float32)
+    logits.tofile(os.path.join(args.out_dir, "expected_logits.bin"))
+    logits_q = np.asarray(
+        model.apply_quantized(params, jnp.asarray(batch), INPUT_BITS),
+        dtype=np.float32)
+    logits_q.tofile(os.path.join(args.out_dir, "expected_logits_quant.bin"))
+    meta = {
+        "float_test_acc": acc_f, "quant_test_acc": acc_q,
+        "input_bits": INPUT_BITS, "batch": BATCH,
+        "float_loss": fl, "quant_loss": ql,
+    }
+    with open(os.path.join(args.out_dir, "train_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

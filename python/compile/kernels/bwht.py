@@ -1,0 +1,171 @@
+"""L1: Pallas kernels for the BWHT layer (paper §III).
+
+TPU-adaptation notes (DESIGN.md §Hardware-Adaptation): the paper's hot
+spot is an analog ±1 crossbar; on TPU-class hardware the same insight —
+a Walsh–Hadamard transform needs no multiplies — maps to *addition-only
+butterflies* on the VPU, tiled so one Hadamard block lives in a single
+VMEM tile. BlockSpec carries the batch grid (the HBM↔VMEM schedule that
+the silicon does with row/column-merge signals); the butterfly runs
+log2(m) stages in-register. No MXU matmul is emitted for the transform.
+
+All kernels use ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md). Numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step: one VMEM tile of the batch.
+_BATCH_TILE = 8
+
+
+def _fwht_stages(v):
+    """In-register FWHT butterfly over the last axis (length m, power of
+    two): log2(m) stages of reshape/add/sub — no multiplies, no matmul."""
+    m = v.shape[-1]
+    n_stages = m.bit_length() - 1
+    lead = v.shape[:-1]
+    for s in range(n_stages):
+        h = 1 << s
+        # Pair elements at distance h: reshape to [..., m/(2h), 2, h].
+        w = v.reshape(lead + (m // (2 * h), 2, h))
+        a = w[..., 0, :]
+        b = w[..., 1, :]
+        v = jnp.stack([a + b, a - b], axis=-2).reshape(lead + (m,))
+    return v
+
+
+def _bwht_kernel_body(x_ref, t_ref, o_ref):
+    """One batch tile: z = H x; y = S_T(z); o = H y / m."""
+    x = x_ref[...]
+    m = x.shape[-1]
+    z = _fwht_stages(x)
+    t = jnp.abs(t_ref[...])
+    y = jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+    o_ref[...] = _fwht_stages(y) / m
+
+
+def _bwht_layer_pallas(x, t):
+    """Raw Pallas call (not differentiable by itself)."""
+    b, m = x.shape
+    assert m & (m - 1) == 0, f"m must be a power of two, got {m}"
+    tile = min(_BATCH_TILE, b)
+    assert b % tile == 0, f"batch {b} not divisible by tile {tile}"
+    return pl.pallas_call(
+        _bwht_kernel_body,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x, t)
+
+
+@jax.custom_vjp
+def bwht_layer(x, t):
+    """Float BWHT layer via Pallas: x [b, m], t [m] -> [b, m].
+
+    m must be a power of two (the caller pads; see rust BwhtLayout).
+    Differentiable: interpret-mode Pallas has no AD rule, so the VJP is
+    supplied explicitly — and since H is symmetric, the backward pass is
+    the *same butterfly kernel* (y = H S_T(Hx)/m ⇒ gx = H(mask ∘ Hg/m))."""
+    return _bwht_layer_pallas(x, t)
+
+
+def _bwht_layer_fwd(x, t):
+    z = fwht(x)  # residual: frequency-domain pre-activation
+    return _bwht_layer_pallas(x, t), (z, t)
+
+
+def _bwht_layer_bwd(res, g):
+    z, t = res
+    m = z.shape[-1]
+    gy = fwht(g) / m
+    mask = (jnp.abs(z) > jnp.abs(t)).astype(g.dtype)
+    gz = gy * mask
+    gx = fwht(gz)
+    # dS/dT = -sign(z) where passing; d|t|/dt = sign(t); sum over batch.
+    gt = jnp.sum(-jnp.sign(z) * gy * mask * jnp.sign(t), axis=0)
+    return gx, gt
+
+
+bwht_layer.defvjp(_bwht_layer_fwd, _bwht_layer_bwd)
+
+
+def _bitplane_kernel_body(levels_ref, o_ref, *, bits, gamma, step):
+    """One batch tile of the 1-bit product-sum path (paper Fig 4):
+    per plane p, transform the {0,1} plane and keep only the sign."""
+    levels = levels_ref[...]
+    acc = jnp.zeros(levels.shape, dtype=jnp.float32)
+    for p in range(bits):
+        plane = ((levels >> p) & 1).astype(jnp.float32)
+        d = _fwht_stages(plane)
+        s = jnp.where(d > 0, 1.0, -1.0)
+        acc = acc + (2.0 ** p) * s
+    o_ref[...] = gamma * step * acc
+
+
+def bitplane_transform(levels, bits: int, gamma: float, step: float):
+    """ADC-free quantized transform via Pallas: levels [b, m] uint32 ->
+    [b, m] f32 reconstruction (gamma*step*Σ 2^p sign(H·plane_p))."""
+    b, m = levels.shape
+    assert m & (m - 1) == 0, f"m must be a power of two, got {m}"
+    tile = min(_BATCH_TILE, b)
+    assert b % tile == 0, f"batch {b} not divisible by tile {tile}"
+    body = functools.partial(
+        _bitplane_kernel_body, bits=bits, gamma=gamma, step=step
+    )
+    return pl.pallas_call(
+        body,
+        grid=(b // tile,),
+        in_specs=[pl.BlockSpec((tile, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(levels)
+
+
+def _fwht_pallas(x):
+    b, m = x.shape
+    assert m & (m - 1) == 0
+    tile = min(_BATCH_TILE, b)
+    assert b % tile == 0
+
+    def body(x_ref, o_ref):
+        o_ref[...] = _fwht_stages(x_ref[...])
+
+    return pl.pallas_call(
+        body,
+        grid=(b // tile,),
+        in_specs=[pl.BlockSpec((tile, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@jax.custom_vjp
+def fwht(x):
+    """Bare unnormalised FWHT over the last axis via Pallas.
+
+    Differentiable: H is symmetric, so the VJP of `Hx` is `Hg` — the
+    same kernel again."""
+    return _fwht_pallas(x)
+
+
+def _fwht_fwd(x):
+    return _fwht_pallas(x), None
+
+
+def _fwht_bwd(_res, g):
+    return (_fwht_pallas(g),)
+
+
+fwht.defvjp(_fwht_fwd, _fwht_bwd)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every kernel in bwht.py is
+pytest-checked against these functions (python/tests/test_kernel.py),
+and the rust crate's own WHT substrate mirrors the same math
+(rust/src/wht), so all three layers agree on the transform.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hadamard_matrix(m: int) -> np.ndarray:
+    """Dense natural-order Hadamard matrix H_k (Sylvester recursion,
+    paper eq. (2)). m must be a power of two."""
+    assert m & (m - 1) == 0 and m > 0, f"order must be a power of two, got {m}"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < m:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalised Walsh-Hadamard transform along the last axis
+    (natural/Hadamard order), as a dense matmul oracle."""
+    m = x.shape[-1]
+    return x @ jnp.asarray(hadamard_matrix(m)).T
+
+
+def soft_threshold_ref(x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """S_T(x) = sign(x) * max(|x| - T, 0) (paper eq. (3))."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - jnp.abs(t), 0.0)
+
+
+def bwht_layer_ref(x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Float BWHT layer: y = H S_T(H x) / m over the last axis.
+
+    x: [..., m] with m a power of two; t: [m] per-coefficient thresholds.
+    """
+    m = x.shape[-1]
+    z = fwht_ref(x)
+    y = soft_threshold_ref(z, t)
+    return fwht_ref(y) / m
+
+
+def bitplane_transform_ref(levels: jnp.ndarray, bits: int, gamma: float,
+                           step: float) -> jnp.ndarray:
+    """1-bit product-sum quantized transform (paper SS III-B, Fig 4).
+
+    levels: [..., m] unsigned integer levels (< 2**bits).
+    Per bitplane p: d_p = H . plane_p; s_p = +-1 by sign (ties -> -1,
+    matching the crossbar comparator's strict >); output is
+    gamma * step * sum_p 2^p s_p.
+    """
+    m = levels.shape[-1]
+    h = jnp.asarray(hadamard_matrix(m))
+    acc = jnp.zeros(levels.shape, dtype=jnp.float32)
+    for p in range(bits):
+        plane = ((levels >> p) & 1).astype(jnp.float32)
+        d = plane @ h.T
+        s = jnp.where(d > 0, 1.0, -1.0)
+        acc = acc + (2.0 ** p) * s
+    return gamma * step * acc
+
+
+def quantize_ref(x: jnp.ndarray, bits: int, hi: float) -> jnp.ndarray:
+    """Affine quantization of [0, hi] onto {0..2^bits-1} (round-half-up,
+    matching rust UniformQuantizer)."""
+    levels = (1 << bits) - 1
+    t = jnp.clip(x / hi, 0.0, 1.0)
+    return jnp.floor(t * levels + 0.5).astype(jnp.uint32)

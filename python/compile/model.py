@@ -1,0 +1,180 @@
+"""L2: the frequency-domain model in JAX, calling the L1 Pallas kernels.
+
+The model mirrors the rust-side ``nn::model::bwht_mlp`` — the digit
+classifier whose hidden stage is the paper's BWHT + soft-threshold layer:
+
+    Dense(input -> hidden) -> ReLU -> BWHT(S_T) -> ReLU -> Dense(hidden -> classes)
+
+Two inference paths share the trained parameters:
+
+- ``apply_float``     — float BWHT via the Pallas butterfly kernel.
+- ``apply_quantized`` — the ADC-free path: inputs quantized to
+  ``input_bits``, the transform's per-plane sums quantized to ONE bit
+  (paper SS III-B), reassembled with the trained gain. Training runs
+  against this path with a straight-through estimator, exactly as the
+  paper trains against extreme quantization (Fig 5).
+
+Python is build-time only: aot.py lowers ``apply_float`` /
+``apply_quantized`` (with trained weights baked in) to HLO text that the
+rust runtime loads via PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bwht as kernels
+
+HIDDEN = 32          # power of two: one Hadamard block / one crossbar
+INPUT = 144          # 12x12 synthetic digit images
+CLASSES = 10
+IN_QUANT_HI = 4.0
+
+
+def init_params(rng_key):
+    k1, k2, k3 = jax.random.split(rng_key, 3)
+    s1 = (2.0 / INPUT) ** 0.5
+    s2 = (2.0 / HIDDEN) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (INPUT, HIDDEN)) * s1,
+        "b1": jnp.zeros((HIDDEN,)),
+        "t": 0.01 + 0.02 * jax.random.uniform(k2, (HIDDEN,)),
+        "gamma": jnp.asarray(HIDDEN ** 0.5 / 2.0),
+        "w2": jax.random.normal(k3, (HIDDEN, CLASSES)) * s2,
+        "b2": jnp.zeros((CLASSES,)),
+    }
+
+
+def apply_float(params, x):
+    """Float forward: x [b, INPUT] -> logits [b, CLASSES]."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = kernels.bwht_layer(h, params["t"])
+    h = jax.nn.relu(h)
+    return h @ params["w2"] + params["b2"]
+
+
+def _fake_quant_ste(x, bits, hi):
+    """Quantize-dequantize with straight-through gradient."""
+    levels = (1 << bits) - 1
+    t = jnp.clip(x / hi, 0.0, 1.0)
+    q = jnp.round(t * levels) / levels * hi
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def _one_bit_transform_ste(h, params, input_bits):
+    """1-bit product-sum BWHT with STE backward = float transform."""
+    step = IN_QUANT_HI / ((1 << input_bits) - 1)
+    hq = _fake_quant_ste(h, input_bits, IN_QUANT_HI)
+    levels = jnp.round(jnp.clip(hq / IN_QUANT_HI, 0.0, 1.0)
+                       * ((1 << input_bits) - 1)).astype(jnp.uint32)
+    zq = kernels.bitplane_transform(levels, input_bits,
+                                    1.0, 1.0) * params["gamma"] * step
+    # STE: forward value zq, gradient of the float transform.
+    zf = kernels.fwht(hq)
+    return zf + jax.lax.stop_gradient(zq - zf)
+
+
+def apply_quantized(params, x, input_bits=4):
+    """ADC-free forward (1-bit product-sum quantization, paper Fig 4)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    z = _one_bit_transform_ste(h, params, input_bits)
+    t = jnp.abs(params["t"])
+    y = jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+    h = kernels.fwht(y) / HIDDEN
+    h = jax.nn.relu(h)
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(params, x, labels, input_bits=None, t_reg=0.0):
+    """Softmax CE (+ optional threshold-widening regulariser, Fig 6)."""
+    if input_bits is None:
+        logits = apply_float(params, x)
+    else:
+        logits = apply_quantized(params, x, input_bits)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return ce - t_reg * jnp.mean(jnp.abs(params["t"]))
+
+
+# ------------------------------------------------------------- dataset
+
+_GLYPHS = np.array([
+    [1, 1, 1, 0, 1, 1, 1], [0, 0, 1, 0, 0, 1, 0], [1, 0, 1, 1, 1, 0, 1],
+    [1, 0, 1, 1, 0, 1, 1], [0, 1, 1, 1, 0, 1, 0], [1, 1, 0, 1, 0, 1, 1],
+    [1, 1, 0, 1, 1, 1, 1], [1, 0, 1, 0, 0, 1, 0], [1, 1, 1, 1, 1, 1, 1],
+    [1, 1, 1, 1, 0, 1, 1]], dtype=bool)
+
+
+def _segment_mask(seg, u, v, t):
+    def hline(cy):
+        return (np.abs(v - cy) < t) & (u >= 0.3) & (u <= 0.7)
+
+    def vline(cx, lo, hi):
+        return (np.abs(u - cx) < t) & (v >= lo) & (v <= hi)
+
+    return [hline(0.15), vline(0.3, 0.15, 0.5), vline(0.7, 0.15, 0.5),
+            hline(0.5), vline(0.3, 0.5, 0.85), vline(0.7, 0.5, 0.85),
+            hline(0.85)][seg]
+
+
+def digits_dataset(n, side=12, seed=3):
+    """Procedural seven-segment digits — the same distribution the rust
+    nn::dataset::digits generator draws from."""
+    rs = np.random.RandomState(seed)
+    xs = np.zeros((n, side * side), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    yy, xx = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    for i in range(n):
+        d = rs.randint(10)
+        jx, jy = rs.uniform(-0.1, 0.1, 2)
+        t = 0.08 + 0.05 * rs.uniform()
+        u = xx / side - jx
+        v = yy / side - jy
+        lit = np.zeros((side, side), dtype=bool)
+        for seg in range(7):
+            if _GLYPHS[d, seg]:
+                lit |= _segment_mask(seg, u, v, t)
+        img = np.where(lit, 0.9, 0.1) + 0.1 * rs.randn(side, side)
+        xs[i] = np.clip(img, 0.0, 1.0).ravel()
+        ys[i] = d
+    return xs, ys
+
+
+# ------------------------------------------------------------- training
+
+def train(params, xs, ys, *, epochs=10, lr=0.1, batch=16, input_bits=None,
+          t_reg=0.0, seed=0):
+    """Plain SGD; returns (params, per-epoch losses)."""
+    grad_fn = jax.jit(
+        jax.value_and_grad(
+            functools.partial(loss_fn, input_bits=input_bits, t_reg=t_reg)))
+    n = xs.shape[0]
+    rs = np.random.RandomState(seed)
+    losses = []
+    for _ in range(epochs):
+        order = rs.permutation(n)
+        epoch_loss = 0.0
+        nb = 0
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            l, g = grad_fn(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+            params = jax.tree.map(lambda p, gi: p - lr * gi, params, g)
+            epoch_loss += float(l)
+            nb += 1
+        losses.append(epoch_loss / max(nb, 1))
+        lr *= 0.85
+    return params, losses
+
+
+def accuracy(params, xs, ys, input_bits=None, batch=16):
+    n = (xs.shape[0] // batch) * batch
+    correct = 0
+    for i in range(0, n, batch):
+        xb = jnp.asarray(xs[i:i + batch])
+        logits = (apply_float(params, xb) if input_bits is None
+                  else apply_quantized(params, xb, input_bits))
+        correct += int((jnp.argmax(logits, axis=1)
+                        == jnp.asarray(ys[i:i + batch])).sum())
+    return correct / n

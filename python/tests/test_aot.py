@@ -1,0 +1,66 @@
+"""AOT path: HLO text round-trips through the XLA parser and the
+exported artifacts are mutually consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from jax._src.lib import xla_client as xc
+
+
+def test_hlo_text_parses_back():
+    p = model.init_params(jax.random.PRNGKey(0))
+    spec = jax.ShapeDtypeStruct((aot.BATCH, model.INPUT), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(lambda x: (model.apply_float(p, x),)).lower(spec))
+    assert "ENTRY" in text and "f32[16,144]" in text.replace(" ", "")
+    # REGRESSION GUARD: the default as_hlo_text() elides the baked weight
+    # constants as "{...}", which parses back as zeros — the model then
+    # ignores its input. print_large_constants=True must stay on.
+    assert "{...}" not in text, "weight constants elided from HLO text"
+    # The 0.5.1-era parser requirement that motivated text interchange:
+    # ids in text form are reassigned on parse, so this must not throw.
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+def test_weights_export_layout(tmp_path):
+    p = model.init_params(jax.random.PRNGKey(1))
+    aot.export_weights(p, str(tmp_path))
+    blob = np.fromfile(tmp_path / "model.weights.bin", dtype=np.float32)
+    man = json.loads((tmp_path / "model.manifest.txt").read_text())
+    assert man["total_f32"] == blob.size
+    # Every param recoverable by offset/len and bit-exact.
+    for ent in man["params"]:
+        arr = np.asarray(p[ent["name"]], dtype=np.float32).ravel()
+        got = blob[ent["offset"]:ent["offset"] + ent["len"]]
+        np.testing.assert_array_equal(got, arr)
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "model_float.hlo.txt")),
+    reason="run `make artifacts` first",
+)
+def test_exported_artifacts_consistent():
+    man = json.loads(
+        open(os.path.join(ARTIFACTS, "model.manifest.txt")).read())
+    batch = np.fromfile(os.path.join(ARTIFACTS, "test_batch.bin"),
+                        dtype=np.float32).reshape(man["batch"], man["input"])
+    logits = np.fromfile(os.path.join(ARTIFACTS, "expected_logits.bin"),
+                         dtype=np.float32).reshape(man["batch"], man["classes"])
+    labels = [int(t) for t in
+              open(os.path.join(ARTIFACTS, "test_labels.txt")).read().split()]
+    assert len(labels) == man["batch"]
+    # The exported golden logits should classify most of the held-out
+    # batch correctly (the trained model works).
+    acc = float(np.mean(np.argmax(logits, axis=1) == np.asarray(labels)))
+    assert acc > 0.5, f"golden accuracy {acc}"

@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/bit-widths; every kernel output must match its
+ref.py oracle to float tolerance (bitplane path: exactly).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bwht, ref
+
+POW2 = [8, 16, 32, 64, 128]
+BATCHES = [1, 2, 8, 16]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.sampled_from(POW2),
+    b=st.sampled_from(BATCHES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_dense_oracle(m, b, seed):
+    x = np.random.RandomState(seed).randn(b, m).astype(np.float32)
+    got = bwht.fwht(jnp.asarray(x))
+    exp = ref.fwht_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-4, atol=1e-3 * m)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.sampled_from(POW2),
+    b=st.sampled_from(BATCHES),
+    seed=st.integers(0, 2**31 - 1),
+    tscale=st.floats(0.0, 5.0),
+)
+def test_bwht_layer_matches_oracle(m, b, seed, tscale):
+    rs = np.random.RandomState(seed)
+    x = rs.randn(b, m).astype(np.float32)
+    t = (tscale * np.abs(rs.randn(m))).astype(np.float32)
+    got = bwht.bwht_layer(jnp.asarray(x), jnp.asarray(t))
+    exp = ref.bwht_layer_ref(jnp.asarray(x), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    bits=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitplane_transform_exact_vs_oracle(m, bits, seed):
+    rs = np.random.RandomState(seed)
+    levels = rs.randint(0, 1 << bits, (8, m)).astype(np.uint32)
+    gamma, step = 2.5, 0.125
+    got = bwht.bitplane_transform(jnp.asarray(levels), bits, gamma, step)
+    exp = ref.bitplane_transform_ref(jnp.asarray(levels), bits, gamma, step)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_fwht_self_inverse():
+    x = np.random.RandomState(0).randn(8, 64).astype(np.float32)
+    y = bwht.fwht(bwht.fwht(jnp.asarray(x))) / 64.0
+    np.testing.assert_allclose(np.asarray(y), x, rtol=1e-4, atol=1e-4)
+
+
+def test_bwht_layer_zero_threshold_is_identity():
+    x = np.random.RandomState(1).randn(8, 32).astype(np.float32)
+    t = np.zeros(32, np.float32)
+    y = bwht.bwht_layer(jnp.asarray(x), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(y), x, rtol=1e-4, atol=1e-4)
+
+
+def test_bwht_layer_huge_threshold_zeroes():
+    x = np.random.RandomState(2).randn(8, 32).astype(np.float32)
+    t = np.full(32, 1e6, np.float32)
+    y = bwht.bwht_layer(jnp.asarray(x), jnp.asarray(t))
+    assert float(jnp.abs(y).max()) < 1e-5
+
+
+def test_bwht_layer_gradients_match_oracle():
+    """custom_vjp vs jax-AD of the dense oracle."""
+    x = np.random.RandomState(3).randn(8, 16).astype(np.float32)
+    t = (0.5 * np.abs(np.random.RandomState(4).randn(16))).astype(np.float32)
+
+    def loss_kernel(x, t):
+        return jnp.sum(bwht.bwht_layer(x, t) ** 2)
+
+    def loss_ref(x, t):
+        return jnp.sum(ref.bwht_layer_ref(x, t) ** 2)
+
+    gx_k, gt_k = jax.grad(loss_kernel, argnums=(0, 1))(
+        jnp.asarray(x), jnp.asarray(t))
+    gx_r, gt_r = jax.grad(loss_ref, argnums=(0, 1))(
+        jnp.asarray(x), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gt_k), np.asarray(gt_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_quantize_round_half_up():
+    x = jnp.asarray([0.0, 0.49, 0.51, 3.99, 4.0, 9.0], dtype=jnp.float32)
+    q = ref.quantize_ref(x, 4, 4.0)
+    # step = 4/15; levels = round(x/4*15 + eps)
+    exp = np.floor(np.clip(np.asarray(x) / 4.0, 0, 1) * 15 + 0.5)
+    np.testing.assert_array_equal(np.asarray(q), exp.astype(np.uint32))
+
+
+def test_non_pow2_rejected():
+    with pytest.raises(AssertionError):
+        bwht.fwht(jnp.zeros((8, 24), jnp.float32))

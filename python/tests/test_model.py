@@ -1,0 +1,69 @@
+"""L2 correctness: model shapes, training behaviour, quantized path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _data(n=96, seed=5):
+    return model.digits_dataset(n, seed=seed)
+
+
+def test_shapes():
+    xs, _ = _data(32)
+    p = model.init_params(jax.random.PRNGKey(0))
+    lf = model.apply_float(p, jnp.asarray(xs[:16]))
+    lq = model.apply_quantized(p, jnp.asarray(xs[:16]), 4)
+    assert lf.shape == (16, model.CLASSES)
+    assert lq.shape == (16, model.CLASSES)
+
+
+def test_dataset_is_deterministic_and_labelled():
+    xs1, ys1 = _data(20, seed=9)
+    xs2, ys2 = _data(20, seed=9)
+    np.testing.assert_array_equal(xs1, xs2)
+    np.testing.assert_array_equal(ys1, ys2)
+    assert set(ys1.tolist()) <= set(range(10))
+    assert xs1.min() >= 0.0 and xs1.max() <= 1.0
+
+
+def test_float_training_reduces_loss():
+    xs, ys = _data(160)
+    p = model.init_params(jax.random.PRNGKey(1))
+    p, losses = model.train(p, xs, ys, epochs=4, lr=0.1)
+    assert losses[-1] < losses[0]
+    assert model.accuracy(p, xs, ys) > 0.3  # chance = 0.1
+
+
+def test_quantized_training_works_and_tracks_float():
+    """Fig 5 shape: quant-aware training converges within a few points
+    of the float baseline (paper: 3-4% lower at convergence)."""
+    xs, ys = _data(240)
+    p0 = model.init_params(jax.random.PRNGKey(2))
+    pf, _ = model.train(p0, xs, ys, epochs=6, lr=0.1)
+    acc_f = model.accuracy(pf, xs, ys)
+    pq, _ = model.train(p0, xs, ys, epochs=6, lr=0.1, input_bits=4)
+    acc_q = model.accuracy(pq, xs, ys, input_bits=4)
+    assert acc_q > 0.3, f"quantized path failed to learn: {acc_q}"
+    assert acc_q > acc_f - 0.35, f"float {acc_f} vs quant {acc_q}"
+
+
+def test_t_reg_widens_thresholds():
+    """The Fig 6 regulariser must push |T| outward."""
+    xs, ys = _data(160)
+    p0 = model.init_params(jax.random.PRNGKey(3))
+    p_plain, _ = model.train(p0, xs, ys, epochs=3, lr=0.05)
+    p_reg, _ = model.train(p0, xs, ys, epochs=3, lr=0.05, t_reg=0.05)
+    t_plain = float(jnp.mean(jnp.abs(p_plain["t"])))
+    t_reg = float(jnp.mean(jnp.abs(p_reg["t"])))
+    assert t_reg > t_plain, f"{t_reg} !> {t_plain}"
+
+
+def test_quantized_forward_is_deterministic():
+    xs, _ = _data(16)
+    p = model.init_params(jax.random.PRNGKey(4))
+    a = model.apply_quantized(p, jnp.asarray(xs[:16]), 4)
+    b = model.apply_quantized(p, jnp.asarray(xs[:16]), 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,23 @@
+//! Bench: Fig 10 — MAV stats + asymmetric search; tree build & convert cost.
+
+use adcim::adc::{binomial_mav_pmf, AsymmetricSearch, ImmersedAdc, ImmersedMode};
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig10::generate());
+
+    let mut set = BenchSet::new("asymmetric search costs");
+    let pmf = binomial_mav_pmf(32, 0.5, 5);
+    set.run("optimal tree build (5-bit)", || {
+        black_box(AsymmetricSearch::build(5, &pmf));
+    });
+    let tree = AsymmetricSearch::build(5, &pmf);
+    let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+    let mut r = Rng::new(3);
+    let mut v = 0.0f64;
+    set.run("asymmetric conversion", move || {
+        v = (v + 0.231).fract();
+        black_box(tree.convert(&mut adc, v, &mut r));
+    });
+}

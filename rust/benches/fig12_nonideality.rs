@@ -1,0 +1,20 @@
+//! Bench: Fig 12 — staircase/DNL/INL + characterization sweep cost.
+
+use adcim::adc::metrics::linearity;
+use adcim::adc::{ImmersedAdc, ImmersedMode};
+use adcim::analog::NoiseModel;
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig12::generate());
+
+    let mut set = BenchSet::new("full linearity characterization");
+    let noise = NoiseModel::default();
+    let mut rng = Rng::new(5);
+    let mut adc = ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &noise, &mut rng);
+    let mut r = Rng::new(6);
+    set.run("5-bit DNL/INL ramp (32 steps/code)", move || {
+        black_box(linearity(&mut adc, 32, &mut r));
+    });
+}

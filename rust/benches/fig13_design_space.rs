@@ -1,0 +1,15 @@
+//! Bench: Fig 13 — design space + the accuracy-sweep workhorse cost.
+
+use adcim::cim::CrossbarConfig;
+use adcim::report::support::{analog_accuracy, trained_digit_mlp};
+use adcim::util::bench::{black_box, BenchSet};
+
+fn main() {
+    println!("{}", adcim::report::fig13::generate());
+
+    let mut set = BenchSet::new("one analog accuracy evaluation (80 test images)");
+    let (mut model, te, _acc) = trained_digit_mlp(13, 2, 0.0);
+    set.run("analog eval @ nominal", move || {
+        black_box(analog_accuracy(&mut model, &te, CrossbarConfig::default(), 4, None, 5));
+    });
+}

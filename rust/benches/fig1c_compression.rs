@@ -1,0 +1,23 @@
+//! Bench: Fig 1(c) — compression/accuracy vs WHT layers, plus timing of
+//! the miniature training epoch the sweep rests on.
+
+use adcim::nn::model::mini_resnet;
+use adcim::nn::train::{train, TrainConfig};
+use adcim::nn::Dataset;
+use adcim::util::bench::BenchSet;
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig1::fig1c());
+
+    let mut set = BenchSet::new("training cost (miniature ResNet, 1 epoch)");
+    // CHW frames — the conv model takes unflattened images.
+    let (tr, te) = Dataset::digits(120, 12, 1).split(0.8);
+    for bwht in [0usize, 2] {
+        set.run(&format!("{bwht} BWHT stages"), || {
+            let mut rng = Rng::new(9);
+            let mut m = mini_resnet(12, 10, 8, 2, bwht, &mut rng);
+            let _ = train(&mut m, &tr, &te, TrainConfig { epochs: 1, ..Default::default() });
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: Fig 1(d) — MAC accounting (analytic) + table construction cost.
+
+use adcim::nn::macs::{compression_summary, mobilenet_v2_table, resnet20_table};
+use adcim::util::bench::{black_box, BenchSet};
+
+fn main() {
+    println!("{}", adcim::report::fig1::fig1d());
+
+    let mut set = BenchSet::new("accounting cost");
+    set.run("mobilenet_v2 table + summary", || {
+        let t = mobilenet_v2_table();
+        black_box(compression_summary(&t));
+    });
+    set.run("resnet20 table + summary", || {
+        let t = resnet20_table();
+        black_box(compression_summary(&t));
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench: Fig 3 — crossbar timing diagram + single-op simulation cost.
+
+use adcim::cim::{BitVec, Crossbar, CrossbarConfig};
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig3::generate());
+
+    let mut set = BenchSet::new("crossbar op simulation cost");
+    let mut rng = Rng::new(1);
+    for m in [16usize, 32, 64, 128] {
+        let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+        let bits: Vec<bool> = (0..m).map(|i| i % 3 == 0).collect();
+        let x = BitVec::from_bits(&bits);
+        let mut r = Rng::new(2);
+        set.run(&format!("{m}x{m} four-step op"), move || {
+            black_box(xb.process_bitplane(&x, &mut r));
+        });
+    }
+}

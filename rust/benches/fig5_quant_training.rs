@@ -1,0 +1,25 @@
+//! Bench: Fig 5 — quantization-aware training sweep + per-epoch cost of
+//! the 1-bit product-sum forward.
+
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::nn::train::{train, TrainConfig};
+use adcim::report::support::digit_data;
+use adcim::util::bench::BenchSet;
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig5::generate());
+
+    let mut set = BenchSet::new("1 training epoch (digit MLP)");
+    let (tr, te) = digit_data(120, 3);
+    set.run("float forward", || {
+        let mut m = bwht_mlp(144, 10, 32, &mut Rng::new(1));
+        let _ = train(&mut m, &tr, &te, TrainConfig { epochs: 1, ..Default::default() });
+    });
+    set.run("1-bit product-sum forward (4-bit input)", || {
+        let mut m = bwht_mlp(144, 10, 32, &mut Rng::new(1));
+        m.for_each_bwht(|b| b.set_exec(BwhtExec::QuantDigital { input_bits: 4 }));
+        let _ = train(&mut m, &tr, &te, TrainConfig { epochs: 1, ..Default::default() });
+    });
+}

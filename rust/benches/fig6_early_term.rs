@@ -1,0 +1,31 @@
+//! Bench: Fig 6 — early termination report + workload saving measured
+//! as actual simulation speedup.
+
+use adcim::cim::{BitplaneEngine, Crossbar, CrossbarConfig, EarlyTermination};
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig6::generate());
+
+    let mut set = BenchSet::new("bitplane transform with/without termination");
+    let m = 32usize;
+    let bits = 6u8;
+    let x: Vec<u32> = (0..m).map(|i| ((i * 5) % (1 << bits)) as u32).collect();
+    for (name, et) in [
+        ("no termination", None),
+        ("exact T=32", Some(EarlyTermination::exact(32.0))),
+        ("aggressive T=32 x2", Some(EarlyTermination::aggressive(32.0, 2.0))),
+    ] {
+        let mut eng = BitplaneEngine::new(
+            Crossbar::walsh(m, CrossbarConfig::default(), &mut Rng::new(1)),
+            bits,
+        );
+        eng.early_term = et;
+        let x = x.clone();
+        let mut r = Rng::new(2);
+        set.run(name, move || {
+            black_box(eng.transform(&x, &mut r));
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: Fig 7 — VDD / size / clock sweeps + raw crossbar hot-loop rate.
+
+use adcim::cim::{BitVec, Crossbar, CrossbarConfig};
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig7::generate());
+
+    let mut set = BenchSet::new("crossbar hot loop (cell-ops/s derived)");
+    let mut rng = Rng::new(1);
+    let m = 128usize;
+    let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+    let x = BitVec::from_bits(&(0..m).map(|i| i % 2 == 0).collect::<Vec<_>>());
+    let mut r = Rng::new(2);
+    let meas = set.run("128x128 bitplane op", move || {
+        black_box(xb.process_bitplane(&x, &mut r));
+    });
+    let cell_ops = (m * m) as f64 * meas.per_sec();
+    println!("≈ {cell_ops:.2e} cell-ops/s/core");
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig 8 — immersed SAR conversion trace + cycle-level cost.
+
+use adcim::adc::{Adc, ImmersedAdc, ImmersedMode};
+use adcim::analog::NoiseModel;
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::fig8::generate());
+
+    let mut set = BenchSet::new("immersed conversion cost");
+    let noise = NoiseModel::default();
+    for (name, mode) in [
+        ("SAR (5 cycles)", ImmersedMode::Sar),
+        ("hybrid (4 cycles)", ImmersedMode::Hybrid { flash_bits: 2 }),
+        ("flash (1 cycle)", ImmersedMode::Flash),
+    ] {
+        let mut rng = Rng::new(7);
+        let mut adc = ImmersedAdc::sample(5, 1.0, mode, 32, 20.0, &noise, &mut rng);
+        let mut r = Rng::new(8);
+        let mut v = 0.0f64;
+        set.run(name, move || {
+            v = (v + 0.618).fract();
+            black_box(adc.convert(v, &mut r));
+        });
+    }
+}

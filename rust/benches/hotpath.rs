@@ -1,0 +1,57 @@
+//! Bench: whole-stack hot paths — the §Perf working set. Run before and
+//! after optimizations; EXPERIMENTS.md §Perf records the deltas.
+
+use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig};
+use adcim::nn::model::bwht_mlp;
+use adcim::nn::Tensor;
+use adcim::util::bench::{black_box, BenchSet};
+use adcim::util::Rng;
+use adcim::wht::{fwht_inplace, Bwht};
+
+fn main() {
+    let mut set = BenchSet::new("L3 hot paths");
+
+    // FWHT butterfly (digital reference transform).
+    for m in [64usize, 1024, 4096] {
+        let mut x: Vec<f32> = (0..m).map(|i| i as f32).collect();
+        set.run(&format!("fwht m={m}"), move || {
+            fwht_inplace(black_box(&mut x));
+        });
+    }
+
+    // BWHT layer-scale transform.
+    let b = Bwht::for_dim(960, 512);
+    let x: Vec<f32> = (0..960).map(|i| (i as f32).sin()).collect();
+    set.run("bwht 960ch (MobileNetV2 head dim)", move || {
+        black_box(b.forward(&x));
+    });
+
+    // Crossbar bitplane op (the analog inner loop).
+    let mut rng = Rng::new(1);
+    for m in [32usize, 128] {
+        let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+        let x = BitVec::from_bits(&(0..m).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        let mut r = Rng::new(2);
+        set.run(&format!("crossbar {m}x{m} bitplane"), move || {
+            black_box(xb.process_bitplane(&x, &mut r));
+        });
+    }
+
+    // Multi-bit engine transform (4 planes).
+    let mut eng = BitplaneEngine::new(
+        Crossbar::walsh(32, CrossbarConfig::default(), &mut Rng::new(3)),
+        4,
+    );
+    let xq: Vec<u32> = (0..32).map(|i| (i as u32 * 3) % 16).collect();
+    let mut r = Rng::new(4);
+    set.run("bitplane engine 32ch 4-bit", move || {
+        black_box(eng.transform(&xq, &mut r));
+    });
+
+    // Full model forward (analog BWHT digit MLP, float mode).
+    let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+    let img = Tensor::vec1(&vec![0.5f32; 144]);
+    set.run("digit MLP forward (float)", move || {
+        black_box(model.forward(&img));
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench: Table I — ADC comparison. Prints the paper's table (model
+//! anchors) and times conversions per style on the behavioural path.
+
+use adcim::adc::{Adc, FlashAdc, ImmersedAdc, ImmersedMode, SarAdc};
+use adcim::analog::NoiseModel;
+use adcim::util::bench::BenchSet;
+use adcim::util::Rng;
+
+fn main() {
+    println!("{}", adcim::report::table1::generate());
+
+    let mut set = BenchSet::new("conversion throughput (behavioural, 5-bit)");
+    let noise = NoiseModel::default();
+    let mut rng = Rng::new(1);
+    let mut sar = SarAdc::sample(5, 1.0, &noise, &mut rng);
+    let mut flash = FlashAdc::sample(5, 1.0, &noise, &mut rng);
+    let mut imm = ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &noise, &mut rng);
+    let mut hyb =
+        ImmersedAdc::sample(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+    let mut v = 0.0f64;
+    let mut tick = move || {
+        v = (v + 0.137).fract();
+        v
+    };
+    set.run("conventional SAR", {
+        let mut t = tick.clone();
+        move || {
+            let _ = std::hint::black_box(sar.convert(t(), &mut Rng::new(2)));
+        }
+    });
+    set.run("conventional Flash", {
+        let mut t = tick.clone();
+        move || {
+            let _ = std::hint::black_box(flash.convert(t(), &mut Rng::new(3)));
+        }
+    });
+    set.run("immersed SAR", {
+        let mut t = tick.clone();
+        move || {
+            let _ = std::hint::black_box(imm.convert(t(), &mut Rng::new(4)));
+        }
+    });
+    set.run("immersed hybrid", move || {
+        let _ = std::hint::black_box(hyb.convert(tick(), &mut Rng::new(5)));
+    });
+}

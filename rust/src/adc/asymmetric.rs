@@ -1,0 +1,288 @@
+//! MAV-statistics-aware asymmetric search (paper §IV-C, Fig 10).
+//!
+//! Bitplane-wise CiM processing produces multiply-average voltages that
+//! are **not** uniformly distributed: the positive-line charge count is
+//! binomial, concentrated well below mid-scale (Fig 10(a)). A symmetric
+//! binary search ignores this and always spends `bits` comparisons; an
+//! *optimal comparison tree* built for the actual code distribution
+//! reaches the likely codes in fewer steps — the paper reports ~3.7
+//! average comparisons instead of 5 for 5-bit conversion (Fig 10(c)).
+//!
+//! The tree is the classic optimal alphabetic search tree (dynamic
+//! programming over contiguous code ranges); each internal node is one
+//! comparator decision against a memory-immersed reference level, so the
+//! tree drops straight onto [`super::ImmersedAdc`] hardware: only the
+//! precharge *sequence* changes.
+
+use crate::util::Rng;
+
+use super::immersed::ImmersedAdc;
+use super::Conversion;
+#[cfg(test)]
+use super::Adc;
+
+/// Probability mass over output codes for a binomially distributed MAV.
+///
+/// A crossbar row has `cols` cells; with input-bit density `density` and
+/// ±1 cells balanced on average, a cell dumps charge on the positive sum
+/// line with probability `density / 2`. The MAV is `plus / cols`, and
+/// the code is `floor(MAV · 2^bits)`.
+pub fn binomial_mav_pmf(cols: usize, density: f64, bits: u8) -> Vec<f64> {
+    let p = (density * 0.5).clamp(0.0, 1.0);
+    let n_codes = 1usize << bits;
+    let mut pmf = vec![0.0f64; n_codes];
+    // Binomial(cols, p) evaluated iteratively to avoid factorial overflow.
+    let mut prob = (1.0 - p).powi(cols as i32); // P[plus = 0]
+    for k in 0..=cols {
+        let mav = k as f64 / cols as f64;
+        let code = ((mav * n_codes as f64) as usize).min(n_codes - 1);
+        pmf[code] += prob;
+        // Advance to P[plus = k+1].
+        if k < cols {
+            prob *= (cols - k) as f64 / (k + 1) as f64 * p / (1.0 - p);
+        }
+    }
+    pmf
+}
+
+/// One node of the comparison tree.
+#[derive(Debug, Clone, Copy)]
+enum Node {
+    /// Compare `v_in > level(split+1)`; false → `lo`, true → `hi`.
+    Cmp { split: u32, lo: u32, hi: u32 },
+    /// Resolved output code.
+    Leaf { code: u32 },
+}
+
+/// Optimal asymmetric successive-approximation search.
+#[derive(Debug, Clone)]
+pub struct AsymmetricSearch {
+    bits: u8,
+    nodes: Vec<Node>,
+    root: u32,
+    expected: f64,
+}
+
+impl AsymmetricSearch {
+    /// Build the optimal comparison tree for `pmf` (len must be 2^bits).
+    ///
+    /// DP over code ranges: `e[i][j] = P(i..=j) + min_k e[i][k] + e[k+1][j]`,
+    /// `e[i][i] = 0` — the expected number of comparisons to isolate a
+    /// code drawn from `pmf`.
+    pub fn build(bits: u8, pmf: &[f64]) -> Self {
+        let n = 1usize << bits;
+        assert_eq!(pmf.len(), n, "pmf length must be 2^bits");
+        let total: f64 = pmf.iter().sum();
+        assert!(total > 0.0, "pmf must have mass");
+        let p: Vec<f64> = pmf.iter().map(|x| x / total).collect();
+
+        // Prefix sums for O(1) range mass.
+        let mut pre = vec![0.0f64; n + 1];
+        for i in 0..n {
+            pre[i + 1] = pre[i] + p[i];
+        }
+        let mass = |i: usize, j: usize| pre[j + 1] - pre[i];
+
+        // e[i][j] stored flat; split[i][j] the optimal split point.
+        let mut e = vec![0.0f64; n * n];
+        let mut sp = vec![0usize; n * n];
+        let idx = |i: usize, j: usize| i * n + j;
+        for len in 2..=n {
+            for i in 0..=(n - len) {
+                let j = i + len - 1;
+                let mut best = f64::INFINITY;
+                let mut best_k = i;
+                for k in i..j {
+                    let cost = e[idx(i, k)] + e[idx(k + 1, j)];
+                    if cost < best {
+                        best = cost;
+                        best_k = k;
+                    }
+                }
+                e[idx(i, j)] = mass(i, j) + best;
+                sp[idx(i, j)] = best_k;
+            }
+        }
+
+        // Materialise the tree.
+        let mut nodes = Vec::with_capacity(2 * n);
+        fn build_range(
+            i: usize,
+            j: usize,
+            n: usize,
+            sp: &[usize],
+            nodes: &mut Vec<Node>,
+        ) -> u32 {
+            if i == j {
+                nodes.push(Node::Leaf { code: i as u32 });
+                return (nodes.len() - 1) as u32;
+            }
+            let k = sp[i * n + j];
+            let lo = build_range(i, k, n, sp, nodes);
+            let hi = build_range(k + 1, j, n, sp, nodes);
+            nodes.push(Node::Cmp { split: k as u32, lo, hi });
+            (nodes.len() - 1) as u32
+        }
+        let root = build_range(0, n - 1, n, &sp, &mut nodes);
+        AsymmetricSearch { bits, nodes, root, expected: e[idx(0, n - 1)] }
+    }
+
+    /// Build for the uniform distribution — recovers the symmetric
+    /// binary search (expected comparisons == bits).
+    pub fn symmetric(bits: u8) -> Self {
+        AsymmetricSearch::build(bits, &vec![1.0; 1usize << bits])
+    }
+
+    /// Expected comparisons under the build distribution.
+    pub fn expected_comparisons(&self) -> f64 {
+        self.expected
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Depth (comparisons) to resolve a specific `code`.
+    pub fn depth_of(&self, code: u32) -> u32 {
+        fn walk(nodes: &[Node], at: u32, code: u32, d: u32) -> Option<u32> {
+            match nodes[at as usize] {
+                Node::Leaf { code: c } => (c == code).then_some(d),
+                Node::Cmp { lo, hi, .. } => {
+                    walk(nodes, lo, code, d + 1).or_else(|| walk(nodes, hi, code, d + 1))
+                }
+            }
+        }
+        walk(&self.nodes, self.root, code, 0).expect("code in range")
+    }
+
+    /// Run the asymmetric conversion on a memory-immersed converter:
+    /// each internal node is one reference generation + comparison on
+    /// neighbour 0 (SAR-style coupling, different precharge sequence).
+    pub fn convert(&self, adc: &mut ImmersedAdc, v_in: f64, rng: &mut Rng) -> Conversion {
+        let upc = adc.units_per_code_pub();
+        let v_in_eff = v_in * adc.common_gain_pub();
+        let mut at = self.root;
+        let mut comparisons = 0u32;
+        let mut energy = 0.0f64;
+        loop {
+            match self.nodes[at as usize] {
+                Node::Leaf { code } => {
+                    return Conversion { code, comparisons, cycles: comparisons, energy_fj: energy }
+                }
+                Node::Cmp { split, lo, hi } => {
+                    let k_units = (split as usize + 1) * upc;
+                    let v_ref = adc.ref_level(0, k_units, rng);
+                    energy += adc.share_energy_fj_pub() * 0.5 + 5.0;
+                    comparisons += 1;
+                    at = if v_in_eff > v_ref { hi } else { lo };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adc::immersed::ImmersedMode;
+    use crate::util::prop;
+
+    #[test]
+    fn pmf_sums_to_one_and_is_skewed() {
+        let pmf = binomial_mav_pmf(32, 0.5, 5);
+        let total: f64 = pmf.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // Mean code ≈ 0.25 · 32 = 8, well below mid-scale 16.
+        let mean: f64 = pmf.iter().enumerate().map(|(c, p)| c as f64 * p).sum();
+        assert!((mean - 8.0).abs() < 1.0, "mean={mean}");
+        // Mass near mid-scale is tiny.
+        assert!(pmf[16] < 0.01);
+    }
+
+    #[test]
+    fn symmetric_tree_costs_bits_comparisons() {
+        for bits in 1..=6u8 {
+            let t = AsymmetricSearch::symmetric(bits);
+            assert!(
+                (t.expected_comparisons() - bits as f64).abs() < 1e-9,
+                "bits={bits}: {}",
+                t.expected_comparisons()
+            );
+        }
+    }
+
+    /// The Fig 10(c) claim: ~3.7 avg comparisons for 5-bit skewed MAV
+    /// vs 5 for symmetric binary search.
+    #[test]
+    fn asymmetric_beats_symmetric_on_skewed_mav() {
+        let pmf = binomial_mav_pmf(32, 0.5, 5);
+        let t = AsymmetricSearch::build(5, &pmf);
+        let e = t.expected_comparisons();
+        assert!(e < 4.2, "expected comparisons {e} not < 4.2");
+        assert!(e > 2.5, "suspiciously low: {e}");
+    }
+
+    #[test]
+    fn expected_matches_depth_weighted_pmf() {
+        let pmf = binomial_mav_pmf(16, 0.5, 4);
+        let t = AsymmetricSearch::build(4, &pmf);
+        let total: f64 = pmf.iter().sum();
+        let by_depth: f64 = pmf
+            .iter()
+            .enumerate()
+            .map(|(c, p)| (p / total) * t.depth_of(c as u32) as f64)
+            .sum();
+        assert!((by_depth - t.expected_comparisons()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_lower_bound_holds() {
+        let pmf = binomial_mav_pmf(32, 0.5, 5);
+        let t = AsymmetricSearch::build(5, &pmf);
+        let h = crate::util::stats::entropy_bits(&pmf);
+        assert!(t.expected_comparisons() >= h - 1e-9, "E[cmp] below entropy bound");
+    }
+
+    /// Codes from the asymmetric conversion equal the symmetric/ideal
+    /// codes — only the comparison *count* differs (paper's claim).
+    #[test]
+    fn asymmetric_codes_match_ideal() {
+        prop::check("asymmetric codes == ideal", 200, |rng| {
+            let pmf = binomial_mav_pmf(32, 0.5, 5);
+            let tree = AsymmetricSearch::build(5, &pmf);
+            let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+            let v = rng.uniform();
+            let c = tree.convert(&mut adc, v, rng);
+            crate::prop_assert!(c.code == adc.ideal_code(v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn average_comparisons_measured_on_hardware_path() {
+        // Draw MAVs from the binomial, digitize with the tree, and check
+        // the *measured* average comparisons is near the predicted one.
+        let cols = 32;
+        let pmf = binomial_mav_pmf(cols, 0.5, 5);
+        let tree = AsymmetricSearch::build(5, &pmf);
+        let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+        let mut rng = Rng::new(11);
+        let mut total = 0u64;
+        let trials = 3000;
+        for _ in 0..trials {
+            let plus = (0..cols).filter(|_| rng.bernoulli(0.25)).count();
+            let v = plus as f64 / cols as f64 + 1e-6;
+            total += tree.convert(&mut adc, v, &mut rng).comparisons as u64;
+        }
+        let avg = total as f64 / trials as f64;
+        let predicted = tree.expected_comparisons();
+        assert!((avg - predicted).abs() < 0.3, "avg={avg} predicted={predicted}");
+        assert!(avg < 5.0, "must beat symmetric 5 comparisons, got {avg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "pmf length")]
+    fn rejects_wrong_pmf_len() {
+        AsymmetricSearch::build(4, &[0.5, 0.5]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Conventional Flash ADC baseline (Table I row 2, anchored to [34]).
+//!
+//! `2^bits − 1` parallel comparators against a resistor-ladder reference:
+//! single-cycle conversion, but comparator count — and with it area and
+//! energy — grows exponentially with resolution (the paper's Fig 13(a)
+//! scaling argument).
+
+use crate::analog::{Comparator, NoiseModel};
+use crate::util::Rng;
+
+use super::{Adc, Conversion};
+
+/// Conventional Flash ADC with a per-level comparator bank.
+#[derive(Debug, Clone)]
+pub struct FlashAdc {
+    bits: u8,
+    vdd: f64,
+    /// One comparator per transition level `i/2^bits`, `i = 1..2^bits-1`.
+    comparators: Vec<Comparator>,
+    /// Ladder tap errors (V), one per level.
+    tap_err: Vec<f64>,
+    /// Comparator decision energy (fJ).
+    e_cmp_fj: f64,
+    /// Static ladder energy per conversion (fJ).
+    e_ladder_fj: f64,
+}
+
+impl FlashAdc {
+    pub fn sample(bits: u8, vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> Self {
+        assert!((1..=10).contains(&bits));
+        let levels = (1usize << bits) - 1;
+        FlashAdc {
+            bits,
+            vdd,
+            comparators: (0..levels).map(|_| Comparator::sample(noise, rng)).collect(),
+            tap_err: (0..levels)
+                .map(|_| rng.normal() * noise.cap_mismatch_sigma * vdd / (1u64 << bits) as f64)
+                .collect(),
+            e_cmp_fj: 5.0,
+            e_ladder_fj: 20.0,
+        }
+    }
+
+    pub fn ideal(bits: u8, vdd: f64) -> Self {
+        let levels = (1usize << bits) - 1;
+        FlashAdc {
+            bits,
+            vdd,
+            comparators: (0..levels).map(|_| Comparator::ideal()).collect(),
+            tap_err: vec![0.0; levels],
+            e_cmp_fj: 5.0,
+            e_ladder_fj: 20.0,
+        }
+    }
+
+    /// Number of comparators (the exponential cost driver).
+    pub fn comparator_count(&self) -> usize {
+        self.comparators.len()
+    }
+}
+
+impl Adc for FlashAdc {
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn vdd(&self) -> f64 {
+        self.vdd
+    }
+
+    /// One cycle: all comparators fire; the output code is the
+    /// thermometer count (bubble-tolerant encoding).
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion {
+        let n = 1u64 << self.bits;
+        let mut count = 0u32;
+        for (i, cmp) in self.comparators.iter_mut().enumerate() {
+            let v_ref = self.vdd * (i as f64 + 1.0) / n as f64 + self.tap_err[i];
+            if cmp.compare(v_in, v_ref, rng) {
+                count += 1;
+            }
+        }
+        Conversion {
+            code: count,
+            comparisons: self.comparators.len() as u32,
+            cycles: 1,
+            energy_fj: self.comparators.len() as f64 * self.e_cmp_fj + self.e_ladder_fj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ideal_flash_matches_ideal_code() {
+        prop::check("ideal flash == ideal_code", 256, |rng| {
+            let bits = 2 + rng.index(6) as u8;
+            let mut adc = FlashAdc::ideal(bits, 1.0);
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            let expect = adc.ideal_code(v);
+            crate::prop_assert!(got == expect, "bits={bits} v={v}: {got} != {expect}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_cycle_many_comparisons() {
+        let mut adc = FlashAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(1);
+        let c = adc.convert(0.61, &mut rng);
+        assert_eq!(c.cycles, 1);
+        assert_eq!(c.comparisons, 31);
+    }
+
+    #[test]
+    fn comparator_count_exponential() {
+        assert_eq!(FlashAdc::ideal(3, 1.0).comparator_count(), 7);
+        assert_eq!(FlashAdc::ideal(8, 1.0).comparator_count(), 255);
+    }
+
+    #[test]
+    fn flash_energy_exceeds_sar_energy_at_5_bits() {
+        // The Table I shape: Flash burns ~9x SAR energy at 5 bits.
+        let mut flash = FlashAdc::ideal(5, 1.0);
+        let mut sar = super::super::sar::SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(2);
+        let ef = flash.convert(0.5, &mut rng).energy_fj;
+        let es = sar.convert(0.5, &mut rng).energy_fj;
+        assert!(ef > 2.0 * es, "flash {ef} vs sar {es}");
+    }
+
+    #[test]
+    fn offsets_cause_rare_code_errors_only() {
+        let noise = NoiseModel::default();
+        let mut rng = Rng::new(3);
+        let mut adc = FlashAdc::sample(5, 1.0, &noise, &mut rng);
+        let trials = 500;
+        let mut bad = 0;
+        for i in 0..trials {
+            let v = (i as f64 + 0.5) / trials as f64;
+            let got = adc.convert(v, &mut rng).code as i64;
+            if (got - adc.ideal_code(v) as i64).abs() > 1 {
+                bad += 1;
+            }
+        }
+        assert!(bad < trials / 20, "bad={bad}");
+    }
+}

@@ -1,0 +1,368 @@
+//! Memory-immersed collaborative ADC (paper §IV-A/B, Figs 8–9, 11).
+//!
+//! The converter that gives the paper its Table I area/energy win: the
+//! reference voltages come from a *neighbouring compute-in-SRAM array*
+//! whose column lines form a capacitive DAC ([`crate::analog::CapDac`]).
+//! No dedicated capacitor bank, no resistor ladder — only a comparator
+//! and a tweak to the precharge array.
+//!
+//! Modes (programmable networking, Fig 9):
+//! - **SAR** — one neighbour array; binary search, `bits` cycles.
+//! - **Flash** — `2^bits − 1` neighbour arrays each generate one
+//!   reference simultaneously; 1 cycle.
+//! - **Hybrid** — `2^f − 1` neighbours resolve the `f` MSBs flash-style
+//!   in one cycle, then nearest-neighbour SAR resolves the rest:
+//!   `1 + (bits − f)` cycles (the paper's measured configuration:
+//!   f = 2, 5 bits → 4 cycles).
+//!
+//! **Common-mode cancellation** (paper §IV-A): the MAV being digitized
+//! and the references are produced by *identical* arrays, so gain-type
+//! non-idealities (incomplete settling, supply droop) appear on both
+//! sides of the comparator and cancel. [`ImmersedAdc::with_common_gain`]
+//! models this: the same `gain` multiplies input and references, and the
+//! output code is unchanged — property-tested, and the mechanism behind
+//! the near-ideal measured staircase (Fig 12).
+
+use crate::analog::{CapDac, Comparator, NoiseModel};
+use crate::util::Rng;
+
+use super::{Adc, Conversion};
+
+/// Networking mode of the collaborative converter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImmersedMode {
+    /// Nearest-neighbour successive approximation (Fig 8).
+    Sar,
+    /// Fully parallel flash across `2^bits − 1` neighbour arrays.
+    Flash,
+    /// Flash for `flash_bits` MSBs, SAR for the rest (Fig 9).
+    Hybrid { flash_bits: u8 },
+}
+
+impl ImmersedMode {
+    /// Neighbour arrays required by this mode at `bits` resolution.
+    pub fn neighbours(&self, bits: u8) -> usize {
+        match self {
+            ImmersedMode::Sar => 1,
+            ImmersedMode::Flash => (1usize << bits) - 1,
+            ImmersedMode::Hybrid { flash_bits } => {
+                assert!(*flash_bits < bits);
+                (1usize << flash_bits) - 1
+            }
+        }
+    }
+
+    /// Conversion latency in cycles at `bits` resolution.
+    pub fn cycles(&self, bits: u8) -> u32 {
+        match self {
+            ImmersedMode::Sar => bits as u32,
+            ImmersedMode::Flash => 1,
+            ImmersedMode::Hybrid { flash_bits } => 1 + (bits - flash_bits) as u32,
+        }
+    }
+}
+
+/// SRAM-immersed collaborative ADC.
+#[derive(Debug, Clone)]
+pub struct ImmersedAdc {
+    bits: u8,
+    vdd: f64,
+    mode: ImmersedMode,
+    /// One capacitive DAC per coupled neighbour array (column lines).
+    neighbours: Vec<CapDac>,
+    /// One comparator per neighbour (flash) / the shared SAR comparator.
+    comparators: Vec<Comparator>,
+    noise: NoiseModel,
+    /// Gain-type non-ideality common to the MAV array and the reference
+    /// arrays (settling, droop). 1.0 = ideal.
+    common_gain: f64,
+    /// Comparator decision energy (fJ).
+    e_cmp_fj: f64,
+}
+
+impl ImmersedAdc {
+    /// Fabricate: `units_per_array` column lines per neighbour (must be
+    /// ≥ 2^bits; the paper's 16×32 arrays give 32 units for 5 bits),
+    /// `c_col_ff` parasitic capacitance per column line.
+    pub fn sample(
+        bits: u8,
+        vdd: f64,
+        mode: ImmersedMode,
+        units_per_array: usize,
+        c_col_ff: f64,
+        noise: &NoiseModel,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!((1..=10).contains(&bits));
+        assert!(
+            units_per_array >= (1usize << bits),
+            "need ≥ 2^bits column lines ({} < {})",
+            units_per_array,
+            1usize << bits
+        );
+        let n = mode.neighbours(bits);
+        ImmersedAdc {
+            bits,
+            vdd,
+            mode,
+            neighbours: (0..n).map(|_| CapDac::sample(units_per_array, c_col_ff, noise, rng)).collect(),
+            comparators: (0..n.max(1)).map(|_| Comparator::sample(noise, rng)).collect(),
+            noise: *noise,
+            common_gain: 1.0,
+            e_cmp_fj: 5.0,
+        }
+    }
+
+    /// Ideal instance with the paper's 16×32 geometry (32 column lines).
+    pub fn ideal(bits: u8, vdd: f64, mode: ImmersedMode) -> Self {
+        let mut rng = Rng::new(0);
+        ImmersedAdc::sample(bits, vdd, mode, (1usize << bits).max(32), 20.0, &NoiseModel::ideal(), &mut rng)
+    }
+
+    /// Apply a common gain non-ideality to input *and* references
+    /// (models identical-array cancellation; see module docs).
+    pub fn with_common_gain(mut self, gain: f64) -> Self {
+        assert!(gain > 0.0 && gain <= 1.0);
+        self.common_gain = gain;
+        self
+    }
+
+    pub fn mode(&self) -> ImmersedMode {
+        self.mode
+    }
+
+    /// Reference voltage for precharging `k` of `n` units on neighbour
+    /// `idx` — including the common gain and the DAC's own noise.
+    pub fn ref_level(&mut self, idx: usize, k_units: usize, rng: &mut Rng) -> f64 {
+        let noise = self.noise;
+        let g = self.common_gain;
+        g * self.neighbours[idx].share_first_k(k_units, self.vdd, &noise, rng)
+    }
+
+    /// Units-per-code scale factor (n_units / 2^bits).
+    fn units_per_code(&self) -> usize {
+        self.neighbours[0].len() >> self.bits
+    }
+
+    /// Public accessors for external search strategies
+    /// ([`super::asymmetric::AsymmetricSearch`] drives the converter's
+    /// references directly).
+    pub fn units_per_code_pub(&self) -> usize {
+        self.units_per_code()
+    }
+
+    pub fn common_gain_pub(&self) -> f64 {
+        self.common_gain
+    }
+
+    pub fn share_energy_fj_pub(&self) -> f64 {
+        self.neighbours[0].share_energy_fj(self.vdd)
+    }
+
+    /// One comparator decision against neighbour `idx`'s reference at
+    /// `k_units`, bookkeeping energy.
+    fn decide(
+        &mut self,
+        idx: usize,
+        k_units: usize,
+        v_in: f64,
+        energy: &mut f64,
+        comparisons: &mut u32,
+        rng: &mut Rng,
+    ) -> bool {
+        let v_ref = self.ref_level(idx, k_units, rng);
+        *energy += self.neighbours[idx].share_energy_fj(self.vdd) * 0.5 + self.e_cmp_fj;
+        *comparisons += 1;
+        self.comparators[idx].compare(v_in, v_ref, rng)
+    }
+
+    /// SAR conversion within code range [0, 2^bits) using neighbour 0.
+    fn convert_sar_range(
+        &mut self,
+        v_in: f64,
+        mut code: u32,
+        first_bit: u8,
+        energy: &mut f64,
+        comparisons: &mut u32,
+        rng: &mut Rng,
+    ) -> u32 {
+        let upc = self.units_per_code();
+        for bit in (0..first_bit).rev() {
+            let trial = code | (1 << bit);
+            if self.decide(0, trial as usize * upc, v_in, energy, comparisons, rng) {
+                code = trial;
+            }
+        }
+        code
+    }
+}
+
+impl Adc for ImmersedAdc {
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn vdd(&self) -> f64 {
+        self.vdd
+    }
+
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion {
+        let v_in = v_in * self.common_gain; // MAV sees the same non-ideality
+        let mut energy = 0.0;
+        let mut comparisons = 0;
+        let upc = self.units_per_code();
+        let code = match self.mode {
+            ImmersedMode::Sar => {
+                self.convert_sar_range(v_in, 0, self.bits, &mut energy, &mut comparisons, rng)
+            }
+            ImmersedMode::Flash => {
+                // All neighbours fire simultaneously: thermometer count.
+                let mut count = 0u32;
+                for i in 0..self.neighbours.len() {
+                    if self.decide(i, (i + 1) * upc, v_in, &mut energy, &mut comparisons, rng) {
+                        count += 1;
+                    }
+                }
+                count
+            }
+            ImmersedMode::Hybrid { flash_bits } => {
+                // Cycle 1: coarse flash over 2^f − 1 neighbours.
+                let seg_codes = 1u32 << (self.bits - flash_bits);
+                let mut seg = 0u32;
+                for i in 0..self.neighbours.len() {
+                    let k = (i as u32 + 1) * seg_codes;
+                    if self.decide(i, k as usize * upc, v_in, &mut energy, &mut comparisons, rng) {
+                        seg += 1;
+                    }
+                }
+                // Remaining bits: SAR inside the selected segment.
+                let base = seg * seg_codes;
+                self.convert_sar_range(
+                    v_in,
+                    base,
+                    self.bits - flash_bits,
+                    &mut energy,
+                    &mut comparisons,
+                    rng,
+                )
+            }
+        };
+        Conversion { code, comparisons, cycles: self.mode.cycles(self.bits), energy_fj: energy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn mode_neighbour_and_cycle_counts() {
+        assert_eq!(ImmersedMode::Sar.neighbours(5), 1);
+        assert_eq!(ImmersedMode::Flash.neighbours(5), 31);
+        assert_eq!(ImmersedMode::Hybrid { flash_bits: 2 }.neighbours(5), 3);
+        assert_eq!(ImmersedMode::Sar.cycles(5), 5);
+        assert_eq!(ImmersedMode::Flash.cycles(5), 1);
+        // The paper's measured configuration: 2 bits flash + 3 bits SAR.
+        assert_eq!(ImmersedMode::Hybrid { flash_bits: 2 }.cycles(5), 4);
+    }
+
+    #[test]
+    fn ideal_sar_mode_matches_ideal_code() {
+        prop::check("immersed SAR == ideal_code", 200, |rng| {
+            let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            crate::prop_assert!(got == adc.ideal_code(v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ideal_flash_mode_matches_ideal_code() {
+        prop::check("immersed flash == ideal_code", 100, |rng| {
+            let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Flash);
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            crate::prop_assert!(got == adc.ideal_code(v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ideal_hybrid_mode_matches_ideal_code() {
+        prop::check("immersed hybrid == ideal_code", 200, |rng| {
+            let mut adc = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 });
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            crate::prop_assert!(got == adc.ideal_code(v), "v={v}");
+            Ok(())
+        });
+    }
+
+    /// The paper's common-mode claim: gain non-idealities shared by the
+    /// MAV array and reference arrays do not move output codes.
+    #[test]
+    fn common_gain_cancels_exactly() {
+        prop::check("common-mode gain cancellation", 200, |rng| {
+            let gain = 0.6 + 0.4 * rng.uniform();
+            let v = rng.uniform();
+            let mut plain = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+            let mut gained =
+                ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar).with_common_gain(gain);
+            let c0 = plain.convert(v, rng).code;
+            let c1 = gained.convert(v, rng).code;
+            crate::prop_assert!(c0 == c1, "gain={gain} v={v}: {c0} != {c1}");
+            Ok(())
+        });
+    }
+
+    /// A conventional converter with *ideal* references has no such
+    /// cancellation: a gained MAV mis-codes.
+    #[test]
+    fn conventional_sar_does_not_cancel_gain() {
+        let mut sar = super::super::sar::SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(5);
+        let v = 0.7;
+        let gained = sar.convert(v * 0.8, &mut rng).code;
+        let plain = sar.convert(v, &mut rng).code;
+        assert_ne!(gained, plain);
+    }
+
+    #[test]
+    fn hybrid_uses_fewer_cycles_than_sar_more_than_flash() {
+        let mut rng = Rng::new(6);
+        let mut sar = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar);
+        let mut fl = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Flash);
+        let mut hy = ImmersedAdc::ideal(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 });
+        let cs = sar.convert(0.4, &mut rng).cycles;
+        let cf = fl.convert(0.4, &mut rng).cycles;
+        let ch = hy.convert(0.4, &mut rng).cycles;
+        assert!(cf < ch && ch < cs, "flash {cf} < hybrid {ch} < sar {cs}");
+    }
+
+    #[test]
+    fn noisy_conversion_stays_near_ideal() {
+        let noise = NoiseModel::default();
+        let mut rng = Rng::new(7);
+        let mut adc =
+            ImmersedAdc::sample(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+        let trials = 400;
+        let mut bad = 0;
+        for i in 0..trials {
+            let v = (i as f64 + 0.5) / trials as f64;
+            let got = adc.convert(v, &mut rng).code as i64;
+            if (got - adc.ideal_code(v) as i64).abs() > 1 {
+                bad += 1;
+            }
+        }
+        assert!(bad < trials / 10, "bad={bad}/{trials}");
+    }
+
+    #[test]
+    #[should_panic(expected = "column lines")]
+    fn rejects_too_few_units() {
+        let mut rng = Rng::new(8);
+        ImmersedAdc::sample(6, 1.0, ImmersedMode::Sar, 32, 20.0, &NoiseModel::ideal(), &mut rng);
+    }
+}

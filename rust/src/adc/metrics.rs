@@ -1,0 +1,148 @@
+//! Converter characterization: staircase, DNL, INL (paper Fig 12).
+//!
+//! Mirrors the paper's test-chip measurement flow: sweep a fine voltage
+//! ramp, record the measured transfer staircase, locate code transition
+//! levels, and derive differential/integral non-linearity in LSB.
+
+use crate::util::Rng;
+
+use super::Adc;
+
+/// Measured transfer function: `(v_in, code)` samples over a ramp.
+pub fn staircase<A: Adc>(adc: &mut A, points: usize, rng: &mut Rng) -> Vec<(f64, u32)> {
+    assert!(points >= 2);
+    let vdd = adc.vdd();
+    (0..points)
+        .map(|i| {
+            let v = vdd * i as f64 / (points - 1) as f64;
+            (v, adc.convert(v, rng).code)
+        })
+        .collect()
+}
+
+/// Linearity metrics derived from measured transition levels.
+#[derive(Debug, Clone)]
+pub struct Linearity {
+    /// Differential non-linearity per code step, in LSB.
+    pub dnl: Vec<f64>,
+    /// Integral non-linearity per code, in LSB.
+    pub inl: Vec<f64>,
+}
+
+impl Linearity {
+    pub fn max_abs_dnl(&self) -> f64 {
+        self.dnl.iter().fold(0.0, |a, d| a.max(d.abs()))
+    }
+
+    pub fn max_abs_inl(&self) -> f64 {
+        self.inl.iter().fold(0.0, |a, d| a.max(d.abs()))
+    }
+}
+
+/// Measure DNL/INL of a converter by ramp search for each transition
+/// level `T_i` (first input producing code ≥ i), then
+/// `DNL_i = (T_{i+1} − T_i)/LSB − 1`, `INL_i = (T_i − T_1)/LSB − (i−1)`.
+pub fn linearity<A: Adc>(adc: &mut A, steps_per_code: usize, rng: &mut Rng) -> Linearity {
+    let n = 1u32 << adc.bits();
+    let vdd = adc.vdd();
+    let lsb = vdd / n as f64;
+    let fine = vdd / (n as usize * steps_per_code) as f64;
+
+    // Majority-vote the code at each ramp point to suppress per-decision
+    // comparator noise (the chip measurement averages the same way).
+    let code_at = |adc: &mut A, v: f64, rng: &mut Rng| -> u32 {
+        let mut votes = [0u32; 3];
+        for s in 0..3 {
+            votes[s] = adc.convert(v, rng).code;
+        }
+        votes.sort();
+        votes[1]
+    };
+
+    // Transition levels T_1..T_{n-1}.
+    let mut transitions = vec![f64::NAN; n as usize];
+    let mut v = 0.0;
+    let mut current = code_at(adc, 0.0, rng);
+    while v < vdd {
+        v += fine;
+        let c = code_at(adc, v, rng);
+        if c > current {
+            // Record every transition we crossed (nonmonotone glitches
+            // fill the first crossing only).
+            for t in (current + 1)..=c.min(n - 1) {
+                if transitions[t as usize].is_nan() {
+                    transitions[t as usize] = v;
+                }
+            }
+            current = c;
+        }
+    }
+
+    // Fill any never-seen transitions (missing codes) with neighbours.
+    for i in 1..n as usize {
+        if transitions[i].is_nan() {
+            transitions[i] = if i > 1 { transitions[i - 1] } else { 0.0 };
+        }
+    }
+
+    let mut dnl = Vec::with_capacity(n as usize - 2);
+    for i in 1..(n as usize - 1) {
+        dnl.push((transitions[i + 1] - transitions[i]) / lsb - 1.0);
+    }
+    let mut inl = Vec::with_capacity(n as usize - 1);
+    for i in 1..n as usize {
+        inl.push((transitions[i] - transitions[1]) / lsb - (i as f64 - 1.0));
+    }
+    Linearity { dnl, inl }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adc::immersed::{ImmersedAdc, ImmersedMode};
+    use crate::adc::sar::SarAdc;
+    use crate::analog::NoiseModel;
+
+    #[test]
+    fn staircase_is_monotone_for_ideal_adc() {
+        let mut adc = SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(1);
+        let stairs = staircase(&mut adc, 400, &mut rng);
+        assert!(stairs.windows(2).all(|w| w[1].1 >= w[0].1));
+        assert_eq!(stairs.first().unwrap().1, 0);
+        assert_eq!(stairs.last().unwrap().1, 31);
+    }
+
+    #[test]
+    fn ideal_adc_has_zero_dnl_inl() {
+        let mut adc = SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(2);
+        let lin = linearity(&mut adc, 64, &mut rng);
+        assert!(lin.max_abs_dnl() < 0.05, "dnl={}", lin.max_abs_dnl());
+        assert!(lin.max_abs_inl() < 0.05, "inl={}", lin.max_abs_inl());
+    }
+
+    #[test]
+    fn immersed_adc_near_ideal_linearity_with_default_noise() {
+        // Fig 12: the measured chip shows sub-LSB DNL/INL.
+        let noise = NoiseModel::default();
+        let mut rng = Rng::new(3);
+        let mut adc =
+            ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &noise, &mut rng);
+        let lin = linearity(&mut adc, 32, &mut rng);
+        assert!(lin.max_abs_dnl() < 1.0, "dnl={}", lin.max_abs_dnl());
+        assert!(lin.max_abs_inl() < 1.5, "inl={}", lin.max_abs_inl());
+    }
+
+    #[test]
+    fn heavy_mismatch_degrades_linearity() {
+        let clean = NoiseModel { cap_mismatch_sigma: 0.001, ..NoiseModel::ideal() };
+        let dirty = NoiseModel { cap_mismatch_sigma: 0.2, ..NoiseModel::ideal() };
+        let mut rng = Rng::new(4);
+        let mut adc_c = ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &clean, &mut rng);
+        let mut adc_d = ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &dirty, &mut rng);
+        let lin_c = linearity(&mut adc_c, 32, &mut rng);
+        let lin_d = linearity(&mut adc_d, 32, &mut rng);
+        assert!(lin_d.max_abs_inl() > lin_c.max_abs_inl());
+    }
+}

@@ -1,0 +1,89 @@
+//! Digitization substrate (paper §IV).
+//!
+//! When the ADC-free 1-bit path of [`crate::cim`] is not enough — i.e.
+//! multi-bit MAV outputs must be digitized — the paper replaces dedicated
+//! per-array ADCs with **memory-immersed collaborative digitization**:
+//! a neighbouring compute-in-SRAM array's parasitic column lines act as
+//! the capacitive DAC of a SAR/Flash/hybrid converter.
+//!
+//! - [`sar`] / [`flash`] — conventional SAR and Flash baselines
+//!   (the Table I comparison rows, behavioural + energy/area anchors
+//!   from [34]).
+//! - [`immersed`] — the paper's SRAM-immersed converter: SAR, Flash and
+//!   hybrid Flash+SAR modes, with the common-mode non-ideality
+//!   cancellation that comes from generating references in an identical
+//!   array.
+//! - [`asymmetric`] — MAV-statistics-aware successive approximation
+//!   (paper §IV-C, Fig 10): an optimal comparison tree for the skewed
+//!   bitplane MAV distribution (~3.7 comparisons avg vs 5 for 5 bits).
+//! - [`metrics`] — staircase, DNL, INL, ENOB characterization (Fig 12).
+
+pub mod asymmetric;
+pub mod flash;
+pub mod immersed;
+pub mod metrics;
+pub mod sar;
+
+pub use asymmetric::{binomial_mav_pmf, AsymmetricSearch};
+pub use flash::FlashAdc;
+pub use immersed::{ImmersedAdc, ImmersedMode};
+pub use metrics::{staircase, Linearity};
+pub use sar::SarAdc;
+
+use crate::util::Rng;
+
+/// Result of one analog→digital conversion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Conversion {
+    /// Output code in `[0, 2^bits)`.
+    pub code: u32,
+    /// Comparator decisions used.
+    pub comparisons: u32,
+    /// Clock cycles used (Flash resolves many comparisons per cycle).
+    pub cycles: u32,
+    /// Energy spent (fJ): comparator decisions + reference generation.
+    pub energy_fj: f64,
+}
+
+/// Common interface over all converter styles.
+pub trait Adc {
+    /// Resolution in bits.
+    fn bits(&self) -> u8;
+    /// Full-scale voltage.
+    fn vdd(&self) -> f64;
+    /// Convert one input voltage.
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion;
+
+    /// Ideal (noise-free) code for `v` — the oracle used by tests and
+    /// linearity metrics: `floor(v / vdd · 2^bits)` clamped to range.
+    fn ideal_code(&self, v: f64) -> u32 {
+        ideal_code(v, self.vdd(), self.bits())
+    }
+}
+
+/// `floor(v / vdd · 2^bits)` clamped into `[0, 2^bits)`.
+pub fn ideal_code(v: f64, vdd: f64, bits: u8) -> u32 {
+    let n = 1u32 << bits;
+    let t = (v / vdd * n as f64).floor();
+    (t.max(0.0) as u32).min(n - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_code_boundaries() {
+        assert_eq!(ideal_code(0.0, 1.0, 5), 0);
+        assert_eq!(ideal_code(0.999, 1.0, 5), 31);
+        assert_eq!(ideal_code(1.5, 1.0, 5), 31); // clamps high
+        assert_eq!(ideal_code(-0.2, 1.0, 5), 0); // clamps low
+        // Mid-scale: 0.5 → code 16 of 32.
+        assert_eq!(ideal_code(0.5, 1.0, 5), 16);
+    }
+
+    #[test]
+    fn ideal_code_scales_with_vdd() {
+        assert_eq!(ideal_code(0.425, 0.85, 5), 16);
+    }
+}

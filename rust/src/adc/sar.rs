@@ -1,0 +1,185 @@
+//! Conventional SAR ADC baseline (Table I row 1, anchored to [34]).
+//!
+//! Binary search over a dedicated binary-weighted capacitive DAC: `bits`
+//! comparator decisions, one per cycle. This is the *baseline* the
+//! paper's memory-immersed converter is compared against — functionally
+//! similar, but it pays for a dedicated capacitor bank and comparator per
+//! array (area/energy numbers in [`crate::energy`]).
+
+use crate::analog::{Comparator, NoiseModel};
+use crate::util::Rng;
+
+use super::{Adc, Conversion};
+
+/// Conventional SAR ADC with a dedicated binary-weighted cap DAC.
+#[derive(Debug, Clone)]
+pub struct SarAdc {
+    bits: u8,
+    vdd: f64,
+    comparator: Comparator,
+    /// Per-binary-weight fractional error of the dedicated DAC
+    /// (weight `2^i` has relative error `mismatch[i]`).
+    weight_err: Vec<f64>,
+    /// Unit capacitance of the DAC (fF) — sets conversion energy.
+    c_unit_ff: f64,
+    /// Comparator decision energy (fJ).
+    e_cmp_fj: f64,
+}
+
+impl SarAdc {
+    /// Fabricate a SAR ADC; comparator offset and DAC mismatch sampled
+    /// from `noise`.
+    pub fn sample(bits: u8, vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> Self {
+        assert!((1..=12).contains(&bits));
+        // Binary-weighted caps: relative sigma shrinks as 1/sqrt(weight).
+        let weight_err = (0..bits)
+            .map(|i| {
+                let w = (1u64 << i) as f64;
+                rng.normal() * noise.cap_mismatch_sigma / w.sqrt()
+            })
+            .collect();
+        SarAdc {
+            bits,
+            vdd,
+            comparator: Comparator::sample(noise, rng),
+            weight_err,
+            c_unit_ff: 2.0,
+            e_cmp_fj: 5.0,
+        }
+    }
+
+    /// Ideal instance (tests/oracles).
+    pub fn ideal(bits: u8, vdd: f64) -> Self {
+        SarAdc {
+            bits,
+            vdd,
+            comparator: Comparator::ideal(),
+            weight_err: vec![0.0; bits as usize],
+            c_unit_ff: 2.0,
+            e_cmp_fj: 5.0,
+        }
+    }
+
+    /// DAC output voltage for a digital `code`, including weight errors.
+    fn dac_v(&self, code: u32) -> f64 {
+        let n = (1u64 << self.bits) as f64;
+        let mut acc = 0.0;
+        for i in 0..self.bits {
+            if (code >> i) & 1 == 1 {
+                let w = (1u64 << i) as f64;
+                acc += w * (1.0 + self.weight_err[i as usize]);
+            }
+        }
+        self.vdd * acc / n
+    }
+
+    /// Total DAC capacitance (fF): `2^bits` units.
+    pub fn c_total_ff(&self) -> f64 {
+        (1u64 << self.bits) as f64 * self.c_unit_ff
+    }
+}
+
+impl Adc for SarAdc {
+    fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn vdd(&self) -> f64 {
+        self.vdd
+    }
+
+    /// Classic SAR loop: trial-set each bit MSB→LSB, keep it if the DAC
+    /// midpoint (code + ½LSB) is still below the input.
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion {
+        let mut code = 0u32;
+        let mut energy = 0.0;
+        for bit in (0..self.bits).rev() {
+            let trial = code | (1 << bit);
+            // Binary search on "v_in > trial level" — converges to the
+            // floor quantizer: dac(code) ≤ v_in < dac(code+1).
+            let v_ref = self.dac_v(trial);
+            let keep = self.comparator.compare(v_in, v_ref, rng);
+            // Each trial switches roughly the trial weight of capacitance.
+            let c_sw = (1u64 << bit) as f64 * self.c_unit_ff;
+            energy += 0.5 * c_sw * self.vdd * self.vdd + self.e_cmp_fj;
+            if keep {
+                code = trial;
+            }
+        }
+        Conversion {
+            code,
+            comparisons: self.bits as u32,
+            cycles: self.bits as u32,
+            energy_fj: energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ideal_sar_matches_ideal_code() {
+        prop::check("ideal SAR == ideal_code", 256, |rng| {
+            let bits = 3 + rng.index(6) as u8;
+            let mut adc = SarAdc::ideal(bits, 1.0);
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            let expect = adc.ideal_code(v);
+            crate::prop_assert!(got == expect, "bits={bits} v={v}: {got} != {expect}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conversion_uses_bits_comparisons_and_cycles() {
+        let mut adc = SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(1);
+        let c = adc.convert(0.37, &mut rng);
+        assert_eq!(c.comparisons, 5);
+        assert_eq!(c.cycles, 5);
+        assert!(c.energy_fj > 0.0);
+    }
+
+    #[test]
+    fn noisy_sar_stays_within_one_code_mostly() {
+        let noise = NoiseModel::default();
+        let mut rng = Rng::new(2);
+        let mut adc = SarAdc::sample(5, 1.0, &noise, &mut rng);
+        let mut bad = 0;
+        let trials = 500;
+        for i in 0..trials {
+            let v = (i as f64 + 0.5) / trials as f64;
+            let got = adc.convert(v, &mut rng).code as i64;
+            let expect = adc.ideal_code(v) as i64;
+            if (got - expect).abs() > 1 {
+                bad += 1;
+            }
+        }
+        assert!(bad < trials / 20, "too many multi-code errors: {bad}/{trials}");
+    }
+
+    #[test]
+    fn monotone_codes_on_ramp() {
+        let mut adc = SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(3);
+        let mut prev = 0;
+        for i in 0..200 {
+            let v = i as f64 / 200.0;
+            let c = adc.convert(v, &mut rng).code;
+            assert!(c >= prev, "non-monotone at v={v}");
+            prev = c;
+        }
+        assert_eq!(prev, 31);
+    }
+
+    #[test]
+    fn full_scale_and_zero() {
+        let mut adc = SarAdc::ideal(5, 1.0);
+        let mut rng = Rng::new(4);
+        assert_eq!(adc.convert(0.0, &mut rng).code, 0);
+        assert_eq!(adc.convert(0.9999, &mut rng).code, 31);
+    }
+}

@@ -1,0 +1,178 @@
+//! Memory-immersed capacitive DAC (paper §IV-A).
+//!
+//! The key structural trick of the paper's collaborative digitization:
+//! the parasitic *column lines* of a neighbouring compute-in-SRAM array
+//! are repurposed as the unit capacitors of a charge-sharing DAC. A
+//! precharge transistor array charges a selected subset of column lines
+//! to VDD (the rest to ground); shorting all lines together then yields
+//!
+//! `V = (Σ_{i∈selected} C_i / Σ_j C_j) · VDD`
+//!
+//! — a reference voltage with ~`log2(columns)+1` distinct levels per
+//! precharge pattern, with *zero* dedicated capacitor area.
+
+use super::noise::NoiseModel;
+use crate::util::Rng;
+
+/// A capacitive DAC built from `n` unit (column-line) capacitors.
+#[derive(Debug, Clone)]
+pub struct CapDac {
+    /// Per-unit capacitance, normalised to a nominal of 1.0 (mismatch
+    /// sampled at fabrication).
+    units: Vec<f64>,
+    /// Physical unit capacitance (fF) — one column line's parasitic.
+    pub c_unit_ff: f64,
+    /// Charge-sharing switching events so far (energy accounting).
+    switch_events: u64,
+}
+
+impl CapDac {
+    /// Fabricate a DAC with `n` unit caps of `c_unit_ff` fF each,
+    /// sampling mismatch from `noise`.
+    pub fn sample(n: usize, c_unit_ff: f64, noise: &NoiseModel, rng: &mut Rng) -> Self {
+        assert!(n > 0);
+        CapDac {
+            units: (0..n).map(|_| noise.sample_unit_cap(rng)).collect(),
+            c_unit_ff,
+            switch_events: 0,
+        }
+    }
+
+    /// Ideal DAC (all units exactly nominal).
+    pub fn ideal(n: usize, c_unit_ff: f64) -> Self {
+        CapDac { units: vec![1.0; n], c_unit_ff, switch_events: 0 }
+    }
+
+    /// Number of unit capacitors (column lines).
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Total capacitance (fF).
+    pub fn total_c_ff(&self) -> f64 {
+        self.units.iter().sum::<f64>() * self.c_unit_ff
+    }
+
+    /// Generate the reference voltage for precharging the first `k` of
+    /// `n` unit caps to `vdd` and charge-sharing. Adds kT/C noise on the
+    /// shared node and counts a switching event.
+    pub fn share_first_k(&mut self, k: usize, vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> f64 {
+        assert!(k <= self.units.len());
+        self.switch_events += 1;
+        let selected: f64 = self.units[..k].iter().sum();
+        let total: f64 = self.units.iter().sum();
+        let v = vdd * selected / total;
+        v + noise.sample_ktc_v(self.total_c_ff(), rng) + noise.charge_injection_v(v, rng)
+    }
+
+    /// Reference voltage for an arbitrary selection mask.
+    pub fn share_mask(&mut self, mask: &[bool], vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> f64 {
+        assert_eq!(mask.len(), self.units.len());
+        self.switch_events += 1;
+        let selected: f64 = self.units.iter().zip(mask).filter(|(_, &m)| m).map(|(c, _)| c).sum();
+        let total: f64 = self.units.iter().sum();
+        let v = vdd * selected / total;
+        v + noise.sample_ktc_v(self.total_c_ff(), rng) + noise.charge_injection_v(v, rng)
+    }
+
+    /// Ideal code→voltage map: `code/n · vdd` (for staircase oracles).
+    pub fn ideal_level(&self, k: usize, vdd: f64) -> f64 {
+        vdd * k as f64 / self.units.len() as f64
+    }
+
+    /// Energy of one charge-share event at `vdd`, in femtojoules:
+    /// `E = ½ · C_total · VDD²` (worst-case full swing).
+    pub fn share_energy_fj(&self, vdd: f64) -> f64 {
+        0.5 * self.total_c_ff() * vdd * vdd
+    }
+
+    /// Switching events so far.
+    pub fn switch_events(&self) -> u64 {
+        self.switch_events
+    }
+
+    pub fn reset_events(&mut self) {
+        self.switch_events = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_levels_are_uniform() {
+        let mut dac = CapDac::ideal(32, 2.0);
+        let noise = NoiseModel::ideal();
+        let mut rng = Rng::new(0);
+        for k in 0..=32 {
+            let v = dac.share_first_k(k, 1.0, &noise, &mut rng);
+            assert!((v - k as f64 / 32.0).abs() < 1e-12, "k={k} v={v}");
+        }
+    }
+
+    #[test]
+    fn mask_matches_first_k_for_prefix_masks() {
+        let mut dac = CapDac::ideal(16, 2.0);
+        let noise = NoiseModel::ideal();
+        let mut rng = Rng::new(0);
+        let mut mask = vec![false; 16];
+        for k in 0..8 {
+            mask[k] = true;
+        }
+        let vm = dac.share_mask(&mask, 1.0, &noise, &mut rng);
+        let vk = dac.share_first_k(8, 1.0, &noise, &mut rng);
+        assert_eq!(vm, vk);
+    }
+
+    #[test]
+    fn mismatch_perturbs_but_preserves_endpoints() {
+        let noise = NoiseModel { cap_mismatch_sigma: 0.05, ..NoiseModel::ideal() };
+        let mut rng = Rng::new(42);
+        let mut dac = CapDac::sample(32, 2.0, &noise, &mut rng);
+        let v0 = dac.share_first_k(0, 1.0, &noise, &mut rng);
+        let v32 = dac.share_first_k(32, 1.0, &noise, &mut rng);
+        assert_eq!(v0, 0.0);
+        assert!((v32 - 1.0).abs() < 1e-12);
+        // Mid-levels deviate from ideal but stay monotone-ish in k.
+        let mid = dac.share_first_k(16, 1.0, &noise, &mut rng);
+        assert!((mid - 0.5).abs() < 0.05, "mid={mid}");
+        assert!((mid - 0.5).abs() > 0.0);
+    }
+
+    #[test]
+    fn share_levels_monotone_in_k() {
+        let noise = NoiseModel { cap_mismatch_sigma: 0.02, ..NoiseModel::ideal() };
+        let mut rng = Rng::new(7);
+        let mut dac = CapDac::sample(64, 2.0, &noise, &mut rng);
+        let mut prev = -1.0;
+        for k in 0..=64 {
+            let v = dac.share_first_k(k, 1.0, &noise, &mut rng);
+            assert!(v > prev, "k={k}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_cap_and_vdd() {
+        let dac = CapDac::ideal(32, 2.0);
+        assert!((dac.share_energy_fj(1.0) - 32.0).abs() < 1e-12);
+        assert!((dac.share_energy_fj(2.0) - 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_events_accumulate() {
+        let mut dac = CapDac::ideal(4, 1.0);
+        let noise = NoiseModel::ideal();
+        let mut rng = Rng::new(0);
+        dac.share_first_k(1, 1.0, &noise, &mut rng);
+        dac.share_first_k(2, 1.0, &noise, &mut rng);
+        assert_eq!(dac.switch_events(), 2);
+        dac.reset_events();
+        assert_eq!(dac.switch_events(), 0);
+    }
+}

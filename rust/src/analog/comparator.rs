@@ -1,0 +1,122 @@
+//! Clocked rail-to-rail comparator (paper Fig 8(b)).
+//!
+//! The paper's design pairs n-type and p-type clocked comparators so the
+//! valid input common-mode spans rail to rail. Behaviourally a comparator
+//! is a sign decision corrupted by a static per-instance offset (device
+//! mismatch) and per-decision noise; both come from [`super::NoiseModel`].
+
+use super::noise::NoiseModel;
+use crate::util::Rng;
+
+/// One comparator instance with its sampled static offset.
+#[derive(Debug, Clone)]
+pub struct Comparator {
+    /// Static input-referred offset (V), sampled at "fabrication".
+    offset_v: f64,
+    /// Per-decision noise sigma (V).
+    noise_sigma_v: f64,
+    /// Decisions made (for energy accounting).
+    decisions: u64,
+}
+
+impl Comparator {
+    /// Fabricate a comparator: samples its mismatch offset from `noise`.
+    pub fn sample(noise: &NoiseModel, rng: &mut Rng) -> Self {
+        Comparator {
+            offset_v: noise.sample_comparator_offset_v(rng),
+            noise_sigma_v: noise.comparator_noise_sigma_v,
+            decisions: 0,
+        }
+    }
+
+    /// An ideal comparator (zero offset, zero noise).
+    pub fn ideal() -> Self {
+        Comparator { offset_v: 0.0, noise_sigma_v: 0.0, decisions: 0 }
+    }
+
+    /// Construct with an explicit offset (tests, trimming experiments).
+    pub fn with_offset(offset_v: f64) -> Self {
+        Comparator { offset_v, noise_sigma_v: 0.0, decisions: 0 }
+    }
+
+    /// Clocked decision: `v_plus > v_minus` as seen through offset+noise.
+    pub fn compare(&mut self, v_plus: f64, v_minus: f64, rng: &mut Rng) -> bool {
+        self.decisions += 1;
+        let noise = if self.noise_sigma_v > 0.0 { rng.normal() * self.noise_sigma_v } else { 0.0 };
+        v_plus - v_minus + self.offset_v + noise > 0.0
+    }
+
+    /// Static offset of this instance (V).
+    pub fn offset_v(&self) -> f64 {
+        self.offset_v
+    }
+
+    /// Total decisions made by this instance.
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Reset the decision counter (per-conversion energy accounting).
+    pub fn reset_decisions(&mut self) {
+        self.decisions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_comparator_is_exact_sign() {
+        let mut c = Comparator::ideal();
+        let mut rng = Rng::new(0);
+        assert!(c.compare(0.5, 0.4, &mut rng));
+        assert!(!c.compare(0.4, 0.5, &mut rng));
+        assert!(!c.compare(0.5, 0.5, &mut rng)); // strict
+    }
+
+    #[test]
+    fn offset_shifts_the_trip_point() {
+        let mut c = Comparator::with_offset(0.1);
+        let mut rng = Rng::new(0);
+        // v_plus - v_minus = -0.05, but offset +0.1 flips the decision.
+        assert!(c.compare(0.45, 0.5, &mut rng));
+        let mut c2 = Comparator::with_offset(-0.1);
+        assert!(!c2.compare(0.55, 0.5, &mut rng));
+    }
+
+    #[test]
+    fn decision_counter_counts() {
+        let mut c = Comparator::ideal();
+        let mut rng = Rng::new(0);
+        for _ in 0..5 {
+            c.compare(1.0, 0.0, &mut rng);
+        }
+        assert_eq!(c.decisions(), 5);
+        c.reset_decisions();
+        assert_eq!(c.decisions(), 0);
+    }
+
+    #[test]
+    fn noisy_comparator_flips_near_trip_point() {
+        let noise = NoiseModel { comparator_noise_sigma_v: 10e-3, ..NoiseModel::ideal() };
+        let mut rng = Rng::new(7);
+        let mut c = Comparator::sample(&noise, &mut rng);
+        // Exactly at the trip point the decision should be ~50/50.
+        let n = 4000;
+        let ones = (0..n).filter(|_| c.compare(0.5, 0.5, &mut rng)).count();
+        let frac = ones as f64 / n as f64;
+        assert!((0.35..0.65).contains(&frac), "frac={frac}");
+        // Far from the trip point it is deterministic.
+        assert!(c.compare(0.8, 0.2, &mut rng));
+    }
+
+    #[test]
+    fn sampled_offsets_vary_per_instance() {
+        let noise = NoiseModel::default();
+        let mut rng = Rng::new(9);
+        let c1 = Comparator::sample(&noise, &mut rng);
+        let c2 = Comparator::sample(&noise, &mut rng);
+        assert_ne!(c1.offset_v(), c2.offset_v());
+    }
+}

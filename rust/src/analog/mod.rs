@@ -1,0 +1,27 @@
+//! Behavioural analog substrate.
+//!
+//! Everything the paper characterizes on its 65 nm test chip — charge
+//! sharing on parasitic bit/column lines, clocked comparators, supply and
+//! clock scaling, thermal and offset noise — is modelled here as explicit,
+//! seedable arithmetic. The models are deliberately *mechanistic* (kT/C
+//! noise, alpha-power-law drive delay, RC settling) rather than curve
+//! fits, so the downstream figures (Fig 3 timing, Fig 7 VDD/size/clock
+//! sweeps, Fig 8 conversion traces, Fig 12 DNL/INL, Fig 13(c,d)) emerge
+//! from the same physics knobs the silicon obeys.
+//!
+//! Substitution note (DESIGN.md §Substitutions): the paper's transistor-
+//! level results come from 16 nm PTM LSTP spice and a fabricated 65 nm
+//! chip; here the same quantities come from closed-form charge/RC models
+//! with technology-scaled constants.
+
+pub mod capdac;
+pub mod comparator;
+pub mod noise;
+pub mod supply;
+pub mod timing;
+
+pub use capdac::CapDac;
+pub use comparator::Comparator;
+pub use noise::NoiseModel;
+pub use supply::{OperatingPoint, SupplyModel};
+pub use timing::{PhaseTimer, SignalTrace};

@@ -1,0 +1,148 @@
+//! Noise sources: kT/C thermal noise, comparator offset, charge injection.
+//!
+//! These are the non-idealities behind the paper's measured DNL/INL
+//! (Fig 12) and the accuracy roll-off at low VDD (Figs 7a, 13d): the
+//! signal (one LSB) shrinks with VDD while the noise floor stays put.
+
+use crate::util::Rng;
+
+/// Boltzmann constant (J/K).
+pub const K_BOLTZMANN: f64 = 1.380_649e-23;
+
+/// kT/C thermal (sampling) noise rms in volts for capacitance `c_ff`
+/// (femtofarads) at temperature `temp_k`.
+pub fn ktc_noise_v(c_ff: f64, temp_k: f64) -> f64 {
+    assert!(c_ff > 0.0);
+    (K_BOLTZMANN * temp_k / (c_ff * 1e-15)).sqrt()
+}
+
+/// Aggregate noise model used by the CiM and ADC simulators.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    /// Temperature (K).
+    pub temp_k: f64,
+    /// Comparator input-referred offset sigma (V) — device mismatch,
+    /// sampled once per comparator instance.
+    pub comparator_offset_sigma_v: f64,
+    /// Comparator input-referred noise sigma (V) — per decision.
+    pub comparator_noise_sigma_v: f64,
+    /// Charge-injection error as a fraction of the switched voltage step,
+    /// applied per switching event.
+    pub charge_injection_frac: f64,
+    /// Unit-capacitor mismatch sigma (fractional) for the in-memory
+    /// capacitive DAC.
+    pub cap_mismatch_sigma: f64,
+    /// Threshold-voltage mismatch sigma (V) of the minimum-size NMOS
+    /// compute cells — drives the low-VDD settling-spread error
+    /// mechanism (see [`super::SupplyModel::settle_vth_sensitivity`]).
+    pub vth_mismatch_sigma_v: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        // 65 nm class numbers: a few mV of comparator offset, sub-mV
+        // decision noise, ~1% unit-cap mismatch on parasitic bit-lines.
+        NoiseModel {
+            temp_k: 300.0,
+            comparator_offset_sigma_v: 3.0e-3,
+            comparator_noise_sigma_v: 0.5e-3,
+            charge_injection_frac: 0.002,
+            cap_mismatch_sigma: 0.01,
+            vth_mismatch_sigma_v: 0.08,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// Noise-free model (for exactness tests and digital oracles).
+    pub fn ideal() -> Self {
+        NoiseModel {
+            temp_k: 0.0,
+            comparator_offset_sigma_v: 0.0,
+            comparator_noise_sigma_v: 0.0,
+            charge_injection_frac: 0.0,
+            cap_mismatch_sigma: 0.0,
+            vth_mismatch_sigma_v: 0.0,
+        }
+    }
+
+    /// Sample the thermal noise on a capacitor of `c_ff` fF.
+    pub fn sample_ktc_v(&self, c_ff: f64, rng: &mut Rng) -> f64 {
+        if self.temp_k <= 0.0 {
+            return 0.0;
+        }
+        rng.normal() * ktc_noise_v(c_ff, self.temp_k)
+    }
+
+    /// Sample a comparator's static offset (once per instance).
+    pub fn sample_comparator_offset_v(&self, rng: &mut Rng) -> f64 {
+        rng.normal() * self.comparator_offset_sigma_v
+    }
+
+    /// Sample per-decision comparator noise.
+    pub fn sample_comparator_noise_v(&self, rng: &mut Rng) -> f64 {
+        rng.normal() * self.comparator_noise_sigma_v
+    }
+
+    /// Sample a unit capacitor value (nominal 1.0, fractional mismatch).
+    pub fn sample_unit_cap(&self, rng: &mut Rng) -> f64 {
+        (1.0 + rng.normal() * self.cap_mismatch_sigma).max(0.5)
+    }
+
+    /// Charge-injection error for a switching event of `v_step` volts.
+    pub fn charge_injection_v(&self, v_step: f64, rng: &mut Rng) -> f64 {
+        if self.charge_injection_frac == 0.0 {
+            return 0.0;
+        }
+        rng.normal() * self.charge_injection_frac * v_step.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ktc_matches_textbook_value() {
+        // kT/C at 300 K, 1 pF → ~64 µV rms.
+        let v = ktc_noise_v(1000.0, 300.0);
+        assert!((v - 64.4e-6).abs() < 2e-6, "v={v}");
+    }
+
+    #[test]
+    fn ktc_grows_as_cap_shrinks() {
+        assert!(ktc_noise_v(1.0, 300.0) > ktc_noise_v(100.0, 300.0));
+    }
+
+    #[test]
+    fn ideal_model_is_silent() {
+        let m = NoiseModel::ideal();
+        let mut rng = Rng::new(1);
+        assert_eq!(m.sample_ktc_v(10.0, &mut rng), 0.0);
+        assert_eq!(m.sample_comparator_offset_v(&mut rng), 0.0);
+        assert_eq!(m.sample_comparator_noise_v(&mut rng), 0.0);
+        assert_eq!(m.sample_unit_cap(&mut rng), 1.0);
+        assert_eq!(m.charge_injection_v(1.0, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn offset_sampling_has_right_scale() {
+        let m = NoiseModel::default();
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| m.sample_comparator_offset_v(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let std = (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64).sqrt();
+        assert!(mean.abs() < 3e-4, "mean={mean}");
+        assert!((std - m.comparator_offset_sigma_v).abs() < 3e-4, "std={std}");
+    }
+
+    #[test]
+    fn unit_cap_clamped_positive() {
+        let m = NoiseModel { cap_mismatch_sigma: 5.0, ..NoiseModel::default() };
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(m.sample_unit_cap(&mut rng) >= 0.5);
+        }
+    }
+}

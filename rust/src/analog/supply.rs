@@ -1,0 +1,236 @@
+//! Supply-voltage / clock-frequency scaling model.
+//!
+//! Mechanistic knobs behind the paper's Fig 7 and Fig 13(c,d) sweeps:
+//!
+//! - **Drive delay** follows the alpha-power law
+//!   `τ(V) = τ0 · V / (V - Vth)^α` — delay explodes as VDD approaches the
+//!   threshold voltage, which is why accuracy collapses at low VDD.
+//! - **Dynamic power** `P = a·C·V²·f` plus a short-circuit component that
+//!   grows when the clock leaves signals only partially settled (this is
+//!   the super-linear escalation the paper reports beyond ~2.5 GHz and at
+//!   1.3 V).
+//! - **Leakage** is exponential in VDD (LSTP-style subthreshold model).
+
+/// An operating point of the simulated chip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Supply voltage in volts.
+    pub vdd: f64,
+    /// Clock frequency in GHz.
+    pub clock_ghz: f64,
+}
+
+impl OperatingPoint {
+    pub fn new(vdd: f64, clock_ghz: f64) -> Self {
+        assert!(vdd > 0.0 && clock_ghz > 0.0);
+        OperatingPoint { vdd, clock_ghz }
+    }
+
+    /// Nominal point used by the paper's crossbar experiments
+    /// (Fig 3: VDD = 0.85 V, 4 GHz).
+    pub fn crossbar_nominal() -> Self {
+        OperatingPoint { vdd: 0.85, clock_ghz: 4.0 }
+    }
+
+    /// Nominal point used by the paper's Fig 7 sweeps (1 V, 1 GHz).
+    pub fn sweep_nominal() -> Self {
+        OperatingPoint { vdd: 1.0, clock_ghz: 1.0 }
+    }
+
+    /// Clock period in picoseconds.
+    pub fn period_ps(&self) -> f64 {
+        1000.0 / self.clock_ghz
+    }
+}
+
+/// Technology-level electrical model (defaults ≈ 65 nm LSTP).
+#[derive(Debug, Clone, Copy)]
+pub struct SupplyModel {
+    /// NMOS threshold voltage (V).
+    pub vth: f64,
+    /// Alpha-power-law velocity-saturation exponent.
+    pub alpha: f64,
+    /// Unit drive delay at nominal VDD (ps) — the RC of one cell driving
+    /// its local node.
+    pub tau0_ps: f64,
+    /// Nominal supply (V).
+    pub vdd_nom: f64,
+    /// Activity factor for dynamic power.
+    pub activity: f64,
+    /// Leakage power at nominal VDD per femtofarad of loaded cap (µW/fF).
+    pub leak_uw_per_ff: f64,
+}
+
+impl Default for SupplyModel {
+    fn default() -> Self {
+        // 65 nm LSTP-flavoured constants; tau0 calibrated so the paper's
+        // 4-step / 2-cycle crossbar op settles at 4 GHz and 0.85 V with
+        // boosted merge signals (Fig 3).
+        SupplyModel {
+            vth: 0.45,
+            alpha: 1.3,
+            tau0_ps: 9.0,
+            vdd_nom: 1.0,
+            activity: 0.5,
+            leak_uw_per_ff: 0.002,
+        }
+    }
+}
+
+impl SupplyModel {
+    /// Drive time constant τ(V) in ps (alpha-power law). Saturates to a
+    /// huge-but-finite value below threshold so sweeps stay total.
+    pub fn tau_ps(&self, vdd: f64) -> f64 {
+        let ov = vdd - self.vth;
+        if ov <= 0.01 {
+            return 1.0e6; // effectively never settles
+        }
+        let nom = self.vdd_nom / (self.vdd_nom - self.vth).powf(self.alpha);
+        self.tau0_ps * (vdd / ov.powf(self.alpha)) / nom
+    }
+
+    /// Fraction of the final value a node reaches when given `t_ps` to
+    /// settle: `1 - exp(-t/τ)`.
+    pub fn settling_fraction(&self, vdd: f64, t_ps: f64) -> f64 {
+        1.0 - (-t_ps / self.tau_ps(vdd)).exp()
+    }
+
+    /// Dynamic switching power in µW for `c_total_ff` of switched
+    /// capacitance at operating point `op`:
+    /// `P = a · C · V² · f` (fF · V² · GHz ⇒ µW).
+    pub fn dynamic_power_uw(&self, c_total_ff: f64, op: OperatingPoint) -> f64 {
+        self.activity * c_total_ff * op.vdd * op.vdd * op.clock_ghz
+    }
+
+    /// Short-circuit / contention power (µW): grows with the fraction of
+    /// each half-cycle during which rails are still slewing — at high
+    /// clock or low VDD the crowbar current dominates. The crowbar time
+    /// constant is much slower than a single node's RC (full-swing rails
+    /// and boosted merge drivers overlap), hence the 20× factor; this
+    /// places the escalation knee near 2.5 GHz at 1 V, matching the
+    /// paper's Fig 7(c).
+    pub fn short_circuit_power_uw(&self, c_total_ff: f64, op: OperatingPoint) -> f64 {
+        let half_cycle = op.period_ps() / 2.0;
+        let crowbar_tau = 20.0 * self.tau_ps(op.vdd);
+        let slewing = (-half_cycle / crowbar_tau).exp();
+        3.0 * slewing * self.dynamic_power_uw(c_total_ff, op)
+    }
+
+    /// Sensitivity of the settled fraction to threshold-voltage mismatch,
+    /// `|∂ settle / ∂ Vth|` at `(vdd, t_ps)`.
+    ///
+    /// This is the mechanistic source of low-VDD compute errors: each
+    /// cell's Vth differs slightly, so near threshold the *spread* of
+    /// per-cell settling explodes (`∂τ/∂Vth = τ·α/(V−Vth)`), turning into
+    /// differential noise the comparator cannot cancel. Far above
+    /// threshold `exp(-t/τ) → 0` and the sensitivity vanishes — which is
+    /// why nominal operation is clean.
+    pub fn settle_vth_sensitivity(&self, vdd: f64, t_ps: f64) -> f64 {
+        let ov = vdd - self.vth;
+        if ov <= 0.01 {
+            return 0.0; // nothing settles; handled by settling_fraction
+        }
+        let tau = self.tau_ps(vdd);
+        let x = t_ps / tau;
+        (-x).exp() * x * self.alpha / ov
+    }
+
+    /// Probability that a compute cell is *dead* at `vdd`: its sampled
+    /// threshold voltage leaves no overdrive (`Vth > vdd − margin`).
+    ///
+    /// This is the dominant low-VDD failure on real arrays: minimum-size
+    /// NMOS cells with Vth ~ N(vth, σ_vth) simply stop conducting as VDD
+    /// approaches threshold. With σ_vth = 80 mV the population is intact
+    /// above ~0.7 V and collapses below ~0.6 V — the Fig 7(a) cliff.
+    pub fn dead_cell_prob(&self, vdd: f64, sigma_vth: f64) -> f64 {
+        if sigma_vth <= 0.0 {
+            return if vdd - Self::MIN_OVERDRIVE_V > self.vth { 0.0 } else { 1.0 };
+        }
+        let z = (self.vth - (vdd - Self::MIN_OVERDRIVE_V)) / sigma_vth;
+        crate::util::stats::normal_cdf(z)
+    }
+
+    /// Minimum overdrive for a cell to contribute charge (V).
+    pub const MIN_OVERDRIVE_V: f64 = 0.05;
+
+    /// Subthreshold leakage power in µW (exponential in VDD).
+    pub fn leakage_power_uw(&self, c_total_ff: f64, vdd: f64) -> f64 {
+        self.leak_uw_per_ff * c_total_ff * (2.5 * (vdd - self.vdd_nom)).exp()
+    }
+
+    /// Total power (µW) at an operating point for a block with
+    /// `c_total_ff` switched capacitance.
+    pub fn total_power_uw(&self, c_total_ff: f64, op: OperatingPoint) -> f64 {
+        self.dynamic_power_uw(c_total_ff, op)
+            + self.short_circuit_power_uw(c_total_ff, op)
+            + self.leakage_power_uw(c_total_ff, op.vdd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_increases_as_vdd_drops() {
+        let m = SupplyModel::default();
+        assert!(m.tau_ps(0.6) > m.tau_ps(0.8));
+        assert!(m.tau_ps(0.8) > m.tau_ps(1.2));
+    }
+
+    #[test]
+    fn tau_nominal_is_tau0() {
+        let m = SupplyModel::default();
+        assert!((m.tau_ps(m.vdd_nom) - m.tau0_ps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn below_threshold_never_settles() {
+        let m = SupplyModel::default();
+        assert!(m.settling_fraction(0.4, 1000.0) < 0.01);
+    }
+
+    #[test]
+    fn settling_monotone_in_time() {
+        let m = SupplyModel::default();
+        let s1 = m.settling_fraction(1.0, 5.0);
+        let s2 = m.settling_fraction(1.0, 50.0);
+        assert!(s2 > s1);
+        assert!(s2 <= 1.0);
+    }
+
+    #[test]
+    fn dynamic_power_quadratic_in_vdd() {
+        let m = SupplyModel::default();
+        let p1 = m.dynamic_power_uw(100.0, OperatingPoint::new(0.6, 1.0));
+        let p2 = m.dynamic_power_uw(100.0, OperatingPoint::new(1.2, 1.0));
+        assert!((p2 / p1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_escalates_superlinearly_at_high_clock() {
+        // Paper Fig 7(c): beyond ~2.5 GHz average power escalates faster
+        // than the linear C·V²·f trend (short-circuit current).
+        let m = SupplyModel::default();
+        let c = 500.0;
+        let p1 = m.total_power_uw(c, OperatingPoint::new(1.0, 1.0));
+        let p3 = m.total_power_uw(c, OperatingPoint::new(1.0, 3.0));
+        let p6 = m.total_power_uw(c, OperatingPoint::new(1.0, 6.0));
+        // Linear prediction from 1 GHz:
+        assert!(p3 > 3.0 * p1 * 1.02, "p3={p3} linear={}", 3.0 * p1);
+        assert!(p6 / p3 > 2.0, "super-linear escalation expected");
+    }
+
+    #[test]
+    fn leakage_exponential_in_vdd() {
+        let m = SupplyModel::default();
+        let l_lo = m.leakage_power_uw(100.0, 0.8);
+        let l_hi = m.leakage_power_uw(100.0, 1.3);
+        assert!(l_hi > 3.0 * l_lo);
+    }
+
+    #[test]
+    fn period_ps() {
+        assert!((OperatingPoint::new(1.0, 4.0).period_ps() - 250.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Signal-phase timing and waveform traces (paper Figs 2–3).
+//!
+//! The crossbar's four-step operation (precharge → local compute →
+//! row-merge sum → compare/threshold) completes in **two clock cycles**:
+//! each step gets half a cycle. [`PhaseTimer`] computes per-step settle
+//! quality from the supply model; [`SignalTrace`] records named waveform
+//! points so the Fig 3 bench can print the timing diagram.
+
+use super::supply::{OperatingPoint, SupplyModel};
+
+/// The four steps of the crossbar operation (paper Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Step 1: precharge BL/BLB, apply the input bit-plane.
+    Precharge,
+    /// Step 2: parallel local computation on O/OB nodes.
+    LocalCompute,
+    /// Step 3: row-merge — short all cells row-wise, sum on SL/SLB.
+    RowMergeSum,
+    /// Step 4: comparator + soft-threshold decision.
+    Compare,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::Precharge, Phase::LocalCompute, Phase::RowMergeSum, Phase::Compare];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Precharge => "PCH",
+            Phase::LocalCompute => "LOCAL",
+            Phase::RowMergeSum => "RMERGE",
+            Phase::Compare => "CMP",
+        }
+    }
+
+    /// Relative capacitive load each phase drives (local nodes are much
+    /// less capacitive than merged sum lines — the design point the paper
+    /// emphasises vs bit-line-compute designs like [12]).
+    pub fn load_factor(self) -> f64 {
+        match self {
+            Phase::Precharge => 1.0,
+            Phase::LocalCompute => 0.25, // local O/OB nodes only
+            Phase::RowMergeSum => 2.0,   // all cells shorted row-wise
+            Phase::Compare => 0.5,
+        }
+    }
+}
+
+/// Per-phase settle evaluation at an operating point.
+#[derive(Debug, Clone)]
+pub struct PhaseTimer {
+    pub supply: SupplyModel,
+    pub op: OperatingPoint,
+    /// Merge-signal boost voltage (paper: CM/RM boosted to 1.25 V to kill
+    /// source degeneration — effectively raises the drive on merge phases).
+    pub merge_boost_v: f64,
+}
+
+impl PhaseTimer {
+    pub fn new(supply: SupplyModel, op: OperatingPoint) -> Self {
+        PhaseTimer { supply, op, merge_boost_v: 1.25 }
+    }
+
+    /// Time allotted to one step: half a clock cycle (4 steps / 2 cycles).
+    pub fn step_time_ps(&self) -> f64 {
+        self.op.period_ps() / 2.0
+    }
+
+    /// Effective drive voltage for a phase (merge phases are boosted).
+    fn drive_vdd(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::RowMergeSum => self.op.vdd.max(self.merge_boost_v),
+            _ => self.op.vdd,
+        }
+    }
+
+    /// Settled fraction (0..1) a node reaches in this phase, given the
+    /// phase's load factor and (possibly boosted) drive.
+    pub fn settle(&self, phase: Phase) -> f64 {
+        let tau = self.supply.tau_ps(self.drive_vdd(phase)) * phase.load_factor();
+        1.0 - (-self.step_time_ps() / tau).exp()
+    }
+
+    /// Worst settled fraction across all four phases — the operation's
+    /// timing margin. < ~0.95 starts producing compute errors.
+    pub fn worst_settle(&self) -> f64 {
+        Phase::ALL.iter().map(|&p| self.settle(p)).fold(1.0, f64::min)
+    }
+
+    /// Multiplicative error applied to analog quantities due to
+    /// incomplete settling (1.0 = exact).
+    pub fn settle_gain(&self, phase: Phase) -> f64 {
+        self.settle(phase)
+    }
+}
+
+/// A named waveform sample for timing-diagram output.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub t_ps: f64,
+    pub signal: &'static str,
+    pub volts: f64,
+}
+
+/// Recorder for the Fig 3 timing diagram.
+#[derive(Debug, Clone, Default)]
+pub struct SignalTrace {
+    points: Vec<TracePoint>,
+}
+
+impl SignalTrace {
+    pub fn new() -> Self {
+        SignalTrace { points: Vec::new() }
+    }
+
+    pub fn record(&mut self, t_ps: f64, signal: &'static str, volts: f64) {
+        self.points.push(TracePoint { t_ps, signal, volts });
+    }
+
+    pub fn points(&self) -> &[TracePoint] {
+        &self.points
+    }
+
+    /// All samples of one signal, time-ordered.
+    pub fn signal(&self, name: &str) -> Vec<(f64, f64)> {
+        let mut v: Vec<(f64, f64)> =
+            self.points.iter().filter(|p| p.signal == name).map(|p| (p.t_ps, p.volts)).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        v
+    }
+
+    /// Distinct signal names in first-appearance order.
+    pub fn signals(&self) -> Vec<&'static str> {
+        let mut names = Vec::new();
+        for p in &self.points {
+            if !names.contains(&p.signal) {
+                names.push(p.signal);
+            }
+        }
+        names
+    }
+
+    /// Render an ASCII waveform table (time bins × signals) for reports.
+    pub fn ascii_table(&self, bins: usize) -> String {
+        let names = self.signals();
+        if self.points.is_empty() || names.is_empty() {
+            return String::new();
+        }
+        let t_max = self.points.iter().map(|p| p.t_ps).fold(0.0, f64::max);
+        let mut out = format!("{:>8}", "t(ps)");
+        for n in &names {
+            out.push_str(&format!(" {:>8}", n));
+        }
+        out.push('\n');
+        for b in 0..bins {
+            let t = t_max * (b as f64 + 0.5) / bins as f64;
+            out.push_str(&format!("{t:>8.1}"));
+            for n in &names {
+                let samples = self.signal(n);
+                // Last sample at or before t (zero-order hold).
+                let v = samples
+                    .iter()
+                    .rev()
+                    .find(|(ts, _)| *ts <= t)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(samples.first().map(|(_, v)| *v).unwrap_or(0.0));
+                out.push_str(&format!(" {v:>8.3}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nominal() -> PhaseTimer {
+        PhaseTimer::new(SupplyModel::default(), OperatingPoint::crossbar_nominal())
+    }
+
+    #[test]
+    fn four_steps_two_cycles() {
+        let t = nominal();
+        // 4 GHz → 250 ps period → 125 ps per step; 4 steps = 500 ps = 2 cycles.
+        assert!((t.step_time_ps() - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nominal_point_settles() {
+        // Paper Fig 3: the op completes at 4 GHz / 0.85 V with boosting.
+        let t = nominal();
+        assert!(t.worst_settle() > 0.95, "worst={}", t.worst_settle());
+    }
+
+    #[test]
+    fn low_vdd_fails_to_settle() {
+        let t = PhaseTimer::new(SupplyModel::default(), OperatingPoint::new(0.5, 4.0));
+        assert!(t.worst_settle() < 0.9, "worst={}", t.worst_settle());
+    }
+
+    #[test]
+    fn boost_helps_merge_phase() {
+        let mut t = PhaseTimer::new(SupplyModel::default(), OperatingPoint::new(0.85, 4.0));
+        let boosted = t.settle(Phase::RowMergeSum);
+        t.merge_boost_v = 0.0; // disable boosting
+        let unboosted = t.settle(Phase::RowMergeSum);
+        assert!(boosted > unboosted);
+    }
+
+    #[test]
+    fn local_compute_settles_better_than_merge() {
+        // Less capacitive local nodes — the paper's design argument.
+        let mut t = nominal();
+        t.merge_boost_v = 0.0;
+        assert!(t.settle(Phase::LocalCompute) > t.settle(Phase::RowMergeSum));
+    }
+
+    #[test]
+    fn trace_records_and_orders() {
+        let mut tr = SignalTrace::new();
+        tr.record(10.0, "BL", 1.0);
+        tr.record(0.0, "BL", 0.0);
+        tr.record(5.0, "SL", 0.3);
+        assert_eq!(tr.signal("BL"), vec![(0.0, 0.0), (10.0, 1.0)]);
+        assert_eq!(tr.signals(), vec!["BL", "SL"]);
+        let tab = tr.ascii_table(4);
+        assert!(tab.contains("BL") && tab.contains("SL"));
+    }
+}

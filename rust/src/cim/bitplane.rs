@@ -1,0 +1,271 @@
+//! Bitplane-wise multi-bit processing (paper §III-B, Fig 4).
+//!
+//! A multi-bit digital input vector is processed one significance plane
+//! at a time: all bits of significance `p` form a {0,1} plane, the
+//! crossbar computes the plane's ±1-weighted sums in analog, and the row
+//! comparators quantize each sum to a **single bit** (ADC-free). The
+//! per-plane sign bits are reassembled with their plane weights into the
+//! approximate multi-bit output the network is trained against:
+//!
+//! `ŷ_r = Σ_p 2^p · s_{r,p}`, `s ∈ {−1,+1}`  (vs exact `y_r = Σ_p 2^p · d_{r,p}`).
+//!
+//! Signed inputs use a positive/negative split (`x = x⁺ − x⁻`), each half
+//! processed unsigned — two crossbar passes, still DAC-free.
+
+use crate::util::Rng;
+
+use super::bitvec::BitVec;
+use super::crossbar::Crossbar;
+use super::early_term::{EarlyTermination, TermStats};
+
+/// Decompose non-negative integers into packed bitplanes, LSB first.
+/// Every value must fit in `bits` (values are asserted, not clipped —
+/// quantization happens upstream in the NN layers).
+pub fn decompose_bitplanes(x: &[u32], bits: u8) -> Vec<BitVec> {
+    for &v in x {
+        assert!(v < (1u32 << bits), "value {v} does not fit in {bits} bits");
+    }
+    (0..bits)
+        .map(|p| {
+            let mut plane = BitVec::zeros(x.len());
+            for (i, &v) in x.iter().enumerate() {
+                if (v >> p) & 1 == 1 {
+                    plane.set(i, true);
+                }
+            }
+            plane
+        })
+        .collect()
+}
+
+/// Result of one bitplane-wise transform.
+#[derive(Debug, Clone)]
+pub struct BitplaneOutput {
+    /// Reconstructed (1-bit-quantized) outputs, one per crossbar row.
+    pub values: Vec<f32>,
+    /// Per-plane sign bits (LSB first), one Vec<bool> per plane; rows
+    /// skipped by early termination repeat their last decided bit.
+    pub plane_signs: Vec<Vec<bool>>,
+    /// Early-termination statistics for this transform.
+    pub term: TermStats,
+}
+
+/// Bitplane-wise engine wrapping one crossbar.
+#[derive(Debug, Clone)]
+pub struct BitplaneEngine {
+    crossbar: Crossbar,
+    /// Input quantization width in bits.
+    pub input_bits: u8,
+    /// Optional early-termination policy (paper §III-C).
+    pub early_term: Option<EarlyTermination>,
+}
+
+impl BitplaneEngine {
+    pub fn new(crossbar: Crossbar, input_bits: u8) -> Self {
+        assert!(input_bits >= 1 && input_bits <= 16);
+        BitplaneEngine { crossbar, input_bits, early_term: None }
+    }
+
+    pub fn with_early_term(mut self, et: EarlyTermination) -> Self {
+        self.early_term = Some(et);
+        self
+    }
+
+    pub fn crossbar(&self) -> &Crossbar {
+        &self.crossbar
+    }
+
+    pub fn crossbar_mut(&mut self) -> &mut Crossbar {
+        &mut self.crossbar
+    }
+
+    /// Transform an unsigned quantized vector (values < 2^input_bits).
+    ///
+    /// Planes are processed **MSB → LSB** so the early-termination bound
+    /// (remaining planes can add at most `2^p − 1`) tightens fastest.
+    pub fn transform(&mut self, x: &[u32], rng: &mut Rng) -> BitplaneOutput {
+        assert_eq!(x.len(), self.crossbar.cols(), "input length != crossbar cols");
+        let planes = decompose_bitplanes(x, self.input_bits);
+        let rows = self.crossbar.rows();
+        let nbits = self.input_bits as usize;
+
+        let mut acc = vec![0.0f32; rows];
+        let mut plane_signs = vec![vec![false; rows]; nbits];
+        let mut active = vec![true; rows];
+        let mut term = TermStats::new(rows, nbits);
+
+        // MSB → LSB.
+        for p in (0..nbits).rev() {
+            if active.iter().all(|a| !a) {
+                term.record_skipped_plane(p, &active);
+                continue;
+            }
+            let signs = self.crossbar.process_bitplane(&planes[p], rng);
+            let weight = (1u32 << p) as f32;
+            for r in 0..rows {
+                if !active[r] {
+                    term.record_skipped_row(r);
+                    continue;
+                }
+                let s = if signs[r] { 1.0 } else { -1.0 };
+                acc[r] += weight * s;
+                plane_signs[p][r] = signs[r];
+                term.record_processed(r);
+                if let Some(et) = &self.early_term {
+                    // Remaining planes 0..p contribute at most 2^p − 1.
+                    let remaining = (1u32 << p) as f32 - 1.0;
+                    if et.should_terminate(acc[r], remaining) {
+                        active[r] = false;
+                        acc[r] = 0.0; // provably inside the dead band ⇒ zero
+                        term.record_terminated(r, p);
+                    }
+                }
+            }
+        }
+        BitplaneOutput { values: acc, plane_signs, term }
+    }
+
+    /// Signed transform via positive/negative split: `x = x⁺ − x⁻`.
+    /// Values must satisfy `|v| < 2^input_bits`. Costs two unsigned passes.
+    pub fn transform_signed(&mut self, x: &[i32], rng: &mut Rng) -> BitplaneOutput {
+        let pos: Vec<u32> = x.iter().map(|&v| v.max(0) as u32).collect();
+        let neg: Vec<u32> = x.iter().map(|&v| (-v).max(0) as u32).collect();
+        let out_p = self.transform(&pos, rng);
+        let out_n = self.transform(&neg, rng);
+        let values =
+            out_p.values.iter().zip(&out_n.values).map(|(a, b)| a - b).collect();
+        BitplaneOutput {
+            values,
+            plane_signs: out_p.plane_signs,
+            term: out_p.term.merged(&out_n.term),
+        }
+    }
+
+    /// Exact (infinite-precision) oracle: `y_r = Σ_p 2^p · d_{r,p}`,
+    /// which equals the integer ±1 matrix–vector product.
+    pub fn transform_exact(&self, x: &[u32]) -> Vec<i64> {
+        let planes = decompose_bitplanes(x, self.input_bits);
+        let rows = self.crossbar.rows();
+        let mut acc = vec![0i64; rows];
+        for (p, plane) in planes.iter().enumerate() {
+            let d = self.crossbar.ideal_bitplane(plane);
+            for r in 0..rows {
+                acc[r] += (1i64 << p) * d[r] as i64;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::crossbar::CrossbarConfig;
+    use crate::util::prop;
+
+    fn engine(m: usize, bits: u8, seed: u64) -> (BitplaneEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let xb = Crossbar::walsh(m, CrossbarConfig::ideal(), &mut rng);
+        (BitplaneEngine::new(xb, bits), rng)
+    }
+
+    #[test]
+    fn decompose_reassembles_exactly() {
+        prop::check("bitplane decompose/reassemble", 128, |rng| {
+            let n = 1 + rng.index(64);
+            let bits = 1 + rng.index(8) as u8;
+            let x: Vec<u32> = (0..n).map(|_| rng.below(1 << bits) as u32).collect();
+            let planes = decompose_bitplanes(&x, bits);
+            for (i, &v) in x.iter().enumerate() {
+                let mut re = 0u32;
+                for (p, plane) in planes.iter().enumerate() {
+                    if plane.get(i) {
+                        re |= 1 << p;
+                    }
+                }
+                crate::prop_assert!(re == v, "i={i}: {re} != {v}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn decompose_rejects_overflow() {
+        decompose_bitplanes(&[16], 4);
+    }
+
+    #[test]
+    fn exact_oracle_is_integer_matvec() {
+        let (eng, _) = engine(16, 4, 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<u32> = (0..16).map(|_| rng.below(16) as u32).collect();
+        let got = eng.transform_exact(&x);
+        // Naive oracle.
+        for r in 0..16 {
+            let expect: i64 = (0..16)
+                .map(|c| eng.crossbar().matrix().get(r, c) as i64 * x[c] as i64)
+                .sum();
+            assert_eq!(got[r], expect, "row {r}");
+        }
+    }
+
+    #[test]
+    fn quantized_output_tracks_exact_sign_and_scale() {
+        // With 1-bit product-sum quantization the reconstruction is an
+        // approximation; on average it must correlate strongly with the
+        // exact transform (this is what training relies on).
+        let (mut eng, mut rng) = engine(64, 4, 3);
+        let mut dot = 0.0f64;
+        let mut nq = 0.0f64;
+        let mut ne = 0.0f64;
+        for _ in 0..20 {
+            let x: Vec<u32> = (0..64).map(|_| rng.below(16) as u32).collect();
+            let exact = eng.transform_exact(&x);
+            let out = eng.transform(&x, &mut rng);
+            for (q, e) in out.values.iter().zip(&exact) {
+                dot += *q as f64 * *e as f64;
+                nq += (*q as f64).powi(2);
+                ne += (*e as f64).powi(2);
+            }
+        }
+        let corr = dot / (nq.sqrt() * ne.sqrt());
+        assert!(corr > 0.5, "correlation {corr} too weak");
+    }
+
+    #[test]
+    fn one_bit_input_reduces_to_single_plane() {
+        let (mut eng, mut rng) = engine(16, 1, 4);
+        let x: Vec<u32> = (0..16).map(|i| (i % 2) as u32).collect();
+        let out = eng.transform(&x, &mut rng);
+        assert_eq!(out.plane_signs.len(), 1);
+        // Reconstruction is ±1 per row.
+        for v in &out.values {
+            assert!(*v == 1.0 || *v == -1.0);
+        }
+    }
+
+    #[test]
+    fn signed_transform_matches_pos_neg_split_oracle() {
+        let (mut eng, mut rng) = engine(16, 4, 5);
+        let x: Vec<i32> = (0..16).map(|i| if i % 3 == 0 { -(i as i32 % 8) } else { i as i32 % 8 }).collect();
+        let out = eng.transform_signed(&x, &mut rng);
+        // With an ideal crossbar, signed output == pos-pass − neg-pass.
+        let pos: Vec<u32> = x.iter().map(|&v| v.max(0) as u32).collect();
+        let neg: Vec<u32> = x.iter().map(|&v| (-v).max(0) as u32).collect();
+        let op = eng.transform(&pos, &mut rng).values;
+        let on = eng.transform(&neg, &mut rng).values;
+        for (got, (a, b)) in out.values.iter().zip(op.iter().zip(&on)) {
+            assert_eq!(*got, a - b);
+        }
+    }
+
+    #[test]
+    fn plane_count_and_ops_accounting() {
+        let (mut eng, mut rng) = engine(16, 6, 6);
+        let x = vec![21u32; 16];
+        eng.crossbar_mut().reset_counters();
+        let _ = eng.transform(&x, &mut rng);
+        assert_eq!(eng.crossbar().ops(), 6, "one crossbar op per plane");
+    }
+}

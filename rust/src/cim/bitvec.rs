@@ -1,0 +1,248 @@
+//! Packed bit-vectors and ±1 sign matrices.
+//!
+//! The analog crossbar's charge sums have an exact digital shadow:
+//! `sum_r = Σ_c M[r,c] · x[c]` with `M[r,c] ∈ {±1}` and `x[c] ∈ {0,1}`.
+//! Packing `x` and the +1 positions of `M` into `u64` words turns each
+//! row sum into a handful of `popcount`s — this is the simulator's hot
+//! loop (see EXPERIMENTS.md §Perf).
+
+/// A packed bit-vector of `len` bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zeros vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let (w, s) = (i / 64, i % 64);
+        if b {
+            self.words[w] |= 1 << s;
+        } else {
+            self.words[w] &= !(1 << s);
+        }
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Raw words (trailing bits beyond `len` are zero by construction).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// A dense `rows × cols` matrix over {−1, +1}, stored as the bitmask of
+/// +1 positions, one packed row at a time.
+#[derive(Debug, Clone)]
+pub struct SignMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    /// Bit set ⇒ entry is +1; clear ⇒ −1.
+    plus: Vec<u64>,
+}
+
+impl SignMatrix {
+    /// Build from a generator: `f(r, c) == true` ⇒ +1.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> bool) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        let mut plus = vec![0u64; rows * words_per_row];
+        for r in 0..rows {
+            for c in 0..cols {
+                if f(r, c) {
+                    plus[r * words_per_row + c / 64] |= 1 << (c % 64);
+                }
+            }
+        }
+        SignMatrix { rows, cols, words_per_row, plus }
+    }
+
+    /// ±1 Hadamard matrix of order `m` (natural order).
+    pub fn hadamard(m: usize) -> Self {
+        let h = crate::wht::matrix::hadamard(m);
+        SignMatrix::from_fn(m, m, |r, c| h[r * m + c] > 0)
+    }
+
+    /// ±1 Walsh (sequency-ordered) matrix of order `m`.
+    pub fn walsh(m: usize) -> Self {
+        let w = crate::wht::matrix::walsh(m);
+        SignMatrix::from_fn(m, m, |r, c| w[r * m + c] > 0)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Entry at (r, c) as ±1.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        if (self.plus[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Exact row dot product with a {0,1} input vector:
+    /// `Σ_c M[r,c]·x[c] = 2·|plus ∩ x| − |x|`.
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &BitVec) -> i32 {
+        debug_assert_eq!(x.len(), self.cols);
+        let row = &self.plus[r * self.words_per_row..(r + 1) * self.words_per_row];
+        let mut plus_and_x = 0u32;
+        for (w, xw) in row.iter().zip(x.words()) {
+            plus_and_x += (w & xw).count_ones();
+        }
+        2 * plus_and_x as i32 - x.count_ones() as i32
+    }
+
+    /// Count of +1 cells that see a 1 input in row `r` — the charge count
+    /// dumped on the positive sum line SL (the analog MAV numerator).
+    #[inline]
+    pub fn row_plus_count(&self, r: usize, x: &BitVec) -> u32 {
+        let row = &self.plus[r * self.words_per_row..(r + 1) * self.words_per_row];
+        row.iter().zip(x.words()).map(|(w, xw)| (w & xw).count_ones()).sum()
+    }
+
+    /// All row dot products (the exact digital transform of one plane).
+    pub fn matvec(&self, x: &BitVec) -> Vec<i32> {
+        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn bitvec_set_get_count() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1));
+        assert_eq!(v.count_ones(), 3);
+        v.set(64, false);
+        assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn from_bits_round_trips() {
+        let bits: Vec<bool> = (0..100).map(|i| i % 3 == 0).collect();
+        let v = BitVec::from_bits(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(v.get(i), b);
+        }
+    }
+
+    #[test]
+    fn sign_matrix_hadamard_entries() {
+        let m = SignMatrix::hadamard(4);
+        let dense = crate::wht::matrix::hadamard(4);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(m.get(r, c), dense[r * 4 + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn row_dot_matches_naive() {
+        prop::check("row_dot vs naive", 128, |rng: &mut Rng| {
+            let cols = 1 + rng.index(200);
+            let rows = 1 + rng.index(20);
+            let mx = SignMatrix::from_fn(rows, cols, |_, _| rng.bool());
+            let bits: Vec<bool> = (0..cols).map(|_| rng.bool()).collect();
+            let x = BitVec::from_bits(&bits);
+            for r in 0..rows {
+                let naive: i32 =
+                    (0..cols).filter(|&c| bits[c]).map(|c| mx.get(r, c) as i32).sum();
+                crate::prop_assert!(
+                    mx.row_dot(r, &x) == naive,
+                    "row {r}: packed {} vs naive {naive}",
+                    mx.row_dot(r, &x)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plus_count_consistent_with_dot() {
+        prop::check("plus_count vs dot", 128, |rng: &mut Rng| {
+            let cols = 1 + rng.index(128);
+            let mx = SignMatrix::from_fn(4, cols, |_, _| rng.bool());
+            let bits: Vec<bool> = (0..cols).map(|_| rng.bool()).collect();
+            let x = BitVec::from_bits(&bits);
+            for r in 0..4 {
+                let dot = mx.row_dot(r, &x);
+                let plus = mx.row_plus_count(r, &x) as i32;
+                let ones = x.count_ones() as i32;
+                crate::prop_assert!(dot == 2 * plus - ones, "identity broken");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn walsh_matvec_matches_fwht_on_binary_input() {
+        let m = 64;
+        let mx = SignMatrix::walsh(m);
+        let bits: Vec<bool> = (0..m).map(|i| (i * 7) % 5 < 2).collect();
+        let x = BitVec::from_bits(&bits);
+        let got = mx.matvec(&x);
+        let mut f: Vec<f32> = bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        crate::wht::fwht_sequency_inplace(&mut f);
+        for (g, e) in got.iter().zip(&f) {
+            assert_eq!(*g as f32, *e);
+        }
+    }
+}

@@ -1,0 +1,387 @@
+//! The analog crossbar: four-step charge-domain WHT (paper Figs 2–3).
+//!
+//! One [`Crossbar::process_bitplane`] call models the full four-step
+//! operation on one input bitplane:
+//!
+//! 1. **Precharge** — BL/BLB precharged, input bits applied on CL/CLB.
+//! 2. **Local compute** — every cell's O/OB node charges to the product
+//!    of its ±1 weight and the input bit (on low-capacitance local nodes,
+//!    not bit lines — the paper's parallelism argument).
+//! 3. **Row-merge** — RM shorts all cells of a row: charge averages onto
+//!    the SL/SLB sum lines. `V_SL ∝ (#{+1 cells seeing 1}) / cols`,
+//!    `V_SLB ∝ (#{−1 cells seeing 1}) / cols`, attenuated by the phase's
+//!    RC settling at the current operating point.
+//! 4. **Compare** — the row comparator resolves `V_SL > V_SLB` into the
+//!    single-bit output (extreme 1-bit product-sum quantization; no ADC).
+//!
+//! The same step-3 voltages, *without* step 4, are the MAV outputs the
+//! memory-immersed ADC digitizes in [`crate::adc::immersed`].
+
+use crate::analog::timing::Phase;
+use crate::analog::{Comparator, NoiseModel, OperatingPoint, PhaseTimer, SupplyModel};
+use crate::util::Rng;
+
+use super::bitvec::{BitVec, SignMatrix};
+
+/// Electrical configuration of a crossbar instance.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossbarConfig {
+    pub supply: SupplyModel,
+    pub noise: NoiseModel,
+    pub op: OperatingPoint,
+    /// Per-cell local-node capacitance (fF).
+    pub c_cell_ff: f64,
+}
+
+impl Default for CrossbarConfig {
+    fn default() -> Self {
+        CrossbarConfig {
+            supply: SupplyModel::default(),
+            noise: NoiseModel::default(),
+            op: OperatingPoint::crossbar_nominal(),
+            c_cell_ff: 1.2,
+        }
+    }
+}
+
+impl CrossbarConfig {
+    /// Ideal electrical config: no noise, instant settling (for oracles).
+    pub fn ideal() -> Self {
+        CrossbarConfig {
+            supply: SupplyModel { tau0_ps: 1e-6, ..SupplyModel::default() },
+            noise: NoiseModel::ideal(),
+            op: OperatingPoint::sweep_nominal(),
+            c_cell_ff: 1.2,
+        }
+    }
+}
+
+/// A programmed analog crossbar array.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    matrix: SignMatrix,
+    cfg: CrossbarConfig,
+    timer: PhaseTimer,
+    comparators: Vec<Comparator>,
+    energy_fj: f64,
+    ops: u64,
+    /// Electrical constants cached per operating point (PERF: the hot
+    /// loop is per-row; `exp`/`Φ` evaluations belong out here).
+    consts: OpConstants,
+}
+
+/// Per-operating-point constants used in the row loop.
+#[derive(Debug, Clone, Copy)]
+struct OpConstants {
+    /// Combined LocalCompute × RowMergeSum settled fraction.
+    settle: f64,
+    /// Dead-cell probability at this VDD (0.0 below the epsilon cutoff).
+    p_dead: f64,
+    /// Vth-mismatch settling spread (σ of settle across cells).
+    spread: f64,
+    /// kT/C rms on one sum line (V); 0.0 when noise disabled.
+    ktc_sigma: f64,
+}
+
+impl OpConstants {
+    fn compute(cfg: &CrossbarConfig, timer: &PhaseTimer, cols: usize) -> Self {
+        let settle =
+            timer.settle(Phase::LocalCompute) * timer.settle(Phase::RowMergeSum);
+        let mut p_dead =
+            cfg.supply.dead_cell_prob(cfg.op.vdd, cfg.noise.vth_mismatch_sigma_v);
+        if p_dead < 1e-9 {
+            p_dead = 0.0; // skip thinning noise draws entirely
+        }
+        let mut spread = cfg.supply.settle_vth_sensitivity(cfg.op.vdd, timer.step_time_ps())
+            * cfg.noise.vth_mismatch_sigma_v;
+        // Below ~1e-4 the induced voltage noise is < µV against mV-scale
+        // LSBs — far under the kT/C floor; skip the draws.
+        if spread < 1e-4 {
+            spread = 0.0;
+        }
+        let c_line_ff = cols as f64 * cfg.c_cell_ff;
+        let ktc_sigma = if cfg.noise.temp_k > 0.0 {
+            crate::analog::noise::ktc_noise_v(c_line_ff, cfg.noise.temp_k)
+        } else {
+            0.0
+        };
+        OpConstants { settle, p_dead, spread, ktc_sigma }
+    }
+}
+
+impl Crossbar {
+    /// Fabricate a crossbar programmed with `matrix`, sampling per-row
+    /// comparator offsets from the config's noise model.
+    pub fn new(matrix: SignMatrix, cfg: CrossbarConfig, rng: &mut Rng) -> Self {
+        let comparators =
+            (0..matrix.rows()).map(|_| Comparator::sample(&cfg.noise, rng)).collect();
+        let timer = PhaseTimer::new(cfg.supply, cfg.op);
+        let consts = OpConstants::compute(&cfg, &timer, matrix.cols());
+        Crossbar { matrix, cfg, timer, comparators, energy_fj: 0.0, ops: 0, consts }
+    }
+
+    /// Crossbar programmed with the sequency-ordered Walsh matrix of
+    /// order `m` (the paper's frequency-transform configuration).
+    pub fn walsh(m: usize, cfg: CrossbarConfig, rng: &mut Rng) -> Self {
+        Crossbar::new(SignMatrix::walsh(m), cfg, rng)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.matrix.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.matrix.cols()
+    }
+
+    pub fn matrix(&self) -> &SignMatrix {
+        &self.matrix
+    }
+
+    pub fn config(&self) -> &CrossbarConfig {
+        &self.cfg
+    }
+
+    /// Re-bias the array to a new operating point (Fig 7 sweeps).
+    pub fn set_operating_point(&mut self, op: OperatingPoint) {
+        self.cfg.op = op;
+        self.timer = PhaseTimer::new(self.cfg.supply, op);
+        self.consts = OpConstants::compute(&self.cfg, &self.timer, self.matrix.cols());
+    }
+
+    /// Total switched capacitance of one operation (all cells + sum lines).
+    pub fn c_op_ff(&self) -> f64 {
+        let cells = (self.rows() * self.cols()) as f64 * self.cfg.c_cell_ff;
+        // Sum lines add ~1 unit per column per rail.
+        cells + 2.0 * self.cols() as f64 * self.cfg.c_cell_ff
+    }
+
+    /// Analog differential sum-line voltages `(V_SL, V_SLB)` for row `r`
+    /// under input plane `x` — steps 1–3 of the operation.
+    fn row_sum_voltages(&self, r: usize, x: &BitVec, rng: &mut Rng) -> (f64, f64) {
+        let cols = self.cols() as f64;
+        let k = self.consts;
+        let mut plus = self.matrix.row_plus_count(r, x) as f64;
+        let ones = x.count_ones() as f64;
+        let mut minus = ones - plus;
+        // Dead-cell thinning: cells with no overdrive at this VDD drop
+        // their charge. The mean attenuation is common-mode (same factor
+        // on both rails) but the binomial thinning *variance* is not —
+        // it is the dominant error source at low VDD (Fig 7(a) cliff).
+        if k.p_dead > 0.0 {
+            let thin = |count: f64, rng: &mut Rng| -> f64 {
+                let mean = count * (1.0 - k.p_dead);
+                let sigma = (count * k.p_dead * (1.0 - k.p_dead)).sqrt();
+                (mean + rng.normal() * sigma).max(0.0)
+            };
+            plus = thin(plus, rng);
+            minus = thin(minus, rng);
+        }
+        let vdd = self.cfg.op.vdd;
+        // Per-cell Vth mismatch spreads the settled fractions; the spread
+        // averages as 1/√count onto each sum line and does NOT cancel in
+        // the differential pair — this is the low-VDD error mechanism.
+        // All σ constants are precomputed per operating point (PERF).
+        let mut v_sl = vdd * (plus / cols) * k.settle;
+        let mut v_slb = vdd * (minus / cols) * k.settle;
+        if k.ktc_sigma > 0.0 {
+            v_sl += rng.normal() * k.ktc_sigma;
+            v_slb += rng.normal() * k.ktc_sigma;
+        }
+        if k.spread > 0.0 {
+            let scale = vdd * k.spread / cols;
+            v_sl += rng.normal() * scale * plus.sqrt();
+            v_slb += rng.normal() * scale * minus.sqrt();
+        }
+        (v_sl.clamp(0.0, vdd), v_slb.clamp(0.0, vdd))
+    }
+
+    /// Full four-step operation: one input bitplane → one output bit per
+    /// row (`V_SL > V_SLB`, i.e. the sign of the ±1 weighted sum).
+    pub fn process_bitplane(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<bool> {
+        self.account_op();
+        (0..self.rows())
+            .map(|r| {
+                let (sl, slb) = self.row_sum_voltages(r, x, rng);
+                self.comparators[r].compare(sl, slb, rng)
+            })
+            .collect()
+    }
+
+    /// Steps 1–3 only: per-row single-ended MAV voltages
+    /// `V_MAV = VDD · plus/cols · settle` — the analog outputs handed to
+    /// the memory-immersed ADC (paper §IV).
+    pub fn compute_mav(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<f64> {
+        self.account_op();
+        (0..self.rows()).map(|r| self.row_sum_voltages(r, x, rng).0).collect()
+    }
+
+    /// Exact digital oracle of one plane (±1 weighted sums).
+    pub fn ideal_bitplane(&self, x: &BitVec) -> Vec<i32> {
+        self.matrix.matvec(x)
+    }
+
+    /// Energy of one four-step op (fJ): dynamic switching of all cells.
+    pub fn energy_per_op_fj(&self) -> f64 {
+        let v = self.cfg.op.vdd;
+        self.cfg.supply.activity * self.c_op_ff() * v * v * 1.0 // fF·V² = fJ
+    }
+
+    /// Average power (µW) at the configured clock: one four-step op takes
+    /// two cycles.
+    pub fn power_uw(&self) -> f64 {
+        self.cfg.supply.total_power_uw(self.c_op_ff(), self.cfg.op) / 2.0
+    }
+
+    /// Accumulated energy (fJ) and op count since construction/reset.
+    pub fn energy_fj(&self) -> f64 {
+        self.energy_fj
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.energy_fj = 0.0;
+        self.ops = 0;
+    }
+
+    fn account_op(&mut self) {
+        self.ops += 1;
+        self.energy_fj += self.energy_per_op_fj();
+    }
+
+    /// Measured probability that a row output bit differs from the exact
+    /// sign over random input planes — the crossbar's raw bit error rate
+    /// at its operating point (drives the Fig 7 accuracy curves).
+    pub fn bit_error_rate(&mut self, trials: usize, density: f64, rng: &mut Rng) -> f64 {
+        let mut errs = 0usize;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            let bits: Vec<bool> = (0..self.cols()).map(|_| rng.bernoulli(density)).collect();
+            let x = BitVec::from_bits(&bits);
+            let ideal = self.ideal_bitplane(&x);
+            let got = self.process_bitplane(&x, rng);
+            for (g, i) in got.iter().zip(&ideal) {
+                // Exact ties count as correct either way.
+                if *i != 0 && (*g != (*i > 0)) {
+                    errs += 1;
+                }
+                total += 1;
+            }
+        }
+        errs as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn input(cols: usize, seed: u64, density: f64) -> BitVec {
+        let mut rng = Rng::new(seed);
+        BitVec::from_bits(&(0..cols).map(|_| rng.bernoulli(density)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn ideal_crossbar_matches_sign_oracle() {
+        let mut rng = Rng::new(1);
+        let mut xb = Crossbar::walsh(32, CrossbarConfig::ideal(), &mut rng);
+        for seed in 0..20 {
+            let x = input(32, seed, 0.5);
+            let ideal = xb.ideal_bitplane(&x);
+            let got = xb.process_bitplane(&x, &mut rng);
+            for (r, (g, i)) in got.iter().zip(&ideal).enumerate() {
+                if *i != 0 {
+                    assert_eq!(*g, *i > 0, "row {r}: ideal {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mav_proportional_to_plus_count_when_ideal() {
+        let mut rng = Rng::new(2);
+        let mut xb = Crossbar::walsh(16, CrossbarConfig::ideal(), &mut rng);
+        let x = input(16, 3, 0.5);
+        let mav = xb.compute_mav(&x, &mut rng);
+        for r in 0..16 {
+            let plus = xb.matrix().row_plus_count(r, &x) as f64;
+            let expect = 1.0 * plus / 16.0; // vdd=1.0 at sweep_nominal
+            assert!((mav[r] - expect).abs() < 1e-6, "row {r}");
+        }
+    }
+
+    #[test]
+    fn energy_accumulates_per_op() {
+        let mut rng = Rng::new(3);
+        let mut xb = Crossbar::walsh(16, CrossbarConfig::default(), &mut rng);
+        let x = input(16, 4, 0.5);
+        xb.process_bitplane(&x, &mut rng);
+        xb.process_bitplane(&x, &mut rng);
+        assert_eq!(xb.ops(), 2);
+        assert!((xb.energy_fj() - 2.0 * xb.energy_per_op_fj()).abs() < 1e-9);
+        xb.reset_counters();
+        assert_eq!(xb.ops(), 0);
+    }
+
+    #[test]
+    fn low_vdd_raises_bit_error_rate() {
+        let mut rng = Rng::new(5);
+        let mut nominal = Crossbar::walsh(32, CrossbarConfig::default(), &mut rng);
+        let ber_nom = nominal.bit_error_rate(60, 0.5, &mut rng);
+        let mut starved = Crossbar::walsh(
+            32,
+            CrossbarConfig {
+                op: OperatingPoint::new(0.5, 4.0),
+                ..CrossbarConfig::default()
+            },
+            &mut rng,
+        );
+        let ber_low = starved.bit_error_rate(60, 0.5, &mut rng);
+        assert!(
+            ber_low > ber_nom,
+            "expected degradation: nominal {ber_nom} vs 0.5V {ber_low}"
+        );
+    }
+
+    #[test]
+    fn bigger_clock_does_not_improve_accuracy() {
+        let mut rng = Rng::new(6);
+        let cfg_slow = CrossbarConfig { op: OperatingPoint::new(0.85, 1.0), ..Default::default() };
+        let cfg_fast = CrossbarConfig { op: OperatingPoint::new(0.85, 12.0), ..Default::default() };
+        let mut slow = Crossbar::walsh(32, cfg_slow, &mut rng);
+        let mut fast = Crossbar::walsh(32, cfg_fast, &mut rng);
+        let ber_slow = slow.bit_error_rate(60, 0.5, &mut rng);
+        let ber_fast = fast.bit_error_rate(60, 0.5, &mut rng);
+        assert!(ber_fast >= ber_slow, "slow {ber_slow} fast {ber_fast}");
+    }
+
+    #[test]
+    fn power_grows_with_array_size() {
+        let mut rng = Rng::new(7);
+        let small = Crossbar::walsh(16, CrossbarConfig::default(), &mut rng);
+        let large = Crossbar::walsh(128, CrossbarConfig::default(), &mut rng);
+        assert!(large.power_uw() > small.power_uw());
+    }
+
+    #[test]
+    fn prop_ideal_outputs_match_oracle_signs() {
+        prop::check("crossbar ideal == oracle", 64, |rng| {
+            let m = 1usize << (2 + rng.index(4)); // 4..32
+            let mut xb = Crossbar::walsh(m, CrossbarConfig::ideal(), rng);
+            let bits: Vec<bool> = (0..m).map(|_| rng.bool()).collect();
+            let x = BitVec::from_bits(&bits);
+            let ideal = xb.ideal_bitplane(&x);
+            let got = xb.process_bitplane(&x, rng);
+            for (r, (g, i)) in got.iter().zip(&ideal).enumerate() {
+                if *i != 0 {
+                    crate::prop_assert!(*g == (*i > 0), "m={m} row={r} ideal={i} got={g}");
+                }
+            }
+            Ok(())
+        });
+    }
+}

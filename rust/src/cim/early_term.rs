@@ -1,0 +1,230 @@
+//! Early termination exploiting soft-threshold output sparsity
+//! (paper §III-C, Fig 6).
+//!
+//! The BWHT layer's soft threshold zeroes every output in the dead band
+//! `|y| ≤ T`. Processing input bitplanes MSB → LSB, once a row's partial
+//! reconstruction *provably* cannot leave the dead band — the remaining
+//! planes contribute at most `2^p − 1` — the row's final output is zero
+//! and the remaining planes need not be computed for it.
+//!
+//! Two policies:
+//! - **Exact**: terminate only on the provable bound. Never changes the
+//!   output (property-tested); saves less work.
+//! - **Aggressive(margin)**: terminate when `|partial| + remaining ≤
+//!   T·margin` with `margin > 1` — saves more work, may zero outputs that
+//!   would have barely escaped the dead band. Training with the paper's
+//!   T-polarising loss makes this safe in practice (Fig 6).
+
+/// Early-termination policy for [`super::BitplaneEngine`].
+#[derive(Debug, Clone, Copy)]
+pub struct EarlyTermination {
+    /// Soft threshold T of the consuming layer (dead band half-width,
+    /// in the same units as the reconstructed output).
+    pub threshold: f32,
+    /// Bound inflation: 1.0 = provably exact skips only; > 1.0 trades
+    /// accuracy for workload (terminates when `|partial| + remaining ≤
+    /// T·margin`).
+    pub margin: f32,
+}
+
+impl EarlyTermination {
+    /// Exact (output-preserving) policy for threshold `t`.
+    pub fn exact(t: f32) -> Self {
+        EarlyTermination { threshold: t, margin: 1.0 }
+    }
+
+    /// Aggressive policy: also skip when the bound holds against an
+    /// inflated threshold.
+    pub fn aggressive(t: f32, margin: f32) -> Self {
+        assert!(margin >= 1.0);
+        EarlyTermination { threshold: t, margin }
+    }
+
+    /// Should a row stop, given its partial reconstruction and the max
+    /// magnitude the remaining planes can still contribute?
+    #[inline]
+    pub fn should_terminate(&self, partial: f32, remaining_max: f32) -> bool {
+        partial.abs() + remaining_max <= self.threshold * self.margin
+    }
+}
+
+/// Workload statistics for one (or more, merged) bitplane transforms.
+#[derive(Debug, Clone, Default)]
+pub struct TermStats {
+    /// Row-plane pairs actually computed.
+    pub processed: u64,
+    /// Row-plane pairs skipped by termination.
+    pub skipped: u64,
+    /// Rows that terminated early at least once.
+    pub rows_terminated: u64,
+    /// Whole planes skipped because every row had terminated.
+    pub planes_fully_skipped: u64,
+    /// Total rows and planes (for normalisation).
+    pub rows: usize,
+    pub planes: usize,
+}
+
+impl TermStats {
+    pub fn new(rows: usize, planes: usize) -> Self {
+        TermStats { rows, planes, ..Default::default() }
+    }
+
+    pub(crate) fn record_processed(&mut self, _row: usize) {
+        self.processed += 1;
+    }
+
+    pub(crate) fn record_skipped_row(&mut self, _row: usize) {
+        self.skipped += 1;
+    }
+
+    pub(crate) fn record_terminated(&mut self, _row: usize, _at_plane: usize) {
+        self.rows_terminated += 1;
+    }
+
+    pub(crate) fn record_skipped_plane(&mut self, _plane: usize, active: &[bool]) {
+        self.planes_fully_skipped += 1;
+        self.skipped += active.len() as u64;
+    }
+
+    /// Fraction of row-plane work avoided (0.0 = none, → 1.0 = all).
+    pub fn workload_saved(&self) -> f64 {
+        let total = self.processed + self.skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped as f64 / total as f64
+        }
+    }
+
+    /// Merge statistics from two passes (signed transforms).
+    pub fn merged(&self, other: &TermStats) -> TermStats {
+        TermStats {
+            processed: self.processed + other.processed,
+            skipped: self.skipped + other.skipped,
+            rows_terminated: self.rows_terminated + other.rows_terminated,
+            planes_fully_skipped: self.planes_fully_skipped + other.planes_fully_skipped,
+            rows: self.rows,
+            planes: self.planes + other.planes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::bitplane::BitplaneEngine;
+    use crate::cim::crossbar::{Crossbar, CrossbarConfig};
+    use crate::util::{prop, Rng};
+    use crate::wht::soft_threshold;
+
+    fn engine(m: usize, bits: u8, seed: u64) -> (BitplaneEngine, Rng) {
+        let mut rng = Rng::new(seed);
+        let xb = Crossbar::walsh(m, CrossbarConfig::ideal(), &mut rng);
+        (BitplaneEngine::new(xb, bits), rng)
+    }
+
+    #[test]
+    fn policy_bound_logic() {
+        let et = EarlyTermination::exact(5.0);
+        assert!(et.should_terminate(2.0, 3.0)); // 2+3 <= 5
+        assert!(!et.should_terminate(2.1, 3.0)); // 5.1 > 5
+        let ag = EarlyTermination::aggressive(5.0, 1.5);
+        assert!(ag.should_terminate(4.0, 3.0)); // 7 <= 7.5
+    }
+
+    /// THE invariant: exact early termination never changes the
+    /// soft-thresholded output.
+    #[test]
+    fn exact_termination_preserves_thresholded_output() {
+        prop::check("exact ET preserves S_T(output)", 48, |rng| {
+            let m = 16;
+            let bits = 5u8;
+            let t = (1 + rng.index(12)) as f32;
+            let x: Vec<u32> = (0..m).map(|_| rng.below(1 << bits) as u32).collect();
+            let seed = rng.next_u64();
+
+            let (mut base, _) = engine(m, bits, 7);
+            let mut r1 = Rng::new(seed);
+            let plain = base.transform(&x, &mut r1);
+
+            let (eng, _) = engine(m, bits, 7);
+            let mut et_eng = eng.with_early_term(EarlyTermination::exact(t));
+            let mut r2 = Rng::new(seed);
+            let early = et_eng.transform(&x, &mut r2);
+
+            for (r, (a, b)) in plain.values.iter().zip(&early.values).enumerate() {
+                let ya = soft_threshold(*a, t);
+                let yb = soft_threshold(*b, t);
+                crate::prop_assert!(
+                    ya == yb,
+                    "row {r}: plain {a}→{ya}, early {b}→{yb} (T={t})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn larger_threshold_saves_more_work() {
+        let m = 32;
+        let bits = 6u8;
+        let mut rng = Rng::new(11);
+        let x: Vec<u32> = (0..m).map(|_| rng.below(1 << bits) as u32).collect();
+
+        let mut saved = Vec::new();
+        for t in [0.0f32, 8.0, 32.0, 64.0] {
+            let (eng, _) = engine(m, bits, 13);
+            let mut e = eng.with_early_term(EarlyTermination::exact(t));
+            let mut r = Rng::new(17);
+            let out = e.transform(&x, &mut r);
+            saved.push(out.term.workload_saved());
+        }
+        assert!(saved.windows(2).all(|w| w[0] <= w[1]), "saved={saved:?}");
+        assert_eq!(saved[0], 0.0, "T=0 must save nothing");
+    }
+
+    #[test]
+    fn aggressive_saves_at_least_as_much_as_exact() {
+        let m = 32;
+        let bits = 6u8;
+        let mut rng = Rng::new(19);
+        let x: Vec<u32> = (0..m).map(|_| rng.below(1 << bits) as u32).collect();
+        let t = 24.0f32;
+
+        let (eng, _) = engine(m, bits, 23);
+        let mut exact = eng.with_early_term(EarlyTermination::exact(t));
+        let s_exact = exact.transform(&x, &mut Rng::new(29)).term.workload_saved();
+
+        let (eng, _) = engine(m, bits, 23);
+        let mut aggr = eng.with_early_term(EarlyTermination::aggressive(t, 2.0));
+        let s_aggr = aggr.transform(&x, &mut Rng::new(29)).term.workload_saved();
+
+        assert!(s_aggr >= s_exact, "exact {s_exact} aggressive {s_aggr}");
+    }
+
+    #[test]
+    fn stats_accounting_adds_up() {
+        let m = 16;
+        let bits = 4u8;
+        let (eng, mut rng) = engine(m, bits, 31);
+        let mut e = eng.with_early_term(EarlyTermination::exact(6.0));
+        let x: Vec<u32> = (0..m).map(|i| (i as u32) % 16).collect();
+        let out = e.transform(&x, &mut rng);
+        assert_eq!(
+            out.term.processed + out.term.skipped,
+            (m * bits as usize) as u64,
+            "every row-plane pair is either processed or skipped"
+        );
+    }
+
+    #[test]
+    fn merged_stats_sum() {
+        let a = TermStats { processed: 10, skipped: 2, rows_terminated: 1, planes_fully_skipped: 0, rows: 4, planes: 3 };
+        let b = TermStats { processed: 8, skipped: 4, rows_terminated: 2, planes_fully_skipped: 1, rows: 4, planes: 3 };
+        let m = a.merged(&b);
+        assert_eq!(m.processed, 18);
+        assert_eq!(m.skipped, 6);
+        assert_eq!(m.rows_terminated, 3);
+        assert_eq!(m.planes, 6);
+    }
+}

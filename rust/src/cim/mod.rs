@@ -1,0 +1,34 @@
+//! Compute-in-SRAM crossbar simulator (paper §III).
+//!
+//! The paper's first contribution: an ADC/DAC-free analog crossbar that
+//! executes Walsh–Hadamard transforms in the charge domain. The transform
+//! matrix is parameter-free (entries ±1), so cells are simple NMOS pairs,
+//! and the four-step operation (precharge → parallel local compute →
+//! row-merge charge sum → comparator/threshold) completes in two clock
+//! cycles (Figs 2–3).
+//!
+//! Multi-bit digital inputs are processed **bitplane-wise** (Fig 4): each
+//! input significance bit is applied as one crossbar operation; the analog
+//! row sums are quantized to a *single bit* by the row comparators
+//! (ADC-free, paper §III-B), and output bitplanes are reassembled into a
+//! multi-bit output vector. Training absorbs the quantization error
+//! ([`crate::nn::train`]).
+//!
+//! Module map:
+//! - [`bitvec`] — packed bit-vectors and ±1 sign matrices with popcount
+//!   row dot products (the digital shadow of the analog charge sums).
+//! - [`crossbar`] — the analog 4-step operation with settling, noise and
+//!   energy accounting; also exposes raw MAV voltages for the ADC path.
+//! - [`bitplane`] — multi-bit input decomposition / output reassembly.
+//! - [`early_term`] — the paper's §III-C early-termination engine
+//!   exploiting soft-threshold output sparsity.
+
+pub mod bitplane;
+pub mod bitvec;
+pub mod crossbar;
+pub mod early_term;
+
+pub use bitplane::{decompose_bitplanes, BitplaneEngine, BitplaneOutput};
+pub use bitvec::{BitVec, SignMatrix};
+pub use crossbar::{Crossbar, CrossbarConfig};
+pub use early_term::{EarlyTermination, TermStats};

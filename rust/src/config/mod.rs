@@ -1,0 +1,120 @@
+//! Layered configuration (tiny TOML subset, offline replacement for
+//! `toml`+`serde`).
+//!
+//! Supports `[section]` headers and `key = value` lines where value is
+//! int / float / bool / "string". Later files override earlier ones;
+//! CLI flags override files (wired in main.rs). See configs/*.toml.
+
+pub mod toml_lite;
+
+pub use toml_lite::TomlLite;
+
+use crate::analog::OperatingPoint;
+
+/// Chip-level configuration (crossbar geometry + operating point).
+#[derive(Debug, Clone, Copy)]
+pub struct ChipConfig {
+    pub array_rows: usize,
+    pub array_cols: usize,
+    pub n_arrays: usize,
+    pub vdd: f64,
+    pub clock_ghz: f64,
+    pub adc_bits: u8,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        // The paper's fabricated configuration: four 16x32 arrays, 5-bit
+        // immersed ADC.
+        ChipConfig {
+            array_rows: 16,
+            array_cols: 32,
+            n_arrays: 4,
+            vdd: 1.0,
+            clock_ghz: 1.0,
+            adc_bits: 5,
+        }
+    }
+}
+
+impl ChipConfig {
+    pub fn operating_point(&self) -> OperatingPoint {
+        OperatingPoint::new(self.vdd, self.clock_ghz)
+    }
+
+    pub fn from_toml(t: &TomlLite) -> Self {
+        let d = ChipConfig::default();
+        ChipConfig {
+            array_rows: t.get_int("chip", "array_rows").unwrap_or(d.array_rows as i64) as usize,
+            array_cols: t.get_int("chip", "array_cols").unwrap_or(d.array_cols as i64) as usize,
+            n_arrays: t.get_int("chip", "n_arrays").unwrap_or(d.n_arrays as i64) as usize,
+            vdd: t.get_float("chip", "vdd").unwrap_or(d.vdd),
+            clock_ghz: t.get_float("chip", "clock_ghz").unwrap_or(d.clock_ghz),
+            adc_bits: t.get_int("chip", "adc_bits").unwrap_or(d.adc_bits as i64) as u8,
+        }
+    }
+}
+
+/// Server-level configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub batch: usize,
+    /// Max time a batch waits before dispatch (microseconds).
+    pub batch_deadline_us: u64,
+    /// Bounded-queue depth before backpressure sheds load.
+    pub queue_depth: usize,
+    /// "digital" (PJRT) or "analog" (CiM simulator).
+    pub engine: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            batch: 16,
+            batch_deadline_us: 2000,
+            queue_depth: 256,
+            engine: "digital".to_string(),
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_toml(t: &TomlLite) -> Self {
+        let d = ServerConfig::default();
+        ServerConfig {
+            workers: t.get_int("server", "workers").unwrap_or(d.workers as i64) as usize,
+            batch: t.get_int("server", "batch").unwrap_or(d.batch as i64) as usize,
+            batch_deadline_us: t
+                .get_int("server", "batch_deadline_us")
+                .unwrap_or(d.batch_deadline_us as i64) as u64,
+            queue_depth: t.get_int("server", "queue_depth").unwrap_or(d.queue_depth as i64)
+                as usize,
+            engine: t.get_str("server", "engine").unwrap_or(d.engine),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_chip() {
+        let c = ChipConfig::default();
+        assert_eq!((c.array_rows, c.array_cols, c.n_arrays, c.adc_bits), (16, 32, 4, 5));
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = TomlLite::parse("[chip]\nvdd = 0.85\nclock_ghz = 4.0\n[server]\nworkers = 8\nengine = \"analog\"\n").unwrap();
+        let c = ChipConfig::from_toml(&t);
+        assert_eq!(c.vdd, 0.85);
+        assert_eq!(c.clock_ghz, 4.0);
+        assert_eq!(c.array_rows, 16); // default preserved
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.workers, 8);
+        assert_eq!(s.engine, "analog");
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal TOML-subset parser.
+//!
+//! Grammar: `[section]` lines, `key = value` lines, `#` comments, blank
+//! lines. Values: i64, f64, bool, "quoted string". No arrays, no nested
+//! tables — config files in configs/ stay within this subset.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+/// Parsed document: (section, key) → value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlLite {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut doc = TomlLite::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = k.trim().to_string();
+            let val = Self::parse_value(v.trim())
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad value {v:?}", lineno + 1))?;
+            doc.entries.insert((section.clone(), key), val);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &str) -> Result<TomlLite> {
+        TomlLite::parse(&std::fs::read_to_string(path)?)
+    }
+
+    fn parse_value(v: &str) -> Option<Value> {
+        if let Some(s) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+            return Some(Value::Str(s.to_string()));
+        }
+        match v {
+            "true" => return Some(Value::Bool(true)),
+            "false" => return Some(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = v.parse::<i64>() {
+            return Some(Value::Int(i));
+        }
+        if let Ok(f) = v.parse::<f64>() {
+            return Some(Value::Float(f));
+        }
+        None
+    }
+
+    /// Merge `other` over `self` (later files win).
+    pub fn merge_from(&mut self, other: TomlLite) {
+        self.entries.extend(other.entries);
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = TomlLite::parse(
+            "# comment\n[a]\nx = 1\ny = 2.5\nz = true\ns = \"hi\" # trailing\n[b]\nx = -3\n",
+        )
+        .unwrap();
+        assert_eq!(t.get_int("a", "x"), Some(1));
+        assert_eq!(t.get_float("a", "y"), Some(2.5));
+        assert_eq!(t.get_bool("a", "z"), Some(true));
+        assert_eq!(t.get_str("a", "s"), Some("hi".to_string()));
+        assert_eq!(t.get_int("b", "x"), Some(-3));
+        assert_eq!(t.get_int("a", "missing"), None);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let t = TomlLite::parse("[a]\nv = 2\n").unwrap();
+        assert_eq!(t.get_float("a", "v"), Some(2.0));
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut base = TomlLite::parse("[a]\nx = 1\ny = 2\n").unwrap();
+        base.merge_from(TomlLite::parse("[a]\nx = 9\n").unwrap());
+        assert_eq!(base.get_int("a", "x"), Some(9));
+        assert_eq!(base.get_int("a", "y"), Some(2));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlLite::parse("[a]\nnot a kv line\n").is_err());
+        assert!(TomlLite::parse("[a]\nx = @@\n").is_err());
+    }
+}

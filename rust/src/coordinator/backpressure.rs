@@ -1,0 +1,112 @@
+//! Admission control: bounded in-flight depth with load shedding.
+//!
+//! Edge nodes cannot buffer an analog data deluge — when the queue is
+//! full the right move is to drop the frame (sensor data is perishable)
+//! and count it, not to grow memory. `AdmissionControl` is shared by
+//! the submitting side and the workers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Shared admission state.
+#[derive(Debug, Default)]
+pub struct AdmissionControl {
+    max_depth: usize,
+    depth: AtomicUsize,
+    shed: AtomicU64,
+    admitted: AtomicU64,
+}
+
+impl AdmissionControl {
+    pub fn new(max_depth: usize) -> Self {
+        assert!(max_depth > 0);
+        AdmissionControl {
+            max_depth,
+            depth: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit one request. True = admitted (caller must `release`
+    /// when the request completes).
+    pub fn admit(&self) -> bool {
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_depth {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Release one slot.
+    pub fn release(&self) {
+        let prev = self.depth.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "release without admit");
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted_count(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn admits_up_to_depth_then_sheds() {
+        let ac = AdmissionControl::new(2);
+        assert!(ac.admit());
+        assert!(ac.admit());
+        assert!(!ac.admit());
+        assert_eq!(ac.shed_count(), 1);
+        ac.release();
+        assert!(ac.admit());
+        assert_eq!(ac.admitted_count(), 3);
+    }
+
+    #[test]
+    fn concurrent_admissions_never_exceed_depth() {
+        let ac = Arc::new(AdmissionControl::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let ac = ac.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local_max = 0usize;
+                for _ in 0..2000 {
+                    if ac.admit() {
+                        local_max = local_max.max(ac.depth());
+                        ac.release();
+                    }
+                }
+                local_max
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap() <= 8);
+        }
+        assert_eq!(ac.depth(), 0);
+    }
+}

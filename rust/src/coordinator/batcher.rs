@@ -1,0 +1,147 @@
+//! Dynamic batching: dispatch when full OR when the oldest request has
+//! waited past the deadline — the standard latency/throughput knob of
+//! serving systems (vLLM-style), sized here to the model's AOT batch.
+
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+/// A dispatched batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    /// When the batch was sealed.
+    pub sealed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Pure batching logic (threading lives in server.rs).
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    deadline: Duration,
+    pending: Vec<InferenceRequest>,
+    oldest: Option<Instant>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        assert!(max_batch > 0);
+        DynamicBatcher { max_batch, deadline, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a sealed batch if it filled up.
+    pub fn push(&mut self, req: InferenceRequest, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.max_batch {
+            return self.seal(now);
+        }
+        None
+    }
+
+    /// Deadline check (call on a timer / between receives).
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.deadline => {
+                self.seal(now)
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-dispatch whatever is pending (shutdown path).
+    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.seal(now)
+        }
+    }
+
+    /// Time until the current deadline expires (for recv timeouts).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| self.deadline.saturating_sub(now.duration_since(t0)))
+    }
+
+    fn seal(&mut self, now: Instant) -> Option<Batch> {
+        self.oldest = None;
+        Some(Batch { requests: std::mem::take(&mut self.pending), sealed_at: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, 0, vec![0.0])
+    }
+
+    #[test]
+    fn seals_when_full() {
+        let mut b = DynamicBatcher::new(3, Duration::from_secs(10));
+        let now = Instant::now();
+        assert!(b.push(req(1), now).is_none());
+        assert!(b.push(req(2), now).is_none());
+        let batch = b.push(req(3), now).expect("full batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn seals_on_deadline() {
+        let mut b = DynamicBatcher::new(100, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(req(1), t0);
+        assert!(b.poll(t0).is_none(), "deadline not reached");
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.poll(later).expect("deadline batch");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn preserves_order() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(req(i), now);
+        }
+        let batch = b.flush(now).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flush_empty_is_none() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(1));
+        assert!(b.flush(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn deadline_resets_after_seal() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(req(1), t0);
+        b.push(req(2), t0); // seals
+        b.push(req(3), t0 + Duration::from_millis(20));
+        // New epoch: deadline measured from the new oldest.
+        assert!(b.poll(t0 + Duration::from_millis(25)).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(31)).is_some());
+    }
+}

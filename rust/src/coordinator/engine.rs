@@ -1,0 +1,202 @@
+//! Inference engines: what a worker runs a batch on.
+//!
+//! - [`DigitalEngine`] — the AOT-compiled JAX/Pallas model on PJRT
+//!   (digital reference path; exact logits).
+//! - [`AnalogEngine`] — the same trained parameters executed through
+//!   the CiM crossbar simulator ([`crate::cim`]) at a configurable
+//!   operating point: the paper's hardware path, with its quantization
+//!   and analog non-idealities.
+
+use anyhow::Result;
+
+use crate::cim::{CrossbarConfig, EarlyTermination};
+use crate::nn::bwht_layer::BwhtExec;
+use crate::nn::model::bwht_mlp_from_weights;
+use crate::nn::{Sequential, Tensor};
+use crate::runtime::{Artifacts, LoadedModel, Manifest, Runtime};
+
+/// A batch-inference engine.
+pub trait InferenceEngine: Send {
+    /// Logits for each image (image length = input dim).
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    fn name(&self) -> &'static str;
+    /// Input dimension.
+    fn input_dim(&self) -> usize;
+}
+
+/// PJRT-backed digital reference engine.
+///
+/// Owns its *own* PJRT client: the `xla` crate's handles are `Rc`-based
+/// (`!Send`), so the only sound way to move an engine into a worker
+/// thread is to move the client and every executable referencing it as
+/// one unit — which is exactly what this struct is.
+pub struct DigitalEngine {
+    // Field order matters: `model` must drop before `runtime`.
+    model: LoadedModel,
+    _runtime: Runtime,
+    manifest: Manifest,
+}
+
+// SAFETY: all Rc handles into the PJRT client are confined to this
+// struct (`_runtime` + `model`); moving the whole struct to another
+// thread moves every reference together, and the engine is used by one
+// thread at a time (worker ownership). No Rc clone escapes.
+unsafe impl Send for DigitalEngine {}
+
+impl DigitalEngine {
+    /// Load `model_float.hlo.txt` (or `model_quant.hlo.txt` with
+    /// `quant = true`) from an artifacts directory, with a private PJRT
+    /// CPU client.
+    pub fn load(artifacts: &Artifacts, quant: bool) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let manifest = artifacts.manifest()?;
+        let name = if quant { "model_quant" } else { "model_float" };
+        let model = runtime.load_hlo_text(&artifacts.hlo_path(name))?;
+        Ok(DigitalEngine { model, _runtime: runtime, manifest })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch
+    }
+}
+
+impl InferenceEngine for DigitalEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let b = self.manifest.batch;
+        let d = self.manifest.input;
+        let c = self.manifest.classes;
+        let mut out = Vec::with_capacity(images.len());
+        // The AOT module has a fixed batch dimension: run in chunks,
+        // padding the tail with zeros.
+        for chunk in images.chunks(b) {
+            let mut flat = vec![0.0f32; b * d];
+            for (i, img) in chunk.iter().enumerate() {
+                anyhow::ensure!(img.len() == d, "image dim {} != {d}", img.len());
+                flat[i * d..(i + 1) * d].copy_from_slice(img);
+            }
+            let logits = self.model.run_f32(&flat, &[b, d])?;
+            anyhow::ensure!(logits.len() == b * c, "bad output size {}", logits.len());
+            for i in 0..chunk.len() {
+                out.push(logits[i * c..(i + 1) * c].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "digital-pjrt"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.manifest.input
+    }
+}
+
+/// CiM-simulator-backed analog engine (same trained weights).
+pub struct AnalogEngine {
+    model: Sequential,
+    input: usize,
+}
+
+impl AnalogEngine {
+    /// Build from artifacts, executing every BWHT layer on the analog
+    /// crossbar simulator with `config` (noise, VDD, clock) and optional
+    /// early termination.
+    pub fn load(
+        artifacts: &Artifacts,
+        config: CrossbarConfig,
+        early_term: Option<EarlyTermination>,
+        input_bits: u8,
+        seed: u64,
+    ) -> Result<Self> {
+        let manifest = artifacts.manifest()?;
+        let blob = artifacts.weights()?;
+        let mut model = bwht_mlp_from_weights(&manifest, &blob)?;
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed });
+        });
+        Ok(AnalogEngine { model, input: manifest.input })
+    }
+
+    /// Wrap an already-built model (tests, sweeps).
+    pub fn from_model(model: Sequential, input: usize) -> Self {
+        AnalogEngine { model, input }
+    }
+
+    /// Access early-termination counters accumulated by the BWHT layers.
+    pub fn termination_stats(&mut self) -> (u64, u64) {
+        let mut processed = 0;
+        let mut skipped = 0;
+        self.model.for_each_bwht(|b| {
+            processed += b.term_processed;
+            skipped += b.term_skipped;
+        });
+        (processed, skipped)
+    }
+}
+
+impl InferenceEngine for AnalogEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        images
+            .iter()
+            .map(|img| {
+                anyhow::ensure!(img.len() == self.input, "image dim");
+                Ok(self.model.forward(&Tensor::vec1(img)).data().to_vec())
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "analog-cim"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input
+    }
+}
+
+/// Trivial engine for coordinator tests: echoes a one-hot of
+/// `image[0] as usize % classes` after an optional simulated delay.
+pub struct MockEngine {
+    pub classes: usize,
+    pub input: usize,
+    pub delay: std::time::Duration,
+}
+
+impl InferenceEngine for MockEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(images
+            .iter()
+            .map(|img| {
+                let c = (img.first().copied().unwrap_or(0.0) as usize) % self.classes;
+                let mut logits = vec![0.0f32; self.classes];
+                logits[c] = 1.0;
+                logits
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engine_one_hots() {
+        let mut e = MockEngine { classes: 4, input: 2, delay: std::time::Duration::ZERO };
+        let out = e.infer_batch(&[vec![2.0, 0.0], vec![7.0, 0.0]]).unwrap();
+        assert_eq!(out[0][2], 1.0);
+        assert_eq!(out[1][3], 1.0); // 7 % 4
+    }
+}

@@ -1,0 +1,134 @@
+//! Serving metrics: latency distribution, throughput, batch shapes.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Moments;
+
+/// Shared metrics (interior mutability; cheap enough off the hot loop).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency_us: Moments,
+    batch_size: Moments,
+    completed: u64,
+    errors: u64,
+    latencies: Vec<f64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub max_latency_us: f64,
+    pub mean_batch: f64,
+    pub throughput_per_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+        g.batch_size.push(batch_size as f64);
+    }
+
+    pub fn record_completion(&self, latency_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency_us.push(latency_us as f64);
+        g.latencies.push(latency_us as f64);
+        g.completed += 1;
+        g.finished = Some(Instant::now());
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut sorted = g.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::percentile_sorted(&sorted, p)
+            }
+        };
+        let wall = match (g.started, g.finished) {
+            (Some(s), Some(f)) if f > s => f.duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            completed: g.completed,
+            errors: g.errors,
+            mean_latency_us: g.latency_us.mean(),
+            p50_latency_us: pct(50.0),
+            p95_latency_us: pct(95.0),
+            max_latency_us: g.latency_us.max(),
+            mean_batch: g.batch_size.mean(),
+            throughput_per_s: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "completed={} errors={} p50={:.0}µs p95={:.0}µs mean={:.0}µs batch={:.1} rate={:.0}/s",
+            self.completed,
+            self.errors,
+            self.p50_latency_us,
+            self.p95_latency_us,
+            self.mean_latency_us,
+            self.mean_batch,
+            self.throughput_per_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        for lat in [100u64, 200, 300, 400] {
+            m.record_completion(lat);
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_latency_us - 250.0).abs() < 1e-9);
+        assert_eq!(s.max_latency_us, 400.0);
+        assert_eq!(s.mean_batch, 4.0);
+        assert!(s.p95_latency_us >= s.p50_latency_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p50_latency_us, 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! L3 edge-serving coordinator.
+//!
+//! The deployment shape the paper motivates (§I: autonomous-drone /
+//! IoT edge nodes): sensor streams produce frames; the coordinator
+//! admits, batches and routes them onto inference engines — either the
+//! **digital reference** (the AOT-compiled JAX/Pallas model on PJRT,
+//! [`crate::runtime`]) or the **analog CiM pool** (the paper's crossbar
+//! + collaborative-ADC simulator). Rust owns the event loop, queues,
+//! metrics and backpressure; python never appears at serve time.
+//!
+//! - [`request`] — request/response types.
+//! - [`backpressure`] — bounded admission with load shedding.
+//! - [`batcher`] — deadline/size dynamic batcher (pure logic, testable
+//!   without threads).
+//! - [`router`] — per-worker queues with round-robin / least-loaded
+//!   dispatch.
+//! - [`engine`] — the `InferenceEngine` trait + digital (PJRT) and
+//!   analog (CiM simulator) implementations.
+//! - [`metrics`] — latency/throughput accounting.
+//! - [`server`] — thread-per-worker serving loop tying it together.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use backpressure::AdmissionControl;
+pub use batcher::{Batch, DynamicBatcher};
+pub use engine::{AnalogEngine, DigitalEngine, InferenceEngine};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use router::{Router, RoutingPolicy};
+pub use server::EdgeServer;

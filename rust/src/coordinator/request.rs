@@ -1,0 +1,70 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// One inference request: a flattened sensor frame.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Unique id (assigned by the submitting side).
+    pub id: u64,
+    /// Originating sensor stream (router affinity / ordering key).
+    pub stream: u32,
+    /// Flattened image, length = model input dim.
+    pub image: Vec<f32>,
+    /// Submission timestamp (latency accounting).
+    pub submitted: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, stream: u32, image: Vec<f32>) -> Self {
+        InferenceRequest { id, stream, image, submitted: Instant::now() }
+    }
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub stream: u32,
+    /// Raw logits.
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub class: usize,
+    /// End-to-end latency in microseconds.
+    pub latency_us: u64,
+    /// Which worker served it.
+    pub worker: usize,
+}
+
+impl InferenceResponse {
+    pub fn from_logits(req: &InferenceRequest, logits: Vec<f32>, worker: usize) -> Self {
+        let class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        InferenceResponse {
+            id: req.id,
+            stream: req.stream,
+            logits,
+            class,
+            latency_us: req.submitted.elapsed().as_micros() as u64,
+            worker,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_classifies_by_argmax() {
+        let req = InferenceRequest::new(7, 1, vec![0.0; 4]);
+        let resp = InferenceResponse::from_logits(&req, vec![0.1, 3.0, -1.0], 2);
+        assert_eq!(resp.class, 1);
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.worker, 2);
+    }
+}

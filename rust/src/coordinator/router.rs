@@ -1,0 +1,144 @@
+//! Batch routing across the worker pool.
+//!
+//! Each worker owns an inference engine (a PJRT executable or a CiM
+//! array group) and an mpsc queue. The router picks the queue; depth
+//! counters make least-loaded routing possible without locking the
+//! queues themselves.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{SendError, Sender};
+use std::sync::Arc;
+
+use super::batcher::Batch;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through workers.
+    RoundRobin,
+    /// Pick the worker with the fewest queued batches.
+    LeastLoaded,
+    /// Hash the first request's stream id (per-stream ordering).
+    StreamAffinity,
+}
+
+/// Routes sealed batches to per-worker channels.
+pub struct Router {
+    senders: Vec<Sender<Batch>>,
+    depths: Vec<Arc<AtomicUsize>>,
+    policy: RoutingPolicy,
+    next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(senders: Vec<Sender<Batch>>, policy: RoutingPolicy) -> Self {
+        let depths = (0..senders.len()).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        Router { senders, depths, policy, next: AtomicUsize::new(0) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Depth handle for worker `i` (the worker decrements on dequeue).
+    pub fn depth_handle(&self, i: usize) -> Arc<AtomicUsize> {
+        self.depths[i].clone()
+    }
+
+    pub fn queued(&self, i: usize) -> usize {
+        self.depths[i].load(Ordering::Relaxed)
+    }
+
+    /// Pick a worker for this batch.
+    pub fn pick(&self, batch: &Batch) -> usize {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len()
+            }
+            RoutingPolicy::LeastLoaded => self
+                .depths
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            RoutingPolicy::StreamAffinity => {
+                let stream = batch.requests.first().map(|r| r.stream).unwrap_or(0);
+                stream as usize % self.senders.len()
+            }
+        }
+    }
+
+    /// Route and enqueue.
+    pub fn dispatch(&self, batch: Batch) -> Result<usize, SendError<Batch>> {
+        let w = self.pick(&batch);
+        self.depths[w].fetch_add(1, Ordering::AcqRel);
+        self.senders[w].send(batch)?;
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InferenceRequest;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn batch(stream: u32) -> Batch {
+        Batch {
+            requests: vec![InferenceRequest::new(0, stream, vec![])],
+            sealed_at: Instant::now(),
+        }
+    }
+
+    fn router(n: usize, policy: RoutingPolicy) -> (Router, Vec<std::sync::mpsc::Receiver<Batch>>) {
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        (Router::new(senders, policy), receivers)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (r, rxs) = router(3, RoutingPolicy::RoundRobin);
+        for _ in 0..6 {
+            r.dispatch(batch(0)).unwrap();
+        }
+        for rx in &rxs {
+            assert_eq!(rx.try_iter().count(), 2);
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_queue() {
+        let (r, _rxs) = router(2, RoutingPolicy::LeastLoaded);
+        // Simulate worker 0 busy with 5 queued batches.
+        r.depth_handle(0).store(5, Ordering::Relaxed);
+        assert_eq!(r.pick(&batch(0)), 1);
+    }
+
+    #[test]
+    fn stream_affinity_is_stable() {
+        let (r, _rxs) = router(4, RoutingPolicy::StreamAffinity);
+        let w1 = r.pick(&batch(7));
+        let w2 = r.pick(&batch(7));
+        assert_eq!(w1, w2);
+        assert_eq!(w1, 7 % 4);
+    }
+
+    #[test]
+    fn dispatch_increments_depth() {
+        let (r, rxs) = router(1, RoutingPolicy::RoundRobin);
+        r.dispatch(batch(0)).unwrap();
+        assert_eq!(r.queued(0), 1);
+        // Worker dequeues and decrements.
+        let _ = rxs[0].recv().unwrap();
+        r.depth_handle(0).fetch_sub(1, Ordering::AcqRel);
+        assert_eq!(r.queued(0), 0);
+    }
+}

@@ -1,0 +1,277 @@
+//! The serving loop: ingest → admission → batcher → router → workers.
+//!
+//! Thread layout (std threads; the node is CPU-bound anyway):
+//!
+//! ```text
+//!  submit()──▶ [admission] ──▶ ingest mpsc ──▶ batcher thread
+//!                                               │ (size/deadline)
+//!                                        router (policy)
+//!                                        ┌──────┴──────┐
+//!                                   worker 0 …    worker N-1   (one engine each)
+//!                                        └──────┬──────┘
+//!                                         response mpsc ──▶ take_responses()
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::ServerConfig;
+
+use super::backpressure::AdmissionControl;
+use super::batcher::DynamicBatcher;
+use super::engine::InferenceEngine;
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::router::{Router, RoutingPolicy};
+
+enum Ingest {
+    Req(InferenceRequest),
+    Shutdown,
+}
+
+/// A running edge-inference server.
+pub struct EdgeServer {
+    ingest_tx: Sender<Ingest>,
+    response_rx: Receiver<InferenceResponse>,
+    admission: Arc<AdmissionControl>,
+    metrics: Arc<Metrics>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl EdgeServer {
+    /// Start with one engine per worker (engines are moved into their
+    /// worker threads).
+    pub fn start(
+        cfg: &ServerConfig,
+        engines: Vec<Box<dyn InferenceEngine>>,
+        policy: RoutingPolicy,
+    ) -> Result<Self> {
+        anyhow::ensure!(!engines.is_empty(), "need at least one engine");
+        let admission = Arc::new(AdmissionControl::new(cfg.queue_depth));
+        let metrics = Arc::new(Metrics::new());
+        let (ingest_tx, ingest_rx) = channel::<Ingest>();
+        let (response_tx, response_rx) = channel::<InferenceResponse>();
+
+        // Workers.
+        let mut worker_senders = Vec::new();
+        let mut threads = Vec::new();
+        let mut worker_rxs = Vec::new();
+        for _ in 0..engines.len() {
+            let (tx, rx) = channel();
+            worker_senders.push(tx);
+            worker_rxs.push(rx);
+        }
+        let router = Arc::new(Router::new(worker_senders, policy));
+        for (wid, (engine, rx)) in engines.into_iter().zip(worker_rxs).enumerate() {
+            let response_tx = response_tx.clone();
+            let metrics = metrics.clone();
+            let admission = admission.clone();
+            let depth = router.depth_handle(wid);
+            threads.push(std::thread::spawn(move || {
+                worker_loop(wid, engine, rx, response_tx, metrics, admission, depth)
+            }));
+        }
+
+        // Batcher thread.
+        {
+            let router = router.clone();
+            let metrics = metrics.clone();
+            let max_batch = cfg.batch;
+            let deadline = Duration::from_micros(cfg.batch_deadline_us);
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(ingest_rx, router, metrics, max_batch, deadline)
+            }));
+        }
+
+        Ok(EdgeServer { ingest_tx, response_rx, admission, metrics, threads })
+    }
+
+    /// Submit a request. `false` = shed by backpressure.
+    pub fn submit(&self, req: InferenceRequest) -> bool {
+        if !self.admission.admit() {
+            return false;
+        }
+        self.ingest_tx.send(Ingest::Req(req)).is_ok()
+    }
+
+    /// Drain any completed responses without blocking.
+    pub fn take_responses(&self) -> Vec<InferenceResponse> {
+        self.response_rx.try_iter().collect()
+    }
+
+    /// Block for one response (with timeout).
+    pub fn recv_response(&self, timeout: Duration) -> Option<InferenceResponse> {
+        self.response_rx.recv_timeout(timeout).ok()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.admission.shed_count()
+    }
+
+    /// Flush, stop all threads, return final metrics.
+    pub fn shutdown(self) -> super::metrics::MetricsSnapshot {
+        let _ = self.ingest_tx.send(Ingest::Shutdown);
+        for t in self.threads {
+            let _ = t.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Ingest>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    deadline: Duration,
+) {
+    let mut batcher = DynamicBatcher::new(max_batch, deadline);
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50))
+            .max(Duration::from_micros(50));
+        match rx.recv_timeout(wait) {
+            Ok(Ingest::Req(req)) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    metrics.record_batch(batch.len());
+                    let _ = router.dispatch(batch);
+                }
+            }
+            Ok(Ingest::Shutdown) => {
+                if let Some(batch) = batcher.flush(Instant::now()) {
+                    metrics.record_batch(batch.len());
+                    let _ = router.dispatch(batch);
+                }
+                // Dropping the router drops worker senders → workers exit.
+                break;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    metrics.record_batch(batch.len());
+                    let _ = router.dispatch(batch);
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.flush(Instant::now()) {
+                    metrics.record_batch(batch.len());
+                    let _ = router.dispatch(batch);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    mut engine: Box<dyn InferenceEngine>,
+    rx: Receiver<super::batcher::Batch>,
+    response_tx: Sender<InferenceResponse>,
+    metrics: Arc<Metrics>,
+    admission: Arc<AdmissionControl>,
+    depth: Arc<std::sync::atomic::AtomicUsize>,
+) {
+    while let Ok(batch) = rx.recv() {
+        depth.fetch_sub(1, Ordering::AcqRel);
+        let images: Vec<Vec<f32>> = batch.requests.iter().map(|r| r.image.clone()).collect();
+        match engine.infer_batch(&images) {
+            Ok(all_logits) => {
+                for (req, logits) in batch.requests.iter().zip(all_logits) {
+                    let resp = InferenceResponse::from_logits(req, logits, wid);
+                    metrics.record_completion(resp.latency_us);
+                    admission.release();
+                    let _ = response_tx.send(resp);
+                }
+            }
+            Err(_) => {
+                for _ in &batch.requests {
+                    metrics.record_error();
+                    admission.release();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+
+    fn mock(n: usize) -> Vec<Box<dyn InferenceEngine>> {
+        (0..n)
+            .map(|_| {
+                Box::new(MockEngine {
+                    classes: 10,
+                    input: 4,
+                    delay: Duration::from_micros(200),
+                }) as Box<dyn InferenceEngine>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let cfg = ServerConfig { workers: 2, batch: 4, batch_deadline_us: 500, ..Default::default() };
+        let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
+        for i in 0..20u64 {
+            assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])));
+        }
+        let mut got = Vec::new();
+        let t0 = Instant::now();
+        while got.len() < 20 && t0.elapsed() < Duration::from_secs(5) {
+            if let Some(r) = server.recv_response(Duration::from_millis(100)) {
+                got.push(r);
+            }
+        }
+        assert_eq!(got.len(), 20);
+        // Mock classifies image[0] % 10.
+        for r in &got {
+            assert_eq!(r.class, (r.id % 10) as usize);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 20);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn backpressure_sheds_when_full() {
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 64,
+            batch_deadline_us: 500_000, // long deadline: queue fills
+            queue_depth: 8,
+            ..Default::default()
+        };
+        let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::RoundRobin).unwrap();
+        let mut accepted = 0;
+        for i in 0..64u64 {
+            if server.submit(InferenceRequest::new(i, 0, vec![0.0; 4])) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted <= 8, "admitted {accepted} > depth 8");
+        assert!(server.shed_count() >= 56);
+        server.shutdown();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let cfg = ServerConfig { workers: 1, batch: 1000, batch_deadline_us: 2_000, ..Default::default() };
+        let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::LeastLoaded).unwrap();
+        server.submit(InferenceRequest::new(1, 0, vec![1.0; 4]));
+        let r = server.recv_response(Duration::from_secs(2)).expect("deadline dispatch");
+        assert_eq!(r.id, 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,16 @@
+//! Area / energy / latency models (paper Table I, Fig 13(a,b)).
+//!
+//! Anchored to the paper's published numbers: a 40 nm 5-bit SAR ADC
+//! (5235.20 µm², 105 pJ) and 5-bit Flash ADC (10703.36 µm², 952 pJ) from
+//! [34], versus the paper's 65 nm memory-immersed converter
+//! (207.8 µm², 74.23 pJ) at a 10 MHz clock. The *structural* scaling in
+//! bits (exponential capacitor bank / comparator count vs near-constant
+//! immersed overhead) is what regenerates Fig 13(a,b).
+
+pub mod area;
+pub mod power;
+pub mod tech;
+
+pub use area::{adc_area_um2, sram_array_area_um2, AdcStyle};
+pub use power::{adc_energy_pj, adc_latency_cycles, adc_latency_ns};
+pub use tech::TechNode;

@@ -1,0 +1,104 @@
+//! ADC conversion energy and latency models (Table I, Fig 13(b)).
+//!
+//! Calibrated to the paper's Table I energy anchors at 5 bits / 10 MHz:
+//! SAR 105 pJ, Flash 952 pJ, in-memory 74.23 pJ. Structure:
+//!
+//! - **SAR** — cap-bank switching energy ∝ 2^bits plus per-cycle
+//!   comparator + SAR-logic energy ∝ bits.
+//! - **Flash** — every one of the 2^bits − 1 comparators fires each
+//!   conversion, plus static ladder burn over the conversion window.
+//! - **In-memory** — per cycle: one column-line charge share (the
+//!   "DAC") + one comparator decision; no dedicated DAC to charge, so
+//!   the per-cycle cost is small and flat in bits.
+
+use super::area::AdcStyle;
+
+// Energy calibration constants (pJ). Each style's 5-bit total hits the
+// Table I anchor; see tests.
+const SAR_CAP_UNIT_PJ: f64 = 2.5; // per unit of the 2^b bank
+const SAR_PER_BIT_PJ: f64 = 5.0; // comparator + logic per cycle
+const FLASH_CMP_PJ: f64 = 28.0; // per comparator per conversion
+const FLASH_LADDER_PJ: f64 = 84.0; // static ladder per conversion
+const IMEM_PER_CYCLE_PJ: f64 = 14.0; // share + comparator + precharge drive
+const IMEM_FIXED_PJ: f64 = 4.23; // sequencing / clocking
+
+/// Energy per conversion in pJ at the Table I operating point
+/// (10 MHz clock, nominal supply of the style's native node).
+pub fn adc_energy_pj(style: AdcStyle, bits: u8) -> f64 {
+    let b = bits as f64;
+    match style {
+        AdcStyle::Sar => SAR_CAP_UNIT_PJ * (1u64 << bits) as f64 + SAR_PER_BIT_PJ * b,
+        AdcStyle::Flash => FLASH_CMP_PJ * ((1u64 << bits) - 1) as f64 + FLASH_LADDER_PJ,
+        AdcStyle::InMemorySar => IMEM_PER_CYCLE_PJ * b + IMEM_FIXED_PJ,
+        AdcStyle::InMemoryHybrid => {
+            // One flash cycle (3 parallel shares + comparators at the
+            // 2-bit coarse stage) then b−2 SAR cycles.
+            let flash_cycle = 3.0 * IMEM_PER_CYCLE_PJ * 0.9; // shared precharge clocking
+            flash_cycle + IMEM_PER_CYCLE_PJ * (b - 2.0) + IMEM_FIXED_PJ
+        }
+    }
+}
+
+/// Conversion latency in clock cycles.
+pub fn adc_latency_cycles(style: AdcStyle, bits: u8) -> u32 {
+    match style {
+        AdcStyle::Sar | AdcStyle::InMemorySar => bits as u32,
+        AdcStyle::Flash => 1,
+        AdcStyle::InMemoryHybrid => 1 + (bits as u32).saturating_sub(2),
+    }
+}
+
+/// Conversion latency in ns at `clock_mhz`.
+pub fn adc_latency_ns(style: AdcStyle, bits: u8, clock_mhz: f64) -> f64 {
+    adc_latency_cycles(style, bits) as f64 * 1000.0 / clock_mhz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_energy_anchors() {
+        assert!((adc_energy_pj(AdcStyle::Sar, 5) - 105.0).abs() < 0.5);
+        assert!((adc_energy_pj(AdcStyle::Flash, 5) - 952.0).abs() < 0.5);
+        assert!((adc_energy_pj(AdcStyle::InMemorySar, 5) - 74.23).abs() < 0.5);
+    }
+
+    #[test]
+    fn paper_energy_ratios() {
+        // "~1.4× less energy than SAR, ~13× less than Flash".
+        let ours = adc_energy_pj(AdcStyle::InMemorySar, 5);
+        let sar = adc_energy_pj(AdcStyle::Sar, 5) / ours;
+        let flash = adc_energy_pj(AdcStyle::Flash, 5) / ours;
+        assert!((1.3..1.6).contains(&sar), "SAR ratio {sar}");
+        assert!((12.0..14.0).contains(&flash), "Flash ratio {flash}");
+    }
+
+    #[test]
+    fn latency_shapes_match_fig13b() {
+        // SAR latency grows linearly with precision; Flash is flat;
+        // hybrid sits between (the paper's "middle ground").
+        for bits in 3..=8u8 {
+            let sar = adc_latency_cycles(AdcStyle::Sar, bits);
+            let flash = adc_latency_cycles(AdcStyle::Flash, bits);
+            let hybrid = adc_latency_cycles(AdcStyle::InMemoryHybrid, bits);
+            assert_eq!(sar, bits as u32);
+            assert_eq!(flash, 1);
+            assert!(hybrid < sar && hybrid > flash, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn flash_energy_explodes_with_bits() {
+        let r = adc_energy_pj(AdcStyle::Flash, 8) / adc_energy_pj(AdcStyle::Flash, 5);
+        assert!(r > 7.0, "flash 5→8 bit energy growth {r}");
+        let m = adc_energy_pj(AdcStyle::InMemorySar, 8) / adc_energy_pj(AdcStyle::InMemorySar, 5);
+        assert!(m < 1.7, "immersed growth {m}");
+    }
+
+    #[test]
+    fn latency_ns_at_10mhz() {
+        assert!((adc_latency_ns(AdcStyle::Sar, 5, 10.0) - 500.0).abs() < 1e-9);
+        assert!((adc_latency_ns(AdcStyle::Flash, 5, 10.0) - 100.0).abs() < 1e-9);
+    }
+}

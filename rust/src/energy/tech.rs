@@ -1,0 +1,63 @@
+//! Technology-node scaling.
+//!
+//! The paper compares a 65 nm implementation against 40 nm baselines, so
+//! cross-node comparisons need explicit scaling rules. We use standard
+//! first-order rules: area ∝ node², switching energy ∝ node · VDD²
+//! (capacitance per unit structure ∝ node).
+
+/// A CMOS technology node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechNode {
+    /// Feature size (nm).
+    pub nm: f64,
+    /// Nominal supply (V).
+    pub vdd_nom: f64,
+}
+
+impl TechNode {
+    /// The paper's chip: 65 nm, 1.0 V nominal.
+    pub fn n65() -> Self {
+        TechNode { nm: 65.0, vdd_nom: 1.0 }
+    }
+
+    /// The baseline ADCs of [34]: 40 nm, 0.9 V nominal.
+    pub fn n40() -> Self {
+        TechNode { nm: 40.0, vdd_nom: 0.9 }
+    }
+
+    /// Predictive 16 nm node (the PTM library of the paper's Fig 3 sims).
+    pub fn n16() -> Self {
+        TechNode { nm: 16.0, vdd_nom: 0.85 }
+    }
+
+    /// Area scale factor relative to `other` (this / other).
+    pub fn area_scale_vs(&self, other: TechNode) -> f64 {
+        (self.nm / other.nm).powi(2)
+    }
+
+    /// Switching-energy scale factor relative to `other`.
+    pub fn energy_scale_vs(&self, other: TechNode) -> f64 {
+        (self.nm / other.nm) * (self.vdd_nom / other.vdd_nom).powi(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_node_scales_to_one() {
+        let t = TechNode::n65();
+        assert_eq!(t.area_scale_vs(t), 1.0);
+        assert_eq!(t.energy_scale_vs(t), 1.0);
+    }
+
+    #[test]
+    fn bigger_node_is_bigger_and_hungrier() {
+        let a = TechNode::n65().area_scale_vs(TechNode::n40());
+        assert!((a - (65.0f64 / 40.0).powi(2)).abs() < 1e-12);
+        assert!(a > 2.6 && a < 2.7);
+        let e = TechNode::n65().energy_scale_vs(TechNode::n40());
+        assert!(e > 1.0, "65nm at 1.0V costs more energy per op than 40nm at 0.9V");
+    }
+}

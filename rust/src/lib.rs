@@ -1,0 +1,59 @@
+//! # adcim — Frequency-Domain Compression in Collaborative Compute-in-Memory Networks
+//!
+//! Behavioural, bit/charge-accurate reproduction of *"Containing Analog Data
+//! Deluge at Edge through Frequency-Domain Compression in Collaborative
+//! Compute-in-Memory Networks"* (Darabi & Trivedi, 2023).
+//!
+//! The library is organised as the paper's stack, bottom-up:
+//!
+//! - [`wht`] — Walsh–Hadamard transform substrate: Hadamard/Walsh matrices,
+//!   the O(m log m) fast transform, and the blockwise (BWHT) variant used
+//!   for frequency-domain DNN compression.
+//! - [`analog`] — behavioural analog substrate: supply/frequency scaling,
+//!   thermal + offset noise, clocked comparators, bit-line capacitive DACs
+//!   and RC signal timing. Everything the paper measured on its 65 nm test
+//!   chip is modelled here as explicit charge arithmetic.
+//! - [`cim`] — the paper's ADC/DAC-free compute-in-SRAM crossbar: the
+//!   4-step NMOS crossbar operation, bitplane-wise multi-bit processing,
+//!   1-bit product-sum quantization and the early-termination engine.
+//! - [`adc`] — digitization substrate: conventional SAR and Flash ADC
+//!   baselines, the paper's memory-immersed collaborative ADC (SAR, Flash
+//!   and hybrid modes), the asymmetric MAV-statistics-aware search, and
+//!   DNL/INL/staircase characterization.
+//! - [`network`] — collaborative CiM array networking: left/right pairing,
+//!   one-to-many Flash coupling and the compute/digitize interleave
+//!   scheduler.
+//! - [`energy`] — area/energy/latency models calibrated to the paper's
+//!   Table I anchors, with 65 nm ↔ 40 nm technology scaling.
+//! - [`nn`] — quantized neural network stack: tensors, BWHT compression
+//!   layers with soft-thresholding, miniature MobileNetV2/ResNet20 models,
+//!   straight-through-estimator training against 1-bit product-sum
+//!   quantization, MAC/parameter accounting and the synthetic edge-sensor
+//!   dataset.
+//! - [`coordinator`] — the L3 edge serving layer: sensor-stream router,
+//!   dynamic batcher, CiM array-pool scheduler, backpressure and metrics.
+//! - [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`) for the digital reference path.
+//! - [`config`] — layered TOML configuration for chip, model and server.
+//! - [`report`] — regenerates every table and figure of the paper's
+//!   evaluation as text reports.
+//!
+//! Python (JAX + Pallas) appears only at build time: `make artifacts`
+//! lowers the L2 model (calling the L1 Pallas BWHT kernel) to HLO text and
+//! trains the reference weights. The serve path is pure rust.
+
+pub mod adc;
+pub mod analog;
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod network;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod wht;
+
+/// Library result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,218 @@
+//! `adcim` — leader binary: serve, report, characterize, sweep.
+//!
+//! Subcommands:
+//!   serve     run the edge-inference server on a synthetic sensor load
+//!   report    regenerate paper tables/figures (--all or --id fig7)
+//!   adc       one-off ADC characterization (staircase/linearity)
+//!   info      print chip/model/artifact status
+
+use adcim::adc::{Adc, ImmersedAdc, ImmersedMode};
+use adcim::analog::NoiseModel;
+use adcim::cim::CrossbarConfig;
+use adcim::config::{ChipConfig, ServerConfig, TomlLite};
+use adcim::coordinator::{
+    AnalogEngine, DigitalEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::nn::dataset::Dataset;
+use adcim::runtime::Artifacts;
+use adcim::util::cli::Args;
+use adcim::util::Rng;
+use anyhow::Result;
+
+const VALUE_KEYS: &[&str] = &[
+    "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
+    "bits", "mode", "artifacts", "policy",
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), VALUE_KEYS);
+    match args.positional().first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args),
+        Some("report") => cmd_report(&args),
+        Some("adc") => cmd_adc(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: adcim <serve|report|adc|info> [--config file.toml]\n\
+                 \n\
+                 serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
+                 report --all | --id <table1|fig1c|fig1d|fig3|fig5|fig6|fig7|fig8|fig10|fig12|fig13> [--out-dir reports]\n\
+                 adc    --bits B --mode sar|flash|hybrid [--vdd V]\n\
+                 info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_configs(args: &Args) -> Result<(ChipConfig, ServerConfig)> {
+    let mut doc = TomlLite::default();
+    if let Some(path) = args.get("config") {
+        doc.merge_from(TomlLite::load(path)?);
+    }
+    Ok((ChipConfig::from_toml(&doc), ServerConfig::from_toml(&doc)))
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let out_dir = args.get("out-dir");
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let ids: Vec<&str> = if args.flag("all") {
+        adcim::report::ALL.iter().map(|(n, _)| *n).collect()
+    } else if let Some(id) = args.get("id") {
+        vec![id]
+    } else {
+        anyhow::bail!("report: pass --all or --id <name>");
+    };
+    for id in ids {
+        let text = adcim::report::generate(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown report id {id}"))?;
+        match out_dir {
+            Some(dir) => {
+                let path = format!("{dir}/{id}.txt");
+                std::fs::write(&path, &text)?;
+                println!("wrote {path}");
+            }
+            None => println!("{text}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_adc(args: &Args) -> Result<()> {
+    let bits: u8 = args.get_parse_or("bits", 5);
+    let vdd: f64 = args.get_parse_or("vdd", 1.0);
+    let mode = match args.get_or("mode", "hybrid") {
+        "sar" => ImmersedMode::Sar,
+        "flash" => ImmersedMode::Flash,
+        _ => ImmersedMode::Hybrid { flash_bits: 2 },
+    };
+    let mut rng = Rng::new(0xadc);
+    let noise = NoiseModel::default();
+    let units = (1usize << bits).max(32);
+    let mut adc = ImmersedAdc::sample(bits, vdd, mode, units, 20.0, &noise, &mut rng);
+    let lin = adcim::adc::metrics::linearity(&mut adc, 32, &mut rng);
+    println!(
+        "immersed ADC {bits}-bit {:?} @ {vdd} V: max|DNL| {:.3} LSB, max|INL| {:.3} LSB",
+        mode,
+        lin.max_abs_dnl(),
+        lin.max_abs_inl()
+    );
+    for v in [0.2, 0.5, 0.8] {
+        let c = adc.convert(v * vdd, &mut rng);
+        println!(
+            "  V_in {:.2} -> code {} ({} comparisons, {} cycles, {:.1} fJ)",
+            v * vdd,
+            c.code,
+            c.comparisons,
+            c.cycles,
+            c.energy_fj
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (chip, server) = load_configs(args)?;
+    println!("chip:   {chip:?}");
+    println!("server: {server:?}");
+    let dir = args.get("artifacts").map(String::from).unwrap_or_else(|| {
+        Artifacts::default_dir().to_string_lossy().into_owned()
+    });
+    match Artifacts::open(&dir) {
+        Ok(a) => {
+            let m = a.manifest()?;
+            println!(
+                "artifacts: {dir} (batch {}, input {}, hidden {}, classes {}, {} params)",
+                m.batch,
+                m.input,
+                m.hidden,
+                m.classes,
+                m.params.len()
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (chip, mut server_cfg) = load_configs(args)?;
+    if let Some(w) = args.get_parse::<usize>("workers") {
+        server_cfg.workers = w;
+    }
+    if let Some(b) = args.get_parse::<usize>("batch") {
+        server_cfg.batch = b;
+    }
+    if let Some(e) = args.get("engine") {
+        server_cfg.engine = e.to_string();
+    }
+    let n_requests: usize = args.get_parse_or("requests", 256);
+    let policy = match args.get_or("policy", "rr") {
+        "ll" => RoutingPolicy::LeastLoaded,
+        "affinity" => RoutingPolicy::StreamAffinity,
+        _ => RoutingPolicy::RoundRobin,
+    };
+    let dir = args.get("artifacts").map(String::from).unwrap_or_else(|| {
+        Artifacts::default_dir().to_string_lossy().into_owned()
+    });
+    let artifacts = Artifacts::open(&dir)?;
+
+    // Build one engine per worker.
+    let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
+    match server_cfg.engine.as_str() {
+        "analog" => {
+            let cfg = CrossbarConfig { op: chip.operating_point(), ..Default::default() };
+            for w in 0..server_cfg.workers {
+                engines.push(Box::new(AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?));
+            }
+        }
+        _ => {
+            for _ in 0..server_cfg.workers {
+                engines.push(Box::new(DigitalEngine::load(&artifacts, false)?));
+            }
+        }
+    }
+    let input_dim = engines[0].input_dim();
+    println!(
+        "serving {n_requests} synthetic frames on {} x {} engine (batch {}, policy {:?})",
+        server_cfg.workers,
+        engines[0].name(),
+        server_cfg.batch,
+        policy
+    );
+
+    let server = EdgeServer::start(&server_cfg, engines, policy)?;
+    // Synthetic sensor load: digit frames from 4 streams.
+    let data = Dataset::digits(n_requests, 12, 0x5e4e);
+    let mut submitted = 0u64;
+    for (i, img) in data.images.iter().enumerate() {
+        let flat = img.clone().reshape(&[input_dim]);
+        if server.submit(InferenceRequest::new(i as u64, (i % 4) as u32, flat.data().to_vec())) {
+            submitted += 1;
+        }
+    }
+    // Collect.
+    let mut correct = 0usize;
+    let mut got = 0u64;
+    while got < submitted {
+        match server.recv_response(std::time::Duration::from_secs(10)) {
+            Some(r) => {
+                if r.class == data.labels[r.id as usize] {
+                    correct += 1;
+                }
+                got += 1;
+            }
+            None => break,
+        }
+    }
+    let shed = server.shed_count();
+    let snap = server.shutdown();
+    println!("{snap}");
+    println!(
+        "accuracy {:.3} ({correct}/{got}), shed {shed}",
+        correct as f64 / got.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Collaborative CiM array networking (paper §IV-A/B, Figs 1(b), 9, 11).
+//!
+//! The paper's second contribution is *organisational*: compute-in-SRAM
+//! arrays take turns being the computer and being the converter. This
+//! module owns the static side of that organisation:
+//!
+//! - [`topology`] — which arrays couple to which (nearest-neighbour SAR
+//!   pairs, 1-to-N flash groups, the fabricated 4-array chip of Fig 11).
+//! - [`schedule`] — phase-by-phase role assignment with the safety
+//!   invariants (an array never computes and digitizes in the same
+//!   phase; every computed MAV is digitized exactly once) and the
+//!   throughput/area accounting that justifies the paper's system-level
+//!   claim: interleaving halves per-array throughput but the reclaimed
+//!   ADC area buys more than 2× the arrays.
+
+pub mod schedule;
+pub mod topology;
+
+pub use schedule::{InterleaveSchedule, Role};
+pub use topology::{CouplingMode, Topology};

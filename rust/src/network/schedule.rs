@@ -1,0 +1,232 @@
+//! Phase-interleaved compute/digitize scheduling.
+//!
+//! "When the left array computes within-memory scalar product, the right
+//! array digitizes … Both arrays then switch their operating modes."
+//! (paper §IV-A). This module produces and validates those role
+//! schedules and derives the system-level throughput argument: with the
+//! dedicated-ADC area reclaimed, more arrays fit in the same floorplan
+//! and total throughput rises even though each array now computes only
+//! every other phase.
+
+use crate::energy::{adc_area_um2, sram_array_area_um2, AdcStyle};
+
+use super::topology::{CouplingMode, Topology};
+
+/// Role of one array in one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Computing an in-memory scalar product (produces a MAV).
+    Compute,
+    /// Digitizing a neighbour's MAV.
+    Digitize,
+    /// Not part of a complete coupling group this phase.
+    Idle,
+}
+
+/// A phase-major role table.
+#[derive(Debug, Clone)]
+pub struct InterleaveSchedule {
+    /// `roles[phase][array]`.
+    roles: Vec<Vec<Role>>,
+}
+
+impl InterleaveSchedule {
+    /// Build the alternating schedule for `phases` phases.
+    ///
+    /// Nearest-neighbour: within each pair, one array computes while the
+    /// other digitizes; roles swap every phase. Flash groups: the
+    /// compute role rotates through the group (the paper's Fig 9 bottom
+    /// timeline) while the rest serve as references.
+    pub fn build(topology: &Topology, phases: usize) -> Self {
+        let n = topology.n_arrays();
+        let mut roles = vec![vec![Role::Idle; n]; phases];
+        for group in topology.groups() {
+            for (ph, row) in roles.iter_mut().enumerate() {
+                match topology.mode() {
+                    CouplingMode::NearestNeighbour => {
+                        let (a, b) = (group[0], group[1]);
+                        if ph % 2 == 0 {
+                            row[a] = Role::Compute;
+                            row[b] = Role::Digitize;
+                        } else {
+                            row[a] = Role::Digitize;
+                            row[b] = Role::Compute;
+                        }
+                    }
+                    CouplingMode::FlashGroup { .. } => {
+                        let computer = group[ph % group.len()];
+                        for &arr in &group {
+                            row[arr] =
+                                if arr == computer { Role::Compute } else { Role::Digitize };
+                        }
+                    }
+                }
+            }
+        }
+        InterleaveSchedule { roles }
+    }
+
+    pub fn phases(&self) -> usize {
+        self.roles.len()
+    }
+
+    pub fn role(&self, phase: usize, array: usize) -> Role {
+        self.roles[phase][array]
+    }
+
+    /// Safety invariants (property-tested):
+    /// 1. no array is double-booked within a phase (structural here, but
+    ///    validated for defence against future schedule kinds);
+    /// 2. every Compute in phase `p` has a Digitize partner in `p`;
+    /// 3. across consecutive phases of a NN pair, roles alternate so
+    ///    every computed MAV gets digitized in-place before the array
+    ///    recomputes.
+    pub fn validate(&self, topology: &Topology) -> Result<(), String> {
+        for (ph, row) in self.roles.iter().enumerate() {
+            for group in topology.groups() {
+                let computes = group.iter().filter(|&&a| row[a] == Role::Compute).count();
+                let digitizes = group.iter().filter(|&&a| row[a] == Role::Digitize).count();
+                match topology.mode() {
+                    CouplingMode::NearestNeighbour => {
+                        if computes != 1 || digitizes != 1 {
+                            return Err(format!(
+                                "phase {ph} group {group:?}: {computes} compute / {digitizes} digitize"
+                            ));
+                        }
+                    }
+                    CouplingMode::FlashGroup { refs } => {
+                        if computes != 1 || digitizes != refs {
+                            return Err(format!(
+                                "phase {ph} group {group:?}: {computes} compute / {digitizes} refs"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// MAVs produced per phase across the network.
+    pub fn throughput_per_phase(&self) -> f64 {
+        if self.roles.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self
+            .roles
+            .iter()
+            .map(|row| row.iter().filter(|&&r| r == Role::Compute).count())
+            .sum();
+        total as f64 / self.roles.len() as f64
+    }
+}
+
+/// System-level area/throughput comparison (the paper's §IV-A argument):
+/// given a silicon budget, how much MAV throughput does a dedicated-ADC
+/// design get vs the collaborative design?
+#[derive(Debug, Clone, Copy)]
+pub struct SystemComparison {
+    /// Arrays that fit with one dedicated ADC per array.
+    pub dedicated_arrays: usize,
+    /// Arrays that fit with memory-immersed conversion.
+    pub collaborative_arrays: usize,
+    /// MAV/phase with dedicated ADCs (every array computes every phase).
+    pub dedicated_throughput: f64,
+    /// MAV/phase with interleaved collaboration (half the arrays compute).
+    pub collaborative_throughput: f64,
+}
+
+/// Fill a silicon budget (µm²) with (array + converter) tiles and
+/// compare throughput. Array geometry: `rows × cols` at `tech_nm`.
+pub fn system_comparison(
+    budget_um2: f64,
+    rows: usize,
+    cols: usize,
+    tech_nm: f64,
+    bits: u8,
+) -> SystemComparison {
+    let array = sram_array_area_um2(rows, cols, tech_nm);
+    let dedicated_tile = array + adc_area_um2(AdcStyle::Sar, bits);
+    let collaborative_tile = array + adc_area_um2(AdcStyle::InMemorySar, bits);
+    let dedicated_arrays = (budget_um2 / dedicated_tile) as usize;
+    let collaborative_arrays = (budget_um2 / collaborative_tile) as usize;
+    SystemComparison {
+        dedicated_arrays,
+        collaborative_arrays,
+        dedicated_throughput: dedicated_arrays as f64,
+        // Interleaving: half the arrays compute per phase.
+        collaborative_throughput: collaborative_arrays as f64 / 2.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nn_schedule_alternates() {
+        let t = Topology::test_chip();
+        let s = InterleaveSchedule::build(&t, 4);
+        s.validate(&t).unwrap();
+        assert_eq!(s.role(0, 0), Role::Compute);
+        assert_eq!(s.role(0, 1), Role::Digitize);
+        assert_eq!(s.role(1, 0), Role::Digitize);
+        assert_eq!(s.role(1, 1), Role::Compute);
+    }
+
+    #[test]
+    fn flash_group_rotates_computer() {
+        let t = Topology::new(4, CouplingMode::FlashGroup { refs: 3 });
+        let s = InterleaveSchedule::build(&t, 8);
+        s.validate(&t).unwrap();
+        let computers: Vec<usize> = (0..4)
+            .map(|ph| (0..4).find(|&a| s.role(ph, a) == Role::Compute).unwrap())
+            .collect();
+        assert_eq!(computers, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_schedules_always_valid() {
+        prop::check("interleave schedules valid", 128, |rng| {
+            let mode = if rng.bool() {
+                CouplingMode::NearestNeighbour
+            } else {
+                CouplingMode::FlashGroup { refs: 1 + rng.index(4) }
+            };
+            let n = mode.group_size() * (1 + rng.index(5)) + rng.index(mode.group_size());
+            let t = Topology::new(n, mode);
+            let s = InterleaveSchedule::build(&t, 1 + rng.index(12));
+            s.validate(&t).map_err(|e| e)
+        });
+    }
+
+    #[test]
+    fn nn_throughput_is_half_the_paired_arrays() {
+        let t = Topology::new(8, CouplingMode::NearestNeighbour);
+        let s = InterleaveSchedule::build(&t, 6);
+        assert!((s.throughput_per_phase() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collaboration_wins_when_arrays_are_small() {
+        // The paper's 16×32 arrays: the SAR ADC dwarfs the array, so the
+        // collaborative design fits >2× the arrays and wins throughput.
+        let c = system_comparison(1.0e6, 16, 32, 65.0, 5);
+        assert!(c.collaborative_arrays > 2 * c.dedicated_arrays);
+        assert!(
+            c.collaborative_throughput > c.dedicated_throughput,
+            "collab {} vs dedicated {}",
+            c.collaborative_throughput,
+            c.dedicated_throughput
+        );
+    }
+
+    #[test]
+    fn dedicated_wins_for_huge_arrays() {
+        // Sanity: when the array dwarfs the ADC, dedicated conversion's
+        // 2× duty-cycle advantage dominates — the trade-off is real.
+        let c = system_comparison(1.0e8, 1024, 1024, 65.0, 5);
+        assert!(c.dedicated_throughput > c.collaborative_throughput);
+    }
+}

@@ -1,0 +1,123 @@
+//! CiM array network topologies.
+//!
+//! The fabricated chip (Fig 11) has four 16×32 arrays, A1–A4. A1↔A2
+//! realises SRAM-immersed SAR; A1 coupled to A2–A4 realises the flash /
+//! hybrid modes. Larger meshes tile the same patterns.
+
+use crate::adc::ImmersedMode;
+
+/// How arrays couple for collaborative digitization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CouplingMode {
+    /// Adjacent left/right pairs alternate compute/digitize (Fig 8).
+    NearestNeighbour,
+    /// Groups of `1 + refs` arrays: one computes, `refs` digitize the
+    /// coarse flash stage together (Fig 9). `refs = 2^flash_bits − 1`.
+    FlashGroup { refs: usize },
+}
+
+impl CouplingMode {
+    /// Coupling that realises an [`ImmersedMode`] at `bits` resolution.
+    pub fn for_adc_mode(mode: ImmersedMode, bits: u8) -> Self {
+        match mode {
+            ImmersedMode::Sar => CouplingMode::NearestNeighbour,
+            ImmersedMode::Flash | ImmersedMode::Hybrid { .. } => {
+                CouplingMode::FlashGroup { refs: mode.neighbours(bits) }
+            }
+        }
+    }
+
+    /// Arrays per coupling group.
+    pub fn group_size(&self) -> usize {
+        match self {
+            CouplingMode::NearestNeighbour => 2,
+            CouplingMode::FlashGroup { refs } => 1 + refs,
+        }
+    }
+}
+
+/// A linear arrangement of CiM arrays with a coupling mode.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n_arrays: usize,
+    mode: CouplingMode,
+}
+
+impl Topology {
+    pub fn new(n_arrays: usize, mode: CouplingMode) -> Self {
+        assert!(n_arrays >= mode.group_size(), "not enough arrays for one coupling group");
+        Topology { n_arrays, mode }
+    }
+
+    /// The fabricated test chip: 4 arrays, nearest-neighbour coupling.
+    pub fn test_chip() -> Self {
+        Topology::new(4, CouplingMode::NearestNeighbour)
+    }
+
+    pub fn n_arrays(&self) -> usize {
+        self.n_arrays
+    }
+
+    pub fn mode(&self) -> CouplingMode {
+        self.mode
+    }
+
+    /// Complete coupling groups (leftover arrays stay idle).
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let g = self.mode.group_size();
+        (0..self.n_arrays / g).map(|i| (i * g..(i + 1) * g).collect()).collect()
+    }
+
+    /// Arrays not in any complete group.
+    pub fn idle_arrays(&self) -> usize {
+        self.n_arrays % self.mode.group_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coupling_from_adc_mode() {
+        assert_eq!(
+            CouplingMode::for_adc_mode(ImmersedMode::Sar, 5),
+            CouplingMode::NearestNeighbour
+        );
+        assert_eq!(
+            CouplingMode::for_adc_mode(ImmersedMode::Hybrid { flash_bits: 2 }, 5),
+            CouplingMode::FlashGroup { refs: 3 }
+        );
+        assert_eq!(
+            CouplingMode::for_adc_mode(ImmersedMode::Flash, 5),
+            CouplingMode::FlashGroup { refs: 31 }
+        );
+    }
+
+    #[test]
+    fn test_chip_groups() {
+        let t = Topology::test_chip();
+        assert_eq!(t.groups(), vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(t.idle_arrays(), 0);
+    }
+
+    #[test]
+    fn hybrid_grouping_on_test_chip() {
+        // A1 + A2..A4 as references: exactly one group of 4.
+        let t = Topology::new(4, CouplingMode::FlashGroup { refs: 3 });
+        assert_eq!(t.groups(), vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn leftovers_are_idle() {
+        let t = Topology::new(7, CouplingMode::NearestNeighbour);
+        assert_eq!(t.groups().len(), 3);
+        assert_eq!(t.idle_arrays(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough arrays")]
+    fn rejects_undersized_network() {
+        Topology::new(3, CouplingMode::FlashGroup { refs: 3 });
+    }
+}

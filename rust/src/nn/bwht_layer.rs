@@ -1,0 +1,483 @@
+//! The BWHT compression layer (paper §II-B, eq. (3)).
+//!
+//! Replaces a 1×1 convolution: per spatial position, the channel vector
+//! is (block-)Walsh–Hadamard transformed, soft-thresholded with
+//! *trainable* per-coefficient thresholds `T`, and transformed back.
+//! The transform itself is parameter-free — the layer's only parameters
+//! are `T` and a scalar reconstruction gain — which is where the ~87%
+//! MobileNetV2 parameter reduction comes from (Fig 1(c)).
+//!
+//! Execution modes ([`BwhtExec`]):
+//! - `Float` — exact transform (training default).
+//! - `QuantDigital` — bit-exact model of the crossbar's bitplane path:
+//!   inputs quantized to `input_bits`, each plane's ±1 sums quantized to
+//!   **one bit** (the ADC-free extreme), planes reassembled, STE
+//!   backward. This is what "training against 1-bit quantization"
+//!   (paper §III-B, Fig 5) means.
+//! - `Analog` — inference through the [`crate::cim`] crossbar simulator
+//!   at a given operating point (noise, settling, early termination) —
+//!   feeds the accuracy axes of Figs 7 and 13(c,d).
+
+use crate::cim::{BitplaneEngine, Crossbar, CrossbarConfig, EarlyTermination};
+use crate::util::Rng;
+use crate::wht::{fwht_inplace, Bwht, BwhtLayout};
+
+use super::layer::Layer;
+use super::quant::UniformQuantizer;
+use super::tensor::Tensor;
+
+/// Execution mode of a BWHT layer.
+#[derive(Debug, Clone)]
+pub enum BwhtExec {
+    /// Exact float transform.
+    Float,
+    /// Bitplane path with 1-bit product-sum quantization (bit-exact
+    /// digital model of the crossbar).
+    QuantDigital { input_bits: u8 },
+    /// Analog crossbar simulation (inference only).
+    Analog {
+        input_bits: u8,
+        config: CrossbarConfig,
+        early_term: Option<EarlyTermination>,
+        seed: u64,
+    },
+}
+
+/// BWHT + soft-threshold layer over the channel dimension.
+pub struct BwhtLayer {
+    /// Logical channel count (input == output).
+    pub channels: usize,
+    layout: BwhtLayout,
+    bwht: Bwht,
+    /// Trainable per-coefficient thresholds (padded frequency domain).
+    t: Vec<f32>,
+    gt: Vec<f32>,
+    /// Trainable reconstruction gain for the quantized path.
+    gamma: f32,
+    ggamma: f32,
+    /// Input quantizer range for the quantized/analog paths.
+    pub in_quant_hi: f32,
+    pub exec: BwhtExec,
+    /// L1-style pull on T (the paper's Fig 6 "unique loss" driving T
+    /// outward to widen the dead band): dL/dT −= t_reg each step.
+    pub t_reg: f32,
+    // caches
+    cache_z: Vec<Vec<f32>>,    // thresholded-domain pre-activation per pixel
+    cache_gout: Vec<Vec<f32>>, // padded grad per pixel (for T grads)
+    cache_shape: Vec<usize>,
+    // analog engine (lazily built), and accumulated termination stats
+    analog: Option<BitplaneEngine>,
+    analog_rng: Option<Rng>,
+    pub term_processed: u64,
+    pub term_skipped: u64,
+}
+
+impl BwhtLayer {
+    /// New layer for `channels` with Hadamard blocks of at most
+    /// `max_block` (the crossbar size the layer maps onto).
+    pub fn new(channels: usize, max_block: usize, rng: &mut Rng) -> Self {
+        let layout = BwhtLayout::new(channels, max_block);
+        let padded = layout.padded_len();
+        let m = layout.block_size as f32;
+        BwhtLayer {
+            channels,
+            layout,
+            bwht: Bwht::new(layout),
+            // Small positive random thresholds to break symmetry.
+            t: (0..padded).map(|_| (0.01 + 0.02 * rng.uniform()) as f32).collect(),
+            gt: vec![0.0; padded],
+            gamma: m.sqrt() / 2.0,
+            ggamma: 0.0,
+            in_quant_hi: 4.0,
+            exec: BwhtExec::Float,
+            t_reg: 0.0,
+            cache_z: Vec::new(),
+            cache_gout: Vec::new(),
+            cache_shape: Vec::new(),
+            analog: None,
+            analog_rng: None,
+            term_processed: 0,
+            term_skipped: 0,
+        }
+    }
+
+    pub fn layout(&self) -> BwhtLayout {
+        self.layout
+    }
+
+    pub fn thresholds(&self) -> &[f32] {
+        &self.t
+    }
+
+    /// Overwrite thresholds (padded length) — AOT weight import, tests.
+    pub fn set_thresholds(&mut self, t: Vec<f32>) {
+        assert_eq!(t.len(), self.layout.padded_len());
+        self.t = t;
+    }
+
+    pub fn gamma(&self) -> f32 {
+        self.gamma
+    }
+
+    pub fn set_gamma(&mut self, g: f32) {
+        self.gamma = g;
+    }
+
+    pub fn set_exec(&mut self, exec: BwhtExec) {
+        self.exec = exec;
+        self.analog = None;
+        self.analog_rng = None;
+    }
+
+    /// Iterate pixels: a CHW tensor yields H·W channel vectors; a 1-D
+    /// tensor yields itself.
+    fn pixel_count(shape: &[usize]) -> usize {
+        match shape.len() {
+            1 => 1,
+            3 => shape[1] * shape[2],
+            s => panic!("BwhtLayer expects 1-D or 3-D tensors, got {s}-D"),
+        }
+    }
+
+    fn gather_pixel(x: &Tensor, pix: usize, out: &mut [f32]) {
+        match x.shape().len() {
+            1 => out[..x.len()].copy_from_slice(x.data()),
+            3 => {
+                let (c, h, w) = x.dims3();
+                let (py, px) = (pix / w, pix % w);
+                for ci in 0..c {
+                    out[ci] = x.data()[(ci * h + py) * w + px];
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn scatter_pixel(y: &mut Tensor, pix: usize, vals: &[f32]) {
+        match y.shape().len() {
+            1 => y.data_mut().copy_from_slice(&vals[..]),
+            3 => {
+                let (c, h, w) = y.dims3();
+                let (py, px) = (pix / w, pix % w);
+                for ci in 0..c {
+                    y.data_mut()[(ci * h + py) * w + px] = vals[ci];
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Float path: z = H·pad(x); the quantized paths replace z with the
+    /// bitplane reconstruction. Returns z (padded frequency domain).
+    fn transform_forward(&mut self, xs: &[f32], rng_scratch: &mut Option<Rng>) -> Vec<f32> {
+        match &self.exec {
+            BwhtExec::Float => {
+                let mut z = self.bwht.pad(xs);
+                self.bwht.forward_padded_inplace(&mut z);
+                z
+            }
+            BwhtExec::QuantDigital { input_bits } => {
+                let q = UniformQuantizer::unsigned(*input_bits, self.in_quant_hi);
+                let levels = q.levels_of(xs);
+                let padded = self.layout.padded_len();
+                let bs = self.layout.block_size;
+                let mut z = vec![0.0f32; padded];
+                let mut plane = vec![0.0f32; bs];
+                // Per block, per plane: transform the {0,1} plane and
+                // 1-bit quantize each coefficient's sum.
+                for b in 0..self.layout.blocks {
+                    for p in 0..*input_bits {
+                        for i in 0..bs {
+                            let idx = b * bs + i;
+                            let lv = if idx < levels.len() { levels[idx] } else { 0 };
+                            plane[i] = ((lv >> p) & 1) as f32;
+                        }
+                        fwht_inplace(&mut plane);
+                        let w = (1u32 << p) as f32;
+                        for i in 0..bs {
+                            let s = if plane[i] > 0.0 { 1.0 } else { -1.0 };
+                            z[b * bs + i] += w * s;
+                        }
+                    }
+                }
+                // Rescale into the float transform's units: the exact
+                // z for level-valued inputs is (H·levels)·step; gamma
+                // absorbs the 1-bit quantization's magnitude loss.
+                let step = self.in_quant_hi / (q.levels() - 1) as f32;
+                for v in &mut z {
+                    *v *= self.gamma * step;
+                }
+                z
+            }
+            BwhtExec::Analog { input_bits, config, early_term, seed } => {
+                if self.analog.is_none() {
+                    let mut frng = Rng::new(*seed);
+                    let xb = Crossbar::new(
+                        crate::cim::SignMatrix::hadamard(self.layout.block_size),
+                        *config,
+                        &mut frng,
+                    );
+                    let mut eng = BitplaneEngine::new(xb, *input_bits);
+                    eng.early_term = *early_term;
+                    self.analog = Some(eng);
+                    *rng_scratch = Some(Rng::new(seed ^ 0xa5a5_5a5a));
+                }
+                let q = UniformQuantizer::unsigned(*input_bits, self.in_quant_hi);
+                let step = self.in_quant_hi / (q.levels() - 1) as f32;
+                let levels = q.levels_of(xs);
+                let padded = self.layout.padded_len();
+                let bs = self.layout.block_size;
+                let mut z = vec![0.0f32; padded];
+                let eng = self.analog.as_mut().unwrap();
+                let rng = rng_scratch.as_mut().expect("analog rng set with engine");
+                for b in 0..self.layout.blocks {
+                    let block: Vec<u32> = (0..bs)
+                        .map(|i| {
+                            let idx = b * bs + i;
+                            if idx < levels.len() {
+                                levels[idx]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    let out = eng.transform(&block, rng);
+                    self.term_processed += out.term.processed;
+                    self.term_skipped += out.term.skipped;
+                    for i in 0..bs {
+                        z[b * bs + i] = out.values[i] * self.gamma * step;
+                    }
+                }
+                z
+            }
+        }
+    }
+}
+
+impl Layer for BwhtLayer {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        let pixels = Self::pixel_count(x.shape());
+        self.cache_shape = x.shape().to_vec();
+        self.cache_z = Vec::with_capacity(pixels);
+        let mut y = x.clone();
+        let padded = self.layout.padded_len();
+        let mut xbuf = vec![0.0f32; padded.max(self.channels)];
+        // Take the analog RNG out to avoid double-borrow of self.
+        let mut arng = self.analog_rng.take();
+        for pix in 0..pixels {
+            xbuf[..].iter_mut().for_each(|v| *v = 0.0);
+            Self::gather_pixel(x, pix, &mut xbuf);
+            let z = self.transform_forward(&xbuf[..self.channels], &mut arng);
+            // Soft threshold per coefficient.
+            let mut yt = z.clone();
+            for (v, &t) in yt.iter_mut().zip(&self.t) {
+                *v = crate::wht::soft_threshold(*v, t.abs());
+            }
+            self.cache_z.push(z);
+            // Inverse transform and truncate.
+            let out = self.bwht.inverse(&yt);
+            Self::scatter_pixel(&mut y, pix, &out);
+        }
+        self.analog_rng = arng;
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        // Gradients flow through the float linearisation (STE for the
+        // quantized paths): out = H S_T(z) / m, z = H x.
+        let pixels = Self::pixel_count(g.shape());
+        assert_eq!(self.cache_z.len(), pixels, "backward without forward");
+        let mut gx = g.clone();
+        let padded = self.layout.padded_len();
+        let bs = self.layout.block_size as f32;
+        let mut gbuf = vec![0.0f32; padded.max(self.channels)];
+        self.cache_gout = Vec::new();
+        for pix in 0..pixels {
+            gbuf.iter_mut().for_each(|v| *v = 0.0);
+            Self::gather_pixel(g, pix, &mut gbuf[..]);
+            // dL/dyt = Hᵀ g / m (inverse transform is H/m; H symmetric).
+            let mut gy = vec![0.0f32; padded];
+            gy[..self.channels].copy_from_slice(&gbuf[..self.channels]);
+            for chunk in gy.chunks_exact_mut(self.layout.block_size) {
+                fwht_inplace(chunk);
+                for v in chunk.iter_mut() {
+                    *v /= bs;
+                }
+            }
+            let z = &self.cache_z[pix];
+            // Threshold grads + pass-through mask.
+            let mut gz = vec![0.0f32; padded];
+            for i in 0..padded {
+                let t = self.t[i].abs();
+                if z[i].abs() > t {
+                    gz[i] = gy[i];
+                    // dS/dT = −sign(z); d|T|/dT = sign(T).
+                    let sgn_t = if self.t[i] >= 0.0 { 1.0 } else { -1.0 };
+                    self.gt[i] += -z[i].signum() * gy[i] * sgn_t;
+                }
+            }
+            // dL/dx = Hᵀ gz = H gz, truncated.
+            for chunk in gz.chunks_exact_mut(self.layout.block_size) {
+                fwht_inplace(chunk);
+            }
+            Self::scatter_pixel(&mut gx, pix, &gz);
+        }
+        gx
+    }
+
+    fn step(&mut self, lr: f32, batch: usize) {
+        let scale = 1.0 / batch as f32;
+        for i in 0..self.t.len() {
+            // t_reg pulls |T| outward (widens the dead band — Fig 6's
+            // workload-reduction loss term).
+            let reg = -self.t_reg * if self.t[i] >= 0.0 { 1.0 } else { -1.0 };
+            self.t[i] -= lr * (self.gt[i] * scale + reg);
+            self.gt[i] = 0.0;
+        }
+        self.gamma -= lr * self.ggamma * scale;
+        self.ggamma = 0.0;
+    }
+
+    fn param_count(&self) -> usize {
+        // Thresholds + gamma. The transform itself is parameter-free.
+        self.t.len() + 1
+    }
+
+    fn mac_count(&self) -> usize {
+        // Two blockwise transforms per pixel, counted as add-ops
+        // (a WHT has no multiplies; Fig 1(d) counts these ops).
+        2 * self.bwht.add_ops()
+    }
+
+    fn name(&self) -> &'static str {
+        "bwht"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(ch: usize, mb: usize, seed: u64) -> (BwhtLayer, Rng) {
+        let mut rng = Rng::new(seed);
+        let l = BwhtLayer::new(ch, mb, &mut rng);
+        (l, rng)
+    }
+
+    #[test]
+    fn zero_threshold_float_is_identity() {
+        let (mut l, mut rng) = layer(16, 16, 1);
+        l.t.iter_mut().for_each(|t| *t = 0.0);
+        let x = Tensor::vec1(&rng.normal_vec(16));
+        let y = l.forward(&x);
+        for (a, b) in y.data().iter().zip(x.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn large_threshold_zeroes_everything() {
+        let (mut l, mut rng) = layer(16, 16, 2);
+        l.t.iter_mut().for_each(|t| *t = 1e6);
+        let x = Tensor::vec1(&rng.normal_vec(16));
+        let y = l.forward(&x);
+        assert!(y.data().iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn works_on_chw_tensors_per_pixel() {
+        let (mut l, mut rng) = layer(8, 8, 3);
+        l.t.iter_mut().for_each(|t| *t = 0.0);
+        let x = Tensor::from_vec(&[8, 2, 2], rng.normal_vec(32));
+        let y = l.forward(&x);
+        for (a, b) in y.data().iter().zip(x.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gradient_check_float_mode() {
+        let (mut l, mut rng) = layer(8, 8, 4);
+        // Fixed moderate thresholds so some coefficients pass, some not.
+        l.t.iter_mut().for_each(|t| *t = 0.3);
+        let x = Tensor::vec1(&rng.normal_vec(8));
+        let y = l.forward(&x);
+        let ones = Tensor::from_vec(y.shape(), vec![1.0; y.len()]);
+        let gx = l.backward(&ones);
+        let eps = 1e-3f32;
+        for i in 0..8 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fp: f32 = l.forward(&xp).data().iter().sum();
+            let fm: f32 = l.forward(&xm).data().iter().sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - gx.data()[i]).abs() < 2e-2 * (1.0 + num.abs()),
+                "i={i}: num {num} vs ana {}",
+                gx.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn quant_digital_correlates_with_float() {
+        let (mut lf, mut rng) = layer(32, 32, 5);
+        lf.t.iter_mut().for_each(|t| *t = 0.0);
+        let (mut lq, _) = layer(32, 32, 5);
+        lq.t.iter_mut().for_each(|t| *t = 0.0);
+        lq.set_exec(BwhtExec::QuantDigital { input_bits: 4 });
+        let mut dot = 0.0f64;
+        let mut nf = 0.0f64;
+        let mut nq = 0.0f64;
+        for _ in 0..10 {
+            let x = Tensor::vec1(
+                &(0..32).map(|_| (rng.uniform() * 3.0) as f32).collect::<Vec<_>>(),
+            );
+            let yf = lf.forward(&x);
+            let yq = lq.forward(&x);
+            for (a, b) in yf.data().iter().zip(yq.data()) {
+                dot += *a as f64 * *b as f64;
+                nf += (*a as f64).powi(2);
+                nq += (*b as f64).powi(2);
+            }
+        }
+        let corr = dot / (nf.sqrt() * nq.sqrt() + 1e-12);
+        assert!(corr > 0.4, "quantized path decorrelated: {corr}");
+    }
+
+    #[test]
+    fn analog_mode_runs_and_counts_termination() {
+        let (mut l, _) = layer(16, 16, 6);
+        l.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::ideal(),
+            early_term: Some(EarlyTermination::exact(8.0)),
+            seed: 42,
+        });
+        let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());
+        let _ = l.forward(&x);
+        assert!(l.term_processed > 0);
+        assert_eq!(l.term_processed + l.term_skipped, 16 * 4);
+    }
+
+    #[test]
+    fn param_count_is_tiny_vs_dense_equivalent() {
+        let (l, _) = layer(64, 64, 7);
+        // 1×1 conv with 64→64 channels: 4160 params. BWHT: 65.
+        assert!(l.param_count() < 100);
+        assert_eq!(l.param_count(), 64 + 1);
+    }
+
+    #[test]
+    fn non_pow2_channels_round_trip() {
+        let (mut l, mut rng) = layer(24, 16, 8);
+        l.t.iter_mut().for_each(|t| *t = 0.0);
+        let x = Tensor::vec1(&rng.normal_vec(24));
+        let y = l.forward(&x);
+        for (a, b) in y.data().iter().zip(x.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Procedural datasets (DESIGN.md §Substitutions #3).
+//!
+//! Stand-ins for the paper's CIFAR-10 / MNIST workloads that are small
+//! enough to train in seconds on one core but structured enough that the
+//! paper's compression / quantization trade-offs show their shape:
+//!
+//! - [`Dataset::oriented_patterns`] — "edge-sensor" images: an oriented
+//!   grating + blob per class with additive noise; classes are angle
+//!   bins. Stresses the frequency-domain layers exactly where WHT
+//!   compression lives (orientation = sequency content).
+//! - [`Dataset::digits`] — 10-class procedural seven-segment-ish glyphs
+//!   with jitter and noise (the Fig 13(c,d) "MNIST character
+//!   recognition" stand-in).
+
+use crate::util::Rng;
+
+use super::tensor::Tensor;
+
+/// A labelled image-classification dataset (CHW tensors).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub side: usize,
+}
+
+impl Dataset {
+    /// Oriented-grating patterns: `classes` angle bins, `n` samples,
+    /// `side × side` single-channel images in [0, 1].
+    pub fn oriented_patterns(n: usize, classes: usize, side: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.index(classes);
+            let angle = std::f64::consts::PI * (class as f64 + 0.5 * rng.uniform()) / classes as f64;
+            let freq = 2.0 + (class % 3) as f64;
+            let (s, c) = angle.sin_cos();
+            let phase = rng.uniform() * std::f64::consts::TAU;
+            let mut img = Tensor::zeros(&[1, side, side]);
+            for y in 0..side {
+                for x in 0..side {
+                    let u = (x as f64 / side as f64 - 0.5) * c + (y as f64 / side as f64 - 0.5) * s;
+                    let v = (0.5 + 0.5 * (std::f64::consts::TAU * freq * u + phase).sin())
+                        + 0.15 * rng.normal();
+                    img.set3(0, y, x, v.clamp(0.0, 1.0) as f32);
+                }
+            }
+            images.push(img);
+            labels.push(class);
+        }
+        Dataset { images, labels, classes, side }
+    }
+
+    /// Procedural digit glyphs (10 classes): seven-segment masks with
+    /// positional jitter, stroke-width variation and noise.
+    pub fn digits(n: usize, side: usize, seed: u64) -> Self {
+        // Segment layout: 0 top, 1 top-left, 2 top-right, 3 middle,
+        // 4 bottom-left, 5 bottom-right, 6 bottom.
+        const GLYPHS: [[bool; 7]; 10] = [
+            [true, true, true, false, true, true, true],    // 0
+            [false, false, true, false, false, true, false], // 1
+            [true, false, true, true, true, false, true],   // 2
+            [true, false, true, true, false, true, true],   // 3
+            [false, true, true, true, false, true, false],  // 4
+            [true, true, false, true, false, true, true],   // 5
+            [true, true, false, true, true, true, true],    // 6
+            [true, false, true, false, false, true, false], // 7
+            [true, true, true, true, true, true, true],     // 8
+            [true, true, true, true, false, true, true],    // 9
+        ];
+        let mut rng = Rng::new(seed);
+        let mut images = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let digit = rng.index(10);
+            let segs = GLYPHS[digit];
+            let jx = (rng.uniform() * 0.2 - 0.1) as f32;
+            let jy = (rng.uniform() * 0.2 - 0.1) as f32;
+            let thick = 0.08 + 0.05 * rng.uniform() as f32;
+            let mut img = Tensor::zeros(&[1, side, side]);
+            for y in 0..side {
+                for x in 0..side {
+                    // Normalised glyph coords: x in [0.25,0.75], y in [0.1,0.9].
+                    let u = x as f32 / side as f32 - jx;
+                    let v = y as f32 / side as f32 - jy;
+                    let lit = segs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &on)| on)
+                        .any(|(i, _)| segment_hit(i, u, v, thick as f32));
+                    let noise = 0.1 * rng.normal() as f32;
+                    img.set3(0, y, x, ((if lit { 0.9 } else { 0.1 }) + noise).clamp(0.0, 1.0));
+                }
+            }
+            images.push(img);
+            labels.push(digit);
+        }
+        Dataset { images, labels, classes: 10, side }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Deterministic train/test split (fraction to train).
+    pub fn split(self, train_frac: f64) -> (Dataset, Dataset) {
+        let n_train = (self.len() as f64 * train_frac) as usize;
+        let (ti, vi) = (
+            self.images[..n_train].to_vec(),
+            self.images[n_train..].to_vec(),
+        );
+        let (tl, vl) = (
+            self.labels[..n_train].to_vec(),
+            self.labels[n_train..].to_vec(),
+        );
+        (
+            Dataset { images: ti, labels: tl, classes: self.classes, side: self.side },
+            Dataset { images: vi, labels: vl, classes: self.classes, side: self.side },
+        )
+    }
+}
+
+/// Hit-test one seven-segment segment in normalised glyph coordinates.
+fn segment_hit(seg: usize, u: f32, v: f32, t: f32) -> bool {
+    let hline = |cy: f32, u: f32, v: f32| (v - cy).abs() < t && (0.3..=0.7).contains(&u);
+    let vline = |cx: f32, lo: f32, hi: f32, u: f32, v: f32| {
+        (u - cx).abs() < t && (lo..=hi).contains(&v)
+    };
+    match seg {
+        0 => hline(0.15, u, v),
+        1 => vline(0.3, 0.15, 0.5, u, v),
+        2 => vline(0.7, 0.15, 0.5, u, v),
+        3 => hline(0.5, u, v),
+        4 => vline(0.3, 0.5, 0.85, u, v),
+        5 => vline(0.7, 0.5, 0.85, u, v),
+        6 => hline(0.85, u, v),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oriented_patterns_shapes_and_range() {
+        let d = Dataset::oriented_patterns(50, 8, 16, 1);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d.images[0].shape(), &[1, 16, 16]);
+        for img in &d.images {
+            assert!(img.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        assert!(d.labels.iter().all(|&l| l < 8));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::oriented_patterns(10, 4, 8, 7);
+        let b = Dataset::oriented_patterns(10, 4, 8, 7);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images[3].data(), b.images[3].data());
+        let c = Dataset::oriented_patterns(10, 4, 8, 8);
+        assert_ne!(a.images[3].data(), c.images[3].data());
+    }
+
+    #[test]
+    fn digits_cover_all_classes() {
+        let d = Dataset::digits(200, 12, 3);
+        let mut seen = [false; 10];
+        for &l in &d.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "labels={:?}", seen);
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // Mean image of class 1 and class 8 must differ markedly.
+        let d = Dataset::digits(400, 12, 5);
+        let mean_of = |cls: usize| -> Vec<f32> {
+            let mut acc = vec![0.0f32; 144];
+            let mut n = 0;
+            for (img, &l) in d.images.iter().zip(&d.labels) {
+                if l == cls {
+                    for (a, &v) in acc.iter_mut().zip(img.data()) {
+                        *a += v;
+                    }
+                    n += 1;
+                }
+            }
+            acc.iter().map(|v| v / n as f32).collect()
+        };
+        let m1 = mean_of(1);
+        let m8 = mean_of(8);
+        let dist: f32 = m1.iter().zip(&m8).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist > 5.0, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = Dataset::digits(100, 12, 9);
+        let (tr, te) = d.split(0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+}

@@ -1,0 +1,733 @@
+//! Hand-rolled backprop layers.
+//!
+//! Sample-at-a-time training (batch gradients are accumulated across
+//! `backward` calls and applied by `step`). Every layer reports its
+//! parameter and MAC counts so the compression accounting of Figs 1(c,d)
+//! is structural, not estimated.
+
+use crate::util::Rng;
+
+use super::tensor::Tensor;
+
+/// Common layer interface (forward caches what backward needs).
+pub trait Layer: Send {
+    /// Forward pass; caches activations for backward.
+    fn forward(&mut self, x: &Tensor) -> Tensor;
+    /// Backward pass: gradient w.r.t. input; accumulates param grads.
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor;
+    /// Apply accumulated gradients (averaged over `batch`) and clear.
+    fn step(&mut self, lr: f32, batch: usize);
+    /// Trainable parameter count.
+    fn param_count(&self) -> usize;
+    /// Multiply-accumulate ops for one forward pass.
+    fn mac_count(&self) -> usize;
+    /// Human-readable kind (reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Kaiming-ish init scale.
+fn init_std(fan_in: usize) -> f32 {
+    (2.0 / fan_in as f32).sqrt()
+}
+
+// ---------------------------------------------------------------- Dense
+
+/// Fully connected layer `y = Wx + b`.
+pub struct Dense {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    w: Vec<f32>,
+    b: Vec<f32>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    // momentum buffers
+    mw: Vec<f32>,
+    mb: Vec<f32>,
+    cache_x: Vec<f32>,
+}
+
+impl Dense {
+    /// Overwrite weights/bias (e.g. from AOT-exported JAX parameters).
+    /// `w` is `[out_dim][in_dim]` row-major.
+    pub fn set_weights(&mut self, w: Vec<f32>, b: Vec<f32>) {
+        assert_eq!(w.len(), self.in_dim * self.out_dim);
+        assert_eq!(b.len(), self.out_dim);
+        self.w = w;
+        self.b = b;
+    }
+
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        let std = init_std(in_dim);
+        Dense {
+            in_dim,
+            out_dim,
+            w: (0..in_dim * out_dim).map(|_| rng.normal() as f32 * std).collect(),
+            b: vec![0.0; out_dim],
+            gw: vec![0.0; in_dim * out_dim],
+            gb: vec![0.0; out_dim],
+            mw: vec![0.0; in_dim * out_dim],
+            mb: vec![0.0; out_dim],
+            cache_x: Vec::new(),
+        }
+    }
+}
+
+impl Layer for Dense {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        assert_eq!(x.len(), self.in_dim, "Dense input size");
+        self.cache_x = x.data().to_vec();
+        let mut y = vec![0.0f32; self.out_dim];
+        for o in 0..self.out_dim {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x.data()) {
+                acc += wi * xi;
+            }
+            y[o] = acc;
+        }
+        Tensor::vec1(&y)
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        assert_eq!(g.len(), self.out_dim);
+        let mut gx = vec![0.0f32; self.in_dim];
+        for o in 0..self.out_dim {
+            let go = g.data()[o];
+            self.gb[o] += go;
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            let grow = &mut self.gw[o * self.in_dim..(o + 1) * self.in_dim];
+            for i in 0..self.in_dim {
+                grow[i] += go * self.cache_x[i];
+                gx[i] += go * row[i];
+            }
+        }
+        Tensor::vec1(&gx)
+    }
+
+    fn step(&mut self, lr: f32, batch: usize) {
+        let scale = 1.0 / batch as f32;
+        for i in 0..self.w.len() {
+            self.mw[i] = 0.9 * self.mw[i] + self.gw[i] * scale;
+            self.w[i] -= lr * self.mw[i];
+            self.gw[i] = 0.0;
+        }
+        for o in 0..self.out_dim {
+            self.mb[o] = 0.9 * self.mb[o] + self.gb[o] * scale;
+            self.b[o] -= lr * self.mb[o];
+            self.gb[o] = 0.0;
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn mac_count(&self) -> usize {
+        self.in_dim * self.out_dim
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+}
+
+// --------------------------------------------------------------- Conv2d
+
+/// 2-D convolution, CHW, stride 1, same padding, odd kernel.
+pub struct Conv2d {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub hw: (usize, usize),
+    w: Vec<f32>, // [out_ch, in_ch, k, k]
+    b: Vec<f32>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    mw: Vec<f32>,
+    mb: Vec<f32>,
+    cache_x: Tensor,
+}
+
+impl Conv2d {
+    pub fn new(in_ch: usize, out_ch: usize, k: usize, hw: (usize, usize), rng: &mut Rng) -> Self {
+        assert!(k % 2 == 1, "odd kernels only");
+        let n = out_ch * in_ch * k * k;
+        let std = init_std(in_ch * k * k);
+        Conv2d {
+            in_ch,
+            out_ch,
+            k,
+            hw,
+            w: (0..n).map(|_| rng.normal() as f32 * std).collect(),
+            b: vec![0.0; out_ch],
+            gw: vec![0.0; n],
+            gb: vec![0.0; out_ch],
+            mw: vec![0.0; n],
+            mb: vec![0.0; out_ch],
+            cache_x: Tensor::zeros(&[1, 1, 1]),
+        }
+    }
+
+    #[inline]
+    fn widx(&self, o: usize, i: usize, dy: usize, dx: usize) -> usize {
+        ((o * self.in_ch + i) * self.k + dy) * self.k + dx
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        let (c, h, w) = x.dims3();
+        assert_eq!(c, self.in_ch);
+        assert_eq!((h, w), self.hw);
+        self.cache_x = x.clone();
+        let r = (self.k / 2) as isize;
+        let mut y = Tensor::zeros(&[self.out_ch, h, w]);
+        for o in 0..self.out_ch {
+            for yy in 0..h {
+                for xx in 0..w {
+                    let mut acc = self.b[o];
+                    for i in 0..self.in_ch {
+                        for dy in -r..=r {
+                            let sy = yy as isize + dy;
+                            if sy < 0 || sy >= h as isize {
+                                continue;
+                            }
+                            for dx in -r..=r {
+                                let sx = xx as isize + dx;
+                                if sx < 0 || sx >= w as isize {
+                                    continue;
+                                }
+                                let wv = self.w[self.widx(
+                                    o,
+                                    i,
+                                    (dy + r) as usize,
+                                    (dx + r) as usize,
+                                )];
+                                acc += wv * x.at3(i, sy as usize, sx as usize);
+                            }
+                        }
+                    }
+                    y.set3(o, yy, xx, acc);
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let (c, h, w) = self.cache_x.dims3();
+        let r = (self.k / 2) as isize;
+        let mut gx = Tensor::zeros(&[c, h, w]);
+        for o in 0..self.out_ch {
+            for yy in 0..h {
+                for xx in 0..w {
+                    let go = g.at3(o, yy, xx);
+                    self.gb[o] += go;
+                    for i in 0..self.in_ch {
+                        for dy in -r..=r {
+                            let sy = yy as isize + dy;
+                            if sy < 0 || sy >= h as isize {
+                                continue;
+                            }
+                            for dx in -r..=r {
+                                let sx = xx as isize + dx;
+                                if sx < 0 || sx >= w as isize {
+                                    continue;
+                                }
+                                let wi = self.widx(o, i, (dy + r) as usize, (dx + r) as usize);
+                                self.gw[wi] += go * self.cache_x.at3(i, sy as usize, sx as usize);
+                                let cur = gx.at3(i, sy as usize, sx as usize);
+                                gx.set3(i, sy as usize, sx as usize, cur + go * self.w[wi]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        gx
+    }
+
+    fn step(&mut self, lr: f32, batch: usize) {
+        let scale = 1.0 / batch as f32;
+        for i in 0..self.w.len() {
+            self.mw[i] = 0.9 * self.mw[i] + self.gw[i] * scale;
+            self.w[i] -= lr * self.mw[i];
+            self.gw[i] = 0.0;
+        }
+        for o in 0..self.out_ch {
+            self.mb[o] = 0.9 * self.mb[o] + self.gb[o] * scale;
+            self.b[o] -= lr * self.mb[o];
+            self.gb[o] = 0.0;
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn mac_count(&self) -> usize {
+        self.out_ch * self.in_ch * self.k * self.k * self.hw.0 * self.hw.1
+    }
+
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+}
+
+// ----------------------------------------------------------- activations
+
+/// ReLU.
+#[derive(Default)]
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    pub fn new() -> Self {
+        Relu { mask: Vec::new() }
+    }
+}
+
+impl Layer for Relu {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        self.mask = x.data().iter().map(|&v| v > 0.0).collect();
+        x.clone().map(|v| v.max(0.0))
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let mut out = g.clone();
+        for (v, &m) in out.data_mut().iter_mut().zip(&self.mask) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, _lr: f32, _batch: usize) {}
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+}
+
+/// Leaky ReLU (`slope·x` for x < 0). The conv miniatures use this
+/// instead of plain ReLU: at their size a bad init can kill every unit
+/// in a layer (dead-ReLU cascade), and the leak keeps gradients alive —
+/// training becomes seed-robust instead of seed-lucky.
+pub struct LeakyRelu {
+    slope: f32,
+    mask: Vec<bool>,
+}
+
+impl LeakyRelu {
+    pub fn new(slope: f32) -> Self {
+        LeakyRelu { slope, mask: Vec::new() }
+    }
+}
+
+impl Layer for LeakyRelu {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        self.mask = x.data().iter().map(|&v| v > 0.0).collect();
+        let s = self.slope;
+        x.clone().map(|v| if v > 0.0 { v } else { s * v })
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let mut out = g.clone();
+        for (v, &m) in out.data_mut().iter_mut().zip(&self.mask) {
+            if !m {
+                *v *= self.slope;
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, _lr: f32, _batch: usize) {}
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "leaky_relu"
+    }
+}
+
+/// Per-channel affine `y = a·x + c` (batch-norm stand-in that trains
+/// sample-at-a-time).
+pub struct BatchScale {
+    ch: usize,
+    a: Vec<f32>,
+    c: Vec<f32>,
+    ga: Vec<f32>,
+    gc: Vec<f32>,
+    cache_x: Tensor,
+}
+
+impl BatchScale {
+    pub fn new(ch: usize) -> Self {
+        BatchScale {
+            ch,
+            a: vec![1.0; ch],
+            c: vec![0.0; ch],
+            ga: vec![0.0; ch],
+            gc: vec![0.0; ch],
+            cache_x: Tensor::zeros(&[1, 1, 1]),
+        }
+    }
+}
+
+impl Layer for BatchScale {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        let (c, h, w) = x.dims3();
+        assert_eq!(c, self.ch);
+        self.cache_x = x.clone();
+        let mut y = x.clone();
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    y.set3(ci, hi, wi, self.a[ci] * x.at3(ci, hi, wi) + self.c[ci]);
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let (c, h, w) = self.cache_x.dims3();
+        let mut gx = g.clone();
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let gv = g.at3(ci, hi, wi);
+                    self.ga[ci] += gv * self.cache_x.at3(ci, hi, wi);
+                    self.gc[ci] += gv;
+                    gx.set3(ci, hi, wi, gv * self.a[ci]);
+                }
+            }
+        }
+        gx
+    }
+
+    fn step(&mut self, lr: f32, batch: usize) {
+        let scale = 1.0 / batch as f32;
+        for i in 0..self.ch {
+            self.a[i] -= lr * self.ga[i] * scale;
+            self.c[i] -= lr * self.gc[i] * scale;
+            self.ga[i] = 0.0;
+            self.gc[i] = 0.0;
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        2 * self.ch
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "batch_scale"
+    }
+}
+
+/// Global average pool CHW → C.
+#[derive(Default)]
+pub struct GlobalAvgPool {
+    dims: (usize, usize, usize),
+}
+
+impl GlobalAvgPool {
+    pub fn new() -> Self {
+        GlobalAvgPool { dims: (0, 0, 0) }
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        let (c, h, w) = x.dims3();
+        self.dims = (c, h, w);
+        let mut y = vec![0.0f32; c];
+        for (ci, val) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for hi in 0..h {
+                for wi in 0..w {
+                    acc += x.at3(ci, hi, wi);
+                }
+            }
+            *val = acc / (h * w) as f32;
+        }
+        Tensor::vec1(&y)
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let (c, h, w) = self.dims;
+        let mut gx = Tensor::zeros(&[c, h, w]);
+        let inv = 1.0 / (h * w) as f32;
+        for ci in 0..c {
+            let gv = g.data()[ci] * inv;
+            for hi in 0..h {
+                for wi in 0..w {
+                    gx.set3(ci, hi, wi, gv);
+                }
+            }
+        }
+        gx
+    }
+
+    fn step(&mut self, _lr: f32, _batch: usize) {}
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "global_avg_pool"
+    }
+}
+
+/// 2×2 average pooling, stride 2 (CHW; odd trailing row/col dropped).
+#[derive(Default)]
+pub struct AvgPool2d {
+    dims: (usize, usize, usize),
+}
+
+impl AvgPool2d {
+    pub fn new() -> Self {
+        AvgPool2d { dims: (0, 0, 0) }
+    }
+}
+
+impl Layer for AvgPool2d {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        let (c, h, w) = x.dims3();
+        self.dims = (c, h, w);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut y = Tensor::zeros(&[c, oh, ow]);
+        for ci in 0..c {
+            for yy in 0..oh {
+                for xx in 0..ow {
+                    let s = x.at3(ci, 2 * yy, 2 * xx)
+                        + x.at3(ci, 2 * yy + 1, 2 * xx)
+                        + x.at3(ci, 2 * yy, 2 * xx + 1)
+                        + x.at3(ci, 2 * yy + 1, 2 * xx + 1);
+                    y.set3(ci, yy, xx, s * 0.25);
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        let (c, h, w) = self.dims;
+        let mut gx = Tensor::zeros(&[c, h, w]);
+        let (oh, ow) = (h / 2, w / 2);
+        for ci in 0..c {
+            for yy in 0..oh {
+                for xx in 0..ow {
+                    let gv = g.at3(ci, yy, xx) * 0.25;
+                    gx.set3(ci, 2 * yy, 2 * xx, gv);
+                    gx.set3(ci, 2 * yy + 1, 2 * xx, gv);
+                    gx.set3(ci, 2 * yy, 2 * xx + 1, gv);
+                    gx.set3(ci, 2 * yy + 1, 2 * xx + 1, gv);
+                }
+            }
+        }
+        gx
+    }
+
+    fn step(&mut self, _lr: f32, _batch: usize) {}
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "avg_pool2d"
+    }
+}
+
+/// Flatten CHW → vector.
+#[derive(Default)]
+pub struct Flatten {
+    shape: Vec<usize>,
+}
+
+impl Flatten {
+    pub fn new() -> Self {
+        Flatten { shape: Vec::new() }
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: &Tensor) -> Tensor {
+        self.shape = x.shape().to_vec();
+        x.clone().reshape(&[x.len()])
+    }
+
+    fn backward(&mut self, g: &Tensor) -> Tensor {
+        g.clone().reshape(&self.shape.clone())
+    }
+
+    fn step(&mut self, _lr: f32, _batch: usize) {}
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn mac_count(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "flatten"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference gradient check for a layer on a small input.
+    fn grad_check<L: Layer>(layer: &mut L, shape: &[usize], seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::from_vec(shape, rng.normal_vec(shape.iter().product()));
+        // Loss = sum(forward(x)); grad_out = ones.
+        let y = layer.forward(&x);
+        let ones = Tensor::from_vec(y.shape(), vec![1.0; y.len()]);
+        let gx = layer.backward(&ones);
+
+        let eps = 1e-3f32;
+        for i in (0..x.len()).step_by((x.len() / 6).max(1)) {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fp: f32 = layer.forward(&xp).data().iter().sum();
+            let fm: f32 = layer.forward(&xm).data().iter().sum();
+            let num = (fp - fm) / (2.0 * eps);
+            let ana = gx.data()[i];
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                "grad mismatch at {i}: numeric {num}, analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_forward_known_values() {
+        let mut rng = Rng::new(1);
+        let mut d = Dense::new(2, 1, &mut rng);
+        d.w = vec![2.0, -1.0];
+        d.b = vec![0.5];
+        let y = d.forward(&Tensor::vec1(&[3.0, 4.0]));
+        assert_eq!(y.data(), &[2.0 * 3.0 - 4.0 + 0.5]);
+    }
+
+    #[test]
+    fn dense_grad_check() {
+        let mut rng = Rng::new(2);
+        let mut d = Dense::new(6, 4, &mut rng);
+        grad_check(&mut d, &[6], 3);
+    }
+
+    #[test]
+    fn conv_grad_check() {
+        let mut rng = Rng::new(4);
+        let mut c = Conv2d::new(2, 3, 3, (5, 5), &mut rng);
+        grad_check(&mut c, &[2, 5, 5], 5);
+    }
+
+    #[test]
+    fn relu_grad_check() {
+        let mut r = Relu::new();
+        grad_check(&mut r, &[10], 6);
+    }
+
+    #[test]
+    fn batch_scale_grad_check() {
+        let mut b = BatchScale::new(3);
+        grad_check(&mut b, &[3, 4, 4], 7);
+    }
+
+    #[test]
+    fn pool_grad_check() {
+        let mut p = GlobalAvgPool::new();
+        grad_check(&mut p, &[3, 4, 4], 8);
+    }
+
+    #[test]
+    fn avg_pool2d_grad_check_and_shape() {
+        let mut p = AvgPool2d::new();
+        let y = p.forward(&Tensor::zeros(&[3, 6, 6]));
+        assert_eq!(y.shape(), &[3, 3, 3]);
+        grad_check(&mut p, &[3, 6, 6], 12);
+    }
+
+    #[test]
+    fn avg_pool2d_known_values() {
+        let mut p = AvgPool2d::new();
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = p.forward(&x);
+        assert_eq!(y.data(), &[2.5]);
+    }
+
+    #[test]
+    fn flatten_round_trips() {
+        let mut f = Flatten::new();
+        let x = Tensor::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let y = f.forward(&x);
+        assert_eq!(y.shape(), &[8]);
+        let g = f.backward(&y);
+        assert_eq!(g.shape(), &[2, 2, 2]);
+        assert_eq!(g.data(), x.data());
+    }
+
+    #[test]
+    fn dense_learns_linear_map() {
+        // Train y = 2x0 - x1 with SGD; loss must collapse.
+        let mut rng = Rng::new(9);
+        let mut d = Dense::new(2, 1, &mut rng);
+        for _ in 0..600 {
+            let x = Tensor::vec1(&[rng.normal() as f32, rng.normal() as f32]);
+            let target = 2.0 * x.data()[0] - x.data()[1];
+            let y = d.forward(&x);
+            let err = y.data()[0] - target;
+            d.backward(&Tensor::vec1(&[2.0 * err]));
+            // Per-sample stepping with 0.9 momentum: keep lr small.
+            d.step(0.005, 1);
+        }
+        let y = d.forward(&Tensor::vec1(&[1.0, 1.0]));
+        assert!((y.data()[0] - 1.0).abs() < 0.05, "got {}", y.data()[0]);
+    }
+
+    #[test]
+    fn conv_mac_count() {
+        let mut rng = Rng::new(10);
+        let c = Conv2d::new(4, 8, 3, (16, 16), &mut rng);
+        assert_eq!(c.mac_count(), 8 * 4 * 9 * 256);
+        assert_eq!(c.param_count(), 8 * 4 * 9 + 8);
+    }
+}

@@ -1,0 +1,41 @@
+//! Quantized neural-network stack.
+//!
+//! Everything needed to reproduce the paper's learning-side results
+//! without any external ML dependency: a small tensor type, hand-rolled
+//! backprop layers, the BWHT compression layer with soft-thresholding,
+//! miniature MobileNetV2/ResNet20-style models, straight-through
+//! estimator (STE) training against the crossbar's 1-bit product-sum
+//! quantization, analytic MAC/parameter accounting at the paper's full
+//! model dimensions, and the synthetic edge-sensor dataset that stands
+//! in for CIFAR/MNIST (DESIGN.md §Substitutions).
+//!
+//! - [`tensor`] — shape + data, minimal ops.
+//! - [`layer`] — Dense / Conv2d / DepthwiseConv2d / ReLU / BatchScale /
+//!   GlobalAvgPool with forward/backward/step.
+//! - [`bwht_layer`] — the paper's parameter-free frequency-domain layer:
+//!   WHT → soft-threshold(T, trainable) → inverse WHT, with float,
+//!   quantized-digital (1-bit product-sum) and analog-crossbar execution
+//!   modes.
+//! - [`quant`] — uniform quantizers + STE fake-quant.
+//! - [`model`] — `Sequential` plus the miniature model builders.
+//! - [`train`] — SGD/momentum, softmax CE, the training loops for
+//!   Figs 1(c), 5, 6, 13(c,d).
+//! - [`dataset`] — procedural multispectral-ish pattern datasets.
+//! - [`macs`] — analytic parameter/MAC tables for full-size MobileNetV2
+//!   and ResNet20 with/without BWHT replacement (Figs 1(c,d)).
+
+pub mod bwht_layer;
+pub mod dataset;
+pub mod layer;
+pub mod macs;
+pub mod model;
+pub mod quant;
+pub mod tensor;
+pub mod train;
+
+pub use bwht_layer::{BwhtExec, BwhtLayer};
+pub use dataset::Dataset;
+pub use layer::Layer;
+pub use model::Sequential;
+pub use tensor::Tensor;
+pub use train::{evaluate, train, TrainConfig, TrainLog};

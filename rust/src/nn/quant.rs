@@ -1,0 +1,122 @@
+//! Uniform quantizers and straight-through estimators (paper §III-B).
+//!
+//! The crossbar consumes *unsigned* `bits`-wide integers (bitplanes).
+//! Activations are clipped to a fixed range and affinely mapped onto the
+//! integer grid; training sees the quantizer as identity on the backward
+//! pass (STE), which is how the paper's models "learn around" extreme
+//! quantization (Fig 5).
+
+/// Affine quantization of `x ∈ [lo, hi]` onto `{0 … 2^bits − 1}`.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformQuantizer {
+    pub bits: u8,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u8, lo: f32, hi: f32) -> Self {
+        assert!(bits >= 1 && bits <= 16 && hi > lo);
+        UniformQuantizer { bits, lo, hi }
+    }
+
+    /// Unit-range unsigned quantizer (post-ReLU activations in [0, hi]).
+    pub fn unsigned(bits: u8, hi: f32) -> Self {
+        UniformQuantizer::new(bits, 0.0, hi)
+    }
+
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Quantize to an integer level.
+    #[inline]
+    pub fn to_level(&self, x: f32) -> u32 {
+        let t = ((x - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0);
+        let q = (t * (self.levels() - 1) as f32).round() as u32;
+        q.min(self.levels() - 1)
+    }
+
+    /// Reconstruct the float value of a level.
+    #[inline]
+    pub fn from_level(&self, q: u32) -> f32 {
+        self.lo + (self.hi - self.lo) * q as f32 / (self.levels() - 1) as f32
+    }
+
+    /// Fake-quantize: quantize-dequantize in float (forward of the STE).
+    #[inline]
+    pub fn fake(&self, x: f32) -> f32 {
+        self.from_level(self.to_level(x))
+    }
+
+    /// STE backward: gradient passes where x is inside the clip range.
+    #[inline]
+    pub fn ste_mask(&self, x: f32) -> f32 {
+        if x >= self.lo && x <= self.hi {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Quantize a slice to levels.
+    pub fn levels_of(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.to_level(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn round_trip_error_bounded_by_half_step() {
+        prop::check("quantizer round trip", 256, |rng| {
+            let bits = 1 + rng.index(8) as u8;
+            let q = UniformQuantizer::unsigned(bits, 4.0);
+            let x = (rng.uniform() * 4.0) as f32;
+            let err = (q.fake(x) - x).abs();
+            let step = 4.0 / (q.levels() - 1) as f32;
+            crate::prop_assert!(err <= step / 2.0 + 1e-6, "bits={bits} x={x} err={err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn levels_cover_range() {
+        let q = UniformQuantizer::unsigned(2, 3.0);
+        assert_eq!(q.to_level(0.0), 0);
+        assert_eq!(q.to_level(3.0), 3);
+        assert_eq!(q.from_level(3), 3.0);
+        assert_eq!(q.levels(), 4);
+    }
+
+    #[test]
+    fn clipping_clamps() {
+        let q = UniformQuantizer::unsigned(4, 1.0);
+        assert_eq!(q.to_level(-5.0), 0);
+        assert_eq!(q.to_level(42.0), 15);
+        assert_eq!(q.ste_mask(-5.0), 0.0);
+        assert_eq!(q.ste_mask(0.5), 1.0);
+    }
+
+    #[test]
+    fn one_bit_is_binary() {
+        let q = UniformQuantizer::unsigned(1, 1.0);
+        assert_eq!(q.to_level(0.2), 0);
+        assert_eq!(q.to_level(0.8), 1);
+    }
+
+    #[test]
+    fn monotone_levels() {
+        let q = UniformQuantizer::unsigned(5, 2.0);
+        let mut prev = 0;
+        for i in 0..100 {
+            let l = q.to_level(2.0 * i as f32 / 99.0);
+            assert!(l >= prev);
+            prev = l;
+        }
+    }
+}

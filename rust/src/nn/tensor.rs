@@ -1,0 +1,140 @@
+//! Minimal tensor: shape + contiguous f32 data (CHW layout for images).
+//!
+//! Deliberately small — the miniature models train sample-at-a-time on
+//! one core, so a full broadcasting tensor library would be dead weight.
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Tensor { shape: vec![data.len()], data: data.to_vec() }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// CHW accessor for 3-D tensors.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        let (_, hh, ww) = self.dims3();
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, v: f32) {
+        let (_, hh, ww) = self.dims3();
+        self.data[(c * hh + h) * ww + w] = v;
+    }
+
+    /// (C, H, W) of a 3-D tensor.
+    pub fn dims3(&self) -> (usize, usize, usize) {
+        assert_eq!(self.shape.len(), 3, "expected 3-D tensor, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2])
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Sum of squares (for grad-norm diagnostics).
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn chw_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 7.0);
+        assert_eq!(t.at3(1, 2, 3), 7.0);
+        // Row-major CHW: index (1,2,3) = (1*3+2)*4+3 = 23.
+        assert_eq!(t.data()[23], 7.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape size mismatch")]
+    fn reshape_rejects_bad_size() {
+        Tensor::vec1(&[1.0, 2.0]).reshape(&[3]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(Tensor::vec1(&[0.1, 0.9, 0.5]).argmax(), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig 6: early-termination — threshold distribution under the
+//! T-widening loss, workload reduction, and accuracy retention.
+
+use crate::cim::{CrossbarConfig, EarlyTermination};
+use crate::nn::train::evaluate;
+use crate::util::stats::Histogram;
+
+use super::support::{analog_accuracy, trained_digit_mlp};
+
+pub fn generate() -> String {
+    let mut out = String::new();
+    out.push_str("Fig 6 — early termination via soft-threshold sparsity\n\n");
+
+    // (a) Threshold distributions: plain vs T-regularised training.
+    for (label, t_reg) in [("plain loss", 0.0f32), ("T-widening loss", 0.02)] {
+        let (mut model, _te, _acc) = trained_digit_mlp(5, 5, t_reg);
+        let mut hist = Histogram::new(-0.1, 1.5, 8);
+        model.for_each_bwht(|b| {
+            for &t in b.thresholds() {
+                hist.push(t.abs() as f64);
+            }
+        });
+        out.push_str(&format!("|T| distribution after training ({label}):\n"));
+        out.push_str(&hist.ascii(30));
+        out.push('\n');
+    }
+
+    // (b) Workload reduction + accuracy vs termination aggressiveness.
+    out.push_str("early termination on the analog path (4-bit inputs):\n");
+    out.push_str(&format!(
+        "{:<26} {:>10} {:>12}\n",
+        "policy", "test acc", "work saved"
+    ));
+    let (mut model, te, acc_f) = trained_digit_mlp(5, 5, 0.02);
+    let cfg = CrossbarConfig::default();
+    let policies: [(&str, Option<EarlyTermination>); 4] = [
+        ("no termination", None),
+        ("exact (T)", Some(EarlyTermination::exact(6.0))),
+        ("aggressive 1.5x", Some(EarlyTermination::aggressive(6.0, 1.5))),
+        ("aggressive 3x", Some(EarlyTermination::aggressive(6.0, 3.0))),
+    ];
+    for (name, et) in policies {
+        model.for_each_bwht(|b| {
+            b.term_processed = 0;
+            b.term_skipped = 0;
+        });
+        let acc = analog_accuracy(&mut model, &te, cfg, 4, et, 17);
+        let (mut processed, mut skipped) = (0u64, 0u64);
+        model.for_each_bwht(|b| {
+            processed += b.term_processed;
+            skipped += b.term_skipped;
+        });
+        let saved = skipped as f64 / (processed + skipped).max(1) as f64;
+        out.push_str(&format!("{name:<26} {acc:>10.3} {:>11.1}%\n", saved * 100.0));
+    }
+    let _ = evaluate(&mut model, &te);
+    out.push_str(&format!(
+        "\nfloat reference acc {acc_f:.3}; paper shape: the T-polarising loss widens\n"
+    ));
+    out.push_str("dead bands, so bitplane processing terminates early with little accuracy cost\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig6_reports_policies_and_histograms() {
+        let r = super::generate();
+        assert!(r.contains("no termination"));
+        assert!(r.contains("aggressive 3x"));
+        assert!(r.contains("|T| distribution"));
+    }
+}

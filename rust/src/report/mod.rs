@@ -1,0 +1,48 @@
+//! Report generators: every table and figure of the paper's evaluation,
+//! as text. Shared by the bench binaries (rust/benches/) and the CLI
+//! (`adcim report`). Each generator returns the report as a `String`
+//! and is deterministic given its seed.
+//!
+//! Experiment index (DESIGN.md has the full mapping):
+//! - [`table1::generate`]  — Table I ADC area/energy comparison.
+//! - [`fig1::fig1c`]/[`fig1::fig1d`] — compression & MAC accounting.
+//! - [`fig3::generate`]    — crossbar 4-step timing diagram.
+//! - [`fig5::generate`]    — accuracy under 1-bit quantized training.
+//! - [`fig6::generate`]    — T distribution + early termination.
+//! - [`fig7::generate`]    — crossbar VDD / size / clock sweeps.
+//! - [`fig8::generate`]    — SRAM-immersed ADC conversion trace.
+//! - [`fig10::generate`]   — MAV statistics + asymmetric search.
+//! - [`fig12::generate`]   — staircase, DNL, INL.
+//! - [`fig13::generate`]   — ADC design space + accuracy/power sweeps.
+
+pub mod fig1;
+pub mod fig10;
+pub mod fig12;
+pub mod fig13;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod support;
+pub mod table1;
+
+/// All report ids in paper order.
+pub const ALL: &[(&str, fn() -> String)] = &[
+    ("table1", table1::generate),
+    ("fig1c", fig1::fig1c),
+    ("fig1d", fig1::fig1d),
+    ("fig3", fig3::generate),
+    ("fig5", fig5::generate),
+    ("fig6", fig6::generate),
+    ("fig7", fig7::generate),
+    ("fig8", fig8::generate),
+    ("fig10", fig10::generate),
+    ("fig12", fig12::generate),
+    ("fig13", fig13::generate),
+];
+
+/// Generate one report by id.
+pub fn generate(id: &str) -> Option<String> {
+    ALL.iter().find(|(n, _)| *n == id).map(|(_, f)| f())
+}

@@ -1,0 +1,96 @@
+//! Shared experiment plumbing: the trained digit model and helpers.
+
+use crate::cim::{CrossbarConfig, EarlyTermination};
+use crate::nn::bwht_layer::BwhtExec;
+use crate::nn::dataset::Dataset;
+use crate::nn::model::{bwht_mlp, Sequential};
+use crate::nn::train::{evaluate, train, TrainConfig};
+use crate::util::Rng;
+
+/// Standard digit workload: 12×12 seven-segment digits, flattened.
+pub fn digit_data(n: usize, seed: u64) -> (Dataset, Dataset) {
+    let d = Dataset::digits(n, 12, seed);
+    let flat = |d: Dataset| Dataset {
+        images: d.images.into_iter().map(|i| i.reshape(&[144])).collect(),
+        labels: d.labels,
+        classes: d.classes,
+        side: d.side,
+    };
+    let (tr, te) = d.split(0.8);
+    (flat(tr), flat(te))
+}
+
+/// Train the Fig 13 digit MLP once: float epochs followed by a short
+/// quantization-aware fine-tune against the 1-bit product-sum path
+/// (paper §III-B — thresholds and the reconstruction gain must adapt to
+/// the quantized scale, or the analog path underperforms for no
+/// hardware reason). Returns (model, test set, float accuracy).
+/// Deterministic per seed. `t_reg` widens thresholds (Fig 6).
+pub fn trained_digit_mlp(seed: u64, epochs: usize, t_reg: f32) -> (Sequential, Dataset, f64) {
+    let (tr, te) = digit_data(400, seed ^ 0x5eed);
+    let mut rng = Rng::new(seed);
+    let mut model = bwht_mlp(144, 10, 32, &mut rng);
+    if t_reg > 0.0 {
+        model.for_each_bwht(|b| b.t_reg = t_reg);
+    }
+    let cfg = TrainConfig { epochs, lr: 0.08, seed, ..Default::default() };
+    let _ = train(&mut model, &tr, &te, cfg);
+    // QAT fine-tune: bit-exact digital model of the crossbar path.
+    model.for_each_bwht(|b| {
+        b.set_exec(crate::nn::bwht_layer::BwhtExec::QuantDigital { input_bits: 4 })
+    });
+    let qcfg = TrainConfig { epochs: 2, lr: 0.02, seed: seed ^ 1, ..Default::default() };
+    let _ = train(&mut model, &tr, &te, qcfg);
+    model.for_each_bwht(|b| b.set_exec(BwhtExec::Float));
+    let acc = evaluate(&mut model, &te);
+    (model, te, acc)
+}
+
+/// Evaluate a trained model with its BWHT stage on the analog crossbar
+/// at `config`; returns accuracy on `te`.
+pub fn analog_accuracy(
+    model: &mut Sequential,
+    te: &Dataset,
+    config: CrossbarConfig,
+    input_bits: u8,
+    early_term: Option<EarlyTermination>,
+    seed: u64,
+) -> f64 {
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed });
+    });
+    let acc = evaluate(model, te);
+    model.for_each_bwht(|b| b.set_exec(BwhtExec::Float));
+    acc
+}
+
+/// Fixed-width table row helper.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    let mut s = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        s.push_str(&format!("{c:>w$}  ", w = w));
+    }
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digit_mlp_trains_above_chance_quickly() {
+        let (_m, _te, acc) = trained_digit_mlp(1, 3, 0.0);
+        assert!(acc > 0.4, "acc {acc}");
+    }
+
+    #[test]
+    fn analog_accuracy_close_to_float_at_nominal() {
+        let (mut m, te, acc_f) = trained_digit_mlp(2, 3, 0.0);
+        let acc_a = analog_accuracy(&mut m, &te, CrossbarConfig::default(), 4, None, 7);
+        assert!(acc_a > acc_f - 0.35, "float {acc_f} analog {acc_a}");
+        // Exec mode restored.
+        let acc_back = evaluate(&mut m, &te);
+        assert!((acc_back - acc_f).abs() < 1e-9);
+    }
+}

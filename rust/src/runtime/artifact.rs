@@ -1,0 +1,194 @@
+//! Artifact loading: manifest, weights, golden vectors.
+//!
+//! The manifest is the JSON written by `python/compile/aot.py`. We parse
+//! just what we need with a small scanner (the offline build has no JSON
+//! crate); the format is under our control on both sides.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `model.manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub input: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub input_bits: u8,
+    pub total_f32: usize,
+    /// (name, shape, offset, len) per parameter, manifest order.
+    pub params: Vec<(String, Vec<usize>, usize, usize)>,
+}
+
+/// Extract `"key": <int>` from a JSON-ish string (first occurrence
+/// after `from`). Returns (value, end position).
+fn scan_int(text: &str, key: &str, from: usize) -> Option<(i64, usize)> {
+    let pat = format!("\"{key}\":");
+    let at = text[from..].find(&pat)? + from + pat.len();
+    let rest = text[at..].trim_start();
+    let off = text.len() - rest.len();
+    let end = rest.find(|c: char| !c.is_ascii_digit() && c != '-')?;
+    rest[..end].parse().ok().map(|v| (v, off + end))
+}
+
+fn scan_str(text: &str, key: &str, from: usize) -> Option<(String, usize)> {
+    let pat = format!("\"{key}\":");
+    let at = text[from..].find(&pat)? + from + pat.len();
+    let open = text[at..].find('"')? + at + 1;
+    let close = text[open..].find('"')? + open;
+    Some((text[open..close].to_string(), close))
+}
+
+fn scan_int_list(text: &str, key: &str, from: usize) -> Option<(Vec<usize>, usize)> {
+    let pat = format!("\"{key}\":");
+    let at = text[from..].find(&pat)? + from + pat.len();
+    let open = text[at..].find('[')? + at + 1;
+    let close = text[open..].find(']')? + open;
+    let vals = text[open..close]
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse().unwrap_or(0))
+        .collect();
+    Some((vals, close))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let get = |k: &str| -> Result<i64> {
+            scan_int(text, k, 0).map(|(v, _)| v).with_context(|| format!("manifest key {k}"))
+        };
+        let mut params = Vec::new();
+        let mut pos = 0usize;
+        while let Some((name, p1)) = scan_str(text, "name", pos) {
+            let (shape, p2) = scan_int_list(text, "shape", p1).context("shape")?;
+            let (offset, p3) = scan_int(text, "offset", p2).context("offset")?;
+            let (len, p4) = scan_int(text, "len", p3).context("len")?;
+            params.push((name, shape, offset as usize, len as usize));
+            pos = p4;
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        Ok(Manifest {
+            batch: get("batch")? as usize,
+            input: get("input")? as usize,
+            classes: get("classes")? as usize,
+            hidden: get("hidden")? as usize,
+            input_bits: get("input_bits")? as u8,
+            total_f32: get("total_f32")? as usize,
+            params,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&(String, Vec<usize>, usize, usize)> {
+        self.params.iter().find(|(n, _, _, _)| n == name)
+    }
+}
+
+/// An artifacts directory with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.join("model.manifest.txt").exists() {
+            bail!("{} has no model.manifest.txt — run `make artifacts`", dir.display());
+        }
+        Ok(Artifacts { dir })
+    }
+
+    /// Default location relative to the repo root, overridable with
+    /// `ADCIM_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ADCIM_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        let text = std::fs::read_to_string(self.dir.join("model.manifest.txt"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> String {
+        self.dir.join(format!("{name}.hlo.txt")).to_string_lossy().into_owned()
+    }
+
+    /// Read a little-endian f32 binary file.
+    pub fn read_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(name))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{name}: size {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn weights(&self) -> Result<Vec<f32>> {
+        self.read_f32("model.weights.bin")
+    }
+
+    pub fn test_batch(&self) -> Result<Vec<f32>> {
+        self.read_f32("test_batch.bin")
+    }
+
+    pub fn expected_logits(&self) -> Result<Vec<f32>> {
+        self.read_f32("expected_logits.bin")
+    }
+
+    pub fn test_labels(&self) -> Result<Vec<usize>> {
+        let text = std::fs::read_to_string(self.dir.join("test_labels.txt"))?;
+        Ok(text.split_whitespace().filter_map(|t| t.parse().ok()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "params": [
+  {"name": "b1", "shape": [32], "offset": 0, "len": 32},
+  {"name": "w1", "shape": [144, 32], "offset": 32, "len": 4608}
+ ],
+ "total_f32": 4640,
+ "batch": 16,
+ "input": 144,
+ "classes": 10,
+ "hidden": 32,
+ "input_bits": 4
+}"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.input, 144);
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.hidden, 32);
+        assert_eq!(m.input_bits, 4);
+        assert_eq!(m.total_f32, 4640);
+        assert_eq!(m.params.len(), 2);
+        let (name, shape, off, len) = &m.params[1];
+        assert_eq!(name, "w1");
+        assert_eq!(shape, &vec![144, 32]);
+        assert_eq!((*off, *len), (32, 4608));
+    }
+
+    #[test]
+    fn param_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.param("b1").is_some());
+        assert!(m.param("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

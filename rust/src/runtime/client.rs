@@ -1,0 +1,61 @@
+//! PJRT CPU client wrapper.
+
+use anyhow::{Context, Result};
+
+/// Owns the PJRT client. One per process; models share it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** module and compile it.
+    pub fn load_hlo_text(&self, path: &str) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(LoadedModel { exe, path: path.to_string() })
+    }
+}
+
+/// A compiled executable (one per model variant).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl LoadedModel {
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with a single f32 input tensor of `shape`; the module was
+    /// lowered with `return_tuple=True`, so unwrap a 1-tuple and return
+    /// the flat f32 output.
+    pub fn run_f32(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims).context("shaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        out.to_vec::<f32>().context("reading f32 output")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/runtime_integration.rs —
+    // they need `make artifacts` and a process-global PJRT client, which
+    // unit tests (one process, parallel threads) would fight over.
+}

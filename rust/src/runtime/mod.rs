@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The digital-reference inference path: `make artifacts` lowers the L2
+//! JAX model (with the L1 Pallas BWHT kernel inlined) to HLO text;
+//! this module compiles it on the PJRT CPU client and runs it from the
+//! rust hot path. Python is never involved at serve time.
+//!
+//! See /opt/xla-example/load_hlo for the interchange pattern: HLO *text*
+//! (ids reassigned by the parser), lowered with `return_tuple=True` and
+//! unwrapped with `to_tuple1` here.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Artifacts, Manifest};
+pub use client::{LoadedModel, Runtime};

@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! All bench targets are `harness = false` binaries that call
+//! [`bench_fn`] / [`BenchSet`]. The harness does warmup, adaptively picks
+//! an iteration count targeting a fixed measurement window, and reports
+//! median-of-samples with a simple spread estimate — robust enough for
+//! the before/after deltas in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Inter-quartile-ish spread (p75 - p25) per iteration.
+    pub spread: Duration,
+    /// Iterations per sample.
+    pub iters: u64,
+    /// Number of samples.
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} / iter  (± {:>10}, {} iters x {} samples, {:.1}/s)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.spread),
+            self.iters,
+            self.samples,
+            self.per_sec()
+        )
+    }
+}
+
+/// Human-format a duration with ns/µs/ms/s units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up, choose iters for ~`window` per sample,
+/// take `samples` samples, report the median.
+pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_fn_cfg(name, Duration::from_millis(40), 9, &mut f)
+}
+
+/// [`bench_fn`] with explicit sample window and count.
+pub fn bench_fn_cfg<F: FnMut()>(
+    name: &str,
+    window: Duration,
+    samples: usize,
+    f: &mut F,
+) -> Measurement {
+    // Warmup + calibration: run until we have a time estimate.
+    let mut iters: u64 = 1;
+    let per_iter_est = loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt > Duration::from_millis(5) || iters >= 1 << 24 {
+            break dt.as_secs_f64() / iters as f64;
+        }
+        iters *= 4;
+    };
+    let iters = ((window.as_secs_f64() / per_iter_est.max(1e-12)).ceil() as u64).max(1);
+
+    let mut per_iter: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        })
+        .collect();
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_iter[per_iter.len() / 2];
+    let spread = per_iter[(per_iter.len() * 3) / 4] - per_iter[per_iter.len() / 4];
+    Measurement {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(median),
+        spread: Duration::from_secs_f64(spread.max(0.0)),
+        iters,
+        samples,
+    }
+}
+
+/// A named group of benchmarks printed as a block (per-figure bench
+/// binaries use one `BenchSet` per paper artifact).
+pub struct BenchSet {
+    title: String,
+    results: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        BenchSet { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        let m = bench_fn(name, f);
+        println!("{m}");
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let mut acc = 0u64;
+        let m = bench_fn_cfg(
+            "noop-ish",
+            Duration::from_millis(2),
+            3,
+            &mut || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+        );
+        assert!(m.median.as_nanos() > 0);
+        assert!(m.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12 ns");
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn sleepy_bench_orders_correctly() {
+        // LLVM closed-forms range sums even with opaque bounds; force a
+        // per-iteration data dependency so "slow" is genuinely slow.
+        let work = |n: u64| {
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = black_box(acc.wrapping_add(i));
+            }
+            acc
+        };
+        let fast = bench_fn_cfg("fast", Duration::from_millis(2), 3, &mut || {
+            black_box(work(black_box(8)));
+        });
+        let slow = bench_fn_cfg("slow", Duration::from_millis(2), 3, &mut || {
+            black_box(work(black_box(50_000)));
+        });
+        assert!(slow.median > fast.median);
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal declarative CLI flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments. The `adcim` binary defines subcommands on top of this.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key→value options and positionals, in order.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (excluding argv[0]).
+    ///
+    /// A `--key` followed by a token that does not start with `--` is
+    /// treated as `--key value` if `takes_value(key)` returns true,
+    /// otherwise as a bare flag. Pass the set of value-taking keys.
+    pub fn parse<I, S>(raw: I, value_keys: &[&str]) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let toks: Vec<String> = raw.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&body)
+                    && i + 1 < toks.len()
+                    && !toks[i + 1].starts_with("--")
+                {
+                    out.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get_parse(key).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flags_opts_positionals() {
+        let a = Args::parse(
+            ["serve", "--port", "8080", "--verbose", "--mode=hybrid", "extra"],
+            &["port"],
+        );
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("hybrid"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn value_key_without_value_is_flag() {
+        let a = Args::parse(["--port"], &["port"]);
+        assert!(a.flag("port"));
+        assert_eq!(a.get("port"), None);
+    }
+
+    #[test]
+    fn non_value_key_does_not_consume_next() {
+        let a = Args::parse(["--verbose", "cmd"], &["port"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["cmd".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(["--n=32"], &[]);
+        assert_eq!(a.get_parse::<usize>("n"), Some(32));
+        assert_eq!(a.get_parse_or::<usize>("m", 7), 7);
+    }
+}

@@ -1,0 +1,27 @@
+//! In-house utilities.
+//!
+//! The offline build has exactly two external crates (`xla`, `anyhow`), so
+//! this module supplies what a richer dependency tree would normally
+//! provide:
+//!
+//! - [`rng`] — deterministic SplitMix64 PRNG with uniform/normal sampling
+//!   (replaces `rand`): every simulation in the library is seedable and
+//!   bit-reproducible.
+//! - [`stats`] — histograms, mean/std, entropy — used for MAV statistics
+//!   (paper Fig 10) and report generation.
+//! - [`cli`] — tiny declarative flag parser for the `adcim` binary
+//!   (replaces `clap`).
+//! - [`bench`] — wall-clock micro-bench harness with warmup and robust
+//!   (median) aggregation (replaces `criterion`; all benches are
+//!   `harness = false`).
+//! - [`prop`] — seeded randomized-property driver (replaces `proptest`):
+//!   runs a closure over a few hundred generated cases and reports the
+//!   failing seed for replay.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,216 @@
+//! Blockwise Walsh–Hadamard transform (BWHT, paper §II-A, ref [31]).
+//!
+//! A monolithic WHT needs a power-of-two dimension; DNN channel counts
+//! rarely are (e.g. MobileNetV2 bottlenecks of 96, 144, 960 channels).
+//! Zero-padding 960 → 1024 is cheap, but padding 513 → 1024 nearly
+//! doubles the tensor. BWHT instead splits the dimension into equal
+//! power-of-two blocks and applies an independent WHT per block, bounding
+//! worst-case padding and — just as important for the paper's hardware —
+//! bounding the *crossbar size* each transform needs.
+
+use super::fwht::fwht_inplace;
+
+/// How a logical dimension `n` maps onto Hadamard blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BwhtLayout {
+    /// Logical (un-padded) dimension.
+    pub n: usize,
+    /// Number of blocks.
+    pub blocks: usize,
+    /// Power-of-two size of each block.
+    pub block_size: usize,
+}
+
+impl BwhtLayout {
+    /// Choose a layout for dimension `n` with blocks no larger than
+    /// `max_block` (a power of two — typically the crossbar size).
+    ///
+    /// Strategy (following [31]): use ceil(n / max_block) equal blocks,
+    /// each the smallest power of two that fits its share. Total padded
+    /// length is `blocks * block_size >= n`.
+    pub fn new(n: usize, max_block: usize) -> Self {
+        assert!(n > 0, "BWHT dimension must be positive");
+        assert!(max_block.is_power_of_two(), "max_block must be a power of two");
+        let blocks = n.div_ceil(max_block);
+        let per_block = n.div_ceil(blocks);
+        let block_size = per_block.next_power_of_two();
+        BwhtLayout { n, blocks, block_size }
+    }
+
+    /// Total padded length (`blocks * block_size`).
+    #[inline]
+    pub fn padded_len(&self) -> usize {
+        self.blocks * self.block_size
+    }
+
+    /// Padding overhead as a fraction of `n` (0.0 = no padding).
+    pub fn padding_overhead(&self) -> f64 {
+        (self.padded_len() as f64 - self.n as f64) / self.n as f64
+    }
+}
+
+/// Blockwise Walsh–Hadamard transform operator.
+///
+/// Applies an (unnormalised, natural-order) WHT independently to each
+/// block of the padded vector. The transform is parameter-free; the
+/// associated learnable state (the soft threshold `T`) lives in the NN
+/// layer ([`crate::nn::bwht_layer`]), not here.
+#[derive(Debug, Clone)]
+pub struct Bwht {
+    layout: BwhtLayout,
+}
+
+impl Bwht {
+    pub fn new(layout: BwhtLayout) -> Self {
+        Bwht { layout }
+    }
+
+    /// Convenience: layout + operator for dimension `n`, blocks ≤ `max_block`.
+    pub fn for_dim(n: usize, max_block: usize) -> Self {
+        Bwht::new(BwhtLayout::new(n, max_block))
+    }
+
+    #[inline]
+    pub fn layout(&self) -> BwhtLayout {
+        self.layout
+    }
+
+    /// Pad a logical vector of length `n` to the block layout.
+    pub fn pad(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.layout.n, "input length mismatch");
+        let mut p = vec![0.0f32; self.layout.padded_len()];
+        p[..x.len()].copy_from_slice(x);
+        p
+    }
+
+    /// Truncate a padded vector back to the logical length.
+    pub fn unpad(&self, p: &[f32]) -> Vec<f32> {
+        assert_eq!(p.len(), self.layout.padded_len(), "padded length mismatch");
+        p[..self.layout.n].to_vec()
+    }
+
+    /// In-place blockwise transform over an already-padded buffer.
+    pub fn forward_padded_inplace(&self, p: &mut [f32]) {
+        assert_eq!(p.len(), self.layout.padded_len(), "padded length mismatch");
+        for chunk in p.chunks_exact_mut(self.layout.block_size) {
+            fwht_inplace(chunk);
+        }
+    }
+
+    /// Forward transform of a logical vector: pad → per-block FWHT.
+    /// Output stays in the padded domain (the frequency domain the NN
+    /// layer thresholds in).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut p = self.pad(x);
+        self.forward_padded_inplace(&mut p);
+        p
+    }
+
+    /// Inverse transform (padded frequency domain → logical vector).
+    pub fn inverse(&self, y: &[f32]) -> Vec<f32> {
+        assert_eq!(y.len(), self.layout.padded_len(), "padded length mismatch");
+        let scale = 1.0 / self.layout.block_size as f32;
+        let mut p = y.to_vec();
+        for chunk in p.chunks_exact_mut(self.layout.block_size) {
+            fwht_inplace(chunk);
+            for v in chunk.iter_mut() {
+                *v *= scale;
+            }
+        }
+        self.unpad(&p)
+    }
+
+    /// Additions required per transform (the hardware-relevant cost:
+    /// a WHT has no multiplies). `blocks * block_size * log2(block_size)`.
+    pub fn add_ops(&self) -> usize {
+        let b = self.layout.block_size;
+        self.layout.blocks * b * (b.trailing_zeros() as usize)
+    }
+
+    /// Equivalent *dense* MAC count if the transform were executed as a
+    /// plain matrix multiply (what the paper's Fig 1(d) accounting uses
+    /// when comparing against 1×1 convolutions).
+    pub fn dense_mac_ops(&self) -> usize {
+        let b = self.layout.block_size;
+        self.layout.blocks * b * b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wht::matrix::{hadamard, pm1_matvec};
+
+    #[test]
+    fn layout_pow2_single_block() {
+        let l = BwhtLayout::new(64, 64);
+        assert_eq!(l, BwhtLayout { n: 64, blocks: 1, block_size: 64 });
+        assert_eq!(l.padding_overhead(), 0.0);
+    }
+
+    #[test]
+    fn layout_splits_large_dims() {
+        // 960 channels with 512-max blocks → 2 blocks of 512.
+        let l = BwhtLayout::new(960, 512);
+        assert_eq!(l.blocks, 2);
+        assert_eq!(l.block_size, 512);
+        assert_eq!(l.padded_len(), 1024);
+    }
+
+    #[test]
+    fn layout_bounds_padding_vs_monolithic() {
+        // 513 monolithic would pad to 1024 (~2x). Blockwise stays tight.
+        let l = BwhtLayout::new(513, 256);
+        assert!(l.padded_len() < 1024, "padded={}", l.padded_len());
+        assert!(l.padding_overhead() < 0.5);
+    }
+
+    #[test]
+    fn forward_matches_blockdiag_dense() {
+        let b = Bwht::for_dim(24, 16);
+        let l = b.layout();
+        assert_eq!(l.blocks, 2);
+        assert_eq!(l.block_size, 16);
+        let x: Vec<f32> = (0..24).map(|i| (i as f32).sin()).collect();
+        let got = b.forward(&x);
+        // Dense oracle: block-diagonal Hadamard on the padded vector.
+        let h = hadamard(l.block_size);
+        let p = b.pad(&x);
+        let mut expect = Vec::new();
+        for chunk in p.chunks_exact(l.block_size) {
+            expect.extend(pm1_matvec(&h, l.block_size, chunk));
+        }
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            // Butterfly vs dense association order: float tolerance.
+            assert!((g - e).abs() <= 1e-5 * (1.0 + e.abs()), "[{i}] got {g} expect {e}");
+        }
+    }
+
+    #[test]
+    fn forward_inverse_round_trip() {
+        for (n, mb) in [(7, 8), (24, 16), (100, 32), (960, 512), (1, 1)] {
+            let b = Bwht::for_dim(n, mb);
+            let x: Vec<f32> = (0..n).map(|i| ((i * 13 % 7) as f32) - 3.0).collect();
+            let y = b.forward(&x);
+            let back = b.inverse(&y);
+            for (a, e) in back.iter().zip(&x) {
+                assert!((a - e).abs() < 1e-4, "n={n} a={a} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_ops_less_than_dense_macs() {
+        let b = Bwht::for_dim(960, 512);
+        assert!(b.add_ops() < b.dense_mac_ops());
+        assert_eq!(b.add_ops(), 2 * 512 * 9);
+        assert_eq!(b.dense_mac_ops(), 2 * 512 * 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn pad_rejects_wrong_len() {
+        Bwht::for_dim(10, 8).pad(&[0.0; 11]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Fast Walsh–Hadamard transform: O(m log m) butterfly network.
+//!
+//! This is the digital *oracle* for everything the analog crossbar
+//! computes, and the hot loop of the digital-reference inference path.
+//! The butterfly structure is also what the L1 Pallas kernel implements
+//! (python/compile/kernels/bwht.py) — stage s combines elements at
+//! distance 2^s with one add and one subtract, no multiplies.
+
+/// In-place fast Walsh–Hadamard transform, natural (Hadamard) order.
+///
+/// `x.len()` must be a power of two. Unnormalised: applying twice yields
+/// `m * x` (use [`fwht_inverse_inplace`] for the exact inverse).
+pub fn fwht_inplace(x: &mut [f32]) {
+    let m = x.len();
+    assert!(m.is_power_of_two(), "FWHT length must be a power of two, got {m}");
+    // PERF: the first two stages have 1- and 2-wide inner loops where
+    // loop overhead dominates; specialize them as fixed 2- and 4-point
+    // kernels (≈25% faster at large m, see EXPERIMENTS.md §Perf).
+    if m >= 2 {
+        for pair in x.chunks_exact_mut(2) {
+            let (a, b) = (pair[0], pair[1]);
+            pair[0] = a + b;
+            pair[1] = a - b;
+        }
+    }
+    if m >= 4 {
+        for quad in x.chunks_exact_mut(4) {
+            let (a, b, c, d) = (quad[0], quad[1], quad[2], quad[3]);
+            quad[0] = a + c;
+            quad[1] = b + d;
+            quad[2] = a - c;
+            quad[3] = b - d;
+        }
+    }
+    let mut h = 4;
+    while h < m {
+        let stride = h * 2;
+        let mut base = 0;
+        while base < m {
+            let (lo, hi) = x[base..base + stride].split_at_mut(h);
+            for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                let (va, vb) = (*a, *b);
+                *a = va + vb;
+                *b = va - vb;
+            }
+            base += stride;
+        }
+        h = stride;
+    }
+}
+
+/// In-place inverse FWHT: `ifwht(fwht(x)) == x` exactly for values
+/// representable without rounding (the transform is self-inverse up to
+/// the 1/m scale).
+pub fn fwht_inverse_inplace(x: &mut [f32]) {
+    let m = x.len() as f32;
+    fwht_inplace(x);
+    for v in x {
+        *v /= m;
+    }
+}
+
+/// Out-of-place inverse FWHT.
+pub fn ifwht(x: &[f32]) -> Vec<f32> {
+    let mut y = x.to_vec();
+    fwht_inverse_inplace(&mut y);
+    y
+}
+
+/// Gray code of `i`.
+#[inline]
+fn gray(i: usize) -> usize {
+    i ^ (i >> 1)
+}
+
+/// Bit-reverse the low `bits` bits of `i`.
+#[inline]
+fn bit_reverse(i: usize, bits: u32) -> usize {
+    if bits == 0 {
+        0
+    } else {
+        i.reverse_bits() >> (usize::BITS - bits)
+    }
+}
+
+/// Row index in the natural-order Hadamard matrix that has sequency `s`
+/// (i.e. the permutation taking Walsh order → Hadamard order).
+#[inline]
+pub fn walsh_to_hadamard_index(s: usize, bits: u32) -> usize {
+    bit_reverse(gray(s), bits)
+}
+
+/// In-place FWHT with *sequency* (Walsh) ordered output, matching the
+/// dense [`super::matrix::walsh`] matrix.
+pub fn fwht_sequency_inplace(x: &mut [f32]) {
+    let m = x.len();
+    fwht_inplace(x);
+    let bits = m.trailing_zeros();
+    let snapshot = x.to_vec();
+    for s in 0..m {
+        x[s] = snapshot[walsh_to_hadamard_index(s, bits)];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wht::matrix::{hadamard, pm1_matvec, walsh};
+
+    fn ramp(m: usize) -> Vec<f32> {
+        (0..m).map(|i| (i as f32) - (m as f32) / 3.0).collect()
+    }
+
+    fn assert_close(got: &[f32], expect: &[f32], tol: f32, ctx: &str) {
+        assert_eq!(got.len(), expect.len(), "{ctx}: length");
+        // Error scales with the dynamic range of the whole output vector
+        // (cancellation can leave tiny residues where the exact answer is 0).
+        let scale = expect.iter().fold(1.0f32, |a, e| a.max(e.abs()));
+        for (i, (g, e)) in got.iter().zip(expect).enumerate() {
+            assert!((g - e).abs() <= tol * scale, "{ctx}[{i}]: got {g}, expect {e}");
+        }
+    }
+
+    /// FWHT equals the dense Hadamard product for every size up to 1024.
+    #[test]
+    fn fwht_matches_dense_hadamard() {
+        for k in 0..=10 {
+            let m = 1usize << k;
+            let h = hadamard(m);
+            let x = ramp(m);
+            let expect = pm1_matvec(&h, m, &x);
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            // Association order differs between butterfly and dense sum;
+            // compare with a float tolerance, not bit equality.
+            assert_close(&got, &expect, 1e-5, &format!("m={m}"));
+        }
+    }
+
+    /// Sequency-ordered FWHT equals the dense Walsh product.
+    #[test]
+    fn fwht_sequency_matches_dense_walsh() {
+        for k in 0..=8 {
+            let m = 1usize << k;
+            let w = walsh(m);
+            let x = ramp(m);
+            let expect = pm1_matvec(&w, m, &x);
+            let mut got = x.clone();
+            fwht_sequency_inplace(&mut got);
+            assert_close(&got, &expect, 1e-5, &format!("m={m}"));
+        }
+    }
+
+    /// Self-inverse: ifwht(fwht(x)) == x exactly on integer-valued input.
+    #[test]
+    fn fwht_round_trip_exact() {
+        let x: Vec<f32> = (0..64).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        let back = ifwht(&y);
+        assert_eq!(back, x);
+    }
+
+    /// Parseval: ||fwht(x)||² = m ||x||².
+    #[test]
+    fn fwht_parseval() {
+        let m = 256;
+        let x = ramp(m);
+        let e_in: f32 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht_inplace(&mut y);
+        let e_out: f32 = y.iter().map(|v| v * v).sum();
+        let ratio = e_out / (m as f32 * e_in);
+        assert!((ratio - 1.0).abs() < 1e-5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn walsh_to_hadamard_index_is_permutation() {
+        for bits in 0..10u32 {
+            let m = 1usize << bits;
+            let mut seen = vec![false; m];
+            for s in 0..m {
+                let i = walsh_to_hadamard_index(s, bits);
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fwht_rejects_non_pow2() {
+        fwht_inplace(&mut [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fwht_len1_is_identity() {
+        let mut x = [42.0f32];
+        fwht_inplace(&mut x);
+        assert_eq!(x, [42.0]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Dense Hadamard/Walsh matrix construction.
+//!
+//! The Sylvester recursion (paper eq. (2)) builds the *natural order*
+//! Hadamard matrix; sorting rows by sign-change count ("sequency") gives
+//! the *Walsh* matrix used by the paper (and by signal-processing
+//! convention, where sequency plays the role frequency plays for the DFT).
+
+/// Dense `m x m` Hadamard matrix in natural (Sylvester) order, entries ±1.
+///
+/// `m` must be a power of two. Row-major storage as `i8` (±1) — matrices
+/// are only materialised for tests, crossbar programming and the dense
+/// oracle; the compute path uses [`super::fwht`].
+pub fn hadamard(m: usize) -> Vec<i8> {
+    assert!(m.is_power_of_two(), "Hadamard order must be a power of two, got {m}");
+    let mut h = vec![0i8; m * m];
+    h[0] = 1;
+    let mut n = 1;
+    // Sylvester doubling: H_{k} = [[H, H], [H, -H]].
+    while n < m {
+        for r in 0..n {
+            for c in 0..n {
+                let v = h[r * m + c];
+                h[r * m + (c + n)] = v;
+                h[(r + n) * m + c] = v;
+                h[(r + n) * m + (c + n)] = -v;
+            }
+        }
+        n *= 2;
+    }
+    h
+}
+
+/// Number of sign changes along a ±1 row — the row's *sequency*.
+pub fn sequency_of_row(row: &[i8]) -> usize {
+    row.windows(2).filter(|w| w[0] != w[1]).count()
+}
+
+/// Dense `m x m` *Walsh* matrix: Hadamard rows re-ordered by ascending
+/// sequency. The re-ordering is the bit-reversed Gray-code permutation;
+/// we compute it directly from the measured sequency which is simpler and
+/// self-checking.
+pub fn walsh(m: usize) -> Vec<i8> {
+    let h = hadamard(m);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by_key(|&r| sequency_of_row(&h[r * m..(r + 1) * m]));
+    let mut w = vec![0i8; m * m];
+    for (dst, &src) in order.iter().enumerate() {
+        w[dst * m..(dst + 1) * m].copy_from_slice(&h[src * m..(src + 1) * m]);
+    }
+    w
+}
+
+/// Dense matrix–vector product `M x` for a ±1 matrix (oracle path).
+pub fn pm1_matvec(mat: &[i8], m: usize, x: &[f32]) -> Vec<f32> {
+    assert_eq!(mat.len(), m * m);
+    assert_eq!(x.len(), m);
+    let mut y = vec![0.0f32; m];
+    for r in 0..m {
+        let row = &mat[r * m..(r + 1) * m];
+        let mut acc = 0.0f32;
+        for (v, &xi) in row.iter().zip(x) {
+            // ±1 entries: add or subtract, never multiply — mirrors hardware.
+            if *v > 0 {
+                acc += xi;
+            } else {
+                acc -= xi;
+            }
+        }
+        y[r] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_order_1_2_4() {
+        assert_eq!(hadamard(1), vec![1]);
+        assert_eq!(hadamard(2), vec![1, 1, 1, -1]);
+        let h4 = hadamard(4);
+        #[rustfmt::skip]
+        let expect: Vec<i8> = vec![
+            1,  1,  1,  1,
+            1, -1,  1, -1,
+            1,  1, -1, -1,
+            1, -1, -1,  1,
+        ];
+        assert_eq!(h4, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn hadamard_rejects_non_pow2() {
+        hadamard(6);
+    }
+
+    /// Orthogonality: H Hᵀ = m I for every row pair.
+    #[test]
+    fn hadamard_rows_orthogonal() {
+        for k in 0..6 {
+            let m = 1usize << k;
+            let h = hadamard(m);
+            for r1 in 0..m {
+                for r2 in 0..m {
+                    let dot: i32 = (0..m)
+                        .map(|c| i32::from(h[r1 * m + c]) * i32::from(h[r2 * m + c]))
+                        .sum();
+                    let expect = if r1 == r2 { m as i32 } else { 0 };
+                    assert_eq!(dot, expect, "m={m} rows {r1},{r2}");
+                }
+            }
+        }
+    }
+
+    /// Walsh ordering: sequency strictly increases row by row and spans 0..m-1.
+    #[test]
+    fn walsh_sequency_is_identity_ramp() {
+        for k in 1..8 {
+            let m = 1usize << k;
+            let w = walsh(m);
+            for r in 0..m {
+                assert_eq!(sequency_of_row(&w[r * m..(r + 1) * m]), r, "m={m} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn walsh_is_row_permutation_of_hadamard() {
+        let m = 16;
+        let h = hadamard(m);
+        let w = walsh(m);
+        let mut h_rows: Vec<&[i8]> = (0..m).map(|r| &h[r * m..(r + 1) * m]).collect();
+        let mut w_rows: Vec<&[i8]> = (0..m).map(|r| &w[r * m..(r + 1) * m]).collect();
+        h_rows.sort();
+        w_rows.sort();
+        assert_eq!(h_rows, w_rows);
+    }
+
+    #[test]
+    fn pm1_matvec_identity_on_first_row() {
+        // First Hadamard row is all-ones: y[0] = sum(x).
+        let m = 8;
+        let h = hadamard(m);
+        let x: Vec<f32> = (0..m).map(|i| i as f32).collect();
+        let y = pm1_matvec(&h, m, &x);
+        assert_eq!(y[0], x.iter().sum::<f32>());
+    }
+}

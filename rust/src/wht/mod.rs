@@ -1,0 +1,103 @@
+//! Walsh–Hadamard transform substrate.
+//!
+//! The Walsh–Hadamard transform (WHT) is the frequency transform at the
+//! heart of the paper's model-compression scheme (paper §II-A): a unitary
+//! (up to scale) transform whose matrix contains only ±1, so a hardware
+//! implementation needs no multipliers — additions/subtractions only, which
+//! is exactly what the paper's NMOS crossbar (paper §III-A, [`crate::cim`])
+//! exploits.
+//!
+//! Provided here:
+//!
+//! - [`matrix`] — dense Hadamard matrix `H_k` construction (Sylvester
+//!   recursion, paper eq. (2)) and the sequency-ordered *Walsh* matrix
+//!   `W_k` (rows sorted by sign-change count).
+//! - [`fwht`] — the in-place O(m log m) fast transform (butterfly
+//!   network), natural (Hadamard) and sequency (Walsh) ordered variants,
+//!   plus the exact inverse.
+//! - [`bwht`] — the blockwise Walsh–Hadamard transform (BWHT, paper
+//!   §II-A [31]) that handles dimensions that are not a power of two by
+//!   splitting the transform into power-of-two blocks, avoiding the
+//!   worst-case 2× zero-padding of a monolithic transform.
+//! - [`soft_threshold`] — the trainable soft-thresholding activation
+//!   `S_T(x) = sign(x)·max(|x|-T, 0)` (paper eq. (3)) that replaces
+//!   trainable weights in BWHT layers.
+
+pub mod bwht;
+pub mod fwht;
+pub mod matrix;
+
+pub use bwht::{Bwht, BwhtLayout};
+pub use fwht::{fwht_inplace, fwht_inverse_inplace, fwht_sequency_inplace, ifwht};
+pub use matrix::{hadamard, sequency_of_row, walsh};
+
+/// Soft-thresholding activation `S_T(x)` (paper eq. (3)).
+///
+/// Shrinks `x` toward zero by `t` and zeroes the dead band `|x| <= t`.
+/// `t` is the *trainable* parameter of a BWHT layer; the transform matrix
+/// itself is parameter-free.
+#[inline]
+pub fn soft_threshold(x: f32, t: f32) -> f32 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// Vectorised [`soft_threshold`] over a slice, in place.
+#[inline]
+pub fn soft_threshold_slice(xs: &mut [f32], t: f32) {
+    for x in xs {
+        *x = soft_threshold(*x, t);
+    }
+}
+
+/// Smallest power of two `>= n` (used to size Hadamard blocks).
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_dead_band_zeroes() {
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn soft_threshold_shrinks_by_t() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+    }
+
+    #[test]
+    fn soft_threshold_zero_t_is_identity() {
+        for &x in &[-2.0f32, -0.1, 0.0, 0.1, 7.5] {
+            assert_eq!(soft_threshold(x, 0.0), x);
+        }
+    }
+
+    #[test]
+    fn soft_threshold_slice_matches_scalar() {
+        let mut v = vec![-2.0f32, -1.0, 0.0, 0.5, 2.5];
+        let expect: Vec<f32> = v.iter().map(|&x| soft_threshold(x, 0.75)).collect();
+        soft_threshold_slice(&mut v, 0.75);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(960), 1024);
+    }
+}

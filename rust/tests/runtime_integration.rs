@@ -1,0 +1,125 @@
+//! PJRT integration: the AOT-compiled JAX/Pallas model, loaded and run
+//! from rust, must reproduce the golden logits python exported — the
+//! proof that all three layers compose. Requires `make artifacts`.
+
+use adcim::coordinator::{DigitalEngine, InferenceEngine};
+use adcim::runtime::{Artifacts, Runtime};
+
+fn artifacts() -> Artifacts {
+    Artifacts::open(Artifacts::default_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn float_model_reproduces_golden_logits() {
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let model = runtime.load_hlo_text(&a.hlo_path("model_float")).unwrap();
+    let batch = a.test_batch().unwrap();
+    let logits = model.run_f32(&batch, &[m.batch, m.input]).unwrap();
+    let expected = a.expected_logits().unwrap();
+    assert_eq!(logits.len(), expected.len());
+    for (i, (g, e)) in logits.iter().zip(&expected).enumerate() {
+        assert!(
+            (g - e).abs() < 1e-3 * (1.0 + e.abs()),
+            "logit {i}: rust {g} vs python {e}"
+        );
+    }
+}
+
+#[test]
+fn quant_model_runs_and_classifies() {
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let model = runtime.load_hlo_text(&a.hlo_path("model_quant")).unwrap();
+    let batch = a.test_batch().unwrap();
+    let logits = model.run_f32(&batch, &[m.batch, m.input]).unwrap();
+    let expected = a.read_f32("expected_logits_quant.bin").unwrap();
+    for (i, (g, e)) in logits.iter().zip(&expected).enumerate() {
+        assert!(
+            (g - e).abs() < 1e-3 * (1.0 + e.abs()),
+            "quant logit {i}: rust {g} vs python {e}"
+        );
+    }
+}
+
+#[test]
+fn golden_logits_classify_test_labels() {
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let labels = a.test_labels().unwrap();
+    let logits = a.expected_logits().unwrap();
+    let mut correct = 0;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * m.classes..(i + 1) * m.classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+    }
+    assert!(correct * 2 > labels.len(), "golden accuracy {correct}/{}", labels.len());
+}
+
+#[test]
+fn digital_engine_matches_golden_on_test_batch() {
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let mut engine = DigitalEngine::load(&a, false).unwrap();
+    let batch = a.test_batch().unwrap();
+    let images: Vec<Vec<f32>> =
+        batch.chunks(m.input).map(|c| c.to_vec()).collect();
+    let out = engine.infer_batch(&images).unwrap();
+    let expected = a.expected_logits().unwrap();
+    for (i, logits) in out.iter().enumerate() {
+        for (j, g) in logits.iter().enumerate() {
+            let e = expected[i * m.classes + j];
+            assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()), "[{i},{j}] {g} vs {e}");
+        }
+    }
+}
+
+#[test]
+fn bwht_kernel_hlo_loads_and_runs() {
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let kernel = runtime.load_hlo_text(&a.hlo_path("bwht_kernel")).unwrap();
+    let x = vec![0.5f32; m.batch * m.hidden];
+    let y = kernel.run_f32(&x, &[m.batch, m.hidden]).unwrap();
+    assert_eq!(y.len(), m.batch * m.hidden);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn analog_engine_with_jax_weights_beats_chance() {
+    use adcim::cim::CrossbarConfig;
+    use adcim::coordinator::AnalogEngine;
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let labels = a.test_labels().unwrap();
+    let batch = a.test_batch().unwrap();
+    let images: Vec<Vec<f32>> = batch.chunks(m.input).map(|c| c.to_vec()).collect();
+    let mut engine =
+        AnalogEngine::load(&a, CrossbarConfig::default(), None, m.input_bits, 99).unwrap();
+    let out = engine.infer_batch(&images).unwrap();
+    let mut correct = 0;
+    for (logits, &label) in out.iter().zip(&labels) {
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+    }
+    // The analog path carries quantization + noise; well above 10% chance.
+    assert!(correct * 3 > labels.len(), "analog accuracy {correct}/{}", labels.len());
+}

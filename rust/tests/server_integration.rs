@@ -1,0 +1,139 @@
+//! End-to-end coordinator integration: router + batcher + backpressure +
+//! workers over real engines (analog CiM simulator; digital PJRT is
+//! covered in runtime_integration.rs and examples/edge_pipeline.rs).
+
+use std::time::{Duration, Instant};
+
+use adcim::cim::CrossbarConfig;
+use adcim::config::ServerConfig;
+use adcim::coordinator::{
+    AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::nn::dataset::Dataset;
+use adcim::runtime::Artifacts;
+
+fn artifacts() -> Artifacts {
+    Artifacts::open(Artifacts::default_dir()).expect("run `make artifacts` first")
+}
+
+fn collect(server: &EdgeServer, n: usize) -> Vec<adcim::coordinator::InferenceResponse> {
+    let mut got = Vec::new();
+    let t0 = Instant::now();
+    while got.len() < n && t0.elapsed() < Duration::from_secs(60) {
+        if let Some(r) = server.recv_response(Duration::from_millis(200)) {
+            got.push(r);
+        }
+    }
+    got
+}
+
+#[test]
+fn analog_pool_serves_with_expected_accuracy() {
+    let a = artifacts();
+    let engines: Vec<Box<dyn InferenceEngine>> = (0..2)
+        .map(|w| {
+            Box::new(
+                AnalogEngine::load(&a, CrossbarConfig::default(), None, 4, w as u64).unwrap(),
+            ) as Box<dyn InferenceEngine>
+        })
+        .collect();
+    let cfg = ServerConfig { workers: 2, batch: 8, batch_deadline_us: 1000, ..Default::default() };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::LeastLoaded).unwrap();
+
+    let data = Dataset::digits(48, 12, 0xeda);
+    for (i, img) in data.images.iter().enumerate() {
+        assert!(server.submit(InferenceRequest::new(
+            i as u64,
+            (i % 3) as u32,
+            img.clone().reshape(&[144]).data().to_vec()
+        )));
+    }
+    let got = collect(&server, 48);
+    assert_eq!(got.len(), 48, "all responses arrive");
+    let correct = got.iter().filter(|r| r.class == data.labels[r.id as usize]).count();
+    assert!(correct * 3 > 48, "accuracy {correct}/48 vs chance 4.8");
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 48);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn per_request_ids_preserved_through_pipeline() {
+    let a = artifacts();
+    let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(
+        AnalogEngine::load(&a, CrossbarConfig::ideal(), None, 4, 1).unwrap(),
+    )];
+    let cfg = ServerConfig { workers: 1, batch: 4, batch_deadline_us: 500, ..Default::default() };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+    let data = Dataset::digits(12, 12, 0x1d5);
+    for (i, img) in data.images.iter().enumerate() {
+        server.submit(InferenceRequest::new(
+            1000 + i as u64,
+            0,
+            img.clone().reshape(&[144]).data().to_vec(),
+        ));
+    }
+    let got = collect(&server, 12);
+    let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (1000..1012).collect::<Vec<u64>>());
+    server.shutdown();
+}
+
+#[test]
+fn analog_engine_early_termination_counts_and_saves() {
+    use adcim::cim::EarlyTermination;
+    use adcim::coordinator::InferenceEngine as _;
+    let a = artifacts();
+    let m = a.manifest().unwrap();
+    let batch = a.test_batch().unwrap();
+    let images: Vec<Vec<f32>> = batch.chunks(m.input).map(|c| c.to_vec()).collect();
+    let mut engine = AnalogEngine::load(
+        &a,
+        CrossbarConfig::default(),
+        Some(EarlyTermination::exact(6.0)),
+        m.input_bits,
+        3,
+    )
+    .unwrap();
+    let _ = engine.infer_batch(&images).unwrap();
+    let (processed, skipped) = engine.termination_stats();
+    assert!(processed > 0, "no work recorded");
+    // The QAT-trained thresholds give the dead band real width: some
+    // row-plane work must be skipped.
+    assert!(skipped > 0, "early termination saved nothing");
+}
+
+#[test]
+fn wrong_image_dim_is_engine_error_not_panic() {
+    use adcim::coordinator::InferenceEngine as _;
+    let a = artifacts();
+    let mut engine = AnalogEngine::load(&a, CrossbarConfig::ideal(), None, 4, 5).unwrap();
+    let res = engine.infer_batch(&[vec![0.0; 7]]);
+    assert!(res.is_err(), "dim mismatch must surface as Err");
+}
+
+#[test]
+fn metrics_reflect_served_load() {
+    let a = artifacts();
+    let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(
+        AnalogEngine::load(&a, CrossbarConfig::ideal(), None, 4, 2).unwrap(),
+    )];
+    let cfg = ServerConfig { workers: 1, batch: 8, batch_deadline_us: 500, ..Default::default() };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+    let data = Dataset::digits(16, 12, 0x3e7);
+    for (i, img) in data.images.iter().enumerate() {
+        server.submit(InferenceRequest::new(
+            i as u64,
+            0,
+            img.clone().reshape(&[144]).data().to_vec(),
+        ));
+    }
+    let got = collect(&server, 16);
+    assert_eq!(got.len(), 16);
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 16);
+    assert!(snap.p50_latency_us > 0.0);
+    assert!(snap.mean_batch >= 1.0);
+    assert!(snap.throughput_per_s > 0.0);
+}

@@ -1,0 +1,149 @@
+//! Cross-module invariants: the properties DESIGN.md promises, tested
+//! across module boundaries (randomized via the in-house prop driver).
+
+use adcim::adc::{binomial_mav_pmf, Adc, AsymmetricSearch, ImmersedAdc, ImmersedMode};
+use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig, EarlyTermination};
+use adcim::network::{CouplingMode, InterleaveSchedule, Topology};
+use adcim::util::{prop, Rng};
+use adcim::wht::{soft_threshold, Bwht};
+
+/// The full chain WHT → crossbar bitplanes → reconstruction equals the
+/// integer transform when everything is ideal and quantization is
+/// bypassed (∞-precision oracle).
+#[test]
+fn ideal_bitplane_chain_equals_integer_transform() {
+    prop::check("bitplane chain == integer matvec", 64, |rng| {
+        let m = 1usize << (3 + rng.index(3)); // 8..32
+        let bits = 1 + rng.index(6) as u8;
+        let x: Vec<u32> = (0..m).map(|_| rng.below(1 << bits) as u32).collect();
+        let mut r2 = Rng::new(rng.next_u64());
+        let xb = Crossbar::walsh(m, CrossbarConfig::ideal(), &mut r2);
+        let eng = BitplaneEngine::new(xb, bits);
+        let exact = eng.transform_exact(&x);
+        // Oracle via float FWHT (sequency order matches Walsh matrix).
+        let mut f: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        adcim::wht::fwht_sequency_inplace(&mut f);
+        for (a, b) in exact.iter().zip(&f) {
+            adcim::prop_assert!((*a as f32 - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+/// BWHT round trip through the padded layout is exact for any dim.
+#[test]
+fn bwht_round_trip_any_dim() {
+    prop::check("bwht round trip", 128, |rng| {
+        let n = 1 + rng.index(300);
+        let max_block = 1usize << (2 + rng.index(6));
+        let b = Bwht::for_dim(n, max_block);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let y = b.forward(&x);
+        let back = b.inverse(&y);
+        for (a, e) in back.iter().zip(&x) {
+            adcim::prop_assert!((a - e).abs() < 1e-3, "n={n} {a} vs {e}");
+        }
+        Ok(())
+    });
+}
+
+/// Early termination with margin 1.0 never changes soft-thresholded
+/// outputs, at any threshold, noise-free.
+#[test]
+fn exact_early_termination_is_output_preserving() {
+    prop::check("exact ET output preserving", 48, |rng| {
+        let m = 16;
+        let bits = 4u8;
+        let t = rng.uniform_in(0.0, 40.0) as f32;
+        let x: Vec<u32> = (0..m).map(|_| rng.below(1 << bits) as u32).collect();
+        let seed = rng.next_u64();
+
+        let mut base = BitplaneEngine::new(
+            Crossbar::walsh(m, CrossbarConfig::ideal(), &mut Rng::new(5)),
+            bits,
+        );
+        let plain = base.transform(&x, &mut Rng::new(seed));
+        let mut et_eng = BitplaneEngine::new(
+            Crossbar::walsh(m, CrossbarConfig::ideal(), &mut Rng::new(5)),
+            bits,
+        )
+        .with_early_term(EarlyTermination::exact(t));
+        let early = et_eng.transform(&x, &mut Rng::new(seed));
+        for (a, b) in plain.values.iter().zip(&early.values) {
+            adcim::prop_assert!(
+                soft_threshold(*a, t) == soft_threshold(*b, t),
+                "T={t}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Asymmetric search always returns the ideal code for any distribution
+/// it was built from (correctness is distribution-independent; only the
+/// comparison count depends on the pmf).
+#[test]
+fn asymmetric_search_code_correct_for_any_pmf() {
+    prop::check("asymmetric codes independent of pmf", 64, |rng| {
+        let bits = 4u8;
+        let n = 1usize << bits;
+        // Random pmf.
+        let pmf: Vec<f64> = (0..n).map(|_| rng.uniform() + 1e-6).collect();
+        let tree = AsymmetricSearch::build(bits, &pmf);
+        let mut adc = ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar);
+        let v = rng.uniform();
+        let c = tree.convert(&mut adc, v, rng);
+        adcim::prop_assert!(c.code == adc.ideal_code(v), "v={v}");
+        Ok(())
+    });
+}
+
+/// Entropy lower bound and bits upper bound on expected comparisons.
+#[test]
+fn asymmetric_search_bounds() {
+    prop::check("asym search entropy/bits bounds", 48, |rng| {
+        let bits = 3 + rng.index(3) as u8;
+        let cols = 16 + rng.index(48);
+        let pmf = binomial_mav_pmf(cols, rng.uniform_in(0.2, 0.9), bits);
+        let tree = AsymmetricSearch::build(bits, &pmf);
+        let h = adcim::util::stats::entropy_bits(&pmf);
+        let e = tree.expected_comparisons();
+        adcim::prop_assert!(e + 1e-9 >= h, "E={e} < H={h}");
+        adcim::prop_assert!(e <= bits as f64 + 1e-9, "E={e} > bits={bits}");
+        Ok(())
+    });
+}
+
+/// Interleave schedules uphold the pairing invariants for every
+/// topology and phase count.
+#[test]
+fn interleave_schedules_always_valid() {
+    prop::check("schedules valid across topologies", 96, |rng| {
+        let mode = match rng.index(3) {
+            0 => CouplingMode::NearestNeighbour,
+            1 => CouplingMode::FlashGroup { refs: 3 },
+            _ => CouplingMode::FlashGroup { refs: 1 + rng.index(7) },
+        };
+        let n = mode.group_size() * (1 + rng.index(6)) + rng.index(mode.group_size());
+        let t = Topology::new(n, mode);
+        let s = InterleaveSchedule::build(&t, 1 + rng.index(16));
+        s.validate(&t)
+    });
+}
+
+/// The crossbar's raw MAV voltages are always within rails and the
+/// plus/minus charge counts are consistent with the packed dot product.
+#[test]
+fn crossbar_mav_within_rails() {
+    prop::check("MAV within [0, VDD]", 64, |rng| {
+        let m = 1usize << (3 + rng.index(3));
+        let mut r2 = Rng::new(rng.next_u64());
+        let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut r2);
+        let bits: Vec<bool> = (0..m).map(|_| rng.bool()).collect();
+        let x = BitVec::from_bits(&bits);
+        for v in xb.compute_mav(&x, rng) {
+            adcim::prop_assert!((0.0..=1.01).contains(&v), "MAV {v} out of rails");
+        }
+        Ok(())
+    });
+}
