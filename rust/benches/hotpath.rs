@@ -1,12 +1,117 @@
 //! Bench: whole-stack hot paths — the §Perf working set. Run before and
-//! after optimizations; EXPERIMENTS.md §Perf records the deltas.
+//! after optimizations; EXPERIMENTS.md §Perf records the deltas and
+//! `BENCH_hotpath.json` (written at the end of this run, path
+//! overridable via `BENCH_JSON`) is the machine-readable trajectory.
+//!
+//! The `(seed baseline)` cases re-implement the pre-optimization
+//! algorithms *inside this binary* — per-row five-Gaussian noise with a
+//! fresh `Vec<bool>` per crossbar op, scalar-accumulator dense matvec —
+//! so one run measures before and after on identical hardware.
 
-use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig};
+use adcim::analog::timing::Phase;
+use adcim::analog::{Comparator, NoiseModel, OperatingPoint, PhaseTimer, SupplyModel};
+use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig, SignMatrix};
+use adcim::coordinator::{AnalogEngine, InferenceEngine};
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::layer::dot_f32;
 use adcim::nn::model::bwht_mlp;
 use adcim::nn::Tensor;
 use adcim::util::bench::{black_box, BenchSet};
 use adcim::util::Rng;
 use adcim::wht::{fwht_inplace, Bwht};
+
+/// The seed's crossbar inner loop, reproduced verbatim in shape: per row
+/// two dead-cell thinning draws, two kT/C draws, two spread draws and a
+/// noisy compare, plus a fresh `Vec<bool>` allocation per operation.
+struct SeedCrossbar {
+    matrix: SignMatrix,
+    comparators: Vec<Comparator>,
+    vdd: f64,
+    settle: f64,
+    p_dead: f64,
+    spread: f64,
+    ktc_sigma: f64,
+}
+
+impl SeedCrossbar {
+    fn walsh(m: usize, rng: &mut Rng) -> Self {
+        let supply = SupplyModel::default();
+        let noise = NoiseModel::default();
+        let op = OperatingPoint::crossbar_nominal();
+        let timer = PhaseTimer::new(supply, op);
+        let settle = timer.settle(Phase::LocalCompute) * timer.settle(Phase::RowMergeSum);
+        let mut p_dead = supply.dead_cell_prob(op.vdd, noise.vth_mismatch_sigma_v);
+        if p_dead < 1e-9 {
+            p_dead = 0.0;
+        }
+        let mut spread = supply.settle_vth_sensitivity(op.vdd, timer.step_time_ps())
+            * noise.vth_mismatch_sigma_v;
+        if spread < 1e-4 {
+            spread = 0.0;
+        }
+        let ktc_sigma =
+            adcim::analog::noise::ktc_noise_v(m as f64 * 1.2, noise.temp_k);
+        SeedCrossbar {
+            matrix: SignMatrix::walsh(m),
+            comparators: (0..m).map(|_| Comparator::sample(&noise, rng)).collect(),
+            vdd: op.vdd,
+            settle,
+            p_dead,
+            spread,
+            ktc_sigma,
+        }
+    }
+
+    fn row_sum_voltages(&self, r: usize, x: &BitVec, rng: &mut Rng) -> (f64, f64) {
+        let cols = self.matrix.cols() as f64;
+        let mut plus = self.matrix.row_plus_count(r, x) as f64;
+        let ones = x.count_ones() as f64;
+        let mut minus = ones - plus;
+        if self.p_dead > 0.0 {
+            let thin = |count: f64, rng: &mut Rng| -> f64 {
+                let mean = count * (1.0 - self.p_dead);
+                let sigma = (count * self.p_dead * (1.0 - self.p_dead)).sqrt();
+                (mean + rng.normal() * sigma).max(0.0)
+            };
+            plus = thin(plus, rng);
+            minus = thin(minus, rng);
+        }
+        let mut v_sl = self.vdd * (plus / cols) * self.settle;
+        let mut v_slb = self.vdd * (minus / cols) * self.settle;
+        if self.ktc_sigma > 0.0 {
+            v_sl += rng.normal() * self.ktc_sigma;
+            v_slb += rng.normal() * self.ktc_sigma;
+        }
+        if self.spread > 0.0 {
+            let scale = self.vdd * self.spread / cols;
+            v_sl += rng.normal() * scale * plus.sqrt();
+            v_slb += rng.normal() * scale * minus.sqrt();
+        }
+        (v_sl.clamp(0.0, self.vdd), v_slb.clamp(0.0, self.vdd))
+    }
+
+    fn process_bitplane(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<bool> {
+        (0..self.matrix.rows())
+            .map(|r| {
+                let (sl, slb) = self.row_sum_voltages(r, x, rng);
+                self.comparators[r].compare(sl, slb, rng)
+            })
+            .collect()
+    }
+}
+
+/// The seed's scalar-accumulator dense matvec (latency-chained FP adds).
+fn seed_matvec(w: &[f32], b: &[f32], x: &[f32], out_dim: usize, y: &mut [f32]) {
+    let in_dim = x.len();
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        let mut acc = b[o];
+        for (wi, xi) in row.iter().zip(x) {
+            acc += wi * xi;
+        }
+        y[o] = acc;
+    }
+}
 
 fn main() {
     let mut set = BenchSet::new("L3 hot paths");
@@ -26,18 +131,38 @@ fn main() {
         black_box(b.forward(&x));
     });
 
-    // Crossbar bitplane op (the analog inner loop).
+    // Crossbar bitplane op (the analog inner loop), seed baseline vs the
+    // folded-noise packed pipeline.
     let mut rng = Rng::new(1);
     for m in [32usize, 128] {
-        let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+        let mut seed_xb = SeedCrossbar::walsh(m, &mut rng.clone());
         let x = BitVec::from_bits(&(0..m).map(|i| i % 2 == 0).collect::<Vec<_>>());
         let mut r = Rng::new(2);
+        let xs = x.clone();
+        set.run(&format!("crossbar {m}x{m} bitplane (seed baseline)"), move || {
+            black_box(seed_xb.process_bitplane(&xs, &mut r));
+        });
+
+        let mut xb = Crossbar::walsh(m, CrossbarConfig::default(), &mut rng);
+        let mut r = Rng::new(2);
+        let mut out = BitVec::zeros(m);
+        let xs = x.clone();
         set.run(&format!("crossbar {m}x{m} bitplane"), move || {
-            black_box(xb.process_bitplane(&x, &mut r));
+            xb.process_bitplane_into(black_box(&xs), &mut r, &mut out);
+            black_box(&out);
+        });
+
+        // The zero-noise oracle path: pure popcount, no RNG.
+        let mut ideal = Crossbar::walsh(m, CrossbarConfig::ideal(), &mut rng);
+        let mut r = Rng::new(2);
+        let mut out = BitVec::zeros(m);
+        set.run(&format!("crossbar {m}x{m} bitplane (ideal popcount)"), move || {
+            ideal.process_bitplane_into(black_box(&x), &mut r, &mut out);
+            black_box(&out);
         });
     }
 
-    // Multi-bit engine transform (4 planes).
+    // Multi-bit engine transform (4 planes) and the batched API.
     let mut eng = BitplaneEngine::new(
         Crossbar::walsh(32, CrossbarConfig::default(), &mut Rng::new(3)),
         4,
@@ -48,10 +173,77 @@ fn main() {
         black_box(eng.transform(&xq, &mut r));
     });
 
-    // Full model forward (analog BWHT digit MLP, float mode).
+    let mut eng = BitplaneEngine::new(
+        Crossbar::walsh(32, CrossbarConfig::default(), &mut Rng::new(3)),
+        4,
+    );
+    let batch: Vec<Vec<u32>> = (0..16)
+        .map(|s| (0..32).map(|i| ((i * 3 + s) % 16) as u32).collect())
+        .collect();
+    set.run("bitplane engine transform_batch x16", move || {
+        black_box(eng.transform_batch(&batch, 0x5eed));
+    });
+
+    // Dense matvec: seed scalar-accumulator baseline vs unrolled dot.
+    let mut wr = Rng::new(5);
+    let w = wr.normal_vec(144 * 32);
+    let bias = wr.normal_vec(32);
+    let xv = wr.normal_vec(144);
+    let mut y = vec![0.0f32; 32];
+    {
+        let (w, bias, xv) = (w.clone(), bias.clone(), xv.clone());
+        set.run("dense 144x32 matvec (seed baseline)", move || {
+            seed_matvec(black_box(&w), &bias, &xv, 32, &mut y);
+            black_box(&y);
+        });
+    }
+    set.run("dense 144x32 matvec (unrolled)", move || {
+        let mut acc = 0.0f32;
+        for o in 0..32 {
+            acc += bias[o] + dot_f32(black_box(&w[o * 144..(o + 1) * 144]), &xv);
+        }
+        black_box(acc);
+    });
+
+    // Full model forward (analog BWHT digit MLP, float mode): the
+    // serving path (forward_inference) vs the training forward.
     let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
     let img = Tensor::vec1(&vec![0.5f32; 144]);
+    {
+        let imgc = img.clone();
+        set.run("digit MLP forward (train path)", move || {
+            black_box(model.forward(&imgc));
+        });
+    }
+    let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+    let imgc = img.clone();
     set.run("digit MLP forward (float)", move || {
-        black_box(model.forward(&img));
+        black_box(model.forward_inference(&imgc));
     });
+
+    // Batched analog inference: thread-sharded engine, same model/seed.
+    for threads in [1usize, 4] {
+        let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 7,
+            })
+        });
+        let mut engine = AnalogEngine::from_model(model, 144).with_threads(threads);
+        let images: Vec<Vec<f32>> =
+            (0..32).map(|i| vec![(i % 5) as f32 * 0.2; 144]).collect();
+        set.run(&format!("analog MLP infer_batch b=32 t={threads}"), move || {
+            black_box(engine.infer_batch(&images).unwrap());
+        });
+    }
+
+    let path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match set.write_json(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

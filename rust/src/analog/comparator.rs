@@ -46,6 +46,30 @@ impl Comparator {
         v_plus - v_minus + self.offset_v + noise > 0.0
     }
 
+    /// Clocked decision on a differential that **already includes every
+    /// per-decision noise term**: the crossbar hot path folds thermal and
+    /// comparator noise into a single Gaussian draw per row (independent
+    /// Gaussians add in variance), so only the static offset is applied
+    /// here. See `crate::cim::crossbar` §noise-folding.
+    #[inline]
+    pub fn compare_prenoised(&mut self, diff_v: f64) -> bool {
+        self.decisions += 1;
+        diff_v + self.offset_v > 0.0
+    }
+
+    /// Record a decision resolved by the caller (the noiseless popcount
+    /// fast path) so energy/decision accounting stays consistent.
+    #[inline]
+    pub fn note_decision(&mut self) {
+        self.decisions += 1;
+    }
+
+    /// Per-decision noise sigma of this instance (V).
+    #[inline]
+    pub fn noise_sigma_v(&self) -> f64 {
+        self.noise_sigma_v
+    }
+
     /// Static offset of this instance (V).
     pub fn offset_v(&self) -> f64 {
         self.offset_v

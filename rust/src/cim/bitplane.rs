@@ -18,24 +18,43 @@ use super::bitvec::BitVec;
 use super::crossbar::Crossbar;
 use super::early_term::{EarlyTermination, TermStats};
 
-/// Decompose non-negative integers into packed bitplanes, LSB first.
+/// Decompose non-negative integers into packed bitplanes, LSB first,
+/// reusing the buffers in `planes` (the scratch-arena form — zero
+/// allocations once the arena is warm).
 /// Every value must fit in `bits` (values are asserted, not clipped —
 /// quantization happens upstream in the NN layers).
-pub fn decompose_bitplanes(x: &[u32], bits: u8) -> Vec<BitVec> {
+pub fn decompose_bitplanes_into(x: &[u32], bits: u8, planes: &mut Vec<BitVec>) {
     for &v in x {
         assert!(v < (1u32 << bits), "value {v} does not fit in {bits} bits");
     }
-    (0..bits)
-        .map(|p| {
-            let mut plane = BitVec::zeros(x.len());
-            for (i, &v) in x.iter().enumerate() {
-                if (v >> p) & 1 == 1 {
-                    plane.set(i, true);
-                }
+    planes.resize_with(bits as usize, || BitVec::zeros(0));
+    for (p, plane) in planes.iter_mut().enumerate() {
+        plane.reset(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            if (v >> p) & 1 == 1 {
+                plane.set(i, true);
             }
-            plane
-        })
-        .collect()
+        }
+    }
+}
+
+/// Allocating wrapper over [`decompose_bitplanes_into`].
+pub fn decompose_bitplanes(x: &[u32], bits: u8) -> Vec<BitVec> {
+    let mut planes = Vec::new();
+    decompose_bitplanes_into(x, bits, &mut planes);
+    planes
+}
+
+/// Reusable working set for bitplane transforms: plane decompositions,
+/// the packed per-plane sign buffer and the early-termination `active`
+/// mask. One arena amortizes every per-transform allocation the engine
+/// used to make (five `Vec`s per call — EXPERIMENTS.md §Perf); engines
+/// own one internally and batch APIs reuse it across samples.
+#[derive(Debug, Clone, Default)]
+pub struct PlaneScratch {
+    planes: Vec<BitVec>,
+    active: Vec<bool>,
+    signs: BitVec,
 }
 
 /// Result of one bitplane-wise transform.
@@ -58,12 +77,14 @@ pub struct BitplaneEngine {
     pub input_bits: u8,
     /// Optional early-termination policy (paper §III-C).
     pub early_term: Option<EarlyTermination>,
+    /// Internal scratch arena reused by every transform call.
+    scratch: PlaneScratch,
 }
 
 impl BitplaneEngine {
     pub fn new(crossbar: Crossbar, input_bits: u8) -> Self {
         assert!(input_bits >= 1 && input_bits <= 16);
-        BitplaneEngine { crossbar, input_bits, early_term: None }
+        BitplaneEngine { crossbar, input_bits, early_term: None, scratch: PlaneScratch::default() }
     }
 
     pub fn with_early_term(mut self, et: EarlyTermination) -> Self {
@@ -79,43 +100,61 @@ impl BitplaneEngine {
         &mut self.crossbar
     }
 
-    /// Transform an unsigned quantized vector (values < 2^input_bits).
+    /// Transform an unsigned quantized vector (values < 2^input_bits),
+    /// reusing the engine's internal scratch arena.
     ///
     /// Planes are processed **MSB → LSB** so the early-termination bound
     /// (remaining planes can add at most `2^p − 1`) tightens fastest.
     pub fn transform(&mut self, x: &[u32], rng: &mut Rng) -> BitplaneOutput {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = self.transform_with_scratch(x, rng, &mut scratch);
+        self.scratch = scratch;
+        out
+    }
+
+    /// [`BitplaneEngine::transform`] against an explicit caller-owned
+    /// scratch arena (for callers that pool arenas across engines).
+    /// Identical RNG consumption and bit-identical output to `transform`.
+    pub fn transform_with_scratch(
+        &mut self,
+        x: &[u32],
+        rng: &mut Rng,
+        s: &mut PlaneScratch,
+    ) -> BitplaneOutput {
         assert_eq!(x.len(), self.crossbar.cols(), "input length != crossbar cols");
-        let planes = decompose_bitplanes(x, self.input_bits);
+        decompose_bitplanes_into(x, self.input_bits, &mut s.planes);
         let rows = self.crossbar.rows();
         let nbits = self.input_bits as usize;
 
         let mut acc = vec![0.0f32; rows];
         let mut plane_signs = vec![vec![false; rows]; nbits];
-        let mut active = vec![true; rows];
+        s.active.clear();
+        s.active.resize(rows, true);
         let mut term = TermStats::new(rows, nbits);
 
         // MSB → LSB.
         for p in (0..nbits).rev() {
-            if active.iter().all(|a| !a) {
-                term.record_skipped_plane(p, &active);
+            if s.active.iter().all(|a| !a) {
+                term.record_skipped_plane(p, &s.active);
                 continue;
             }
-            let signs = self.crossbar.process_bitplane(&planes[p], rng);
+            self.crossbar.process_bitplane_into(&s.planes[p], rng, &mut s.signs);
             let weight = (1u32 << p) as f32;
             for r in 0..rows {
-                if !active[r] {
+                if !s.active[r] {
                     term.record_skipped_row(r);
                     continue;
                 }
-                let s = if signs[r] { 1.0 } else { -1.0 };
-                acc[r] += weight * s;
-                plane_signs[p][r] = signs[r];
+                let sign = s.signs.get(r);
+                let sv = if sign { 1.0 } else { -1.0 };
+                acc[r] += weight * sv;
+                plane_signs[p][r] = sign;
                 term.record_processed(r);
                 if let Some(et) = &self.early_term {
                     // Remaining planes 0..p contribute at most 2^p − 1.
                     let remaining = (1u32 << p) as f32 - 1.0;
                     if et.should_terminate(acc[r], remaining) {
-                        active[r] = false;
+                        s.active[r] = false;
                         acc[r] = 0.0; // provably inside the dead band ⇒ zero
                         term.record_terminated(r, p);
                     }
@@ -125,11 +164,54 @@ impl BitplaneEngine {
         BitplaneOutput { values: acc, plane_signs, term }
     }
 
+    /// Transform a batch of unsigned vectors, reusing the engine's
+    /// scratch arena across samples.
+    ///
+    /// Sample `i` draws its analog noise from `Rng::for_stream(seed, i)`,
+    /// so the result is **bit-exactly** equal to calling
+    /// [`BitplaneEngine::transform`] once per sample with those
+    /// generators — and therefore independent of how a caller shards the
+    /// batch across worker threads (each shard derives the same
+    /// per-sample streams from `seed` + the sample's global index).
+    pub fn transform_batch(&mut self, xs: &[Vec<u32>], seed: u64) -> Vec<BitplaneOutput> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let out = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let mut rng = Rng::for_stream(seed, i as u64);
+                self.transform_with_scratch(x, &mut rng, &mut scratch)
+            })
+            .collect();
+        self.scratch = scratch;
+        out
+    }
+
     /// Signed transform via positive/negative split: `x = x⁺ − x⁻`.
-    /// Values must satisfy `|v| < 2^input_bits`. Costs two unsigned passes.
+    /// Values must satisfy `|v| < 2^input_bits`.
+    ///
+    /// Costs two unsigned crossbar passes **only when both halves carry
+    /// charge**: an all-zero half corresponds to a pass the hardware
+    /// never fires (no input bit ever raises a column line), so its
+    /// contribution is identically zero and the pass — its ops, its
+    /// energy, its noise draws — is skipped. All-non-negative inputs
+    /// therefore cost exactly one pass. (This also changes *values* vs
+    /// earlier releases, deliberately: quantizing a zero half used to
+    /// inject a spurious noise-dependent offset of up to ±(2^bits − 1)
+    /// per row into the subtraction.)
     pub fn transform_signed(&mut self, x: &[i32], rng: &mut Rng) -> BitplaneOutput {
         let pos: Vec<u32> = x.iter().map(|&v| v.max(0) as u32).collect();
         let neg: Vec<u32> = x.iter().map(|&v| (-v).max(0) as u32).collect();
+        if neg.iter().all(|&v| v == 0) {
+            return self.transform(&pos, rng);
+        }
+        if pos.iter().all(|&v| v == 0) {
+            let mut out = self.transform(&neg, rng);
+            for v in &mut out.values {
+                *v = -*v;
+            }
+            return out;
+        }
         let out_p = self.transform(&pos, rng);
         let out_n = self.transform(&neg, rng);
         let values =
@@ -267,5 +349,72 @@ mod tests {
         eng.crossbar_mut().reset_counters();
         let _ = eng.transform(&x, &mut rng);
         assert_eq!(eng.crossbar().ops(), 6, "one crossbar op per plane");
+    }
+
+    #[test]
+    fn decompose_into_reuses_wider_arena() {
+        let mut planes = Vec::new();
+        decompose_bitplanes_into(&[200, 17, 3], 8, &mut planes);
+        assert_eq!(planes.len(), 8);
+        // Narrower redecomposition over a shorter input must fully reset.
+        decompose_bitplanes_into(&[1, 0], 2, &mut planes);
+        assert_eq!(planes.len(), 2);
+        assert_eq!(planes[0].len(), 2);
+        assert!(planes[0].get(0) && !planes[0].get(1));
+        assert_eq!(planes[1].count_ones(), 0);
+        let fresh = decompose_bitplanes(&[1, 0], 2);
+        assert_eq!(planes, fresh);
+    }
+
+    #[test]
+    fn batch_equals_sequential_per_stream_transforms() {
+        // The transform_batch determinism contract, on a *noisy* config:
+        // batch output == one transform per sample with Rng::for_stream.
+        let mut rng = Rng::new(9);
+        let xb = Crossbar::walsh(32, CrossbarConfig::default(), &mut rng);
+        let mut batch_eng = BitplaneEngine::new(xb.clone(), 4);
+        let mut seq_eng = BitplaneEngine::new(xb, 4);
+        let xs: Vec<Vec<u32>> = (0..12)
+            .map(|s| (0..32).map(|i| ((i * 7 + s * 13) % 16) as u32).collect())
+            .collect();
+        let seed = 0xbeef;
+        let batched = batch_eng.transform_batch(&xs, seed);
+        for (i, x) in xs.iter().enumerate() {
+            let mut r = Rng::for_stream(seed, i as u64);
+            let single = seq_eng.transform(x, &mut r);
+            assert_eq!(batched[i].values, single.values, "sample {i}");
+            assert_eq!(batched[i].plane_signs, single.plane_signs, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn signed_skips_all_zero_half() {
+        let (mut eng, mut rng) = engine(16, 4, 7);
+        // All-non-negative input: exactly one pass worth of crossbar ops.
+        let x: Vec<i32> = (0..16).map(|i| (i % 8) as i32).collect();
+        eng.crossbar_mut().reset_counters();
+        let out = eng.transform_signed(&x, &mut rng);
+        assert_eq!(eng.crossbar().ops(), 4, "one op per plane, single pass");
+        // And the output equals the plain unsigned transform (ideal
+        // crossbar ⇒ deterministic, rng-independent).
+        let pos: Vec<u32> = x.iter().map(|&v| v as u32).collect();
+        let unsigned = eng.transform(&pos, &mut rng);
+        assert_eq!(out.values, unsigned.values);
+
+        // All-non-positive input: single pass, negated values.
+        let xn: Vec<i32> = x.iter().map(|&v| -v).collect();
+        eng.crossbar_mut().reset_counters();
+        let out_n = eng.transform_signed(&xn, &mut rng);
+        assert_eq!(eng.crossbar().ops(), 4);
+        for (a, b) in out_n.values.iter().zip(&unsigned.values) {
+            assert_eq!(*a, -*b);
+        }
+
+        // Mixed input still costs both passes.
+        let mut xm = x.clone();
+        xm[0] = -3;
+        eng.crossbar_mut().reset_counters();
+        let _ = eng.transform_signed(&xm, &mut rng);
+        assert_eq!(eng.crossbar().ops(), 8, "two passes for mixed signs");
     }
 }

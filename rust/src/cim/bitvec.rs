@@ -13,6 +13,13 @@ pub struct BitVec {
     len: usize,
 }
 
+impl Default for BitVec {
+    /// Empty vector (scratch-buffer initial state; see [`BitVec::reset`]).
+    fn default() -> Self {
+        BitVec::zeros(0)
+    }
+}
+
 impl BitVec {
     /// All-zeros vector of `len` bits.
     pub fn zeros(len: usize) -> Self {
@@ -67,6 +74,22 @@ impl BitVec {
     #[inline]
     pub fn words(&self) -> &[u64] {
         &self.words
+    }
+
+    /// Clear all bits (length unchanged).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Resize to `len` bits and clear — reuses the word allocation when
+    /// possible. Scratch buffers in the crossbar hot path use this
+    /// instead of constructing a fresh `BitVec` per operation.
+    #[inline]
+    pub fn reset(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
     }
 }
 
@@ -151,8 +174,14 @@ impl SignMatrix {
     }
 
     /// All row dot products (the exact digital transform of one plane).
+    ///
+    /// PERF: `x.count_ones()` is hoisted out of the row loop — `row_dot`
+    /// recomputes it per row, which doubles the popcount work of a full
+    /// matvec (see EXPERIMENTS.md §Perf).
     pub fn matvec(&self, x: &BitVec) -> Vec<i32> {
-        (0..self.rows).map(|r| self.row_dot(r, x)).collect()
+        debug_assert_eq!(x.len(), self.cols);
+        let ones = x.count_ones() as i32;
+        (0..self.rows).map(|r| 2 * self.row_plus_count(r, x) as i32 - ones).collect()
     }
 }
 
@@ -230,6 +259,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn matvec_equals_per_row_dot() {
+        prop::check("matvec == row_dot per row", 96, |rng: &mut Rng| {
+            let cols = 1 + rng.index(180);
+            let rows = 1 + rng.index(24);
+            let mx = SignMatrix::from_fn(rows, cols, |_, _| rng.bool());
+            let bits: Vec<bool> = (0..cols).map(|_| rng.bool()).collect();
+            let x = BitVec::from_bits(&bits);
+            let mv = mx.matvec(&x);
+            for r in 0..rows {
+                crate::prop_assert!(
+                    mv[r] == mx.row_dot(r, &x),
+                    "row {r}: matvec {} vs row_dot {}",
+                    mv[r],
+                    mx.row_dot(r, &x)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reset_reuses_and_clears() {
+        let mut v = BitVec::from_bits(&[true; 130]);
+        v.reset(70);
+        assert_eq!(v.len(), 70);
+        assert_eq!(v.count_ones(), 0);
+        v.set(69, true);
+        v.reset(200);
+        assert_eq!(v.len(), 200);
+        assert_eq!(v.count_ones(), 0);
+        v.set(199, true);
+        assert!(v.get(199));
+        v.clear();
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.len(), 200);
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!
 //! The same step-3 voltages, *without* step 4, are the MAV outputs the
 //! memory-immersed ADC digitizes in [`crate::adc::immersed`].
+//!
+//! Hot-path shape (EXPERIMENTS.md §Perf): the allocation-free
+//! [`Crossbar::process_bitplane_into`] / [`Crossbar::compute_mav_into`]
+//! write into caller-owned packed buffers; per-operating-point noise
+//! statistics are folded into a single Gaussian draw per row
+//! ([`OpConstants`] §noise-folding); and fully noise-free configs
+//! degenerate to pure popcount sign decisions with zero RNG draws.
 
 use crate::analog::timing::Phase;
 use crate::analog::{Comparator, NoiseModel, OperatingPoint, PhaseTimer, SupplyModel};
@@ -68,9 +75,37 @@ pub struct Crossbar {
     /// Electrical constants cached per operating point (PERF: the hot
     /// loop is per-row; `exp`/`Φ` evaluations belong out here).
     consts: OpConstants,
+    /// All comparator offsets are exactly zero (sampled from an ideal
+    /// noise model) — combined with `OpConstants::draw_free` this enables
+    /// the pure-popcount decision path.
+    zero_offset: bool,
 }
 
 /// Per-operating-point constants used in the row loop.
+///
+/// §noise-folding — the decision path's statistics are precomputed here.
+/// The four-step decision for row `r` used to draw five Gaussians (two
+/// dead-cell thinnings, two kT/C samples, one comparator noise sample).
+/// All of them are independent and enter the comparator *differentially*,
+/// so they fold into one zero-mean Gaussian whose variance is the sum of
+/// the individual variances:
+///
+/// - kT/C on SL and SLB:           `2 · ktc_sigma²`
+/// - comparator decision noise:    `σ_cmp²`
+/// - binomial dead-cell thinning:  `base² · p(1−p) · |x|`  (both rails)
+/// - Vth settling spread:          `(vdd·spread/cols)² · (1−p)·|x|`
+///   (both rails; the spread acts on the *surviving* charge counts, so
+///   the expected thinned count `(1−p)·|x|` replaces the per-rail
+///   post-thinning counts the unfolded model used)
+///
+/// with `base = vdd·settle/cols` and `|x| = x.count_ones()`. The
+/// count-dependent terms depend only on `|x|`, not on the row, so the
+/// folded sigma is computed **once per operation** — the row loop is a
+/// popcount, one Gaussian draw and a compare (EXPERIMENTS.md §Perf).
+/// The only behavioural difference vs the per-rail draws is that rail
+/// clamping to [0, VDD] is no longer applied between noise and compare;
+/// with mV-scale noise against mid-rail signals the clamp bound with
+/// negligible probability (tail effect only, statistically invisible).
 #[derive(Debug, Clone, Copy)]
 struct OpConstants {
     /// Combined LocalCompute × RowMergeSum settled fraction.
@@ -81,6 +116,14 @@ struct OpConstants {
     spread: f64,
     /// kT/C rms on one sum line (V); 0.0 when noise disabled.
     ktc_sigma: f64,
+    /// √(2·ktc² + σ_cmp²) — the count-independent part of the folded
+    /// decision sigma (V).
+    dec_sigma_const: f64,
+    /// True when **no** decision-path noise source needs an RNG draw:
+    /// the zero-noise fast path (`CrossbarConfig::ideal`) then reduces to
+    /// word-popcount `row_plus_count` sign decisions and the whole
+    /// operation draws nothing from the generator.
+    draw_free: bool,
 }
 
 impl OpConstants {
@@ -105,7 +148,30 @@ impl OpConstants {
         } else {
             0.0
         };
-        OpConstants { settle, p_dead, spread, ktc_sigma }
+        let cmp_sigma = cfg.noise.comparator_noise_sigma_v;
+        let dec_sigma_const =
+            (2.0 * ktc_sigma * ktc_sigma + cmp_sigma * cmp_sigma).sqrt();
+        let draw_free = p_dead == 0.0 && spread == 0.0 && dec_sigma_const == 0.0;
+        OpConstants { settle, p_dead, spread, ktc_sigma, dec_sigma_const, draw_free }
+    }
+
+    /// Folded decision sigma (V) for an input plane with `ones` set bits.
+    /// Row-independent: hoisted out of the row loop.
+    #[inline]
+    fn decision_sigma(&self, base: f64, spread_scale: f64, ones: f64) -> f64 {
+        if self.p_dead == 0.0 && self.spread == 0.0 {
+            return self.dec_sigma_const;
+        }
+        let mut var = self.dec_sigma_const * self.dec_sigma_const;
+        if self.p_dead > 0.0 {
+            var += base * base * self.p_dead * (1.0 - self.p_dead) * ones;
+        }
+        if self.spread > 0.0 {
+            // Spread scales with the thinned (surviving) charge counts:
+            // E[plus_t + minus_t] = (1−p)·|x|.
+            var += spread_scale * spread_scale * (1.0 - self.p_dead) * ones;
+        }
+        var.sqrt()
     }
 }
 
@@ -113,11 +179,12 @@ impl Crossbar {
     /// Fabricate a crossbar programmed with `matrix`, sampling per-row
     /// comparator offsets from the config's noise model.
     pub fn new(matrix: SignMatrix, cfg: CrossbarConfig, rng: &mut Rng) -> Self {
-        let comparators =
+        let comparators: Vec<Comparator> =
             (0..matrix.rows()).map(|_| Comparator::sample(&cfg.noise, rng)).collect();
+        let zero_offset = comparators.iter().all(|c| c.offset_v() == 0.0);
         let timer = PhaseTimer::new(cfg.supply, cfg.op);
         let consts = OpConstants::compute(&cfg, &timer, matrix.cols());
-        Crossbar { matrix, cfg, timer, comparators, energy_fj: 0.0, ops: 0, consts }
+        Crossbar { matrix, cfg, timer, comparators, energy_fj: 0.0, ops: 0, consts, zero_offset }
     }
 
     /// Crossbar programmed with the sequency-ordered Walsh matrix of
@@ -156,64 +223,110 @@ impl Crossbar {
         cells + 2.0 * self.cols() as f64 * self.cfg.c_cell_ff
     }
 
-    /// Analog differential sum-line voltages `(V_SL, V_SLB)` for row `r`
-    /// under input plane `x` — steps 1–3 of the operation.
-    fn row_sum_voltages(&self, r: usize, x: &BitVec, rng: &mut Rng) -> (f64, f64) {
-        let cols = self.cols() as f64;
+    /// Full four-step operation, allocation-free: one input bitplane →
+    /// one packed output bit per row, written into the caller-owned
+    /// `out` (resized/cleared to `rows()` bits).
+    ///
+    /// This is the analog inner loop. Per row it does one packed-word
+    /// popcount (`row_plus_count`), at most **one** Gaussian draw (the
+    /// folded decision noise, see [`OpConstants`] §noise-folding) and a
+    /// comparator decision. With a draw-free config and ideal
+    /// comparators (`CrossbarConfig::ideal`) the decision degenerates to
+    /// the exact popcount sign `2·|plus ∩ x| > |x|` and the RNG is never
+    /// touched.
+    pub fn process_bitplane_into(&mut self, x: &BitVec, rng: &mut Rng, out: &mut BitVec) {
+        assert_eq!(x.len(), self.cols(), "input plane length != crossbar cols");
+        self.account_op();
+        let rows = self.rows();
+        out.reset(rows);
+        let ones = x.count_ones();
         let k = self.consts;
-        let mut plus = self.matrix.row_plus_count(r, x) as f64;
-        let ones = x.count_ones() as f64;
-        let mut minus = ones - plus;
-        // Dead-cell thinning: cells with no overdrive at this VDD drop
-        // their charge. The mean attenuation is common-mode (same factor
-        // on both rails) but the binomial thinning *variance* is not —
-        // it is the dominant error source at low VDD (Fig 7(a) cliff).
-        if k.p_dead > 0.0 {
-            let thin = |count: f64, rng: &mut Rng| -> f64 {
-                let mean = count * (1.0 - k.p_dead);
-                let sigma = (count * k.p_dead * (1.0 - k.p_dead)).sqrt();
-                (mean + rng.normal() * sigma).max(0.0)
-            };
-            plus = thin(plus, rng);
-            minus = thin(minus, rng);
+
+        if k.draw_free && self.zero_offset {
+            // Popcount fast path: sign of the ±1 weighted sum, exact ties
+            // resolve to false exactly like the strict analog comparison.
+            for r in 0..rows {
+                self.comparators[r].note_decision();
+                if 2 * self.matrix.row_plus_count(r, x) > ones {
+                    out.set(r, true);
+                }
+            }
+            return;
         }
+
+        let cols = self.cols() as f64;
         let vdd = self.cfg.op.vdd;
-        // Per-cell Vth mismatch spreads the settled fractions; the spread
-        // averages as 1/√count onto each sum line and does NOT cancel in
-        // the differential pair — this is the low-VDD error mechanism.
-        // All σ constants are precomputed per operating point (PERF).
-        let mut v_sl = vdd * (plus / cols) * k.settle;
-        let mut v_slb = vdd * (minus / cols) * k.settle;
-        if k.ktc_sigma > 0.0 {
-            v_sl += rng.normal() * k.ktc_sigma;
-            v_slb += rng.normal() * k.ktc_sigma;
+        let base = vdd * k.settle / cols; // volts per unit charge count
+        let spread_scale = vdd * k.spread / cols;
+        let ones_f = ones as f64;
+        // Dead-cell thinning attenuates the differential mean by (1−p);
+        // its binomial variance is folded into sigma below.
+        let thin = 1.0 - k.p_dead;
+        let sigma = k.decision_sigma(base, spread_scale, ones_f);
+        for r in 0..rows {
+            let plus = self.matrix.row_plus_count(r, x) as f64;
+            let minus = ones_f - plus;
+            let mut diff = base * (plus - minus) * thin;
+            if sigma > 0.0 {
+                diff += rng.normal() * sigma;
+            }
+            if self.comparators[r].compare_prenoised(diff) {
+                out.set(r, true);
+            }
         }
-        if k.spread > 0.0 {
-            let scale = vdd * k.spread / cols;
-            v_sl += rng.normal() * scale * plus.sqrt();
-            v_slb += rng.normal() * scale * minus.sqrt();
-        }
-        (v_sl.clamp(0.0, vdd), v_slb.clamp(0.0, vdd))
     }
 
     /// Full four-step operation: one input bitplane → one output bit per
     /// row (`V_SL > V_SLB`, i.e. the sign of the ±1 weighted sum).
+    ///
+    /// Compatibility wrapper over [`Crossbar::process_bitplane_into`];
+    /// allocates the `Vec<bool>` per call — hot paths should hold a
+    /// packed [`BitVec`] and call the `_into` variant.
     pub fn process_bitplane(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<bool> {
-        self.account_op();
-        (0..self.rows())
-            .map(|r| {
-                let (sl, slb) = self.row_sum_voltages(r, x, rng);
-                self.comparators[r].compare(sl, slb, rng)
-            })
-            .collect()
+        let mut out = BitVec::zeros(self.rows());
+        self.process_bitplane_into(x, rng, &mut out);
+        (0..self.rows()).map(|r| out.get(r)).collect()
     }
 
-    /// Steps 1–3 only: per-row single-ended MAV voltages
-    /// `V_MAV = VDD · plus/cols · settle` — the analog outputs handed to
-    /// the memory-immersed ADC (paper §IV).
-    pub fn compute_mav(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<f64> {
+    /// Steps 1–3 only, allocation-free: per-row single-ended MAV voltages
+    /// `V_MAV = VDD · plus/cols · settle` written into caller-owned
+    /// `out`, with the SL-side noise (thinning, kT/C, settling spread)
+    /// applied per rail exactly as the analog node sees it — the outputs
+    /// handed to the memory-immersed ADC (paper §IV).
+    pub fn compute_mav_into(&mut self, x: &BitVec, rng: &mut Rng, out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols(), "input plane length != crossbar cols");
+        assert_eq!(out.len(), self.rows(), "output length != crossbar rows");
         self.account_op();
-        (0..self.rows()).map(|r| self.row_sum_voltages(r, x, rng).0).collect()
+        let cols = self.cols() as f64;
+        let vdd = self.cfg.op.vdd;
+        let k = self.consts;
+        let base = vdd * k.settle / cols;
+        let spread_scale = vdd * k.spread / cols;
+        for (r, slot) in out.iter_mut().enumerate() {
+            let mut plus = self.matrix.row_plus_count(r, x) as f64;
+            // Dead-cell thinning: cells with no overdrive at this VDD
+            // drop their charge (binomial, normal-approximated).
+            if k.p_dead > 0.0 {
+                let mean = plus * (1.0 - k.p_dead);
+                let sig = (plus * k.p_dead * (1.0 - k.p_dead)).sqrt();
+                plus = (mean + rng.normal() * sig).max(0.0);
+            }
+            let mut v = base * plus;
+            if k.ktc_sigma > 0.0 {
+                v += rng.normal() * k.ktc_sigma;
+            }
+            if k.spread > 0.0 {
+                v += rng.normal() * spread_scale * plus.sqrt();
+            }
+            *slot = v.clamp(0.0, vdd);
+        }
+    }
+
+    /// Compatibility wrapper over [`Crossbar::compute_mav_into`].
+    pub fn compute_mav(&mut self, x: &BitVec, rng: &mut Rng) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows()];
+        self.compute_mav_into(x, rng, &mut out);
+        out
     }
 
     /// Exact digital oracle of one plane (±1 weighted sums).
@@ -258,14 +371,20 @@ impl Crossbar {
     pub fn bit_error_rate(&mut self, trials: usize, density: f64, rng: &mut Rng) -> f64 {
         let mut errs = 0usize;
         let mut total = 0usize;
+        let mut x = BitVec::zeros(self.cols());
+        let mut got = BitVec::zeros(self.rows());
         for _ in 0..trials {
-            let bits: Vec<bool> = (0..self.cols()).map(|_| rng.bernoulli(density)).collect();
-            let x = BitVec::from_bits(&bits);
+            x.clear();
+            for i in 0..self.cols() {
+                if rng.bernoulli(density) {
+                    x.set(i, true);
+                }
+            }
             let ideal = self.ideal_bitplane(&x);
-            let got = self.process_bitplane(&x, rng);
-            for (g, i) in got.iter().zip(&ideal) {
+            self.process_bitplane_into(&x, rng, &mut got);
+            for (r, i) in ideal.iter().enumerate() {
                 // Exact ties count as correct either way.
-                if *i != 0 && (*g != (*i > 0)) {
+                if *i != 0 && (got.get(r) != (*i > 0)) {
                     errs += 1;
                 }
                 total += 1;
@@ -365,6 +484,73 @@ mod tests {
         let small = Crossbar::walsh(16, CrossbarConfig::default(), &mut rng);
         let large = Crossbar::walsh(128, CrossbarConfig::default(), &mut rng);
         assert!(large.power_uw() > small.power_uw());
+    }
+
+    #[test]
+    fn packed_into_matches_vec_wrapper() {
+        // Same fabricated crossbar + same decision rng stream ⇒ the
+        // packed and Vec<bool> paths must agree bit for bit, noisy or not.
+        for cfg in [CrossbarConfig::default(), CrossbarConfig::ideal()] {
+            let mut xa = Crossbar::walsh(64, cfg, &mut Rng::new(11));
+            let mut xb = Crossbar::walsh(64, cfg, &mut Rng::new(11));
+            let mut ra = Rng::new(99);
+            let mut rb = Rng::new(99);
+            let mut packed = BitVec::zeros(64);
+            for seed in 0..10 {
+                let x = input(64, seed, 0.4);
+                let unpacked = xa.process_bitplane(&x, &mut ra);
+                xb.process_bitplane_into(&x, &mut rb, &mut packed);
+                for (r, u) in unpacked.iter().enumerate() {
+                    assert_eq!(*u, packed.get(r), "row {r} seed {seed}");
+                }
+            }
+            assert_eq!(xa.ops(), xb.ops());
+        }
+    }
+
+    #[test]
+    fn ideal_fast_path_draws_nothing_from_rng() {
+        let mut rng = Rng::new(21);
+        let mut xb = Crossbar::walsh(32, CrossbarConfig::ideal(), &mut rng);
+        let x = input(32, 1, 0.5);
+        let mut r = Rng::new(5);
+        let mut witness = r.clone();
+        let mut out = BitVec::zeros(32);
+        xb.process_bitplane_into(&x, &mut r, &mut out);
+        // The draw-free path must leave the generator untouched.
+        assert_eq!(r.next_u64(), witness.next_u64());
+    }
+
+    #[test]
+    fn mav_into_matches_vec_wrapper() {
+        let mut xa = Crossbar::walsh(32, CrossbarConfig::default(), &mut Rng::new(13));
+        let mut xb = Crossbar::walsh(32, CrossbarConfig::default(), &mut Rng::new(13));
+        let x = input(32, 2, 0.5);
+        let a = xa.compute_mav(&x, &mut Rng::new(31));
+        let mut b = vec![0.0; 32];
+        xb.compute_mav_into(&x, &mut Rng::new(31), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn noisy_decisions_flip_near_ties_only() {
+        // Default config at nominal: rows with a large |±1 sum| must be
+        // decided correctly despite the folded noise draw (the folded
+        // sigma is sub-mV vs ~tens-of-mV signal LSBs).
+        let mut rng = Rng::new(17);
+        let mut xb = Crossbar::walsh(128, CrossbarConfig::default(), &mut rng);
+        let x = input(128, 3, 0.5);
+        let ideal = xb.ideal_bitplane(&x);
+        let mut out = BitVec::zeros(128);
+        let mut r = Rng::new(23);
+        for _ in 0..20 {
+            xb.process_bitplane_into(&x, &mut r, &mut out);
+            for (row, i) in ideal.iter().enumerate() {
+                if i.unsigned_abs() >= 8 {
+                    assert_eq!(out.get(row), *i > 0, "row {row} ideal {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@ pub mod bitvec;
 pub mod crossbar;
 pub mod early_term;
 
-pub use bitplane::{decompose_bitplanes, BitplaneEngine, BitplaneOutput};
+pub use bitplane::{
+    decompose_bitplanes, decompose_bitplanes_into, BitplaneEngine, BitplaneOutput, PlaneScratch,
+};
 pub use bitvec::{BitVec, SignMatrix};
 pub use crossbar::{Crossbar, CrossbarConfig};
 pub use early_term::{EarlyTermination, TermStats};

@@ -66,6 +66,10 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// "digital" (PJRT) or "analog" (CiM simulator).
     pub engine: String,
+    /// Worker threads *inside* each analog engine's `infer_batch`
+    /// (0 = auto-detect, 1 = sequential). Results are thread-count
+    /// invariant by the per-sample RNG-stream contract.
+    pub engine_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +80,7 @@ impl Default for ServerConfig {
             batch_deadline_us: 2000,
             queue_depth: 256,
             engine: "digital".to_string(),
+            engine_threads: 1,
         }
     }
 }
@@ -92,6 +97,9 @@ impl ServerConfig {
             queue_depth: t.get_int("server", "queue_depth").unwrap_or(d.queue_depth as i64)
                 as usize,
             engine: t.get_str("server", "engine").unwrap_or(d.engine),
+            engine_threads: t
+                .get_int("server", "engine_threads")
+                .unwrap_or(d.engine_threads as i64) as usize,
         }
     }
 }

@@ -1,11 +1,14 @@
 //! Inference engines: what a worker runs a batch on.
 //!
 //! - [`DigitalEngine`] — the AOT-compiled JAX/Pallas model on PJRT
-//!   (digital reference path; exact logits).
+//!   (digital reference path; exact logits). Gated behind the `xla`
+//!   feature: the default offline build serves analog-only.
 //! - [`AnalogEngine`] — the same trained parameters executed through
 //!   the CiM crossbar simulator ([`crate::cim`]) at a configurable
 //!   operating point: the paper's hardware path, with its quantization
-//!   and analog non-idealities.
+//!   and analog non-idealities. Batches shard across std worker threads
+//!   with per-sample deterministic noise streams, so results are
+//!   identical at any thread count.
 
 use anyhow::Result;
 
@@ -13,7 +16,9 @@ use crate::cim::{CrossbarConfig, EarlyTermination};
 use crate::nn::bwht_layer::BwhtExec;
 use crate::nn::model::bwht_mlp_from_weights;
 use crate::nn::{Sequential, Tensor};
-use crate::runtime::{Artifacts, LoadedModel, Manifest, Runtime};
+use crate::runtime::Artifacts;
+#[cfg(feature = "xla")]
+use crate::runtime::{LoadedModel, Manifest, Runtime};
 
 /// A batch-inference engine.
 pub trait InferenceEngine: Send {
@@ -30,6 +35,7 @@ pub trait InferenceEngine: Send {
 /// (`!Send`), so the only sound way to move an engine into a worker
 /// thread is to move the client and every executable referencing it as
 /// one unit — which is exactly what this struct is.
+#[cfg(feature = "xla")]
 pub struct DigitalEngine {
     // Field order matters: `model` must drop before `runtime`.
     model: LoadedModel,
@@ -41,8 +47,10 @@ pub struct DigitalEngine {
 // struct (`_runtime` + `model`); moving the whole struct to another
 // thread moves every reference together, and the engine is used by one
 // thread at a time (worker ownership). No Rc clone escapes.
+#[cfg(feature = "xla")]
 unsafe impl Send for DigitalEngine {}
 
+#[cfg(feature = "xla")]
 impl DigitalEngine {
     /// Load `model_float.hlo.txt` (or `model_quant.hlo.txt` with
     /// `quant = true`) from an artifacts directory, with a private PJRT
@@ -60,6 +68,7 @@ impl DigitalEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl InferenceEngine for DigitalEngine {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let b = self.manifest.batch;
@@ -93,9 +102,24 @@ impl InferenceEngine for DigitalEngine {
 }
 
 /// CiM-simulator-backed analog engine (same trained weights).
+///
+/// `infer_batch` shards the batch across std worker threads (scoped, one
+/// deep model clone per shard). Determinism contract: sample `i` of a
+/// batch always draws its analog noise from the per-layer stream
+/// `Rng::for_stream(layer_seed, i)` — a pure function of the sample's
+/// global index — so logits are bit-identical whether the batch runs on
+/// one thread or sixteen, and regardless of shard boundaries.
 pub struct AnalogEngine {
     model: Sequential,
     input: usize,
+    /// Worker threads for `infer_batch`: 0 = auto (available
+    /// parallelism), 1 = in-place sequential (default).
+    threads: usize,
+    /// Termination counters merged back from worker-shard model clones.
+    shard_term: (u64, u64),
+    /// Next sample stream offset, advanced per inferred sample so
+    /// repeated `infer_batch` calls keep drawing fresh noise.
+    next_stream: u64,
 }
 
 impl AnalogEngine {
@@ -115,35 +139,131 @@ impl AnalogEngine {
         model.for_each_bwht(|b| {
             b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed });
         });
-        Ok(AnalogEngine { model, input: manifest.input })
+        Ok(AnalogEngine::from_model(model, manifest.input))
     }
 
     /// Wrap an already-built model (tests, sweeps).
     pub fn from_model(model: Sequential, input: usize) -> Self {
-        AnalogEngine { model, input }
+        AnalogEngine { model, input, threads: 1, shard_term: (0, 0), next_stream: 0 }
     }
 
-    /// Access early-termination counters accumulated by the BWHT layers.
+    /// Set the `infer_batch` worker-thread count (0 = auto-detect).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Access early-termination counters accumulated by the BWHT layers
+    /// (including work done by worker-shard clones).
     pub fn termination_stats(&mut self) -> (u64, u64) {
-        let mut processed = 0;
-        let mut skipped = 0;
+        let mut processed = self.shard_term.0;
+        let mut skipped = self.shard_term.1;
         self.model.for_each_bwht(|b| {
             processed += b.term_processed;
             skipped += b.term_skipped;
         });
         (processed, skipped)
     }
+
+    /// Run one sample on `model`, pinning every BWHT layer's analog
+    /// noise stream to the sample's global stream id first.
+    fn infer_one(
+        model: &mut Sequential,
+        input: usize,
+        img: &[f32],
+        stream: u64,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(img.len() == input, "image dim {} != {input}", img.len());
+        model.for_each_bwht(|b| b.set_analog_stream(stream));
+        Ok(model.forward_inference(&Tensor::vec1(img)).data().to_vec())
+    }
 }
 
 impl InferenceEngine for AnalogEngine {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        images
-            .iter()
-            .map(|img| {
-                anyhow::ensure!(img.len() == self.input, "image dim");
-                Ok(self.model.forward(&Tensor::vec1(img)).data().to_vec())
-            })
-            .collect()
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let threads = match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            t => t,
+        }
+        .min(images.len())
+        .max(1);
+        let stream0 = self.next_stream;
+        self.next_stream += images.len() as u64;
+
+        if threads == 1 {
+            return images
+                .iter()
+                .enumerate()
+                .map(|(i, img)| {
+                    Self::infer_one(&mut self.model, self.input, img, stream0 + i as u64)
+                })
+                .collect();
+        }
+
+        // Contiguous shards, one deep model clone per worker thread.
+        // Shard boundaries cannot influence results: every sample's
+        // noise stream is derived from its global index alone.
+        // Warm the lazily-built analog engines on the prototype first so
+        // shard clones copy the fabricated crossbars instead of each
+        // re-fabricating them (SignMatrix + comparator sampling) per
+        // batch.
+        self.model.for_each_bwht(|b| b.prepare_analog());
+        let chunk = images.len().div_ceil(threads);
+        let input = self.input;
+        let model = &self.model;
+        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = images
+                    .chunks(chunk)
+                    .enumerate()
+                    .map(|(shard, shard_images)| {
+                        let mut shard_model = model.clone();
+                        let first_stream = stream0 + (shard * chunk) as u64;
+                        scope.spawn(move || {
+                            let mut out = Vec::with_capacity(shard_images.len());
+                            for (i, img) in shard_images.iter().enumerate() {
+                                out.push(Self::infer_one(
+                                    &mut shard_model,
+                                    input,
+                                    img,
+                                    first_stream + i as u64,
+                                )?);
+                            }
+                            let mut processed = 0;
+                            let mut skipped = 0;
+                            shard_model.for_each_bwht(|b| {
+                                processed += b.term_processed;
+                                skipped += b.term_skipped;
+                            });
+                            Ok((out, processed, skipped))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+            });
+
+        // Shard clones inherit this model's counters at clone time; only
+        // the delta beyond that baseline is work the shard itself did.
+        let (base_p, base_s) = {
+            let mut p = 0;
+            let mut s = 0;
+            self.model.for_each_bwht(|b| {
+                p += b.term_processed;
+                s += b.term_skipped;
+            });
+            (p, s)
+        };
+        let mut all = Vec::with_capacity(images.len());
+        for res in shard_results {
+            let (logits, processed, skipped) = res?;
+            self.shard_term.0 += processed - base_p;
+            self.shard_term.1 += skipped - base_s;
+            all.extend(logits);
+        }
+        Ok(all)
     }
 
     fn name(&self) -> &'static str {

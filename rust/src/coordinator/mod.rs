@@ -29,7 +29,9 @@ pub mod server;
 
 pub use backpressure::AdmissionControl;
 pub use batcher::{Batch, DynamicBatcher};
-pub use engine::{AnalogEngine, DigitalEngine, InferenceEngine};
+#[cfg(feature = "xla")]
+pub use engine::DigitalEngine;
+pub use engine::{AnalogEngine, InferenceEngine};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::{Router, RoutingPolicy};

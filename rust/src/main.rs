@@ -10,8 +10,10 @@ use adcim::adc::{Adc, ImmersedAdc, ImmersedMode};
 use adcim::analog::NoiseModel;
 use adcim::cim::CrossbarConfig;
 use adcim::config::{ChipConfig, ServerConfig, TomlLite};
+#[cfg(feature = "xla")]
+use adcim::coordinator::DigitalEngine;
 use adcim::coordinator::{
-    AnalogEngine, DigitalEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+    AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
 };
 use adcim::nn::dataset::Dataset;
 use adcim::runtime::Artifacts;
@@ -21,7 +23,7 @@ use anyhow::Result;
 
 const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
-    "bits", "mode", "artifacts", "policy",
+    "bits", "mode", "artifacts", "policy", "threads",
 ];
 
 fn main() -> Result<()> {
@@ -148,6 +150,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(e) = args.get("engine") {
         server_cfg.engine = e.to_string();
     }
+    if let Some(t) = args.get_parse::<usize>("threads") {
+        server_cfg.engine_threads = t;
+    }
     let n_requests: usize = args.get_parse_or("requests", 256);
     let policy = match args.get_or("policy", "rr") {
         "ll" => RoutingPolicy::LeastLoaded,
@@ -165,13 +170,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "analog" => {
             let cfg = CrossbarConfig { op: chip.operating_point(), ..Default::default() };
             for w in 0..server_cfg.workers {
-                engines.push(Box::new(AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?));
+                engines.push(Box::new(
+                    AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?
+                        .with_threads(server_cfg.engine_threads),
+                ));
             }
         }
         _ => {
+            #[cfg(feature = "xla")]
             for _ in 0..server_cfg.workers {
                 engines.push(Box::new(DigitalEngine::load(&artifacts, false)?));
             }
+            #[cfg(not(feature = "xla"))]
+            anyhow::bail!(
+                "the digital (PJRT) engine requires building with --features xla; \
+                 this offline build serves with --engine analog"
+            );
         }
     }
     let input_dim = engines[0].input_dim();

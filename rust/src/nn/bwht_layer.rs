@@ -27,7 +27,7 @@ use super::quant::UniformQuantizer;
 use super::tensor::Tensor;
 
 /// Execution mode of a BWHT layer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub enum BwhtExec {
     /// Exact float transform.
     Float,
@@ -44,6 +44,7 @@ pub enum BwhtExec {
 }
 
 /// BWHT + soft-threshold layer over the channel dimension.
+#[derive(Clone)]
 pub struct BwhtLayer {
     /// Logical channel count (input == output).
     pub channels: usize,
@@ -68,8 +69,17 @@ pub struct BwhtLayer {
     // analog engine (lazily built), and accumulated termination stats
     analog: Option<BitplaneEngine>,
     analog_rng: Option<Rng>,
+    /// Pending per-sample noise stream (batch determinism contract):
+    /// applied to `analog_rng` at the start of the next forward.
+    analog_stream: Option<u64>,
     pub term_processed: u64,
     pub term_skipped: u64,
+    // inference scratch (gather buffer, padded frequency buffer,
+    // quantized levels, per-crossbar block) — reused across forwards
+    scratch_x: Vec<f32>,
+    scratch_z: Vec<f32>,
+    scratch_levels: Vec<u32>,
+    scratch_block: Vec<u32>,
 }
 
 impl BwhtLayer {
@@ -96,8 +106,13 @@ impl BwhtLayer {
             cache_shape: Vec::new(),
             analog: None,
             analog_rng: None,
+            analog_stream: None,
             term_processed: 0,
             term_skipped: 0,
+            scratch_x: Vec::new(),
+            scratch_z: Vec::new(),
+            scratch_levels: Vec::new(),
+            scratch_block: Vec::new(),
         }
     }
 
@@ -127,6 +142,45 @@ impl BwhtLayer {
         self.exec = exec;
         self.analog = None;
         self.analog_rng = None;
+        self.analog_stream = None;
+    }
+
+    /// Pin the analog noise stream for the next forward pass to
+    /// `Rng::for_stream(layer_seed, stream)`.
+    ///
+    /// Batch engines call this with the sample's **global batch index**
+    /// before each forward, which makes analog inference results a pure
+    /// function of `(seed, sample index)` — independent of worker-thread
+    /// count and shard boundaries. No-op outside `BwhtExec::Analog`.
+    pub fn set_analog_stream(&mut self, stream: u64) {
+        self.analog_stream = Some(stream);
+    }
+
+    /// Build the lazily-constructed analog engine and apply any pending
+    /// stream pin. Idempotent; no-op outside `BwhtExec::Analog`. Runs at
+    /// the start of every forward, and batch engines call it explicitly
+    /// before cloning worker-shard models so the crossbar fabrication
+    /// (Hadamard matrix + comparator sampling) happens once and the
+    /// clones copy it instead of re-fabricating per shard.
+    pub fn prepare_analog(&mut self) {
+        let BwhtExec::Analog { input_bits, config, early_term, seed } = self.exec else {
+            return;
+        };
+        if self.analog.is_none() {
+            let mut frng = Rng::new(seed);
+            let xb = Crossbar::new(
+                crate::cim::SignMatrix::hadamard(self.layout.block_size),
+                config,
+                &mut frng,
+            );
+            let mut eng = BitplaneEngine::new(xb, input_bits);
+            eng.early_term = early_term;
+            self.analog = Some(eng);
+            self.analog_rng = Some(Rng::new(seed ^ 0xa5a5_5a5a));
+        }
+        if let Some(stream) = self.analog_stream.take() {
+            self.analog_rng = Some(Rng::for_stream(seed ^ 0xa5a5_5a5a, stream));
+        }
     }
 
     /// Iterate pixels: a CHW tensor yields H·W channel vectors; a 1-D
@@ -168,29 +222,38 @@ impl BwhtLayer {
     }
 
     /// Float path: z = H·pad(x); the quantized paths replace z with the
-    /// bitplane reconstruction. Returns z (padded frequency domain).
-    fn transform_forward(&mut self, xs: &[f32], rng_scratch: &mut Option<Rng>) -> Vec<f32> {
-        match &self.exec {
+    /// bitplane reconstruction. Writes z (padded frequency domain) into
+    /// the caller-owned buffer — the hot-path form, allocation-free once
+    /// the layer scratch is warm. [`BwhtLayer::prepare_analog`] must have
+    /// run first when in `Analog` mode.
+    fn transform_forward_into(
+        &mut self,
+        xs: &[f32],
+        rng_scratch: &mut Option<Rng>,
+        z: &mut Vec<f32>,
+    ) {
+        match self.exec {
             BwhtExec::Float => {
-                let mut z = self.bwht.pad(xs);
-                self.bwht.forward_padded_inplace(&mut z);
-                z
+                self.bwht.pad_into(xs, z);
+                self.bwht.forward_padded_inplace(z);
             }
             BwhtExec::QuantDigital { input_bits } => {
-                let q = UniformQuantizer::unsigned(*input_bits, self.in_quant_hi);
-                let levels = q.levels_of(xs);
+                let q = UniformQuantizer::unsigned(input_bits, self.in_quant_hi);
+                let mut levels = std::mem::take(&mut self.scratch_levels);
+                q.levels_into(xs, &mut levels);
                 let padded = self.layout.padded_len();
                 let bs = self.layout.block_size;
-                let mut z = vec![0.0f32; padded];
+                z.clear();
+                z.resize(padded, 0.0);
                 let mut plane = vec![0.0f32; bs];
                 // Per block, per plane: transform the {0,1} plane and
                 // 1-bit quantize each coefficient's sum.
                 for b in 0..self.layout.blocks {
-                    for p in 0..*input_bits {
-                        for i in 0..bs {
+                    for p in 0..input_bits {
+                        for (i, slot) in plane.iter_mut().enumerate() {
                             let idx = b * bs + i;
                             let lv = if idx < levels.len() { levels[idx] } else { 0 };
-                            plane[i] = ((lv >> p) & 1) as f32;
+                            *slot = ((lv >> p) & 1) as f32;
                         }
                         fwht_inplace(&mut plane);
                         let w = (1u32 << p) as f32;
@@ -204,51 +267,45 @@ impl BwhtLayer {
                 // z for level-valued inputs is (H·levels)·step; gamma
                 // absorbs the 1-bit quantization's magnitude loss.
                 let step = self.in_quant_hi / (q.levels() - 1) as f32;
-                for v in &mut z {
+                for v in z.iter_mut() {
                     *v *= self.gamma * step;
                 }
-                z
+                self.scratch_levels = levels;
             }
-            BwhtExec::Analog { input_bits, config, early_term, seed } => {
-                if self.analog.is_none() {
-                    let mut frng = Rng::new(*seed);
-                    let xb = Crossbar::new(
-                        crate::cim::SignMatrix::hadamard(self.layout.block_size),
-                        *config,
-                        &mut frng,
-                    );
-                    let mut eng = BitplaneEngine::new(xb, *input_bits);
-                    eng.early_term = *early_term;
-                    self.analog = Some(eng);
-                    *rng_scratch = Some(Rng::new(seed ^ 0xa5a5_5a5a));
-                }
-                let q = UniformQuantizer::unsigned(*input_bits, self.in_quant_hi);
+            BwhtExec::Analog { input_bits, .. } => {
+                let q = UniformQuantizer::unsigned(input_bits, self.in_quant_hi);
                 let step = self.in_quant_hi / (q.levels() - 1) as f32;
-                let levels = q.levels_of(xs);
+                let mut levels = std::mem::take(&mut self.scratch_levels);
+                q.levels_into(xs, &mut levels);
                 let padded = self.layout.padded_len();
                 let bs = self.layout.block_size;
-                let mut z = vec![0.0f32; padded];
-                let eng = self.analog.as_mut().unwrap();
+                z.clear();
+                z.resize(padded, 0.0);
+                let mut block = std::mem::take(&mut self.scratch_block);
+                let eng = self.analog.as_mut().expect("prepare_analog builds the engine");
                 let rng = rng_scratch.as_mut().expect("analog rng set with engine");
+                let scale = self.gamma * step;
                 for b in 0..self.layout.blocks {
-                    let block: Vec<u32> = (0..bs)
-                        .map(|i| {
-                            let idx = b * bs + i;
-                            if idx < levels.len() {
-                                levels[idx]
-                            } else {
-                                0
-                            }
-                        })
-                        .collect();
+                    block.clear();
+                    block.extend((0..bs).map(|i| {
+                        let idx = b * bs + i;
+                        if idx < levels.len() {
+                            levels[idx]
+                        } else {
+                            0
+                        }
+                    }));
+                    // The engine reuses its internal PlaneScratch arena
+                    // across blocks and forwards.
                     let out = eng.transform(&block, rng);
                     self.term_processed += out.term.processed;
                     self.term_skipped += out.term.skipped;
                     for i in 0..bs {
-                        z[b * bs + i] = out.values[i] * self.gamma * step;
+                        z[b * bs + i] = out.values[i] * scale;
                     }
                 }
-                z
+                self.scratch_block = block;
+                self.scratch_levels = levels;
             }
         }
     }
@@ -256,6 +313,7 @@ impl BwhtLayer {
 
 impl Layer for BwhtLayer {
     fn forward(&mut self, x: &Tensor) -> Tensor {
+        self.prepare_analog();
         let pixels = Self::pixel_count(x.shape());
         self.cache_shape = x.shape().to_vec();
         self.cache_z = Vec::with_capacity(pixels);
@@ -267,18 +325,51 @@ impl Layer for BwhtLayer {
         for pix in 0..pixels {
             xbuf[..].iter_mut().for_each(|v| *v = 0.0);
             Self::gather_pixel(x, pix, &mut xbuf);
-            let z = self.transform_forward(&xbuf[..self.channels], &mut arng);
+            let mut z = Vec::new();
+            self.transform_forward_into(&xbuf[..self.channels], &mut arng, &mut z);
             // Soft threshold per coefficient.
             let mut yt = z.clone();
             for (v, &t) in yt.iter_mut().zip(&self.t) {
                 *v = crate::wht::soft_threshold(*v, t.abs());
             }
             self.cache_z.push(z);
-            // Inverse transform and truncate.
-            let out = self.bwht.inverse(&yt);
-            Self::scatter_pixel(&mut y, pix, &out);
+            // Inverse transform; the logical output is the first
+            // `channels` values of the padded buffer.
+            self.bwht.inverse_padded_inplace(&mut yt);
+            Self::scatter_pixel(&mut y, pix, &yt[..self.channels]);
         }
         self.analog_rng = arng;
+        y
+    }
+
+    /// Serving path: identical values to `forward`, but no backward
+    /// caches and every per-pixel buffer comes from the layer's scratch
+    /// (EXPERIMENTS.md §Perf).
+    fn forward_inference(&mut self, x: &Tensor) -> Tensor {
+        self.prepare_analog();
+        let pixels = Self::pixel_count(x.shape());
+        let mut y = x.clone();
+        let padded = self.layout.padded_len();
+        let mut xbuf = std::mem::take(&mut self.scratch_x);
+        xbuf.clear();
+        xbuf.resize(padded.max(self.channels), 0.0);
+        let mut z = std::mem::take(&mut self.scratch_z);
+        let mut arng = self.analog_rng.take();
+        for pix in 0..pixels {
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            Self::gather_pixel(x, pix, &mut xbuf);
+            self.transform_forward_into(&xbuf[..self.channels], &mut arng, &mut z);
+            // Soft threshold in place (no cache to preserve), then
+            // inverse in place.
+            for (v, &t) in z.iter_mut().zip(&self.t) {
+                *v = crate::wht::soft_threshold(*v, t.abs());
+            }
+            self.bwht.inverse_padded_inplace(&mut z);
+            Self::scatter_pixel(&mut y, pix, &z[..self.channels]);
+        }
+        self.analog_rng = arng;
+        self.scratch_x = xbuf;
+        self.scratch_z = z;
         y
     }
 
@@ -351,6 +442,10 @@ impl Layer for BwhtLayer {
 
     fn name(&self) -> &'static str {
         "bwht"
+    }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
     }
 }
 
@@ -460,6 +555,59 @@ mod tests {
         let _ = l.forward(&x);
         assert!(l.term_processed > 0);
         assert_eq!(l.term_processed + l.term_skipped, 16 * 4);
+    }
+
+    #[test]
+    fn analog_inference_path_matches_training_path() {
+        // With the per-sample stream pinned, the scratch-reusing
+        // inference path must be bit-identical to the training forward —
+        // including under a *noisy* crossbar config (same RNG schedule).
+        let mk = || {
+            let (mut l, _) = layer(16, 16, 9);
+            l.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 7,
+            });
+            l
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());
+        for stream in 0..3u64 {
+            a.set_analog_stream(stream);
+            b.set_analog_stream(stream);
+            let ya = a.forward(&x);
+            let yb = b.forward_inference(&x);
+            assert_eq!(ya.data(), yb.data(), "stream {stream}");
+        }
+    }
+
+    #[test]
+    fn pinned_stream_makes_analog_forward_reproducible() {
+        let (mut l, _) = layer(16, 16, 10);
+        l.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term: None,
+            seed: 11,
+        });
+        let x = Tensor::vec1(&(0..16).map(|i| (i % 3) as f32).collect::<Vec<_>>());
+        l.set_analog_stream(5);
+        let y1 = l.forward_inference(&x).data().to_vec();
+        l.set_analog_stream(5);
+        let y2 = l.forward_inference(&x).data().to_vec();
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn float_inference_matches_forward_on_chw() {
+        let (mut l, mut rng) = layer(8, 8, 11);
+        let x = Tensor::from_vec(&[8, 3, 3], rng.normal_vec(72));
+        let a = l.forward(&x);
+        let b = l.forward_inference(&x);
+        assert_eq!(a.data(), b.data());
     }
 
     #[test]

@@ -13,6 +13,15 @@ use super::tensor::Tensor;
 pub trait Layer: Send {
     /// Forward pass; caches activations for backward.
     fn forward(&mut self, x: &Tensor) -> Tensor;
+    /// Forward pass without training bookkeeping: layers may skip
+    /// activation caching and reuse internal scratch buffers. Must
+    /// produce the same values as [`Layer::forward`]; calling
+    /// `backward` afterwards is unsupported. Default falls back to the
+    /// training path — hot layers override (the serving path,
+    /// EXPERIMENTS.md §Perf).
+    fn forward_inference(&mut self, x: &Tensor) -> Tensor {
+        self.forward(x)
+    }
     /// Backward pass: gradient w.r.t. input; accumulates param grads.
     fn backward(&mut self, grad_out: &Tensor) -> Tensor;
     /// Apply accumulated gradients (averaged over `batch`) and clear.
@@ -23,6 +32,9 @@ pub trait Layer: Send {
     fn mac_count(&self) -> usize;
     /// Human-readable kind (reports).
     fn name(&self) -> &'static str;
+    /// Clone into a boxed trait object — what lets `Sequential` (and the
+    /// analog batch engine's worker shards) duplicate a model.
+    fn clone_box(&self) -> Box<dyn Layer>;
 }
 
 /// Kaiming-ish init scale.
@@ -30,9 +42,34 @@ fn init_std(fan_in: usize) -> f32 {
     (2.0 / fan_in as f32).sqrt()
 }
 
+/// Dot product with eight independent accumulators.
+///
+/// PERF: a scalar `acc += w*x` reduction serializes on the FP-add
+/// latency (~4 cycles per element); eight lanes break the dependency
+/// chain and let the backend vectorize, which is the dominant win on the
+/// Dense matvec of the digit-MLP serving path (EXPERIMENTS.md §Perf).
+/// Summation order differs from the scalar loop by reassociation only.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let n8 = a.len() - a.len() % 8;
+    let (ah, at) = a.split_at(n8);
+    let (bh, bt) = b.split_at(n8);
+    for (ca, cb) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
+        for i in 0..8 {
+            lanes[i] += ca[i] * cb[i];
+        }
+    }
+    let tail: f32 = at.iter().zip(bt).map(|(x, y)| x * y).sum();
+    tail + ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+}
+
 // ---------------------------------------------------------------- Dense
 
 /// Fully connected layer `y = Wx + b`.
+#[derive(Clone)]
 pub struct Dense {
     pub in_dim: usize,
     pub out_dim: usize,
@@ -72,20 +109,28 @@ impl Dense {
     }
 }
 
+impl Dense {
+    /// `Wx + b` with the unrolled dot product (shared by both forwards).
+    fn matvec(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.len(), self.in_dim, "Dense input size");
+        let mut y = vec![0.0f32; self.out_dim];
+        for (o, slot) in y.iter_mut().enumerate() {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            *slot = self.b[o] + dot_f32(row, x.data());
+        }
+        Tensor::from_vec(&[self.out_dim], y)
+    }
+}
+
 impl Layer for Dense {
     fn forward(&mut self, x: &Tensor) -> Tensor {
-        assert_eq!(x.len(), self.in_dim, "Dense input size");
         self.cache_x = x.data().to_vec();
-        let mut y = vec![0.0f32; self.out_dim];
-        for o in 0..self.out_dim {
-            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
-            let mut acc = self.b[o];
-            for (wi, xi) in row.iter().zip(x.data()) {
-                acc += wi * xi;
-            }
-            y[o] = acc;
-        }
-        Tensor::vec1(&y)
+        self.matvec(x)
+    }
+
+    fn forward_inference(&mut self, x: &Tensor) -> Tensor {
+        // No backward follows: skip the activation cache copy.
+        self.matvec(x)
     }
 
     fn backward(&mut self, g: &Tensor) -> Tensor {
@@ -129,11 +174,16 @@ impl Layer for Dense {
     fn name(&self) -> &'static str {
         "dense"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 // --------------------------------------------------------------- Conv2d
 
 /// 2-D convolution, CHW, stride 1, same padding, odd kernel.
+#[derive(Clone)]
 pub struct Conv2d {
     pub in_ch: usize,
     pub out_ch: usize,
@@ -272,12 +322,16 @@ impl Layer for Conv2d {
     fn name(&self) -> &'static str {
         "conv2d"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 // ----------------------------------------------------------- activations
 
 /// ReLU.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct Relu {
     mask: Vec<bool>,
 }
@@ -291,6 +345,11 @@ impl Relu {
 impl Layer for Relu {
     fn forward(&mut self, x: &Tensor) -> Tensor {
         self.mask = x.data().iter().map(|&v| v > 0.0).collect();
+        x.clone().map(|v| v.max(0.0))
+    }
+
+    fn forward_inference(&mut self, x: &Tensor) -> Tensor {
+        // No backward follows: skip the mask allocation.
         x.clone().map(|v| v.max(0.0))
     }
 
@@ -317,12 +376,17 @@ impl Layer for Relu {
     fn name(&self) -> &'static str {
         "relu"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 /// Leaky ReLU (`slope·x` for x < 0). The conv miniatures use this
 /// instead of plain ReLU: at their size a bad init can kill every unit
 /// in a layer (dead-ReLU cascade), and the leak keeps gradients alive —
 /// training becomes seed-robust instead of seed-lucky.
+#[derive(Clone)]
 pub struct LeakyRelu {
     slope: f32,
     mask: Vec<bool>,
@@ -337,6 +401,11 @@ impl LeakyRelu {
 impl Layer for LeakyRelu {
     fn forward(&mut self, x: &Tensor) -> Tensor {
         self.mask = x.data().iter().map(|&v| v > 0.0).collect();
+        let s = self.slope;
+        x.clone().map(|v| if v > 0.0 { v } else { s * v })
+    }
+
+    fn forward_inference(&mut self, x: &Tensor) -> Tensor {
         let s = self.slope;
         x.clone().map(|v| if v > 0.0 { v } else { s * v })
     }
@@ -364,10 +433,15 @@ impl Layer for LeakyRelu {
     fn name(&self) -> &'static str {
         "leaky_relu"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 /// Per-channel affine `y = a·x + c` (batch-norm stand-in that trains
 /// sample-at-a-time).
+#[derive(Clone)]
 pub struct BatchScale {
     ch: usize,
     a: Vec<f32>,
@@ -443,10 +517,14 @@ impl Layer for BatchScale {
     fn name(&self) -> &'static str {
         "batch_scale"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 /// Global average pool CHW → C.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct GlobalAvgPool {
     dims: (usize, usize, usize),
 }
@@ -502,10 +580,14 @@ impl Layer for GlobalAvgPool {
     fn name(&self) -> &'static str {
         "global_avg_pool"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 /// 2×2 average pooling, stride 2 (CHW; odd trailing row/col dropped).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct AvgPool2d {
     dims: (usize, usize, usize),
 }
@@ -567,10 +649,14 @@ impl Layer for AvgPool2d {
     fn name(&self) -> &'static str {
         "avg_pool2d"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 /// Flatten CHW → vector.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct Flatten {
     shape: Vec<usize>,
 }
@@ -604,6 +690,10 @@ impl Layer for Flatten {
     fn name(&self) -> &'static str {
         "flatten"
     }
+
+    fn clone_box(&self) -> Box<dyn Layer> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]
@@ -634,6 +724,42 @@ mod tests {
                 "grad mismatch at {i}: numeric {num}, analytic {ana}"
             );
         }
+    }
+
+    #[test]
+    fn dot_f32_matches_scalar_reduction() {
+        let mut rng = Rng::new(77);
+        for n in [0usize, 1, 7, 8, 9, 63, 144, 1000] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot_f32(&a, &b);
+            assert!(
+                (scalar - fast).abs() <= 1e-4 * (1.0 + scalar.abs()),
+                "n={n}: scalar {scalar} vs unrolled {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_inference_matches_forward() {
+        let mut rng = Rng::new(78);
+        let mut d = Dense::new(17, 9, &mut rng);
+        let x = Tensor::vec1(&rng.normal_vec(17));
+        assert_eq!(d.forward(&x).data(), d.forward_inference(&x).data());
+        let mut r = Relu::new();
+        assert_eq!(r.forward(&x).data(), r.forward_inference(&x).data());
+        let mut l = LeakyRelu::new(0.1);
+        assert_eq!(l.forward(&x).data(), l.forward_inference(&x).data());
+    }
+
+    #[test]
+    fn clone_box_duplicates_parameters() {
+        let mut rng = Rng::new(79);
+        let mut d = Dense::new(6, 3, &mut rng);
+        let mut c = d.clone_box();
+        let x = Tensor::vec1(&rng.normal_vec(6));
+        assert_eq!(d.forward(&x).data(), c.forward(&x).data());
     }
 
     #[test]

@@ -35,6 +35,21 @@ impl Sequential {
         cur
     }
 
+    /// Inference-only forward: no backward caches, internal scratch
+    /// reused by the hot layers. Same values as [`Sequential::forward`];
+    /// this is what the serving engines call (EXPERIMENTS.md §Perf).
+    pub fn forward_inference(&mut self, x: &Tensor) -> Tensor {
+        let mut layers = self.layers.iter_mut();
+        let Some(first) = layers.next() else {
+            return x.clone();
+        };
+        let mut cur = first.forward_inference(x);
+        for l in layers {
+            cur = l.forward_inference(&cur);
+        }
+        cur
+    }
+
     pub fn backward(&mut self, g: &Tensor) -> Tensor {
         let mut cur = g.clone();
         for l in self.layers.iter_mut().rev() {
@@ -81,6 +96,15 @@ impl Sequential {
 impl Default for Sequential {
     fn default() -> Self {
         Sequential::new()
+    }
+}
+
+impl Clone for Sequential {
+    /// Deep copy via [`Layer::clone_box`] — parameters, exec modes and
+    /// scratch state all duplicate, which is what the multi-threaded
+    /// analog batch engine hands to each worker shard.
+    fn clone(&self) -> Self {
+        Sequential { layers: self.layers.iter().map(|l| l.clone_box()).collect() }
     }
 }
 
@@ -297,5 +321,28 @@ mod tests {
         let mut m = bwht_mlp(144, 10, 32, &mut rng);
         let y = m.forward(&Tensor::zeros(&[144]));
         assert_eq!(y.shape(), &[10]);
+    }
+
+    #[test]
+    fn mlp_inference_matches_training_forward() {
+        let mut rng = Rng::new(7);
+        let mut m = bwht_mlp(144, 10, 32, &mut rng);
+        for s in 0..4u64 {
+            let mut xr = Rng::new(100 + s);
+            let x = Tensor::vec1(&xr.normal_vec(144));
+            let a = m.forward(&x);
+            let b = m.forward_inference(&x);
+            assert_eq!(a.data(), b.data(), "seed {s}");
+        }
+    }
+
+    #[test]
+    fn cloned_model_forwards_identically() {
+        let mut rng = Rng::new(8);
+        let mut m = bwht_mlp(36, 4, 16, &mut rng);
+        let mut c = m.clone();
+        let x = Tensor::vec1(&Rng::new(9).normal_vec(36));
+        assert_eq!(m.forward_inference(&x).data(), c.forward_inference(&x).data());
+        assert_eq!(m.param_count(), c.param_count());
     }
 }

@@ -62,7 +62,15 @@ impl UniformQuantizer {
 
     /// Quantize a slice to levels.
     pub fn levels_of(&self, xs: &[f32]) -> Vec<u32> {
-        xs.iter().map(|&x| self.to_level(x)).collect()
+        let mut out = Vec::new();
+        self.levels_into(xs, &mut out);
+        out
+    }
+
+    /// Quantize a slice into a caller-owned buffer (hot-path form).
+    pub fn levels_into(&self, xs: &[f32], out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.to_level(x)));
     }
 }
 

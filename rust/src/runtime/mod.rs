@@ -5,12 +5,19 @@
 //! this module compiles it on the PJRT CPU client and runs it from the
 //! rust hot path. Python is never involved at serve time.
 //!
+//! The PJRT-backed [`client`] is gated behind the off-by-default `xla`
+//! feature so the default build runs fully offline; [`artifact`]
+//! (manifest/weight loading, shared with the analog path) is always
+//! available.
+//!
 //! See /opt/xla-example/load_hlo for the interchange pattern: HLO *text*
 //! (ids reassigned by the parser), lowered with `return_tuple=True` and
 //! unwrapped with `to_tuple1` here.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
 
 pub use artifact::{Artifacts, Manifest};
+#[cfg(feature = "xla")]
 pub use client::{LoadedModel, Runtime};

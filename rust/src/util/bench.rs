@@ -26,6 +26,11 @@ impl Measurement {
     pub fn per_sec(&self) -> f64 {
         1.0 / self.median.as_secs_f64()
     }
+
+    /// Median nanoseconds per iteration (the `BENCH_*.json` unit).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
 }
 
 impl std::fmt::Display for Measurement {
@@ -135,6 +140,184 @@ impl BenchSet {
     }
 }
 
+impl BenchSet {
+    /// Machine-readable results: the `BENCH_*.json` format every perf PR
+    /// commits so the repo accumulates a benchmark trajectory. Schema:
+    /// `{"title", "results": [{"name", "ns_per_iter", "spread_ns",
+    /// "iters", "samples", "per_sec"}]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"title\": {},\n", json_string(&self.title)));
+        out.push_str("  \"results\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"ns_per_iter\": {:.1}, \"spread_ns\": {:.1}, \
+                 \"iters\": {}, \"samples\": {}, \"per_sec\": {:.1}}}{}\n",
+                json_string(&m.name),
+                m.ns_per_iter(),
+                m.spread.as_secs_f64() * 1e9,
+                m.iters,
+                m.samples,
+                m.per_sec(),
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`BenchSet::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let json = self.to_json();
+        debug_assert!(json_is_well_formed(&json));
+        std::fs::write(path, json)
+    }
+}
+
+/// Escape a string for JSON.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Minimal recursive-descent JSON syntax check (no external crates in
+/// the offline build). Validates structure only — objects, arrays,
+/// strings with escapes, numbers, booleans, null — which is what the
+/// `BENCH_*.json` smoke tests assert.
+pub fn json_is_well_formed(text: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    fn skip_ws(b: &[u8], p: &mut usize) {
+        while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+            *p += 1;
+        }
+    }
+    fn value(b: &[u8], p: &mut usize, depth: usize) -> bool {
+        if depth > 64 {
+            return false;
+        }
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b'{') => {
+                *p += 1;
+                skip_ws(b, p);
+                if b.get(*p) == Some(&b'}') {
+                    *p += 1;
+                    return true;
+                }
+                loop {
+                    skip_ws(b, p);
+                    if !string(b, p) {
+                        return false;
+                    }
+                    skip_ws(b, p);
+                    if b.get(*p) != Some(&b':') {
+                        return false;
+                    }
+                    *p += 1;
+                    if !value(b, p, depth + 1) {
+                        return false;
+                    }
+                    skip_ws(b, p);
+                    match b.get(*p) {
+                        Some(b',') => *p += 1,
+                        Some(b'}') => {
+                            *p += 1;
+                            return true;
+                        }
+                        _ => return false,
+                    }
+                }
+            }
+            Some(b'[') => {
+                *p += 1;
+                skip_ws(b, p);
+                if b.get(*p) == Some(&b']') {
+                    *p += 1;
+                    return true;
+                }
+                loop {
+                    if !value(b, p, depth + 1) {
+                        return false;
+                    }
+                    skip_ws(b, p);
+                    match b.get(*p) {
+                        Some(b',') => *p += 1,
+                        Some(b']') => {
+                            *p += 1;
+                            return true;
+                        }
+                        _ => return false,
+                    }
+                }
+            }
+            Some(b'"') => string(b, p),
+            Some(b't') => literal(b, p, b"true"),
+            Some(b'f') => literal(b, p, b"false"),
+            Some(b'n') => literal(b, p, b"null"),
+            Some(_) => number(b, p),
+            None => false,
+        }
+    }
+    fn literal(b: &[u8], p: &mut usize, lit: &[u8]) -> bool {
+        if b[*p..].starts_with(lit) {
+            *p += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+    fn string(b: &[u8], p: &mut usize) -> bool {
+        if b.get(*p) != Some(&b'"') {
+            return false;
+        }
+        *p += 1;
+        while let Some(&c) = b.get(*p) {
+            match c {
+                b'"' => {
+                    *p += 1;
+                    return true;
+                }
+                b'\\' => {
+                    *p += 2; // escape + escaped byte (\uXXXX digits are benign)
+                }
+                _ => *p += 1,
+            }
+        }
+        false
+    }
+    fn number(b: &[u8], p: &mut usize) -> bool {
+        let start = *p;
+        if b.get(*p) == Some(&b'-') {
+            *p += 1;
+        }
+        while *p < b.len()
+            && matches!(b[*p], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            *p += 1;
+        }
+        *p > start && b[start..*p].iter().any(|c| c.is_ascii_digit())
+    }
+    if !value(bytes, &mut pos, 0) {
+        return false;
+    }
+    skip_ws(bytes, &mut pos);
+    pos == bytes.len()
+}
+
 /// Prevent the optimizer from discarding a value (stable-rust black box).
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -166,6 +349,46 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(12)).ends_with("µs"));
         assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_set_json_is_well_formed() {
+        let mut set = BenchSet::new("json \"smoke\"");
+        set.run("case a\\b", || {
+            black_box(1 + 1);
+        });
+        set.run("case µs", || {
+            black_box(2 + 2);
+        });
+        let json = set.to_json();
+        assert!(json_is_well_formed(&json), "malformed: {json}");
+        assert!(json.contains("ns_per_iter"));
+    }
+
+    #[test]
+    fn json_validator_accepts_and_rejects() {
+        for good in [
+            "{}",
+            "[]",
+            "{\"a\": 1, \"b\": [1.5e-3, -2, true, null, \"x\\\"y\"]}",
+            "  {\"nested\": {\"deep\": [[[]]]}}  ",
+            "3.25",
+        ] {
+            assert!(json_is_well_formed(good), "rejected valid: {good}");
+        }
+        for bad in [
+            "",
+            "{",
+            "{\"a\": }",
+            "{\"a\": 1,}",
+            "[1, 2,]",
+            "{\"a\" 1}",
+            "{\"a\": 1} trailing",
+            "\"unterminated",
+            "{'single': 1}",
+        ] {
+            assert!(!json_is_well_formed(bad), "accepted invalid: {bad}");
+        }
     }
 
     #[test]

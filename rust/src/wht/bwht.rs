@@ -77,10 +77,17 @@ impl Bwht {
 
     /// Pad a logical vector of length `n` to the block layout.
     pub fn pad(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.layout.n, "input length mismatch");
-        let mut p = vec![0.0f32; self.layout.padded_len()];
-        p[..x.len()].copy_from_slice(x);
+        let mut p = Vec::new();
+        self.pad_into(x, &mut p);
         p
+    }
+
+    /// Pad into a caller-owned buffer (allocation-free once warm).
+    pub fn pad_into(&self, x: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.layout.n, "input length mismatch");
+        out.clear();
+        out.resize(self.layout.padded_len(), 0.0);
+        out[..x.len()].copy_from_slice(x);
     }
 
     /// Truncate a padded vector back to the logical length.
@@ -106,17 +113,25 @@ impl Bwht {
         p
     }
 
-    /// Inverse transform (padded frequency domain → logical vector).
-    pub fn inverse(&self, y: &[f32]) -> Vec<f32> {
-        assert_eq!(y.len(), self.layout.padded_len(), "padded length mismatch");
+    /// In-place blockwise inverse over an already-padded buffer
+    /// (blockwise FWHT with the 1/block_size scale). The logical result
+    /// is the first `layout.n` values — callers slice, avoiding the
+    /// `unpad` copy on the hot path.
+    pub fn inverse_padded_inplace(&self, p: &mut [f32]) {
+        assert_eq!(p.len(), self.layout.padded_len(), "padded length mismatch");
         let scale = 1.0 / self.layout.block_size as f32;
-        let mut p = y.to_vec();
         for chunk in p.chunks_exact_mut(self.layout.block_size) {
             fwht_inplace(chunk);
             for v in chunk.iter_mut() {
                 *v *= scale;
             }
         }
+    }
+
+    /// Inverse transform (padded frequency domain → logical vector).
+    pub fn inverse(&self, y: &[f32]) -> Vec<f32> {
+        let mut p = y.to_vec();
+        self.inverse_padded_inplace(&mut p);
         self.unpad(&p)
     }
 

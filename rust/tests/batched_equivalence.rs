@@ -1,0 +1,164 @@
+//! The batched-pipeline contracts of the zero-allocation crossbar PR:
+//!
+//! 1. `BitplaneEngine::transform_batch` is bit-exactly equal to N
+//!    sequential `transform` calls under the same per-sample seed
+//!    schedule (`Rng::for_stream(seed, i)`), with and without early
+//!    termination, on noisy configs.
+//! 2. `AnalogEngine::infer_batch` results are invariant to the worker
+//!    thread count and to how a batch is split across calls.
+//! 3. Termination accounting survives the thread-shard merge.
+//! 4. The committed `BENCH_hotpath.json` perf trajectory stays
+//!    well-formed JSON.
+
+use adcim::cim::{BitplaneEngine, Crossbar, CrossbarConfig, EarlyTermination};
+use adcim::coordinator::{AnalogEngine, InferenceEngine};
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::util::bench::json_is_well_formed;
+use adcim::util::{prop, Rng};
+
+fn batch_inputs(n: usize, cols: usize, bits: u8, rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|_| (0..cols).map(|_| rng.below(1 << bits) as u32).collect())
+        .collect()
+}
+
+#[test]
+fn prop_transform_batch_equals_sequential_transforms() {
+    prop::check("transform_batch == N x transform", 24, |rng| {
+        let m = 1usize << (3 + rng.index(3)); // 8..32
+        let bits = (1 + rng.index(6)) as u8;
+        let noisy = rng.bool();
+        let cfg = if noisy { CrossbarConfig::default() } else { CrossbarConfig::ideal() };
+        let fab_seed = rng.next_u64();
+        let batch_seed = rng.next_u64();
+        let et = if rng.bool() {
+            Some(EarlyTermination::exact((1 + rng.index(20)) as f32))
+        } else {
+            None
+        };
+
+        let mut fab = Rng::new(fab_seed);
+        let mut batch_eng = BitplaneEngine::new(Crossbar::walsh(m, cfg, &mut fab), bits);
+        batch_eng.early_term = et;
+        let mut fab = Rng::new(fab_seed);
+        let mut seq_eng = BitplaneEngine::new(Crossbar::walsh(m, cfg, &mut fab), bits);
+        seq_eng.early_term = et;
+
+        let xs = batch_inputs(1 + rng.index(8), m, bits, rng);
+        let batched = batch_eng.transform_batch(&xs, batch_seed);
+        adcim::prop_assert!(batched.len() == xs.len(), "batch length");
+        for (i, x) in xs.iter().enumerate() {
+            let mut r = Rng::for_stream(batch_seed, i as u64);
+            let single = seq_eng.transform(x, &mut r);
+            adcim::prop_assert!(
+                batched[i].values == single.values,
+                "sample {i}: batched {:?} vs sequential {:?}",
+                batched[i].values,
+                single.values
+            );
+            adcim::prop_assert!(
+                batched[i].plane_signs == single.plane_signs,
+                "sample {i}: plane signs diverged"
+            );
+            adcim::prop_assert!(
+                batched[i].term.processed == single.term.processed
+                    && batched[i].term.skipped == single.term.skipped,
+                "sample {i}: termination stats diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Analog digit-MLP engine over synthetic weights (no artifacts needed).
+fn analog_engine(threads: usize, early_term: Option<EarlyTermination>) -> AnalogEngine {
+    let mut rng = Rng::new(1);
+    let mut model = bwht_mlp(36, 4, 16, &mut rng);
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term,
+            seed: 42,
+        })
+    });
+    AnalogEngine::from_model(model, 36).with_threads(threads)
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..36).map(|j| ((i * j + i) % 7) as f32 * 0.3).collect())
+        .collect()
+}
+
+#[test]
+fn infer_batch_is_thread_count_invariant() {
+    let imgs = images(13);
+    let mut base_engine = analog_engine(1, None);
+    let base = base_engine.infer_batch(&imgs).unwrap();
+    for threads in [2usize, 4, 8, 0] {
+        let mut e = analog_engine(threads, None);
+        let got = e.infer_batch(&imgs).unwrap();
+        assert_eq!(got, base, "threads={threads} changed analog batch results");
+    }
+}
+
+#[test]
+fn infer_batch_stream_offsets_survive_call_splits() {
+    // Two half-batches on one engine == one full batch on another, even
+    // when the two engines shard differently: the noise stream is a pure
+    // function of (seed, global sample index).
+    let imgs = images(12);
+    let mut split_engine = analog_engine(2, None);
+    let first = split_engine.infer_batch(&imgs[..5]).unwrap();
+    let second = split_engine.infer_batch(&imgs[5..]).unwrap();
+    let mut full_engine = analog_engine(3, None);
+    let full = full_engine.infer_batch(&imgs).unwrap();
+    let stitched: Vec<Vec<f32>> = first.into_iter().chain(second).collect();
+    assert_eq!(stitched, full);
+}
+
+#[test]
+fn termination_accounting_survives_shard_merge() {
+    // bwht_mlp(36, 4, 16): one 16-wide BWHT block, 4 input bits ⇒ each
+    // forward is 16 rows × 4 planes = 64 row-plane pairs.
+    let imgs = images(9);
+    let per_sample = 64u64;
+
+    let mut seq = analog_engine(1, Some(EarlyTermination::exact(6.0)));
+    let _ = seq.infer_batch(&imgs).unwrap();
+    let (p1, s1) = seq.termination_stats();
+    assert_eq!(p1 + s1, per_sample * imgs.len() as u64);
+
+    let mut par = analog_engine(4, Some(EarlyTermination::exact(6.0)));
+    let _ = par.infer_batch(&imgs).unwrap();
+    let (p4, s4) = par.termination_stats();
+    assert_eq!(
+        (p4, s4),
+        (p1, s1),
+        "sharded termination accounting must match the sequential run"
+    );
+}
+
+#[test]
+fn empty_batch_is_a_noop() {
+    let mut e = analog_engine(4, None);
+    assert!(e.infer_batch(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn wrong_dim_errors_in_threaded_mode_too() {
+    let mut e = analog_engine(3, None);
+    assert!(e.infer_batch(&[vec![0.0; 7], vec![0.0; 36], vec![0.0; 36]]).is_err());
+}
+
+#[test]
+fn committed_bench_trajectory_is_well_formed_json() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let text = std::fs::read_to_string(path)
+        .expect("BENCH_hotpath.json missing at repo root (scripts/bench.sh writes it)");
+    assert!(json_is_well_formed(&text), "BENCH_hotpath.json is not valid JSON");
+    assert!(text.contains("\"results\""), "missing results array");
+    assert!(text.contains("crossbar 128x128 bitplane"), "missing the tentpole case");
+}

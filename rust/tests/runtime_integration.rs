@@ -1,6 +1,9 @@
 //! PJRT integration: the AOT-compiled JAX/Pallas model, loaded and run
 //! from rust, must reproduce the golden logits python exported — the
-//! proof that all three layers compose. Requires `make artifacts`.
+//! proof that all three layers compose. Requires `make artifacts` and a
+//! real PJRT runtime, so the whole file is gated behind the `xla`
+//! feature (the default offline build compiles it away).
+#![cfg(feature = "xla")]
 
 use adcim::coordinator::{DigitalEngine, InferenceEngine};
 use adcim::runtime::{Artifacts, Runtime};

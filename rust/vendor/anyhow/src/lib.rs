@@ -1,0 +1,176 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! supplies exactly the surface `adcim` uses — `Error`, `Result`,
+//! `Context`, and the `anyhow!` / `bail!` / `ensure!` macros — with the
+//! same call-site syntax as the real crate. Swapping in real `anyhow`
+//! later is a one-line Cargo.toml change; no source edits needed.
+//!
+//! Like real `anyhow`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that is what allows the blanket
+//! `impl From<E: std::error::Error> for Error` to coexist with the
+//! identity conversion used by `?` on an already-`anyhow` result.
+
+use std::fmt::{self, Debug, Display};
+
+/// A context-carrying error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap with an outer context message (`"context: inner"`).
+    pub fn context<C: Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg), source: self.source }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        Display::fmt(&self.msg, f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn std::error::Error);
+        // Walk the source chain like anyhow's Debug output does.
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error/`None` case.
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return Err($crate::anyhow!($($t)+).into())
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let e: Result<()> = io_fail().context("reading manifest");
+        let msg = e.unwrap_err().to_string();
+        assert!(msg.starts_with("reading manifest: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("param {} missing", "w1")).unwrap_err();
+        assert_eq!(e.to_string(), "param w1 missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert!(f(99).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        assert!(f(1).unwrap_err().to_string().contains("fell through with 1"));
+    }
+
+    #[test]
+    fn debug_prints_source_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "root cause").into();
+        let e = e.context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+    }
+}

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Run the hot-path benchmark suite and write BENCH_hotpath.json at the
+# repo root (the machine-readable perf trajectory every perf PR updates;
+# see EXPERIMENTS.md §Perf).
+#
+# Usage: scripts/bench.sh [extra cargo bench args...]
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+export BENCH_JSON="${BENCH_JSON:-$ROOT/BENCH_hotpath.json}"
+
+cd "$ROOT/rust"
+cargo bench --bench hotpath "$@"
+
+echo "bench results: $BENCH_JSON"
