@@ -2,19 +2,33 @@
 //! EXPERIMENTS.md: a stream of synthetic sensor frames flows through the
 //! full stack (router → dynamic batcher → worker pool), once on the
 //! **digital reference** engine (the AOT-compiled JAX/Pallas model on
-//! PJRT) and once on the **analog CiM pool** (the paper's crossbar +
-//! collaborative-ADC simulator with the same trained weights), proving
-//! all three layers compose. Reports accuracy, latency and throughput.
+//! PJRT), once on the **analog CiM engine** with the ADC-free 1-bit
+//! path, and once through the **collaborative digitization pool** — the
+//! Fig 11 fabricated-chip shape: four 16×32 arrays taking turns
+//! computing MAVs and digitizing their neighbour's through
+//! memory-immersed converters. Reports accuracy, latency, throughput
+//! and the pool's per-conversion metrics (comparisons/conversion,
+//! cycles, fJ per request).
 //!
-//! Requires `make artifacts`. Run:
-//!   cargo run --release --example edge_pipeline
+//! NOTE: this file is an illustrative driver, not a registered cargo
+//! example target (it lives at the repo root, outside the `rust/`
+//! package, because the digital section needs the off-by-default `xla`
+//! feature plus `make artifacts`). To run it, copy into
+//! `rust/examples/` on a machine with PJRT and build with
+//! `--features xla`; the analog and pooled sections also run without
+//! `xla` if the digital block is removed. The same pooled serving path
+//! is driven artifact-free by `rust/tests/pool_serving.rs` and by
+//! `adcim serve --engine analog --pool 4`.
 
 use std::time::{Duration, Instant};
 
-use adcim::cim::{CrossbarConfig, EarlyTermination};
+use adcim::adc::ImmersedMode;
+use adcim::cim::{CrossbarConfig, EarlyTermination, PoolSpec};
 use adcim::config::ServerConfig;
+#[cfg(feature = "xla")]
+use adcim::coordinator::DigitalEngine;
 use adcim::coordinator::{
-    AnalogEngine, DigitalEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+    AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
 };
 use adcim::nn::Dataset;
 use adcim::runtime::Artifacts;
@@ -30,13 +44,16 @@ fn main() -> anyhow::Result<()> {
     );
     let data = Dataset::digits(FRAMES, 12, 0xed6e);
 
-    // ---- digital reference path (PJRT) -------------------------------
-    let digital: Vec<Box<dyn InferenceEngine>> = (0..2)
-        .map(|_| Box::new(DigitalEngine::load(&artifacts, false).unwrap()) as Box<_>)
-        .collect();
-    run_load("digital (PJRT, AOT JAX/Pallas)", digital, &data, &manifest)?;
+    // ---- digital reference path (PJRT; xla builds only) --------------
+    #[cfg(feature = "xla")]
+    {
+        let digital: Vec<Box<dyn InferenceEngine>> = (0..2)
+            .map(|_| Box::new(DigitalEngine::load(&artifacts, false).unwrap()) as Box<_>)
+            .collect();
+        run_load("digital (PJRT, AOT JAX/Pallas)", digital, &data, &manifest)?;
+    }
 
-    // ---- analog CiM pool (same weights, simulated hardware) ----------
+    // ---- analog CiM, ADC-free 1-bit default path ---------------------
     let analog: Vec<Box<dyn InferenceEngine>> = (0..2)
         .map(|w| {
             Box::new(
@@ -51,7 +68,30 @@ fn main() -> anyhow::Result<()> {
             ) as Box<_>
         })
         .collect();
-    run_load("analog (CiM crossbar pool)", analog, &data, &manifest)?;
+    run_load("analog (CiM crossbar, 1-bit ADC-free)", analog, &data, &manifest)?;
+
+    // ---- analog CiM through the 4-array collaborative pool -----------
+    // The Fig 11 fabricated-chip shape: nearest-neighbour SAR coupling,
+    // 5-bit memory-immersed conversion, MAVs digitized exactly once per
+    // phase by the partner array.
+    let spec = PoolSpec::fig11(ImmersedMode::Sar);
+    let pooled: Vec<Box<dyn InferenceEngine>> = (0..2)
+        .map(|w| {
+            Box::new(
+                AnalogEngine::load(
+                    &artifacts,
+                    CrossbarConfig::default(),
+                    None,
+                    manifest.input_bits,
+                    w as u64,
+                )
+                .unwrap()
+                .with_pool(Some(spec))
+                .unwrap(),
+            ) as Box<_>
+        })
+        .collect();
+    run_load("analog (4-array collaborative digitization pool)", pooled, &data, &manifest)?;
 
     Ok(())
 }
@@ -68,7 +108,7 @@ fn run_load(
         batch: manifest.batch,
         batch_deadline_us: 2000,
         queue_depth: 4096,
-        engine: String::new(),
+        ..Default::default()
     };
     let server = EdgeServer::start(&cfg, engines, RoutingPolicy::LeastLoaded)?;
 
@@ -103,6 +143,15 @@ fn run_load(
         got as f64 / wall.as_secs_f64()
     );
     println!("   accuracy {:.3} ({correct}/{got})", correct as f64 / got.max(1) as f64);
+    if snap.conversions > 0 {
+        println!(
+            "   pool: {} conversions, {:.2} comparisons/conv, {} cycles, {:.1} fJ/request",
+            snap.conversions,
+            snap.comparisons_per_conversion,
+            snap.adc_cycles,
+            snap.energy_per_req_fj
+        );
+    }
     anyhow::ensure!(got == submitted, "lost responses: {got}/{submitted}");
     Ok(())
 }

@@ -8,9 +8,12 @@
 //! fresh `Vec<bool>` per crossbar op, scalar-accumulator dense matvec —
 //! so one run measures before and after on identical hardware.
 
+use adcim::adc::ImmersedMode;
 use adcim::analog::timing::Phase;
 use adcim::analog::{Comparator, NoiseModel, OperatingPoint, PhaseTimer, SupplyModel};
-use adcim::cim::{BitplaneEngine, BitVec, Crossbar, CrossbarConfig, SignMatrix};
+use adcim::cim::{
+    BitplaneEngine, BitVec, CimArrayPool, Crossbar, CrossbarConfig, PoolSpec, SignMatrix,
+};
 use adcim::coordinator::{AnalogEngine, InferenceEngine};
 use adcim::nn::bwht_layer::BwhtExec;
 use adcim::nn::layer::dot_f32;
@@ -184,6 +187,51 @@ fn main() {
         black_box(eng.transform_batch(&batch, 0x5eed));
     });
 
+    // Collaborative digitization pool: the multi-bit serving path (4
+    // arrays, one scheduled phase + 32 conversions per plane). One case
+    // per converter networking mode; the printed info line reports
+    // conversions/s and conversion energy per transform so BENCH JSON
+    // carries both time and energy.
+    let pool_modes: [(&str, ImmersedMode, u8); 4] = [
+        ("sar", ImmersedMode::Sar, 5),
+        ("flash", ImmersedMode::Flash, 2),
+        ("hybrid f2", ImmersedMode::Hybrid { flash_bits: 2 }, 5),
+        ("sar asym", ImmersedMode::Sar, 5),
+    ];
+    for (label, mode, adc_bits) in pool_modes {
+        let spec = PoolSpec {
+            n_arrays: 4,
+            adc_bits,
+            mode,
+            asymmetric: label.ends_with("asym"),
+        };
+        let mut fab = Rng::new(31);
+        let matrix = SignMatrix::walsh(32);
+        let mk = |fab: &mut Rng| {
+            BitplaneEngine::new(
+                Crossbar::new(matrix.clone(), CrossbarConfig::default(), fab),
+                4,
+            )
+            .with_pool(CimArrayPool::new(&matrix, CrossbarConfig::default(), spec, fab))
+        };
+        // One probe transform for the energy/conversion info line.
+        let mut probe = mk(&mut fab.clone());
+        let xq: Vec<u32> = (0..32).map(|i| (i as u32 * 3) % 16).collect();
+        let out = probe.transform(&xq, &mut Rng::new(5));
+        println!(
+            "pool 4x32 {label}: {} conversions/transform, {:.2} cmp/conv, {:.1} fJ/transform",
+            out.conv.conversions,
+            out.conv.comparisons_per_conversion(),
+            out.conv.energy_fj
+        );
+        let mut eng = mk(&mut fab);
+        let mut r = Rng::new(6);
+        let xb = xq.clone();
+        set.run(&format!("pool 4x32 {label} transform 4-bit"), move || {
+            black_box(eng.transform(&xb, &mut r));
+        });
+    }
+
     // Dense matvec: seed scalar-accumulator baseline vs unrolled dot.
     let mut wr = Rng::new(5);
     let w = wr.normal_vec(144 * 32);
@@ -230,6 +278,7 @@ fn main() {
                 config: CrossbarConfig::default(),
                 early_term: None,
                 seed: 7,
+                pool: None,
             })
         });
         let mut engine = AnalogEngine::from_model(model, 144).with_threads(threads);

@@ -16,10 +16,8 @@
 
 use crate::util::Rng;
 
-use super::immersed::ImmersedAdc;
-use super::Conversion;
-#[cfg(test)]
-use super::Adc;
+use super::immersed::{ImmersedAdc, ImmersedMode};
+use super::{Adc, Conversion};
 
 /// Probability mass over output codes for a binomially distributed MAV.
 ///
@@ -158,9 +156,12 @@ impl AsymmetricSearch {
     /// Run the asymmetric conversion on a memory-immersed converter:
     /// each internal node is one reference generation + comparison on
     /// neighbour 0 (SAR-style coupling, different precharge sequence).
+    /// Decisions go through [`ImmersedAdc::compare_at`], so the tree
+    /// sees the converter's fabricated comparator (offset/noise) and
+    /// pays its per-decision energy, exactly like the built-in modes.
     pub fn convert(&self, adc: &mut ImmersedAdc, v_in: f64, rng: &mut Rng) -> Conversion {
-        let upc = adc.units_per_code_pub();
-        let v_in_eff = v_in * adc.common_gain_pub();
+        let upc = adc.units_per_code();
+        let v_in_eff = v_in * adc.common_gain();
         let mut at = self.root;
         let mut comparisons = 0u32;
         let mut energy = 0.0f64;
@@ -171,20 +172,70 @@ impl AsymmetricSearch {
                 }
                 Node::Cmp { split, lo, hi } => {
                     let k_units = (split as usize + 1) * upc;
-                    let v_ref = adc.ref_level(0, k_units, rng);
-                    energy += adc.share_energy_fj_pub() * 0.5 + 5.0;
-                    comparisons += 1;
-                    at = if v_in_eff > v_ref { hi } else { lo };
+                    let up = adc.compare_at(0, k_units, v_in_eff, &mut energy, &mut comparisons, rng);
+                    at = if up { hi } else { lo };
                 }
             }
         }
     }
 }
 
+/// An [`ImmersedAdc`] driven by an [`AsymmetricSearch`] comparison tree,
+/// packaged behind the common [`Adc`] trait so MAV-statistics-aware
+/// conversion is interchangeable with the symmetric converters at pool
+/// construction time ([`crate::cim::pool`]).
+#[derive(Debug, Clone)]
+pub struct AsymmetricAdc {
+    adc: ImmersedAdc,
+    tree: AsymmetricSearch,
+}
+
+impl AsymmetricAdc {
+    /// Pair a SAR-coupled immersed converter with a comparison tree of
+    /// matching resolution.
+    pub fn new(adc: ImmersedAdc, tree: AsymmetricSearch) -> Self {
+        assert_eq!(adc.bits(), tree.bits(), "tree/converter resolution mismatch");
+        assert!(
+            matches!(adc.mode(), ImmersedMode::Sar),
+            "asymmetric search drives SAR-coupled (nearest-neighbour) references"
+        );
+        AsymmetricAdc { adc, tree }
+    }
+
+    /// Build for the binomial bitplane-MAV distribution of a `cols`-wide
+    /// crossbar at input-bit density `density` (the paper's Fig 10 tree).
+    pub fn for_mav(adc: ImmersedAdc, cols: usize, density: f64) -> Self {
+        let pmf = binomial_mav_pmf(cols, density, adc.bits());
+        let tree = AsymmetricSearch::build(adc.bits(), &pmf);
+        AsymmetricAdc::new(adc, tree)
+    }
+
+    pub fn tree(&self) -> &AsymmetricSearch {
+        &self.tree
+    }
+
+    pub fn inner(&self) -> &ImmersedAdc {
+        &self.adc
+    }
+}
+
+impl Adc for AsymmetricAdc {
+    fn bits(&self) -> u8 {
+        self.adc.bits()
+    }
+
+    fn vdd(&self) -> f64 {
+        self.adc.vdd()
+    }
+
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion {
+        self.tree.convert(&mut self.adc, v_in, rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adc::immersed::ImmersedMode;
     use crate::util::prop;
 
     #[test]

@@ -139,29 +139,33 @@ impl ImmersedAdc {
         g * self.neighbours[idx].share_first_k(k_units, self.vdd, &noise, rng)
     }
 
-    /// Units-per-code scale factor (n_units / 2^bits).
-    fn units_per_code(&self) -> usize {
+    /// Units-per-code scale factor (n_units / 2^bits). External search
+    /// strategies ([`super::asymmetric::AsymmetricSearch`] drives the
+    /// converter's references directly) map output codes to precharge
+    /// counts with this.
+    pub fn units_per_code(&self) -> usize {
         self.neighbours[0].len() >> self.bits
     }
 
-    /// Public accessors for external search strategies
-    /// ([`super::asymmetric::AsymmetricSearch`] drives the converter's
-    /// references directly).
-    pub fn units_per_code_pub(&self) -> usize {
-        self.units_per_code()
-    }
-
-    pub fn common_gain_pub(&self) -> f64 {
+    /// Gain non-ideality shared by the MAV array and reference arrays
+    /// (1.0 = ideal; see [`ImmersedAdc::with_common_gain`]).
+    pub fn common_gain(&self) -> f64 {
         self.common_gain
     }
 
-    pub fn share_energy_fj_pub(&self) -> f64 {
+    /// Energy (fJ) of one reference charge-share on a neighbour array.
+    pub fn share_energy_fj(&self) -> f64 {
         self.neighbours[0].share_energy_fj(self.vdd)
     }
 
     /// One comparator decision against neighbour `idx`'s reference at
-    /// `k_units`, bookkeeping energy.
-    fn decide(
+    /// `k_units`, bookkeeping energy (`share/2 + e_cmp`) and the
+    /// comparison count. Every decision — the built-in SAR/Flash/Hybrid
+    /// loops and external search strategies alike
+    /// ([`super::asymmetric::AsymmetricSearch`] walks its comparison
+    /// tree through this) — goes through the converter's fabricated
+    /// comparator, so offsets and decision noise apply uniformly.
+    pub fn compare_at(
         &mut self,
         idx: usize,
         k_units: usize,
@@ -189,7 +193,7 @@ impl ImmersedAdc {
         let upc = self.units_per_code();
         for bit in (0..first_bit).rev() {
             let trial = code | (1 << bit);
-            if self.decide(0, trial as usize * upc, v_in, energy, comparisons, rng) {
+            if self.compare_at(0, trial as usize * upc, v_in, energy, comparisons, rng) {
                 code = trial;
             }
         }
@@ -219,7 +223,7 @@ impl Adc for ImmersedAdc {
                 // All neighbours fire simultaneously: thermometer count.
                 let mut count = 0u32;
                 for i in 0..self.neighbours.len() {
-                    if self.decide(i, (i + 1) * upc, v_in, &mut energy, &mut comparisons, rng) {
+                    if self.compare_at(i, (i + 1) * upc, v_in, &mut energy, &mut comparisons, rng) {
                         count += 1;
                     }
                 }
@@ -231,7 +235,7 @@ impl Adc for ImmersedAdc {
                 let mut seg = 0u32;
                 for i in 0..self.neighbours.len() {
                     let k = (i as u32 + 1) * seg_codes;
-                    if self.decide(i, k as usize * upc, v_in, &mut energy, &mut comparisons, rng) {
+                    if self.compare_at(i, k as usize * upc, v_in, &mut energy, &mut comparisons, rng) {
                         seg += 1;
                     }
                 }

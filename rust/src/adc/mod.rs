@@ -15,8 +15,16 @@
 //!   array.
 //! - [`asymmetric`] — MAV-statistics-aware successive approximation
 //!   (paper §IV-C, Fig 10): an optimal comparison tree for the skewed
-//!   bitplane MAV distribution (~3.7 comparisons avg vs 5 for 5 bits).
+//!   bitplane MAV distribution (~3.7 comparisons avg vs 5 for 5 bits),
+//!   plus [`AsymmetricAdc`], the tree bound to an immersed converter
+//!   behind the common trait.
 //! - [`metrics`] — staircase, DNL, INL, ENOB characterization (Fig 12).
+//!
+//! Every converter style implements the [`Adc`] trait, and [`AnyAdc`]
+//! packages them into one clonable value so the serving-path digitizer
+//! ([`crate::cim::pool::CimArrayPool`]) picks its converter at
+//! construction time — Sar/Flash/Hybrid immersed, asymmetric-tree, or
+//! the dedicated baselines — without monomorphising the pool.
 
 pub mod asymmetric;
 pub mod flash;
@@ -24,7 +32,7 @@ pub mod immersed;
 pub mod metrics;
 pub mod sar;
 
-pub use asymmetric::{binomial_mav_pmf, AsymmetricSearch};
+pub use asymmetric::{binomial_mav_pmf, AsymmetricAdc, AsymmetricSearch};
 pub use flash::FlashAdc;
 pub use immersed::{ImmersedAdc, ImmersedMode};
 pub use metrics::{staircase, Linearity};
@@ -66,6 +74,66 @@ pub fn ideal_code(v: f64, vdd: f64, bits: u8) -> u32 {
     let n = 1u32 << bits;
     let t = (v / vdd * n as f64).floor();
     (t.max(0.0) as u32).min(n - 1)
+}
+
+/// Any converter style behind one clonable value — the construction-time
+/// choice point of [`crate::cim::pool::CimArrayPool`] and the subject of
+/// the trait-conformance property tests (`tests/adc_conformance.rs`).
+#[derive(Debug, Clone)]
+pub enum AnyAdc {
+    /// Dedicated-DAC SAR baseline (Table I row 1).
+    Sar(SarAdc),
+    /// Dedicated resistor-ladder Flash baseline (Table I row 2).
+    Flash(FlashAdc),
+    /// Memory-immersed collaborative converter (any [`ImmersedMode`]).
+    Immersed(ImmersedAdc),
+    /// Immersed SAR driven by the Fig 10 asymmetric comparison tree.
+    Asymmetric(AsymmetricAdc),
+}
+
+impl AnyAdc {
+    /// Short label for reports and test diagnostics.
+    pub fn style(&self) -> &'static str {
+        match self {
+            AnyAdc::Sar(_) => "dedicated-sar",
+            AnyAdc::Flash(_) => "dedicated-flash",
+            AnyAdc::Immersed(a) => match a.mode() {
+                ImmersedMode::Sar => "immersed-sar",
+                ImmersedMode::Flash => "immersed-flash",
+                ImmersedMode::Hybrid { .. } => "immersed-hybrid",
+            },
+            AnyAdc::Asymmetric(_) => "immersed-asymmetric",
+        }
+    }
+}
+
+impl Adc for AnyAdc {
+    fn bits(&self) -> u8 {
+        match self {
+            AnyAdc::Sar(a) => a.bits(),
+            AnyAdc::Flash(a) => a.bits(),
+            AnyAdc::Immersed(a) => a.bits(),
+            AnyAdc::Asymmetric(a) => a.bits(),
+        }
+    }
+
+    fn vdd(&self) -> f64 {
+        match self {
+            AnyAdc::Sar(a) => a.vdd(),
+            AnyAdc::Flash(a) => a.vdd(),
+            AnyAdc::Immersed(a) => a.vdd(),
+            AnyAdc::Asymmetric(a) => a.vdd(),
+        }
+    }
+
+    fn convert(&mut self, v_in: f64, rng: &mut Rng) -> Conversion {
+        match self {
+            AnyAdc::Sar(a) => a.convert(v_in, rng),
+            AnyAdc::Flash(a) => a.convert(v_in, rng),
+            AnyAdc::Immersed(a) => a.convert(v_in, rng),
+            AnyAdc::Asymmetric(a) => a.convert(v_in, rng),
+        }
+    }
 }
 
 #[cfg(test)]

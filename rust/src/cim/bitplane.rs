@@ -17,6 +17,7 @@ use crate::util::Rng;
 use super::bitvec::BitVec;
 use super::crossbar::Crossbar;
 use super::early_term::{EarlyTermination, TermStats};
+use super::pool::{CimArrayPool, ConversionStats};
 
 /// Decompose non-negative integers into packed bitplanes, LSB first,
 /// reusing the buffers in `planes` (the scratch-arena form — zero
@@ -55,21 +56,29 @@ pub struct PlaneScratch {
     planes: Vec<BitVec>,
     active: Vec<bool>,
     signs: BitVec,
+    /// Decoded per-row signed sums for the pooled multi-bit path.
+    mav_values: Vec<f64>,
 }
 
 /// Result of one bitplane-wise transform.
 #[derive(Debug, Clone)]
 pub struct BitplaneOutput {
-    /// Reconstructed (1-bit-quantized) outputs, one per crossbar row.
+    /// Reconstructed outputs, one per crossbar row: 1-bit-quantized sign
+    /// reassembly on the default path, decoded multi-bit signed sums on
+    /// the pooled path.
     pub values: Vec<f32>,
     /// Per-plane sign bits (LSB first), one Vec<bool> per plane; rows
     /// skipped by early termination repeat their last decided bit.
     pub plane_signs: Vec<Vec<bool>>,
     /// Early-termination statistics for this transform.
     pub term: TermStats,
+    /// Collaborative-digitization accounting for this transform (all
+    /// zeros on the ADC-free default path).
+    pub conv: ConversionStats,
 }
 
-/// Bitplane-wise engine wrapping one crossbar.
+/// Bitplane-wise engine wrapping one crossbar, optionally emitting
+/// through a collaborative digitization pool.
 #[derive(Debug, Clone)]
 pub struct BitplaneEngine {
     crossbar: Crossbar,
@@ -79,17 +88,56 @@ pub struct BitplaneEngine {
     pub early_term: Option<EarlyTermination>,
     /// Internal scratch arena reused by every transform call.
     scratch: PlaneScratch,
+    /// When set, planes run through the pool's scheduled arrays and the
+    /// per-row outputs are multi-bit digitized MAVs instead of the
+    /// ADC-free 1-bit signs (paper §IV). `None` (the default) keeps the
+    /// pre-pool path bit-exact.
+    pool: Option<CimArrayPool>,
 }
 
 impl BitplaneEngine {
     pub fn new(crossbar: Crossbar, input_bits: u8) -> Self {
         assert!(input_bits >= 1 && input_bits <= 16);
-        BitplaneEngine { crossbar, input_bits, early_term: None, scratch: PlaneScratch::default() }
+        BitplaneEngine {
+            crossbar,
+            input_bits,
+            early_term: None,
+            scratch: PlaneScratch::default(),
+            pool: None,
+        }
     }
 
     pub fn with_early_term(mut self, et: EarlyTermination) -> Self {
         self.early_term = Some(et);
         self
+    }
+
+    /// Route transforms through a collaborative digitization pool. The
+    /// pool's arrays must share the engine crossbar's geometry (they are
+    /// normally fabricated from the same programmed matrix).
+    pub fn with_pool(mut self, pool: CimArrayPool) -> Self {
+        self.set_pool(Some(pool));
+        self
+    }
+
+    pub fn set_pool(&mut self, pool: Option<CimArrayPool>) {
+        if let Some(p) = &pool {
+            assert_eq!(p.rows(), self.crossbar.rows(), "pool/crossbar row mismatch");
+            assert_eq!(p.cols(), self.crossbar.cols(), "pool/crossbar col mismatch");
+        }
+        self.pool = pool;
+    }
+
+    pub fn pool(&self) -> Option<&CimArrayPool> {
+        self.pool.as_ref()
+    }
+
+    pub fn pool_mut(&mut self) -> Option<&mut CimArrayPool> {
+        self.pool.as_mut()
+    }
+
+    pub fn has_pool(&self) -> bool {
+        self.pool.is_some()
     }
 
     pub fn crossbar(&self) -> &Crossbar {
@@ -122,6 +170,9 @@ impl BitplaneEngine {
         s: &mut PlaneScratch,
     ) -> BitplaneOutput {
         assert_eq!(x.len(), self.crossbar.cols(), "input length != crossbar cols");
+        if self.pool.is_some() {
+            return self.transform_pooled(x, rng, s);
+        }
         decompose_bitplanes_into(x, self.input_bits, &mut s.planes);
         let rows = self.crossbar.rows();
         let nbits = self.input_bits as usize;
@@ -161,7 +212,81 @@ impl BitplaneEngine {
                 }
             }
         }
-        BitplaneOutput { values: acc, plane_signs, term }
+        BitplaneOutput { values: acc, plane_signs, term, conv: ConversionStats::default() }
+    }
+
+    /// The pooled (collaborative digitization) plane loop: steps 1–3 on
+    /// a scheduled compute-role array, multi-bit conversion through the
+    /// group's memory-immersed converter, and reassembly of the decoded
+    /// signed sums `2·plus − |x|` with their plane weights — so `values`
+    /// approximates the *exact* integer transform instead of the 1-bit
+    /// sign reconstruction (and is exactly equal to it in the aligned
+    /// ideal case; see `tests/pool_serving.rs`).
+    ///
+    /// Early termination still prunes reassembly MSB→LSB. Thresholds
+    /// keep the 1-bit path's units: the pooled partial is normalized by
+    /// `cols` before the bound test (a normalized plane value lies in
+    /// `[−1, 1]`, exactly the 1-bit path's per-plane `±1`), so one
+    /// `EarlyTermination` policy behaves comparably on both paths
+    /// instead of silently never firing against the `×cols`-larger
+    /// pooled sums. Active planes are digitized whole-array (the
+    /// hardware converts the full MAV vector); only fully-terminated
+    /// planes skip compute+conversion.
+    fn transform_pooled(
+        &mut self,
+        x: &[u32],
+        rng: &mut Rng,
+        s: &mut PlaneScratch,
+    ) -> BitplaneOutput {
+        let early_term = self.early_term;
+        let pool = self.pool.as_mut().expect("pooled path without a pool");
+        decompose_bitplanes_into(x, self.input_bits, &mut s.planes);
+        let rows = pool.rows();
+        let cols = pool.cols() as f32;
+        let nbits = self.input_bits as usize;
+
+        let mut acc = vec![0.0f32; rows];
+        let mut plane_signs = vec![vec![false; rows]; nbits];
+        s.active.clear();
+        s.active.resize(rows, true);
+        s.mav_values.clear();
+        s.mav_values.resize(rows, 0.0);
+        let mut term = TermStats::new(rows, nbits);
+        let base = pool.stats();
+        pool.begin_transform();
+
+        // MSB → LSB, one scheduled pool phase per plane.
+        for p in (0..nbits).rev() {
+            if s.active.iter().all(|a| !a) {
+                term.record_skipped_plane(p, &s.active);
+                continue;
+            }
+            pool.process_plane(&s.planes[p], rng, &mut s.mav_values);
+            let weight = (1u32 << p) as f32;
+            for r in 0..rows {
+                if !s.active[r] {
+                    term.record_skipped_row(r);
+                    continue;
+                }
+                let v = s.mav_values[r] as f32;
+                acc[r] += weight * v;
+                plane_signs[p][r] = v > 0.0;
+                term.record_processed(r);
+                if let Some(et) = &early_term {
+                    // Normalized units (see above): each remaining plane
+                    // contributes at most 1 (|2·plus − |x||/cols ≤ 1),
+                    // so the bound matches the 1-bit path's `2^p − 1`.
+                    let remaining = (1u32 << p) as f32 - 1.0;
+                    if et.should_terminate(acc[r] / cols, remaining) {
+                        s.active[r] = false;
+                        acc[r] = 0.0; // provably inside the dead band ⇒ zero
+                        term.record_terminated(r, p);
+                    }
+                }
+            }
+        }
+        let conv = pool.stats().minus(&base);
+        BitplaneOutput { values: acc, plane_signs, term, conv }
     }
 
     /// Transform a batch of unsigned vectors, reusing the engine's
@@ -216,10 +341,13 @@ impl BitplaneEngine {
         let out_n = self.transform(&neg, rng);
         let values =
             out_p.values.iter().zip(&out_n.values).map(|(a, b)| a - b).collect();
+        let mut conv = out_p.conv;
+        conv.merge(&out_n.conv);
         BitplaneOutput {
             values,
             plane_signs: out_p.plane_signs,
             term: out_p.term.merged(&out_n.term),
+            conv,
         }
     }
 

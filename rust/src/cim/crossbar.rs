@@ -14,8 +14,11 @@
 //! 4. **Compare** — the row comparator resolves `V_SL > V_SLB` into the
 //!    single-bit output (extreme 1-bit product-sum quantization; no ADC).
 //!
-//! The same step-3 voltages, *without* step 4, are the MAV outputs the
-//! memory-immersed ADC digitizes in [`crate::adc::immersed`].
+//! The same step-3 voltages, *without* step 4, are the MAV outputs of
+//! [`Crossbar::compute_mav_into`]. In the pooled serving path
+//! ([`super::pool::CimArrayPool`]) a neighbouring array digitizes them
+//! through a memory-immersed converter ([`crate::adc::immersed`])
+//! instead of step 4's 1-bit comparator.
 //!
 //! Hot-path shape (EXPERIMENTS.md §Perf): the allocation-free
 //! [`Crossbar::process_bitplane_into`] / [`Crossbar::compute_mav_into`]
@@ -214,6 +217,14 @@ impl Crossbar {
         self.cfg.op = op;
         self.timer = PhaseTimer::new(self.cfg.supply, op);
         self.consts = OpConstants::compute(&self.cfg, &self.timer, self.matrix.cols());
+    }
+
+    /// Volts of MAV per unit positive charge count at the current
+    /// operating point (`vdd · settle / cols`) — the scale the
+    /// collaborative digitizer ([`super::pool::CimArrayPool`]) inverts
+    /// when decoding output codes back into signed sums.
+    pub fn mav_volts_per_count(&self) -> f64 {
+        self.cfg.op.vdd * self.consts.settle / self.cols() as f64
     }
 
     /// Total switched capacitance of one operation (all cells + sum lines).

@@ -19,14 +19,20 @@
 //!   row dot products (the digital shadow of the analog charge sums).
 //! - [`crossbar`] — the analog 4-step operation with settling, noise and
 //!   energy accounting; also exposes raw MAV voltages for the ADC path.
-//! - [`bitplane`] — multi-bit input decomposition / output reassembly.
+//! - [`bitplane`] — multi-bit input decomposition / output reassembly,
+//!   through either the 1-bit comparators or a digitization pool.
 //! - [`early_term`] — the paper's §III-C early-termination engine
 //!   exploiting soft-threshold output sparsity.
+//! - [`pool`] — the collaborative digitization fabric (paper §IV): N
+//!   scheduled arrays taking turns computing MAVs and digitizing their
+//!   neighbour's through memory-immersed converters, with runtime
+//!   exactly-once enforcement and per-conversion energy accounting.
 
 pub mod bitplane;
 pub mod bitvec;
 pub mod crossbar;
 pub mod early_term;
+pub mod pool;
 
 pub use bitplane::{
     decompose_bitplanes, decompose_bitplanes_into, BitplaneEngine, BitplaneOutput, PlaneScratch,
@@ -34,3 +40,4 @@ pub use bitplane::{
 pub use bitvec::{BitVec, SignMatrix};
 pub use crossbar::{Crossbar, CrossbarConfig};
 pub use early_term::{EarlyTermination, TermStats};
+pub use pool::{CimArrayPool, ConversionStats, PoolSpec};

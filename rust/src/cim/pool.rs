@@ -1,0 +1,650 @@
+//! Collaborative digitization pool: the serving-path fabric that turns
+//! crossbar MAVs into codes (paper §IV, Figs 9/11).
+//!
+//! A [`CimArrayPool`] owns N identically-programmed crossbar arrays, a
+//! [`Topology`] describing how they couple, and an [`InterleaveSchedule`]
+//! assigning each array a per-phase role: **compute** an in-memory scalar
+//! product, or **digitize** a neighbour's multiply-average voltage by
+//! lending its column lines as the capacitive DAC of a memory-immersed
+//! converter ([`crate::adc::ImmersedAdc`]). This is the paper's second
+//! contribution made a first-class inference stage: the multi-bit MAVs
+//! from [`Crossbar::compute_mav_into`] flow through the neighbour array
+//! instead of a dedicated ADC, and [`super::BitplaneEngine`] reassembles
+//! the digitized planes into near-exact transform outputs (vs the 1-bit
+//! ADC-free default path).
+//!
+//! **Runtime invariants** — enforced here with assertions on the live
+//! data path, not just in `network::schedule::validate`:
+//!
+//! 1. *No array computes and digitizes in the same phase.* Every
+//!    [`CimArrayPool::process_plane`] re-derives the group's roles from
+//!    the schedule and asserts exactly one computer whose partners all
+//!    hold the digitize role.
+//! 2. *Every computed MAV is digitized exactly once.* A per-plane ledger
+//!    ([`CimArrayPool::begin_plane`] / [`CimArrayPool::digitize_row`] /
+//!    [`CimArrayPool::end_plane`]) panics on a double conversion and on
+//!    any row left unconverted when the phase closes.
+//!
+//! Per-conversion energy/cycles/comparisons accumulate in
+//! [`ConversionStats`] and thread up through the engines into
+//! [`crate::coordinator::Metrics`].
+
+use crate::adc::{Adc, AnyAdc, AsymmetricAdc, Conversion, ImmersedAdc, ImmersedMode};
+use crate::network::{CouplingMode, InterleaveSchedule, Role, Topology};
+use crate::util::Rng;
+
+use super::bitvec::{BitVec, SignMatrix};
+use super::crossbar::{Crossbar, CrossbarConfig};
+
+/// Pool shape: how many arrays, what converter networking, how many
+/// output bits, and whether the Fig 10 asymmetric comparison tree drives
+/// the SAR references. `Copy` so it rides inside `BwhtExec`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    /// CiM arrays in the pool (the fabricated chip has 4).
+    pub n_arrays: usize,
+    /// Converter resolution; needs `cols ≥ 2^adc_bits` column lines.
+    pub adc_bits: u8,
+    /// Collaborative networking mode (Sar / Flash / Hybrid).
+    pub mode: ImmersedMode,
+    /// Drive SAR references with the MAV-statistics comparison tree.
+    pub asymmetric: bool,
+}
+
+impl PoolSpec {
+    /// The fabricated test chip of Fig 11: four arrays. Resolution per
+    /// mode is bounded by the hardware — flash needs `2^bits − 1`
+    /// neighbour arrays, so 4 arrays cap flash at 2 bits; SAR and hybrid
+    /// run the paper's 5 bits.
+    pub fn fig11(mode: ImmersedMode) -> Self {
+        let adc_bits = if matches!(mode, ImmersedMode::Flash) { 2 } else { 5 };
+        PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false }
+    }
+
+    /// Parse CLI/config inputs; `Ok(None)` when `n_arrays == 0` (no
+    /// pool: the ADC-free 1-bit default path). `adc_bits == 0`
+    /// auto-selects per mode (flash 2, otherwise 5). Unknown mode
+    /// strings and infeasible (mode, bits, arrays) combinations are
+    /// errors, not silent fallbacks.
+    pub fn parse(
+        n_arrays: usize,
+        mode: &str,
+        adc_bits: u8,
+        asymmetric: bool,
+    ) -> Result<Option<Self>, String> {
+        if n_arrays == 0 {
+            return Ok(None);
+        }
+        let mode = match mode {
+            "sar" => ImmersedMode::Sar,
+            "flash" => ImmersedMode::Flash,
+            "hybrid" => ImmersedMode::Hybrid { flash_bits: 2 },
+            other => {
+                return Err(format!("unknown adc mode '{other}' (expected sar|flash|hybrid)"))
+            }
+        };
+        let adc_bits = if adc_bits > 0 {
+            adc_bits
+        } else if matches!(mode, ImmersedMode::Flash) {
+            2
+        } else {
+            5
+        };
+        let spec = PoolSpec { n_arrays, adc_bits, mode, asymmetric };
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+
+    /// Feasibility of this converter on this pool shape — the checks
+    /// that would otherwise surface as assertion panics deep inside
+    /// pool construction. (Column-line count vs `adc_bits` depends on
+    /// the programmed matrix and is still checked at construction.)
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=10).contains(&self.adc_bits) {
+            return Err(format!("adc_bits {} outside the supported 1..=10", self.adc_bits));
+        }
+        if let ImmersedMode::Hybrid { flash_bits } = self.mode {
+            if flash_bits >= self.adc_bits {
+                return Err(format!(
+                    "hybrid flash stage ({flash_bits} bits) must be narrower than adc_bits {}",
+                    self.adc_bits
+                ));
+            }
+        }
+        if self.asymmetric && !matches!(self.mode, ImmersedMode::Sar) {
+            return Err("the asymmetric comparison tree requires sar mode".to_string());
+        }
+        let group = CouplingMode::for_adc_mode(self.mode, self.adc_bits).group_size();
+        if self.n_arrays < group {
+            return Err(format!(
+                "{:?} at {} bits needs a coupling group of {group} arrays; pool has {}",
+                self.mode, self.adc_bits, self.n_arrays
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Accumulated per-conversion accounting: how much digitization work
+/// (and energy) the collaborative fabric spent. Threaded from the pool
+/// through `BitplaneOutput` and `BwhtLayer` into `AnalogEngine` and the
+/// coordinator's `MetricsSnapshot`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ConversionStats {
+    /// MAV→code conversions performed.
+    pub conversions: u64,
+    /// Comparator decisions across all conversions.
+    pub comparisons: u64,
+    /// Conversion clock cycles (mode-dependent; flash = 1/conversion).
+    pub cycles: u64,
+    /// Conversion energy (fJ): reference generation + comparators.
+    pub energy_fj: f64,
+}
+
+impl ConversionStats {
+    /// Fold one conversion into the running totals.
+    pub fn record(&mut self, c: &Conversion) {
+        self.conversions += 1;
+        self.comparisons += c.comparisons as u64;
+        self.cycles += c.cycles as u64;
+        self.energy_fj += c.energy_fj;
+    }
+
+    /// Fold another accumulator into this one (shard merges, signed
+    /// two-pass transforms).
+    pub fn merge(&mut self, other: &ConversionStats) {
+        self.conversions += other.conversions;
+        self.comparisons += other.comparisons;
+        self.cycles += other.cycles;
+        self.energy_fj += other.energy_fj;
+    }
+
+    /// Delta of two snapshots of a monotone counter (`self` later).
+    pub fn minus(&self, base: &ConversionStats) -> ConversionStats {
+        ConversionStats {
+            conversions: self.conversions - base.conversions,
+            comparisons: self.comparisons - base.comparisons,
+            cycles: self.cycles - base.cycles,
+            energy_fj: (self.energy_fj - base.energy_fj).max(0.0),
+        }
+    }
+
+    /// Average comparator decisions per conversion (the Fig 10 axis).
+    pub fn comparisons_per_conversion(&self) -> f64 {
+        if self.conversions == 0 {
+            0.0
+        } else {
+            self.comparisons as f64 / self.conversions as f64
+        }
+    }
+}
+
+/// A scheduled pool of collaborating CiM arrays (see module docs).
+#[derive(Debug, Clone)]
+pub struct CimArrayPool {
+    arrays: Vec<Crossbar>,
+    topology: Topology,
+    schedule: InterleaveSchedule,
+    /// Complete coupling groups, precomputed (hot path: no re-derivation).
+    groups: Vec<Vec<usize>>,
+    /// One converter per coupling group (the digitize-role partners'
+    /// column lines form its capacitive DAC).
+    converters: Vec<AnyAdc>,
+    spec: PoolSpec,
+    /// Digitize-role partners expected per group per phase.
+    expected_refs: usize,
+    /// Dispatch cursor: group = cursor % groups, phase advances once per
+    /// full rotation. Reset by [`CimArrayPool::begin_transform`].
+    cursor: usize,
+    stats: ConversionStats,
+    mavs_produced: u64,
+    mavs_digitized: u64,
+    /// Per-plane exactly-once ledger.
+    converted: Vec<bool>,
+    plane_open: bool,
+    mav_scratch: Vec<f64>,
+}
+
+impl CimArrayPool {
+    /// Fabricate a pool: `spec.n_arrays` crossbars all programmed with
+    /// `matrix` at `cfg` (per-array comparator/noise sampling from
+    /// `rng`), coupled per `spec.mode`, with one immersed converter per
+    /// coupling group whose DAC units are the arrays' `cols` column
+    /// lines.
+    pub fn new(matrix: &SignMatrix, cfg: CrossbarConfig, spec: PoolSpec, rng: &mut Rng) -> Self {
+        if let Err(e) = spec.validate() {
+            panic!("invalid pool spec: {e}");
+        }
+        let cols = matrix.cols();
+        assert!(
+            cols >= (1usize << spec.adc_bits),
+            "pool needs >= 2^adc_bits column lines per array ({} < {})",
+            cols,
+            1usize << spec.adc_bits
+        );
+        let coupling = CouplingMode::for_adc_mode(spec.mode, spec.adc_bits);
+        let topology = Topology::new(spec.n_arrays, coupling);
+        let schedule = InterleaveSchedule::build(&topology, 2 * coupling.group_size());
+        schedule.validate(&topology).expect("interleave schedule invalid");
+        let groups = topology.groups();
+        assert!(!groups.is_empty(), "pool has no complete coupling group");
+        let arrays: Vec<Crossbar> =
+            (0..spec.n_arrays).map(|_| Crossbar::new(matrix.clone(), cfg, rng)).collect();
+        let vdd = cfg.op.vdd;
+        let converters: Vec<AnyAdc> = groups
+            .iter()
+            .map(|_| {
+                let adc =
+                    ImmersedAdc::sample(spec.adc_bits, vdd, spec.mode, cols, 20.0, &cfg.noise, rng);
+                if spec.asymmetric {
+                    AnyAdc::Asymmetric(AsymmetricAdc::for_mav(adc, cols, 0.5))
+                } else {
+                    AnyAdc::Immersed(adc)
+                }
+            })
+            .collect();
+        CimArrayPool {
+            arrays,
+            expected_refs: coupling.group_size() - 1,
+            topology,
+            schedule,
+            groups,
+            converters,
+            spec,
+            cursor: 0,
+            stats: ConversionStats::default(),
+            mavs_produced: 0,
+            mavs_digitized: 0,
+            converted: Vec::new(),
+            plane_open: false,
+            mav_scratch: Vec::new(),
+        }
+    }
+
+    pub fn spec(&self) -> PoolSpec {
+        self.spec
+    }
+
+    pub fn rows(&self) -> usize {
+        self.arrays[0].rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.arrays[0].cols()
+    }
+
+    pub fn n_arrays(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    pub fn schedule(&self) -> &InterleaveSchedule {
+        &self.schedule
+    }
+
+    /// Read-only view of the arrays (ops/energy counters per array).
+    pub fn arrays(&self) -> &[Crossbar] {
+        &self.arrays
+    }
+
+    /// Accumulated conversion accounting since construction/reset.
+    pub fn stats(&self) -> ConversionStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = ConversionStats::default();
+        self.mavs_produced = 0;
+        self.mavs_digitized = 0;
+    }
+
+    /// MAVs produced by compute-role arrays so far.
+    pub fn mavs_produced(&self) -> u64 {
+        self.mavs_produced
+    }
+
+    /// MAVs digitized by the collaborative converters so far. Equal to
+    /// [`CimArrayPool::mavs_produced`] whenever no plane is open — the
+    /// exactly-once invariant, enforced per plane by the ledger.
+    pub fn mavs_digitized(&self) -> u64 {
+        self.mavs_digitized
+    }
+
+    /// Total crossbar (compute-side) energy across the pool (fJ).
+    pub fn crossbar_energy_fj(&self) -> f64 {
+        self.arrays.iter().map(|a| a.energy_fj()).sum()
+    }
+
+    /// Rewind the dispatch cursor to phase 0 / group 0. Engines call
+    /// this at the start of every transform so pooled results are a pure
+    /// function of `(pool state at build, input, rng)` — the contract
+    /// that keeps batched inference thread-count invariant.
+    pub fn begin_transform(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// One scheduled phase of one coupling group: the compute-role array
+    /// runs crossbar steps 1–3 on plane `x` (raw MAVs), and the group's
+    /// collaborative converter digitizes every row MAV exactly once.
+    /// Writes the decoded signed sums (`2·plus − |x|` estimates, same
+    /// units as [`Crossbar::ideal_bitplane`]) into `out`.
+    pub fn process_plane(&mut self, x: &BitVec, rng: &mut Rng, out: &mut [f64]) {
+        let rows = self.rows();
+        assert_eq!(out.len(), rows, "output length != array rows");
+        let n_groups = self.groups.len();
+        let phase = (self.cursor / n_groups) % self.schedule.phases();
+        let g = self.cursor % n_groups;
+        self.cursor += 1;
+
+        // Runtime role invariant: exactly one computer this phase, all
+        // partners digitizing — an array never holds both roles at once.
+        let mut computer: Option<usize> = None;
+        let mut refs = 0usize;
+        for &a in &self.groups[g] {
+            match self.schedule.role(phase, a) {
+                Role::Compute => {
+                    assert!(
+                        computer.is_none(),
+                        "phase {phase}: two compute roles in group {g}"
+                    );
+                    computer = Some(a);
+                }
+                Role::Digitize => refs += 1,
+                Role::Idle => {}
+            }
+        }
+        let computer = computer
+            .unwrap_or_else(|| panic!("phase {phase}: no compute role in group {g}"));
+        assert_eq!(
+            refs, self.expected_refs,
+            "phase {phase} group {g}: {refs} digitize partners, expected {}",
+            self.expected_refs
+        );
+
+        self.begin_plane(rows);
+        let mut mavs = std::mem::take(&mut self.mav_scratch);
+        mavs.resize(rows, 0.0);
+        self.arrays[computer].compute_mav_into(x, rng, &mut mavs);
+        self.mavs_produced += rows as u64;
+        let ones = x.count_ones() as f64;
+        for (r, slot) in out.iter_mut().enumerate() {
+            *slot = self.digitize_row(g, computer, r, mavs[r], ones, rng);
+        }
+        self.mav_scratch = mavs;
+        self.end_plane();
+    }
+
+    /// Open the per-plane exactly-once ledger for `rows` MAVs. Driven by
+    /// [`CimArrayPool::process_plane`]; public so custom phase drivers
+    /// (and the invariant tests) exercise the same assertions.
+    pub fn begin_plane(&mut self, rows: usize) {
+        assert!(!self.plane_open, "begin_plane while a plane is still open");
+        self.plane_open = true;
+        self.converted.clear();
+        self.converted.resize(rows, false);
+    }
+
+    /// Digitize one row's MAV through group `group`'s converter and
+    /// decode it back to a signed-sum estimate. Panics if the row was
+    /// already digitized this plane (exactly-once invariant).
+    ///
+    /// The comparator input is offset by half a charge count: the
+    /// crossbar's discrete MAV levels otherwise sit exactly on the
+    /// converter's ideal transition levels (both are `k/cols` grids when
+    /// `2^bits == cols`), where real hardware breaks ties with noise.
+    /// Centring each level in its code bin keeps the behavioural model
+    /// exact and noise-robust. Decoding inverts the floor quantizer at
+    /// the bin's expected charge count, so the aligned ideal case
+    /// recovers the exact `plus` count.
+    pub fn digitize_row(
+        &mut self,
+        group: usize,
+        computer: usize,
+        row: usize,
+        v_mav: f64,
+        ones: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert!(self.plane_open, "digitize_row outside begin_plane/end_plane");
+        assert!(
+            !self.converted[row],
+            "MAV of row {row} digitized twice in one phase (exactly-once invariant)"
+        );
+        let per_count = self.arrays[computer].mav_volts_per_count();
+        let adc = &mut self.converters[group];
+        let n_codes = (1u64 << adc.bits()) as f64;
+        let vdd = adc.vdd();
+        let c = adc.convert(v_mav + 0.5 * per_count, rng);
+        self.converted[row] = true;
+        self.mavs_digitized += 1;
+        self.stats.record(&c);
+        // Charge counts per code step; 1.0 in the aligned ideal case.
+        let bin_counts = vdd / (n_codes * per_count);
+        let plus_hat =
+            (c.code as f64 * bin_counts + 0.5 * (bin_counts - 1.0).max(0.0)).min(ones);
+        2.0 * plus_hat - ones
+    }
+
+    /// Close the plane; panics if any MAV was left undigitized.
+    pub fn end_plane(&mut self) {
+        assert!(self.plane_open, "end_plane without begin_plane");
+        self.plane_open = false;
+        let missed = self.converted.iter().filter(|&&c| !c).count();
+        assert!(
+            missed == 0,
+            "{missed} MAVs left undigitized at end of phase (exactly-once invariant)"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(cols: usize, seed: u64, density: f64) -> BitVec {
+        let mut rng = Rng::new(seed);
+        BitVec::from_bits(&(0..cols).map(|_| rng.bernoulli(density)).collect::<Vec<_>>())
+    }
+
+    fn ideal_pool(mode: ImmersedMode, adc_bits: u8) -> CimArrayPool {
+        let mut rng = Rng::new(7);
+        CimArrayPool::new(
+            &SignMatrix::walsh(32),
+            CrossbarConfig::ideal(),
+            PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn fig11_specs_fit_four_arrays() {
+        for mode in [ImmersedMode::Sar, ImmersedMode::Flash, ImmersedMode::Hybrid { flash_bits: 2 }]
+        {
+            let spec = PoolSpec::fig11(mode);
+            let mut rng = Rng::new(1);
+            let pool =
+                CimArrayPool::new(&SignMatrix::walsh(32), CrossbarConfig::ideal(), spec, &mut rng);
+            assert_eq!(pool.n_arrays(), 4);
+            assert!(pool.n_groups() >= 1);
+        }
+    }
+
+    #[test]
+    fn ideal_sar_pool_decodes_exact_signed_sums() {
+        // Aligned case (cols == 2^bits, settle == 1): the decoded plane
+        // equals the exact ±1 weighted sums whenever |x| < cols.
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(3);
+        let mut out = vec![0.0; 32];
+        for seed in 0..8 {
+            let x = plane(32, seed, 0.45);
+            if x.count_ones() as usize == 32 {
+                continue;
+            }
+            let exact = pool.arrays()[0].matrix().matvec(&x);
+            pool.process_plane(&x, &mut rng, &mut out);
+            for (r, e) in exact.iter().enumerate() {
+                assert_eq!(out[r], *e as f64, "row {r} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_neighbour_roles_alternate_across_phases() {
+        // 4 arrays, SAR coupling: groups [0,1] and [2,3]. A full rotation
+        // later the compute role has swapped inside each pair.
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(4);
+        let mut out = vec![0.0; 32];
+        let x = plane(32, 1, 0.5);
+        for _ in 0..4 {
+            pool.process_plane(&x, &mut rng, &mut out);
+        }
+        let ops: Vec<u64> = pool.arrays().iter().map(|a| a.ops()).collect();
+        assert_eq!(ops, vec![1, 1, 1, 1], "each array computed exactly once");
+    }
+
+    #[test]
+    fn exactly_once_accounting_holds() {
+        let mut pool = ideal_pool(ImmersedMode::Hybrid { flash_bits: 2 }, 5);
+        let mut rng = Rng::new(5);
+        let mut out = vec![0.0; 32];
+        for seed in 0..3 {
+            pool.process_plane(&plane(32, seed, 0.5), &mut rng, &mut out);
+        }
+        assert_eq!(pool.mavs_produced(), 3 * 32);
+        assert_eq!(pool.mavs_digitized(), pool.mavs_produced());
+        assert_eq!(pool.stats().conversions, 3 * 32);
+        assert!(pool.stats().energy_fj > 0.0);
+    }
+
+    #[test]
+    fn per_mode_cycle_and_comparison_arithmetic() {
+        let cases = [
+            (ImmersedMode::Sar, 5u8, 5u64, 5u64),
+            (ImmersedMode::Flash, 2, 1, 3),
+            (ImmersedMode::Hybrid { flash_bits: 2 }, 5, 4, 6),
+        ];
+        for (mode, bits, cycles, comparisons) in cases {
+            let mut pool = ideal_pool(mode, bits);
+            let mut rng = Rng::new(6);
+            let mut out = vec![0.0; 32];
+            pool.process_plane(&plane(32, 2, 0.5), &mut rng, &mut out);
+            let s = pool.stats();
+            assert_eq!(s.conversions, 32, "{mode:?}");
+            assert_eq!(s.cycles, cycles * 32, "{mode:?}");
+            assert_eq!(s.comparisons, comparisons * 32, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn asymmetric_tree_cuts_comparisons_on_skewed_mavs() {
+        let spec = PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: true };
+        let mut rng = Rng::new(8);
+        let mut asym =
+            CimArrayPool::new(&SignMatrix::walsh(32), CrossbarConfig::ideal(), spec, &mut rng);
+        let mut plain = ideal_pool(ImmersedMode::Sar, 5);
+        let mut out = vec![0.0; 32];
+        let mut ra = Rng::new(9);
+        let mut rp = Rng::new(9);
+        for seed in 0..16 {
+            let x = plane(32, seed, 0.5);
+            asym.process_plane(&x, &mut ra, &mut out);
+            plain.process_plane(&x, &mut rp, &mut out);
+        }
+        assert_eq!(asym.stats().conversions, plain.stats().conversions);
+        assert!(
+            asym.stats().comparisons < plain.stats().comparisons,
+            "asymmetric {} !< symmetric {}",
+            asym.stats().comparisons,
+            plain.stats().comparisons
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "digitized twice")]
+    fn double_digitization_panics() {
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(10);
+        pool.begin_plane(32);
+        pool.digitize_row(0, 0, 3, 0.4, 16.0, &mut rng);
+        pool.digitize_row(0, 0, 3, 0.4, 16.0, &mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "undigitized")]
+    fn missed_digitization_panics() {
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(11);
+        pool.begin_plane(32);
+        pool.digitize_row(0, 0, 0, 0.4, 16.0, &mut rng);
+        pool.end_plane();
+    }
+
+    #[test]
+    fn begin_transform_makes_runs_reproducible() {
+        let mut a = ideal_pool(ImmersedMode::Sar, 5);
+        let mut b = ideal_pool(ImmersedMode::Sar, 5);
+        let x = plane(32, 3, 0.5);
+        let mut oa = vec![0.0; 32];
+        let mut ob = vec![0.0; 32];
+        // Advance `a` an odd number of phases, then rewind: results must
+        // match a fresh pool's first phase.
+        a.process_plane(&x, &mut Rng::new(12), &mut oa);
+        a.begin_transform();
+        a.process_plane(&x, &mut Rng::new(13), &mut oa);
+        b.begin_transform();
+        b.process_plane(&x, &mut Rng::new(13), &mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    #[should_panic(expected = "column lines")]
+    fn rejects_too_few_columns_for_resolution() {
+        let mut rng = Rng::new(14);
+        CimArrayPool::new(
+            &SignMatrix::walsh(16),
+            CrossbarConfig::ideal(),
+            PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: false },
+            &mut rng,
+        );
+    }
+
+    #[test]
+    fn parse_maps_cli_inputs() {
+        assert_eq!(PoolSpec::parse(0, "sar", 0, false), Ok(None));
+        let s = PoolSpec::parse(4, "sar", 0, true).unwrap().unwrap();
+        assert_eq!((s.n_arrays, s.adc_bits, s.asymmetric), (4, 5, true));
+        assert_eq!(s.mode, ImmersedMode::Sar);
+        let f = PoolSpec::parse(8, "flash", 0, false).unwrap().unwrap();
+        assert_eq!((f.adc_bits, f.mode), (2, ImmersedMode::Flash));
+        let h = PoolSpec::parse(4, "hybrid", 4, false).unwrap().unwrap();
+        assert_eq!((h.adc_bits, h.mode), (4, ImmersedMode::Hybrid { flash_bits: 2 }));
+    }
+
+    #[test]
+    fn parse_rejects_bad_configurations_with_diagnostics() {
+        // Typo'd mode must not silently fall back to hybrid.
+        let e = PoolSpec::parse(4, "slar", 0, false).unwrap_err();
+        assert!(e.contains("unknown adc mode"), "{e}");
+        // Hybrid's 2-bit flash stage needs adc_bits > 2.
+        let e = PoolSpec::parse(4, "hybrid", 2, false).unwrap_err();
+        assert!(e.contains("narrower"), "{e}");
+        // 5-bit flash needs 2^5 − 1 reference arrays + the computer.
+        let e = PoolSpec::parse(4, "flash", 5, false).unwrap_err();
+        assert!(e.contains("coupling group"), "{e}");
+        // Asymmetric tree is a SAR-coupling technique.
+        let e = PoolSpec::parse(4, "flash", 0, true).unwrap_err();
+        assert!(e.contains("asymmetric"), "{e}");
+        // Out-of-range resolution.
+        let e = PoolSpec::parse(4, "sar", 11, false).unwrap_err();
+        assert!(e.contains("1..=10"), "{e}");
+    }
+}

@@ -70,6 +70,16 @@ pub struct ServerConfig {
     /// (0 = auto-detect, 1 = sequential). Results are thread-count
     /// invariant by the per-sample RNG-stream contract.
     pub engine_threads: usize,
+    /// CiM arrays per collaborative digitization pool (analog engine
+    /// only). 0 = no pool: the ADC-free 1-bit default path.
+    pub pool_arrays: usize,
+    /// Converter networking for the pool: "sar", "flash" or "hybrid".
+    pub adc_mode: String,
+    /// Pool converter resolution; 0 auto-selects per mode (flash 2,
+    /// otherwise the paper's 5).
+    pub adc_bits: u8,
+    /// Drive SAR references with the Fig 10 asymmetric comparison tree.
+    pub asymmetric_adc: bool,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +91,10 @@ impl Default for ServerConfig {
             queue_depth: 256,
             engine: "digital".to_string(),
             engine_threads: 1,
+            pool_arrays: 0,
+            adc_mode: "hybrid".to_string(),
+            adc_bits: 0,
+            asymmetric_adc: false,
         }
     }
 }
@@ -100,6 +114,13 @@ impl ServerConfig {
             engine_threads: t
                 .get_int("server", "engine_threads")
                 .unwrap_or(d.engine_threads as i64) as usize,
+            pool_arrays: t.get_int("server", "pool_arrays").unwrap_or(d.pool_arrays as i64)
+                as usize,
+            adc_mode: t.get_str("server", "adc_mode").unwrap_or(d.adc_mode),
+            adc_bits: t.get_int("server", "adc_bits").unwrap_or(d.adc_bits as i64) as u8,
+            asymmetric_adc: t
+                .get_bool("server", "asymmetric_adc")
+                .unwrap_or(d.asymmetric_adc),
         }
     }
 }
@@ -124,5 +145,19 @@ mod tests {
         let s = ServerConfig::from_toml(&t);
         assert_eq!(s.workers, 8);
         assert_eq!(s.engine, "analog");
+        assert_eq!(s.pool_arrays, 0); // pool off by default
+    }
+
+    #[test]
+    fn from_toml_pool_settings() {
+        let t = TomlLite::parse(
+            "[server]\npool_arrays = 4\nadc_mode = \"sar\"\nadc_bits = 5\nasymmetric_adc = true\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.pool_arrays, 4);
+        assert_eq!(s.adc_mode, "sar");
+        assert_eq!(s.adc_bits, 5);
+        assert!(s.asymmetric_adc);
     }
 }

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use crate::cim::{CrossbarConfig, EarlyTermination};
+use crate::cim::{ConversionStats, CrossbarConfig, EarlyTermination, PoolSpec};
 use crate::nn::bwht_layer::BwhtExec;
 use crate::nn::model::bwht_mlp_from_weights;
 use crate::nn::{Sequential, Tensor};
@@ -27,6 +27,12 @@ pub trait InferenceEngine: Send {
     fn name(&self) -> &'static str;
     /// Input dimension.
     fn input_dim(&self) -> usize;
+    /// Cumulative collaborative-digitization accounting (monotone).
+    /// Engines without an ADC pool report zeros; the serving loop
+    /// records per-batch deltas into [`super::Metrics`].
+    fn conversion_stats(&mut self) -> ConversionStats {
+        ConversionStats::default()
+    }
 }
 
 /// PJRT-backed digital reference engine.
@@ -117,6 +123,8 @@ pub struct AnalogEngine {
     threads: usize,
     /// Termination counters merged back from worker-shard model clones.
     shard_term: (u64, u64),
+    /// Conversion accounting merged back from worker-shard model clones.
+    shard_conv: ConversionStats,
     /// Next sample stream offset, advanced per inferred sample so
     /// repeated `infer_batch` calls keep drawing fresh noise.
     next_stream: u64,
@@ -137,20 +145,59 @@ impl AnalogEngine {
         let blob = artifacts.weights()?;
         let mut model = bwht_mlp_from_weights(&manifest, &blob)?;
         model.for_each_bwht(|b| {
-            b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed });
+            b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed, pool: None });
         });
         Ok(AnalogEngine::from_model(model, manifest.input))
     }
 
     /// Wrap an already-built model (tests, sweeps).
     pub fn from_model(model: Sequential, input: usize) -> Self {
-        AnalogEngine { model, input, threads: 1, shard_term: (0, 0), next_stream: 0 }
+        AnalogEngine {
+            model,
+            input,
+            threads: 1,
+            shard_term: (0, 0),
+            shard_conv: ConversionStats::default(),
+            next_stream: 0,
+        }
     }
 
     /// Set the `infer_batch` worker-thread count (0 = auto-detect).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
+    }
+
+    /// Serve every BWHT stage through a collaborative digitization pool
+    /// (`None` restores the ADC-free 1-bit default). Applies to layers
+    /// already in analog exec mode; resets their fabricated engines.
+    /// Validates the spec against each BWHT block's width up front, so
+    /// an infeasible resolution is a clean error here instead of an
+    /// assertion panic on a serving worker thread mid-batch.
+    pub fn with_pool(mut self, pool: Option<PoolSpec>) -> Result<Self> {
+        if let Some(spec) = &pool {
+            spec.validate().map_err(|e| anyhow::anyhow!("invalid pool spec: {e}"))?;
+            let mut narrowest = usize::MAX;
+            self.model.for_each_bwht(|b| narrowest = narrowest.min(b.layout().block_size));
+            anyhow::ensure!(
+                narrowest != usize::MAX,
+                "model has no BWHT stage to serve through a pool"
+            );
+            anyhow::ensure!(
+                narrowest >= (1usize << spec.adc_bits),
+                "pool adc_bits {} needs 2^bits = {} column lines, but the model's \
+                 narrowest BWHT block is only {} wide",
+                spec.adc_bits,
+                1usize << spec.adc_bits,
+                narrowest
+            );
+        }
+        self.model.for_each_bwht(|b| {
+            if let BwhtExec::Analog { input_bits, config, early_term, seed, .. } = b.exec {
+                b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed, pool });
+            }
+        });
+        Ok(self)
     }
 
     /// Access early-termination counters accumulated by the BWHT layers
@@ -214,7 +261,7 @@ impl InferenceEngine for AnalogEngine {
         let chunk = images.len().div_ceil(threads);
         let input = self.input;
         let model = &self.model;
-        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64)>> =
+        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = images
                     .chunks(chunk)
@@ -234,11 +281,13 @@ impl InferenceEngine for AnalogEngine {
                             }
                             let mut processed = 0;
                             let mut skipped = 0;
+                            let mut conv = ConversionStats::default();
                             shard_model.for_each_bwht(|b| {
                                 processed += b.term_processed;
                                 skipped += b.term_skipped;
+                                conv.merge(&b.conv_stats);
                             });
-                            Ok((out, processed, skipped))
+                            Ok((out, processed, skipped, conv))
                         })
                     })
                     .collect();
@@ -247,20 +296,23 @@ impl InferenceEngine for AnalogEngine {
 
         // Shard clones inherit this model's counters at clone time; only
         // the delta beyond that baseline is work the shard itself did.
-        let (base_p, base_s) = {
+        let (base_p, base_s, base_conv) = {
             let mut p = 0;
             let mut s = 0;
+            let mut c = ConversionStats::default();
             self.model.for_each_bwht(|b| {
                 p += b.term_processed;
                 s += b.term_skipped;
+                c.merge(&b.conv_stats);
             });
-            (p, s)
+            (p, s, c)
         };
         let mut all = Vec::with_capacity(images.len());
         for res in shard_results {
-            let (logits, processed, skipped) = res?;
+            let (logits, processed, skipped, conv) = res?;
             self.shard_term.0 += processed - base_p;
             self.shard_term.1 += skipped - base_s;
+            self.shard_conv.merge(&conv.minus(&base_conv));
             all.extend(logits);
         }
         Ok(all)
@@ -272,6 +324,15 @@ impl InferenceEngine for AnalogEngine {
 
     fn input_dim(&self) -> usize {
         self.input
+    }
+
+    /// Pool digitization accounting: prototype-model layers plus the
+    /// merged worker-shard deltas (same baseline discipline as
+    /// [`AnalogEngine::termination_stats`]).
+    fn conversion_stats(&mut self) -> ConversionStats {
+        let mut total = self.shard_conv;
+        self.model.for_each_bwht(|b| total.merge(&b.conv_stats));
+        total
     }
 }
 

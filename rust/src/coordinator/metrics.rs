@@ -1,8 +1,11 @@
-//! Serving metrics: latency distribution, throughput, batch shapes.
+//! Serving metrics: latency distribution, throughput, batch shapes, and
+//! collaborative-digitization accounting (conversions, comparator
+//! decisions, cycles and fJ from the CiM array pool, per request).
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::cim::ConversionStats;
 use crate::util::stats::Moments;
 
 /// Shared metrics (interior mutability; cheap enough off the hot loop).
@@ -20,6 +23,7 @@ struct Inner {
     latencies: Vec<f64>,
     started: Option<Instant>,
     finished: Option<Instant>,
+    conv: ConversionStats,
 }
 
 /// Snapshot for reporting.
@@ -33,6 +37,19 @@ pub struct MetricsSnapshot {
     pub max_latency_us: f64,
     pub mean_batch: f64,
     pub throughput_per_s: f64,
+    /// MAV→code conversions performed by the digitization pool (0 on
+    /// the ADC-free path).
+    pub conversions: u64,
+    /// Comparator decisions across all conversions.
+    pub adc_comparisons: u64,
+    /// Conversion clock cycles across all conversions.
+    pub adc_cycles: u64,
+    /// Conversion energy (fJ) across all conversions.
+    pub adc_energy_fj: f64,
+    /// Average comparator decisions per conversion (the Fig 10 axis).
+    pub comparisons_per_conversion: f64,
+    /// Conversion energy per completed request (fJ).
+    pub energy_per_req_fj: f64,
 }
 
 impl Metrics {
@@ -60,6 +77,15 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Fold a per-batch delta of pool digitization work into the totals
+    /// (workers call this after each `infer_batch`).
+    pub fn record_conversions(&self, delta: &ConversionStats) {
+        if delta.conversions == 0 && delta.energy_fj == 0.0 {
+            return;
+        }
+        self.inner.lock().unwrap().conv.merge(delta);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mut sorted = g.latencies.clone();
@@ -84,6 +110,16 @@ impl Metrics {
             max_latency_us: g.latency_us.max(),
             mean_batch: g.batch_size.mean(),
             throughput_per_s: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
+            conversions: g.conv.conversions,
+            adc_comparisons: g.conv.comparisons,
+            adc_cycles: g.conv.cycles,
+            adc_energy_fj: g.conv.energy_fj,
+            comparisons_per_conversion: g.conv.comparisons_per_conversion(),
+            energy_per_req_fj: if g.completed > 0 {
+                g.conv.energy_fj / g.completed as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -100,7 +136,18 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_latency_us,
             self.mean_batch,
             self.throughput_per_s
-        )
+        )?;
+        if self.conversions > 0 {
+            write!(
+                f,
+                " conv={} cmp/conv={:.2} cycles={} E/req={:.0}fJ",
+                self.conversions,
+                self.comparisons_per_conversion,
+                self.adc_cycles,
+                self.energy_per_req_fj
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -130,5 +177,36 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p50_latency_us, 0.0);
+        assert_eq!(s.conversions, 0);
+        assert_eq!(s.energy_per_req_fj, 0.0);
+    }
+
+    #[test]
+    fn conversion_deltas_accumulate_into_per_request_energy() {
+        let m = Metrics::new();
+        for lat in [100u64, 200] {
+            m.record_completion(lat);
+        }
+        m.record_conversions(&ConversionStats {
+            conversions: 64,
+            comparisons: 320,
+            cycles: 320,
+            energy_fj: 150.0,
+        });
+        m.record_conversions(&ConversionStats {
+            conversions: 64,
+            comparisons: 320,
+            cycles: 320,
+            energy_fj: 50.0,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.conversions, 128);
+        assert_eq!(s.adc_comparisons, 640);
+        assert_eq!(s.adc_cycles, 640);
+        assert!((s.adc_energy_fj - 200.0).abs() < 1e-9);
+        assert!((s.comparisons_per_conversion - 5.0).abs() < 1e-9);
+        assert!((s.energy_per_req_fj - 100.0).abs() < 1e-9);
+        let line = format!("{s}");
+        assert!(line.contains("conv=128"), "{line}");
     }
 }

@@ -15,9 +15,15 @@
 //! - [`router`] — per-worker queues with round-robin / least-loaded
 //!   dispatch.
 //! - [`engine`] — the `InferenceEngine` trait + digital (PJRT) and
-//!   analog (CiM simulator) implementations.
-//! - [`metrics`] — latency/throughput accounting.
-//! - [`server`] — thread-per-worker serving loop tying it together.
+//!   analog (CiM simulator) implementations. The analog engine can
+//!   serve through a scheduled [`crate::cim::pool::CimArrayPool`]
+//!   (`AnalogEngine::with_pool`): crossbar MAVs digitized by neighbour
+//!   arrays, with per-conversion energy/cycles/comparisons merged back
+//!   from worker shards.
+//! - [`metrics`] — latency/throughput accounting plus the pool's
+//!   per-request digitization energy in every `MetricsSnapshot`.
+//! - [`server`] — thread-per-worker serving loop tying it together;
+//!   workers record per-batch conversion deltas into the metrics.
 
 pub mod backpressure;
 pub mod batcher;

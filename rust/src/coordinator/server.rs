@@ -181,6 +181,8 @@ fn worker_loop(
     admission: Arc<AdmissionControl>,
     depth: Arc<std::sync::atomic::AtomicUsize>,
 ) {
+    // Engine conversion counters are cumulative; record per-batch deltas.
+    let mut last_conv = engine.conversion_stats();
     while let Ok(batch) = rx.recv() {
         depth.fetch_sub(1, Ordering::AcqRel);
         let images: Vec<Vec<f32>> = batch.requests.iter().map(|r| r.image.clone()).collect();
@@ -200,6 +202,9 @@ fn worker_loop(
                 }
             }
         }
+        let now = engine.conversion_stats();
+        metrics.record_conversions(&now.minus(&last_conv));
+        last_conv = now;
     }
 }
 

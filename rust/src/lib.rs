@@ -15,7 +15,9 @@
 //!   chip is modelled here as explicit charge arithmetic.
 //! - [`cim`] — the paper's ADC/DAC-free compute-in-SRAM crossbar: the
 //!   4-step NMOS crossbar operation, bitplane-wise multi-bit processing,
-//!   1-bit product-sum quantization and the early-termination engine.
+//!   1-bit product-sum quantization, the early-termination engine, and
+//!   the collaborative digitization pool (`cim::pool`) that schedules N
+//!   arrays to take turns computing MAVs and digitizing each other's.
 //! - [`adc`] — digitization substrate: conventional SAR and Flash ADC
 //!   baselines, the paper's memory-immersed collaborative ADC (SAR, Flash
 //!   and hybrid modes), the asymmetric MAV-statistics-aware search, and

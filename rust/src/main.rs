@@ -8,7 +8,7 @@
 
 use adcim::adc::{Adc, ImmersedAdc, ImmersedMode};
 use adcim::analog::NoiseModel;
-use adcim::cim::CrossbarConfig;
+use adcim::cim::{CrossbarConfig, PoolSpec};
 use adcim::config::{ChipConfig, ServerConfig, TomlLite};
 #[cfg(feature = "xla")]
 use adcim::coordinator::DigitalEngine;
@@ -23,7 +23,7 @@ use anyhow::Result;
 
 const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
-    "bits", "mode", "artifacts", "policy", "threads",
+    "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
 ];
 
 fn main() -> Result<()> {
@@ -38,6 +38,9 @@ fn main() -> Result<()> {
                 "usage: adcim <serve|report|adc|info> [--config file.toml]\n\
                  \n\
                  serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
+                 \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
+                 \x20       (--pool N serves the analog BWHT stages through an N-array\n\
+                 \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path)\n\
                  report --all | --id <table1|fig1c|fig1d|fig3|fig5|fig6|fig7|fig8|fig10|fig12|fig13> [--out-dir reports]\n\
                  adc    --bits B --mode sar|flash|hybrid [--vdd V]\n\
                  info"
@@ -153,6 +156,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(t) = args.get_parse::<usize>("threads") {
         server_cfg.engine_threads = t;
     }
+    if let Some(p) = args.get_parse::<usize>("pool") {
+        server_cfg.pool_arrays = p;
+    }
+    if let Some(m) = args.get("adc-mode") {
+        server_cfg.adc_mode = m.to_string();
+    }
+    if let Some(b) = args.get_parse::<u8>("adc-bits") {
+        server_cfg.adc_bits = b;
+    }
+    if args.flag("asym") {
+        server_cfg.asymmetric_adc = true;
+    }
     let n_requests: usize = args.get_parse_or("requests", 256);
     let policy = match args.get_or("policy", "rr") {
         "ll" => RoutingPolicy::LeastLoaded,
@@ -165,14 +180,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = Artifacts::open(&dir)?;
 
     // Build one engine per worker.
+    let pool = PoolSpec::parse(
+        server_cfg.pool_arrays,
+        &server_cfg.adc_mode,
+        server_cfg.adc_bits,
+        server_cfg.asymmetric_adc,
+    )
+    .map_err(|e| anyhow::anyhow!("invalid pool configuration: {e}"))?;
+    if pool.is_some() && server_cfg.engine != "analog" {
+        anyhow::bail!(
+            "--pool requires --engine analog (the digital PJRT path has no CiM array pool)"
+        );
+    }
     let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
     match server_cfg.engine.as_str() {
         "analog" => {
             let cfg = CrossbarConfig { op: chip.operating_point(), ..Default::default() };
+            if let Some(spec) = &pool {
+                println!(
+                    "collaborative digitization pool: {} arrays, {:?} @ {} bits{}",
+                    spec.n_arrays,
+                    spec.mode,
+                    spec.adc_bits,
+                    if spec.asymmetric { ", asymmetric tree" } else { "" }
+                );
+            }
             for w in 0..server_cfg.workers {
                 engines.push(Box::new(
                     AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?
-                        .with_threads(server_cfg.engine_threads),
+                        .with_threads(server_cfg.engine_threads)
+                        .with_pool(pool)?,
                 ));
             }
         }

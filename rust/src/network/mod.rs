@@ -12,6 +12,12 @@
 //!   throughput/area accounting that justifies the paper's system-level
 //!   claim: interleaving halves per-array throughput but the reclaimed
 //!   ADC area buys more than 2× the arrays.
+//!
+//! These are the *static* descriptions; the serving path consumes them
+//! in [`crate::cim::pool::CimArrayPool`], which walks an
+//! `InterleaveSchedule` phase by phase, dispatches MAV planes to the
+//! compute-role arrays and re-enforces both invariants at run time on
+//! the live data path.
 
 pub mod schedule;
 pub mod topology;

@@ -18,7 +18,10 @@
 //!   at a given operating point (noise, settling, early termination) —
 //!   feeds the accuracy axes of Figs 7 and 13(c,d).
 
-use crate::cim::{BitplaneEngine, Crossbar, CrossbarConfig, EarlyTermination};
+use crate::cim::{
+    BitplaneEngine, CimArrayPool, ConversionStats, Crossbar, CrossbarConfig, EarlyTermination,
+    PoolSpec,
+};
 use crate::util::Rng;
 use crate::wht::{fwht_inplace, Bwht, BwhtLayout};
 
@@ -34,12 +37,17 @@ pub enum BwhtExec {
     /// Bitplane path with 1-bit product-sum quantization (bit-exact
     /// digital model of the crossbar).
     QuantDigital { input_bits: u8 },
-    /// Analog crossbar simulation (inference only).
+    /// Analog crossbar simulation (inference only). With `pool` set,
+    /// each block's planes run through a scheduled [`CimArrayPool`]: the
+    /// multi-bit MAVs are digitized by neighbour arrays (paper §IV)
+    /// instead of 1-bit row comparators, and per-conversion
+    /// energy/cycles/comparisons accumulate on the layer.
     Analog {
         input_bits: u8,
         config: CrossbarConfig,
         early_term: Option<EarlyTermination>,
         seed: u64,
+        pool: Option<PoolSpec>,
     },
 }
 
@@ -74,6 +82,9 @@ pub struct BwhtLayer {
     analog_stream: Option<u64>,
     pub term_processed: u64,
     pub term_skipped: u64,
+    /// Collaborative-digitization accounting accumulated across analog
+    /// forwards (all zeros unless the exec mode carries a pool).
+    pub conv_stats: ConversionStats,
     // inference scratch (gather buffer, padded frequency buffer,
     // quantized levels, per-crossbar block) — reused across forwards
     scratch_x: Vec<f32>,
@@ -109,6 +120,7 @@ impl BwhtLayer {
             analog_stream: None,
             term_processed: 0,
             term_skipped: 0,
+            conv_stats: ConversionStats::default(),
             scratch_x: Vec::new(),
             scratch_z: Vec::new(),
             scratch_levels: Vec::new(),
@@ -163,18 +175,21 @@ impl BwhtLayer {
     /// (Hadamard matrix + comparator sampling) happens once and the
     /// clones copy it instead of re-fabricating per shard.
     pub fn prepare_analog(&mut self) {
-        let BwhtExec::Analog { input_bits, config, early_term, seed } = self.exec else {
+        let BwhtExec::Analog { input_bits, config, early_term, seed, pool } = self.exec else {
             return;
         };
         if self.analog.is_none() {
             let mut frng = Rng::new(seed);
-            let xb = Crossbar::new(
-                crate::cim::SignMatrix::hadamard(self.layout.block_size),
-                config,
-                &mut frng,
-            );
+            let matrix = crate::cim::SignMatrix::hadamard(self.layout.block_size);
+            let xb = Crossbar::new(matrix.clone(), config, &mut frng);
             let mut eng = BitplaneEngine::new(xb, input_bits);
             eng.early_term = early_term;
+            if let Some(spec) = pool {
+                // The pool's arrays share the block's programmed matrix;
+                // fabrication (comparators, converter DACs) continues the
+                // same deterministic stream.
+                eng.set_pool(Some(CimArrayPool::new(&matrix, config, spec, &mut frng)));
+            }
             self.analog = Some(eng);
             self.analog_rng = Some(Rng::new(seed ^ 0xa5a5_5a5a));
         }
@@ -284,7 +299,11 @@ impl BwhtLayer {
                 let mut block = std::mem::take(&mut self.scratch_block);
                 let eng = self.analog.as_mut().expect("prepare_analog builds the engine");
                 let rng = rng_scratch.as_mut().expect("analog rng set with engine");
-                let scale = self.gamma * step;
+                // 1-bit path: gamma absorbs the sign-reassembly magnitude
+                // loss. Pooled path: values are near-exact signed sums
+                // (≈ H·levels), so the exact reconstruction scale `step`
+                // applies and gamma is bypassed.
+                let scale = if eng.has_pool() { step } else { self.gamma * step };
                 for b in 0..self.layout.blocks {
                     block.clear();
                     block.extend((0..bs).map(|i| {
@@ -300,6 +319,7 @@ impl BwhtLayer {
                     let out = eng.transform(&block, rng);
                     self.term_processed += out.term.processed;
                     self.term_skipped += out.term.skipped;
+                    self.conv_stats.merge(&out.conv);
                     for i in 0..bs {
                         z[b * bs + i] = out.values[i] * scale;
                     }
@@ -550,6 +570,7 @@ mod tests {
             config: CrossbarConfig::ideal(),
             early_term: Some(EarlyTermination::exact(8.0)),
             seed: 42,
+            pool: None,
         });
         let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());
         let _ = l.forward(&x);
@@ -569,6 +590,7 @@ mod tests {
                 config: CrossbarConfig::default(),
                 early_term: None,
                 seed: 7,
+                pool: None,
             });
             l
         };
@@ -592,6 +614,7 @@ mod tests {
             config: CrossbarConfig::default(),
             early_term: None,
             seed: 11,
+            pool: None,
         });
         let x = Tensor::vec1(&(0..16).map(|i| (i % 3) as f32).collect::<Vec<_>>());
         l.set_analog_stream(5);
@@ -599,6 +622,41 @@ mod tests {
         l.set_analog_stream(5);
         let y2 = l.forward_inference(&x).data().to_vec();
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn pooled_analog_mode_counts_conversions_and_tracks_float() {
+        use crate::adc::ImmersedMode;
+        let (mut l, _) = layer(16, 16, 12);
+        l.t.iter_mut().for_each(|t| *t = 0.0);
+        l.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::ideal(),
+            early_term: None,
+            seed: 21,
+            pool: Some(PoolSpec {
+                n_arrays: 4,
+                adc_bits: 4,
+                mode: ImmersedMode::Sar,
+                asymmetric: false,
+            }),
+        });
+        let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());
+        let y = l.forward(&x);
+        // 16 rows x 4 planes digitized exactly once each.
+        assert_eq!(l.conv_stats.conversions, 16 * 4);
+        assert!(l.conv_stats.energy_fj > 0.0);
+        assert_eq!(l.conv_stats.cycles, 4 * l.conv_stats.conversions); // SAR: bits cycles/conv
+        // Pooled multi-bit reconstruction tracks the float transform far
+        // more closely than the 1-bit path's gamma-scaled signs: with
+        // zero thresholds and an ideal fabric it is the quantizer-exact
+        // round trip of the level-quantized input.
+        let (mut lf, _) = layer(16, 16, 12);
+        lf.t.iter_mut().for_each(|t| *t = 0.0);
+        let yf = lf.forward(&x);
+        for (a, b) in y.data().iter().zip(yf.data()) {
+            assert!((a - b).abs() < 0.3, "pooled {a} vs float {b}");
+        }
     }
 
     #[test]

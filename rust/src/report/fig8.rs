@@ -25,7 +25,7 @@ pub fn generate() -> String {
         let mut code = 0u32;
         for (cycle, bit) in (0..bits).rev().enumerate() {
             let trial = code | (1 << bit);
-            let k_units = trial as usize * adc.units_per_code_pub();
+            let k_units = trial as usize * adc.units_per_code();
             let v_ref = adc.ref_level(0, k_units, &mut rng);
             let take = v_mav > v_ref;
             if take {

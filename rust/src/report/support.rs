@@ -57,7 +57,7 @@ pub fn analog_accuracy(
     seed: u64,
 ) -> f64 {
     model.for_each_bwht(|b| {
-        b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed });
+        b.set_exec(BwhtExec::Analog { input_bits, config, early_term, seed, pool: None });
     });
     let acc = evaluate(model, te);
     model.for_each_bwht(|b| b.set_exec(BwhtExec::Float));

@@ -1,0 +1,133 @@
+//! `Adc`-trait conformance across every converter style, through the
+//! [`AnyAdc`] unifier the digitization pool constructs from: noise-free
+//! instances of Sar / Flash / Immersed (Sar, Flash, Hybrid) /
+//! Asymmetric must all reproduce the `ideal_code` floor-quantizer
+//! oracle at every bit width, and report the mode's documented
+//! cycle/comparison costs.
+
+use adcim::adc::{
+    binomial_mav_pmf, Adc, AnyAdc, AsymmetricAdc, AsymmetricSearch, FlashAdc, ImmersedAdc,
+    ImmersedMode, SarAdc,
+};
+use adcim::util::{prop, Rng};
+
+/// Every converter style at `bits`, fabricated noise-free.
+fn ideal_bank(bits: u8) -> Vec<AnyAdc> {
+    let flash_bits = if bits > 2 { 2 } else { 1 };
+    let pmf = binomial_mav_pmf(32, 0.5, bits);
+    vec![
+        AnyAdc::Sar(SarAdc::ideal(bits, 1.0)),
+        AnyAdc::Flash(FlashAdc::ideal(bits, 1.0)),
+        AnyAdc::Immersed(ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar)),
+        AnyAdc::Immersed(ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Flash)),
+        AnyAdc::Immersed(ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Hybrid { flash_bits })),
+        AnyAdc::Asymmetric(AsymmetricAdc::new(
+            ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar),
+            AsymmetricSearch::build(bits, &pmf),
+        )),
+    ]
+}
+
+#[test]
+fn prop_noise_free_convert_matches_ideal_code_oracle() {
+    prop::check("AnyAdc ideal convert == ideal_code", 96, |rng| {
+        let bits = (2 + rng.index(5)) as u8; // 2..=6
+        for adc in ideal_bank(bits).iter_mut() {
+            let v = rng.uniform();
+            let got = adc.convert(v, rng).code;
+            let want = adc.ideal_code(v);
+            adcim::prop_assert!(
+                got == want,
+                "bits={bits} style={} v={v}: {got} != {want}",
+                adc.style()
+            );
+            adcim::prop_assert!(adc.bits() == bits, "style={} bits", adc.style());
+            adcim::prop_assert!(adc.vdd() == 1.0, "style={} vdd", adc.style());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conversion_costs_match_mode_contracts() {
+    let mut rng = Rng::new(1);
+    let bits = 5u8;
+    for adc in ideal_bank(bits).iter_mut() {
+        let c = adc.convert(0.41, &mut rng);
+        match adc.style() {
+            "dedicated-sar" | "immersed-sar" => {
+                assert_eq!(c.comparisons, bits as u32, "{}", adc.style());
+                assert_eq!(c.cycles, bits as u32, "{}", adc.style());
+            }
+            "dedicated-flash" | "immersed-flash" => {
+                assert_eq!(c.comparisons, (1u32 << bits) - 1, "{}", adc.style());
+                assert_eq!(c.cycles, 1, "{}", adc.style());
+            }
+            "immersed-hybrid" => {
+                // 2 bits flash (3 comparisons, 1 cycle) + 3 bits SAR.
+                assert_eq!(c.comparisons, 3 + 3, "{}", adc.style());
+                assert_eq!(c.cycles, 1 + 3, "{}", adc.style());
+            }
+            "immersed-asymmetric" => {
+                // Tree depth varies by code; never worse than 2^bits − 1
+                // and cycles track comparisons one-to-one.
+                assert!(c.comparisons < (1u32 << bits), "{}", adc.style());
+                assert_eq!(c.cycles, c.comparisons, "{}", adc.style());
+            }
+            other => panic!("unknown style {other}"),
+        }
+        assert!(c.energy_fj > 0.0, "{} spent no energy", adc.style());
+    }
+}
+
+#[test]
+fn asymmetric_averages_fewer_comparisons_than_symmetric_on_mavs() {
+    // The Fig 10 claim, measured through the unified trait: identical
+    // codes, fewer expected comparator decisions on binomial MAVs.
+    let bits = 5u8;
+    let cols = 32usize;
+    let pmf = binomial_mav_pmf(cols, 0.5, bits);
+    let mut asym = AnyAdc::Asymmetric(AsymmetricAdc::new(
+        ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar),
+        AsymmetricSearch::build(bits, &pmf),
+    ));
+    let mut sym = AnyAdc::Immersed(ImmersedAdc::ideal(bits, 1.0, ImmersedMode::Sar));
+    let mut rng = Rng::new(2);
+    let mut asym_cmp = 0u64;
+    let mut sym_cmp = 0u64;
+    let trials = 2000;
+    for _ in 0..trials {
+        let plus = (0..cols).filter(|_| rng.bernoulli(0.25)).count();
+        let v = (plus as f64 + 0.5) / cols as f64;
+        let ca = asym.convert(v, &mut rng);
+        let cs = sym.convert(v, &mut rng);
+        assert_eq!(ca.code, cs.code, "codes diverged at v={v}");
+        asym_cmp += ca.comparisons as u64;
+        sym_cmp += cs.comparisons as u64;
+    }
+    assert_eq!(sym_cmp, trials * bits as u64);
+    assert!(
+        (asym_cmp as f64) < 0.9 * sym_cmp as f64,
+        "asymmetric {asym_cmp} not clearly below symmetric {sym_cmp}"
+    );
+}
+
+#[test]
+#[should_panic(expected = "resolution mismatch")]
+fn asymmetric_adapter_rejects_mismatched_tree() {
+    let pmf = binomial_mav_pmf(32, 0.5, 4);
+    AsymmetricAdc::new(
+        ImmersedAdc::ideal(5, 1.0, ImmersedMode::Sar),
+        AsymmetricSearch::build(4, &pmf),
+    );
+}
+
+#[test]
+#[should_panic(expected = "SAR-coupled")]
+fn asymmetric_adapter_rejects_flash_coupling() {
+    let pmf = binomial_mav_pmf(32, 0.5, 4);
+    AsymmetricAdc::new(
+        ImmersedAdc::ideal(4, 1.0, ImmersedMode::Flash),
+        AsymmetricSearch::build(4, &pmf),
+    );
+}

@@ -81,6 +81,7 @@ fn analog_engine(threads: usize, early_term: Option<EarlyTermination>) -> Analog
             config: CrossbarConfig::default(),
             early_term,
             seed: 42,
+            pool: None,
         })
     });
     AnalogEngine::from_model(model, 36).with_threads(threads)

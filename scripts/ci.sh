@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# One-entry-point CI gate for this repo (future PRs: run this first).
+#
+#   1. tier-1 gate:  cargo build --release && cargo test -q
+#      (the test suite includes the bench-JSON validator smoke test —
+#      tests/batched_equivalence.rs::committed_bench_trajectory_is_well_formed_json
+#      runs util::bench::json_is_well_formed over BENCH_hotpath.json)
+#   2. a toolchain-independent structural re-check of BENCH_hotpath.json
+#      (python3 json.tool), so a corrupted perf trajectory is caught even
+#      on machines without Rust.
+#
+# Usage: scripts/ci.sh [extra cargo test args...]
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+
+if command -v cargo >/dev/null 2>&1; then
+  cd "$ROOT/rust"
+  cargo build --release
+  cargo test -q "$@"
+  cd "$ROOT"
+else
+  echo "ci.sh: WARNING - no Rust toolchain on PATH; tier-1 gate skipped" >&2
+fi
+
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m json.tool "$ROOT/BENCH_hotpath.json" >/dev/null
+  echo "ci.sh: BENCH_hotpath.json is well-formed JSON"
+else
+  echo "ci.sh: note - python3 unavailable, skipped standalone JSON check" >&2
+fi
+
+echo "ci.sh: done"
