@@ -204,6 +204,7 @@ fn main() {
             adc_bits,
             mode,
             asymmetric: label.ends_with("asym"),
+            threads: 1,
         };
         let mut fab = Rng::new(31);
         let matrix = SignMatrix::walsh(32);
@@ -229,6 +230,73 @@ fn main() {
         let xb = xq.clone();
         set.run(&format!("pool 4x32 {label} transform 4-bit"), move || {
             black_box(eng.transform(&xb, &mut r));
+        });
+    }
+
+    // Batched plane fan-out: an 8-array SAR pool has 4 independent
+    // coupling groups; process_planes queues 8 planes (two rotations)
+    // onto per-group lanes, run inline vs on scoped worker threads
+    // (one scope per call). Same outputs by the per-plane stream
+    // contract — this case pair measures the fan-out win itself.
+    for threads in [1usize, 4] {
+        let spec = PoolSpec {
+            n_arrays: 8,
+            adc_bits: 5,
+            mode: ImmersedMode::Sar,
+            asymmetric: false,
+            threads,
+        };
+        let matrix = SignMatrix::walsh(32);
+        let mut pool =
+            CimArrayPool::new(&matrix, CrossbarConfig::default(), spec, &mut Rng::new(41));
+        let planes: Vec<BitVec> = (0..8)
+            .map(|s| {
+                BitVec::from_bits(&(0..32).map(|i| (i * 7 + s * 13) % 3 == 0).collect::<Vec<_>>())
+            })
+            .collect();
+        let streams: Vec<u64> = (0..8).collect();
+        let mut out = vec![0.0f64; 8 * 32];
+        set.run(&format!("pool 8x32 sar process_planes x8 t={threads}"), move || {
+            pool.begin_transform();
+            let refs: Vec<&BitVec> = planes.iter().collect();
+            pool.process_planes(&refs, &streams, 0x5eed, None, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // Per-row conversion gating: the same pooled transform with a wide
+    // exact-ET dead band converts a fraction of the rows — the ET
+    // savings the ADC energy column sees. The probe line reports the
+    // gated/converted split.
+    {
+        let spec = PoolSpec {
+            n_arrays: 4,
+            adc_bits: 5,
+            mode: ImmersedMode::Sar,
+            asymmetric: false,
+            threads: 1,
+        };
+        let matrix = SignMatrix::walsh(32);
+        let mk = || {
+            let mut fab = Rng::new(31);
+            let mut eng = BitplaneEngine::new(
+                Crossbar::new(matrix.clone(), CrossbarConfig::default(), &mut fab),
+                4,
+            )
+            .with_pool(CimArrayPool::new(&matrix, CrossbarConfig::default(), spec, &mut fab));
+            eng.early_term = Some(adcim::cim::EarlyTermination::exact(8.0));
+            eng
+        };
+        let xq: Vec<u32> = (0..32).map(|i| (i as u32 * 3) % 16).collect();
+        let probe = mk().transform(&xq, &mut Rng::new(5));
+        println!(
+            "pool 4x32 sar gated-ET: {} conversions + {} gated per transform, {:.1} fJ",
+            probe.conv.conversions, probe.conv.gated, probe.conv.energy_fj
+        );
+        let mut eng = mk();
+        let mut r = Rng::new(6);
+        set.run("pool 4x32 sar gated-ET transform 4-bit", move || {
+            black_box(eng.transform(&xq, &mut r));
         });
     }
 

@@ -15,8 +15,8 @@ fn main() {
     let mut sar = SarAdc::sample(5, 1.0, &noise, &mut rng);
     let mut flash = FlashAdc::sample(5, 1.0, &noise, &mut rng);
     let mut imm = ImmersedAdc::sample(5, 1.0, ImmersedMode::Sar, 32, 20.0, &noise, &mut rng);
-    let mut hyb =
-        ImmersedAdc::sample(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+    let hybrid = ImmersedMode::Hybrid { flash_bits: 2 };
+    let mut hyb = ImmersedAdc::sample(5, 1.0, hybrid, 32, 20.0, &noise, &mut rng);
     let mut v = 0.0f64;
     let mut tick = move || {
         v = (v + 0.137).fract();

@@ -172,7 +172,8 @@ impl AsymmetricSearch {
                 }
                 Node::Cmp { split, lo, hi } => {
                     let k_units = (split as usize + 1) * upc;
-                    let up = adc.compare_at(0, k_units, v_in_eff, &mut energy, &mut comparisons, rng);
+                    let up =
+                        adc.compare_at(0, k_units, v_in_eff, &mut energy, &mut comparisons, rng);
                     at = if up { hi } else { lo };
                 }
             }

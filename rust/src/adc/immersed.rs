@@ -105,7 +105,9 @@ impl ImmersedAdc {
             bits,
             vdd,
             mode,
-            neighbours: (0..n).map(|_| CapDac::sample(units_per_array, c_col_ff, noise, rng)).collect(),
+            neighbours: (0..n)
+                .map(|_| CapDac::sample(units_per_array, c_col_ff, noise, rng))
+                .collect(),
             comparators: (0..n.max(1)).map(|_| Comparator::sample(noise, rng)).collect(),
             noise: *noise,
             common_gain: 1.0,
@@ -116,7 +118,8 @@ impl ImmersedAdc {
     /// Ideal instance with the paper's 16×32 geometry (32 column lines).
     pub fn ideal(bits: u8, vdd: f64, mode: ImmersedMode) -> Self {
         let mut rng = Rng::new(0);
-        ImmersedAdc::sample(bits, vdd, mode, (1usize << bits).max(32), 20.0, &NoiseModel::ideal(), &mut rng)
+        let units = (1usize << bits).max(32);
+        ImmersedAdc::sample(bits, vdd, mode, units, 20.0, &NoiseModel::ideal(), &mut rng)
     }
 
     /// Apply a common gain non-ideality to input *and* references
@@ -235,7 +238,8 @@ impl Adc for ImmersedAdc {
                 let mut seg = 0u32;
                 for i in 0..self.neighbours.len() {
                     let k = (i as u32 + 1) * seg_codes;
-                    if self.compare_at(i, k as usize * upc, v_in, &mut energy, &mut comparisons, rng) {
+                    let k_units = k as usize * upc;
+                    if self.compare_at(i, k_units, v_in, &mut energy, &mut comparisons, rng) {
                         seg += 1;
                     }
                 }
@@ -349,8 +353,8 @@ mod tests {
     fn noisy_conversion_stays_near_ideal() {
         let noise = NoiseModel::default();
         let mut rng = Rng::new(7);
-        let mut adc =
-            ImmersedAdc::sample(5, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+        let hybrid = ImmersedMode::Hybrid { flash_bits: 2 };
+        let mut adc = ImmersedAdc::sample(5, 1.0, hybrid, 32, 20.0, &noise, &mut rng);
         let trials = 400;
         let mut bad = 0;
         for i in 0..trials {

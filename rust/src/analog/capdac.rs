@@ -70,7 +70,13 @@ impl CapDac {
     }
 
     /// Reference voltage for an arbitrary selection mask.
-    pub fn share_mask(&mut self, mask: &[bool], vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> f64 {
+    pub fn share_mask(
+        &mut self,
+        mask: &[bool],
+        vdd: f64,
+        noise: &NoiseModel,
+        rng: &mut Rng,
+    ) -> f64 {
         assert_eq!(mask.len(), self.units.len());
         self.switch_events += 1;
         let selected: f64 = self.units.iter().zip(mask).filter(|(_, &m)| m).map(|(c, _)| c).sum();

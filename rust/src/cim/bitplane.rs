@@ -56,8 +56,143 @@ pub struct PlaneScratch {
     planes: Vec<BitVec>,
     active: Vec<bool>,
     signs: BitVec,
-    /// Decoded per-row signed sums for the pooled multi-bit path.
+    /// Decoded per-row signed sums for the pooled multi-bit path,
+    /// plane-major (`input_bits × rows` once warm).
     mav_values: Vec<f64>,
+}
+
+/// Row-value source for one plane walk — the only thing that differs
+/// between the ADC-free 1-bit path and the pooled multi-bit path. The
+/// shared scaffolding (active mask, [`TermStats`], ET bound tests and
+/// zeroing) lives once in [`walk_planes`].
+trait RowValueSource {
+    /// Divisor normalising the running partial into per-plane units
+    /// before the early-termination bound test: 1.0 for ±1 sign planes
+    /// (division by 1.0 is exact, so the 1-bit path's arithmetic is
+    /// bit-for-bit untouched), `cols` for decoded signed sums (a
+    /// normalized plane value lies in `[−1, 1]`, exactly the 1-bit
+    /// path's per-plane `±1`, so one `EarlyTermination` policy behaves
+    /// comparably on both paths).
+    fn et_divisor(&self) -> f32;
+    /// Process plane `p` so [`RowValueSource::row_value`] can read its
+    /// per-row values. `active` is the live early-termination mask —
+    /// the pooled source forwards it as the conversion-gating mask.
+    fn load_plane(&mut self, p: usize, plane: &BitVec, active: &[bool], rng: &mut Rng);
+    /// Per-row value of the last loaded plane (±1 or a decoded sum).
+    fn row_value(&self, r: usize) -> f32;
+}
+
+/// The single plane-walk loop shared by the 1-bit and pooled paths:
+/// MSB → LSB so the early-termination bound (remaining planes can add
+/// at most `2^p − 1`) tightens fastest, skipping fully-terminated
+/// planes, accumulating weighted row values and applying the ET
+/// dead-band zeroing.
+fn walk_planes<S: RowValueSource>(
+    src: &mut S,
+    planes: &[BitVec],
+    nbits: usize,
+    rows: usize,
+    early_term: Option<EarlyTermination>,
+    rng: &mut Rng,
+    active: &mut Vec<bool>,
+) -> (Vec<f32>, Vec<Vec<bool>>, TermStats) {
+    let mut acc = vec![0.0f32; rows];
+    let mut plane_signs = vec![vec![false; rows]; nbits];
+    active.clear();
+    active.resize(rows, true);
+    let mut term = TermStats::new(rows, nbits);
+    let divisor = src.et_divisor();
+
+    for p in (0..nbits).rev() {
+        if active.iter().all(|a| !a) {
+            term.record_skipped_plane(p, active);
+            continue;
+        }
+        src.load_plane(p, &planes[p], active, rng);
+        let weight = (1u32 << p) as f32;
+        for r in 0..rows {
+            if !active[r] {
+                term.record_skipped_row(r);
+                continue;
+            }
+            let v = src.row_value(r);
+            acc[r] += weight * v;
+            plane_signs[p][r] = v > 0.0;
+            term.record_processed(r);
+            if let Some(et) = &early_term {
+                // Remaining planes 0..p contribute at most 2^p − 1 (in
+                // the source's normalized per-plane units).
+                let remaining = (1u32 << p) as f32 - 1.0;
+                if et.should_terminate(acc[r] / divisor, remaining) {
+                    active[r] = false;
+                    acc[r] = 0.0; // provably inside the dead band ⇒ zero
+                    term.record_terminated(r, p);
+                }
+            }
+        }
+    }
+    (acc, plane_signs, term)
+}
+
+/// 1-bit source: one crossbar op per plane, packed sign outputs.
+struct SignSource<'a> {
+    crossbar: &'a mut Crossbar,
+    signs: &'a mut BitVec,
+}
+
+impl RowValueSource for SignSource<'_> {
+    fn et_divisor(&self) -> f32 {
+        1.0
+    }
+
+    fn load_plane(&mut self, _p: usize, plane: &BitVec, _active: &[bool], rng: &mut Rng) {
+        self.crossbar.process_bitplane_into(plane, rng, self.signs);
+    }
+
+    fn row_value(&self, r: usize) -> f32 {
+        if self.signs.get(r) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// Pooled source: planes run through the scheduled [`CimArrayPool`].
+/// Without early termination every plane was already fanned through
+/// [`CimArrayPool::process_planes`] in one batched call (`buf` is
+/// prefilled); with it, each plane is dispatched on demand under the
+/// live mask so pruned rows gate their conversions.
+struct PooledSource<'a> {
+    pool: &'a mut CimArrayPool,
+    /// Plane-major decoded values, `nbits × rows`.
+    buf: &'a mut [f64],
+    rows: usize,
+    nbits: usize,
+    plane_seed: u64,
+    /// True when `buf` is already filled (no-ET batched fan-out).
+    prefilled: bool,
+    divisor: f32,
+    /// Offset of the current plane's values in `buf`.
+    cur: usize,
+}
+
+impl RowValueSource for PooledSource<'_> {
+    fn et_divisor(&self) -> f32 {
+        self.divisor
+    }
+
+    fn load_plane(&mut self, p: usize, plane: &BitVec, active: &[bool], _rng: &mut Rng) {
+        self.cur = (self.nbits - 1 - p) * self.rows;
+        if !self.prefilled {
+            let chunk = &mut self.buf[self.cur..self.cur + self.rows];
+            self.pool.process_plane_masked(plane, p as u64, self.plane_seed, Some(active), chunk);
+        }
+    }
+
+    fn row_value(&self, r: usize) -> f32 {
+        self.buf[self.cur + r] as f32
+    }
 }
 
 /// Result of one bitplane-wise transform.
@@ -97,7 +232,7 @@ pub struct BitplaneEngine {
 
 impl BitplaneEngine {
     pub fn new(crossbar: Crossbar, input_bits: u8) -> Self {
-        assert!(input_bits >= 1 && input_bits <= 16);
+        assert!((1..=16).contains(&input_bits));
         BitplaneEngine {
             crossbar,
             input_bits,
@@ -176,46 +311,15 @@ impl BitplaneEngine {
         decompose_bitplanes_into(x, self.input_bits, &mut s.planes);
         let rows = self.crossbar.rows();
         let nbits = self.input_bits as usize;
-
-        let mut acc = vec![0.0f32; rows];
-        let mut plane_signs = vec![vec![false; rows]; nbits];
-        s.active.clear();
-        s.active.resize(rows, true);
-        let mut term = TermStats::new(rows, nbits);
-
-        // MSB → LSB.
-        for p in (0..nbits).rev() {
-            if s.active.iter().all(|a| !a) {
-                term.record_skipped_plane(p, &s.active);
-                continue;
-            }
-            self.crossbar.process_bitplane_into(&s.planes[p], rng, &mut s.signs);
-            let weight = (1u32 << p) as f32;
-            for r in 0..rows {
-                if !s.active[r] {
-                    term.record_skipped_row(r);
-                    continue;
-                }
-                let sign = s.signs.get(r);
-                let sv = if sign { 1.0 } else { -1.0 };
-                acc[r] += weight * sv;
-                plane_signs[p][r] = sign;
-                term.record_processed(r);
-                if let Some(et) = &self.early_term {
-                    // Remaining planes 0..p contribute at most 2^p − 1.
-                    let remaining = (1u32 << p) as f32 - 1.0;
-                    if et.should_terminate(acc[r], remaining) {
-                        s.active[r] = false;
-                        acc[r] = 0.0; // provably inside the dead band ⇒ zero
-                        term.record_terminated(r, p);
-                    }
-                }
-            }
-        }
-        BitplaneOutput { values: acc, plane_signs, term, conv: ConversionStats::default() }
+        let early_term = self.early_term;
+        let (values, plane_signs, term) = {
+            let mut src = SignSource { crossbar: &mut self.crossbar, signs: &mut s.signs };
+            walk_planes(&mut src, &s.planes, nbits, rows, early_term, rng, &mut s.active)
+        };
+        BitplaneOutput { values, plane_signs, term, conv: ConversionStats::default() }
     }
 
-    /// The pooled (collaborative digitization) plane loop: steps 1–3 on
+    /// The pooled (collaborative digitization) plane walk: steps 1–3 on
     /// a scheduled compute-role array, multi-bit conversion through the
     /// group's memory-immersed converter, and reassembly of the decoded
     /// signed sums `2·plus − |x|` with their plane weights — so `values`
@@ -223,15 +327,20 @@ impl BitplaneEngine {
     /// sign reconstruction (and is exactly equal to it in the aligned
     /// ideal case; see `tests/pool_serving.rs`).
     ///
-    /// Early termination still prunes reassembly MSB→LSB. Thresholds
-    /// keep the 1-bit path's units: the pooled partial is normalized by
-    /// `cols` before the bound test (a normalized plane value lies in
-    /// `[−1, 1]`, exactly the 1-bit path's per-plane `±1`), so one
-    /// `EarlyTermination` policy behaves comparably on both paths
-    /// instead of silently never firing against the `×cols`-larger
-    /// pooled sums. Active planes are digitized whole-array (the
-    /// hardware converts the full MAV vector); only fully-terminated
-    /// planes skip compute+conversion.
+    /// Each plane draws its analog noise from the deterministic stream
+    /// `Rng::for_stream(plane_seed, p)` (one `plane_seed` draw ties the
+    /// transform to the caller's generator), so planes are independent
+    /// dispatch units:
+    ///
+    /// - **No early termination**: all planes fan through one
+    ///   [`CimArrayPool::process_planes`] call — independent coupling
+    ///   groups of each interleave phase run on scoped worker threads
+    ///   (`PoolSpec::threads`), results identical at any thread count.
+    /// - **Early termination**: planes dispatch one at a time under the
+    ///   live active mask, and rows the walk has pruned **gate** their
+    ///   conversions — the converter never fires, `ConversionStats`
+    ///   energy/cycles shrink with ET, and the gated count rides up to
+    ///   `MetricsSnapshot` (per-row conversion gating).
     fn transform_pooled(
         &mut self,
         x: &[u32],
@@ -242,51 +351,37 @@ impl BitplaneEngine {
         let pool = self.pool.as_mut().expect("pooled path without a pool");
         decompose_bitplanes_into(x, self.input_bits, &mut s.planes);
         let rows = pool.rows();
-        let cols = pool.cols() as f32;
+        let divisor = pool.cols() as f32;
         let nbits = self.input_bits as usize;
-
-        let mut acc = vec![0.0f32; rows];
-        let mut plane_signs = vec![vec![false; rows]; nbits];
-        s.active.clear();
-        s.active.resize(rows, true);
-        s.mav_values.clear();
-        s.mav_values.resize(rows, 0.0);
-        let mut term = TermStats::new(rows, nbits);
         let base = pool.stats();
         pool.begin_transform();
+        let plane_seed = rng.next_u64();
+        s.mav_values.clear();
+        s.mav_values.resize(nbits * rows, 0.0);
 
-        // MSB → LSB, one scheduled pool phase per plane.
-        for p in (0..nbits).rev() {
-            if s.active.iter().all(|a| !a) {
-                term.record_skipped_plane(p, &s.active);
-                continue;
-            }
-            pool.process_plane(&s.planes[p], rng, &mut s.mav_values);
-            let weight = (1u32 << p) as f32;
-            for r in 0..rows {
-                if !s.active[r] {
-                    term.record_skipped_row(r);
-                    continue;
-                }
-                let v = s.mav_values[r] as f32;
-                acc[r] += weight * v;
-                plane_signs[p][r] = v > 0.0;
-                term.record_processed(r);
-                if let Some(et) = &early_term {
-                    // Normalized units (see above): each remaining plane
-                    // contributes at most 1 (|2·plus − |x||/cols ≤ 1),
-                    // so the bound matches the 1-bit path's `2^p − 1`.
-                    let remaining = (1u32 << p) as f32 - 1.0;
-                    if et.should_terminate(acc[r] / cols, remaining) {
-                        s.active[r] = false;
-                        acc[r] = 0.0; // provably inside the dead band ⇒ zero
-                        term.record_terminated(r, p);
-                    }
-                }
-            }
+        let prefilled = early_term.is_none();
+        if prefilled {
+            // No mask can change mid-walk: fan every plane (MSB → LSB)
+            // through the pool in one batched call.
+            let planes: Vec<&BitVec> = s.planes[..nbits].iter().rev().collect();
+            let streams: Vec<u64> = (0..nbits as u64).rev().collect();
+            pool.process_planes(&planes, &streams, plane_seed, None, &mut s.mav_values);
         }
-        let conv = pool.stats().minus(&base);
-        BitplaneOutput { values: acc, plane_signs, term, conv }
+        let (values, plane_signs, term) = {
+            let mut src = PooledSource {
+                pool,
+                buf: &mut s.mav_values,
+                rows,
+                nbits,
+                plane_seed,
+                prefilled,
+                divisor,
+                cur: 0,
+            };
+            walk_planes(&mut src, &s.planes, nbits, rows, early_term, rng, &mut s.active)
+        };
+        let conv = self.pool.as_ref().expect("pool unchanged").stats().minus(&base);
+        BitplaneOutput { values, plane_signs, term, conv }
     }
 
     /// Transform a batch of unsigned vectors, reusing the engine's
@@ -458,7 +553,9 @@ mod tests {
     #[test]
     fn signed_transform_matches_pos_neg_split_oracle() {
         let (mut eng, mut rng) = engine(16, 4, 5);
-        let x: Vec<i32> = (0..16).map(|i| if i % 3 == 0 { -(i as i32 % 8) } else { i as i32 % 8 }).collect();
+        let x: Vec<i32> = (0..16)
+            .map(|i| if i % 3 == 0 { -(i as i32 % 8) } else { i as i32 % 8 })
+            .collect();
         let out = eng.transform_signed(&x, &mut rng);
         // With an ideal crossbar, signed output == pos-pass − neg-pass.
         let pos: Vec<u32> = x.iter().map(|&v| v.max(0) as u32).collect();
@@ -492,6 +589,39 @@ mod tests {
         assert_eq!(planes[1].count_ones(), 0);
         let fresh = decompose_bitplanes(&[1, 0], 2);
         assert_eq!(planes, fresh);
+    }
+
+    #[test]
+    fn transform_matches_manual_plane_walk() {
+        // Bit-exactness guard for the provider refactor: the 1-bit path
+        // must equal a first-principles re-derivation of the plane walk
+        // (decompose, MSB→LSB crossbar ops, ±1 sign accumulation) on a
+        // *noisy* config — same RNG schedule, same f32 arithmetic.
+        let mut fab = Rng::new(9);
+        let xb = Crossbar::walsh(32, CrossbarConfig::default(), &mut fab);
+        let mut eng = BitplaneEngine::new(xb.clone(), 4);
+        let mut manual_xb = xb;
+        let x: Vec<u32> = (0..32).map(|i| ((i * 5 + 3) % 16) as u32).collect();
+        let seed = 0xd00d;
+        let out = eng.transform(&x, &mut Rng::new(seed));
+
+        let planes = decompose_bitplanes(&x, 4);
+        let mut r = Rng::new(seed);
+        let mut acc = vec![0.0f32; 32];
+        let mut signs = BitVec::zeros(32);
+        let mut plane_signs = vec![vec![false; 32]; 4];
+        for p in (0..4).rev() {
+            manual_xb.process_bitplane_into(&planes[p], &mut r, &mut signs);
+            let w = (1u32 << p) as f32;
+            for row in 0..32 {
+                let sgn = signs.get(row);
+                acc[row] += w * if sgn { 1.0 } else { -1.0 };
+                plane_signs[p][row] = sgn;
+            }
+        }
+        assert_eq!(out.values, acc);
+        assert_eq!(out.plane_signs, plane_signs);
+        assert_eq!(out.conv, ConversionStats::default());
     }
 
     #[test]

@@ -219,8 +219,22 @@ mod tests {
 
     #[test]
     fn merged_stats_sum() {
-        let a = TermStats { processed: 10, skipped: 2, rows_terminated: 1, planes_fully_skipped: 0, rows: 4, planes: 3 };
-        let b = TermStats { processed: 8, skipped: 4, rows_terminated: 2, planes_fully_skipped: 1, rows: 4, planes: 3 };
+        let a = TermStats {
+            processed: 10,
+            skipped: 2,
+            rows_terminated: 1,
+            planes_fully_skipped: 0,
+            rows: 4,
+            planes: 3,
+        };
+        let b = TermStats {
+            processed: 8,
+            skipped: 4,
+            rows_terminated: 2,
+            planes_fully_skipped: 1,
+            rows: 4,
+            planes: 3,
+        };
         let m = a.merged(&b);
         assert_eq!(m.processed, 18);
         assert_eq!(m.skipped, 6);

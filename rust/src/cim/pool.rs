@@ -13,17 +13,30 @@
 //! the digitized planes into near-exact transform outputs (vs the 1-bit
 //! ADC-free default path).
 //!
-//! **Runtime invariants** — enforced here with assertions on the live
-//! data path, not just in `network::schedule::validate`:
+//! Coupling groups are mutually independent — disjoint arrays, disjoint
+//! converters — which is what [`CimArrayPool::process_planes`] exploits:
+//! submitted planes queue onto per-group lanes that fan across scoped
+//! worker threads (one `thread::scope` per call), with per-plane
+//! deterministic noise streams (`Rng::for_stream`) and submission-order
+//! stat merging so results are identical at any thread count (the same
+//! contract as `AnalogEngine::infer_batch` sharding).
 //!
-//! 1. *No array computes and digitizes in the same phase.* Every
-//!    [`CimArrayPool::process_plane`] re-derives the group's roles from
-//!    the schedule and asserts exactly one computer whose partners all
-//!    hold the digitize role.
-//! 2. *Every computed MAV is digitized exactly once.* A per-plane ledger
-//!    ([`CimArrayPool::begin_plane`] / [`CimArrayPool::digitize_row`] /
-//!    [`CimArrayPool::end_plane`]) panics on a double conversion and on
-//!    any row left unconverted when the phase closes.
+//! **Runtime invariants** — enforced on the live data path, not just in
+//! `network::schedule::validate`:
+//!
+//! 1. *No array computes and digitizes in the same phase.* Every phase
+//!    dispatch re-derives the group's roles from the schedule and
+//!    asserts exactly one computer whose partners all hold the digitize
+//!    role ([`CimArrayPool::process_plane`] / `process_planes`).
+//! 2. *Every computed MAV is digitized exactly once — or explicitly
+//!    gated.* The batched plane tasks make this structural (one pass
+//!    that either converts or gates each row), and the public per-plane
+//!    ledger ([`CimArrayPool::begin_plane`] / [`CimArrayPool::digitize_row`] /
+//!    [`CimArrayPool::gate_row`] / [`CimArrayPool::end_plane`]) panics on
+//!    a double conversion and on any row left unaccounted when the phase
+//!    closes. Gated rows are the per-row conversion-gating path: early
+//!    termination already pruned the row, so the converter never fires
+//!    for it and the saved work is counted in [`ConversionStats::gated`].
 //!
 //! Per-conversion energy/cycles/comparisons accumulate in
 //! [`ConversionStats`] and thread up through the engines into
@@ -37,8 +50,9 @@ use super::bitvec::{BitVec, SignMatrix};
 use super::crossbar::{Crossbar, CrossbarConfig};
 
 /// Pool shape: how many arrays, what converter networking, how many
-/// output bits, and whether the Fig 10 asymmetric comparison tree drives
-/// the SAR references. `Copy` so it rides inside `BwhtExec`.
+/// output bits, whether the Fig 10 asymmetric comparison tree drives
+/// the SAR references, and how many worker threads `process_planes`
+/// fans coupling groups across. `Copy` so it rides inside `BwhtExec`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolSpec {
     /// CiM arrays in the pool (the fabricated chip has 4).
@@ -49,6 +63,10 @@ pub struct PoolSpec {
     pub mode: ImmersedMode,
     /// Drive SAR references with the MAV-statistics comparison tree.
     pub asymmetric: bool,
+    /// Worker threads for [`CimArrayPool::process_planes`]: 1 runs the
+    /// fan-out inline (the default), 0 auto-detects, N caps the scoped
+    /// workers per phase. Results are thread-count invariant.
+    pub threads: usize,
 }
 
 impl PoolSpec {
@@ -58,14 +76,16 @@ impl PoolSpec {
     /// run the paper's 5 bits.
     pub fn fig11(mode: ImmersedMode) -> Self {
         let adc_bits = if matches!(mode, ImmersedMode::Flash) { 2 } else { 5 };
-        PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false }
+        PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false, threads: 1 }
     }
 
     /// Parse CLI/config inputs; `Ok(None)` when `n_arrays == 0` (no
     /// pool: the ADC-free 1-bit default path). `adc_bits == 0`
     /// auto-selects per mode (flash 2, otherwise 5). Unknown mode
     /// strings and infeasible (mode, bits, arrays) combinations are
-    /// errors, not silent fallbacks.
+    /// errors, not silent fallbacks. The parsed spec runs sequentially
+    /// (`threads == 1`); callers plumb their thread knob with a struct
+    /// update.
     pub fn parse(
         n_arrays: usize,
         mode: &str,
@@ -90,7 +110,7 @@ impl PoolSpec {
         } else {
             5
         };
-        let spec = PoolSpec { n_arrays, adc_bits, mode, asymmetric };
+        let spec = PoolSpec { n_arrays, adc_bits, mode, asymmetric, threads: 1 };
         spec.validate()?;
         Ok(Some(spec))
     }
@@ -102,6 +122,15 @@ impl PoolSpec {
     pub fn validate(&self) -> Result<(), String> {
         if !(1..=10).contains(&self.adc_bits) {
             return Err(format!("adc_bits {} outside the supported 1..=10", self.adc_bits));
+        }
+        // Upper bound catches nonsense sizes — including negative TOML
+        // values that wrapped through an integer cast — before pool
+        // construction tries to fabricate that many arrays.
+        if self.n_arrays > 4096 {
+            return Err(format!(
+                "n_arrays {} exceeds the supported maximum of 4096 (negative config value?)",
+                self.n_arrays
+            ));
         }
         if let ImmersedMode::Hybrid { flash_bits } = self.mode {
             if flash_bits >= self.adc_bits {
@@ -126,8 +155,9 @@ impl PoolSpec {
 }
 
 /// Accumulated per-conversion accounting: how much digitization work
-/// (and energy) the collaborative fabric spent. Threaded from the pool
-/// through `BitplaneOutput` and `BwhtLayer` into `AnalogEngine` and the
+/// (and energy) the collaborative fabric spent — and how much per-row
+/// conversion gating avoided. Threaded from the pool through
+/// `BitplaneOutput` and `BwhtLayer` into `AnalogEngine` and the
 /// coordinator's `MetricsSnapshot`.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ConversionStats {
@@ -139,6 +169,11 @@ pub struct ConversionStats {
     pub cycles: u64,
     /// Conversion energy (fJ): reference generation + comparators.
     pub energy_fj: f64,
+    /// Row conversions skipped by per-row gating: early termination had
+    /// already deactivated the row, so the converter never fired for it
+    /// (no comparisons, no cycles, no energy — the ET savings the ADC
+    /// energy column sees).
+    pub gated: u64,
 }
 
 impl ConversionStats {
@@ -157,6 +192,7 @@ impl ConversionStats {
         self.comparisons += other.comparisons;
         self.cycles += other.cycles;
         self.energy_fj += other.energy_fj;
+        self.gated += other.gated;
     }
 
     /// Delta of two snapshots of a monotone counter (`self` later).
@@ -166,6 +202,7 @@ impl ConversionStats {
             comparisons: self.comparisons - base.comparisons,
             cycles: self.cycles - base.cycles,
             energy_fj: (self.energy_fj - base.energy_fj).max(0.0),
+            gated: self.gated - base.gated,
         }
     }
 
@@ -179,6 +216,123 @@ impl ConversionStats {
     }
 }
 
+/// Ledger states for the public begin/digitize/end API.
+const ROW_PENDING: u8 = 0;
+const ROW_CONVERTED: u8 = 1;
+const ROW_GATED: u8 = 2;
+
+/// Digitize one MAV through `adc` and decode the code back to a
+/// signed-sum estimate. Shared by the sequential ledger API
+/// ([`CimArrayPool::digitize_row`]) and the batched plane tasks.
+///
+/// The comparator input is offset by half a charge count: the
+/// crossbar's discrete MAV levels otherwise sit exactly on the
+/// converter's ideal transition levels (both are `k/cols` grids when
+/// `2^bits == cols`), where real hardware breaks ties with noise.
+/// Centring each level in its code bin keeps the behavioural model
+/// exact and noise-robust. Decoding inverts the floor quantizer at
+/// the bin's expected charge count, so the aligned ideal case
+/// recovers the exact `plus` count.
+fn decode_mav(
+    per_count: f64,
+    adc: &mut AnyAdc,
+    v_mav: f64,
+    ones: f64,
+    rng: &mut Rng,
+) -> (f64, Conversion) {
+    let n_codes = (1u64 << adc.bits()) as f64;
+    let vdd = adc.vdd();
+    let c = adc.convert(v_mav + 0.5 * per_count, rng);
+    // Charge counts per code step; 1.0 in the aligned ideal case.
+    let bin_counts = vdd / (n_codes * per_count);
+    let plus_hat = (c.code as f64 * bin_counts + 0.5 * (bin_counts - 1.0).max(0.0)).min(ones);
+    (2.0 * plus_hat - ones, c)
+}
+
+/// One scheduled plane on one coupling group, against disjoint borrows
+/// of the group's state — the per-group unit [`CimArrayPool::process_planes`]
+/// fans across scoped threads. The compute-role array runs crossbar
+/// steps 1–3 (raw MAVs) and the group's converter digitizes every
+/// *active* row; rows the `active` mask has pruned are gated (their
+/// slot reads 0.0, never consumed — the walk skips them). Exactly-once
+/// is structural here: the single pass converts or gates each row.
+fn run_plane_task(
+    computer: &mut Crossbar,
+    adc: &mut AnyAdc,
+    mavs: &mut Vec<f64>,
+    plane: &BitVec,
+    active: Option<&[bool]>,
+    rng: &mut Rng,
+    out: &mut [f64],
+) -> ConversionStats {
+    let rows = computer.rows();
+    debug_assert_eq!(out.len(), rows);
+    mavs.resize(rows, 0.0);
+    computer.compute_mav_into(plane, rng, mavs);
+    let ones = plane.count_ones() as f64;
+    let per_count = computer.mav_volts_per_count();
+    let mut stats = ConversionStats::default();
+    for (r, slot) in out.iter_mut().enumerate() {
+        if active.is_some_and(|m| !m[r]) {
+            // Per-row conversion gating (ISSUE 3): the schedule skips
+            // the conversion the hardware would never fire.
+            *slot = 0.0;
+            stats.gated += 1;
+            continue;
+        }
+        let (v, c) = decode_mav(per_count, adc, mavs[r], ones, rng);
+        *slot = v;
+        stats.record(&c);
+    }
+    stats
+}
+
+/// One plane bound for one coupling group.
+struct PlaneJob<'a> {
+    /// Submission index — accounting merges in this order.
+    idx: usize,
+    /// Compute-role array's offset inside the group's array block.
+    computer: usize,
+    plane: &'a BitVec,
+    stream: u64,
+    out: &'a mut [f64],
+}
+
+/// A coupling group's worth of a `process_planes` call: the group's
+/// disjoint pool state (contiguous array block, converter, MAV
+/// scratch) plus its ordered queue of plane jobs. Lanes share no
+/// state, so they are the unit that moves onto scoped worker threads —
+/// one `thread::scope` spans the whole call, not one per rotation.
+struct GroupLane<'a> {
+    group: &'a mut [Crossbar],
+    adc: &'a mut AnyAdc,
+    mavs: &'a mut Vec<f64>,
+    jobs: Vec<PlaneJob<'a>>,
+}
+
+impl GroupLane<'_> {
+    /// Run this lane's jobs in submission order — the only ordering
+    /// that matters, since jobs in different lanes share no state.
+    fn run(self, seed: u64, active: Option<&[bool]>) -> Vec<(usize, ConversionStats)> {
+        let GroupLane { group, adc, mavs, jobs } = self;
+        jobs.into_iter()
+            .map(|job| {
+                let mut rng = Rng::for_stream(seed, job.stream);
+                let stats = run_plane_task(
+                    &mut group[job.computer],
+                    adc,
+                    mavs,
+                    job.plane,
+                    active,
+                    &mut rng,
+                    job.out,
+                );
+                (job.idx, stats)
+            })
+            .collect()
+    }
+}
+
 /// A scheduled pool of collaborating CiM arrays (see module docs).
 #[derive(Debug, Clone)]
 pub struct CimArrayPool {
@@ -186,6 +340,8 @@ pub struct CimArrayPool {
     topology: Topology,
     schedule: InterleaveSchedule,
     /// Complete coupling groups, precomputed (hot path: no re-derivation).
+    /// Group `g` owns the contiguous arrays `g·size .. (g+1)·size` —
+    /// asserted at construction; the batched fan-out splits on it.
     groups: Vec<Vec<usize>>,
     /// One converter per coupling group (the digitize-role partners'
     /// column lines form its capacitive DAC).
@@ -199,10 +355,12 @@ pub struct CimArrayPool {
     stats: ConversionStats,
     mavs_produced: u64,
     mavs_digitized: u64,
-    /// Per-plane exactly-once ledger.
-    converted: Vec<bool>,
+    mavs_gated: u64,
+    /// Per-plane ledger for the public begin/digitize/end API.
+    converted: Vec<u8>,
     plane_open: bool,
-    mav_scratch: Vec<f64>,
+    /// Per-group MAV scratch, reused across planes and transforms.
+    group_scratch: Vec<Vec<f64>>,
 }
 
 impl CimArrayPool {
@@ -228,14 +386,36 @@ impl CimArrayPool {
         schedule.validate(&topology).expect("interleave schedule invalid");
         let groups = topology.groups();
         assert!(!groups.is_empty(), "pool has no complete coupling group");
+        let size = coupling.group_size();
+        for (g, grp) in groups.iter().enumerate() {
+            assert!(
+                grp.iter().enumerate().all(|(j, &a)| a == g * size + j),
+                "coupling group {g} is not the contiguous block {:?}",
+                (g * size..(g + 1) * size)
+            );
+        }
         let arrays: Vec<Crossbar> =
             (0..spec.n_arrays).map(|_| Crossbar::new(matrix.clone(), cfg, rng)).collect();
         let vdd = cfg.op.vdd;
+        // Each DAC unit is one partner-array *column* line spanning
+        // `rows` cells at `c_cell_ff` each — a different line from the
+        // row-merge sum line (`cols` cells) the crossbar's kT/C model
+        // uses, but the same per-cell capacitance, so conversion and
+        // compute energy share one parameter (the fabricated 16-row
+        // array at 1.2 fF/cell gives the ~20 fF PR 2 hardcoded).
+        let c_line_ff = matrix.rows() as f64 * cfg.c_cell_ff;
         let converters: Vec<AnyAdc> = groups
             .iter()
             .map(|_| {
-                let adc =
-                    ImmersedAdc::sample(spec.adc_bits, vdd, spec.mode, cols, 20.0, &cfg.noise, rng);
+                let adc = ImmersedAdc::sample(
+                    spec.adc_bits,
+                    vdd,
+                    spec.mode,
+                    cols,
+                    c_line_ff,
+                    &cfg.noise,
+                    rng,
+                );
                 if spec.asymmetric {
                     AnyAdc::Asymmetric(AsymmetricAdc::for_mav(adc, cols, 0.5))
                 } else {
@@ -243,6 +423,7 @@ impl CimArrayPool {
                 }
             })
             .collect();
+        let group_scratch = vec![Vec::new(); groups.len()];
         CimArrayPool {
             arrays,
             expected_refs: coupling.group_size() - 1,
@@ -255,14 +436,21 @@ impl CimArrayPool {
             stats: ConversionStats::default(),
             mavs_produced: 0,
             mavs_digitized: 0,
+            mavs_gated: 0,
             converted: Vec::new(),
             plane_open: false,
-            mav_scratch: Vec::new(),
+            group_scratch,
         }
     }
 
     pub fn spec(&self) -> PoolSpec {
         self.spec
+    }
+
+    /// Override the `process_planes` worker-thread count after
+    /// construction (0 = auto, 1 = inline sequential).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.spec.threads = threads;
     }
 
     pub fn rows(&self) -> usize {
@@ -303,6 +491,7 @@ impl CimArrayPool {
         self.stats = ConversionStats::default();
         self.mavs_produced = 0;
         self.mavs_digitized = 0;
+        self.mavs_gated = 0;
     }
 
     /// MAVs produced by compute-role arrays so far.
@@ -310,11 +499,18 @@ impl CimArrayPool {
         self.mavs_produced
     }
 
-    /// MAVs digitized by the collaborative converters so far. Equal to
-    /// [`CimArrayPool::mavs_produced`] whenever no plane is open — the
-    /// exactly-once invariant, enforced per plane by the ledger.
+    /// MAVs digitized by the collaborative converters so far. Together
+    /// with [`CimArrayPool::mavs_gated`] this accounts for every MAV
+    /// produced whenever no plane is open — the exactly-once-or-gated
+    /// invariant.
     pub fn mavs_digitized(&self) -> u64 {
         self.mavs_digitized
+    }
+
+    /// MAVs whose conversion was skipped by per-row gating (the rows
+    /// early termination had already pruned).
+    pub fn mavs_gated(&self) -> u64 {
+        self.mavs_gated
     }
 
     /// Total crossbar (compute-side) energy across the pool (fJ).
@@ -330,21 +526,10 @@ impl CimArrayPool {
         self.cursor = 0;
     }
 
-    /// One scheduled phase of one coupling group: the compute-role array
-    /// runs crossbar steps 1–3 on plane `x` (raw MAVs), and the group's
-    /// collaborative converter digitizes every row MAV exactly once.
-    /// Writes the decoded signed sums (`2·plus − |x|` estimates, same
-    /// units as [`Crossbar::ideal_bitplane`]) into `out`.
-    pub fn process_plane(&mut self, x: &BitVec, rng: &mut Rng, out: &mut [f64]) {
-        let rows = self.rows();
-        assert_eq!(out.len(), rows, "output length != array rows");
-        let n_groups = self.groups.len();
-        let phase = (self.cursor / n_groups) % self.schedule.phases();
-        let g = self.cursor % n_groups;
-        self.cursor += 1;
-
-        // Runtime role invariant: exactly one computer this phase, all
-        // partners digitizing — an array never holds both roles at once.
+    /// Re-derive the compute-role array of group `g` in `phase`,
+    /// asserting the runtime role invariants (exactly one computer, all
+    /// partners digitizing — an array never holds both roles at once).
+    fn derive_computer(&self, phase: usize, g: usize) -> usize {
         let mut computer: Option<usize> = None;
         let mut refs = 0usize;
         for &a in &self.groups[g] {
@@ -360,49 +545,216 @@ impl CimArrayPool {
                 Role::Idle => {}
             }
         }
-        let computer = computer
-            .unwrap_or_else(|| panic!("phase {phase}: no compute role in group {g}"));
+        let computer =
+            computer.unwrap_or_else(|| panic!("phase {phase}: no compute role in group {g}"));
         assert_eq!(
             refs, self.expected_refs,
             "phase {phase} group {g}: {refs} digitize partners, expected {}",
             self.expected_refs
         );
+        computer
+    }
 
-        self.begin_plane(rows);
-        let mut mavs = std::mem::take(&mut self.mav_scratch);
-        mavs.resize(rows, 0.0);
-        self.arrays[computer].compute_mav_into(x, rng, &mut mavs);
-        self.mavs_produced += rows as u64;
-        let ones = x.count_ones() as f64;
-        for (r, slot) in out.iter_mut().enumerate() {
-            *slot = self.digitize_row(g, computer, r, mavs[r], ones, rng);
+    /// Fold one plane task's accounting into the pool totals. Always in
+    /// plane-submission order, whatever ran the task — which is what
+    /// makes the batched and sequential paths bit-identical (including
+    /// `energy_fj` float accumulation order).
+    fn apply_plane_result(&mut self, rows: u64, res: &ConversionStats) {
+        self.mavs_produced += rows;
+        self.mavs_digitized += res.conversions;
+        self.mavs_gated += res.gated;
+        self.stats.merge(res);
+    }
+
+    /// Advance one cursor slot and run its plane on its coupling group,
+    /// with an optional conversion-gating mask — the allocation-free
+    /// core shared by [`CimArrayPool::process_plane`] and the gated
+    /// per-plane serving path.
+    fn dispatch_slot(
+        &mut self,
+        x: &BitVec,
+        active: Option<&[bool]>,
+        rng: &mut Rng,
+        out: &mut [f64],
+    ) {
+        let rows = self.rows();
+        assert_eq!(out.len(), rows, "output length != array rows");
+        let n_groups = self.groups.len();
+        let phase = (self.cursor / n_groups) % self.schedule.phases();
+        let g = self.cursor % n_groups;
+        self.cursor += 1;
+        let computer = self.derive_computer(phase, g);
+        let size = self.topology.mode().group_size();
+        let local = computer - g * size;
+        let group = &mut self.arrays[g * size..(g + 1) * size];
+        let mut mavs = std::mem::take(&mut self.group_scratch[g]);
+        let adc = &mut self.converters[g];
+        let res = run_plane_task(&mut group[local], adc, &mut mavs, x, active, rng, out);
+        self.group_scratch[g] = mavs;
+        self.apply_plane_result(rows as u64, &res);
+    }
+
+    /// One scheduled phase of one coupling group: the compute-role array
+    /// runs crossbar steps 1–3 on plane `x` (raw MAVs), and the group's
+    /// collaborative converter digitizes every row MAV exactly once.
+    /// Writes the decoded signed sums (`2·plus − |x|` estimates, same
+    /// units as [`Crossbar::ideal_bitplane`]) into `out`.
+    pub fn process_plane(&mut self, x: &BitVec, rng: &mut Rng, out: &mut [f64]) {
+        self.dispatch_slot(x, None, rng, out);
+    }
+
+    /// Single-plane form of [`CimArrayPool::process_planes`]: the same
+    /// cursor slot, `Rng::for_stream(seed, stream)` noise and gating
+    /// semantics, but none of the batch machinery — this is the
+    /// early-termination walk's per-plane hot path, where the gating
+    /// mask changes between planes and a 1-element batch would pay
+    /// queue/lane allocations for nothing.
+    pub fn process_plane_masked(
+        &mut self,
+        x: &BitVec,
+        stream: u64,
+        seed: u64,
+        active: Option<&[bool]>,
+        out: &mut [f64],
+    ) {
+        let mut rng = Rng::for_stream(seed, stream);
+        self.dispatch_slot(x, active, &mut rng, out);
+    }
+
+    /// Batched plane dispatch: task `i` occupies the cursor slot the
+    /// equivalent sequence of [`CimArrayPool::process_plane`] calls
+    /// would have used and draws its analog noise from
+    /// `Rng::for_stream(seed, streams[i])`. Planes are queued onto
+    /// per-group *lanes* — disjoint arrays, disjoint converters, plane
+    /// order preserved within each lane — and the lanes fan across
+    /// scoped worker threads (`PoolSpec::threads`) under **one**
+    /// `thread::scope` for the whole call, so the spawn cost is per
+    /// call, not per interleave rotation. Outputs, counters and even
+    /// the `energy_fj` accumulation order are identical at any thread
+    /// count, because per-task accounting re-merges in submission
+    /// order after the lanes join.
+    ///
+    /// `active` is the per-row conversion-gating mask shared by every
+    /// submitted plane: rows early termination has pruned are gated
+    /// (no conversion fired, counted in [`ConversionStats::gated`]).
+    /// `out` is plane-major, `planes.len() × rows`.
+    pub fn process_planes(
+        &mut self,
+        planes: &[&BitVec],
+        streams: &[u64],
+        seed: u64,
+        active: Option<&[bool]>,
+        out: &mut [f64],
+    ) {
+        let rows = self.rows();
+        assert_eq!(planes.len(), streams.len(), "planes/streams length mismatch");
+        assert_eq!(out.len(), planes.len() * rows, "output length != planes x rows");
+        if let Some(mask) = active {
+            assert_eq!(mask.len(), rows, "active mask length != rows");
         }
-        self.mav_scratch = mavs;
-        self.end_plane();
+        if planes.is_empty() {
+            return;
+        }
+        let n_groups = self.groups.len();
+        let size = self.topology.mode().group_size();
+        let phases = self.schedule.phases();
+        let threads = match self.spec.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            t => t,
+        };
+
+        // Assign each plane its cursor slot — group and phase — exactly
+        // as the equivalent process_plane sequence would, queueing it on
+        // its group's lane.
+        let cursor0 = self.cursor;
+        self.cursor += planes.len();
+        let mut queues: Vec<Vec<PlaneJob<'_>>> = (0..n_groups).map(|_| Vec::new()).collect();
+        for (i, chunk) in out.chunks_mut(rows).enumerate() {
+            let slot = cursor0 + i;
+            let g = slot % n_groups;
+            let phase = (slot / n_groups) % phases;
+            let computer = self.derive_computer(phase, g) - g * size;
+            queues[g].push(PlaneJob {
+                idx: i,
+                computer,
+                plane: planes[i],
+                stream: streams[i],
+                out: chunk,
+            });
+        }
+
+        // Disjoint mutable views per group with queued work: its
+        // contiguous array block, its converter, its MAV scratch.
+        let lanes: Vec<GroupLane<'_>> = self
+            .arrays
+            .chunks_mut(size)
+            .take(n_groups)
+            .zip(self.converters.iter_mut())
+            .zip(self.group_scratch.iter_mut())
+            .zip(queues)
+            .filter(|(_, jobs)| !jobs.is_empty())
+            .map(|(((group, adc), mavs), jobs)| GroupLane { group, adc, mavs, jobs })
+            .collect();
+
+        let workers = threads.clamp(1, lanes.len());
+        let results: Vec<(usize, ConversionStats)> = if workers <= 1 {
+            lanes.into_iter().flat_map(|lane| lane.run(seed, active)).collect()
+        } else {
+            // PR-1 shard pattern: contiguous lane shards on scoped
+            // threads, results re-merged in submission order below.
+            let shard_len = lanes.len().div_ceil(workers);
+            let mut shards: Vec<Vec<GroupLane<'_>>> = Vec::with_capacity(workers);
+            let mut it = lanes.into_iter();
+            loop {
+                let shard: Vec<GroupLane<'_>> = it.by_ref().take(shard_len).collect();
+                if shard.is_empty() {
+                    break;
+                }
+                shards.push(shard);
+            }
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = shards
+                    .into_iter()
+                    .map(|shard| {
+                        scope.spawn(move || {
+                            shard
+                                .into_iter()
+                                .flat_map(|lane| lane.run(seed, active))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("pool plane task panicked"))
+                    .collect()
+            })
+        };
+
+        // Submission-order merge, whatever worker ran what.
+        let mut ordered = vec![ConversionStats::default(); planes.len()];
+        for (idx, stats) in results {
+            ordered[idx] = stats;
+        }
+        for res in &ordered {
+            self.apply_plane_result(rows as u64, res);
+        }
     }
 
     /// Open the per-plane exactly-once ledger for `rows` MAVs. Driven by
-    /// [`CimArrayPool::process_plane`]; public so custom phase drivers
-    /// (and the invariant tests) exercise the same assertions.
+    /// custom phase drivers and the invariant tests; the batched serving
+    /// path enforces the same property structurally (see module docs).
     pub fn begin_plane(&mut self, rows: usize) {
         assert!(!self.plane_open, "begin_plane while a plane is still open");
         self.plane_open = true;
         self.converted.clear();
-        self.converted.resize(rows, false);
+        self.converted.resize(rows, ROW_PENDING);
     }
 
     /// Digitize one row's MAV through group `group`'s converter and
-    /// decode it back to a signed-sum estimate. Panics if the row was
-    /// already digitized this plane (exactly-once invariant).
-    ///
-    /// The comparator input is offset by half a charge count: the
-    /// crossbar's discrete MAV levels otherwise sit exactly on the
-    /// converter's ideal transition levels (both are `k/cols` grids when
-    /// `2^bits == cols`), where real hardware breaks ties with noise.
-    /// Centring each level in its code bin keeps the behavioural model
-    /// exact and noise-robust. Decoding inverts the floor quantizer at
-    /// the bin's expected charge count, so the aligned ideal case
-    /// recovers the exact `plus` count.
+    /// decode it back to a signed-sum estimate (see [`decode_mav`] for
+    /// the bin-centring rationale). Panics if the row was already
+    /// digitized — or gated — this plane (exactly-once invariant).
     pub fn digitize_row(
         &mut self,
         group: usize,
@@ -414,29 +766,43 @@ impl CimArrayPool {
     ) -> f64 {
         assert!(self.plane_open, "digitize_row outside begin_plane/end_plane");
         assert!(
-            !self.converted[row],
+            self.converted[row] != ROW_CONVERTED,
             "MAV of row {row} digitized twice in one phase (exactly-once invariant)"
         );
+        assert!(
+            self.converted[row] != ROW_GATED,
+            "MAV of row {row} digitized after being gated this phase"
+        );
         let per_count = self.arrays[computer].mav_volts_per_count();
-        let adc = &mut self.converters[group];
-        let n_codes = (1u64 << adc.bits()) as f64;
-        let vdd = adc.vdd();
-        let c = adc.convert(v_mav + 0.5 * per_count, rng);
-        self.converted[row] = true;
+        let (v, c) = decode_mav(per_count, &mut self.converters[group], v_mav, ones, rng);
+        self.converted[row] = ROW_CONVERTED;
         self.mavs_digitized += 1;
         self.stats.record(&c);
-        // Charge counts per code step; 1.0 in the aligned ideal case.
-        let bin_counts = vdd / (n_codes * per_count);
-        let plus_hat =
-            (c.code as f64 * bin_counts + 0.5 * (bin_counts - 1.0).max(0.0)).min(ones);
-        2.0 * plus_hat - ones
+        v
     }
 
-    /// Close the plane; panics if any MAV was left undigitized.
+    /// Account row `row` as conversion-gated this plane: early
+    /// termination pruned it, so the converter never fires. Panics if
+    /// the row was already digitized (a conversion cannot be un-spent).
+    pub fn gate_row(&mut self, row: usize) {
+        assert!(self.plane_open, "gate_row outside begin_plane/end_plane");
+        assert!(
+            self.converted[row] != ROW_CONVERTED,
+            "row {row} gated after its MAV was already digitized this phase"
+        );
+        if self.converted[row] != ROW_GATED {
+            self.converted[row] = ROW_GATED;
+            self.mavs_gated += 1;
+            self.stats.gated += 1;
+        }
+    }
+
+    /// Close the plane; panics if any MAV was neither digitized nor
+    /// gated.
     pub fn end_plane(&mut self) {
         assert!(self.plane_open, "end_plane without begin_plane");
         self.plane_open = false;
-        let missed = self.converted.iter().filter(|&&c| !c).count();
+        let missed = self.converted.iter().filter(|&&c| c == ROW_PENDING).count();
         assert!(
             missed == 0,
             "{missed} MAVs left undigitized at end of phase (exactly-once invariant)"
@@ -453,12 +819,26 @@ mod tests {
         BitVec::from_bits(&(0..cols).map(|_| rng.bernoulli(density)).collect::<Vec<_>>())
     }
 
+    fn spec(n_arrays: usize, mode: ImmersedMode, adc_bits: u8) -> PoolSpec {
+        PoolSpec { n_arrays, adc_bits, mode, asymmetric: false, threads: 1 }
+    }
+
     fn ideal_pool(mode: ImmersedMode, adc_bits: u8) -> CimArrayPool {
         let mut rng = Rng::new(7);
         CimArrayPool::new(
             &SignMatrix::walsh(32),
             CrossbarConfig::ideal(),
-            PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false },
+            spec(4, mode, adc_bits),
+            &mut rng,
+        )
+    }
+
+    fn noisy_pool(n_arrays: usize, threads: usize) -> CimArrayPool {
+        let mut rng = Rng::new(17);
+        CimArrayPool::new(
+            &SignMatrix::walsh(32),
+            CrossbarConfig::default(),
+            PoolSpec { threads, ..spec(n_arrays, ImmersedMode::Sar, 5) },
             &mut rng,
         )
     }
@@ -521,6 +901,7 @@ mod tests {
         }
         assert_eq!(pool.mavs_produced(), 3 * 32);
         assert_eq!(pool.mavs_digitized(), pool.mavs_produced());
+        assert_eq!(pool.mavs_gated(), 0);
         assert_eq!(pool.stats().conversions, 3 * 32);
         assert!(pool.stats().energy_fj > 0.0);
     }
@@ -546,7 +927,13 @@ mod tests {
 
     #[test]
     fn asymmetric_tree_cuts_comparisons_on_skewed_mavs() {
-        let spec = PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: true };
+        let spec = PoolSpec {
+            n_arrays: 4,
+            adc_bits: 5,
+            mode: ImmersedMode::Sar,
+            asymmetric: true,
+            threads: 1,
+        };
         let mut rng = Rng::new(8);
         let mut asym =
             CimArrayPool::new(&SignMatrix::walsh(32), CrossbarConfig::ideal(), spec, &mut rng);
@@ -589,6 +976,31 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "after being gated")]
+    fn digitizing_a_gated_row_panics() {
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(12);
+        pool.begin_plane(32);
+        pool.gate_row(3);
+        pool.digitize_row(0, 0, 3, 0.4, 16.0, &mut rng);
+    }
+
+    #[test]
+    fn gated_rows_close_the_ledger() {
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let mut rng = Rng::new(13);
+        pool.begin_plane(4);
+        pool.digitize_row(0, 0, 0, 0.4, 16.0, &mut rng);
+        pool.gate_row(1);
+        pool.gate_row(2);
+        pool.digitize_row(0, 0, 3, 0.2, 16.0, &mut rng);
+        pool.end_plane();
+        assert_eq!(pool.mavs_digitized(), 2);
+        assert_eq!(pool.mavs_gated(), 2);
+        assert_eq!(pool.stats().gated, 2);
+    }
+
+    #[test]
     fn begin_transform_makes_runs_reproducible() {
         let mut a = ideal_pool(ImmersedMode::Sar, 5);
         let mut b = ideal_pool(ImmersedMode::Sar, 5);
@@ -606,13 +1018,120 @@ mod tests {
     }
 
     #[test]
+    fn process_planes_equals_sequence_of_single_plane_calls() {
+        // Batched dispatch == the same planes submitted one at a time,
+        // bit for bit — outputs, counters, and float energy accumulation
+        // (both paths merge per-plane subtotals in submission order).
+        let planes: Vec<BitVec> = (0..5).map(|s| plane(32, s, 0.4)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..5).collect();
+        let seed = 0xfeed;
+        let mut batched = noisy_pool(4, 1);
+        let mut singles = noisy_pool(4, 1);
+        let mut out_b = vec![0.0; 5 * 32];
+        let mut out_s = vec![0.0; 5 * 32];
+        batched.process_planes(&refs, &streams, seed, None, &mut out_b);
+        for (i, p) in refs.iter().copied().enumerate() {
+            singles.process_planes(
+                &[p],
+                &[streams[i]],
+                seed,
+                None,
+                &mut out_s[i * 32..(i + 1) * 32],
+            );
+        }
+        assert_eq!(out_b, out_s);
+        assert_eq!(batched.stats(), singles.stats());
+        assert_eq!(batched.mavs_produced(), singles.mavs_produced());
+        assert_eq!(batched.mavs_digitized(), singles.mavs_digitized());
+    }
+
+    #[test]
+    fn process_planes_matches_process_plane_values() {
+        // The batched path decodes the same values as the classic
+        // per-plane entry point fed the matching per-plane streams.
+        let planes: Vec<BitVec> = (0..4).map(|s| plane(32, 10 + s, 0.5)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..4).collect();
+        let seed = 0xabba;
+        let mut batched = noisy_pool(4, 1);
+        let mut classic = noisy_pool(4, 1);
+        let mut out_b = vec![0.0; 4 * 32];
+        batched.process_planes(&refs, &streams, seed, None, &mut out_b);
+        let mut out_c = vec![0.0; 32];
+        for (i, p) in refs.iter().copied().enumerate() {
+            let mut rng = Rng::for_stream(seed, streams[i]);
+            classic.process_plane(p, &mut rng, &mut out_c);
+            assert_eq!(&out_b[i * 32..(i + 1) * 32], &out_c[..], "plane {i}");
+        }
+        assert_eq!(batched.stats().conversions, classic.stats().conversions);
+        assert_eq!(batched.stats().comparisons, classic.stats().comparisons);
+    }
+
+    #[test]
+    fn process_planes_is_thread_count_invariant() {
+        // 8 arrays, SAR coupling: 4 independent groups per phase. The
+        // fan-out must be bit-identical at any worker count — including
+        // the merged stats' float energy.
+        let planes: Vec<BitVec> = (0..11).map(|s| plane(32, 20 + s, 0.5)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..11).collect();
+        let mut base = noisy_pool(8, 1);
+        let mut out_base = vec![0.0; 11 * 32];
+        base.process_planes(&refs, &streams, 0x7007, None, &mut out_base);
+        for threads in [2usize, 4, 8] {
+            let mut pool = noisy_pool(8, threads);
+            let mut out = vec![0.0; 11 * 32];
+            pool.process_planes(&refs, &streams, 0x7007, None, &mut out);
+            assert_eq!(out, out_base, "threads={threads}");
+            assert_eq!(pool.stats(), base.stats(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gating_mask_skips_conversions_and_counts_them() {
+        let x = plane(32, 2, 0.5);
+        let mut gated = ideal_pool(ImmersedMode::Sar, 5);
+        let mut full = ideal_pool(ImmersedMode::Sar, 5);
+        let mut active = vec![true; 32];
+        for r in (0..32).step_by(2) {
+            active[r] = false;
+        }
+        let mut out_g = vec![1.0; 32];
+        let mut out_f = vec![0.0; 32];
+        gated.process_planes(&[&x], &[0], 1, Some(&active), &mut out_g);
+        full.process_planes(&[&x], &[0], 1, None, &mut out_f);
+        assert_eq!(gated.stats().conversions, 16);
+        assert_eq!(gated.stats().gated, 16);
+        assert_eq!(gated.mavs_gated(), 16);
+        assert_eq!(full.stats().conversions, 32);
+        assert_eq!(full.stats().gated, 0);
+        assert!(gated.stats().energy_fj < full.stats().energy_fj);
+        assert!(gated.stats().cycles < full.stats().cycles);
+        for r in 0..32 {
+            if active[r] {
+                assert_eq!(out_g[r], out_f[r], "active row {r} decodes identically");
+            } else {
+                assert_eq!(out_g[r], 0.0, "gated row {r} reads zero");
+            }
+        }
+        // The allocation-free single-plane form is the same dispatch:
+        // identical outputs and accounting to a 1-element batch.
+        let mut masked = ideal_pool(ImmersedMode::Sar, 5);
+        let mut out_m = vec![0.0; 32];
+        masked.process_plane_masked(&x, 0, 1, Some(&active), &mut out_m);
+        assert_eq!(out_m, out_g);
+        assert_eq!(masked.stats(), gated.stats());
+    }
+
+    #[test]
     #[should_panic(expected = "column lines")]
     fn rejects_too_few_columns_for_resolution() {
         let mut rng = Rng::new(14);
         CimArrayPool::new(
             &SignMatrix::walsh(16),
             CrossbarConfig::ideal(),
-            PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: false },
+            spec(4, ImmersedMode::Sar, 5),
             &mut rng,
         );
     }
@@ -621,7 +1140,7 @@ mod tests {
     fn parse_maps_cli_inputs() {
         assert_eq!(PoolSpec::parse(0, "sar", 0, false), Ok(None));
         let s = PoolSpec::parse(4, "sar", 0, true).unwrap().unwrap();
-        assert_eq!((s.n_arrays, s.adc_bits, s.asymmetric), (4, 5, true));
+        assert_eq!((s.n_arrays, s.adc_bits, s.asymmetric, s.threads), (4, 5, true, 1));
         assert_eq!(s.mode, ImmersedMode::Sar);
         let f = PoolSpec::parse(8, "flash", 0, false).unwrap().unwrap();
         assert_eq!((f.adc_bits, f.mode), (2, ImmersedMode::Flash));
@@ -646,5 +1165,9 @@ mod tests {
         // Out-of-range resolution.
         let e = PoolSpec::parse(4, "sar", 11, false).unwrap_err();
         assert!(e.contains("1..=10"), "{e}");
+        // A negative TOML pool_arrays wraps to a huge usize: loud error,
+        // not an attempt to fabricate usize::MAX crossbars.
+        let e = PoolSpec::parse(usize::MAX, "sar", 0, false).unwrap_err();
+        assert!(e.contains("4096"), "{e}");
     }
 }

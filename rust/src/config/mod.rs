@@ -80,6 +80,12 @@ pub struct ServerConfig {
     pub adc_bits: u8,
     /// Drive SAR references with the Fig 10 asymmetric comparison tree.
     pub asymmetric_adc: bool,
+    /// Worker threads for the pool's batched plane fan-out
+    /// (`CimArrayPool::process_planes`): independent coupling groups of
+    /// one interleave phase run concurrently. 0 = auto-detect,
+    /// 1 = inline sequential (default). Results are thread-count
+    /// invariant by the per-plane RNG-stream contract.
+    pub pool_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +101,7 @@ impl Default for ServerConfig {
             adc_mode: "hybrid".to_string(),
             adc_bits: 0,
             asymmetric_adc: false,
+            pool_threads: 1,
         }
     }
 }
@@ -114,13 +121,32 @@ impl ServerConfig {
             engine_threads: t
                 .get_int("server", "engine_threads")
                 .unwrap_or(d.engine_threads as i64) as usize,
+            // Out-of-range values must surface as errors, not wrap into
+            // valid-looking settings (`260 as u8` is 4): `pool_arrays`
+            // wraps negatives to huge values that PoolSpec::validate
+            // rejects loudly, and `adc_bits` pins anything outside
+            // 0..=255 at 255, which validate rejects as "outside 1..=10".
             pool_arrays: t.get_int("server", "pool_arrays").unwrap_or(d.pool_arrays as i64)
                 as usize,
             adc_mode: t.get_str("server", "adc_mode").unwrap_or(d.adc_mode),
-            adc_bits: t.get_int("server", "adc_bits").unwrap_or(d.adc_bits as i64) as u8,
+            adc_bits: {
+                let raw = t.get_int("server", "adc_bits").unwrap_or(d.adc_bits as i64);
+                if (0..=255).contains(&raw) {
+                    raw as u8
+                } else {
+                    u8::MAX
+                }
+            },
             asymmetric_adc: t
                 .get_bool("server", "asymmetric_adc")
                 .unwrap_or(d.asymmetric_adc),
+            // A perf knob, not a correctness setting: negatives mean
+            // "auto" (0) rather than wrapping to 2^64-1, and the cap
+            // keeps a fat-fingered value from requesting absurd fan-out.
+            pool_threads: t
+                .get_int("server", "pool_threads")
+                .unwrap_or(d.pool_threads as i64)
+                .clamp(0, 1024) as usize,
         }
     }
 }
@@ -137,7 +163,10 @@ mod tests {
 
     #[test]
     fn from_toml_overrides() {
-        let t = TomlLite::parse("[chip]\nvdd = 0.85\nclock_ghz = 4.0\n[server]\nworkers = 8\nengine = \"analog\"\n").unwrap();
+        let t = TomlLite::parse(
+            "[chip]\nvdd = 0.85\nclock_ghz = 4.0\n[server]\nworkers = 8\nengine = \"analog\"\n",
+        )
+        .unwrap();
         let c = ChipConfig::from_toml(&t);
         assert_eq!(c.vdd, 0.85);
         assert_eq!(c.clock_ghz, 4.0);
@@ -151,7 +180,8 @@ mod tests {
     #[test]
     fn from_toml_pool_settings() {
         let t = TomlLite::parse(
-            "[server]\npool_arrays = 4\nadc_mode = \"sar\"\nadc_bits = 5\nasymmetric_adc = true\n",
+            "[server]\npool_arrays = 4\nadc_mode = \"sar\"\nadc_bits = 5\n\
+             asymmetric_adc = true\npool_threads = 4\n",
         )
         .unwrap();
         let s = ServerConfig::from_toml(&t);
@@ -159,5 +189,19 @@ mod tests {
         assert_eq!(s.adc_mode, "sar");
         assert_eq!(s.adc_bits, 5);
         assert!(s.asymmetric_adc);
+        assert_eq!(s.pool_threads, 4);
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert_eq!(d.pool_threads, 1, "pool fan-out defaults to sequential");
+    }
+
+    #[test]
+    fn out_of_range_adc_bits_pins_to_invalid_not_wrapped() {
+        // `260 as u8` would silently be 4 — instead the value pins at
+        // 255, which PoolSpec::validate rejects with a real diagnostic.
+        let t = TomlLite::parse("[server]\nadc_bits = 260\n").unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.adc_bits, u8::MAX);
+        let t = TomlLite::parse("[server]\nadc_bits = -3\n").unwrap();
+        assert_eq!(ServerConfig::from_toml(&t).adc_bits, u8::MAX);
     }
 }

@@ -171,6 +171,10 @@ impl AnalogEngine {
     /// Serve every BWHT stage through a collaborative digitization pool
     /// (`None` restores the ADC-free 1-bit default). Applies to layers
     /// already in analog exec mode; resets their fabricated engines.
+    /// `spec.threads` controls the pool's own per-phase plane fan-out
+    /// (`CimArrayPool::process_planes`) and composes with
+    /// [`AnalogEngine::with_threads`] batch sharding — both are
+    /// thread-count invariant, so logits never depend on either knob.
     /// Validates the spec against each BWHT block's width up front, so
     /// an infeasible resolution is a clean error here instead of an
     /// assertion panic on a serving worker thread mid-batch.
@@ -235,8 +239,7 @@ impl InferenceEngine for AnalogEngine {
             0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             t => t,
         }
-        .min(images.len())
-        .max(1);
+        .clamp(1, images.len());
         let stream0 = self.next_stream;
         self.next_stream += images.len() as u64;
 

@@ -40,6 +40,10 @@ pub struct MetricsSnapshot {
     /// MAV→code conversions performed by the digitization pool (0 on
     /// the ADC-free path).
     pub conversions: u64,
+    /// Conversions avoided by per-row gating: early termination had
+    /// already pruned the row, so the converter never fired. The ET
+    /// savings visible in the ADC energy column.
+    pub conversions_gated: u64,
     /// Comparator decisions across all conversions.
     pub adc_comparisons: u64,
     /// Conversion clock cycles across all conversions.
@@ -80,7 +84,7 @@ impl Metrics {
     /// Fold a per-batch delta of pool digitization work into the totals
     /// (workers call this after each `infer_batch`).
     pub fn record_conversions(&self, delta: &ConversionStats) {
-        if delta.conversions == 0 && delta.energy_fj == 0.0 {
+        if delta.conversions == 0 && delta.gated == 0 && delta.energy_fj == 0.0 {
             return;
         }
         self.inner.lock().unwrap().conv.merge(delta);
@@ -111,6 +115,7 @@ impl Metrics {
             mean_batch: g.batch_size.mean(),
             throughput_per_s: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
             conversions: g.conv.conversions,
+            conversions_gated: g.conv.gated,
             adc_comparisons: g.conv.comparisons,
             adc_cycles: g.conv.cycles,
             adc_energy_fj: g.conv.energy_fj,
@@ -137,11 +142,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_batch,
             self.throughput_per_s
         )?;
-        if self.conversions > 0 {
+        if self.conversions > 0 || self.conversions_gated > 0 {
             write!(
                 f,
-                " conv={} cmp/conv={:.2} cycles={} E/req={:.0}fJ",
+                " conv={} gated={} cmp/conv={:.2} cycles={} E/req={:.0}fJ",
                 self.conversions,
+                self.conversions_gated,
                 self.comparisons_per_conversion,
                 self.adc_cycles,
                 self.energy_per_req_fj
@@ -192,15 +198,18 @@ mod tests {
             comparisons: 320,
             cycles: 320,
             energy_fj: 150.0,
+            gated: 8,
         });
         m.record_conversions(&ConversionStats {
             conversions: 64,
             comparisons: 320,
             cycles: 320,
             energy_fj: 50.0,
+            gated: 24,
         });
         let s = m.snapshot();
         assert_eq!(s.conversions, 128);
+        assert_eq!(s.conversions_gated, 32);
         assert_eq!(s.adc_comparisons, 640);
         assert_eq!(s.adc_cycles, 640);
         assert!((s.adc_energy_fj - 200.0).abs() < 1e-9);
@@ -208,5 +217,6 @@ mod tests {
         assert!((s.energy_per_req_fj - 100.0).abs() < 1e-9);
         let line = format!("{s}");
         assert!(line.contains("conv=128"), "{line}");
+        assert!(line.contains("gated=32"), "{line}");
     }
 }

@@ -227,7 +227,8 @@ mod tests {
 
     #[test]
     fn serves_requests_end_to_end() {
-        let cfg = ServerConfig { workers: 2, batch: 4, batch_deadline_us: 500, ..Default::default() };
+        let cfg =
+            ServerConfig { workers: 2, batch: 4, batch_deadline_us: 500, ..Default::default() };
         let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
         for i in 0..20u64 {
             assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])));
@@ -272,7 +273,12 @@ mod tests {
 
     #[test]
     fn deadline_flushes_partial_batches() {
-        let cfg = ServerConfig { workers: 1, batch: 1000, batch_deadline_us: 2_000, ..Default::default() };
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 1000,
+            batch_deadline_us: 2_000,
+            ..Default::default()
+        };
         let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::LeastLoaded).unwrap();
         server.submit(InferenceRequest::new(1, 0, vec![1.0; 4]));
         let r = server.recv_response(Duration::from_secs(2)).expect("deadline dispatch");

@@ -24,6 +24,7 @@ use anyhow::Result;
 const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
+    "pool-threads",
 ];
 
 fn main() -> Result<()> {
@@ -39,8 +40,11 @@ fn main() -> Result<()> {
                  \n\
                  serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
                  \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
+                 \x20       [--pool-threads T]\n\
                  \x20       (--pool N serves the analog BWHT stages through an N-array\n\
-                 \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path)\n\
+                 \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
+                 \x20        --pool-threads T fans the pool's coupling groups across T worker\n\
+                 \x20        threads per phase, 0 = auto — results are thread-count invariant)\n\
                  report --all | --id <table1|fig1c|fig1d|fig3|fig5|fig6|fig7|fig8|fig10|fig12|fig13> [--out-dir reports]\n\
                  adc    --bits B --mode sar|flash|hybrid [--vdd V]\n\
                  info"
@@ -168,6 +172,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("asym") {
         server_cfg.asymmetric_adc = true;
     }
+    if let Some(t) = args.get_parse::<usize>("pool-threads") {
+        server_cfg.pool_threads = t;
+    }
     let n_requests: usize = args.get_parse_or("requests", 256);
     let policy = match args.get_or("policy", "rr") {
         "ll" => RoutingPolicy::LeastLoaded,
@@ -186,7 +193,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server_cfg.adc_bits,
         server_cfg.asymmetric_adc,
     )
-    .map_err(|e| anyhow::anyhow!("invalid pool configuration: {e}"))?;
+    .map_err(|e| anyhow::anyhow!("invalid pool configuration: {e}"))?
+    .map(|spec| PoolSpec { threads: server_cfg.pool_threads, ..spec });
     if pool.is_some() && server_cfg.engine != "analog" {
         anyhow::bail!(
             "--pool requires --engine analog (the digital PJRT path has no CiM array pool)"
@@ -198,11 +206,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let cfg = CrossbarConfig { op: chip.operating_point(), ..Default::default() };
             if let Some(spec) = &pool {
                 println!(
-                    "collaborative digitization pool: {} arrays, {:?} @ {} bits{}",
+                    "collaborative digitization pool: {} arrays, {:?} @ {} bits{}, \
+                     plane fan-out threads {}",
                     spec.n_arrays,
                     spec.mode,
                     spec.adc_bits,
-                    if spec.asymmetric { ", asymmetric tree" } else { "" }
+                    if spec.asymmetric { ", asymmetric tree" } else { "" },
+                    if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() }
                 );
             }
             for w in 0..server_cfg.workers {

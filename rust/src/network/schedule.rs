@@ -197,7 +197,7 @@ mod tests {
             let n = mode.group_size() * (1 + rng.index(5)) + rng.index(mode.group_size());
             let t = Topology::new(n, mode);
             let s = InterleaveSchedule::build(&t, 1 + rng.index(12));
-            s.validate(&t).map_err(|e| e)
+            s.validate(&t)
         });
     }
 

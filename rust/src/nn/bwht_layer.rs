@@ -639,6 +639,7 @@ mod tests {
                 adc_bits: 4,
                 mode: ImmersedMode::Sar,
                 asymmetric: false,
+                threads: 1,
             }),
         });
         let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());

@@ -34,7 +34,8 @@ impl Dataset {
         let mut labels = Vec::with_capacity(n);
         for _ in 0..n {
             let class = rng.index(classes);
-            let angle = std::f64::consts::PI * (class as f64 + 0.5 * rng.uniform()) / classes as f64;
+            let angle =
+                std::f64::consts::PI * (class as f64 + 0.5 * rng.uniform()) / classes as f64;
             let freq = 2.0 + (class % 3) as f64;
             let (s, c) = angle.sin_cos();
             let phase = rng.uniform() * std::f64::consts::TAU;

@@ -31,7 +31,15 @@ pub struct LayerCount {
     pub cout: usize,
 }
 
-fn conv(name: &str, cin: usize, cout: usize, k: usize, h: usize, w: usize, replaceable: bool) -> LayerCount {
+fn conv(
+    name: &str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    replaceable: bool,
+) -> LayerCount {
     LayerCount {
         name: name.to_string(),
         params: cout * cin * k * k + cout,

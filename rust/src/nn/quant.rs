@@ -16,7 +16,7 @@ pub struct UniformQuantizer {
 
 impl UniformQuantizer {
     pub fn new(bits: u8, lo: f32, hi: f32) -> Self {
-        assert!(bits >= 1 && bits <= 16 && hi > lo);
+        assert!((1..=16).contains(&bits) && hi > lo);
         UniformQuantizer { bits, lo, hi }
     }
 

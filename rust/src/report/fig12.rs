@@ -11,8 +11,8 @@ pub fn generate() -> String {
     let bits = 5u8;
     let mut rng = Rng::new(0xf12);
     let noise = NoiseModel::default();
-    let mut adc =
-        ImmersedAdc::sample(bits, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+    let hybrid = ImmersedMode::Hybrid { flash_bits: 2 };
+    let mut adc = ImmersedAdc::sample(bits, 1.0, hybrid, 32, 20.0, &noise, &mut rng);
 
     // (a) staircase, subsampled for the report.
     out.push_str("Fig 12(a) — output code vs input voltage (hybrid SAR+Flash, 5-bit)\n\n");

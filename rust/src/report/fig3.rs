@@ -48,7 +48,10 @@ pub fn generate() -> String {
     for p in Phase::ALL {
         out.push_str(&format!("  {:<8} {:.4}\n", p.name(), timer.settle(p)));
     }
-    out.push_str(&format!("worst-case settle: {:.4} (operation valid > 0.95)\n", timer.worst_settle()));
+    out.push_str(&format!(
+        "worst-case settle: {:.4} (operation valid > 0.95)\n",
+        timer.worst_settle()
+    ));
     out.push_str("boosted RM/CM at 1.25 V eliminate source degeneration (paper Fig 3 note)\n");
     out
 }

@@ -22,7 +22,10 @@ pub fn generate() -> String {
     let cfg = TrainConfig { epochs, lr: 0.08, seed: 11, ..Default::default() };
     let log_f = train(&mut float_model, &tr, &te, cfg);
     let acc_f = *log_f.epoch_test_acc.last().unwrap();
-    out.push_str(&format!("float baseline: test acc/epoch {:?}\n\n", round3(&log_f.epoch_test_acc)));
+    out.push_str(&format!(
+        "float baseline: test acc/epoch {:?}\n\n",
+        round3(&log_f.epoch_test_acc)
+    ));
 
     // Quantized training at 1..4 input bits (product-sum always 1-bit).
     out.push_str("input quant | test acc per epoch (1-bit product-sum quantization)\n");

@@ -42,7 +42,8 @@ pub fn generate() -> String {
         let mut rng = Rng::new(31);
         let mut xb = Crossbar::walsh(size, CrossbarConfig { op, ..Default::default() }, &mut rng);
         let ber = xb.bit_error_rate(40, 0.5, &mut rng);
-        let acc = analog_accuracy(&mut model, &te, CrossbarConfig { op, ..Default::default() }, 4, None, 33);
+        let cfg = CrossbarConfig { op, ..Default::default() };
+        let acc = analog_accuracy(&mut model, &te, cfg, 4, None, 33);
         out.push_str(&format!(
             "{:>7}x{:<3} {acc:>9.3} {:>12.1}   (raw bit-error {ber:.4})\n",
             size, size,

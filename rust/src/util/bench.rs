@@ -62,9 +62,21 @@ pub fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// True when `BENCH_SMOKE` is set (non-empty, not "0"): CI's smoke mode
+/// (`scripts/ci.sh --smoke-bench`) shrinks the measurement window and
+/// sample count so one bench run finishes in seconds. Smoke numbers are
+/// noisy — they prove the bench *runs* and the JSON stays well-formed,
+/// never land in `BENCH_hotpath.json`.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 /// Benchmark a closure: warm up, choose iters for ~`window` per sample,
 /// take `samples` samples, report the median.
 pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    if smoke_mode() {
+        return bench_fn_cfg(name, Duration::from_millis(2), 3, &mut f);
+    }
     bench_fn_cfg(name, Duration::from_millis(40), 9, &mut f)
 }
 

@@ -37,10 +37,47 @@ fn pooled_engine(mode: ImmersedMode, adc_bits: u8, threads: usize) -> AnalogEngi
             config: CrossbarConfig::default(),
             early_term: None,
             seed: 42,
-            pool: Some(PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false }),
+            pool: Some(PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false, threads: 1 }),
         })
     });
     AnalogEngine::from_model(model, 36).with_threads(threads)
+}
+
+/// Ideal-aligned pooled engine (cols == 2^adc_bits, no noise): the
+/// configuration where the pooled path is bit-exact with the integer
+/// transform and the exact-ET guarantee is airtight. `n_arrays = 8`
+/// gives the SAR fabric four independent coupling groups, so
+/// `pool_threads` has real parallelism to exercise. Layer thresholds
+/// are pinned to the ET dead band expressed in output units
+/// (`T_layer = T_et · cols · step`), which is what makes gated and
+/// ungated runs produce identical post-threshold outputs.
+fn ideal_pooled_engine(
+    n_arrays: usize,
+    pool_threads: usize,
+    t_et: f32,
+    gate: bool,
+) -> AnalogEngine {
+    let mut rng = Rng::new(1);
+    let mut model = bwht_mlp(36, 4, 16, &mut rng);
+    let step = 4.0f32 / 15.0; // in_quant_hi / (2^4 − 1)
+    model.for_each_bwht(|b| {
+        let padded = b.layout().padded_len();
+        b.set_thresholds(vec![t_et * 16.0 * step; padded]);
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::ideal(),
+            early_term: gate.then(|| adcim::cim::EarlyTermination::exact(t_et)),
+            seed: 42,
+            pool: Some(PoolSpec {
+                n_arrays,
+                adc_bits: 4,
+                mode: ImmersedMode::Sar,
+                asymmetric: false,
+                threads: pool_threads,
+            }),
+        })
+    });
+    AnalogEngine::from_model(model, 36)
 }
 
 fn images(n: usize) -> Vec<Vec<f32>> {
@@ -121,8 +158,13 @@ fn serving_digitizes_every_mav_exactly_once() {
 /// through the pool's phase scheduling + begin_transform reset).
 #[test]
 fn pooled_transform_batch_equals_sequential_transforms() {
-    let spec =
-        PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: false };
+    let spec = PoolSpec {
+        n_arrays: 4,
+        adc_bits: 5,
+        mode: ImmersedMode::Sar,
+        asymmetric: false,
+        threads: 1,
+    };
     let mk = || {
         let mut fab = Rng::new(11);
         let matrix = SignMatrix::walsh(32);
@@ -178,8 +220,13 @@ fn pooled_infer_batch_is_thread_count_invariant() {
 /// the multi-bit win over the 1-bit sign reconstruction.
 #[test]
 fn ideal_pool_path_recovers_exact_integer_transform() {
-    let spec =
-        PoolSpec { n_arrays: 4, adc_bits: 5, mode: ImmersedMode::Sar, asymmetric: false };
+    let spec = PoolSpec {
+        n_arrays: 4,
+        adc_bits: 5,
+        mode: ImmersedMode::Sar,
+        asymmetric: false,
+        threads: 1,
+    };
     let mut fab = Rng::new(3);
     let matrix = SignMatrix::walsh(32);
     let mut eng =
@@ -198,6 +245,136 @@ fn ideal_pool_path_recovers_exact_integer_transform() {
         }
         assert_eq!(out.conv.conversions, 32 * 4);
     }
+}
+
+/// ISSUE 3 tentpole: fanning the pool's coupling groups across worker
+/// threads must not change served logits or conversion accounting —
+/// `process_planes` results are identical at any thread count, all the
+/// way up through the engine.
+#[test]
+fn pool_thread_fanout_does_not_change_serving_results() {
+    let imgs = images(8);
+    let mut base = ideal_pooled_engine(8, 1, 0.0, false);
+    let want = base.infer_batch(&imgs).unwrap();
+    let want_stats = base.conversion_stats();
+    assert!(want_stats.conversions > 0);
+    for pool_threads in [0usize, 2, 4] {
+        let mut e = ideal_pooled_engine(8, pool_threads, 0.0, false);
+        let got = e.infer_batch(&imgs).unwrap();
+        assert_eq!(got, want, "pool_threads={pool_threads} changed logits");
+        assert_eq!(e.conversion_stats(), want_stats, "pool_threads={pool_threads}");
+    }
+}
+
+/// ISSUE 3 acceptance: pooled serving with exact early termination on
+/// the ideal-aligned configuration reports strictly fewer conversions
+/// and lower conversion energy than the ungated run — at identical
+/// logits (the exact-ET guarantee, with layer thresholds pinned to the
+/// ET dead band).
+#[test]
+fn gated_serving_saves_conversions_at_equal_accuracy() {
+    let imgs = images(8);
+    // T_et = 16: after the MSB plane every row's bound test
+    // |acc|/cols + (2^3 − 1) ≤ 16 holds (|acc| ≤ 8·cols), so the three
+    // remaining planes are provably skippable — the savings are
+    // deterministic, not input-dependent.
+    let mut plain = ideal_pooled_engine(4, 1, 16.0, false);
+    let mut gated = ideal_pooled_engine(4, 1, 16.0, true);
+    let logits_plain = plain.infer_batch(&imgs).unwrap();
+    let logits_gated = gated.infer_batch(&imgs).unwrap();
+    assert_eq!(logits_gated, logits_plain, "exact ET must not change served logits");
+    let sp = plain.conversion_stats();
+    let sg = gated.conversion_stats();
+    assert!(
+        sg.conversions < sp.conversions,
+        "gated {} !< ungated {}",
+        sg.conversions,
+        sp.conversions
+    );
+    assert!(
+        sg.energy_fj < sp.energy_fj,
+        "gated energy {} !< ungated {}",
+        sg.energy_fj,
+        sp.energy_fj
+    );
+    assert!(sg.cycles < sp.cycles);
+    assert_eq!(sp.gated, 0);
+}
+
+/// Gated-ET sweep (EXPERIMENTS.md §Pool): as the exact-ET threshold
+/// widens, conversions and conversion energy shrink monotonically,
+/// per-row gating shows up in the ledger, and the soft-thresholded
+/// outputs stay identical to the ungated transform at every rung.
+#[test]
+fn gated_et_sweep_is_monotone_and_output_preserving() {
+    let spec = PoolSpec {
+        n_arrays: 4,
+        adc_bits: 5,
+        mode: ImmersedMode::Sar,
+        asymmetric: false,
+        threads: 1,
+    };
+    let matrix = SignMatrix::walsh(32);
+    let mk = |t_et: Option<f32>| {
+        let mut fab = Rng::new(3);
+        let mut eng = BitplaneEngine::new(
+            Crossbar::new(matrix.clone(), CrossbarConfig::ideal(), &mut fab),
+            4,
+        )
+        .with_pool(CimArrayPool::new(&matrix, CrossbarConfig::ideal(), spec, &mut fab));
+        if let Some(t) = t_et {
+            eng.early_term = Some(adcim::cim::EarlyTermination::exact(t));
+        }
+        eng
+    };
+    let x: Vec<u32> = (0..32).map(|i| ((i * 5 + 3) % 16) as u32).collect();
+    let plain = mk(None).transform(&x, &mut Rng::new(1));
+
+    let ladder = [0.0f32, 2.0, 4.0, 8.0, 16.0];
+    let mut prev: Option<adcim::cim::ConversionStats> = None;
+    let mut sweep = Vec::new();
+    for t in ladder {
+        let mut eng = mk(Some(t));
+        let out = eng.transform(&x, &mut Rng::new(1));
+        // Exact ET preserves the soft-thresholded output at the dead
+        // band T·cols (transform units).
+        for (r, (a, b)) in out.values.iter().zip(&plain.values).enumerate() {
+            let ya = adcim::wht::soft_threshold(*a, t * 32.0);
+            let yb = adcim::wht::soft_threshold(*b, t * 32.0);
+            assert_eq!(ya, yb, "T={t} row {r}: gated {a} vs plain {b}");
+        }
+        if let Some(p) = &prev {
+            assert!(
+                out.conv.conversions <= p.conversions,
+                "T={t}: conversions rose {} -> {}",
+                p.conversions,
+                out.conv.conversions
+            );
+            assert!(
+                out.conv.energy_fj <= p.energy_fj,
+                "T={t}: energy rose {} -> {}",
+                p.energy_fj,
+                out.conv.energy_fj
+            );
+        }
+        let pool = eng.pool().unwrap();
+        assert_eq!(
+            pool.mavs_produced(),
+            pool.mavs_digitized() + pool.mavs_gated(),
+            "T={t}: every MAV is digitized or gated"
+        );
+        sweep.push(out.conv);
+        prev = Some(out.conv);
+    }
+    let first = &sweep[0];
+    let last = sweep.last().unwrap();
+    assert!(last.conversions < first.conversions, "widest dead band must gate work");
+    assert!(last.energy_fj < first.energy_fj);
+    assert_eq!(first.gated, 0, "T=0 gates nothing");
+    assert!(
+        sweep.iter().any(|s| s.gated > 0),
+        "some rung must show per-row gating (not just whole-plane skips): {sweep:?}"
+    );
 }
 
 /// The ADC-free 1-bit default path (pool: None) still reconstructs via

@@ -9,18 +9,67 @@
 #      (python3 json.tool), so a corrupted perf trajectory is caught even
 #      on machines without Rust.
 #
-# Usage: scripts/ci.sh [extra cargo test args...]
+# Flags:
+#   --require-toolchain  exit non-zero when cargo is missing instead of
+#                        warn-and-pass. Hosted CI always passes this so
+#                        "toolchain absent" can never masquerade as a
+#                        green gate.
+#   --smoke-bench        run one short hotpath bench iteration
+#                        (BENCH_SMOKE=1, JSON to a temp path) and verify
+#                        the fresh run still covers every case recorded
+#                        in the committed BENCH_hotpath.json — a perf
+#                        case silently dropped or a bench that no longer
+#                        builds/runs fails CI. Requires the toolchain.
+#
+# Usage: scripts/ci.sh [--require-toolchain] [--smoke-bench] [extra cargo test args...]
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 
+REQUIRE_TOOLCHAIN=0
+SMOKE_BENCH=0
+EXTRA_ARGS=()
+for arg in "$@"; do
+  case "$arg" in
+    --require-toolchain) REQUIRE_TOOLCHAIN=1 ;;
+    --smoke-bench) SMOKE_BENCH=1 ;;
+    *) EXTRA_ARGS+=("$arg") ;;
+  esac
+done
+
 if command -v cargo >/dev/null 2>&1; then
   cd "$ROOT/rust"
   cargo build --release
-  cargo test -q "$@"
+  cargo test -q "${EXTRA_ARGS[@]+"${EXTRA_ARGS[@]}"}"
+
+  if [[ "$SMOKE_BENCH" == "1" ]]; then
+    SMOKE_JSON="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
+    trap 'rm -f "$SMOKE_JSON"' EXIT
+    echo "ci.sh: smoke bench (BENCH_SMOKE=1, JSON -> $SMOKE_JSON)"
+    BENCH_SMOKE=1 BENCH_JSON="$SMOKE_JSON" cargo bench --bench hotpath
+    if command -v python3 >/dev/null 2>&1; then
+      python3 - "$ROOT/BENCH_hotpath.json" "$SMOKE_JSON" <<'PY'
+import json, sys
+committed = {r["name"] for r in json.load(open(sys.argv[1]))["results"]}
+fresh = {r["name"] for r in json.load(open(sys.argv[2]))["results"]}
+missing = sorted(committed - fresh)
+if missing:
+    sys.exit("ci.sh: smoke bench no longer covers committed cases: %s" % missing)
+print("ci.sh: smoke bench covers all %d committed cases" % len(committed))
+PY
+    else
+      echo "ci.sh: note - python3 unavailable, skipped smoke/committed case comparison" >&2
+    fi
+  fi
   cd "$ROOT"
+elif [[ "$REQUIRE_TOOLCHAIN" == "1" ]]; then
+  echo "ci.sh: ERROR - --require-toolchain set but no cargo on PATH" >&2
+  exit 1
 else
   echo "ci.sh: WARNING - no Rust toolchain on PATH; tier-1 gate skipped" >&2
+  if [[ "$SMOKE_BENCH" == "1" ]]; then
+    echo "ci.sh: WARNING - --smoke-bench needs cargo; skipped" >&2
+  fi
 fi
 
 if command -v python3 >/dev/null 2>&1; then
