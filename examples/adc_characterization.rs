@@ -22,7 +22,8 @@ fn main() {
         let lin = linearity(&mut adc, 32, &mut rng);
         let c = adc.convert(0.6180, &mut rng);
         println!(
-            "{:<26} cycles {:>2}  comparisons {:>2}  energy {:>7.1} fJ  |DNL|max {:.3}  |INL|max {:.3}",
+            "{:<26} cycles {:>2}  comparisons {:>2}  energy {:>7.1} fJ  |DNL|max {:.3}  \
+             |INL|max {:.3}",
             format!("{mode:?}"),
             c.cycles,
             c.comparisons,
@@ -34,8 +35,15 @@ fn main() {
 
     // Staircase sample (Fig 12a).
     println!("\nstaircase (every 16th point):");
-    let mut adc =
-        ImmersedAdc::sample(bits, 1.0, ImmersedMode::Hybrid { flash_bits: 2 }, 32, 20.0, &noise, &mut rng);
+    let mut adc = ImmersedAdc::sample(
+        bits,
+        1.0,
+        ImmersedMode::Hybrid { flash_bits: 2 },
+        32,
+        20.0,
+        &noise,
+        &mut rng,
+    );
     for (v, code) in staircase(&mut adc, 128, &mut rng).iter().step_by(16) {
         let stars = "#".repeat(*code as usize / 2);
         println!("  {v:.3} V  {code:>3}  {stars}");

@@ -6,19 +6,20 @@
 //! path, and once through the **collaborative digitization pool** — the
 //! Fig 11 fabricated-chip shape: four 16×32 arrays taking turns
 //! computing MAVs and digitizing their neighbour's through
-//! memory-immersed converters. Reports accuracy, latency, throughput
-//! and the pool's per-conversion metrics (comparisons/conversion,
-//! cycles, fJ per request).
+//! memory-immersed converters — and finally through the **frequency-
+//! domain sensor frontend**: the same deluge (padded with blank filler
+//! frames) is sequency-compressed, triaged keep/summarize/drop, and the
+//! survivors served as native compressed payloads. Reports accuracy,
+//! latency, throughput, the pool's per-conversion metrics and the
+//! frontend's byte-reduction counters.
 //!
-//! NOTE: this file is an illustrative driver, not a registered cargo
-//! example target (it lives at the repo root, outside the `rust/`
-//! package, because the digital section needs the off-by-default `xla`
-//! feature plus `make artifacts`). To run it, copy into
-//! `rust/examples/` on a machine with PJRT and build with
-//! `--features xla`; the analog and pooled sections also run without
-//! `xla` if the digital block is removed. The same pooled serving path
-//! is driven artifact-free by `rust/tests/pool_serving.rs` and by
-//! `adcim serve --engine analog --pool 4`.
+//! NOTE: this is a registered cargo example (rust/Cargo.toml
+//! `[[example]]`, path `../examples/edge_pipeline.rs`), so tier-1 CI
+//! compiles it; *running* it needs `make artifacts`, and the digital
+//! section additionally needs a build with `--features xla`. The same
+//! serving paths are driven artifact-free by
+//! `rust/tests/pool_serving.rs`, `rust/tests/frontend_serving.rs`, and
+//! `adcim serve --engine analog --pool 4 --frontend`.
 
 use std::time::{Duration, Instant};
 
@@ -30,8 +31,12 @@ use adcim::coordinator::DigitalEngine;
 use adcim::coordinator::{
     AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
 };
+use adcim::frontend::{
+    CodecParams, FrontendConfig, IngestDecision, RetentionPolicy, Selection, SensorFrontend,
+};
 use adcim::nn::Dataset;
 use adcim::runtime::Artifacts;
+use adcim::util::Rng;
 
 const FRAMES: usize = 512;
 
@@ -93,6 +98,107 @@ fn main() -> anyhow::Result<()> {
         .collect();
     run_load("analog (4-array collaborative digitization pool)", pooled, &data, &manifest)?;
 
+    // ---- the deluge through the sensor frontend ----------------------
+    // Same digit frames plus 50% blank filler; the frontend compresses
+    // each to its top-32 sequency coefficients at 8 bits, triages, and
+    // only the survivors reach the queue — as compressed payloads.
+    let fe_engines: Vec<Box<dyn InferenceEngine>> = (0..2)
+        .map(|w| {
+            Box::new(
+                AnalogEngine::load(
+                    &artifacts,
+                    CrossbarConfig::default(),
+                    None,
+                    manifest.input_bits,
+                    w as u64,
+                )
+                .unwrap(),
+            ) as Box<_>
+        })
+        .collect();
+    run_frontend_load(fe_engines, &data, &manifest)?;
+
+    Ok(())
+}
+
+/// Fourth stage: serve a mixed deluge through the frequency-domain
+/// frontend and print `FrontendStats` next to the serving metrics.
+fn run_frontend_load(
+    engines: Vec<Box<dyn InferenceEngine>>,
+    data: &Dataset,
+    manifest: &adcim::runtime::Manifest,
+) -> anyhow::Result<()> {
+    println!("\n== analog + frequency-domain sensor frontend ==");
+    let cfg = ServerConfig {
+        workers: engines.len(),
+        batch: manifest.batch,
+        batch_deadline_us: 2000,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::LeastLoaded)?;
+    let params = CodecParams::new(1, manifest.input, 8, 8)
+        .map_err(|e| anyhow::anyhow!("codec: {e}"))?;
+    let mut frontend = SensorFrontend::new(FrontendConfig {
+        policy: RetentionPolicy::triage_default(),
+        ..FrontendConfig::new(params, Selection::TopK(32))
+    });
+
+    let mut rng = Rng::new(0xb1a);
+    let mut submitted = 0u64;
+    let mut offered = 0u64;
+    for (i, img) in data.images.iter().enumerate() {
+        let flat = img.clone().reshape(&[manifest.input]);
+        // Real frame, then one blank filler frame (ids interleave 2:1).
+        for (slot, frame) in [
+            flat.data().to_vec(),
+            (0..manifest.input).map(|_| (0.5 + 0.01 * rng.normal()) as f32).collect(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let id = 2 * i as u64 + slot as u64;
+            offered += 1;
+            if let IngestDecision::Keep(cf) = frontend.ingest(&frame, id, (i % 8) as u32) {
+                if server.submit(InferenceRequest::compressed(id, (i % 8) as u32, cf)) {
+                    submitted += 1;
+                }
+            }
+        }
+    }
+    let mut correct = 0usize;
+    let mut digits = 0u64;
+    let mut got = 0u64;
+    while got < submitted {
+        match server.recv_response(Duration::from_secs(30)) {
+            Some(r) => {
+                // Even ids are real digit frames; blanks have no label.
+                if r.id % 2 == 0 {
+                    digits += 1;
+                    if r.class == data.labels[(r.id / 2) as usize] {
+                        correct += 1;
+                    }
+                }
+                got += 1;
+            }
+            None => break,
+        }
+    }
+    server.record_frontend(&frontend.take_stats());
+    let snap = server.shutdown();
+    println!("   {snap}");
+    println!(
+        "   deluge: {offered} frames offered, {submitted} served compressed, \
+         accuracy on kept digits {:.3} ({correct}/{digits})",
+        correct as f64 / digits.max(1) as f64
+    );
+    println!(
+        "   ingest bytes {} -> {} ({:.1}x reduction)",
+        snap.frontend.bytes_in,
+        snap.frontend.bytes_out,
+        snap.frontend.compression_ratio()
+    );
+    anyhow::ensure!(got == submitted, "lost responses: {got}/{submitted}");
     Ok(())
 }
 

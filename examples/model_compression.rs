@@ -19,10 +19,18 @@ fn main() {
     {
         let s = compression_summary(&table);
         println!("{name}:");
-        println!("  params: {:>9} -> {:>9}  ({:.1}% total reduction, {:.1}% of features)",
-            s.params_base, s.params_bwht, s.reduction_total * 100.0, s.reduction_features * 100.0);
-        println!("  MACs:   {:>9} -> {:>9} dense-crossbar ops ({:.2}x — why the paper builds the analog accelerator)",
-            s.macs_base, s.macs_bwht_dense, s.mac_increase_dense);
+        println!(
+            "  params: {:>9} -> {:>9}  ({:.1}% total reduction, {:.1}% of features)",
+            s.params_base,
+            s.params_bwht,
+            s.reduction_total * 100.0,
+            s.reduction_features * 100.0
+        );
+        println!(
+            "  MACs:   {:>9} -> {:>9} dense-crossbar ops ({:.2}x — why the paper builds \
+             the analog accelerator)",
+            s.macs_base, s.macs_bwht_dense, s.mac_increase_dense
+        );
         println!();
     }
 

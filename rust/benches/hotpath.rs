@@ -14,7 +14,8 @@ use adcim::analog::{Comparator, NoiseModel, OperatingPoint, PhaseTimer, SupplyMo
 use adcim::cim::{
     BitplaneEngine, BitVec, CimArrayPool, Crossbar, CrossbarConfig, PoolSpec, SignMatrix,
 };
-use adcim::coordinator::{AnalogEngine, InferenceEngine};
+use adcim::coordinator::{AnalogEngine, FramePayload, InferenceEngine};
+use adcim::frontend::{CodecParams, FrameEncoder, Selection};
 use adcim::nn::bwht_layer::BwhtExec;
 use adcim::nn::layer::dot_f32;
 use adcim::nn::model::bwht_mlp;
@@ -336,6 +337,47 @@ fn main() {
     set.run("digit MLP forward (float)", move || {
         black_box(model.forward_inference(&imgc));
     });
+
+    // Sensor-frontend encode: 8-channel 256-sample frames (the ISSUE-4
+    // deluge shape) through snap + sequency FWHT + global top-K + pack.
+    for k in [16usize, 64] {
+        let params = CodecParams::new(8, 256, 8, 8).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::TopK(k));
+        let frame: Vec<f32> = (0..params.dense_len())
+            .map(|i| 0.5 + 0.4 * ((i as f32) * 0.13).sin())
+            .collect();
+        set.run(&format!("frontend encode 256x8ch topk{k}"), move || {
+            black_box(enc.encode(black_box(&frame), 0));
+        });
+    }
+
+    // Compressed-domain serving: 32 lossy top-16 frames through the
+    // analog digit MLP's folded first layer (no reconstruction).
+    {
+        let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 7,
+                pool: None,
+            })
+        });
+        let mut engine = AnalogEngine::from_model(model, 144);
+        let params = CodecParams::new(1, 144, 8, 8).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::TopK(16));
+        let payloads: Vec<FramePayload> = (0..32)
+            .map(|i| {
+                let frame: Vec<f32> =
+                    (0..144).map(|j| ((i * j + i) % 9) as f32 / 9.0).collect();
+                FramePayload::Compressed(enc.encode(&frame, i as u64))
+            })
+            .collect();
+        set.run("analog MLP compressed-serve b=32 topk16", move || {
+            black_box(engine.infer_payloads(&payloads).unwrap());
+        });
+    }
 
     // Batched analog inference: thread-sharded engine, same model/seed.
     for threads in [1usize, 4] {

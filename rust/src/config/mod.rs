@@ -86,6 +86,25 @@ pub struct ServerConfig {
     /// 1 = inline sequential (default). Results are thread-count
     /// invariant by the per-plane RNG-stream contract.
     pub pool_threads: usize,
+    /// Run ingest through the frequency-domain sensor frontend
+    /// (`adcim serve --frontend`): frames are sequency-encoded,
+    /// triaged, and served compressed.
+    pub frontend: bool,
+    /// Frontend top-K coefficient budget per frame; 0 keeps every
+    /// non-zero coefficient.
+    pub frontend_topk: usize,
+    /// Frontend selection rule override (`all`, `topK`, `eF` — see
+    /// `frontend::Selection::parse`); empty derives from
+    /// `frontend_topk`.
+    pub frontend_select: String,
+    /// Kept-coefficient precision in bits; 0 = lossless f32
+    /// (zero-compression mode, bit-exact serving).
+    pub codec_bits: u8,
+    /// Sensor grid resolution the frontend snaps frames to.
+    pub sensor_bits: u8,
+    /// Retention policy name: "keep" (compress only) or "triage"
+    /// (keep / summarize / drop scoring).
+    pub retain: String,
 }
 
 impl Default for ServerConfig {
@@ -102,6 +121,12 @@ impl Default for ServerConfig {
             adc_bits: 0,
             asymmetric_adc: false,
             pool_threads: 1,
+            frontend: false,
+            frontend_topk: 32,
+            frontend_select: String::new(),
+            codec_bits: 8,
+            sensor_bits: 8,
+            retain: "keep".to_string(),
         }
     }
 }
@@ -147,6 +172,33 @@ impl ServerConfig {
                 .get_int("server", "pool_threads")
                 .unwrap_or(d.pool_threads as i64)
                 .clamp(0, 1024) as usize,
+            frontend: t.get_bool("server", "frontend").unwrap_or(d.frontend),
+            // Negative budgets mean "keep all" (0) instead of wrapping.
+            frontend_topk: t
+                .get_int("server", "frontend_topk")
+                .unwrap_or(d.frontend_topk as i64)
+                .max(0) as usize,
+            frontend_select: t.get_str("server", "frontend_select").unwrap_or(d.frontend_select),
+            // Same out-of-range discipline as adc_bits: pin to 255 so
+            // CodecParams::new rejects loudly instead of serving a
+            // silently wrapped precision.
+            codec_bits: {
+                let raw = t.get_int("server", "codec_bits").unwrap_or(d.codec_bits as i64);
+                if (0..=255).contains(&raw) {
+                    raw as u8
+                } else {
+                    u8::MAX
+                }
+            },
+            sensor_bits: {
+                let raw = t.get_int("server", "sensor_bits").unwrap_or(d.sensor_bits as i64);
+                if (0..=255).contains(&raw) {
+                    raw as u8
+                } else {
+                    u8::MAX
+                }
+            },
+            retain: t.get_str("server", "retain").unwrap_or(d.retain),
         }
     }
 }
@@ -192,6 +244,30 @@ mod tests {
         assert_eq!(s.pool_threads, 4);
         let d = ServerConfig::from_toml(&TomlLite::default());
         assert_eq!(d.pool_threads, 1, "pool fan-out defaults to sequential");
+    }
+
+    #[test]
+    fn from_toml_frontend_settings() {
+        let t = TomlLite::parse(
+            "[server]\nfrontend = true\nfrontend_topk = 16\ncodec_bits = 6\n\
+             sensor_bits = 10\nretain = \"triage\"\nfrontend_select = \"e0.95\"\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert!(s.frontend);
+        assert_eq!(s.frontend_topk, 16);
+        assert_eq!(s.frontend_select, "e0.95");
+        assert_eq!(s.codec_bits, 6);
+        assert_eq!(s.sensor_bits, 10);
+        assert_eq!(s.retain, "triage");
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert!(!d.frontend, "frontend defaults off");
+        assert_eq!(d.retain, "keep");
+        // Out-of-range values pin to invalid (rejected downstream).
+        let t = TomlLite::parse("[server]\ncodec_bits = 300\nfrontend_topk = -4\n").unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.codec_bits, u8::MAX);
+        assert_eq!(s.frontend_topk, 0);
     }
 
     #[test]

@@ -9,16 +9,31 @@
 //!   and analog non-idealities. Batches shard across std worker threads
 //!   with per-sample deterministic noise streams, so results are
 //!   identical at any thread count.
+//!
+//! Compressed serving: workers hand engines [`FramePayload`]s. The
+//! default path decodes each [`crate::frontend::CompressedFrame`] to
+//! its dense form (bit-exact for lossless frames) and serves as usual;
+//! the analog engine additionally folds its first Dense layer into the
+//! sequency domain once and serves *lossy* compressed frames straight
+//! from their kept coefficients — `O(kept · hidden)` instead of
+//! decode + dense matvec, reconstructing nothing.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cim::{ConversionStats, CrossbarConfig, EarlyTermination, PoolSpec};
+use crate::frontend::codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
 use crate::nn::bwht_layer::BwhtExec;
 use crate::nn::model::bwht_mlp_from_weights;
 use crate::nn::{Sequential, Tensor};
 use crate::runtime::Artifacts;
 #[cfg(feature = "xla")]
 use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::wht::fwht::walsh_to_hadamard_index;
+use crate::wht::fwht_inplace;
+
+use super::request::FramePayload;
 
 /// A batch-inference engine.
 pub trait InferenceEngine: Send {
@@ -32,6 +47,14 @@ pub trait InferenceEngine: Send {
     /// records per-batch deltas into [`super::Metrics`].
     fn conversion_stats(&mut self) -> ConversionStats {
         ConversionStats::default()
+    }
+    /// Logits for a batch of raw/compressed frame payloads. The default
+    /// decodes every compressed frame to its dense form and defers to
+    /// [`InferenceEngine::infer_batch`]; engines with a
+    /// transform-domain fast path override ([`AnalogEngine`]).
+    fn infer_payloads(&mut self, frames: &[FramePayload]) -> Result<Vec<Vec<f32>>> {
+        let images: Vec<Vec<f32>> = frames.iter().map(FramePayload::to_dense).collect();
+        self.infer_batch(&images)
     }
 }
 
@@ -128,6 +151,83 @@ pub struct AnalogEngine {
     /// Next sample stream offset, advanced per inferred sample so
     /// repeated `infer_batch` calls keep drawing fresh noise.
     next_stream: u64,
+    /// Decode buffers for the sequential compressed path (shards build
+    /// their own).
+    decode_scratch: DecodeScratch,
+    /// Serve lossy compressed frames transform-domain through the
+    /// folded first layer instead of decoding (on by default; lossless
+    /// frames always take the bit-exact decode fallback).
+    compressed_fast_path: bool,
+    /// Lazily folded first Dense layer, keyed by the frame geometry it
+    /// was built for.
+    folded: Option<(CodecParams, Arc<FoldedFirstLayer>)>,
+}
+
+/// The first Dense layer folded into the sequency domain.
+///
+/// A decoded channel is `x_ch = H·h_ch / M` (Hadamard-order scatter of
+/// the kept coefficients, inverse transform). For a first layer
+/// `y = W·x + b` the per-coefficient fold is
+/// `V[ch·M + h][o] = fwht(pad(W_row_chunk))[h] / M`, so serving a
+/// compressed frame is `y = b + Σ_kept value · V[col]` — one
+/// `hidden`-long axpy per kept coefficient, no reconstruction. Numerics
+/// differ from decode-then-matvec by float reassociation only, which is
+/// why the fold applies to *lossy* frames (already carrying quantization
+/// error) while lossless frames keep the bit-exact decode fallback.
+struct FoldedFirstLayer {
+    /// Geometry the fold was built for (codec/sensor bits ignored).
+    params: CodecParams,
+    hidden: usize,
+    /// Column-major folded weights: `v[col·hidden .. (col+1)·hidden]`
+    /// for coefficient-space column `col = ch·block + hadamard_index`.
+    v: Vec<f32>,
+    bias: Vec<f32>,
+    /// sequency → Hadamard index map for one block.
+    had: Vec<u32>,
+}
+
+impl FoldedFirstLayer {
+    /// Fold `model`'s first layer for `params`' geometry; `None` when
+    /// the model does not start with a Dense of the matching input dim.
+    fn build(model: &Sequential, input: usize, params: CodecParams) -> Option<Self> {
+        if params.dense_len() != input {
+            return None;
+        }
+        let dense = model.first_layer_dense()?;
+        if dense.in_dim != input {
+            return None;
+        }
+        let hidden = dense.out_dim;
+        let block = params.block();
+        let space = params.coeff_space();
+        let w = dense.weights();
+        let mut v = vec![0.0f32; space * hidden];
+        let mut row = vec![0.0f32; block];
+        let inv = 1.0 / block as f32;
+        for o in 0..hidden {
+            for ch in 0..params.channels {
+                row.iter_mut().for_each(|x| *x = 0.0);
+                let base = o * input + ch * params.samples;
+                row[..params.samples].copy_from_slice(&w[base..base + params.samples]);
+                fwht_inplace(&mut row);
+                for h in 0..block {
+                    v[(ch * block + h) * hidden + o] = row[h] * inv;
+                }
+            }
+        }
+        let bits = block.trailing_zeros();
+        let had = (0..block).map(|s| walsh_to_hadamard_index(s, bits) as u32).collect();
+        Some(FoldedFirstLayer { params, hidden, v, bias: dense.bias().to_vec(), had })
+    }
+
+    /// Does this fold serve the given frame? Geometry must match and
+    /// the frame must be lossy (lossless frames promise bit-exact
+    /// serving, which only the decode fallback provides).
+    fn matches(&self, cf: &CompressedFrame) -> bool {
+        cf.params.codec_bits != LOSSLESS
+            && cf.params.channels == self.params.channels
+            && cf.params.samples == self.params.samples
+    }
 }
 
 impl AnalogEngine {
@@ -159,12 +259,23 @@ impl AnalogEngine {
             shard_term: (0, 0),
             shard_conv: ConversionStats::default(),
             next_stream: 0,
+            decode_scratch: DecodeScratch::default(),
+            compressed_fast_path: true,
+            folded: None,
         }
     }
 
     /// Set the `infer_batch` worker-thread count (0 = auto-detect).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Enable/disable the transform-domain compressed fast path
+    /// (default on). Off forces every compressed frame through the
+    /// decode fallback — useful to pin fast-path vs fallback agreement.
+    pub fn with_compressed_fast_path(mut self, on: bool) -> Self {
+        self.compressed_fast_path = on;
         self
     }
 
@@ -228,29 +339,87 @@ impl AnalogEngine {
         model.for_each_bwht(|b| b.set_analog_stream(stream));
         Ok(model.forward_inference(&Tensor::vec1(img)).data().to_vec())
     }
-}
 
-impl InferenceEngine for AnalogEngine {
-    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        if images.is_empty() {
+    /// Serve one compressed frame transform-domain: fold the kept
+    /// coefficients through the pre-built first layer, then run the
+    /// remaining layers as usual (stream pinned like [`Self::infer_one`],
+    /// so analog noise is identical either way).
+    fn infer_folded(
+        model: &mut Sequential,
+        folded: &FoldedFirstLayer,
+        cf: &CompressedFrame,
+        stream: u64,
+    ) -> Result<Vec<f32>> {
+        model.for_each_bwht(|b| b.set_analog_stream(stream));
+        let mut pre = folded.bias.clone();
+        let block = folded.params.block();
+        let hidden = folded.hidden;
+        cf.for_each_coeff(|ch, s, value| {
+            let col = ch * block + folded.had[s] as usize;
+            let wcol = &folded.v[col * hidden..(col + 1) * hidden];
+            for (p, w) in pre.iter_mut().zip(wcol) {
+                *p += value * w;
+            }
+        });
+        let mut cur = Tensor::vec1(&pre);
+        for l in model.layers_mut()[1..].iter_mut() {
+            cur = l.forward_inference(&cur);
+        }
+        Ok(cur.data().to_vec())
+    }
+
+    /// The folded first layer to serve `frames` with, if the fast path
+    /// is on, some frame is lossy-compressed, and the model starts with
+    /// a matching Dense (cached per geometry).
+    fn folded_for(&mut self, frames: &[FramePayload]) -> Option<Arc<FoldedFirstLayer>> {
+        if !self.compressed_fast_path {
+            return None;
+        }
+        let params = frames.iter().find_map(|p| match p {
+            FramePayload::Compressed(cf) if cf.params.codec_bits != LOSSLESS => Some(cf.params),
+            _ => None,
+        })?;
+        if let Some((cached, f)) = &self.folded {
+            if cached.channels == params.channels && cached.samples == params.samples {
+                return Some(f.clone());
+            }
+        }
+        let f = Arc::new(FoldedFirstLayer::build(&self.model, self.input, params)?);
+        self.folded = Some((params, f.clone()));
+        Some(f)
+    }
+
+    /// Shard `items` across worker threads (inline when `threads == 1`),
+    /// running `run` per item with the item's global stream id — the
+    /// engine's one batch loop, shared by the raw and payload paths.
+    /// Per-shard termination/conversion counters merge back against the
+    /// prototype baseline exactly as before; results are thread-count
+    /// invariant by the per-sample stream contract.
+    fn infer_sharded<T, F>(&mut self, items: &[T], run: F) -> Result<Vec<Vec<f32>>>
+    where
+        T: Sync,
+        F: Fn(&mut Sequential, &mut DecodeScratch, &T, u64) -> Result<Vec<f32>> + Sync,
+    {
+        if items.is_empty() {
             return Ok(Vec::new());
         }
         let threads = match self.threads {
             0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             t => t,
         }
-        .clamp(1, images.len());
+        .clamp(1, items.len());
         let stream0 = self.next_stream;
-        self.next_stream += images.len() as u64;
+        self.next_stream += items.len() as u64;
 
         if threads == 1 {
-            return images
+            let mut scratch = std::mem::take(&mut self.decode_scratch);
+            let out: Result<Vec<Vec<f32>>> = items
                 .iter()
                 .enumerate()
-                .map(|(i, img)| {
-                    Self::infer_one(&mut self.model, self.input, img, stream0 + i as u64)
-                })
+                .map(|(i, item)| run(&mut self.model, &mut scratch, item, stream0 + i as u64))
                 .collect();
+            self.decode_scratch = scratch;
+            return out;
         }
 
         // Contiguous shards, one deep model clone per worker thread.
@@ -261,24 +430,25 @@ impl InferenceEngine for AnalogEngine {
         // re-fabricating them (SignMatrix + comparator sampling) per
         // batch.
         self.model.for_each_bwht(|b| b.prepare_analog());
-        let chunk = images.len().div_ceil(threads);
-        let input = self.input;
+        let chunk = items.len().div_ceil(threads);
         let model = &self.model;
+        let run = &run;
         let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)>> =
             std::thread::scope(|scope| {
-                let handles: Vec<_> = images
+                let handles: Vec<_> = items
                     .chunks(chunk)
                     .enumerate()
-                    .map(|(shard, shard_images)| {
+                    .map(|(shard, shard_items)| {
                         let mut shard_model = model.clone();
                         let first_stream = stream0 + (shard * chunk) as u64;
                         scope.spawn(move || {
-                            let mut out = Vec::with_capacity(shard_images.len());
-                            for (i, img) in shard_images.iter().enumerate() {
-                                out.push(Self::infer_one(
+                            let mut scratch = DecodeScratch::default();
+                            let mut out = Vec::with_capacity(shard_items.len());
+                            for (i, item) in shard_items.iter().enumerate() {
+                                out.push(run(
                                     &mut shard_model,
-                                    input,
-                                    img,
+                                    &mut scratch,
+                                    item,
                                     first_stream + i as u64,
                                 )?);
                             }
@@ -310,7 +480,7 @@ impl InferenceEngine for AnalogEngine {
             });
             (p, s, c)
         };
-        let mut all = Vec::with_capacity(images.len());
+        let mut all = Vec::with_capacity(items.len());
         for res in shard_results {
             let (logits, processed, skipped, conv) = res?;
             self.shard_term.0 += processed - base_p;
@@ -319,6 +489,37 @@ impl InferenceEngine for AnalogEngine {
             all.extend(logits);
         }
         Ok(all)
+    }
+}
+
+impl InferenceEngine for AnalogEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let input = self.input;
+        self.infer_sharded(images, |model, _scratch, img, stream| {
+            Self::infer_one(model, input, img, stream)
+        })
+    }
+
+    /// Compressed-domain serving: lossy frames take the folded fast
+    /// path (when the model starts with a matching Dense), everything
+    /// else — raw frames and lossless compressed frames — goes through
+    /// the zero-alloc decode fallback, which is bit-exact vs raw
+    /// serving at zero compression.
+    fn infer_payloads(&mut self, frames: &[FramePayload]) -> Result<Vec<Vec<f32>>> {
+        let input = self.input;
+        let folded = self.folded_for(frames);
+        self.infer_sharded(frames, move |model, scratch, payload, stream| match payload {
+            FramePayload::Raw(img) => Self::infer_one(model, input, img, stream),
+            FramePayload::Compressed(cf) => {
+                if let Some(f) = folded.as_deref() {
+                    if f.matches(cf) {
+                        return Self::infer_folded(model, f, cf, stream);
+                    }
+                }
+                let dense = scratch.decode(cf);
+                Self::infer_one(model, input, dense, stream)
+            }
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -375,6 +576,9 @@ impl InferenceEngine for MockEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontend::encoder::{FrameEncoder, Selection};
+    use crate::nn::model::bwht_mlp;
+    use crate::util::Rng;
 
     #[test]
     fn mock_engine_one_hots() {
@@ -382,5 +586,109 @@ mod tests {
         let out = e.infer_batch(&[vec![2.0, 0.0], vec![7.0, 0.0]]).unwrap();
         assert_eq!(out[0][2], 1.0);
         assert_eq!(out[1][3], 1.0); // 7 % 4
+    }
+
+    /// The trait's default payload path decodes and defers to
+    /// `infer_batch` — exercised through the mock.
+    #[test]
+    fn default_payload_path_decodes_for_plain_engines() {
+        let params = CodecParams::new(1, 4, 8, LOSSLESS).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::All);
+        let mut e = MockEngine { classes: 8, input: 4, delay: std::time::Duration::ZERO };
+        // Mock classifies image[0]; 1.0 survives the lossless round trip.
+        let cf = enc.encode(&[1.0, 0.25, 0.5, 0.75], 0);
+        let out = e
+            .infer_payloads(&[
+                FramePayload::Raw(vec![3.0, 0.0, 0.0, 0.0]),
+                FramePayload::Compressed(cf),
+            ])
+            .unwrap();
+        assert_eq!(out[0][3], 1.0);
+        assert_eq!(out[1][1], 1.0);
+    }
+
+    fn analog_digit_engine(seed: u64) -> AnalogEngine {
+        let mut rng = Rng::new(seed);
+        let mut model = bwht_mlp(64, 4, 16, &mut rng);
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 42,
+                pool: None,
+            })
+        });
+        AnalogEngine::from_model(model, 64)
+    }
+
+    fn frames(n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|i| (0..64).map(|j| ((i * j + 3 * i) % 9) as f32 / 9.0).collect()).collect()
+    }
+
+    /// Lossless compressed payloads serve bit-identically to their
+    /// (snapped) raw frames — the decode fallback's exactness contract,
+    /// analog noise streams included.
+    #[test]
+    fn lossless_payload_serving_is_bit_exact_vs_raw() {
+        let params = CodecParams::new(1, 64, 8, LOSSLESS).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::All);
+        let imgs = frames(6);
+        let snapped: Vec<Vec<f32>> =
+            imgs.iter().map(|f| f.iter().map(|&v| params.snap(v)).collect()).collect();
+        let payloads: Vec<FramePayload> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, f)| FramePayload::Compressed(enc.encode(f, i as u64)))
+            .collect();
+        let mut raw_engine = analog_digit_engine(1);
+        let want = raw_engine.infer_batch(&snapped).unwrap();
+        let mut c_engine = analog_digit_engine(1);
+        let got = c_engine.infer_payloads(&payloads).unwrap();
+        assert_eq!(got, want, "zero-compression serving must be bit-exact");
+    }
+
+    /// The folded transform-domain fast path agrees with the decode
+    /// fallback on lossy frames up to float reassociation.
+    #[test]
+    fn folded_fast_path_tracks_decode_fallback() {
+        let params = CodecParams::new(1, 64, 8, 8).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::TopK(24));
+        let payloads: Vec<FramePayload> = frames(6)
+            .iter()
+            .enumerate()
+            .map(|(i, f)| FramePayload::Compressed(enc.encode(f, i as u64)))
+            .collect();
+        let mut fast = analog_digit_engine(1);
+        let mut slow = analog_digit_engine(1).with_compressed_fast_path(false);
+        let a = fast.infer_payloads(&payloads).unwrap();
+        let b = slow.infer_payloads(&payloads).unwrap();
+        for (i, (la, lb)) in a.iter().zip(&b).enumerate() {
+            for (x, y) in la.iter().zip(lb) {
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "sample {i}: folded {x} vs decoded {y}"
+                );
+            }
+        }
+    }
+
+    /// Payload batches are worker-thread-count invariant like raw ones.
+    #[test]
+    fn payload_serving_is_thread_count_invariant() {
+        let params = CodecParams::new(1, 64, 8, 6).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::TopK(16));
+        let payloads: Vec<FramePayload> = frames(9)
+            .iter()
+            .enumerate()
+            .map(|(i, f)| FramePayload::Compressed(enc.encode(f, i as u64)))
+            .collect();
+        let mut base = analog_digit_engine(1);
+        let want = base.infer_payloads(&payloads).unwrap();
+        for threads in [2usize, 4] {
+            let mut e = analog_digit_engine(1).with_threads(threads);
+            let got = e.infer_payloads(&payloads).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 }

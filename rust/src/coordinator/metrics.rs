@@ -1,11 +1,14 @@
-//! Serving metrics: latency distribution, throughput, batch shapes, and
+//! Serving metrics: latency distribution, throughput, batch shapes,
 //! collaborative-digitization accounting (conversions, comparator
-//! decisions, cycles and fJ from the CiM array pool, per request).
+//! decisions, cycles and fJ from the CiM array pool, per request), and
+//! the ingest frontend's deluge-triage counters
+//! ([`crate::frontend::FrontendStats`]).
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cim::ConversionStats;
+use crate::frontend::FrontendStats;
 use crate::util::stats::Moments;
 
 /// Shared metrics (interior mutability; cheap enough off the hot loop).
@@ -24,6 +27,7 @@ struct Inner {
     started: Option<Instant>,
     finished: Option<Instant>,
     conv: ConversionStats,
+    frontend: FrontendStats,
 }
 
 /// Snapshot for reporting.
@@ -54,6 +58,9 @@ pub struct MetricsSnapshot {
     pub comparisons_per_conversion: f64,
     /// Conversion energy per completed request (fJ).
     pub energy_per_req_fj: f64,
+    /// Ingest-side frontend triage counters (all zero when serving
+    /// without `--frontend`).
+    pub frontend: FrontendStats,
 }
 
 impl Metrics {
@@ -88,6 +95,15 @@ impl Metrics {
             return;
         }
         self.inner.lock().unwrap().conv.merge(delta);
+    }
+
+    /// Fold frontend triage counters into the totals (the ingest side
+    /// reports deltas, e.g. via [`super::EdgeServer::record_frontend`]).
+    pub fn record_frontend(&self, delta: &FrontendStats) {
+        if delta.frames_in == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().frontend.merge(delta);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -125,6 +141,7 @@ impl Metrics {
             } else {
                 0.0
             },
+            frontend: g.frontend.clone(),
         }
     }
 }
@@ -152,6 +169,9 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.adc_cycles,
                 self.energy_per_req_fj
             )?;
+        }
+        if self.frontend.frames_in > 0 {
+            write!(f, " {}", self.frontend)?;
         }
         Ok(())
     }
@@ -218,5 +238,33 @@ mod tests {
         let line = format!("{s}");
         assert!(line.contains("conv=128"), "{line}");
         assert!(line.contains("gated=32"), "{line}");
+    }
+
+    #[test]
+    fn frontend_stats_reach_snapshot_and_display() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        let mut fe = FrontendStats {
+            frames_in: 10,
+            kept: 7,
+            summarized: 2,
+            dropped: 1,
+            bytes_in: 40_960,
+            bytes_out: 4_096,
+            ..Default::default()
+        };
+        fe.record_retained(0.95);
+        m.record_frontend(&fe);
+        m.record_frontend(&FrontendStats::default()); // no-op delta
+        let s = m.snapshot();
+        assert_eq!(s.frontend.frames_in, 10);
+        assert_eq!(s.frontend.kept, 7);
+        assert_eq!(s.frontend.bytes_out, 4_096);
+        let line = format!("{s}");
+        assert!(line.contains("frontend: in=10 kept=7"), "{line}");
+        assert!(line.contains("10.0x"), "{line}");
+        // Without frontend traffic the line stays clean.
+        let empty = Metrics::new().snapshot();
+        assert!(!format!("{empty}").contains("frontend"), "{empty}");
     }
 }

@@ -8,7 +8,11 @@
 //! + collaborative-ADC simulator). Rust owns the event loop, queues,
 //! metrics and backpressure; python never appears at serve time.
 //!
-//! - [`request`] — request/response types.
+//! - [`request`] — request/response types; a request carries a
+//!   [`FramePayload`] — a raw dense frame or a frontend-compressed
+//!   [`crate::frontend::CompressedFrame`] that rides the batcher/router
+//!   natively and is decoded (or served transform-domain) only at the
+//!   engine.
 //! - [`backpressure`] — bounded admission with load shedding.
 //! - [`batcher`] — deadline/size dynamic batcher (pure logic, testable
 //!   without threads).
@@ -21,7 +25,8 @@
 //!   arrays, with per-conversion energy/cycles/comparisons merged back
 //!   from worker shards.
 //! - [`metrics`] — latency/throughput accounting plus the pool's
-//!   per-request digitization energy in every `MetricsSnapshot`.
+//!   per-request digitization energy and the ingest frontend's
+//!   deluge-triage counters in every `MetricsSnapshot`.
 //! - [`server`] — thread-per-worker serving loop tying it together;
 //!   workers record per-batch conversion deltas into the metrics.
 
@@ -39,6 +44,6 @@ pub use batcher::{Batch, DynamicBatcher};
 pub use engine::DigitalEngine;
 pub use engine::{AnalogEngine, InferenceEngine};
 pub use metrics::Metrics;
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{FramePayload, InferenceRequest, InferenceResponse};
 pub use router::{Router, RoutingPolicy};
 pub use server::EdgeServer;

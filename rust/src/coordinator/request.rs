@@ -2,22 +2,80 @@
 
 use std::time::Instant;
 
-/// One inference request: a flattened sensor frame.
+use crate::frontend::codec::CompressedFrame;
+
+/// What a request carries: a dense sensor frame, or a frontend-encoded
+/// [`CompressedFrame`] that travels the batcher/router/worker path
+/// natively and is only reconstructed (or served transform-domain) at
+/// the engine.
+#[derive(Debug, Clone)]
+pub enum FramePayload {
+    /// Flattened dense frame, length = model input dim.
+    Raw(Vec<f32>),
+    /// Sequency-domain compressed frame (`frontend::codec`).
+    Compressed(CompressedFrame),
+}
+
+impl FramePayload {
+    /// Length of the dense frame this payload reconstructs to.
+    pub fn dense_len(&self) -> usize {
+        match self {
+            FramePayload::Raw(v) => v.len(),
+            FramePayload::Compressed(cf) => cf.params.dense_len(),
+        }
+    }
+
+    /// Bytes this payload occupies on the ingest path (raw f32 frame vs
+    /// the codec's wire size).
+    pub fn ingest_bytes(&self) -> usize {
+        match self {
+            FramePayload::Raw(v) => v.len() * 4,
+            FramePayload::Compressed(cf) => cf.encoded_bytes(),
+        }
+    }
+
+    /// Materialize the dense frame (reference path; engines with scratch
+    /// use `DecodeScratch` instead).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            FramePayload::Raw(v) => v.clone(),
+            FramePayload::Compressed(cf) => cf.decode(),
+        }
+    }
+}
+
+/// One inference request: a sensor frame (raw or compressed).
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     /// Unique id (assigned by the submitting side).
     pub id: u64,
     /// Originating sensor stream (router affinity / ordering key).
     pub stream: u32,
-    /// Flattened image, length = model input dim.
-    pub image: Vec<f32>,
+    /// The frame itself.
+    pub payload: FramePayload,
     /// Submission timestamp (latency accounting).
     pub submitted: Instant,
 }
 
 impl InferenceRequest {
+    /// A raw dense-frame request (the pre-frontend ingest shape).
     pub fn new(id: u64, stream: u32, image: Vec<f32>) -> Self {
-        InferenceRequest { id, stream, image, submitted: Instant::now() }
+        InferenceRequest {
+            id,
+            stream,
+            payload: FramePayload::Raw(image),
+            submitted: Instant::now(),
+        }
+    }
+
+    /// A frontend-compressed request.
+    pub fn compressed(id: u64, stream: u32, frame: CompressedFrame) -> Self {
+        InferenceRequest {
+            id,
+            stream,
+            payload: FramePayload::Compressed(frame),
+            submitted: Instant::now(),
+        }
     }
 }
 
@@ -58,6 +116,8 @@ impl InferenceResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontend::codec::CodecParams;
+    use crate::frontend::encoder::{FrameEncoder, Selection};
 
     #[test]
     fn response_classifies_by_argmax() {
@@ -66,5 +126,26 @@ mod tests {
         assert_eq!(resp.class, 1);
         assert_eq!(resp.id, 7);
         assert_eq!(resp.worker, 2);
+    }
+
+    #[test]
+    fn payload_byte_and_dense_accounting() {
+        let raw = FramePayload::Raw(vec![0.25; 64]);
+        assert_eq!(raw.dense_len(), 64);
+        assert_eq!(raw.ingest_bytes(), 256);
+        assert_eq!(raw.to_dense(), vec![0.25; 64]);
+
+        let p = CodecParams::new(1, 64, 8, 8).unwrap();
+        let frame: Vec<f32> = (0..64).map(|i| (i % 8) as f32 / 8.0).collect();
+        let cf = FrameEncoder::new(p, Selection::TopK(8)).encode(&frame, 1);
+        let compressed = FramePayload::Compressed(cf.clone());
+        assert_eq!(compressed.dense_len(), 64);
+        assert_eq!(compressed.ingest_bytes(), cf.encoded_bytes());
+        assert!(compressed.ingest_bytes() < raw.ingest_bytes());
+        assert_eq!(compressed.to_dense(), cf.decode());
+
+        let req = InferenceRequest::compressed(3, 2, cf);
+        assert!(matches!(req.payload, FramePayload::Compressed(_)));
+        assert_eq!(req.id, 3);
     }
 }

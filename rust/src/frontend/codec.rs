@@ -1,0 +1,457 @@
+//! The compressed sensor-frame codec (paper §II-A: "selectively retain
+//! valuable data from sensors in the frequency domain").
+//!
+//! A [`CompressedFrame`] is the wire/storage form of one multi-channel
+//! sensor frame after the frontend's sequency-domain triage: the kept
+//! Walsh–Hadamard coefficients as bit-packed `(index, value)` pairs —
+//! `ceil(log2(channels·block))`-bit indices plus either raw f32 bits
+//! (lossless mode, `codec_bits == 0`) or offset-binary levels quantized
+//! against a per-band scale (`codec_bits` in 2..=16). Per-band scales
+//! are stored only for bands that actually hold kept coefficients (a
+//! band-occupancy bitmap makes the mapping recoverable), so sparse
+//! frames don't pay for empty spectrum.
+//!
+//! Decoding scatters the kept coefficients straight into *Hadamard*
+//! order (one permutation lookup per coefficient, no snapshot buffer)
+//! and runs one inverse FWHT per non-empty channel — channels whose
+//! coefficients were all dropped skip their transform entirely, which is
+//! the codec-level half of the serving fast path. The exactness story:
+//! frames are snapped to the sensor's `2^sensor_bits`-step grid at
+//! encode, so with every coefficient kept losslessly the decode is
+//! **bit-exact** (all butterfly intermediates are grid-unit integers
+//! below the f32 exact-integer bound — enforced by
+//! [`CodecParams::new`]).
+
+use crate::wht::fwht::walsh_to_hadamard_index;
+use crate::wht::fwht_inplace;
+
+/// `codec_bits` sentinel: store kept coefficients as raw f32 bits.
+pub const LOSSLESS: u8 = 0;
+
+/// Bands per channel for the quantizer's scale grouping.
+pub const BANDS_PER_CHANNEL: usize = 8;
+
+/// Fixed per-frame header cost charged by [`CompressedFrame::encoded_bytes`]:
+/// frame id (8) + channels (2) + samples (4) + sensor/codec bits (2) +
+/// kept count (4).
+pub const HEADER_BYTES: usize = 20;
+
+/// Geometry + precision of a frame codec. `samples` is the per-channel
+/// logical length; each channel transforms in one `block`-sized
+/// (next power of two) Walsh–Hadamard block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecParams {
+    pub channels: usize,
+    pub samples: usize,
+    /// Sensor grid resolution: inputs snap to multiples of
+    /// `2^-sensor_bits` in [0, 1] before the transform (the front ADC).
+    pub sensor_bits: u8,
+    /// Kept-coefficient precision; [`LOSSLESS`] (0) stores f32 bits.
+    pub codec_bits: u8,
+}
+
+impl CodecParams {
+    /// Validate and build. The `block² · 2^sensor_bits ≤ 2^24` bound is
+    /// what makes the lossless round trip bit-exact: every butterfly
+    /// intermediate of transform + inverse is an integer multiple of the
+    /// sensor grid step no larger than that product, and f32 represents
+    /// integers exactly up to 2^24.
+    pub fn new(
+        channels: usize,
+        samples: usize,
+        sensor_bits: u8,
+        codec_bits: u8,
+    ) -> Result<Self, String> {
+        if channels == 0 || samples == 0 {
+            return Err("codec needs at least one channel and one sample".to_string());
+        }
+        if !(1..=12).contains(&sensor_bits) {
+            return Err(format!("sensor_bits {sensor_bits} outside 1..=12"));
+        }
+        if codec_bits != LOSSLESS && !(2..=16).contains(&codec_bits) {
+            return Err(format!("codec_bits {codec_bits} outside {{0, 2..=16}}"));
+        }
+        let block = samples.next_power_of_two();
+        let worst = (block as u64) * (block as u64) * (1u64 << sensor_bits);
+        if worst > 1 << 24 {
+            return Err(format!(
+                "block {block} at {sensor_bits} sensor bits exceeds the f32 \
+                 exact-integer bound (block^2 * 2^bits = {worst} > 2^24); \
+                 shrink the frame or the sensor resolution"
+            ));
+        }
+        Ok(CodecParams { channels, samples, sensor_bits, codec_bits })
+    }
+
+    /// Per-channel transform length (next power of two ≥ `samples`).
+    #[inline]
+    pub fn block(&self) -> usize {
+        self.samples.next_power_of_two()
+    }
+
+    /// Dense (raw) frame length: `channels · samples`.
+    #[inline]
+    pub fn dense_len(&self) -> usize {
+        self.channels * self.samples
+    }
+
+    /// Total coefficient space: `channels · block`.
+    #[inline]
+    pub fn coeff_space(&self) -> usize {
+        self.channels * self.block()
+    }
+
+    /// Bits per packed coefficient index.
+    #[inline]
+    pub fn index_bits(&self) -> u32 {
+        let space = self.coeff_space();
+        usize::BITS - (space - 1).leading_zeros().min(usize::BITS - 1)
+    }
+
+    /// Bits per packed coefficient value.
+    #[inline]
+    pub fn value_bits(&self) -> u32 {
+        if self.codec_bits == LOSSLESS {
+            32
+        } else {
+            self.codec_bits as u32
+        }
+    }
+
+    /// Scale bands per channel (≤ [`BANDS_PER_CHANNEL`], never wider
+    /// than the block).
+    #[inline]
+    pub fn bands(&self) -> usize {
+        BANDS_PER_CHANNEL.min(self.block())
+    }
+
+    /// Band of sequency `s` within a channel.
+    #[inline]
+    pub fn band_of(&self, s: usize) -> usize {
+        s * self.bands() / self.block()
+    }
+
+    /// Bytes of the uncompressed f32 frame (the ingest-side baseline).
+    #[inline]
+    pub fn raw_frame_bytes(&self) -> usize {
+        self.dense_len() * 4
+    }
+
+    /// Snap a sensor value to the `2^-sensor_bits` grid in [0, 1].
+    /// Non-finite readings (a faulty sensor) snap to 0 — the encoder
+    /// must stay total on real-world input.
+    #[inline]
+    pub fn snap(&self, v: f32) -> f32 {
+        if !v.is_finite() {
+            return 0.0;
+        }
+        let levels = (1u32 << self.sensor_bits) as f32;
+        (v.clamp(0.0, 1.0) * levels).round() / levels
+    }
+}
+
+/// One encoded frame: sparse sequency-domain coefficients plus the
+/// encode-time triage scores the retention policy reads. The metric
+/// fields (`retained_energy` …) are diagnostics, not wire payload —
+/// [`CompressedFrame::encoded_bytes`] excludes them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedFrame {
+    pub frame_id: u64,
+    pub params: CodecParams,
+    /// Number of packed coefficients.
+    pub kept: usize,
+    /// Band-occupancy bitmap (`channels · bands` bits, LSB-first);
+    /// empty in lossless mode.
+    band_map: Vec<u8>,
+    /// Per-occupied-band quantizer scales in `(channel, band)` order;
+    /// empty in lossless mode.
+    scales: Vec<f32>,
+    /// Bit-packed `(index, value)` pairs, ascending index.
+    packed: Vec<u8>,
+    /// Fraction of total coefficient energy kept (1.0 for a silent
+    /// frame).
+    pub retained_energy: f32,
+    /// Fraction of *AC* (sequency ≠ 0) energy kept; 0.0 when the frame
+    /// has no AC content.
+    pub ac_retained: f32,
+    /// Peak |AC coefficient| over mean |AC coefficient| — the
+    /// classifier-margin proxy (a confident oriented structure
+    /// concentrates in few sequency bins).
+    pub peak_to_mean: f32,
+    /// Absolute AC coefficient energy, normalised per block
+    /// (`Σ_{s≠0} y² / block`): the dead-sensor floor signal.
+    pub ac_energy: f32,
+}
+
+impl CompressedFrame {
+    pub(crate) fn from_parts(
+        frame_id: u64,
+        params: CodecParams,
+        kept: usize,
+        band_map: Vec<u8>,
+        scales: Vec<f32>,
+        packed: Vec<u8>,
+    ) -> Self {
+        CompressedFrame {
+            frame_id,
+            params,
+            kept,
+            band_map,
+            scales,
+            packed,
+            retained_energy: 0.0,
+            ac_retained: 0.0,
+            peak_to_mean: 0.0,
+            ac_energy: 0.0,
+        }
+    }
+
+    /// Wire size in bytes: header + band bitmap + per-band scales +
+    /// packed coefficient pairs.
+    pub fn encoded_bytes(&self) -> usize {
+        HEADER_BYTES + self.band_map.len() + self.scales.len() * 4 + self.packed.len()
+    }
+
+    /// Visit every kept coefficient as `(channel, sequency, value)` in
+    /// ascending index order, dequantizing against the band scales.
+    /// This is the serving hot loop (decode fallback *and* folded fast
+    /// path both stand on it): the bitmap → scale rank table is built
+    /// once per call, so each coefficient costs O(1).
+    pub fn for_each_coeff(&self, mut f: impl FnMut(usize, usize, f32)) {
+        let block = self.params.block();
+        let idx_bits = self.params.index_bits();
+        let val_bits = self.params.value_bits();
+        let lossless = self.params.codec_bits == LOSSLESS;
+        let max_level = if lossless { 0 } else { (1i64 << (self.params.codec_bits - 1)) - 1 };
+        // Occupied-band rank table (same prefix-count rule the encoder
+        // packs with); tiny — channels · bands entries.
+        let mut scale_of = Vec::new();
+        if !lossless {
+            let n_bands = self.params.channels * self.params.bands();
+            scale_of.resize(n_bands, 0.0f32);
+            let mut rank = 0usize;
+            for (flat, slot) in scale_of.iter_mut().enumerate() {
+                if band_map_get(&self.band_map, flat) {
+                    *slot = self.scales[rank];
+                    rank += 1;
+                }
+            }
+        }
+        let mut reader = BitReader::new(&self.packed);
+        for _ in 0..self.kept {
+            let idx = reader.read(idx_bits) as usize;
+            let (ch, s) = (idx / block, idx % block);
+            let v = if lossless {
+                f32::from_bits(reader.read(32) as u32)
+            } else {
+                let stored = reader.read(val_bits) as i64;
+                let level = stored - max_level;
+                let scale = scale_of[ch * self.params.bands() + self.params.band_of(s)];
+                level as f32 * scale / max_level as f32
+            };
+            f(ch, s, v);
+        }
+    }
+
+    /// Decode into a fresh dense frame (reference path; allocation-free
+    /// serving uses [`DecodeScratch::decode`]).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut scratch = DecodeScratch::default();
+        scratch.decode(self).to_vec()
+    }
+}
+
+#[inline]
+fn band_map_get(map: &[u8], bit: usize) -> bool {
+    map[bit / 8] & (1 << (bit % 8)) != 0
+}
+
+#[inline]
+pub(crate) fn band_map_set(map: &mut [u8], bit: usize) {
+    map[bit / 8] |= 1 << (bit % 8);
+}
+
+/// Reusable decode buffers: the dense output frame plus one
+/// Hadamard-order block. Kept per serving worker so the frame-sized
+/// buffers are reused across decodes instead of reallocated.
+#[derive(Debug, Default, Clone)]
+pub struct DecodeScratch {
+    dense: Vec<f32>,
+    block: Vec<f32>,
+}
+
+impl DecodeScratch {
+    /// Decode `frame` into the internal dense buffer and return it.
+    ///
+    /// Coefficients scatter directly into Hadamard order (one
+    /// permutation lookup each), then each **non-empty** channel runs
+    /// one inverse FWHT — fully-dropped channels skip the transform and
+    /// stay zero.
+    pub fn decode(&mut self, frame: &CompressedFrame) -> &[f32] {
+        let p = frame.params;
+        let block = p.block();
+        let bits = block.trailing_zeros();
+        self.dense.clear();
+        self.dense.resize(p.dense_len(), 0.0);
+        self.block.clear();
+        self.block.resize(block, 0.0);
+
+        // Kept pairs arrive in ascending index order, so each channel's
+        // coefficients are contiguous: flush a channel when the next
+        // pair belongs to a later one.
+        let mut open: Option<usize> = None;
+        let dense = &mut self.dense;
+        let blk = &mut self.block;
+        let mut flush = |ch: usize, buf: &mut Vec<f32>| {
+            fwht_inplace(buf);
+            let inv = 1.0 / block as f32;
+            let out = &mut dense[ch * p.samples..(ch + 1) * p.samples];
+            for (o, v) in out.iter_mut().zip(buf.iter()) {
+                *o = v * inv;
+            }
+            buf.iter_mut().for_each(|v| *v = 0.0);
+        };
+        frame.for_each_coeff(|ch, s, v| {
+            if let Some(cur) = open {
+                if cur != ch {
+                    flush(cur, &mut *blk);
+                    open = Some(ch);
+                }
+            } else {
+                open = Some(ch);
+            }
+            blk[walsh_to_hadamard_index(s, bits)] = v;
+        });
+        if let Some(cur) = open {
+            flush(cur, &mut *blk);
+        }
+        &self.dense
+    }
+}
+
+// ------------------------------------------------------------ bit I/O
+
+/// LSB-first bit packer.
+#[derive(Debug, Default)]
+pub(crate) struct BitWriter {
+    bytes: Vec<u8>,
+    /// Bits already used in the trailing byte (0 = byte-aligned).
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn push(&mut self, value: u64, bits: u32) {
+        debug_assert!(bits <= 64);
+        debug_assert!(bits == 64 || value < (1u64 << bits));
+        let mut v = value;
+        let mut left = bits;
+        while left > 0 {
+            if self.used == 0 {
+                self.bytes.push(0);
+            }
+            let slot = 8 - self.used;
+            let take = slot.min(left);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            *self.bytes.last_mut().unwrap() |= ((v & mask) as u8) << self.used;
+            self.used = (self.used + take) % 8;
+            v >>= take;
+            left -= take;
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// LSB-first bit reader (mirror of [`BitWriter`]).
+pub(crate) struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    pub fn read(&mut self, bits: u32) -> u64 {
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = self.bytes[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(bits - got);
+            let mask = ((1u16 << take) - 1) as u8;
+            out |= (((byte >> off) & mask) as u64) << got;
+            self.pos += take as usize;
+            got += take;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_io_round_trips_mixed_widths() {
+        let widths = [1u32, 3, 7, 8, 9, 13, 16, 24, 32];
+        let mut w = BitWriter::default();
+        for (i, &bits) in widths.iter().enumerate() {
+            let v = (0x9e37_79b9u64.wrapping_mul(i as u64 + 1)) & ((1u64 << bits) - 1);
+            w.push(v, bits);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for (i, &bits) in widths.iter().enumerate() {
+            let want = (0x9e37_79b9u64.wrapping_mul(i as u64 + 1)) & ((1u64 << bits) - 1);
+            assert_eq!(r.read(bits), want, "field {i} ({bits} bits)");
+        }
+    }
+
+    #[test]
+    fn params_reject_bad_geometry() {
+        assert!(CodecParams::new(0, 4, 8, 8).is_err());
+        assert!(CodecParams::new(1, 0, 8, 8).is_err());
+        assert!(CodecParams::new(1, 4, 0, 8).is_err());
+        assert!(CodecParams::new(1, 4, 8, 1).is_err());
+        assert!(CodecParams::new(1, 4, 8, 17).is_err());
+        // 1024-block at 8 sensor bits breaks the exact-integer bound.
+        assert!(CodecParams::new(1, 1024, 8, 8).is_err());
+        assert!(CodecParams::new(1, 1024, 4, 8).is_ok());
+        assert!(CodecParams::new(1, 256, 8, LOSSLESS).is_ok());
+    }
+
+    #[test]
+    fn params_arithmetic() {
+        let p = CodecParams::new(4, 144, 8, 8).unwrap();
+        assert_eq!(p.block(), 256);
+        assert_eq!(p.dense_len(), 576);
+        assert_eq!(p.coeff_space(), 1024);
+        assert_eq!(p.index_bits(), 10);
+        assert_eq!(p.value_bits(), 8);
+        assert_eq!(p.bands(), 8);
+        assert_eq!(p.band_of(0), 0);
+        assert_eq!(p.band_of(255), 7);
+        let q = CodecParams::new(1, 3, 8, LOSSLESS).unwrap();
+        assert_eq!(q.block(), 4);
+        assert_eq!(q.bands(), 4);
+        assert_eq!(q.value_bits(), 32);
+        assert_eq!(q.index_bits(), 2);
+    }
+
+    #[test]
+    fn snap_is_idempotent_on_grid() {
+        let p = CodecParams::new(1, 8, 4, 8).unwrap();
+        for k in 0..=16u32 {
+            let v = k as f32 / 16.0;
+            assert_eq!(p.snap(v), v, "grid value must be a fixed point");
+            assert_eq!(p.snap(p.snap(0.123_456)), p.snap(0.123_456));
+        }
+        assert_eq!(p.snap(-3.0), 0.0);
+        assert_eq!(p.snap(7.0), 1.0);
+    }
+}

@@ -1,0 +1,461 @@
+//! Sequency-domain frame encoder: snap → per-channel Walsh–Hadamard →
+//! coefficient selection → pack.
+//!
+//! This is the frontend's compute core. Each channel of an incoming
+//! frame is snapped to the sensor grid, transformed with the *sequency*
+//! ordered FWHT (`wht::fwht_sequency_inplace` — same substrate the BWHT
+//! serving layers run on), and then a [`Selection`] rule decides which
+//! coefficients survive the deluge: all non-zeros, the global top-K by
+//! magnitude, or the smallest set reaching an energy fraction. The
+//! survivors are packed by [`super::codec`] with per-band quantization.
+//!
+//! Selection is *global across channels* — one budget for the whole
+//! frame — so an uninformative channel naturally yields its bits to an
+//! informative one, and fully-dropped channels decode (and serve) for
+//! free.
+//!
+//! Determinism: encoding is a pure function of `(frame, frame_id,
+//! config)`. With `dither` enabled the quantizer's dither stream is
+//! `Rng::for_stream(seed, frame_id)` — the same contract the analog
+//! serving path uses for noise, so re-encoding a frame id reproduces
+//! its bits no matter how streams interleave.
+
+use crate::util::Rng;
+use crate::wht::fwht_sequency_inplace;
+
+use super::codec::{band_map_set, BitWriter, CodecParams, CompressedFrame, LOSSLESS};
+
+/// Which coefficients survive encoding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Selection {
+    /// Keep every non-zero coefficient (exact; zero compression).
+    All,
+    /// Keep the `K` largest-magnitude coefficients frame-wide.
+    TopK(usize),
+    /// Keep the smallest prefix (by magnitude) reaching this fraction
+    /// of total coefficient energy, in (0, 1].
+    EnergyFrac(f32),
+}
+
+impl Selection {
+    /// Parse `"all"`, `"topN"` (e.g. `top32`) or `"eF"` (e.g. `e0.95`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s.eq_ignore_ascii_case("all") {
+            return Ok(Selection::All);
+        }
+        if let Some(k) = s.strip_prefix("top") {
+            let k: usize = k.parse().map_err(|_| format!("bad top-K selection '{s}'"))?;
+            if k == 0 {
+                return Err("top-K selection needs K >= 1".to_string());
+            }
+            return Ok(Selection::TopK(k));
+        }
+        if let Some(f) = s.strip_prefix('e') {
+            let f: f32 = f.parse().map_err(|_| format!("bad energy selection '{s}'"))?;
+            if !(0.0..=1.0).contains(&f) || f == 0.0 {
+                return Err(format!("energy fraction {f} outside (0, 1]"));
+            }
+            return Ok(Selection::EnergyFrac(f));
+        }
+        Err(format!("unknown selection '{s}' (want all | topK | eF)"))
+    }
+}
+
+/// Streaming frame encoder with reusable scratch.
+#[derive(Debug, Clone)]
+pub struct FrameEncoder {
+    params: CodecParams,
+    pub selection: Selection,
+    /// Add ±half-step uniform dither before rounding quantized levels
+    /// (decorrelates quantization error across a stream). Lossless mode
+    /// ignores it.
+    pub dither: bool,
+    /// Seed of the per-frame dither stream (`Rng::for_stream(seed, id)`).
+    pub seed: u64,
+    // scratch, reused across frames
+    coeffs: Vec<f32>,
+    order: Vec<u32>,
+}
+
+impl FrameEncoder {
+    pub fn new(params: CodecParams, selection: Selection) -> Self {
+        FrameEncoder {
+            params,
+            selection,
+            dither: false,
+            seed: 0,
+            coeffs: Vec::new(),
+            order: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> CodecParams {
+        self.params
+    }
+
+    /// Encode one dense frame (`channels · samples` values, channel
+    /// major). Deterministic per `(frame, frame_id)`.
+    pub fn encode(&mut self, frame: &[f32], frame_id: u64) -> CompressedFrame {
+        let p = self.params;
+        assert_eq!(frame.len(), p.dense_len(), "frame length != channels * samples");
+        let block = p.block();
+        let space = p.coeff_space();
+
+        // 1. Snap to the sensor grid, pad, transform each channel.
+        self.coeffs.clear();
+        self.coeffs.resize(space, 0.0);
+        for ch in 0..p.channels {
+            let dst = &mut self.coeffs[ch * block..ch * block + p.samples];
+            for (d, &v) in dst.iter_mut().zip(&frame[ch * p.samples..(ch + 1) * p.samples]) {
+                *d = p.snap(v);
+            }
+            fwht_sequency_inplace(&mut self.coeffs[ch * block..(ch + 1) * block]);
+        }
+
+        // 2. Energy bookkeeping (f64 accumulators: block² values).
+        let mut total_e = 0.0f64;
+        let mut ac_e = 0.0f64;
+        let mut ac_peak = 0.0f32;
+        let mut ac_abs_sum = 0.0f64;
+        let mut ac_n = 0u32;
+        for (i, &v) in self.coeffs.iter().enumerate() {
+            let e = (v as f64) * (v as f64);
+            total_e += e;
+            if i % block != 0 {
+                ac_e += e;
+                ac_peak = ac_peak.max(v.abs());
+                ac_abs_sum += v.abs() as f64;
+                ac_n += 1;
+            }
+        }
+
+        // 3. Candidate selection: magnitude descending, index ascending
+        //    on ties (a deterministic total order — snap sanitizes
+        //    non-finite, total_cmp stays panic-free regardless), zeros
+        //    excluded (they decode free). Only EnergyFrac needs a full
+        //    sort; TopK uses an O(n) partition (the ingest hot path —
+        //    the sort was the dominant encode cost).
+        self.order.clear();
+        self.order.extend((0..space as u32).filter(|&i| self.coeffs[i as usize] != 0.0));
+        let coeffs = &self.coeffs;
+        let by_magnitude = |a: &u32, b: &u32| {
+            let (ea, eb) = (coeffs[*a as usize].abs(), coeffs[*b as usize].abs());
+            eb.total_cmp(&ea).then(a.cmp(b))
+        };
+        let n_keep = match self.selection {
+            Selection::All => self.order.len(),
+            Selection::TopK(k) => {
+                let k = k.min(self.order.len());
+                if k > 0 && k < self.order.len() {
+                    // Partition so the first k entries are exactly the
+                    // top-k under the total order (their internal order
+                    // is irrelevant — packing re-sorts by index).
+                    self.order.select_nth_unstable_by(k - 1, by_magnitude);
+                }
+                k
+            }
+            Selection::EnergyFrac(f) => {
+                self.order.sort_unstable_by(by_magnitude);
+                let target = f as f64 * total_e;
+                let mut cum = 0.0f64;
+                let mut n = 0usize;
+                for &i in &self.order {
+                    if cum >= target {
+                        break;
+                    }
+                    let v = coeffs[i as usize] as f64;
+                    cum += v * v;
+                    n += 1;
+                }
+                n.max(usize::from(!self.order.is_empty()))
+            }
+        };
+        let kept = &mut self.order[..n_keep];
+        kept.sort_unstable();
+
+        // 4. Kept-energy stats.
+        let mut kept_e = 0.0f64;
+        let mut kept_ac_e = 0.0f64;
+        for &i in kept.iter() {
+            let v = coeffs[i as usize] as f64;
+            kept_e += v * v;
+            if (i as usize) % block != 0 {
+                kept_ac_e += v * v;
+            }
+        }
+
+        // 5. Pack.
+        let lossless = p.codec_bits == LOSSLESS;
+        let (band_map, scales) = if lossless {
+            (Vec::new(), Vec::new())
+        } else {
+            let mut map = vec![0u8; (p.channels * p.bands()).div_ceil(8)];
+            let mut max_abs = vec![0.0f32; p.channels * p.bands()];
+            for &i in kept.iter() {
+                let (ch, s) = (i as usize / block, i as usize % block);
+                let flat = ch * p.bands() + p.band_of(s);
+                band_map_set(&mut map, flat);
+                max_abs[flat] = max_abs[flat].max(coeffs[i as usize].abs());
+            }
+            let scales: Vec<f32> = max_abs
+                .iter()
+                .enumerate()
+                .filter(|&(flat, _)| map[flat / 8] & (1 << (flat % 8)) != 0)
+                .map(|(_, &m)| m)
+                .collect();
+            (map, scales)
+        };
+        let mut writer = BitWriter::default();
+        let idx_bits = p.index_bits();
+        if lossless {
+            for &i in kept.iter() {
+                writer.push(i as u64, idx_bits);
+                writer.push(coeffs[i as usize].to_bits() as u64, 32);
+            }
+        } else {
+            let max_level = (1i64 << (p.codec_bits - 1)) - 1;
+            let mut dither = self.dither.then(|| Rng::for_stream(self.seed, frame_id));
+            // Re-derive each coefficient's band scale by rank (same
+            // prefix-count rule the decoder uses).
+            let mut rank_of = vec![usize::MAX; p.channels * p.bands()];
+            {
+                let mut rank = 0usize;
+                for (flat, slot) in rank_of.iter_mut().enumerate() {
+                    if band_map[flat / 8] & (1 << (flat % 8)) != 0 {
+                        *slot = rank;
+                        rank += 1;
+                    }
+                }
+            }
+            for &i in kept.iter() {
+                let (ch, s) = (i as usize / block, i as usize % block);
+                let scale = scales[rank_of[ch * p.bands() + p.band_of(s)]];
+                let v = coeffs[i as usize];
+                let level = if scale > 0.0 {
+                    let t = v / scale * max_level as f32;
+                    let jitter = dither
+                        .as_mut()
+                        .map(|r| (r.uniform() - 0.5) as f32)
+                        .unwrap_or(0.0);
+                    ((t + jitter).round() as i64).clamp(-max_level, max_level)
+                } else {
+                    0
+                };
+                writer.push(i as u64, idx_bits);
+                writer.push((level + max_level) as u64, p.codec_bits as u32);
+            }
+        }
+
+        let mut out = CompressedFrame::from_parts(
+            frame_id,
+            p,
+            n_keep,
+            band_map,
+            scales,
+            writer.into_bytes(),
+        );
+        out.retained_energy = if total_e > 0.0 { (kept_e / total_e) as f32 } else { 1.0 };
+        out.ac_retained = if ac_e > 1e-12 { (kept_ac_e / ac_e) as f32 } else { 0.0 };
+        out.peak_to_mean = if ac_n > 0 && ac_abs_sum > 1e-12 {
+            (ac_peak as f64 / (ac_abs_sum / ac_n as f64)) as f32
+        } else {
+            0.0
+        };
+        out.ac_energy = (ac_e / block as f64) as f32;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn params(ch: usize, samples: usize, codec_bits: u8) -> CodecParams {
+        CodecParams::new(ch, samples, 8, codec_bits).unwrap()
+    }
+
+    fn ramp_frame(p: CodecParams, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..p.dense_len()).map(|_| rng.uniform() as f32).collect()
+    }
+
+    fn snapped(p: CodecParams, frame: &[f32]) -> Vec<f32> {
+        frame.iter().map(|&v| p.snap(v)).collect()
+    }
+
+    /// Lossless + keep-all decodes bit-exactly to the snapped frame.
+    #[test]
+    fn lossless_round_trip_is_bit_exact() {
+        for (ch, samples) in [(1usize, 144usize), (4, 64), (3, 33), (1, 1), (2, 256)] {
+            let p = params(ch, samples, LOSSLESS);
+            let mut enc = FrameEncoder::new(p, Selection::All);
+            let frame = ramp_frame(p, 7 + ch as u64);
+            let cf = enc.encode(&frame, 0);
+            assert_eq!(cf.decode(), snapped(p, &frame), "ch={ch} samples={samples}");
+            assert!((cf.retained_energy - 1.0).abs() < 1e-6);
+        }
+    }
+
+    /// Property: quantized round-trip error obeys the analytic bound
+    /// from dropped energy + per-coefficient quantizer step (Parseval).
+    #[test]
+    fn quantized_error_is_bounded() {
+        prop::check("codec error bound", 64, |rng| {
+            let bits = 4 + rng.index(5) as u8; // 4..=8
+            let k = 1 + rng.index(48);
+            let p = params(2, 32, bits);
+            let mut enc = FrameEncoder::new(p, Selection::TopK(k));
+            let frame: Vec<f32> = (0..p.dense_len()).map(|_| rng.uniform() as f32).collect();
+            let cf = enc.encode(&frame, 3);
+            let snap = frame.iter().map(|&v| p.snap(v)).collect::<Vec<_>>();
+            let dec = cf.decode();
+
+            // Transform-domain error budget: dropped energy plus one
+            // half quantizer step per kept coefficient (no dither).
+            let block = p.block() as f64;
+            let mut total_e = 0.0f64;
+            let mut scale_max = 0.0f64;
+            for chn in snap.chunks(p.samples) {
+                let mut buf = vec![0.0f32; p.block()];
+                buf[..chn.len()].copy_from_slice(chn);
+                crate::wht::fwht_sequency_inplace(&mut buf);
+                for v in &buf {
+                    total_e += (*v as f64) * (*v as f64);
+                    scale_max = scale_max.max(v.abs() as f64);
+                }
+            }
+            let dropped = (1.0 - cf.retained_energy as f64).max(0.0) * total_e;
+            let max_level = ((1i64 << (bits - 1)) - 1) as f64;
+            let step = scale_max / max_level;
+            let budget = dropped + cf.kept as f64 * (0.5 * step + 1e-4) * (0.5 * step + 1e-4);
+            let err_sq: f64 = dec
+                .iter()
+                .zip(&snap)
+                .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum();
+            // Spatial error = transform error / block (Parseval). The
+            // slack absorbs f32 rounding in the stored retained-energy
+            // fraction used to reconstruct the dropped-energy term.
+            let slack = 1e-6 * (1.0 + total_e / block);
+            crate::prop_assert!(
+                err_sq <= budget / block + slack,
+                "bits={bits} k={k}: err {err_sq} > budget {}",
+                budget / block + slack
+            );
+            Ok(())
+        });
+    }
+
+    /// The scatter-based decode is bit-identical to the reference path
+    /// through `wht::fwht_sequency_inverse_inplace` (same permutation,
+    /// same butterfly, same exact 1/m scale).
+    #[test]
+    fn decode_matches_reference_sequency_inverse() {
+        let p = params(3, 64, 8);
+        let mut enc = FrameEncoder::new(p, Selection::TopK(20));
+        let cf = enc.encode(&ramp_frame(p, 13), 0);
+        let block = p.block();
+        let mut freq = vec![0.0f32; p.coeff_space()];
+        cf.for_each_coeff(|ch, s, v| freq[ch * block + s] = v);
+        let mut want = Vec::new();
+        for chunk in freq.chunks_exact_mut(block) {
+            crate::wht::fwht_sequency_inverse_inplace(chunk);
+            want.extend_from_slice(&chunk[..p.samples]);
+        }
+        assert_eq!(cf.decode(), want);
+    }
+
+    #[test]
+    fn topk_keeps_exactly_k_and_is_sorted() {
+        let p = params(2, 64, 8);
+        let mut enc = FrameEncoder::new(p, Selection::TopK(10));
+        let cf = enc.encode(&ramp_frame(p, 3), 0);
+        assert_eq!(cf.kept, 10);
+        let mut last = None;
+        let mut seen = 0;
+        cf.for_each_coeff(|ch, s, _| {
+            let idx = ch * p.block() + s;
+            if let Some(prev) = last {
+                assert!(idx > prev, "indices must ascend");
+            }
+            last = Some(idx);
+            seen += 1;
+        });
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn energy_fraction_reaches_target() {
+        let p = params(2, 64, 8);
+        let mut enc = FrameEncoder::new(p, Selection::EnergyFrac(0.9));
+        let cf = enc.encode(&ramp_frame(p, 11), 0);
+        assert!(cf.retained_energy >= 0.9 - 1e-5, "retained {}", cf.retained_energy);
+        assert!(cf.kept < p.coeff_space(), "0.9 target should not need every coefficient");
+    }
+
+    #[test]
+    fn selection_shrinks_encoded_bytes() {
+        let p = params(4, 64, 8);
+        let frame = ramp_frame(p, 5);
+        let all = FrameEncoder::new(p, Selection::All).encode(&frame, 0);
+        let k16 = FrameEncoder::new(p, Selection::TopK(16)).encode(&frame, 0);
+        assert!(k16.encoded_bytes() < all.encoded_bytes() / 4);
+        assert!((k16.encoded_bytes() as f64) < p.raw_frame_bytes() as f64 / 5.0);
+    }
+
+    /// Encoding is deterministic per (frame, id) — including the dither
+    /// stream, which follows the `Rng::for_stream` contract.
+    #[test]
+    fn dithered_encoding_is_deterministic_per_frame_id() {
+        let p = params(2, 64, 6);
+        let frame = ramp_frame(p, 9);
+        let mk = || {
+            let mut e = FrameEncoder::new(p, Selection::TopK(24));
+            e.dither = true;
+            e.seed = 0xd17;
+            e
+        };
+        let a = mk().encode(&frame, 41);
+        let b = mk().encode(&frame, 41);
+        assert_eq!(a, b, "same (frame, id) must encode identically");
+        // And the stream really is per-id: another id may dither
+        // differently, but stays self-consistent.
+        let c = mk().encode(&frame, 42);
+        let d = mk().encode(&frame, 42);
+        assert_eq!(c, d);
+    }
+
+    /// Faulty-sensor input (NaN/±inf) must not panic the ingest path:
+    /// snap sanitizes to 0 and the total-order sort stays total.
+    #[test]
+    fn non_finite_sensor_values_encode_as_zero() {
+        let p = params(1, 8, LOSSLESS);
+        let mut enc = FrameEncoder::new(p, Selection::All);
+        let frame = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.5, 0.25, 0.0, 1.0, 0.75];
+        let dec = enc.encode(&frame, 0).decode();
+        assert_eq!(dec, vec![0.0, 0.0, 0.0, 0.5, 0.25, 0.0, 1.0, 0.75]);
+    }
+
+    #[test]
+    fn selection_parse() {
+        assert_eq!(Selection::parse("all").unwrap(), Selection::All);
+        assert_eq!(Selection::parse("top32").unwrap(), Selection::TopK(32));
+        assert_eq!(Selection::parse("e0.95").unwrap(), Selection::EnergyFrac(0.95));
+        assert!(Selection::parse("top0").is_err());
+        assert!(Selection::parse("e1.5").is_err());
+        assert!(Selection::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn flat_frame_scores_as_unstructured() {
+        let p = params(2, 64, 8);
+        let mut enc = FrameEncoder::new(p, Selection::TopK(16));
+        let cf = enc.encode(&vec![0.5f32; p.dense_len()], 0);
+        assert_eq!(cf.ac_retained, 0.0);
+        assert_eq!(cf.peak_to_mean, 0.0);
+        assert!(cf.ac_energy < 1e-9);
+        // The DC coefficients still decode the frame.
+        assert_eq!(cf.decode(), vec![0.5f32; p.dense_len()]);
+    }
+}

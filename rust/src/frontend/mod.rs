@@ -1,0 +1,194 @@
+//! Frequency-domain sensor frontend (paper §II-A): contain the analog
+//! data deluge *before* it reaches the serving queue.
+//!
+//! PRs 1–3 made the serving fabric fast and collaborative, but every
+//! frame still arrived as a dense `Vec<f32>` — the only deluge response
+//! was backpressure shedding whole frames blind. This subsystem is the
+//! paper's titular answer: encode each multi-channel frame into the
+//! sequency (Walsh) domain, keep only the coefficients that carry the
+//! scene, and triage what is left of the stream:
+//!
+//! - [`codec`] — the [`CompressedFrame`] wire format: bit-packed sparse
+//!   `(index, value)` pairs with per-band quantization, a lossless f32
+//!   mode (bit-exact round trip on the sensor grid), and a zero-alloc
+//!   [`DecodeScratch`] decode that skips fully-dropped channels.
+//! - [`encoder`] — snap → per-channel sequency FWHT → global top-K /
+//!   energy-fraction [`Selection`], with deterministic per-frame-id
+//!   dither (`Rng::for_stream`, the serving path's own contract).
+//! - [`retention`] — [`RetentionPolicy`]: keep / summarize / drop,
+//!   scored by retained-energy and classifier-margin proxies.
+//! - [`stats`] — [`FrontendStats`], merged into the coordinator's
+//!   `MetricsSnapshot` next to the PR-2 conversion counters.
+//!
+//! [`SensorFrontend`] composes the three into the per-stream ingest
+//! object `adcim serve --frontend` runs ahead of admission. Kept frames
+//! travel the coordinator natively as
+//! [`crate::coordinator::FramePayload::Compressed`] and are served
+//! either through the engine's exact decode fallback or the
+//! sequency-domain folded fast path (`coordinator::engine`).
+
+pub mod codec;
+pub mod encoder;
+pub mod retention;
+pub mod stats;
+
+pub use codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
+pub use encoder::{FrameEncoder, Selection};
+pub use retention::{FrameSummary, RetentionPolicy, Verdict};
+pub use stats::FrontendStats;
+
+/// Frontend configuration: codec geometry + selection + policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontendConfig {
+    pub params: CodecParams,
+    pub selection: Selection,
+    pub policy: RetentionPolicy,
+    /// Dither quantized coefficients (deterministic per frame id).
+    pub dither: bool,
+    /// Seed for the dither stream.
+    pub seed: u64,
+}
+
+impl FrontendConfig {
+    /// A keep-everything frontend over the given geometry.
+    pub fn new(params: CodecParams, selection: Selection) -> Self {
+        FrontendConfig {
+            params,
+            selection,
+            policy: RetentionPolicy::KeepAll,
+            dither: false,
+            seed: 0,
+        }
+    }
+}
+
+/// What the frontend hands back per ingested frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestDecision {
+    /// Forward this compressed frame to serving.
+    Keep(CompressedFrame),
+    /// Retain only the summary; shed the frame.
+    Summarize(FrameSummary),
+    /// Shed everything.
+    Drop,
+}
+
+/// The streaming sensor frontend: one encoder + policy + counters.
+#[derive(Debug, Clone)]
+pub struct SensorFrontend {
+    encoder: FrameEncoder,
+    policy: RetentionPolicy,
+    stats: FrontendStats,
+}
+
+impl SensorFrontend {
+    pub fn new(cfg: FrontendConfig) -> Self {
+        let mut encoder = FrameEncoder::new(cfg.params, cfg.selection);
+        encoder.dither = cfg.dither;
+        encoder.seed = cfg.seed;
+        SensorFrontend { encoder, policy: cfg.policy, stats: FrontendStats::default() }
+    }
+
+    pub fn params(&self) -> CodecParams {
+        self.encoder.params()
+    }
+
+    /// Ingest one dense frame: encode, triage, account.
+    pub fn ingest(&mut self, frame: &[f32], frame_id: u64, stream: u32) -> IngestDecision {
+        let p = self.encoder.params();
+        self.stats.frames_in += 1;
+        self.stats.bytes_in += p.raw_frame_bytes() as u64;
+        let cf = self.encoder.encode(frame, frame_id);
+        self.stats.record_retained(cf.retained_energy);
+        match self.policy.decide(&cf) {
+            Verdict::Keep => {
+                self.stats.kept += 1;
+                self.stats.bytes_out += cf.encoded_bytes() as u64;
+                IngestDecision::Keep(cf)
+            }
+            Verdict::Summarize => {
+                let summary = FrameSummary::of(frame_id, stream, frame, p.channels);
+                self.stats.summarized += 1;
+                self.stats.bytes_out += summary.encoded_bytes() as u64;
+                IngestDecision::Summarize(summary)
+            }
+            Verdict::Drop => {
+                self.stats.dropped += 1;
+                IngestDecision::Drop
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &FrontendStats {
+        &self.stats
+    }
+
+    /// Take the accumulated counters, resetting them (delta reporting
+    /// into [`crate::coordinator::Metrics`]).
+    pub fn take_stats(&mut self) -> FrontendStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg(k: usize) -> FrontendConfig {
+        let params = CodecParams::new(1, 64, 8, 8).unwrap();
+        FrontendConfig {
+            policy: RetentionPolicy::triage_default(),
+            ..FrontendConfig::new(params, Selection::TopK(k))
+        }
+    }
+
+    #[test]
+    fn ingest_accounts_every_path() {
+        let mut fe = SensorFrontend::new(cfg(8));
+        // Structured frame → kept.
+        let structured: Vec<f32> =
+            (0..64).map(|i| if (i / 4) % 2 == 0 { 0.9 } else { 0.1 }).collect();
+        assert!(matches!(fe.ingest(&structured, 0, 0), IngestDecision::Keep(_)));
+        // Blank frame → dropped.
+        let blank = vec![0.5f32; 64];
+        assert!(matches!(fe.ingest(&blank, 1, 0), IngestDecision::Drop));
+        let s = fe.stats();
+        assert_eq!(s.frames_in, 2);
+        assert_eq!(s.kept, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.bytes_in, 2 * 64 * 4);
+        assert!(s.bytes_out > 0 && s.bytes_out < s.bytes_in);
+    }
+
+    /// Same frames, same ids ⇒ identical decisions, frames and stats —
+    /// the frontend is a pure function of the stream (dither included).
+    #[test]
+    fn frontend_is_deterministic() {
+        let mk = || {
+            let mut c = cfg(12);
+            c.dither = true;
+            c.seed = 0xfe;
+            SensorFrontend::new(c)
+        };
+        let mut rng = Rng::new(3);
+        let frames: Vec<Vec<f32>> = (0..16)
+            .map(|_| (0..64).map(|_| rng.uniform() as f32).collect())
+            .collect();
+        let mut a = mk();
+        let mut b = mk();
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(a.ingest(f, i as u64, 0), b.ingest(f, i as u64, 0), "frame {i}");
+        }
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn take_stats_resets() {
+        let mut fe = SensorFrontend::new(cfg(8));
+        fe.ingest(&vec![0.5f32; 64], 0, 0);
+        let taken = fe.take_stats();
+        assert_eq!(taken.frames_in, 1);
+        assert_eq!(fe.stats().frames_in, 0);
+    }
+}

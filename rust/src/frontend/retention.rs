@@ -1,0 +1,204 @@
+//! Retention policy: per-frame keep / summarize / drop triage.
+//!
+//! The deluge-containment decision the paper motivates (§I, §II-A):
+//! after encoding, each frame carries three cheap scores —
+//!
+//! - `ac_retained` — fraction of AC sequency energy the kept
+//!   coefficients capture. Structured scenes (oriented gratings, edges)
+//!   concentrate; sensor noise spreads flat.
+//! - `peak_to_mean` — peak |AC coefficient| over the mean: the
+//!   classifier-margin proxy (a dominant sequency line is what the
+//!   downstream BWHT classifier keys on).
+//! - `ac_energy` — absolute AC energy: the dead-sensor / blank-scene
+//!   floor.
+//!
+//! [`RetentionPolicy::decide`] maps scores to a [`Verdict`]: **Keep**
+//! (forward the compressed frame to serving), **Summarize** (retain a
+//! tiny [`FrameSummary`] — per-channel DC plus energy — and shed the
+//! rest), or **Drop** (nothing survives). `KeepAll` is the
+//! policy-disabled baseline every byte-accounting comparison runs
+//! against.
+
+use super::codec::CompressedFrame;
+
+/// What survives of a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Keep,
+    Summarize,
+    Drop,
+}
+
+/// Per-frame retention rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetentionPolicy {
+    /// Every encoded frame is kept (compression only, no shedding).
+    KeepAll,
+    /// Score-based triage.
+    Triage {
+        /// Keep when `ac_retained` reaches this (structure concentrates
+        /// in the kept coefficients)…
+        keep_above: f32,
+        /// …or when `peak_to_mean` reaches this margin proxy.
+        margin: f32,
+        /// Drop when `ac_retained` falls below this (and the margin
+        /// test failed); scores in between summarize.
+        drop_below: f32,
+        /// Frames with AC energy under this floor drop outright
+        /// (blank scene / dead sensor), regardless of shape scores.
+        min_ac_energy: f32,
+    },
+}
+
+impl RetentionPolicy {
+    /// The default triage operating point used by `--retain triage`.
+    pub fn triage_default() -> Self {
+        RetentionPolicy::Triage {
+            keep_above: 0.55,
+            margin: 8.0,
+            drop_below: 0.30,
+            min_ac_energy: 1e-4,
+        }
+    }
+
+    /// Parse a CLI/config policy name: `keep`/`all` or `triage`/`energy`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "keep" | "all" => Ok(RetentionPolicy::KeepAll),
+            "triage" | "energy" => Ok(RetentionPolicy::triage_default()),
+            other => Err(format!("unknown retention policy '{other}' (want keep | triage)")),
+        }
+    }
+
+    /// Triage one encoded frame.
+    pub fn decide(&self, f: &CompressedFrame) -> Verdict {
+        match *self {
+            RetentionPolicy::KeepAll => Verdict::Keep,
+            RetentionPolicy::Triage { keep_above, margin, drop_below, min_ac_energy } => {
+                if f.ac_energy < min_ac_energy {
+                    return Verdict::Drop;
+                }
+                if f.ac_retained >= keep_above || f.peak_to_mean >= margin {
+                    return Verdict::Keep;
+                }
+                if f.ac_retained < drop_below {
+                    Verdict::Drop
+                } else {
+                    Verdict::Summarize
+                }
+            }
+        }
+    }
+}
+
+/// The few bytes that survive a summarized frame: identity, per-channel
+/// mean level, and energy — enough for drift/occupancy monitoring
+/// without the pixels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameSummary {
+    pub frame_id: u64,
+    pub stream: u32,
+    /// Mean level per channel (the DC the scene kept).
+    pub channel_mean: Vec<f32>,
+    /// Mean-removed energy per sample.
+    pub ac_energy: f32,
+}
+
+impl FrameSummary {
+    /// Build from the raw dense frame (channel-major).
+    pub fn of(frame_id: u64, stream: u32, frame: &[f32], channels: usize) -> Self {
+        assert!(channels > 0 && frame.len() % channels == 0);
+        let samples = frame.len() / channels;
+        let channel_mean: Vec<f32> = frame
+            .chunks_exact(samples)
+            .map(|c| c.iter().sum::<f32>() / samples as f32)
+            .collect();
+        let mut ac = 0.0f64;
+        for (ch, chunk) in frame.chunks_exact(samples).enumerate() {
+            let m = channel_mean[ch];
+            for &v in chunk {
+                ac += ((v - m) as f64) * ((v - m) as f64);
+            }
+        }
+        FrameSummary {
+            frame_id,
+            stream,
+            channel_mean,
+            ac_energy: (ac / frame.len() as f64) as f32,
+        }
+    }
+
+    /// Wire size: id (8) + stream (4) + energy (4) + per-channel means.
+    pub fn encoded_bytes(&self) -> usize {
+        16 + self.channel_mean.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::codec::CodecParams;
+    use crate::frontend::encoder::{FrameEncoder, Selection};
+    use crate::util::Rng;
+
+    fn encode(frame: &[f32], channels: usize, samples: usize, k: usize) -> CompressedFrame {
+        let p = CodecParams::new(channels, samples, 8, 8).unwrap();
+        FrameEncoder::new(p, Selection::TopK(k)).encode(frame, 0)
+    }
+
+    /// A structured frame keeps, a blank frame drops, mid-grade noise
+    /// summarizes — the three verdicts on synthetic archetypes.
+    #[test]
+    fn triage_separates_archetypes() {
+        let policy = RetentionPolicy::triage_default();
+        let n = 64usize;
+
+        // Structured: a square wave — concentrates in few sequency bins.
+        let structured: Vec<f32> =
+            (0..n).map(|i| if (i / 4) % 2 == 0 { 0.9 } else { 0.1 }).collect();
+        assert_eq!(policy.decide(&encode(&structured, 1, n, 8)), Verdict::Keep);
+
+        // Blank: constant scene, AC energy under the floor.
+        let blank = vec![0.5f32; n];
+        assert_eq!(policy.decide(&encode(&blank, 1, n, 8)), Verdict::Drop);
+
+        // Broadband noise at K=4 of 64: spread energy, weak peak. Lands
+        // below keep_above; whether it summarizes or drops depends on
+        // the tail the top-4 capture — never Keep.
+        let mut rng = Rng::new(5);
+        let noise: Vec<f32> =
+            (0..n).map(|_| (0.5 + 0.25 * rng.normal()) as f32).collect();
+        assert_ne!(policy.decide(&encode(&noise, 1, n, 4)), Verdict::Keep);
+    }
+
+    #[test]
+    fn keep_all_keeps_everything() {
+        let blank = vec![0.0f32; 32];
+        let cf = encode(&blank, 1, 32, 4);
+        assert_eq!(RetentionPolicy::KeepAll.decide(&cf), Verdict::Keep);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(RetentionPolicy::parse("keep").unwrap(), RetentionPolicy::KeepAll);
+        assert_eq!(
+            RetentionPolicy::parse("triage").unwrap(),
+            RetentionPolicy::triage_default()
+        );
+        assert!(RetentionPolicy::parse("yolo").is_err());
+    }
+
+    #[test]
+    fn summary_captures_means_and_bytes() {
+        let frame = [0.0f32, 0.2, 0.4, 0.6, 1.0, 1.0, 1.0, 1.0];
+        let s = FrameSummary::of(9, 3, &frame, 2);
+        assert_eq!(s.frame_id, 9);
+        assert_eq!(s.stream, 3);
+        assert!((s.channel_mean[0] - 0.3).abs() < 1e-6);
+        assert!((s.channel_mean[1] - 1.0).abs() < 1e-6);
+        assert_eq!(s.encoded_bytes(), 16 + 8);
+        assert!(s.ac_energy > 0.0);
+        // Far smaller than the raw frame.
+        assert!(s.encoded_bytes() < frame.len() * 4);
+    }
+}

@@ -1,0 +1,170 @@
+//! Frontend accounting: what the deluge was, and what survived it.
+//!
+//! [`FrontendStats`] counts frames in/kept/summarized/dropped and bytes
+//! in/out, and histograms the retained-energy fraction of every encoded
+//! frame. It is mergeable (worker/shard deltas) and threads into
+//! [`crate::coordinator::Metrics`] next to the pool's conversion
+//! counters, so one `MetricsSnapshot` line shows both halves of the
+//! paper's story: fewer bytes in, fewer conversions downstream.
+
+/// Histogram bins over the retained-energy fraction [0, 1].
+pub const RETAINED_BINS: usize = 8;
+
+/// Mergeable frontend counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FrontendStats {
+    /// Frames offered to the frontend.
+    pub frames_in: u64,
+    /// Frames forwarded as [`super::CompressedFrame`]s.
+    pub kept: u64,
+    /// Frames reduced to a [`super::FrameSummary`].
+    pub summarized: u64,
+    /// Frames shed entirely.
+    pub dropped: u64,
+    /// Raw sensor bytes offered (dense f32 frames).
+    pub bytes_in: u64,
+    /// Bytes forwarded downstream: kept compressed frames plus the
+    /// summaries that replace summarized frames (what crosses the
+    /// sensor link — whether the driver persists summaries is its
+    /// business; `adcim serve` prints a digest of them).
+    pub bytes_out: u64,
+    /// Retained-energy histogram: bin `i` counts encoded frames with
+    /// retained fraction in `[i/8, (i+1)/8)` (1.0 lands in the last bin).
+    pub retained_hist: [u64; RETAINED_BINS],
+}
+
+impl FrontendStats {
+    /// Fold another counter set into this one.
+    pub fn merge(&mut self, other: &FrontendStats) {
+        self.frames_in += other.frames_in;
+        self.kept += other.kept;
+        self.summarized += other.summarized;
+        self.dropped += other.dropped;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        for (a, b) in self.retained_hist.iter_mut().zip(&other.retained_hist) {
+            *a += b;
+        }
+    }
+
+    /// Record one encoded frame's retained-energy fraction.
+    pub fn record_retained(&mut self, fraction: f32) {
+        let bin = ((fraction.clamp(0.0, 1.0) * RETAINED_BINS as f32) as usize)
+            .min(RETAINED_BINS - 1);
+        self.retained_hist[bin] += 1;
+    }
+
+    /// Ingest-byte reduction factor (bytes in / bytes out). 1.0 when
+    /// nothing has flowed in; total containment (`bytes_out == 0` with
+    /// traffic) reports the full `bytes_in` factor rather than
+    /// pretending no reduction happened.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes_in == 0 {
+            1.0
+        } else {
+            self.bytes_in as f64 / self.bytes_out.max(1) as f64
+        }
+    }
+
+    /// Mean retained-energy fraction estimate from the histogram
+    /// (bin centres).
+    pub fn retained_mean(&self) -> f64 {
+        let n: u64 = self.retained_hist.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let num: f64 = self
+            .retained_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 + 0.5) / RETAINED_BINS as f64 * c as f64)
+            .sum();
+        num / n as f64
+    }
+}
+
+impl std::fmt::Display for FrontendStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "frontend: in={} kept={} sum={} drop={} bytes={}→{} ({:.1}x) retained~{:.2}",
+            self.frames_in,
+            self.kept,
+            self.summarized,
+            self.dropped,
+            self.bytes_in,
+            self.bytes_out,
+            self.compression_ratio(),
+            self.retained_mean()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = FrontendStats {
+            frames_in: 4,
+            kept: 2,
+            summarized: 1,
+            dropped: 1,
+            bytes_in: 4096,
+            bytes_out: 512,
+            ..Default::default()
+        };
+        a.record_retained(0.9);
+        let mut b = FrontendStats {
+            frames_in: 1,
+            bytes_in: 1024,
+            bytes_out: 64,
+            ..Default::default()
+        };
+        b.record_retained(0.1);
+        a.merge(&b);
+        assert_eq!(a.frames_in, 5);
+        assert_eq!(a.bytes_in, 5120);
+        assert_eq!(a.bytes_out, 576);
+        assert_eq!(a.retained_hist.iter().sum::<u64>(), 2);
+        assert_eq!(a.retained_hist[7], 1);
+        assert_eq!(a.retained_hist[0], 1);
+    }
+
+    #[test]
+    fn ratio_and_hist_edges() {
+        let mut s = FrontendStats::default();
+        assert_eq!(s.compression_ratio(), 1.0);
+        s.bytes_in = 1000;
+        s.bytes_out = 100;
+        assert!((s.compression_ratio() - 10.0).abs() < 1e-12);
+        // Total containment: everything dropped is the best ratio, not
+        // "1.0x".
+        s.bytes_out = 0;
+        assert!((s.compression_ratio() - 1000.0).abs() < 1e-12);
+        s.bytes_out = 100;
+        s.record_retained(1.0); // lands in the last bin, not out of range
+        s.record_retained(-0.5);
+        assert_eq!(s.retained_hist[RETAINED_BINS - 1], 1);
+        assert_eq!(s.retained_hist[0], 1);
+        assert!((s.retained_mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_shows_the_flow() {
+        let s = FrontendStats {
+            frames_in: 10,
+            kept: 8,
+            summarized: 1,
+            dropped: 1,
+            bytes_in: 4000,
+            bytes_out: 400,
+            ..Default::default()
+        };
+        let line = format!("{s}");
+        assert!(line.contains("in=10"), "{line}");
+        assert!(line.contains("kept=8"), "{line}");
+        assert!(line.contains("10.0x"), "{line}");
+    }
+}

@@ -27,6 +27,11 @@
 //!   scheduler.
 //! - [`energy`] — area/energy/latency models calibrated to the paper's
 //!   Table I anchors, with 65 nm ↔ 40 nm technology scaling.
+//! - [`frontend`] — the frequency-domain sensor frontend (paper §II-A):
+//!   sequency-domain frame compression (`CompressedFrame` codec with
+//!   top-K / energy-threshold coefficient selection and per-band
+//!   quantization) and the keep/summarize/drop retention policy that
+//!   contains the ingest deluge before it reaches the serving queue.
 //! - [`nn`] — quantized neural network stack: tensors, BWHT compression
 //!   layers with soft-thresholding, miniature MobileNetV2/ResNet20 models,
 //!   straight-through-estimator training against 1-bit product-sum
@@ -50,6 +55,7 @@ pub mod cim;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod frontend;
 pub mod network;
 pub mod nn;
 pub mod report;

@@ -1,7 +1,9 @@
-//! `adcim` — leader binary: serve, report, characterize, sweep.
+//! `adcim` — leader binary: serve, compress, report, characterize.
 //!
 //! Subcommands:
 //!   serve     run the edge-inference server on a synthetic sensor load
+//!   compress  run the sensor frontend standalone over a synthetic
+//!             multispectral deluge (ratio / accuracy tables)
 //!   report    regenerate paper tables/figures (--all or --id fig7)
 //!   adc       one-off ADC characterization (staircase/linearity)
 //!   info      print chip/model/artifact status
@@ -15,7 +17,13 @@ use adcim::coordinator::DigitalEngine;
 use adcim::coordinator::{
     AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
 };
+use adcim::frontend::{
+    CodecParams, FrameEncoder, FrameSummary, FrontendConfig, IngestDecision, RetentionPolicy,
+    Selection, SensorFrontend,
+};
 use adcim::nn::dataset::Dataset;
+use adcim::nn::train::{train, TrainConfig};
+use adcim::nn::{model, Tensor};
 use adcim::runtime::Artifacts;
 use adcim::util::cli::Args;
 use adcim::util::Rng;
@@ -24,27 +32,50 @@ use anyhow::Result;
 const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
-    "pool-threads",
+    "pool-threads", "topk", "codec-bits", "retain", "sensor-bits", "select", "frames",
+    "channels", "side", "classes",
 ];
+
+/// Parse a numeric flag *loudly*: an unparseable value is an error, not
+/// a silent fall-through to the default (same discipline the TOML layer
+/// applies to out-of-range `codec_bits`).
+fn parse_flag<T: std::str::FromStr>(args: &Args, key: &str) -> Result<Option<T>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("invalid --{key} value '{v}'")),
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), VALUE_KEYS);
     match args.positional().first().map(String::as_str) {
         Some("serve") => cmd_serve(&args),
+        Some("compress") => cmd_compress(&args),
         Some("report") => cmd_report(&args),
         Some("adc") => cmd_adc(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: adcim <serve|report|adc|info> [--config file.toml]\n\
+                "usage: adcim <serve|compress|report|adc|info> [--config file.toml]\n\
                  \n\
                  serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
                  \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
                  \x20       [--pool-threads T]\n\
+                 \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
+                 \x20        --retain keep|triage]\n\
                  \x20       (--pool N serves the analog BWHT stages through an N-array\n\
                  \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
                  \x20        --pool-threads T fans the pool's coupling groups across T worker\n\
-                 \x20        threads per phase, 0 = auto — results are thread-count invariant)\n\
+                 \x20        threads per phase, 0 = auto — results are thread-count invariant;\n\
+                 \x20        --frontend ingests through the frequency-domain sensor frontend:\n\
+                 \x20        frames are sequency-compressed to the top K coefficients at B\n\
+                 \x20        bits (0 = lossless) and triaged by the retention policy)\n\
+                 compress [--frames N --channels C --side S --classes K --codec-bits B]\n\
+                 \x20       (standalone frontend over a synthetic multispectral deluge:\n\
+                 \x20        compression-ratio / retained-energy / accuracy tables)\n\
                  report --all | --id <table1|fig1c|fig1d|fig3|fig5|fig6|fig7|fig8|fig10|fig12|fig13> [--out-dir reports]\n\
                  adc    --bits B --mode sar|flash|hybrid [--vdd V]\n\
                  info"
@@ -175,6 +206,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(t) = args.get_parse::<usize>("pool-threads") {
         server_cfg.pool_threads = t;
     }
+    if args.flag("frontend") {
+        server_cfg.frontend = true;
+    }
+    if let Some(k) = parse_flag::<usize>(args, "topk")? {
+        server_cfg.frontend_topk = k;
+    }
+    if let Some(s) = args.get("select") {
+        server_cfg.frontend_select = s.to_string();
+    }
+    if let Some(b) = parse_flag::<u8>(args, "codec-bits")? {
+        server_cfg.codec_bits = b;
+    }
+    if let Some(b) = parse_flag::<u8>(args, "sensor-bits")? {
+        server_cfg.sensor_bits = b;
+    }
+    if let Some(r) = args.get("retain") {
+        server_cfg.retain = r.to_string();
+    }
     let n_requests: usize = args.get_parse_or("requests", 256);
     let policy = match args.get_or("policy", "rr") {
         "ll" => RoutingPolicy::LeastLoaded,
@@ -244,15 +293,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy
     );
 
+    // Optional frequency-domain ingest frontend.
+    let mut frontend = if server_cfg.frontend {
+        let params =
+            CodecParams::new(1, input_dim, server_cfg.sensor_bits, server_cfg.codec_bits)
+                .map_err(|e| anyhow::anyhow!("invalid frontend codec: {e}"))?;
+        // --select (all|topK|eF) overrides the plain --topk budget.
+        let selection = if server_cfg.frontend_select.is_empty() {
+            if server_cfg.frontend_topk == 0 {
+                Selection::All
+            } else {
+                Selection::TopK(server_cfg.frontend_topk)
+            }
+        } else {
+            Selection::parse(&server_cfg.frontend_select)
+                .map_err(|e| anyhow::anyhow!("invalid --select: {e}"))?
+        };
+        let policy = RetentionPolicy::parse(&server_cfg.retain)
+            .map_err(|e| anyhow::anyhow!("invalid retention policy: {e}"))?;
+        println!(
+            "sensor frontend: {selection:?}, {} codec bits (0 = lossless), policy {policy:?}",
+            server_cfg.codec_bits
+        );
+        Some(SensorFrontend::new(FrontendConfig {
+            policy,
+            ..FrontendConfig::new(params, selection)
+        }))
+    } else {
+        None
+    };
+
     let server = EdgeServer::start(&server_cfg, engines, policy)?;
     // Synthetic sensor load: digit frames from 4 streams.
     let data = Dataset::digits(n_requests, 12, 0x5e4e);
     let mut submitted = 0u64;
+    let mut summaries: Vec<FrameSummary> = Vec::new();
     for (i, img) in data.images.iter().enumerate() {
         let flat = img.clone().reshape(&[input_dim]);
-        if server.submit(InferenceRequest::new(i as u64, (i % 4) as u32, flat.data().to_vec())) {
+        let stream = (i % 4) as u32;
+        let accepted = match &mut frontend {
+            Some(fe) => match fe.ingest(flat.data(), i as u64, stream) {
+                IngestDecision::Keep(cf) => {
+                    server.submit(InferenceRequest::compressed(i as u64, stream, cf))
+                }
+                // Summarized frames shed their pixels but their
+                // summaries survive (the bytes_out accounting);
+                // dropped frames never reach the queue at all.
+                IngestDecision::Summarize(s) => {
+                    summaries.push(s);
+                    false
+                }
+                IngestDecision::Drop => false,
+            },
+            None => {
+                server.submit(InferenceRequest::new(i as u64, stream, flat.data().to_vec()))
+            }
+        };
+        if accepted {
             submitted += 1;
         }
+    }
+    if let Some(fe) = &mut frontend {
+        server.record_frontend(&fe.take_stats());
+    }
+    if !summaries.is_empty() {
+        let mean_ac = summaries.iter().map(|s| s.ac_energy as f64).sum::<f64>()
+            / summaries.len() as f64;
+        println!(
+            "retained {} frame summaries in place of shed frames (mean AC energy {:.4})",
+            summaries.len(),
+            mean_ac
+        );
     }
     // Collect.
     let mut correct = 0usize;
@@ -275,5 +386,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "accuracy {:.3} ({correct}/{got}), shed {shed}",
         correct as f64 / got.max(1) as f64
     );
+    Ok(())
+}
+
+/// Standalone frontend demo: encode a synthetic multispectral deluge at
+/// several selection budgets and print the compression-ratio /
+/// retained-energy / reconstruction-error / accuracy table (accuracy
+/// from a small classifier trained on the raw frames).
+fn cmd_compress(args: &Args) -> Result<()> {
+    let n_frames: usize = args.get_parse_or("frames", 400);
+    let channels: usize = args.get_parse_or("channels", 4);
+    let side: usize = args.get_parse_or("side", 8);
+    let classes: usize = args.get_parse_or("classes", 4);
+    let codec_bits: u8 = args.get_parse_or("codec-bits", 8);
+    let sensor_bits: u8 = args.get_parse_or("sensor-bits", 8);
+    let samples = side * side;
+    let input = channels * samples;
+
+    println!(
+        "multispectral deluge: {n_frames} frames, {channels} ch x {side}x{side}, \
+         {classes} classes"
+    );
+    let data = Dataset::multispectral(n_frames, classes, side, channels, 0xde1);
+    let (tr, te) = data.split(0.8);
+    let (tr, te) = (tr.flattened(), te.flattened());
+
+    let mut classifier = model::bwht_mlp(input, classes, 32, &mut Rng::new(7));
+    let log = train(
+        &mut classifier,
+        &tr,
+        &te,
+        TrainConfig { epochs: 5, lr: 0.06, ..Default::default() },
+    );
+    let raw_acc = *log.epoch_test_acc.last().unwrap();
+    println!("classifier trained on raw frames: test accuracy {raw_acc:.3}\n");
+
+    let selections: &[(&str, u8, Selection)] = &[
+        ("all lossless", adcim::frontend::LOSSLESS, Selection::All),
+        ("all", codec_bits, Selection::All),
+        ("e0.98", codec_bits, Selection::EnergyFrac(0.98)),
+        ("top64", codec_bits, Selection::TopK(64)),
+        ("top32", codec_bits, Selection::TopK(32)),
+        ("top16", codec_bits, Selection::TopK(16)),
+        ("top8", codec_bits, Selection::TopK(8)),
+    ];
+    println!(
+        "{:<14} {:>10} {:>12} {:>8} {:>10} {:>10} {:>8}",
+        "selection", "kept/frame", "bytes/frame", "ratio", "retained", "rmse", "acc"
+    );
+    let raw_bytes = input * 4;
+    for (label, bits, selection) in selections {
+        let params = CodecParams::new(channels, samples, sensor_bits, *bits)
+            .map_err(|e| anyhow::anyhow!("codec: {e}"))?;
+        let mut enc = FrameEncoder::new(params, *selection);
+        let mut bytes = 0usize;
+        let mut kept = 0usize;
+        let mut retained = 0.0f64;
+        let mut err_sq = 0.0f64;
+        let mut n_vals = 0usize;
+        let mut correct = 0usize;
+        for (i, (img, &label_i)) in te.images.iter().zip(&te.labels).enumerate() {
+            let cf = enc.encode(img.data(), i as u64);
+            bytes += cf.encoded_bytes();
+            kept += cf.kept;
+            retained += cf.retained_energy as f64;
+            let dec = cf.decode();
+            for (a, &b) in dec.iter().zip(img.data()) {
+                let d = (a - params.snap(b)) as f64;
+                err_sq += d * d;
+            }
+            n_vals += dec.len();
+            let logits = classifier.forward_inference(&Tensor::vec1(&dec));
+            if logits.argmax() == label_i {
+                correct += 1;
+            }
+        }
+        let n = te.len().max(1);
+        println!(
+            "{label:<14} {:>10.1} {:>12.1} {:>7.1}x {:>10.3} {:>10.5} {:>8.3}",
+            kept as f64 / n as f64,
+            bytes as f64 / n as f64,
+            raw_bytes as f64 * n as f64 / bytes.max(1) as f64,
+            retained / n as f64,
+            (err_sq / n_vals.max(1) as f64).sqrt(),
+            correct as f64 / n as f64
+        );
+    }
+
+    // Retention triage over a mixed deluge: the multispectral frames
+    // plus blank/noise filler the policy should shed.
+    let params = CodecParams::new(channels, samples, sensor_bits, codec_bits)
+        .map_err(|e| anyhow::anyhow!("codec: {e}"))?;
+    let mut fe = SensorFrontend::new(FrontendConfig {
+        policy: RetentionPolicy::triage_default(),
+        ..FrontendConfig::new(params, Selection::TopK(16))
+    });
+    let mut rng = Rng::new(0xb1a);
+    let mut id = 0u64;
+    for img in &te.images {
+        fe.ingest(img.data(), id, 0);
+        id += 1;
+        // One blank-ish filler frame per real frame.
+        let blank: Vec<f32> =
+            (0..input).map(|_| (0.5 + 0.01 * rng.normal()) as f32).collect();
+        fe.ingest(&blank, id, 0);
+        id += 1;
+    }
+    println!("\ntriage over a 50% blank deluge: {}", fe.stats());
     Ok(())
 }

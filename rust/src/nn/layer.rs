@@ -84,6 +84,18 @@ pub struct Dense {
 }
 
 impl Dense {
+    /// Weight matrix, `[out_dim][in_dim]` row-major (read-only view —
+    /// the compressed-serving fast path folds these into the sequency
+    /// domain).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Bias vector.
+    pub fn bias(&self) -> &[f32] {
+        &self.b
+    }
+
     /// Overwrite weights/bias (e.g. from AOT-exported JAX parameters).
     /// `w` is `[out_dim][in_dim]` row-major.
     pub fn set_weights(&mut self, w: Vec<f32>, b: Vec<f32>) {

@@ -91,6 +91,21 @@ impl Sequential {
             }
         }
     }
+
+    /// The first layer, if it is a [`Dense`] — what the compressed
+    /// serving fast path folds into the sequency domain
+    /// (`coordinator::engine`).
+    pub fn first_layer_dense(&self) -> Option<&super::layer::Dense> {
+        let l = self.layers.first()?;
+        if l.name() == "dense" {
+            // Safety: name() uniquely identifies our concrete types
+            // (same contract as `for_each_bwht`).
+            let ptr = l.as_ref() as *const dyn Layer as *const super::layer::Dense;
+            Some(unsafe { &*ptr })
+        } else {
+            None
+        }
+    }
 }
 
 impl Default for Sequential {

@@ -102,6 +102,29 @@ pub fn fwht_sequency_inplace(x: &mut [f32]) {
     }
 }
 
+/// In-place inverse of [`fwht_sequency_inplace`]:
+/// `fwht_sequency_inverse(fwht_sequency(x)) == x` (exactly for
+/// grid-valued inputs whose butterfly intermediates stay below the f32
+/// exact-integer bound — the frontend codec's lossless contract).
+///
+/// Un-permutes the sequency ordering back to Hadamard order, then
+/// applies the self-inverse transform with the `1/m` scale (`m` is a
+/// power of two, so the scale multiply is exact).
+pub fn fwht_sequency_inverse_inplace(x: &mut [f32]) {
+    let m = x.len();
+    assert!(m.is_power_of_two(), "FWHT length must be a power of two, got {m}");
+    let bits = m.trailing_zeros();
+    let snapshot = x.to_vec();
+    for s in 0..m {
+        x[walsh_to_hadamard_index(s, bits)] = snapshot[s];
+    }
+    fwht_inplace(x);
+    let inv = 1.0 / m as f32;
+    for v in x {
+        *v *= inv;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +195,27 @@ mod tests {
         let e_out: f32 = y.iter().map(|v| v * v).sum();
         let ratio = e_out / (m as f32 * e_in);
         assert!((ratio - 1.0).abs() < 1e-5, "ratio={ratio}");
+    }
+
+    /// Sequency round trip: exact on sensor-grid values (the codec's
+    /// lossless contract), tight on arbitrary floats.
+    #[test]
+    fn fwht_sequency_round_trip() {
+        for k in 0..=8u32 {
+            let m = 1usize << k;
+            // Grid values: multiples of 2^-8 in [0, 1] — exact path.
+            let x: Vec<f32> = (0..m).map(|i| ((i * 37 % 257) as f32) / 256.0).collect();
+            let mut y = x.clone();
+            fwht_sequency_inplace(&mut y);
+            fwht_sequency_inverse_inplace(&mut y);
+            assert_eq!(y, x, "m={m} grid round trip must be bit-exact");
+            // Arbitrary floats: tolerance only.
+            let x = ramp(m);
+            let mut y = x.clone();
+            fwht_sequency_inplace(&mut y);
+            fwht_sequency_inverse_inplace(&mut y);
+            assert_close(&y, &x, 1e-5, &format!("m={m} float"));
+        }
     }
 
     #[test]

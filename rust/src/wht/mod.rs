@@ -28,7 +28,10 @@ pub mod fwht;
 pub mod matrix;
 
 pub use bwht::{Bwht, BwhtLayout};
-pub use fwht::{fwht_inplace, fwht_inverse_inplace, fwht_sequency_inplace, ifwht};
+pub use fwht::{
+    fwht_inplace, fwht_inverse_inplace, fwht_sequency_inplace, fwht_sequency_inverse_inplace,
+    ifwht,
+};
 pub use matrix::{hadamard, sequency_of_row, walsh};
 
 /// Soft-thresholding activation `S_T(x)` (paper eq. (3)).

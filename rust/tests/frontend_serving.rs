@@ -1,0 +1,320 @@
+//! The frequency-domain sensor frontend's serving contracts (ISSUE 4
+//! acceptance criteria):
+//!
+//! 1. Compressed frames flow through the real batcher/router/worker
+//!    path (`EdgeServer` end to end), and `FrontendStats` lands in the
+//!    final `MetricsSnapshot`.
+//! 2. **Zero-compression serving is bit-exact vs raw**: with every
+//!    coefficient kept losslessly, serving the compressed deluge
+//!    produces bit-identical logits to serving the (sensor-snapped) raw
+//!    deluge — through the full coordinator stack, analog noise
+//!    included.
+//! 3. **Top-K retention contains the deluge**: on the multispectral
+//!    workload, compressed ingest is ≥ 5× smaller in bytes at matched
+//!    argmax accuracy, and the triage policy sheds blank filler frames.
+//! 4. The folded transform-domain fast path agrees with the decode
+//!    fallback (engine-level test in `coordinator::engine`; here it is
+//!    exercised implicitly — lossy frames served below take it).
+
+use std::time::Duration;
+
+use adcim::cim::CrossbarConfig;
+use adcim::config::ServerConfig;
+use adcim::coordinator::{
+    AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::frontend::{
+    CodecParams, FrameEncoder, FrontendConfig, IngestDecision, LOSSLESS, RetentionPolicy,
+    Selection, SensorFrontend,
+};
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::nn::train::{train, TrainConfig};
+use adcim::nn::{Dataset, Tensor};
+use adcim::util::Rng;
+
+const CHANNELS: usize = 4;
+const SIDE: usize = 8;
+const SAMPLES: usize = SIDE * SIDE;
+const INPUT: usize = CHANNELS * SAMPLES;
+const CLASSES: usize = 4;
+
+/// Analog digit-MLP engine over the multispectral input dim (synthetic
+/// weights; no artifacts needed).
+fn analog_engine(seed: u64) -> AnalogEngine {
+    let mut rng = Rng::new(seed);
+    let mut model = bwht_mlp(INPUT, CLASSES, 32, &mut rng);
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term: None,
+            seed: 42,
+            pool: None,
+        })
+    });
+    AnalogEngine::from_model(model, INPUT)
+}
+
+fn flat_frames(n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let data = Dataset::multispectral(n, CLASSES, SIDE, CHANNELS, seed);
+    let frames = data
+        .images
+        .iter()
+        .map(|i| i.clone().reshape(&[INPUT]).data().to_vec())
+        .collect();
+    (frames, data.labels)
+}
+
+/// Serve `requests` through a 1-worker server and collect responses by
+/// id. One worker + one batcher keeps the engine's per-sample stream
+/// assignment equal to submission order, so two runs over the same
+/// frames are comparable bit-for-bit.
+fn serve(
+    engine: AnalogEngine,
+    requests: Vec<InferenceRequest>,
+) -> (Vec<(u64, Vec<f32>, usize)>, adcim::coordinator::metrics::MetricsSnapshot) {
+    let cfg = ServerConfig {
+        workers: 1,
+        batch: 8,
+        batch_deadline_us: 500,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(engine)];
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+    let mut submitted = 0u64;
+    for req in requests {
+        assert!(server.submit(req), "queue must admit the test load");
+        submitted += 1;
+    }
+    let mut got = Vec::new();
+    while (got.len() as u64) < submitted {
+        match server.recv_response(Duration::from_secs(10)) {
+            Some(r) => got.push((r.id, r.logits, r.class)),
+            None => break,
+        }
+    }
+    assert_eq!(got.len() as u64, submitted, "lost responses");
+    got.sort_by_key(|(id, _, _)| *id);
+    let snap = server.shutdown();
+    (got, snap)
+}
+
+/// Acceptance: zero-compression (lossless, keep-all) serving through
+/// the full coordinator stack is bit-identical to raw serving of the
+/// sensor-snapped frames.
+#[test]
+fn zero_compression_serving_is_bit_exact_vs_raw() {
+    let params = CodecParams::new(CHANNELS, SAMPLES, 8, LOSSLESS).unwrap();
+    let (frames, _) = flat_frames(24, 0xa11);
+    let snapped: Vec<Vec<f32>> = frames
+        .iter()
+        .map(|f| f.iter().map(|&v| params.snap(v)).collect())
+        .collect();
+
+    let raw_reqs: Vec<InferenceRequest> = snapped
+        .iter()
+        .enumerate()
+        .map(|(i, f)| InferenceRequest::new(i as u64, 0, f.clone()))
+        .collect();
+    let (raw, _) = serve(analog_engine(1), raw_reqs);
+
+    let mut enc = FrameEncoder::new(params, Selection::All);
+    let comp_reqs: Vec<InferenceRequest> = frames
+        .iter()
+        .enumerate()
+        .map(|(i, f)| InferenceRequest::compressed(i as u64, 0, enc.encode(f, i as u64)))
+        .collect();
+    let (comp, _) = serve(analog_engine(1), comp_reqs);
+
+    assert_eq!(raw.len(), comp.len());
+    for ((id_r, logits_r, _), (id_c, logits_c, _)) in raw.iter().zip(&comp) {
+        assert_eq!(id_r, id_c);
+        assert_eq!(logits_r, logits_c, "id {id_r}: compressed serving must be bit-exact");
+    }
+}
+
+/// Acceptance: top-K retention cuts ingest bytes ≥ 5× at matched argmax
+/// accuracy on the multispectral workload, with a trained classifier.
+#[test]
+fn topk_retention_reduces_bytes_at_matched_accuracy() {
+    // Train a classifier on raw multispectral frames.
+    let data = Dataset::multispectral(320, CLASSES, SIDE, CHANNELS, 0x5eed);
+    let (tr, te) = data.split(0.8);
+    let (tr, te) = (tr.flattened(), te.flattened());
+    let mut model = bwht_mlp(INPUT, CLASSES, 32, &mut Rng::new(7));
+    let log = train(
+        &mut model,
+        &tr,
+        &te,
+        TrainConfig { epochs: 5, lr: 0.06, ..Default::default() },
+    );
+    let trained_acc = *log.epoch_test_acc.last().unwrap();
+    assert!(trained_acc > 0.45, "classifier failed to train: {trained_acc}");
+
+    // Evaluate raw vs top-K compressed frames on the same model.
+    let params = CodecParams::new(CHANNELS, SAMPLES, 8, 8).unwrap();
+    let mut enc = FrameEncoder::new(params, Selection::TopK(32));
+    let mut bytes_in = 0usize;
+    let mut bytes_out = 0usize;
+    let mut raw_correct = 0usize;
+    let mut comp_correct = 0usize;
+    let mut agree = 0usize;
+    for (i, (img, &label)) in te.images.iter().zip(&te.labels).enumerate() {
+        let cf = enc.encode(img.data(), i as u64);
+        bytes_in += params.raw_frame_bytes();
+        bytes_out += cf.encoded_bytes();
+        let dec = cf.decode();
+        let raw_class = model.forward_inference(img).argmax();
+        let comp_class = model.forward_inference(&Tensor::vec1(&dec)).argmax();
+        if raw_class == label {
+            raw_correct += 1;
+        }
+        if comp_class == label {
+            comp_correct += 1;
+        }
+        if raw_class == comp_class {
+            agree += 1;
+        }
+    }
+    let n = te.len();
+    let ratio = bytes_in as f64 / bytes_out as f64;
+    assert!(ratio >= 5.0, "ingest-byte reduction {ratio:.1}x < 5x");
+    let raw_acc = raw_correct as f64 / n as f64;
+    let comp_acc = comp_correct as f64 / n as f64;
+    assert!(
+        comp_acc >= raw_acc - 0.06,
+        "compressed accuracy {comp_acc:.3} fell more than 0.06 below raw {raw_acc:.3}"
+    );
+    assert!(
+        agree as f64 / n as f64 >= 0.8,
+        "argmax agreement {:.3} < 0.8 ({agree}/{n})",
+        agree as f64 / n as f64
+    );
+}
+
+/// The retention policy sheds blank filler, compressed survivors serve
+/// end-to-end through the coordinator, and `FrontendStats` shows up in
+/// the `MetricsSnapshot` with a real byte reduction.
+#[test]
+fn retention_triage_contains_the_deluge_end_to_end() {
+    let params = CodecParams::new(CHANNELS, SAMPLES, 8, 8).unwrap();
+    let mut frontend = SensorFrontend::new(FrontendConfig {
+        policy: RetentionPolicy::triage_default(),
+        ..FrontendConfig::new(params, Selection::TopK(32))
+    });
+    let (frames, _) = flat_frames(20, 0xfee);
+
+    // Interleave real frames with pure-blank filler (the deluge).
+    let mut requests = Vec::new();
+    let mut offered = 0u64;
+    let mut blank_kept = 0u64;
+    for (i, frame) in frames.iter().enumerate() {
+        for (slot, f) in
+            [frame.clone(), vec![0.5f32; INPUT]].into_iter().enumerate()
+        {
+            let id = 2 * i as u64 + slot as u64;
+            offered += 1;
+            if let IngestDecision::Keep(cf) = frontend.ingest(&f, id, 0) {
+                if slot == 1 {
+                    blank_kept += 1;
+                }
+                requests.push(InferenceRequest::compressed(id, 0, cf));
+            }
+        }
+    }
+    assert_eq!(blank_kept, 0, "constant blank frames must never be kept");
+    assert!(
+        requests.len() >= frames.len() / 2,
+        "too few real frames survived: {}/{}",
+        requests.len(),
+        frames.len()
+    );
+
+    let stats = frontend.take_stats();
+    assert_eq!(stats.frames_in, offered);
+    assert_eq!(stats.kept as usize, requests.len());
+    assert_eq!(stats.kept + stats.summarized + stats.dropped, offered);
+    assert!(stats.dropped > 0, "the blank half must be shed");
+    assert!(
+        stats.compression_ratio() >= 5.0,
+        "deluge bytes {} -> {} is under 5x",
+        stats.bytes_in,
+        stats.bytes_out
+    );
+
+    let n = requests.len() as u64;
+    let (got, snap) = {
+        let engine = analog_engine(3);
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 8,
+            batch_deadline_us: 500,
+            queue_depth: 4096,
+            ..Default::default()
+        };
+        let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(engine)];
+        let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+        for req in requests {
+            assert!(server.submit(req));
+        }
+        let mut got = Vec::new();
+        while (got.len() as u64) < n {
+            match server.recv_response(Duration::from_secs(10)) {
+                Some(r) => got.push(r),
+                None => break,
+            }
+        }
+        server.record_frontend(&stats);
+        (got, server.shutdown())
+    };
+    assert_eq!(got.len() as u64, n, "every kept frame must serve");
+    assert_eq!(snap.completed, n);
+    assert_eq!(snap.frontend.frames_in, offered);
+    assert!(snap.frontend.dropped > 0);
+    let line = format!("{snap}");
+    assert!(line.contains("frontend:"), "snapshot must show the frontend: {line}");
+}
+
+/// Frontend ingest is deterministic under the `Rng::for_stream` dither
+/// contract even when streams interleave differently.
+#[test]
+fn frontend_ingest_is_order_independent_per_frame_id() {
+    let params = CodecParams::new(CHANNELS, SAMPLES, 8, 6).unwrap();
+    let mk = || {
+        let mut cfg = FrontendConfig::new(params, Selection::TopK(16));
+        cfg.dither = true;
+        cfg.seed = 0xd17;
+        SensorFrontend::new(cfg)
+    };
+    let (frames, _) = flat_frames(12, 0x0dd);
+    // Forward order.
+    let mut a = mk();
+    let fwd: Vec<_> = frames
+        .iter()
+        .enumerate()
+        .map(|(i, f)| a.ingest(f, i as u64, 0))
+        .collect();
+    // Reverse arrival order — same ids ⇒ same encodings.
+    let mut b = mk();
+    let mut rev: Vec<_> = frames
+        .iter()
+        .enumerate()
+        .rev()
+        .map(|(i, f)| (i, b.ingest(f, i as u64, 1)))
+        .collect();
+    rev.sort_by_key(|(i, _)| *i);
+    for ((i, r), f) in rev.into_iter().zip(&fwd) {
+        match (&r, f) {
+            (IngestDecision::Keep(x), IngestDecision::Keep(y)) => {
+                assert_eq!(x, y, "frame {i} encoding must not depend on arrival order")
+            }
+            _ => assert_eq!(
+                std::mem::discriminant(&r),
+                std::mem::discriminant(f),
+                "frame {i} verdict changed"
+            ),
+        }
+    }
+}

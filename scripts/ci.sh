@@ -40,6 +40,9 @@ done
 if command -v cargo >/dev/null 2>&1; then
   cd "$ROOT/rust"
   cargo build --release
+  # The repo-root walkthrough drivers are registered example targets
+  # (rust/Cargo.toml [[example]]): build them so they can never rot.
+  cargo build --release --examples
   cargo test -q "${EXTRA_ARGS[@]+"${EXTRA_ARGS[@]}"}"
 
   if [[ "$SMOKE_BENCH" == "1" ]]; then
