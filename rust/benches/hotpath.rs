@@ -21,7 +21,8 @@ use adcim::nn::layer::dot_f32;
 use adcim::nn::model::bwht_mlp;
 use adcim::nn::Tensor;
 use adcim::util::bench::{black_box, BenchSet};
-use adcim::util::Rng;
+use adcim::util::{Executor, Rng};
+use std::sync::Arc;
 use adcim::wht::{fwht_inplace, Bwht};
 
 /// The seed's crossbar inner loop, reproduced verbatim in shape: per row
@@ -206,6 +207,7 @@ fn main() {
             mode,
             asymmetric: label.ends_with("asym"),
             threads: 1,
+            fuse_batch: false,
         };
         let mut fab = Rng::new(31);
         let matrix = SignMatrix::walsh(32);
@@ -236,8 +238,9 @@ fn main() {
 
     // Batched plane fan-out: an 8-array SAR pool has 4 independent
     // coupling groups; process_planes queues 8 planes (two rotations)
-    // onto per-group lanes, run inline vs on scoped worker threads
-    // (one scope per call). Same outputs by the per-plane stream
+    // onto per-group lanes, run inline vs on the pool's persistent
+    // worker runtime (spawned once at the first parallel call, reused
+    // by every iteration after). Same outputs by the per-plane stream
     // contract — this case pair measures the fan-out win itself.
     for threads in [1usize, 4] {
         let spec = PoolSpec {
@@ -246,6 +249,7 @@ fn main() {
             mode: ImmersedMode::Sar,
             asymmetric: false,
             threads,
+            fuse_batch: false,
         };
         let matrix = SignMatrix::walsh(32);
         let mut pool =
@@ -265,6 +269,69 @@ fn main() {
         });
     }
 
+    // The PR-3 per-call-spawn ceiling, measured honestly: identical
+    // work to `t=4` above, but a fresh 4-lane runtime is built (threads
+    // spawned) and dropped (joined) inside every call — the cost shape
+    // `thread::scope` paid per `process_planes` before the persistent
+    // executor.
+    {
+        let spec = PoolSpec {
+            n_arrays: 8,
+            adc_bits: 5,
+            mode: ImmersedMode::Sar,
+            asymmetric: false,
+            threads: 4,
+            fuse_batch: false,
+        };
+        let matrix = SignMatrix::walsh(32);
+        let mut pool =
+            CimArrayPool::new(&matrix, CrossbarConfig::default(), spec, &mut Rng::new(41));
+        let planes: Vec<BitVec> = (0..8)
+            .map(|s| {
+                BitVec::from_bits(&(0..32).map(|i| (i * 7 + s * 13) % 3 == 0).collect::<Vec<_>>())
+            })
+            .collect();
+        let streams: Vec<u64> = (0..8).collect();
+        let mut out = vec![0.0f64; 8 * 32];
+        set.run("pool 8x32 sar process_planes x8 t=4 (per-call spawn baseline)", move || {
+            pool.set_executor(Some(Arc::new(Executor::new(4))));
+            pool.begin_transform();
+            let refs: Vec<&BitVec> = planes.iter().collect();
+            pool.process_planes(&refs, &streams, 0x5eed, None, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // Cross-sample plane fusion: a 16-sample 4-bit batch through an
+    // 8-array pooled engine. Unfused, each sample drains the pool alone
+    // (16 submissions); fused, all 64 planes reach the coupling-group
+    // lanes in one submission, so lanes stay saturated across sample
+    // boundaries. Outputs bit-identical either way
+    // (tests/executor_fusion.rs).
+    for threads in [1usize, 4] {
+        let spec = PoolSpec {
+            n_arrays: 8,
+            adc_bits: 5,
+            mode: ImmersedMode::Sar,
+            asymmetric: false,
+            threads,
+            fuse_batch: true,
+        };
+        let matrix = SignMatrix::walsh(32);
+        let mut fab = Rng::new(31);
+        let mut eng = BitplaneEngine::new(
+            Crossbar::new(matrix.clone(), CrossbarConfig::default(), &mut fab),
+            4,
+        )
+        .with_pool(CimArrayPool::new(&matrix, CrossbarConfig::default(), spec, &mut fab));
+        let fused_batch: Vec<Vec<u32>> = (0..16)
+            .map(|s| (0..32).map(|i| ((i * 3 + s) % 16) as u32).collect())
+            .collect();
+        set.run(&format!("pool 8x32 sar fused b=16 t={threads}"), move || {
+            black_box(eng.transform_batch(&fused_batch, 0x5eed));
+        });
+    }
+
     // Per-row conversion gating: the same pooled transform with a wide
     // exact-ET dead band converts a fraction of the rows — the ET
     // savings the ADC energy column sees. The probe line reports the
@@ -276,6 +343,7 @@ fn main() {
             mode: ImmersedMode::Sar,
             asymmetric: false,
             threads: 1,
+            fuse_batch: false,
         };
         let matrix = SignMatrix::walsh(32);
         let mk = || {
@@ -395,6 +463,30 @@ fn main() {
         let images: Vec<Vec<f32>> =
             (0..32).map(|i| vec![(i % 5) as f32 * 0.2; 144]).collect();
         set.run(&format!("analog MLP infer_batch b=32 t={threads}"), move || {
+            black_box(engine.infer_batch(&images).unwrap());
+        });
+    }
+
+    // The same sharded batch on an explicitly pre-warmed persistent
+    // runtime: the first parallel batch builds the executor outside the
+    // measurement window, so this row is the steady-state serving cost
+    // — per-batch spawn/join fully off the hot path.
+    {
+        let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 7,
+                pool: None,
+            })
+        });
+        let mut engine = AnalogEngine::from_model(model, 144).with_threads(4);
+        let images: Vec<Vec<f32>> =
+            (0..32).map(|i| vec![(i % 5) as f32 * 0.2; 144]).collect();
+        let _ = engine.infer_batch(&images).unwrap(); // warm the runtime
+        set.run("analog MLP infer_batch b=32 t=4 (executor)", move || {
             black_box(engine.infer_batch(&images).unwrap());
         });
     }

@@ -17,7 +17,7 @@ use crate::util::Rng;
 use super::bitvec::BitVec;
 use super::crossbar::Crossbar;
 use super::early_term::{EarlyTermination, TermStats};
-use super::pool::{CimArrayPool, ConversionStats};
+use super::pool::{CimArrayPool, ConversionStats, PlaneRequest};
 
 /// Decompose non-negative integers into packed bitplanes, LSB first,
 /// reusing the buffers in `planes` (the scratch-arena form — zero
@@ -82,6 +82,47 @@ trait RowValueSource {
     fn row_value(&self, r: usize) -> f32;
 }
 
+/// One plane's row pass — the arithmetic core of the walk, shared
+/// verbatim by the sequential [`walk_planes`] loop and the fused
+/// cross-sample lockstep driver ([`BitplaneEngine::transform_batch`]
+/// with `PoolSpec::fuse_batch`), so the two paths cannot drift:
+/// accumulate weighted row values, record signs, and apply the
+/// early-termination bound test + dead-band zeroing against the live
+/// mask.
+fn step_plane_rows(
+    row_value: impl Fn(usize) -> f32,
+    p: usize,
+    rows: usize,
+    divisor: f32,
+    early_term: Option<EarlyTermination>,
+    active: &mut [bool],
+    acc: &mut [f32],
+    plane_signs_p: &mut [bool],
+    term: &mut TermStats,
+) {
+    let weight = (1u32 << p) as f32;
+    for r in 0..rows {
+        if !active[r] {
+            term.record_skipped_row(r);
+            continue;
+        }
+        let v = row_value(r);
+        acc[r] += weight * v;
+        plane_signs_p[r] = v > 0.0;
+        term.record_processed(r);
+        if let Some(et) = &early_term {
+            // Remaining planes 0..p contribute at most 2^p − 1 (in
+            // the source's normalized per-plane units).
+            let remaining = (1u32 << p) as f32 - 1.0;
+            if et.should_terminate(acc[r] / divisor, remaining) {
+                active[r] = false;
+                acc[r] = 0.0; // provably inside the dead band ⇒ zero
+                term.record_terminated(r, p);
+            }
+        }
+    }
+}
+
 /// The single plane-walk loop shared by the 1-bit and pooled paths:
 /// MSB → LSB so the early-termination bound (remaining planes can add
 /// at most `2^p − 1`) tightens fastest, skipping fully-terminated
@@ -109,27 +150,17 @@ fn walk_planes<S: RowValueSource>(
             continue;
         }
         src.load_plane(p, &planes[p], active, rng);
-        let weight = (1u32 << p) as f32;
-        for r in 0..rows {
-            if !active[r] {
-                term.record_skipped_row(r);
-                continue;
-            }
-            let v = src.row_value(r);
-            acc[r] += weight * v;
-            plane_signs[p][r] = v > 0.0;
-            term.record_processed(r);
-            if let Some(et) = &early_term {
-                // Remaining planes 0..p contribute at most 2^p − 1 (in
-                // the source's normalized per-plane units).
-                let remaining = (1u32 << p) as f32 - 1.0;
-                if et.should_terminate(acc[r] / divisor, remaining) {
-                    active[r] = false;
-                    acc[r] = 0.0; // provably inside the dead band ⇒ zero
-                    term.record_terminated(r, p);
-                }
-            }
-        }
+        step_plane_rows(
+            |r| src.row_value(r),
+            p,
+            rows,
+            divisor,
+            early_term,
+            active,
+            &mut acc,
+            &mut plane_signs[p],
+            &mut term,
+        );
     }
     (acc, plane_signs, term)
 }
@@ -223,6 +254,10 @@ pub struct BitplaneEngine {
     pub early_term: Option<EarlyTermination>,
     /// Internal scratch arena reused by every transform call.
     scratch: PlaneScratch,
+    /// Per-input scratch arenas for the fused cross-sample pooled path
+    /// (every input's plane decomposition, mask and MAV buffer must be
+    /// alive at once), reused across fused calls.
+    fused_scratch: Vec<PlaneScratch>,
     /// When set, planes run through the pool's scheduled arrays and the
     /// per-row outputs are multi-bit digitized MAVs instead of the
     /// ADC-free 1-bit signs (paper §IV). `None` (the default) keeps the
@@ -238,6 +273,7 @@ impl BitplaneEngine {
             input_bits,
             early_term: None,
             scratch: PlaneScratch::default(),
+            fused_scratch: Vec::new(),
             pool: None,
         }
     }
@@ -393,7 +429,25 @@ impl BitplaneEngine {
     /// generators — and therefore independent of how a caller shards the
     /// batch across worker threads (each shard derives the same
     /// per-sample streams from `seed` + the sample's global index).
+    ///
+    /// With a pool whose spec sets [`super::PoolSpec::fuse_batch`], the
+    /// batch takes the **cross-sample plane fusion** path: every
+    /// sample's bitplanes go to the pool together (one submission for
+    /// the whole batch without early termination; one submission per
+    /// plane depth under ET, gating masks included) instead of each
+    /// sample draining the pool alone. Outputs, `ConversionStats` and
+    /// pool accounting are bit-identical to the sequential walk —
+    /// fusion changes only when the coupling-group lanes see the work.
     pub fn transform_batch(&mut self, xs: &[Vec<u32>], seed: u64) -> Vec<BitplaneOutput> {
+        if self.fuses() {
+            // Per-sample plane seeds exactly as the sequential path
+            // draws them: the single `next_u64` each pooled transform
+            // takes from `Rng::for_stream(seed, i)`.
+            let plane_seeds: Vec<u64> =
+                (0..xs.len() as u64).map(|i| Rng::for_stream(seed, i).next_u64()).collect();
+            let refs: Vec<&[u32]> = xs.iter().map(Vec::as_slice).collect();
+            return self.transform_fused(&refs, &plane_seeds);
+        }
         let mut scratch = std::mem::take(&mut self.scratch);
         let out = xs
             .iter()
@@ -405,6 +459,206 @@ impl BitplaneEngine {
             .collect();
         self.scratch = scratch;
         out
+    }
+
+    /// Transform several inputs that share one caller RNG — the
+    /// [`crate::nn`] BWHT layer's shape, where every Hadamard block of a
+    /// pixel is its own pooled transform. Bit-identical to calling
+    /// [`BitplaneEngine::transform`] once per input with `rng` (each
+    /// pooled input consumes exactly one `next_u64`, in order); with
+    /// [`super::PoolSpec::fuse_batch`] set the inputs fuse into shared
+    /// pool submissions like [`BitplaneEngine::transform_batch`].
+    pub fn transform_many(&mut self, xs: &[&[u32]], rng: &mut Rng) -> Vec<BitplaneOutput> {
+        if !self.fuses() {
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let out =
+                xs.iter().map(|x| self.transform_with_scratch(x, rng, &mut scratch)).collect();
+            self.scratch = scratch;
+            return out;
+        }
+        let plane_seeds: Vec<u64> = xs.iter().map(|_| rng.next_u64()).collect();
+        self.transform_fused(xs, &plane_seeds)
+    }
+
+    /// True when transforms route through a pool that requests
+    /// cross-sample plane fusion.
+    fn fuses(&self) -> bool {
+        self.pool.as_ref().is_some_and(|p| p.spec().fuse_batch)
+    }
+
+    /// The fused (cross-sample) pooled transform core. Input `i` is the
+    /// exact computation `transform` would run with plane seed
+    /// `plane_seeds[i]`, replayed so the pool sees all inputs at once:
+    ///
+    /// - **No early termination**: every input's planes (MSB → LSB,
+    ///   input-major) go to the pool in *one*
+    ///   [`CimArrayPool::process_plane_requests`] submission. Each
+    ///   plane keeps the cursor slot, noise stream and therefore the
+    ///   exact conversion values of its sequential counterpart; the
+    ///   lanes just stay saturated across input boundaries instead of
+    ///   draining per input.
+    /// - **Early termination**: inputs walk their planes in lockstep —
+    ///   one fused submission per plane depth, each input under its own
+    ///   live mask (pruned rows still gate their conversions), with the
+    ///   shared [`step_plane_rows`] updating masks between depths.
+    ///
+    /// Deferred accounting: per-plane stats come back unapplied and are
+    /// replayed into the pool input-major, dispatch-ordered — the exact
+    /// merge sequence of the sequential walk — so `ConversionStats`
+    /// (energy float accumulation included) and the per-input `minus`
+    /// snapshots are bit-identical, not just close.
+    fn transform_fused(&mut self, xs: &[&[u32]], plane_seeds: &[u64]) -> Vec<BitplaneOutput> {
+        assert_eq!(xs.len(), plane_seeds.len());
+        let n = xs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let nbits = self.input_bits as usize;
+        let input_bits = self.input_bits;
+        let early_term = self.early_term;
+        let pool = self.pool.as_mut().expect("fused transform requires a pool");
+        let rows = pool.rows();
+        let cols = pool.cols();
+        let divisor = cols as f32;
+
+        let mut arenas = std::mem::take(&mut self.fused_scratch);
+        arenas.resize_with(n, PlaneScratch::default);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), cols, "input length != crossbar cols");
+            let a = &mut arenas[i];
+            decompose_bitplanes_into(x, input_bits, &mut a.planes);
+            a.active.clear();
+            a.active.resize(rows, true);
+            a.mav_values.clear();
+            a.mav_values.resize(nbits * rows, 0.0);
+        }
+        let mut accs: Vec<Vec<f32>> = vec![vec![0.0f32; rows]; n];
+        let mut signs: Vec<Vec<Vec<bool>>> = vec![vec![vec![false; rows]; nbits]; n];
+        let mut terms: Vec<TermStats> = (0..n).map(|_| TermStats::new(rows, nbits)).collect();
+        // Per-input deferred stats, in each input's dispatch order.
+        let mut stats: Vec<Vec<ConversionStats>> = vec![Vec::new(); n];
+
+        if early_term.is_none() {
+            // One submission for the whole batch, input-major MSB→LSB —
+            // the same (slot, stream) pairs per input as the sequential
+            // `process_planes` fan-out after `begin_transform`.
+            let per = {
+                let mut requests = Vec::with_capacity(n * nbits);
+                for (i, a) in arenas.iter_mut().enumerate() {
+                    let PlaneScratch { planes, mav_values, .. } = a;
+                    for (j, chunk) in mav_values.chunks_mut(rows).enumerate() {
+                        let p = nbits - 1 - j;
+                        requests.push(PlaneRequest {
+                            slot: j,
+                            seed: plane_seeds[i],
+                            stream: p as u64,
+                            plane: &planes[p],
+                            active: None,
+                            out: chunk,
+                        });
+                    }
+                }
+                pool.process_plane_requests(requests)
+            };
+            for (i, chunk) in per.chunks(nbits).enumerate() {
+                stats[i].extend_from_slice(chunk);
+            }
+            for i in 0..n {
+                let PlaneScratch { active, mav_values, .. } = &mut arenas[i];
+                for p in (0..nbits).rev() {
+                    let off = (nbits - 1 - p) * rows;
+                    let buf = &mav_values[off..off + rows];
+                    step_plane_rows(
+                        |r| buf[r] as f32,
+                        p,
+                        rows,
+                        divisor,
+                        None,
+                        active,
+                        &mut accs[i],
+                        &mut signs[i][p],
+                        &mut terms[i],
+                    );
+                }
+            }
+        } else {
+            // Lockstep walk: one fused submission per plane depth, each
+            // input under its own live mask; slots advance only for
+            // dispatched planes, exactly like the sequential ET walk.
+            let mut next_slot = vec![0usize; n];
+            for p in (0..nbits).rev() {
+                let dispatch: Vec<bool> =
+                    arenas.iter().map(|a| a.active.iter().any(|&x| x)).collect();
+                for (i, a) in arenas.iter().enumerate() {
+                    if !dispatch[i] {
+                        terms[i].record_skipped_plane(p, &a.active);
+                    }
+                }
+                let off = (nbits - 1 - p) * rows;
+                let per = {
+                    let mut requests = Vec::new();
+                    for (i, a) in arenas.iter_mut().enumerate() {
+                        if !dispatch[i] {
+                            continue;
+                        }
+                        let slot = next_slot[i];
+                        next_slot[i] += 1;
+                        let PlaneScratch { planes, active, mav_values, .. } = a;
+                        requests.push(PlaneRequest {
+                            slot,
+                            seed: plane_seeds[i],
+                            stream: p as u64,
+                            plane: &planes[p],
+                            active: Some(&active[..]),
+                            out: &mut mav_values[off..off + rows],
+                        });
+                    }
+                    pool.process_plane_requests(requests)
+                };
+                let mut k = 0usize;
+                for (i, a) in arenas.iter_mut().enumerate() {
+                    if !dispatch[i] {
+                        continue;
+                    }
+                    stats[i].push(per[k]);
+                    k += 1;
+                    let PlaneScratch { active, mav_values, .. } = a;
+                    let buf = &mav_values[off..off + rows];
+                    step_plane_rows(
+                        |r| buf[r] as f32,
+                        p,
+                        rows,
+                        divisor,
+                        early_term,
+                        active,
+                        &mut accs[i],
+                        &mut signs[i][p],
+                        &mut terms[i],
+                    );
+                }
+            }
+        }
+
+        // Accounting replay: input-major, dispatch order — the exact
+        // sequence of merges the sequential walk performs against the
+        // pool's running accumulators, so totals and per-input deltas
+        // are bit-identical (energy float accumulation included).
+        let mut outputs = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = pool.stats();
+            for s in &stats[i] {
+                pool.apply_plane_stats(s);
+            }
+            let conv = pool.stats().minus(&base);
+            outputs.push(BitplaneOutput {
+                values: std::mem::take(&mut accs[i]),
+                plane_signs: std::mem::take(&mut signs[i]),
+                term: std::mem::take(&mut terms[i]),
+                conv,
+            });
+        }
+        self.fused_scratch = arenas;
+        outputs
     }
 
     /// Signed transform via positive/negative split: `x = x⁺ − x⁻`.

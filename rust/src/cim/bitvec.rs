@@ -154,15 +154,26 @@ impl SignMatrix {
 
     /// Exact row dot product with a {0,1} input vector:
     /// `Σ_c M[r,c]·x[c] = 2·|plus ∩ x| − |x|`.
+    ///
+    /// Recomputes `|x|` per call; any caller evaluating **multiple rows
+    /// against the same `x`** should hoist `x.count_ones()` once and
+    /// use [`SignMatrix::row_dot_with_ones`] instead — the per-row
+    /// recomputation doubles the popcount work of a full matvec (the
+    /// PR-5 audit left this wrapper with no multi-row callers in the
+    /// library; `matvec` and the crossbar paths all hoist).
     #[inline]
     pub fn row_dot(&self, r: usize, x: &BitVec) -> i32 {
+        self.row_dot_with_ones(r, x, x.count_ones() as i32)
+    }
+
+    /// [`SignMatrix::row_dot`] with the input popcount `ones ==
+    /// x.count_ones()` hoisted out by the caller — the multi-row form:
+    /// one popcount pass over the row intersection, zero over `x`.
+    #[inline]
+    pub fn row_dot_with_ones(&self, r: usize, x: &BitVec, ones: i32) -> i32 {
         debug_assert_eq!(x.len(), self.cols);
-        let row = &self.plus[r * self.words_per_row..(r + 1) * self.words_per_row];
-        let mut plus_and_x = 0u32;
-        for (w, xw) in row.iter().zip(x.words()) {
-            plus_and_x += (w & xw).count_ones();
-        }
-        2 * plus_and_x as i32 - x.count_ones() as i32
+        debug_assert_eq!(ones, x.count_ones() as i32);
+        2 * self.row_plus_count(r, x) as i32 - ones
     }
 
     /// Count of +1 cells that see a 1 input in row `r` — the charge count
@@ -175,13 +186,13 @@ impl SignMatrix {
 
     /// All row dot products (the exact digital transform of one plane).
     ///
-    /// PERF: `x.count_ones()` is hoisted out of the row loop — `row_dot`
-    /// recomputes it per row, which doubles the popcount work of a full
-    /// matvec (see EXPERIMENTS.md §Perf).
+    /// PERF: `x.count_ones()` is hoisted out of the row loop (see
+    /// EXPERIMENTS.md §Perf) — this is just the hoisted
+    /// [`SignMatrix::row_dot_with_ones`] mapped over the rows.
     pub fn matvec(&self, x: &BitVec) -> Vec<i32> {
         debug_assert_eq!(x.len(), self.cols);
         let ones = x.count_ones() as i32;
-        (0..self.rows).map(|r| 2 * self.row_plus_count(r, x) as i32 - ones).collect()
+        (0..self.rows).map(|r| self.row_dot_with_ones(r, x, ones)).collect()
     }
 }
 
@@ -256,6 +267,29 @@ mod tests {
                 let plus = mx.row_plus_count(r, &x) as i32;
                 let ones = x.count_ones() as i32;
                 crate::prop_assert!(dot == 2 * plus - ones, "identity broken");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_dot_with_hoisted_ones_matches_naive() {
+        // Independent oracle (not `row_dot`, which now delegates here).
+        prop::check("row_dot_with_ones vs naive", 96, |rng: &mut Rng| {
+            let cols = 1 + rng.index(150);
+            let rows = 1 + rng.index(16);
+            let mx = SignMatrix::from_fn(rows, cols, |_, _| rng.bool());
+            let bits: Vec<bool> = (0..cols).map(|_| rng.bool()).collect();
+            let x = BitVec::from_bits(&bits);
+            let ones = x.count_ones() as i32;
+            for r in 0..rows {
+                let naive: i32 =
+                    (0..cols).filter(|&c| bits[c]).map(|c| mx.get(r, c) as i32).sum();
+                crate::prop_assert!(
+                    mx.row_dot_with_ones(r, &x, ones) == naive,
+                    "row {r}: hoisted {} vs naive {naive}",
+                    mx.row_dot_with_ones(r, &x, ones)
+                );
             }
             Ok(())
         });

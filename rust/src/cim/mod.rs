@@ -40,4 +40,4 @@ pub use bitplane::{
 pub use bitvec::{BitVec, SignMatrix};
 pub use crossbar::{Crossbar, CrossbarConfig};
 pub use early_term::{EarlyTermination, TermStats};
-pub use pool::{CimArrayPool, ConversionStats, PoolSpec};
+pub use pool::{CimArrayPool, ConversionStats, PlaneRequest, PoolSpec};

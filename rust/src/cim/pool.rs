@@ -15,11 +15,18 @@
 //!
 //! Coupling groups are mutually independent — disjoint arrays, disjoint
 //! converters — which is what [`CimArrayPool::process_planes`] exploits:
-//! submitted planes queue onto per-group lanes that fan across scoped
-//! worker threads (one `thread::scope` per call), with per-plane
-//! deterministic noise streams (`Rng::for_stream`) and submission-order
-//! stat merging so results are identical at any thread count (the same
-//! contract as `AnalogEngine::infer_batch` sharding).
+//! submitted planes queue onto per-group lanes that fan across the
+//! pool's persistent worker runtime ([`crate::util::Executor`]; shared
+//! with the engine's batch shards when serving, lazily built otherwise
+//! — thread spawn is paid once per pool lifetime, never per call), with
+//! per-plane deterministic noise streams (`Rng::for_stream`) and
+//! submission-order stat merging so results are identical at any thread
+//! count (the same contract as `AnalogEngine::infer_batch` sharding).
+//! [`CimArrayPool::process_plane_requests`] is the fused-batch form of
+//! the same dispatch: every plane carries its own cursor slot, stream
+//! seed and gating mask, and the per-plane accounting is returned to
+//! the caller instead of applied, so cross-sample fusion can replay the
+//! sequential walk's accounting order exactly.
 //!
 //! **Runtime invariants** — enforced on the live data path, not just in
 //! `network::schedule::validate`:
@@ -42,9 +49,11 @@
 //! [`ConversionStats`] and thread up through the engines into
 //! [`crate::coordinator::Metrics`].
 
+use std::sync::Arc;
+
 use crate::adc::{Adc, AnyAdc, AsymmetricAdc, Conversion, ImmersedAdc, ImmersedMode};
 use crate::network::{CouplingMode, InterleaveSchedule, Role, Topology};
-use crate::util::Rng;
+use crate::util::{Executor, Rng};
 
 use super::bitvec::{BitVec, SignMatrix};
 use super::crossbar::{Crossbar, CrossbarConfig};
@@ -64,9 +73,18 @@ pub struct PoolSpec {
     /// Drive SAR references with the MAV-statistics comparison tree.
     pub asymmetric: bool,
     /// Worker threads for [`CimArrayPool::process_planes`]: 1 runs the
-    /// fan-out inline (the default), 0 auto-detects, N caps the scoped
-    /// workers per phase. Results are thread-count invariant.
+    /// fan-out inline (the default), 0 auto-detects, N caps the
+    /// persistent workers. Results are thread-count invariant.
     pub threads: usize,
+    /// Plane fusion (`adcim serve --fuse-batch`): consumers collect
+    /// same-shape bitplanes from several transforms into shared pooled
+    /// submissions instead of draining the pool per transform —
+    /// [`crate::cim::BitplaneEngine::transform_batch`] fuses across
+    /// *samples*; the serving path (`nn::BwhtLayer`, which forwards one
+    /// sample at a time) fuses across the sample's Hadamard *blocks*.
+    /// Bit-identical outputs and accounting to the sequential walk
+    /// either way (`tests/executor_fusion.rs`).
+    pub fuse_batch: bool,
 }
 
 impl PoolSpec {
@@ -76,7 +94,7 @@ impl PoolSpec {
     /// run the paper's 5 bits.
     pub fn fig11(mode: ImmersedMode) -> Self {
         let adc_bits = if matches!(mode, ImmersedMode::Flash) { 2 } else { 5 };
-        PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false, threads: 1 }
+        PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false, threads: 1, fuse_batch: false }
     }
 
     /// Parse CLI/config inputs; `Ok(None)` when `n_arrays == 0` (no
@@ -110,7 +128,8 @@ impl PoolSpec {
         } else {
             5
         };
-        let spec = PoolSpec { n_arrays, adc_bits, mode, asymmetric, threads: 1 };
+        let spec =
+            PoolSpec { n_arrays, adc_bits, mode, asymmetric, threads: 1, fuse_batch: false };
         spec.validate()?;
         Ok(Some(spec))
     }
@@ -287,22 +306,49 @@ fn run_plane_task(
     stats
 }
 
+/// One fully-described plane dispatch — the unit of the fused batch
+/// entry point [`CimArrayPool::process_plane_requests`]. Unlike
+/// [`CimArrayPool::process_planes`] (which assigns consecutive cursor
+/// slots and shares one seed/mask across the call), every request pins
+/// its own slot, noise stream and gating mask, so a caller can replay
+/// *exactly* the dispatches an arbitrary interleaving of sequential
+/// transforms would have made — the contract cross-sample plane fusion
+/// is built on.
+pub struct PlaneRequest<'a> {
+    /// Cursor slot this plane occupies: the same (group, phase,
+    /// computer) derivation as the `slot`-th `process_plane` call after
+    /// a [`CimArrayPool::begin_transform`].
+    pub slot: usize,
+    /// Noise-stream seed; the plane's analog noise is drawn from
+    /// `Rng::for_stream(seed, stream)`.
+    pub seed: u64,
+    pub stream: u64,
+    pub plane: &'a BitVec,
+    /// Per-row conversion-gating mask (rows early termination pruned).
+    pub active: Option<&'a [bool]>,
+    /// Decoded signed sums, one per row.
+    pub out: &'a mut [f64],
+}
+
 /// One plane bound for one coupling group.
 struct PlaneJob<'a> {
     /// Submission index — accounting merges in this order.
     idx: usize,
     /// Compute-role array's offset inside the group's array block.
     computer: usize,
-    plane: &'a BitVec,
+    seed: u64,
     stream: u64,
+    plane: &'a BitVec,
+    active: Option<&'a [bool]>,
     out: &'a mut [f64],
 }
 
-/// A coupling group's worth of a `process_planes` call: the group's
-/// disjoint pool state (contiguous array block, converter, MAV
-/// scratch) plus its ordered queue of plane jobs. Lanes share no
-/// state, so they are the unit that moves onto scoped worker threads —
-/// one `thread::scope` spans the whole call, not one per rotation.
+/// A coupling group's worth of a batched dispatch: the group's disjoint
+/// pool state (contiguous array block, converter, MAV scratch) plus its
+/// ordered queue of plane jobs. Lanes share no state, so they are the
+/// unit submitted to the persistent worker runtime — the executor's
+/// threads were spawned at pool/engine construction, so the per-call
+/// cost is a channel send, not a `thread::spawn`.
 struct GroupLane<'a> {
     group: &'a mut [Crossbar],
     adc: &'a mut AnyAdc,
@@ -313,17 +359,17 @@ struct GroupLane<'a> {
 impl GroupLane<'_> {
     /// Run this lane's jobs in submission order — the only ordering
     /// that matters, since jobs in different lanes share no state.
-    fn run(self, seed: u64, active: Option<&[bool]>) -> Vec<(usize, ConversionStats)> {
+    fn run(self) -> Vec<(usize, ConversionStats)> {
         let GroupLane { group, adc, mavs, jobs } = self;
         jobs.into_iter()
             .map(|job| {
-                let mut rng = Rng::for_stream(seed, job.stream);
+                let mut rng = Rng::for_stream(job.seed, job.stream);
                 let stats = run_plane_task(
                     &mut group[job.computer],
                     adc,
                     mavs,
                     job.plane,
-                    active,
+                    job.active,
                     &mut rng,
                     job.out,
                 );
@@ -361,6 +407,13 @@ pub struct CimArrayPool {
     plane_open: bool,
     /// Per-group MAV scratch, reused across planes and transforms.
     group_scratch: Vec<Vec<f64>>,
+    /// Persistent worker runtime for the batched plane fan-out. Shared
+    /// with the serving engine when injected ([`CimArrayPool::set_executor`]
+    /// — one runtime for batch shards *and* pool lanes, so
+    /// `engine_threads × pool_threads` never oversubscribes), lazily
+    /// built at first parallel use otherwise. Cloned pools (worker-shard
+    /// model clones) share the same runtime through the `Arc`.
+    executor: Option<Arc<Executor>>,
 }
 
 impl CimArrayPool {
@@ -440,6 +493,7 @@ impl CimArrayPool {
             converted: Vec::new(),
             plane_open: false,
             group_scratch,
+            executor: None,
         }
     }
 
@@ -448,9 +502,26 @@ impl CimArrayPool {
     }
 
     /// Override the `process_planes` worker-thread count after
-    /// construction (0 = auto, 1 = inline sequential).
+    /// construction (0 = auto, 1 = inline sequential). Does not resize
+    /// an already-built runtime; pair with [`CimArrayPool::set_executor`]
+    /// to swap one in.
     pub fn set_threads(&mut self, threads: usize) {
         self.spec.threads = threads;
+    }
+
+    /// Inject (or clear) the persistent worker runtime the plane
+    /// fan-out submits to. The serving engine injects its own executor
+    /// here so batch shards and pool lanes share one set of workers;
+    /// standalone pools may leave it unset and a private runtime is
+    /// built lazily at first parallel use. Results never depend on the
+    /// runtime's width (submission-order merge).
+    pub fn set_executor(&mut self, executor: Option<Arc<Executor>>) {
+        self.executor = executor;
+    }
+
+    /// The runtime currently backing the parallel fan-out, if any.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        self.executor.as_ref()
     }
 
     pub fn rows(&self) -> usize {
@@ -626,13 +697,14 @@ impl CimArrayPool {
     /// would have used and draws its analog noise from
     /// `Rng::for_stream(seed, streams[i])`. Planes are queued onto
     /// per-group *lanes* — disjoint arrays, disjoint converters, plane
-    /// order preserved within each lane — and the lanes fan across
-    /// scoped worker threads (`PoolSpec::threads`) under **one**
-    /// `thread::scope` for the whole call, so the spawn cost is per
-    /// call, not per interleave rotation. Outputs, counters and even
-    /// the `energy_fj` accumulation order are identical at any thread
-    /// count, because per-task accounting re-merges in submission
-    /// order after the lanes join.
+    /// order preserved within each lane — and the lanes run on the
+    /// pool's **persistent** worker runtime (`PoolSpec::threads` lanes;
+    /// see [`CimArrayPool::set_executor`]), so the per-call cost is a
+    /// channel send — thread spawn was paid once at runtime
+    /// construction, not per call and not per interleave rotation.
+    /// Outputs, counters and even the `energy_fj` accumulation order
+    /// are identical at any thread count, because per-task accounting
+    /// re-merges in submission order after the lanes drain.
     ///
     /// `active` is the per-row conversion-gating mask shared by every
     /// submitted plane: rows early termination has pruned are gated
@@ -649,39 +721,100 @@ impl CimArrayPool {
         let rows = self.rows();
         assert_eq!(planes.len(), streams.len(), "planes/streams length mismatch");
         assert_eq!(out.len(), planes.len() * rows, "output length != planes x rows");
-        if let Some(mask) = active {
-            assert_eq!(mask.len(), rows, "active mask length != rows");
-        }
         if planes.is_empty() {
             return;
         }
+        let cursor0 = self.cursor;
+        self.cursor += planes.len();
+        let requests: Vec<PlaneRequest<'_>> = out
+            .chunks_mut(rows)
+            .enumerate()
+            .map(|(i, chunk)| PlaneRequest {
+                slot: cursor0 + i,
+                seed,
+                stream: streams[i],
+                plane: planes[i],
+                active,
+                out: chunk,
+            })
+            .collect();
+        let ordered = self.run_requests(requests);
+        for res in &ordered {
+            self.apply_plane_result(rows as u64, res);
+        }
+    }
+
+    /// Fused batch dispatch with **deferred accounting**: run every
+    /// request (own slot, own noise stream, own gating mask — see
+    /// [`PlaneRequest`]) and return the per-request [`ConversionStats`]
+    /// in submission order *without* folding them into the pool's
+    /// accumulators. The caller must feed every returned entry through
+    /// [`CimArrayPool::apply_plane_stats`] exactly once, in whatever
+    /// order the equivalent sequential walk would have produced them —
+    /// that replay is what keeps fused serving bit-identical to the
+    /// sequential path down to the `energy_fj` float accumulation and
+    /// the per-transform `minus` snapshots. Conversion values, the
+    /// exactly-once-or-gated row pass and the per-request stats
+    /// themselves are computed here as usual.
+    pub fn process_plane_requests(
+        &mut self,
+        requests: Vec<PlaneRequest<'_>>,
+    ) -> Vec<ConversionStats> {
+        self.run_requests(requests)
+    }
+
+    /// Fold one plane's deferred accounting (from
+    /// [`CimArrayPool::process_plane_requests`]) into the pool totals —
+    /// the caller-side half of the deferred-accounting contract.
+    pub fn apply_plane_stats(&mut self, stats: &ConversionStats) {
+        let rows = self.rows() as u64;
+        self.apply_plane_result(rows, stats);
+    }
+
+    /// The dispatch core shared by [`CimArrayPool::process_planes`] and
+    /// [`CimArrayPool::process_plane_requests`]: derive each request's
+    /// (group, phase, computer) from its slot, queue onto per-group
+    /// lanes, run the lanes (inline, or on the persistent runtime when
+    /// `PoolSpec::threads` asks for fan-out and more than one lane has
+    /// work), and return per-request stats in submission order.
+    fn run_requests(&mut self, requests: Vec<PlaneRequest<'_>>) -> Vec<ConversionStats> {
+        let n = requests.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let rows = self.rows();
         let n_groups = self.groups.len();
         let size = self.topology.mode().group_size();
         let phases = self.schedule.phases();
-        let threads = match self.spec.threads {
-            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            t => t,
-        };
+        let threads = crate::util::executor::resolve_lanes(self.spec.threads);
 
-        // Assign each plane its cursor slot — group and phase — exactly
-        // as the equivalent process_plane sequence would, queueing it on
-        // its group's lane.
-        let cursor0 = self.cursor;
-        self.cursor += planes.len();
         let mut queues: Vec<Vec<PlaneJob<'_>>> = (0..n_groups).map(|_| Vec::new()).collect();
-        for (i, chunk) in out.chunks_mut(rows).enumerate() {
-            let slot = cursor0 + i;
-            let g = slot % n_groups;
-            let phase = (slot / n_groups) % phases;
+        for (i, req) in requests.into_iter().enumerate() {
+            assert_eq!(req.out.len(), rows, "request output length != array rows");
+            if let Some(mask) = req.active {
+                assert_eq!(mask.len(), rows, "active mask length != rows");
+            }
+            let g = req.slot % n_groups;
+            let phase = (req.slot / n_groups) % phases;
             let computer = self.derive_computer(phase, g) - g * size;
             queues[g].push(PlaneJob {
                 idx: i,
                 computer,
-                plane: planes[i],
-                stream: streams[i],
-                out: chunk,
+                seed: req.seed,
+                stream: req.stream,
+                plane: req.plane,
+                active: req.active,
+                out: req.out,
             });
         }
+
+        // Resolve the runtime handle before taking the disjoint lane
+        // borrows below (the handle is just an Arc clone). A self-built
+        // runtime never needs more lanes than the pool has coupling
+        // groups — at most `n_groups` lanes can ever hold work.
+        let busy = queues.iter().filter(|q| !q.is_empty()).count();
+        let workers = threads.clamp(1, busy.max(1));
+        let executor = (workers > 1).then(|| self.ensure_executor(threads.min(n_groups)));
 
         // Disjoint mutable views per group with queued work: its
         // contiguous array block, its converter, its MAV scratch.
@@ -696,49 +829,51 @@ impl CimArrayPool {
             .map(|(((group, adc), mavs), jobs)| GroupLane { group, adc, mavs, jobs })
             .collect();
 
-        let workers = threads.clamp(1, lanes.len());
-        let results: Vec<(usize, ConversionStats)> = if workers <= 1 {
-            lanes.into_iter().flat_map(|lane| lane.run(seed, active)).collect()
-        } else {
-            // PR-1 shard pattern: contiguous lane shards on scoped
-            // threads, results re-merged in submission order below.
-            let shard_len = lanes.len().div_ceil(workers);
-            let mut shards: Vec<Vec<GroupLane<'_>>> = Vec::with_capacity(workers);
-            let mut it = lanes.into_iter();
-            loop {
-                let shard: Vec<GroupLane<'_>> = it.by_ref().take(shard_len).collect();
-                if shard.is_empty() {
-                    break;
+        let results: Vec<(usize, ConversionStats)> = match executor {
+            None => lanes.into_iter().flat_map(GroupLane::run).collect(),
+            Some(exec) => {
+                // PR-1 shard pattern on the persistent runtime: lanes
+                // group into at most `workers` tasks, so
+                // `PoolSpec::threads` still caps this call's
+                // concurrency even when the injected runtime is wider
+                // (it is shared with the engine's batch shards). The
+                // idx merge below removes any ordering dependence.
+                let shard_len = lanes.len().div_ceil(workers);
+                let mut shards: Vec<Vec<GroupLane<'_>>> = Vec::with_capacity(workers);
+                let mut it = lanes.into_iter();
+                loop {
+                    let shard: Vec<GroupLane<'_>> = it.by_ref().take(shard_len).collect();
+                    if shard.is_empty() {
+                        break;
+                    }
+                    shards.push(shard);
                 }
-                shards.push(shard);
-            }
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = shards
+                let tasks: Vec<_> = shards
                     .into_iter()
                     .map(|shard| {
-                        scope.spawn(move || {
-                            shard
-                                .into_iter()
-                                .flat_map(|lane| lane.run(seed, active))
-                                .collect::<Vec<_>>()
-                        })
+                        move || shard.into_iter().flat_map(GroupLane::run).collect::<Vec<_>>()
                     })
                     .collect();
-                handles
-                    .into_iter()
-                    .flat_map(|h| h.join().expect("pool plane task panicked"))
-                    .collect()
-            })
+                exec.run(tasks).into_iter().flatten().collect()
+            }
         };
 
         // Submission-order merge, whatever worker ran what.
-        let mut ordered = vec![ConversionStats::default(); planes.len()];
+        let mut ordered = vec![ConversionStats::default(); n];
         for (idx, stats) in results {
             ordered[idx] = stats;
         }
-        for res in &ordered {
-            self.apply_plane_result(rows as u64, res);
+        ordered
+    }
+
+    /// The persistent runtime backing parallel dispatch — injected by
+    /// the serving engine, or lazily built (sized `lanes`) at first
+    /// parallel use so standalone pools pay the spawn exactly once.
+    fn ensure_executor(&mut self, lanes: usize) -> Arc<Executor> {
+        if self.executor.is_none() {
+            self.executor = Some(Arc::new(Executor::new(lanes)));
         }
+        self.executor.as_ref().expect("executor just ensured").clone()
     }
 
     /// Open the per-plane exactly-once ledger for `rows` MAVs. Driven by
@@ -820,7 +955,7 @@ mod tests {
     }
 
     fn spec(n_arrays: usize, mode: ImmersedMode, adc_bits: u8) -> PoolSpec {
-        PoolSpec { n_arrays, adc_bits, mode, asymmetric: false, threads: 1 }
+        PoolSpec { n_arrays, adc_bits, mode, asymmetric: false, threads: 1, fuse_batch: false }
     }
 
     fn ideal_pool(mode: ImmersedMode, adc_bits: u8) -> CimArrayPool {
@@ -933,6 +1068,7 @@ mod tests {
             mode: ImmersedMode::Sar,
             asymmetric: true,
             threads: 1,
+            fuse_batch: false,
         };
         let mut rng = Rng::new(8);
         let mut asym =
@@ -1122,6 +1258,70 @@ mod tests {
         masked.process_plane_masked(&x, 0, 1, Some(&active), &mut out_m);
         assert_eq!(out_m, out_g);
         assert_eq!(masked.stats(), gated.stats());
+    }
+
+    #[test]
+    fn plane_requests_match_process_planes_with_deferred_apply() {
+        // The fused entry point fed the slots/seed/streams that
+        // process_planes would derive itself, with the returned stats
+        // replayed in submission order, is the same computation bit for
+        // bit — outputs, counters, energy accumulation.
+        let planes: Vec<BitVec> = (0..6).map(|s| plane(32, 40 + s, 0.45)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..6).collect();
+        let seed = 0xf00d;
+        let mut classic = noisy_pool(8, 1);
+        let mut fused = noisy_pool(8, 1);
+        let mut out_c = vec![0.0; 6 * 32];
+        let mut out_f = vec![0.0; 6 * 32];
+        classic.process_planes(&refs, &streams, seed, None, &mut out_c);
+        let requests: Vec<PlaneRequest<'_>> = out_f
+            .chunks_mut(32)
+            .enumerate()
+            .map(|(i, chunk)| PlaneRequest {
+                slot: i,
+                seed,
+                stream: streams[i],
+                plane: refs[i],
+                active: None,
+                out: chunk,
+            })
+            .collect();
+        let per = fused.process_plane_requests(requests);
+        assert_eq!(per.len(), 6);
+        // Nothing applied yet: the deferred half is the caller's job.
+        assert_eq!(fused.stats(), ConversionStats::default());
+        assert_eq!(fused.mavs_produced(), 0);
+        for s in &per {
+            fused.apply_plane_stats(s);
+        }
+        assert_eq!(out_f, out_c);
+        assert_eq!(fused.stats(), classic.stats());
+        assert_eq!(fused.mavs_produced(), classic.mavs_produced());
+        assert_eq!(fused.mavs_digitized(), classic.mavs_digitized());
+    }
+
+    #[test]
+    fn parallel_dispatch_reuses_one_persistent_runtime() {
+        // The first parallel call builds the executor; later calls (and
+        // clones) reuse the same one — no per-call spawning.
+        let planes: Vec<BitVec> = (0..8).map(|s| plane(32, 50 + s, 0.5)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..8).collect();
+        let mut pool = noisy_pool(8, 4);
+        assert!(pool.executor().is_none(), "no runtime before first parallel call");
+        let mut out = vec![0.0; 8 * 32];
+        pool.process_planes(&refs, &streams, 1, None, &mut out);
+        let first = pool.executor().expect("parallel call builds the runtime").clone();
+        pool.process_planes(&refs, &streams, 2, None, &mut out);
+        let second = pool.executor().unwrap();
+        assert!(Arc::ptr_eq(&first, second), "runtime must persist across calls");
+        assert!(first.lanes() >= 2);
+        let clone = pool.clone();
+        assert!(
+            Arc::ptr_eq(&first, clone.executor().unwrap()),
+            "shard clones share the runtime"
+        );
     }
 
     #[test]

@@ -84,8 +84,17 @@ pub struct ServerConfig {
     /// (`CimArrayPool::process_planes`): independent coupling groups of
     /// one interleave phase run concurrently. 0 = auto-detect,
     /// 1 = inline sequential (default). Results are thread-count
-    /// invariant by the per-plane RNG-stream contract.
+    /// invariant by the per-plane RNG-stream contract. Shards and pool
+    /// lanes share one persistent worker runtime, so this composes with
+    /// `engine_threads` without oversubscribing.
     pub pool_threads: usize,
+    /// Plane fusion (`adcim serve --fuse-batch`, analog engine with a
+    /// pool): each served sample's bitplanes — all Hadamard blocks of
+    /// a pixel — reach the pool in one shared submission instead of
+    /// one per block; batch APIs (`BitplaneEngine::transform_batch`)
+    /// additionally fuse across samples. Bit-identical serving
+    /// results; off by default.
+    pub fuse_batch: bool,
     /// Run ingest through the frequency-domain sensor frontend
     /// (`adcim serve --frontend`): frames are sequency-encoded,
     /// triaged, and served compressed.
@@ -121,6 +130,7 @@ impl Default for ServerConfig {
             adc_bits: 0,
             asymmetric_adc: false,
             pool_threads: 1,
+            fuse_batch: false,
             frontend: false,
             frontend_topk: 32,
             frontend_select: String::new(),
@@ -172,6 +182,7 @@ impl ServerConfig {
                 .get_int("server", "pool_threads")
                 .unwrap_or(d.pool_threads as i64)
                 .clamp(0, 1024) as usize,
+            fuse_batch: t.get_bool("server", "fuse_batch").unwrap_or(d.fuse_batch),
             frontend: t.get_bool("server", "frontend").unwrap_or(d.frontend),
             // Negative budgets mean "keep all" (0) instead of wrapping.
             frontend_topk: t
@@ -233,7 +244,7 @@ mod tests {
     fn from_toml_pool_settings() {
         let t = TomlLite::parse(
             "[server]\npool_arrays = 4\nadc_mode = \"sar\"\nadc_bits = 5\n\
-             asymmetric_adc = true\npool_threads = 4\n",
+             asymmetric_adc = true\npool_threads = 4\nfuse_batch = true\n",
         )
         .unwrap();
         let s = ServerConfig::from_toml(&t);
@@ -242,8 +253,10 @@ mod tests {
         assert_eq!(s.adc_bits, 5);
         assert!(s.asymmetric_adc);
         assert_eq!(s.pool_threads, 4);
+        assert!(s.fuse_batch);
         let d = ServerConfig::from_toml(&TomlLite::default());
         assert_eq!(d.pool_threads, 1, "pool fan-out defaults to sequential");
+        assert!(!d.fuse_batch, "cross-sample fusion defaults off");
     }
 
     #[test]

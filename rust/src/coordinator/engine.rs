@@ -6,9 +6,10 @@
 //! - [`AnalogEngine`] — the same trained parameters executed through
 //!   the CiM crossbar simulator ([`crate::cim`]) at a configurable
 //!   operating point: the paper's hardware path, with its quantization
-//!   and analog non-idealities. Batches shard across std worker threads
-//!   with per-sample deterministic noise streams, so results are
-//!   identical at any thread count.
+//!   and analog non-idealities. Batches shard across a persistent
+//!   worker runtime (`util::Executor`, shared with the CiM pool's
+//!   plane lanes) with per-sample deterministic noise streams, so
+//!   results are identical at any thread count.
 //!
 //! Compressed serving: workers hand engines [`FramePayload`]s. The
 //! default path decodes each [`crate::frontend::CompressedFrame`] to
@@ -25,6 +26,7 @@ use anyhow::Result;
 use crate::cim::{ConversionStats, CrossbarConfig, EarlyTermination, PoolSpec};
 use crate::frontend::codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
 use crate::nn::bwht_layer::BwhtExec;
+use crate::util::Executor;
 use crate::nn::model::bwht_mlp_from_weights;
 use crate::nn::{Sequential, Tensor};
 use crate::runtime::Artifacts;
@@ -132,9 +134,14 @@ impl InferenceEngine for DigitalEngine {
 
 /// CiM-simulator-backed analog engine (same trained weights).
 ///
-/// `infer_batch` shards the batch across std worker threads (scoped, one
-/// deep model clone per shard). Determinism contract: sample `i` of a
-/// batch always draws its analog noise from the per-layer stream
+/// `infer_batch` shards the batch across the engine's **persistent
+/// worker runtime** ([`Executor`]: long-lived workers built once per
+/// engine lifetime, one deep model clone per shard per batch) — thread
+/// spawn is off the per-request path entirely. The same runtime is
+/// injected into every BWHT layer's collaborative digitization pool,
+/// so `engine_threads × pool_threads` share one set of workers instead
+/// of oversubscribing. Determinism contract: sample `i` of a batch
+/// always draws its analog noise from the per-layer stream
 /// `Rng::for_stream(layer_seed, i)` — a pure function of the sample's
 /// global index — so logits are bit-identical whether the batch runs on
 /// one thread or sixteen, and regardless of shard boundaries.
@@ -144,6 +151,10 @@ pub struct AnalogEngine {
     /// Worker threads for `infer_batch`: 0 = auto (available
     /// parallelism), 1 = in-place sequential (default).
     threads: usize,
+    /// Persistent worker runtime shared by batch shards and pool plane
+    /// lanes; built lazily at first parallel use, then reused for the
+    /// engine's lifetime.
+    executor: Option<Arc<Executor>>,
     /// Termination counters merged back from worker-shard model clones.
     shard_term: (u64, u64),
     /// Conversion accounting merged back from worker-shard model clones.
@@ -256,6 +267,7 @@ impl AnalogEngine {
             model,
             input,
             threads: 1,
+            executor: None,
             shard_term: (0, 0),
             shard_conv: ConversionStats::default(),
             next_stream: 0,
@@ -284,8 +296,12 @@ impl AnalogEngine {
     /// already in analog exec mode; resets their fabricated engines.
     /// `spec.threads` controls the pool's own per-phase plane fan-out
     /// (`CimArrayPool::process_planes`) and composes with
-    /// [`AnalogEngine::with_threads`] batch sharding — both are
-    /// thread-count invariant, so logits never depend on either knob.
+    /// [`AnalogEngine::with_threads`] batch sharding — both draw from
+    /// the engine's one persistent runtime and both are thread-count
+    /// invariant, so logits never depend on either knob.
+    /// `spec.fuse_batch` additionally turns on plane fusion inside
+    /// each BWHT layer — the sample's Hadamard blocks share one pool
+    /// submission (bit-identical by construction).
     /// Validates the spec against each BWHT block's width up front, so
     /// an infeasible resolution is a clean error here instead of an
     /// assertion panic on a serving worker thread mid-batch.
@@ -389,12 +405,50 @@ impl AnalogEngine {
         Some(f)
     }
 
-    /// Shard `items` across worker threads (inline when `threads == 1`),
-    /// running `run` per item with the item's global stream id — the
-    /// engine's one batch loop, shared by the raw and payload paths.
-    /// Per-shard termination/conversion counters merge back against the
-    /// prototype baseline exactly as before; results are thread-count
-    /// invariant by the per-sample stream contract.
+    /// Widest pool plane fan-out any BWHT layer asks for (resolved via
+    /// the shared `0 = auto` policy, capped by the pool's array count
+    /// — it can never have more coupling-group lanes than arrays;
+    /// 1 = no pool parallelism).
+    fn max_pool_lanes(&mut self) -> usize {
+        let mut lanes = 1usize;
+        self.model.for_each_bwht(|b| {
+            if let BwhtExec::Analog { pool: Some(spec), .. } = b.exec {
+                let t = crate::util::executor::resolve_lanes(spec.threads);
+                lanes = lanes.max(t.min(spec.n_arrays.max(1)));
+            }
+        });
+        lanes
+    }
+
+    /// The engine's persistent worker runtime, built at first parallel
+    /// use (and widened if a later configuration asks for more lanes) —
+    /// the once-per-server-lifetime thread spawn.
+    fn ensure_executor(&mut self, lanes: usize) -> Arc<Executor> {
+        let rebuild = match &self.executor {
+            Some(e) => e.lanes() < lanes,
+            None => true,
+        };
+        if rebuild {
+            self.executor = Some(Arc::new(Executor::new(lanes)));
+        }
+        self.executor.as_ref().expect("executor just ensured").clone()
+    }
+
+    /// The persistent runtime, if one has been built yet.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        self.executor.as_ref()
+    }
+
+    /// Shard `items` across the persistent worker runtime (inline when
+    /// `threads == 1`), running `run` per item with the item's global
+    /// stream id — the engine's one batch loop, shared by the raw and
+    /// payload paths. Per-shard termination/conversion counters merge
+    /// back against the prototype baseline exactly as before; results
+    /// are thread-count invariant by the per-sample stream contract.
+    /// One runtime serves both the batch shards submitted here and the
+    /// pool plane lanes the shards submit from inside (nested-safe by
+    /// the executor's caller-participation), so `engine_threads ×
+    /// pool_threads` never oversubscribes the machine.
     fn infer_sharded<T, F>(&mut self, items: &[T], run: F) -> Result<Vec<Vec<f32>>>
     where
         T: Sync,
@@ -403,15 +457,19 @@ impl AnalogEngine {
         if items.is_empty() {
             return Ok(Vec::new());
         }
-        let threads = match self.threads {
-            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            t => t,
-        }
-        .clamp(1, items.len());
+        let threads = crate::util::executor::resolve_lanes(self.threads).clamp(1, items.len());
+        let pool_lanes = self.max_pool_lanes();
         let stream0 = self.next_stream;
         self.next_stream += items.len() as u64;
 
         if threads == 1 {
+            // Sequential batch loop; pools may still fan planes out, so
+            // hand them the engine runtime (sized for their lanes) once
+            // instead of letting each build its own.
+            if pool_lanes > 1 {
+                let exec = self.ensure_executor(pool_lanes);
+                self.model.for_each_bwht(|b| b.set_executor(Some(exec.clone())));
+            }
             let mut scratch = std::mem::take(&mut self.decode_scratch);
             let out: Result<Vec<Vec<f32>>> = items
                 .iter()
@@ -422,50 +480,46 @@ impl AnalogEngine {
             return out;
         }
 
-        // Contiguous shards, one deep model clone per worker thread.
+        // Contiguous shards, one deep model clone per runtime task.
         // Shard boundaries cannot influence results: every sample's
         // noise stream is derived from its global index alone.
         // Warm the lazily-built analog engines on the prototype first so
         // shard clones copy the fabricated crossbars instead of each
         // re-fabricating them (SignMatrix + comparator sampling) per
-        // batch.
-        self.model.for_each_bwht(|b| b.prepare_analog());
+        // batch — and inject the shared runtime before cloning so every
+        // shard's pool submits lanes to the same workers instead of
+        // spawning private ones per batch.
+        let exec = self.ensure_executor(threads.max(pool_lanes));
+        self.model.for_each_bwht(|b| {
+            b.set_executor(Some(exec.clone()));
+            b.prepare_analog();
+        });
         let chunk = items.len().div_ceil(threads);
         let model = &self.model;
         let run = &run;
-        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)>> =
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = items
-                    .chunks(chunk)
-                    .enumerate()
-                    .map(|(shard, shard_items)| {
-                        let mut shard_model = model.clone();
-                        let first_stream = stream0 + (shard * chunk) as u64;
-                        scope.spawn(move || {
-                            let mut scratch = DecodeScratch::default();
-                            let mut out = Vec::with_capacity(shard_items.len());
-                            for (i, item) in shard_items.iter().enumerate() {
-                                out.push(run(
-                                    &mut shard_model,
-                                    &mut scratch,
-                                    item,
-                                    first_stream + i as u64,
-                                )?);
-                            }
-                            let mut processed = 0;
-                            let mut skipped = 0;
-                            let mut conv = ConversionStats::default();
-                            shard_model.for_each_bwht(|b| {
-                                processed += b.term_processed;
-                                skipped += b.term_skipped;
-                                conv.merge(&b.conv_stats);
-                            });
-                            Ok((out, processed, skipped, conv))
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+        let mut tasks = Vec::with_capacity(items.len().div_ceil(chunk));
+        for (shard, shard_items) in items.chunks(chunk).enumerate() {
+            let mut shard_model = model.clone();
+            let first_stream = stream0 + (shard * chunk) as u64;
+            tasks.push(move || -> Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)> {
+                let mut scratch = DecodeScratch::default();
+                let mut out = Vec::with_capacity(shard_items.len());
+                for (i, item) in shard_items.iter().enumerate() {
+                    out.push(run(&mut shard_model, &mut scratch, item, first_stream + i as u64)?);
+                }
+                let mut processed = 0;
+                let mut skipped = 0;
+                let mut conv = ConversionStats::default();
+                shard_model.for_each_bwht(|b| {
+                    processed += b.term_processed;
+                    skipped += b.term_skipped;
+                    conv.merge(&b.conv_stats);
+                });
+                Ok((out, processed, skipped, conv))
             });
+        }
+        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)>> =
+            exec.run(tasks);
 
         // Shard clones inherit this model's counters at clone time; only
         // the delta beyond that baseline is work the shard itself did.

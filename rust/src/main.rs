@@ -63,13 +63,15 @@ fn main() -> Result<()> {
                  \n\
                  serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
                  \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
-                 \x20       [--pool-threads T]\n\
+                 \x20       [--pool-threads T] [--fuse-batch]\n\
                  \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
                  \x20        --retain keep|triage]\n\
                  \x20       (--pool N serves the analog BWHT stages through an N-array\n\
                  \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
-                 \x20        --pool-threads T fans the pool's coupling groups across T worker\n\
-                 \x20        threads per phase, 0 = auto — results are thread-count invariant;\n\
+                 \x20        --pool-threads T fans the pool's coupling groups across T persistent\n\
+                 \x20        workers, 0 = auto — results are thread-count invariant;\n\
+                 \x20        --fuse-batch fuses each sample's bitplanes (all BWHT blocks)\n\
+                 \x20        into shared pool submissions (bit-identical results);\n\
                  \x20        --frontend ingests through the frequency-domain sensor frontend:\n\
                  \x20        frames are sequency-compressed to the top K coefficients at B\n\
                  \x20        bits (0 = lossless) and triaged by the retention policy)\n\
@@ -206,6 +208,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(t) = args.get_parse::<usize>("pool-threads") {
         server_cfg.pool_threads = t;
     }
+    if args.flag("fuse-batch") {
+        server_cfg.fuse_batch = true;
+    }
     if args.flag("frontend") {
         server_cfg.frontend = true;
     }
@@ -243,7 +248,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server_cfg.asymmetric_adc,
     )
     .map_err(|e| anyhow::anyhow!("invalid pool configuration: {e}"))?
-    .map(|spec| PoolSpec { threads: server_cfg.pool_threads, ..spec });
+    .map(|spec| PoolSpec {
+        threads: server_cfg.pool_threads,
+        fuse_batch: server_cfg.fuse_batch,
+        ..spec
+    });
     if pool.is_some() && server_cfg.engine != "analog" {
         anyhow::bail!(
             "--pool requires --engine analog (the digital PJRT path has no CiM array pool)"
@@ -256,12 +265,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if let Some(spec) = &pool {
                 println!(
                     "collaborative digitization pool: {} arrays, {:?} @ {} bits{}, \
-                     plane fan-out threads {}",
+                     plane fan-out threads {}{}",
                     spec.n_arrays,
                     spec.mode,
                     spec.adc_bits,
                     if spec.asymmetric { ", asymmetric tree" } else { "" },
-                    if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() }
+                    if spec.threads == 0 { "auto".to_string() } else { spec.threads.to_string() },
+                    if spec.fuse_batch { ", cross-sample fusion" } else { "" }
                 );
             }
             for w in 0..server_cfg.workers {

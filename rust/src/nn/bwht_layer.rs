@@ -18,11 +18,13 @@
 //!   at a given operating point (noise, settling, early termination) —
 //!   feeds the accuracy axes of Figs 7 and 13(c,d).
 
+use std::sync::Arc;
+
 use crate::cim::{
     BitplaneEngine, CimArrayPool, ConversionStats, Crossbar, CrossbarConfig, EarlyTermination,
     PoolSpec,
 };
-use crate::util::Rng;
+use crate::util::{Executor, Rng};
 use crate::wht::{fwht_inplace, Bwht, BwhtLayout};
 
 use super::layer::Layer;
@@ -80,6 +82,10 @@ pub struct BwhtLayer {
     /// Pending per-sample noise stream (batch determinism contract):
     /// applied to `analog_rng` at the start of the next forward.
     analog_stream: Option<u64>,
+    /// Shared persistent worker runtime injected by the serving engine
+    /// (`AnalogEngine`): handed to the pool at `prepare_analog` so
+    /// batch shards and pool plane lanes draw from one set of workers.
+    executor: Option<Arc<Executor>>,
     pub term_processed: u64,
     pub term_skipped: u64,
     /// Collaborative-digitization accounting accumulated across analog
@@ -118,6 +124,7 @@ impl BwhtLayer {
             analog: None,
             analog_rng: None,
             analog_stream: None,
+            executor: None,
             term_processed: 0,
             term_skipped: 0,
             conv_stats: ConversionStats::default(),
@@ -168,6 +175,21 @@ impl BwhtLayer {
         self.analog_stream = Some(stream);
     }
 
+    /// Inject the serving engine's persistent worker runtime. Applied
+    /// to the layer's pool at the next [`BwhtLayer::prepare_analog`]
+    /// (and immediately if the pool is already built), so the pool's
+    /// plane lanes run on the same workers as the engine's batch
+    /// shards instead of spawning their own — no-op outside
+    /// `BwhtExec::Analog` with a pool.
+    pub fn set_executor(&mut self, executor: Option<Arc<Executor>>) {
+        self.executor = executor;
+        // Propagate clears too: a pool holding a stale runtime would
+        // keep its worker threads alive past the owner's release.
+        if let Some(pool) = self.analog.as_mut().and_then(|e| e.pool_mut()) {
+            pool.set_executor(self.executor.clone());
+        }
+    }
+
     /// Build the lazily-constructed analog engine and apply any pending
     /// stream pin. Idempotent; no-op outside `BwhtExec::Analog`. Runs at
     /// the start of every forward, and batch engines call it explicitly
@@ -188,7 +210,11 @@ impl BwhtLayer {
                 // The pool's arrays share the block's programmed matrix;
                 // fabrication (comparators, converter DACs) continues the
                 // same deterministic stream.
-                eng.set_pool(Some(CimArrayPool::new(&matrix, config, spec, &mut frng)));
+                let mut built = CimArrayPool::new(&matrix, config, spec, &mut frng);
+                // Share the serving engine's persistent runtime when one
+                // was injected (one worker set for shards + lanes).
+                built.set_executor(self.executor.clone());
+                eng.set_pool(Some(built));
             }
             self.analog = Some(eng);
             self.analog_rng = Some(Rng::new(seed ^ 0xa5a5_5a5a));
@@ -304,8 +330,15 @@ impl BwhtLayer {
                 // (≈ H·levels), so the exact reconstruction scale `step`
                 // applies and gamma is bypassed.
                 let scale = if eng.has_pool() { step } else { self.gamma * step };
+                // Gather every block's zero-padded levels once; the two
+                // execution shapes below differ only in how the blocks
+                // reach the engine, never in values (each `transform_many`
+                // input consumes one plane seed exactly like a
+                // `transform` call, and the engine reuses its scratch
+                // arenas across blocks and forwards either way).
+                block.clear();
+                block.reserve(self.layout.blocks * bs);
                 for b in 0..self.layout.blocks {
-                    block.clear();
                     block.extend((0..bs).map(|i| {
                         let idx = b * bs + i;
                         if idx < levels.len() {
@@ -314,9 +347,19 @@ impl BwhtLayer {
                             0
                         }
                     }));
-                    // The engine reuses its internal PlaneScratch arena
-                    // across blocks and forwards.
-                    let out = eng.transform(&block, rng);
+                }
+                let outs = if eng.pool().is_some_and(|p| p.spec().fuse_batch) {
+                    // Cross-sample plane fusion at layer scope: every
+                    // Hadamard block of this pixel is its own pooled
+                    // transform, so all blocks go to the pool together
+                    // — one submission for the pixel instead of one per
+                    // block, bit-identical to the per-block path.
+                    let refs: Vec<&[u32]> = block.chunks(bs).collect();
+                    eng.transform_many(&refs, rng)
+                } else {
+                    block.chunks(bs).map(|chunk| eng.transform(chunk, rng)).collect()
+                };
+                for (b, out) in outs.iter().enumerate() {
                     self.term_processed += out.term.processed;
                     self.term_skipped += out.term.skipped;
                     self.conv_stats.merge(&out.conv);
@@ -640,6 +683,7 @@ mod tests {
                 mode: ImmersedMode::Sar,
                 asymmetric: false,
                 threads: 1,
+                fuse_batch: false,
             }),
         });
         let x = Tensor::vec1(&(0..16).map(|i| (i % 4) as f32).collect::<Vec<_>>());
@@ -658,6 +702,48 @@ mod tests {
         for (a, b) in y.data().iter().zip(yf.data()) {
             assert!((a - b).abs() < 0.3, "pooled {a} vs float {b}");
         }
+    }
+
+    #[test]
+    fn fused_pooled_layer_matches_sequential_blocks() {
+        use crate::adc::ImmersedMode;
+        // 32 channels over 16-wide blocks: two pooled transforms per
+        // pixel, so fusion genuinely batches across blocks. Noisy
+        // crossbars pin the full RNG schedule, not just ideal values.
+        let mk = |fuse: bool| {
+            let (mut l, _) = layer(32, 16, 14);
+            l.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 33,
+                pool: Some(PoolSpec {
+                    n_arrays: 4,
+                    adc_bits: 4,
+                    mode: ImmersedMode::Sar,
+                    asymmetric: false,
+                    threads: 1,
+                    fuse_batch: fuse,
+                }),
+            });
+            l
+        };
+        let mut seq = mk(false);
+        let mut fused = mk(true);
+        let x = Tensor::vec1(&(0..32).map(|i| (i % 5) as f32 * 0.7).collect::<Vec<_>>());
+        for stream in 0..3u64 {
+            seq.set_analog_stream(stream);
+            fused.set_analog_stream(stream);
+            let ys = seq.forward_inference(&x);
+            let yf = fused.forward_inference(&x);
+            assert_eq!(ys.data(), yf.data(), "stream {stream}");
+        }
+        assert_eq!(seq.conv_stats, fused.conv_stats, "fusion must not change accounting");
+        assert_eq!(
+            (seq.term_processed, seq.term_skipped),
+            (fused.term_processed, fused.term_skipped)
+        );
+        assert!(fused.conv_stats.conversions > 0);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Persistent deterministic worker runtime.
+//!
+//! The PR-1/PR-3 parallel paths (`AnalogEngine::infer_sharded` batch
+//! shards, `CimArrayPool::process_planes` coupling-group lanes) each
+//! opened a fresh `std::thread::scope` per call — thread spawn/join on
+//! every served batch and every pooled plane submission. [`Executor`]
+//! moves that cost to construction time: a fixed set of long-lived
+//! workers is fed task batches over a shared channel, and the spawn is
+//! paid once per server lifetime instead of once per request.
+//!
+//! Determinism contract (the same one every parallel path in this repo
+//! already obeys): [`Executor::run`] returns results **in submission
+//! order**, whatever worker ran what and in whatever order tasks
+//! finished. Callers that need bit-identical float accumulation merge
+//! the ordered results themselves — exactly like the PR-1 shard merge
+//! and the PR-3 per-plane stat merge. The executor adds no ordering
+//! hazards of its own because it never aggregates; it only transports.
+//!
+//! Scheduling shape:
+//!
+//! - `Executor::new(lanes)` spawns `lanes − 1` workers; the **caller
+//!   participates** in executing its own batch (and anything else in
+//!   the queue) while it waits. An executor with `lanes == 1` therefore
+//!   has zero worker threads and `run` degenerates to an inline
+//!   sequential loop — the sequential path stays spawn-free *and*
+//!   allocation-cheap.
+//! - Caller participation also makes nested submission safe: a batch
+//!   shard running on a worker can submit pool plane lanes to the
+//!   *same* executor without deadlock, because every `run` caller
+//!   drains queue work itself until its batch completes. This is what
+//!   lets one shared runtime serve both `engine_threads` and
+//!   `pool_threads` instead of multiplying them.
+//! - A panicking task does not poison the runtime: the panic is caught
+//!   on the executing thread, the batch still completes, and the
+//!   payload is re-thrown from the submitting `run` call (the same
+//!   observable behaviour as the old `scope.join().expect(...)`).
+//!
+//! Dropping the executor shuts the workers down and joins them.
+//!
+//! Safety: `run` erases task lifetimes to move borrows onto the
+//! long-lived workers (the classic scoped-pool trick). The erasure is
+//! sound because `run` does not return until every task in the batch
+//! has finished executing — the borrows it smuggled out are dead before
+//! the caller's frame can be.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A lifetime-erased queued task.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the submitting threads and the workers.
+struct Queue {
+    state: Mutex<QueueState>,
+    /// Signalled when jobs arrive or shutdown is requested.
+    work: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Completion tracking for one `run` batch.
+struct BatchState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload observed in this batch, re-thrown by `run`.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Resolve a lane/thread-count knob: `0` = auto-detect from available
+/// parallelism. The one home of the "0 = auto" policy every thread
+/// knob in the crate shares (engine sharding, pool fan-out, executor
+/// sizing).
+pub fn resolve_lanes(lanes: usize) -> usize {
+    match lanes {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// A persistent pool of worker threads with submission-order result
+/// delivery (see module docs). Cheaply shared via `Arc` between the
+/// engine's batch shards and the pool's plane lanes.
+pub struct Executor {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("lanes", &self.lanes).finish()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // Our jobs never panic while holding these locks (task panics are
+    // caught before the bookkeeping section), but stay robust anyway.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Executor {
+    /// Build a runtime with `lanes` total execution lanes: `lanes − 1`
+    /// spawned workers plus the submitting caller. `0` auto-detects
+    /// from available parallelism.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = resolve_lanes(lanes);
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let workers = (1..lanes)
+            .map(|_| {
+                let queue = queue.clone();
+                std::thread::spawn(move || worker_loop(&queue))
+            })
+            .collect();
+        Executor { queue, workers, lanes }
+    }
+
+    /// Total execution lanes (spawned workers + the participating
+    /// caller).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute `tasks`, returning their results **in submission order**.
+    /// Blocks until every task has completed; the calling thread
+    /// executes queued work itself while it waits (so nested `run`
+    /// calls from inside a task cannot deadlock, and `lanes == 1` runs
+    /// everything inline). Re-throws the first task panic after the
+    /// batch drains.
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let batch =
+            BatchState { remaining: Mutex::new(n), done: Condvar::new(), panic: Mutex::new(None) };
+        {
+            let batch_ref = &batch;
+            let mut jobs: Vec<Job> = Vec::with_capacity(n);
+            for (slot, task) in slots.iter_mut().zip(tasks) {
+                let job = move || {
+                    match catch_unwind(AssertUnwindSafe(task)) {
+                        Ok(v) => *slot = Some(v),
+                        Err(payload) => {
+                            let mut first = lock(&batch_ref.panic);
+                            if first.is_none() {
+                                *first = Some(payload);
+                            }
+                        }
+                    }
+                    let mut remaining = lock(&batch_ref.remaining);
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        batch_ref.done.notify_all();
+                    }
+                };
+                // SAFETY: the job borrows `slots` and `batch`, which
+                // outlive this block — `run` blocks below until
+                // `remaining == 0`, i.e. until every job (including
+                // this one) has finished executing, so the erased
+                // borrows never dangle.
+                jobs.push(unsafe { erase_job(Box::new(job)) });
+            }
+            {
+                let mut q = lock(&self.queue.state);
+                q.jobs.extend(jobs);
+            }
+            self.queue.work.notify_all();
+
+            // Caller participation: drain queue work (ours or anyone
+            // else's) until this batch completes.
+            loop {
+                {
+                    let remaining = lock(&batch.remaining);
+                    if *remaining == 0 {
+                        break;
+                    }
+                }
+                let job = lock(&self.queue.state).jobs.pop_front();
+                match job {
+                    Some(job) => job(),
+                    None => {
+                        let remaining = lock(&batch.remaining);
+                        if *remaining == 0 {
+                            break;
+                        }
+                        // Short timeout: a nested batch may refill the
+                        // queue without signalling `done`; wake up and
+                        // help rather than idling until our own batch
+                        // finishes.
+                        let _ = self.batch_wait(&batch, remaining, Duration::from_micros(200));
+                    }
+                }
+            }
+        }
+        if let Some(payload) = lock(&batch.panic).take() {
+            resume_unwind(payload);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("executor batch drained with an unfilled result slot"))
+            .collect()
+    }
+
+    fn batch_wait<'g>(
+        &self,
+        batch: &'g BatchState,
+        guard: std::sync::MutexGuard<'g, usize>,
+        timeout: Duration,
+    ) -> std::sync::MutexGuard<'g, usize> {
+        let (guard, _) =
+            batch.done.wait_timeout(guard, timeout).unwrap_or_else(PoisonError::into_inner);
+        guard
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut q = lock(&self.queue.state);
+            q.shutdown = true;
+        }
+        self.queue.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// SAFETY: caller must guarantee the job finishes executing before any
+/// borrow it captures expires (see [`Executor::run`]).
+unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+}
+
+fn worker_loop(queue: &Queue) {
+    loop {
+        let job = {
+            let mut state = lock(&queue.state);
+            loop {
+                if let Some(job) = state.jobs.pop_front() {
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = queue.work.wait(state).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let exec = Executor::new(4);
+        // Tasks finish out of order (later tasks sleep less); results
+        // must still land by submission index.
+        let tasks: Vec<_> = (0..16u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(Duration::from_micros((16 - i) * 50));
+                    i * i
+                }
+            })
+            .collect();
+        let got = exec.run(tasks);
+        assert_eq!(got, (0..16u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_lane_runs_inline_and_ordered() {
+        let exec = Executor::new(1);
+        assert_eq!(exec.lanes(), 1);
+        // With one lane (zero workers) every task runs on the caller,
+        // in submission order: the execution stamps are sequential.
+        let seq = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..5usize)
+            .map(|i| {
+                let seq = &seq;
+                move || (i, seq.fetch_add(1, Ordering::Relaxed))
+            })
+            .collect();
+        let got = exec.run(tasks);
+        assert_eq!(got, (0..5).map(|i| (i, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reuse_across_batches_accumulates() {
+        let exec = Executor::new(3);
+        let counter = AtomicUsize::new(0);
+        for round in 0..10usize {
+            let tasks: Vec<_> = (0..8)
+                .map(|_| {
+                    let counter = &counter;
+                    move || counter.fetch_add(1, Ordering::Relaxed)
+                })
+                .collect();
+            let got = exec.run(tasks);
+            assert_eq!(got.len(), 8, "round {round}");
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        let exec = Arc::new(Executor::new(2));
+        // Outer tasks each submit an inner batch to the same executor;
+        // with 2 lanes this would deadlock without caller participation.
+        let outer: Vec<_> = (0..4u64)
+            .map(|i| {
+                let exec = exec.clone();
+                move || {
+                    let inner: Vec<_> = (0..3u64).map(|j| move || i * 10 + j).collect();
+                    exec.run(inner).iter().sum::<u64>()
+                }
+            })
+            .collect();
+        let got = exec.run(outer);
+        assert_eq!(got, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_batch_drains() {
+        let exec = Executor::new(2);
+        let completed = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..6usize)
+                .map(|i| {
+                    let completed = &completed;
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("task 2 exploded");
+                        }
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            exec.run(tasks)
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // All non-panicking tasks still ran (batch drained, runtime not
+        // poisoned)...
+        assert_eq!(completed.load(Ordering::Relaxed), 5);
+        // ...and the executor is still usable afterwards.
+        let got = exec.run((0..4usize).map(|i| move || i + 1).collect::<Vec<_>>());
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let exec = Executor::new(4);
+        let _ = exec.run((0..8usize).map(|i| move || i).collect::<Vec<_>>());
+        drop(exec); // must not hang
+    }
+
+    #[test]
+    fn auto_lanes_detects_at_least_one() {
+        let exec = Executor::new(0);
+        assert!(exec.lanes() >= 1);
+        let got = exec.run(vec![|| 7usize]);
+        assert_eq!(got, vec![7]);
+    }
+}

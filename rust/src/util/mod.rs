@@ -14,14 +14,21 @@
 //! - [`bench`] — wall-clock micro-bench harness with warmup and robust
 //!   (median) aggregation (replaces `criterion`; all benches are
 //!   `harness = false`).
+//! - [`executor`] — persistent deterministic worker runtime (replaces
+//!   `rayon`-style pools): long-lived workers, channel-fed task
+//!   batches, submission-order result merge; shared by the engine's
+//!   batch shards and the CiM pool's plane lanes so thread spawn is
+//!   paid once per server lifetime, not once per call.
 //! - [`prop`] — seeded randomized-property driver (replaces `proptest`):
 //!   runs a closure over a few hundred generated cases and reports the
 //!   failing seed for replay.
 
 pub mod bench;
 pub mod cli;
+pub mod executor;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use executor::Executor;
 pub use rng::Rng;

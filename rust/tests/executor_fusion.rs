@@ -1,0 +1,290 @@
+//! ISSUE 5 acceptance: the persistent deterministic worker runtime and
+//! cross-sample plane fusion serve **bit-identically** to the PR-3
+//! sequential plane walk.
+//!
+//! 1. A persistent-runtime engine serving N consecutive batches equals
+//!    the sequential (t=1) engine serving the same N batches — logits,
+//!    termination counters, conversion accounting — and the runtime is
+//!    built once, not per batch.
+//! 2. Fused == unfused == sequential at the `BitplaneEngine` level:
+//!    outputs, plane signs and `ConversionStats` (energy float
+//!    accumulation included) are `assert_eq!`-equal at any pool thread
+//!    count.
+//! 3. Gated early termination under fusion keeps the
+//!    `gated_et_sweep_is_monotone_and_output_preserving` semantics:
+//!    monotone conversion/energy decline, per-row gating visible, and
+//!    outputs preserved under the dead-band soft threshold.
+//! 4. The same identities hold end-to-end through `AnalogEngine`
+//!    (shards × pool lanes on one shared runtime).
+
+use std::sync::Arc;
+
+use adcim::adc::ImmersedMode;
+use adcim::cim::{
+    BitplaneEngine, CimArrayPool, ConversionStats, Crossbar, CrossbarConfig, PoolSpec, SignMatrix,
+};
+use adcim::coordinator::AnalogEngine;
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::util::Rng;
+
+fn spec(n_arrays: usize, threads: usize, fuse_batch: bool) -> PoolSpec {
+    PoolSpec {
+        n_arrays,
+        adc_bits: 5,
+        mode: ImmersedMode::Sar,
+        asymmetric: false,
+        threads,
+        fuse_batch,
+    }
+}
+
+/// Noisy pooled bitplane engine over a 32-wide Walsh crossbar.
+fn pooled_bitplane_engine(pool_spec: PoolSpec) -> BitplaneEngine {
+    let mut fab = Rng::new(11);
+    let matrix = SignMatrix::walsh(32);
+    BitplaneEngine::new(Crossbar::new(matrix.clone(), CrossbarConfig::default(), &mut fab), 4)
+        .with_pool(CimArrayPool::new(&matrix, CrossbarConfig::default(), pool_spec, &mut fab))
+}
+
+/// Analog digit-MLP engine with pooled BWHT stages (16-wide blocks cap
+/// the pool at 4 bits).
+fn pooled_analog_engine(
+    engine_threads: usize,
+    pool_threads: usize,
+    fuse_batch: bool,
+) -> AnalogEngine {
+    let mut rng = Rng::new(1);
+    let mut model = bwht_mlp(36, 4, 16, &mut rng);
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term: None,
+            seed: 42,
+            pool: Some(PoolSpec {
+                n_arrays: 4,
+                adc_bits: 4,
+                mode: ImmersedMode::Sar,
+                asymmetric: false,
+                threads: pool_threads,
+                fuse_batch,
+            }),
+        })
+    });
+    AnalogEngine::from_model(model, 36).with_threads(engine_threads)
+}
+
+fn images(n: usize, salt: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..36).map(|j| ((i * j + i + salt * 7) % 7) as f32 * 0.3).collect())
+        .collect()
+}
+
+fn batch(n: usize, salt: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|s| (0..32).map(|i| ((i * 7 + s * 13 + salt * 5) % 16) as u32).collect())
+        .collect()
+}
+
+fn assert_energy_close(a: &ConversionStats, b: &ConversionStats, what: &str) {
+    let tol = 1e-9 * b.energy_fj.max(1.0);
+    assert!(
+        (a.energy_fj - b.energy_fj).abs() < tol,
+        "{what}: energy {} vs {}",
+        a.energy_fj,
+        b.energy_fj
+    );
+}
+
+/// Satellite: a persistent-runtime serve of N consecutive batches is
+/// bit-identical to the same N batches on the sequential engine —
+/// outputs, `ConversionStats` counters, energy (to shard-merge float
+/// association), and the runtime itself is reused across batches.
+#[test]
+fn persistent_runtime_serves_consecutive_batches_like_sequential() {
+    let mut seq = pooled_analog_engine(1, 1, false);
+    let mut par = pooled_analog_engine(4, 2, false);
+    for round in 0..3usize {
+        let imgs = images(9, round);
+        let want = seq.infer_batch(&imgs).unwrap();
+        let got = par.infer_batch(&imgs).unwrap();
+        assert_eq!(got, want, "round {round}: persistent-runtime logits diverged");
+
+        // The runtime is built at the first parallel batch and reused
+        // for the engine's lifetime — never rebuilt per batch.
+        let exec = par.executor().expect("parallel engine has a runtime").clone();
+        if round == 0 {
+            assert!(exec.lanes() >= 2);
+        }
+        let imgs2 = images(5, 100 + round);
+        let want2 = seq.infer_batch(&imgs2).unwrap();
+        let got2 = par.infer_batch(&imgs2).unwrap();
+        assert_eq!(got2, want2, "round {round}: second batch diverged");
+        let exec2 = par.executor().unwrap();
+        assert!(Arc::ptr_eq(&exec, exec2), "round {round}: runtime was rebuilt");
+    }
+    let s = seq.conversion_stats();
+    let p = par.conversion_stats();
+    assert!(s.conversions > 0);
+    assert_eq!(p.conversions, s.conversions);
+    assert_eq!(p.comparisons, s.comparisons);
+    assert_eq!(p.cycles, s.cycles);
+    assert_eq!(p.gated, s.gated);
+    assert_energy_close(&p, &s, "persistent vs sequential");
+    assert_eq!(par.termination_stats(), seq.termination_stats());
+}
+
+/// Tentpole bit-exactness: fused == unfused == sequential at the
+/// bitplane-engine level, `assert_eq!` down to the `energy_fj` float
+/// accumulation, at every pool thread count.
+#[test]
+fn fused_transform_batch_equals_unfused_bit_exactly() {
+    let xs = batch(12, 0);
+    let seed = 0xfade;
+    let mut base = pooled_bitplane_engine(spec(8, 1, false));
+    let want = base.transform_batch(&xs, seed);
+    let want_pool = base.pool().unwrap().stats();
+    assert!(want_pool.conversions > 0);
+
+    for threads in [1usize, 2, 4] {
+        let mut fused = pooled_bitplane_engine(spec(8, threads, true));
+        let got = fused.transform_batch(&xs, seed);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.values, w.values, "t={threads} sample {i} values");
+            assert_eq!(g.plane_signs, w.plane_signs, "t={threads} sample {i} signs");
+            assert_eq!(g.conv, w.conv, "t={threads} sample {i} conversion stats");
+            assert_eq!(g.term.processed, w.term.processed, "t={threads} sample {i}");
+            assert_eq!(g.term.skipped, w.term.skipped, "t={threads} sample {i}");
+        }
+        let pool = fused.pool().unwrap();
+        assert_eq!(pool.stats(), want_pool, "t={threads} pool accounting");
+        assert_eq!(pool.mavs_produced(), pool.mavs_digitized() + pool.mavs_gated());
+    }
+
+    // And repeated fused batches keep matching repeated sequential
+    // transforms (scratch arenas reused, no state bleed).
+    let mut fused = pooled_bitplane_engine(spec(8, 2, true));
+    let mut seq = pooled_bitplane_engine(spec(8, 1, false));
+    for (round, salt) in [(0usize, 0usize), (1, 3)] {
+        let round_xs = batch(7, salt);
+        let a = fused.transform_batch(&round_xs, 0x11 + round as u64);
+        let b = seq.transform_batch(&round_xs, 0x11 + round as u64);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.values, y.values, "round {round} sample {i}");
+            assert_eq!(x.conv, y.conv, "round {round} sample {i}");
+        }
+    }
+}
+
+/// Gated ET under fusion: the fused walk matches the sequential gated
+/// walk exactly at every dead-band rung, the sweep stays monotone, and
+/// per-row gating still fires inside fused submissions.
+#[test]
+fn fused_gated_et_keeps_sweep_semantics() {
+    let mk = |t_et: Option<f32>, fuse: bool| {
+        let mut fab = Rng::new(3);
+        let matrix = SignMatrix::walsh(32);
+        let mut eng = BitplaneEngine::new(
+            Crossbar::new(matrix.clone(), CrossbarConfig::ideal(), &mut fab),
+            4,
+        )
+        .with_pool(CimArrayPool::new(
+            &matrix,
+            CrossbarConfig::ideal(),
+            spec(4, 1, fuse),
+            &mut fab,
+        ));
+        if let Some(t) = t_et {
+            eng.early_term = Some(adcim::cim::EarlyTermination::exact(t));
+        }
+        eng
+    };
+    // Sample 0 is exactly the `gated_et_sweep_is_monotone_and_output_preserving`
+    // input, which that test proves gates rows at some rung — so the
+    // `any_gated` assertion below is deterministic, not hopeful.
+    let xs: Vec<Vec<u32>> = (0..5)
+        .map(|s| (0..32).map(|i| ((i * 5 + 3 + s * 2) % 16) as u32).collect())
+        .collect();
+    let seed = 0x5eed;
+    let plain = mk(None, true).transform_batch(&xs, seed);
+
+    let ladder = [0.0f32, 2.0, 4.0, 8.0, 16.0];
+    let mut first: Option<ConversionStats> = None;
+    let mut prev: Option<ConversionStats> = None;
+    let mut any_gated = false;
+    for t in ladder {
+        let mut fused = mk(Some(t), true);
+        let mut seq = mk(Some(t), false);
+        let got = fused.transform_batch(&xs, seed);
+        let want = seq.transform_batch(&xs, seed);
+        let mut total = ConversionStats::default();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.values, w.values, "T={t} sample {i}: fused != sequential");
+            assert_eq!(g.conv, w.conv, "T={t} sample {i}: accounting diverged");
+            assert_eq!(g.term.skipped, w.term.skipped, "T={t} sample {i}");
+            total.merge(&g.conv);
+            // Exact ET preserves the soft-thresholded output at the
+            // dead band T·cols (transform units).
+            for (r, (a, b)) in g.values.iter().zip(&plain[i].values).enumerate() {
+                let ya = adcim::wht::soft_threshold(*a, t * 32.0);
+                let yb = adcim::wht::soft_threshold(*b, t * 32.0);
+                assert_eq!(ya, yb, "T={t} sample {i} row {r}");
+            }
+        }
+        if let Some(p) = &prev {
+            assert!(
+                total.conversions <= p.conversions,
+                "T={t}: conversions rose {} -> {}",
+                p.conversions,
+                total.conversions
+            );
+            assert!(total.energy_fj <= p.energy_fj, "T={t}: energy rose");
+        }
+        any_gated |= total.gated > 0;
+        let pool = fused.pool().unwrap();
+        assert_eq!(
+            pool.mavs_produced(),
+            pool.mavs_digitized() + pool.mavs_gated(),
+            "T={t}: every MAV digitized or gated under fusion"
+        );
+        if first.is_none() {
+            first = Some(total);
+        }
+        prev = Some(total);
+    }
+    let (first, last) = (first.unwrap(), prev.unwrap());
+    assert!(last.conversions > 0, "widest rung still converts the MSB plane");
+    assert!(last.conversions < first.conversions, "widest dead band must gate work");
+    assert!(last.energy_fj < first.energy_fj);
+    assert!(any_gated, "some rung must gate rows inside fused submissions");
+}
+
+/// Fusion end-to-end: `AnalogEngine` with `fuse_batch` serves the same
+/// logits and accounting as without, across engine-thread and
+/// pool-thread counts — the serving-path identity the `--fuse-batch`
+/// flag relies on.
+#[test]
+fn fused_serving_through_engine_is_identical() {
+    let imgs = images(8, 2);
+    let mut base = pooled_analog_engine(1, 1, false);
+    let want = base.infer_batch(&imgs).unwrap();
+    let want_stats = base.conversion_stats();
+    assert!(want_stats.conversions > 0);
+    for (engine_threads, pool_threads) in [(1usize, 1usize), (1, 4), (2, 1), (2, 4)] {
+        let mut fused = pooled_analog_engine(engine_threads, pool_threads, true);
+        let got = fused.infer_batch(&imgs).unwrap();
+        assert_eq!(got, want, "fuse t=({engine_threads},{pool_threads}) changed served logits");
+        let stats = fused.conversion_stats();
+        assert_eq!(stats.conversions, want_stats.conversions);
+        assert_eq!(stats.comparisons, want_stats.comparisons);
+        assert_eq!(stats.cycles, want_stats.cycles);
+        assert_eq!(stats.gated, want_stats.gated);
+        assert_energy_close(
+            &stats,
+            &want_stats,
+            &format!("fused ({engine_threads},{pool_threads})"),
+        );
+    }
+}

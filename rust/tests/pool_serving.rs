@@ -37,7 +37,14 @@ fn pooled_engine(mode: ImmersedMode, adc_bits: u8, threads: usize) -> AnalogEngi
             config: CrossbarConfig::default(),
             early_term: None,
             seed: 42,
-            pool: Some(PoolSpec { n_arrays: 4, adc_bits, mode, asymmetric: false, threads: 1 }),
+            pool: Some(PoolSpec {
+                n_arrays: 4,
+                adc_bits,
+                mode,
+                asymmetric: false,
+                threads: 1,
+                fuse_batch: false,
+            }),
         })
     });
     AnalogEngine::from_model(model, 36).with_threads(threads)
@@ -74,6 +81,7 @@ fn ideal_pooled_engine(
                 mode: ImmersedMode::Sar,
                 asymmetric: false,
                 threads: pool_threads,
+                fuse_batch: false,
             }),
         })
     });
@@ -164,6 +172,7 @@ fn pooled_transform_batch_equals_sequential_transforms() {
         mode: ImmersedMode::Sar,
         asymmetric: false,
         threads: 1,
+        fuse_batch: false,
     };
     let mk = || {
         let mut fab = Rng::new(11);
@@ -226,6 +235,7 @@ fn ideal_pool_path_recovers_exact_integer_transform() {
         mode: ImmersedMode::Sar,
         asymmetric: false,
         threads: 1,
+        fuse_batch: false,
     };
     let mut fab = Rng::new(3);
     let matrix = SignMatrix::walsh(32);
@@ -313,6 +323,7 @@ fn gated_et_sweep_is_monotone_and_output_preserving() {
         mode: ImmersedMode::Sar,
         asymmetric: false,
         threads: 1,
+        fuse_batch: false,
     };
     let matrix = SignMatrix::walsh(32);
     let mk = |t_et: Option<f32>| {

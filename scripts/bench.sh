@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Run the hot-path benchmark suite and write BENCH_hotpath.json at the
 # repo root (the machine-readable perf trajectory every perf PR updates;
-# see EXPERIMENTS.md §Perf).
+# see EXPERIMENTS.md §Perf), then print a measured-vs-committed delta
+# summary so before/after never needs manual JSON diffing.
 #
 # Usage: scripts/bench.sh [extra cargo bench args...]
 set -euo pipefail
@@ -9,7 +10,48 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 export BENCH_JSON="${BENCH_JSON:-$ROOT/BENCH_hotpath.json}"
 
+# Snapshot the committed trajectory before the bench overwrites it, so
+# the delta table below compares against what the repo carried.
+BASELINE=""
+if [[ -f "$ROOT/BENCH_hotpath.json" ]]; then
+  BASELINE="$(mktemp "${TMPDIR:-/tmp}/bench_committed.XXXXXX.json")"
+  trap 'rm -f "$BASELINE"' EXIT
+  cp "$ROOT/BENCH_hotpath.json" "$BASELINE"
+fi
+
 cd "$ROOT/rust"
 cargo bench --bench hotpath "$@"
 
 echo "bench results: $BENCH_JSON"
+
+if [[ -n "$BASELINE" ]] && command -v python3 >/dev/null 2>&1; then
+  python3 - "$BASELINE" "$BENCH_JSON" <<'PY'
+import json, sys
+
+committed = {r["name"]: r for r in json.load(open(sys.argv[1]))["results"]}
+fresh = {r["name"]: r for r in json.load(open(sys.argv[2]))["results"]}
+
+print("\n=== measured vs committed (ns/iter) ===")
+print(f"{'case':<56} {'committed':>12} {'measured':>12} {'delta':>8}")
+for name, f in fresh.items():
+    c = committed.get(name)
+    if c is None:
+        print(f"{name:<56} {'(new)':>12} {f['ns_per_iter']:>12.0f} {'':>8}")
+        continue
+    flag = "~" if c.get("estimated") else ""
+    ratio = c["ns_per_iter"] / f["ns_per_iter"] if f["ns_per_iter"] else float("inf")
+    # >1x = faster than the committed number, <1x = slower.
+    print(
+        f"{name:<56} {flag}{c['ns_per_iter']:>11.0f} {f['ns_per_iter']:>12.0f} "
+        f"{ratio:>7.2f}x"
+    )
+dropped = sorted(set(committed) - set(fresh))
+if dropped:
+    print("WARNING: committed cases missing from this run: %s" % dropped)
+est = sum(1 for c in committed.values() if c.get("estimated"))
+if est:
+    print(f"(~ marks committed values that were flagged analytic estimates: {est} rows)")
+PY
+elif [[ -n "$BASELINE" ]]; then
+  echo "bench.sh: note - python3 unavailable, skipped delta summary" >&2
+fi
