@@ -160,7 +160,7 @@ fn run_frontend_load(
             let id = 2 * i as u64 + slot as u64;
             offered += 1;
             if let IngestDecision::Keep(cf) = frontend.ingest(&frame, id, (i % 8) as u32) {
-                if server.submit(InferenceRequest::compressed(id, (i % 8) as u32, cf)) {
+                if server.submit(InferenceRequest::compressed(id, (i % 8) as u32, cf)).is_ok() {
                     submitted += 1;
                 }
             }
@@ -222,7 +222,10 @@ fn run_load(
     let mut submitted = 0u64;
     for (i, img) in data.images.iter().enumerate() {
         let flat = img.clone().reshape(&[manifest.input]);
-        if server.submit(InferenceRequest::new(i as u64, (i % 8) as u32, flat.data().to_vec())) {
+        if server
+            .submit(InferenceRequest::new(i as u64, (i % 8) as u32, flat.data().to_vec()))
+            .is_ok()
+        {
             submitted += 1;
         }
     }

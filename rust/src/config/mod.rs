@@ -114,6 +114,12 @@ pub struct ServerConfig {
     /// Retention policy name: "keep" (compress only) or "triage"
     /// (keep / summarize / drop scoring).
     pub retain: String,
+    /// Fault-injection bit error rate on the simulated sensor link
+    /// (`adcim serve --channel-ber`; requires the frontend). 0 = clean.
+    pub channel_ber: f64,
+    /// Fault-injection frame drop probability on the simulated link
+    /// (`adcim serve --channel-drop`). 0 = clean.
+    pub channel_drop: f64,
 }
 
 impl Default for ServerConfig {
@@ -137,6 +143,8 @@ impl Default for ServerConfig {
             codec_bits: 8,
             sensor_bits: 8,
             retain: "keep".to_string(),
+            channel_ber: 0.0,
+            channel_drop: 0.0,
         }
     }
 }
@@ -210,6 +218,10 @@ impl ServerConfig {
                 }
             },
             retain: t.get_str("server", "retain").unwrap_or(d.retain),
+            // Raw pass-through: ChannelConfig::validate rejects
+            // out-of-range probabilities with a real diagnostic.
+            channel_ber: t.get_float("server", "channel_ber").unwrap_or(d.channel_ber),
+            channel_drop: t.get_float("server", "channel_drop").unwrap_or(d.channel_drop),
         }
     }
 }
@@ -281,6 +293,21 @@ mod tests {
         let s = ServerConfig::from_toml(&t);
         assert_eq!(s.codec_bits, u8::MAX);
         assert_eq!(s.frontend_topk, 0);
+    }
+
+    #[test]
+    fn from_toml_channel_settings() {
+        let t = TomlLite::parse("[server]\nchannel_ber = 0.001\nchannel_drop = 0.05\n").unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.channel_ber, 0.001);
+        assert_eq!(s.channel_drop, 0.05);
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert_eq!(d.channel_ber, 0.0, "channel defaults clean");
+        assert_eq!(d.channel_drop, 0.0);
+        // Out-of-range values pass through for ChannelConfig::validate
+        // to reject loudly at server startup.
+        let t = TomlLite::parse("[server]\nchannel_ber = 1.5\n").unwrap();
+        assert_eq!(ServerConfig::from_toml(&t).channel_ber, 1.5);
     }
 
     #[test]

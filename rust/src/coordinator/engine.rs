@@ -55,7 +55,11 @@ pub trait InferenceEngine: Send {
     /// [`InferenceEngine::infer_batch`]; engines with a
     /// transform-domain fast path override ([`AnalogEngine`]).
     fn infer_payloads(&mut self, frames: &[FramePayload]) -> Result<Vec<Vec<f32>>> {
-        let images: Vec<Vec<f32>> = frames.iter().map(FramePayload::to_dense).collect();
+        let images: Vec<Vec<f32>> = frames
+            .iter()
+            .map(FramePayload::try_to_dense)
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("compressed frame rejected: {e}"))?;
         self.infer_batch(&images)
     }
 }
@@ -370,13 +374,14 @@ impl AnalogEngine {
         let mut pre = folded.bias.clone();
         let block = folded.params.block();
         let hidden = folded.hidden;
-        cf.for_each_coeff(|ch, s, value| {
+        cf.try_for_each_coeff(|ch, s, value| {
             let col = ch * block + folded.had[s] as usize;
             let wcol = &folded.v[col * hidden..(col + 1) * hidden];
             for (p, w) in pre.iter_mut().zip(wcol) {
                 *p += value * w;
             }
-        });
+        })
+        .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
         let mut cur = Tensor::vec1(&pre);
         for l in model.layers_mut()[1..].iter_mut() {
             cur = l.forward_inference(&cur);
@@ -570,7 +575,9 @@ impl InferenceEngine for AnalogEngine {
                         return Self::infer_folded(model, f, cf, stream);
                     }
                 }
-                let dense = scratch.decode(cf);
+                let dense = scratch
+                    .try_decode(cf)
+                    .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
                 Self::infer_one(model, input, dense, stream)
             }
         })

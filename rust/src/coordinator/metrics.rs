@@ -23,6 +23,9 @@ struct Inner {
     batch_size: Moments,
     completed: u64,
     errors: u64,
+    rejected_queue_full: u64,
+    rejected_malformed: u64,
+    panics_isolated: u64,
     latencies: Vec<f64>,
     started: Option<Instant>,
     finished: Option<Instant>,
@@ -35,6 +38,17 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub errors: u64,
+    /// Requests refused at the door by backpressure (queue full).
+    pub rejected_queue_full: u64,
+    /// Wire frames refused at the validated ingest boundary
+    /// (`CodecError` from `submit_wire`).
+    pub rejected_malformed: u64,
+    /// Requests whose engine panicked; the worker caught the unwind and
+    /// answered with a failure response instead of dying.
+    pub panics_isolated: u64,
+    /// Requests that got a degraded (failure) response instead of
+    /// logits: engine errors + isolated panics.
+    pub degraded: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -88,6 +102,22 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// A request shed at the door because the admission queue was full.
+    pub fn record_rejected_queue_full(&self) {
+        self.inner.lock().unwrap().rejected_queue_full += 1;
+    }
+
+    /// A wire frame refused by the validated ingest boundary.
+    pub fn record_rejected_malformed(&self) {
+        self.inner.lock().unwrap().rejected_malformed += 1;
+    }
+
+    /// A request whose engine panicked inside a worker; the unwind was
+    /// caught and the request answered with a failure response.
+    pub fn record_panic_isolated(&self) {
+        self.inner.lock().unwrap().panics_isolated += 1;
+    }
+
     /// Fold a per-batch delta of pool digitization work into the totals
     /// (workers call this after each `infer_batch`).
     pub fn record_conversions(&self, delta: &ConversionStats) {
@@ -124,6 +154,10 @@ impl Metrics {
         MetricsSnapshot {
             completed: g.completed,
             errors: g.errors,
+            rejected_queue_full: g.rejected_queue_full,
+            rejected_malformed: g.rejected_malformed,
+            panics_isolated: g.panics_isolated,
+            degraded: g.errors + g.panics_isolated,
             mean_latency_us: g.latency_us.mean(),
             p50_latency_us: pct(50.0),
             p95_latency_us: pct(95.0),
@@ -170,6 +204,16 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.energy_per_req_fj
             )?;
         }
+        if self.rejected_queue_full > 0 || self.rejected_malformed > 0 {
+            write!(
+                f,
+                " rejected: queue={} wire={}",
+                self.rejected_queue_full, self.rejected_malformed
+            )?;
+        }
+        if self.degraded > 0 {
+            write!(f, " degraded={} (panics={})", self.degraded, self.panics_isolated)?;
+        }
         if self.frontend.frames_in > 0 {
             write!(f, " {}", self.frontend)?;
         }
@@ -205,6 +249,33 @@ mod tests {
         assert_eq!(s.p50_latency_us, 0.0);
         assert_eq!(s.conversions, 0);
         assert_eq!(s.energy_per_req_fj, 0.0);
+        assert_eq!(s.rejected_queue_full, 0);
+        assert_eq!(s.rejected_malformed, 0);
+        assert_eq!(s.panics_isolated, 0);
+        assert_eq!(s.degraded, 0);
+        // A clean run keeps the summary line free of robustness noise.
+        let line = format!("{s}");
+        assert!(!line.contains("rejected"), "{line}");
+        assert!(!line.contains("degraded"), "{line}");
+    }
+
+    #[test]
+    fn rejection_and_panic_counters_reach_snapshot_and_display() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        m.record_rejected_queue_full();
+        m.record_rejected_queue_full();
+        m.record_rejected_malformed();
+        m.record_panic_isolated();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_queue_full, 2);
+        assert_eq!(s.rejected_malformed, 1);
+        assert_eq!(s.panics_isolated, 1);
+        assert_eq!(s.degraded, 2, "errors + isolated panics");
+        let line = format!("{s}");
+        assert!(line.contains("rejected: queue=2 wire=1"), "{line}");
+        assert!(line.contains("degraded=2 (panics=1)"), "{line}");
     }
 
     #[test]

@@ -25,10 +25,16 @@
 //!   arrays, with per-conversion energy/cycles/comparisons merged back
 //!   from worker shards.
 //! - [`metrics`] — latency/throughput accounting plus the pool's
-//!   per-request digitization energy and the ingest frontend's
-//!   deluge-triage counters in every `MetricsSnapshot`.
+//!   per-request digitization energy, the ingest frontend's
+//!   deluge-triage counters, and the robustness tallies
+//!   (rejected-at-the-door, malformed-wire, panic-isolated) in every
+//!   `MetricsSnapshot`.
 //! - [`server`] — thread-per-worker serving loop tying it together;
 //!   workers record per-batch conversion deltas into the metrics.
+//!   Untrusted wire bytes enter only through `EdgeServer::submit_wire`
+//!   (validated by `CompressedFrame::from_bytes`), and each worker
+//!   isolates engine panics with `catch_unwind`: a poisoned request
+//!   degrades to a failure response instead of killing the worker.
 
 pub mod backpressure;
 pub mod batcher;
@@ -46,4 +52,4 @@ pub use engine::{AnalogEngine, InferenceEngine};
 pub use metrics::Metrics;
 pub use request::{FramePayload, InferenceRequest, InferenceResponse};
 pub use router::{Router, RoutingPolicy};
-pub use server::EdgeServer;
+pub use server::{EdgeServer, SubmitError};

@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::frontend::codec::CompressedFrame;
+use crate::frontend::codec::{CodecError, CompressedFrame};
 
 /// What a request carries: a dense sensor frame, or a frontend-encoded
 /// [`CompressedFrame`] that travels the batcher/router/worker path
@@ -42,6 +42,15 @@ impl FramePayload {
             FramePayload::Compressed(cf) => cf.decode(),
         }
     }
+
+    /// Checked [`Self::to_dense`]: a corrupt compressed frame reports a
+    /// [`CodecError`] instead of panicking (raw payloads cannot fail).
+    pub fn try_to_dense(&self) -> Result<Vec<f32>, CodecError> {
+        match self {
+            FramePayload::Raw(v) => Ok(v.clone()),
+            FramePayload::Compressed(cf) => cf.try_decode(),
+        }
+    }
 }
 
 /// One inference request: a sensor frame (raw or compressed).
@@ -79,27 +88,33 @@ impl InferenceRequest {
     }
 }
 
-/// One inference response.
+/// One inference response. `error` is `None` for a served request; a
+/// degraded request (engine failure or panic-isolated worker) still
+/// answers, with the reason here and empty logits.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
     pub stream: u32,
-    /// Raw logits.
+    /// Raw logits (empty on a failure response).
     pub logits: Vec<f32>,
-    /// argmax class.
+    /// argmax class (0 on a failure response).
     pub class: usize,
     /// End-to-end latency in microseconds.
     pub latency_us: u64,
     /// Which worker served it.
     pub worker: usize,
+    /// Why the request degraded instead of serving, if it did.
+    pub error: Option<String>,
 }
 
 impl InferenceResponse {
     pub fn from_logits(req: &InferenceRequest, logits: Vec<f32>, worker: usize) -> Self {
+        // total_cmp keeps the argmax total even if a hostile frame
+        // decodes to NaN logits — a wrong class beats a dead worker.
         let class = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         InferenceResponse {
@@ -109,6 +124,21 @@ impl InferenceResponse {
             class,
             latency_us: req.submitted.elapsed().as_micros() as u64,
             worker,
+            error: None,
+        }
+    }
+
+    /// A degraded-request answer: no logits, but the submitter still
+    /// hears back instead of waiting forever on a failed batch.
+    pub fn failure(req: &InferenceRequest, worker: usize, reason: String) -> Self {
+        InferenceResponse {
+            id: req.id,
+            stream: req.stream,
+            logits: Vec::new(),
+            class: 0,
+            latency_us: req.submitted.elapsed().as_micros() as u64,
+            worker,
+            error: Some(reason),
         }
     }
 }
@@ -126,6 +156,36 @@ mod tests {
         assert_eq!(resp.class, 1);
         assert_eq!(resp.id, 7);
         assert_eq!(resp.worker, 2);
+    }
+
+    /// A hostile frame can legally decode to NaN-laced dense values in
+    /// lossy mode; the argmax must stay total instead of panicking.
+    #[test]
+    fn nan_logits_do_not_panic_argmax() {
+        let req = InferenceRequest::new(1, 0, vec![0.0; 4]);
+        let resp = InferenceResponse::from_logits(&req, vec![f32::NAN, 1.0, f32::NAN], 0);
+        assert!(resp.error.is_none());
+        assert!(resp.class < 3);
+    }
+
+    #[test]
+    fn failure_response_carries_reason() {
+        let req = InferenceRequest::new(9, 3, vec![0.0; 4]);
+        let resp = InferenceResponse::failure(&req, 1, "engine exploded".into());
+        assert_eq!((resp.id, resp.stream, resp.worker), (9, 3, 1));
+        assert!(resp.logits.is_empty());
+        assert_eq!(resp.error.as_deref(), Some("engine exploded"));
+    }
+
+    #[test]
+    fn try_to_dense_matches_to_dense_on_valid_payloads() {
+        let p = CodecParams::new(1, 16, 8, 8).unwrap();
+        let frame: Vec<f32> = (0..16).map(|i| (i % 4) as f32 / 4.0).collect();
+        let cf = FrameEncoder::new(p, Selection::TopK(6)).encode(&frame, 0);
+        let payload = FramePayload::Compressed(cf);
+        assert_eq!(payload.try_to_dense().unwrap(), payload.to_dense());
+        let raw = FramePayload::Raw(vec![0.5; 4]);
+        assert_eq!(raw.try_to_dense().unwrap(), vec![0.5; 4]);
     }
 
     #[test]

@@ -34,6 +34,30 @@ enum Ingest {
     Shutdown,
 }
 
+/// Why [`EdgeServer::submit`] refused a request. Callers can tell load
+/// shedding (retry later) from hostile input (don't bother).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// Shed by backpressure: the admission queue is full.
+    QueueFull,
+    /// Wire bytes failed frame validation at the ingest boundary.
+    Malformed(crate::frontend::CodecError),
+    /// The server is shutting down (ingest channel closed).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::Malformed(e) => write!(f, "malformed frame: {e}"),
+            SubmitError::Closed => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// A running edge-inference server.
 pub struct EdgeServer {
     ingest_tx: Sender<Ingest>,
@@ -91,12 +115,34 @@ impl EdgeServer {
         Ok(EdgeServer { ingest_tx, response_rx, admission, metrics, threads })
     }
 
-    /// Submit a request. `false` = shed by backpressure.
-    pub fn submit(&self, req: InferenceRequest) -> bool {
+    /// Submit a request; the error says *why* it was refused
+    /// (queue-full shedding vs hostile input vs shutdown).
+    pub fn submit(&self, req: InferenceRequest) -> Result<(), SubmitError> {
         if !self.admission.admit() {
-            return false;
+            self.metrics.record_rejected_queue_full();
+            return Err(SubmitError::QueueFull);
         }
-        self.ingest_tx.send(Ingest::Req(req)).is_ok()
+        if self.ingest_tx.send(Ingest::Req(req)).is_err() {
+            self.admission.release();
+            return Err(SubmitError::Closed);
+        }
+        Ok(())
+    }
+
+    /// Submit one frame straight off the wire: validate the bytes at
+    /// the trust boundary, then enqueue the decoded frame. Returns the
+    /// frame's own id (the wire header's `frame_id` becomes the request
+    /// id). This is the only path untrusted bytes take into the server
+    /// — everything past it handles a `CompressedFrame` that
+    /// `from_bytes` fully vetted.
+    pub fn submit_wire(&self, stream: u32, bytes: &[u8]) -> Result<u64, SubmitError> {
+        let frame = crate::frontend::CompressedFrame::from_bytes(bytes).map_err(|e| {
+            self.metrics.record_rejected_malformed();
+            SubmitError::Malformed(e)
+        })?;
+        let id = frame.frame_id;
+        self.submit(InferenceRequest::compressed(id, stream, frame))?;
+        Ok(id)
     }
 
     /// Drain any completed responses without blocking.
@@ -196,8 +242,16 @@ fn worker_loop(
         // without being materialized on the coordinator side.
         let payloads: Vec<super::request::FramePayload> =
             batch.requests.iter().map(|r| r.payload.clone()).collect();
-        match engine.infer_payloads(&payloads) {
-            Ok(all_logits) => {
+        // A poisoned request must cost its batch, not the worker: catch
+        // the unwind, answer every request with a failure response, and
+        // keep serving. (AssertUnwindSafe: on panic the engine's only
+        // cross-batch state we still read is the monotone conversion
+        // counters, and a torn batch's partial counts are acceptable.)
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.infer_payloads(&payloads)
+        }));
+        match outcome {
+            Ok(Ok(all_logits)) => {
                 for (req, logits) in batch.requests.iter().zip(all_logits) {
                     let resp = InferenceResponse::from_logits(req, logits, wid);
                     metrics.record_completion(resp.latency_us);
@@ -205,16 +259,38 @@ fn worker_loop(
                     let _ = response_tx.send(resp);
                 }
             }
-            Err(_) => {
-                for _ in &batch.requests {
+            Ok(Err(e)) => {
+                let reason = format!("engine error: {e:#}");
+                for req in &batch.requests {
                     metrics.record_error();
                     admission.release();
+                    let _ = response_tx.send(InferenceResponse::failure(req, wid, reason.clone()));
+                }
+            }
+            Err(payload) => {
+                let reason = format!("worker panic isolated: {}", panic_message(&payload));
+                for req in &batch.requests {
+                    metrics.record_panic_isolated();
+                    admission.release();
+                    let _ = response_tx.send(InferenceResponse::failure(req, wid, reason.clone()));
                 }
             }
         }
         let now = engine.conversion_stats();
         metrics.record_conversions(&now.minus(&last_conv));
         last_conv = now;
+    }
+}
+
+/// Best-effort text of a caught panic payload (`panic!` carries a
+/// `&str` or `String`; anything else stays opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string panic payload>"
     }
 }
 
@@ -241,7 +317,7 @@ mod tests {
             ServerConfig { workers: 2, batch: 4, batch_deadline_us: 500, ..Default::default() };
         let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
         for i in 0..20u64 {
-            assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])));
+            assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])).is_ok());
         }
         let mut got = Vec::new();
         let t0 = Instant::now();
@@ -270,15 +346,53 @@ mod tests {
             ..Default::default()
         };
         let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::RoundRobin).unwrap();
-        let mut accepted = 0;
+        let mut accepted = 0u64;
+        let mut queue_full = 0u64;
         for i in 0..64u64 {
-            if server.submit(InferenceRequest::new(i, 0, vec![0.0; 4])) {
-                accepted += 1;
+            match server.submit(InferenceRequest::new(i, 0, vec![0.0; 4])) {
+                Ok(()) => accepted += 1,
+                Err(SubmitError::QueueFull) => queue_full += 1,
+                Err(e) => panic!("unexpected reject reason: {e}"),
             }
         }
         assert!(accepted <= 8, "admitted {accepted} > depth 8");
         assert!(server.shed_count() >= 56);
-        server.shutdown();
+        let snap = server.shutdown();
+        assert_eq!(snap.rejected_queue_full, queue_full);
+        assert_eq!(accepted + queue_full, 64);
+        assert!(format!("{snap}").contains("rejected: queue="), "{snap}");
+    }
+
+    /// The wire ingest boundary: valid bytes serve, garbage is refused
+    /// with `Malformed` and counted, and the server stays healthy.
+    #[test]
+    fn submit_wire_validates_at_the_boundary() {
+        use crate::frontend::codec::{CodecParams, LOSSLESS};
+        use crate::frontend::encoder::{FrameEncoder, Selection};
+        let cfg =
+            ServerConfig { workers: 1, batch: 2, batch_deadline_us: 500, ..Default::default() };
+        let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::RoundRobin).unwrap();
+        let params = CodecParams::new(1, 4, 8, LOSSLESS).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::All);
+        let wire = enc.encode_wire(&[1.0, 0.25, 0.5, 0.75], 42);
+        assert_eq!(server.submit_wire(0, &wire).unwrap(), 42, "request id = wire frame id");
+
+        assert!(matches!(
+            server.submit_wire(0, b"not a frame"),
+            Err(SubmitError::Malformed(_))
+        ));
+        assert!(matches!(
+            server.submit_wire(0, &wire[..wire.len() - 1]),
+            Err(SubmitError::Malformed(_))
+        ));
+
+        let r = server.recv_response(Duration::from_secs(2)).expect("valid frame serves");
+        assert_eq!(r.id, 42);
+        assert_eq!(r.class, 1);
+        assert!(r.error.is_none());
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.rejected_malformed, 2);
     }
 
     /// Compressed requests flow through the real batcher/router/worker
@@ -297,7 +411,7 @@ mod tests {
             // the lossless round trip preserves it exactly (0 or 1).
             let frame = vec![(i % 2) as f32, 0.25, 0.5, 0.75];
             let cf = enc.encode(&frame, i);
-            assert!(server.submit(InferenceRequest::compressed(i, 0, cf)));
+            assert!(server.submit(InferenceRequest::compressed(i, 0, cf)).is_ok());
         }
         let mut got = Vec::new();
         let t0 = Instant::now();
@@ -324,7 +438,7 @@ mod tests {
             ..Default::default()
         };
         let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::LeastLoaded).unwrap();
-        server.submit(InferenceRequest::new(1, 0, vec![1.0; 4]));
+        server.submit(InferenceRequest::new(1, 0, vec![1.0; 4])).unwrap();
         let r = server.recv_response(Duration::from_secs(2)).expect("deadline dispatch");
         assert_eq!(r.id, 1);
         server.shutdown();

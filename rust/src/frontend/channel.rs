@@ -1,0 +1,309 @@
+//! Deterministic fault-injecting channel model for compressed-frame
+//! transport (the lossy hop between sensor nodes and the edge
+//! coordinator; cf. the over-the-air multi-sensor serving setting of
+//! arxiv 2501.10245).
+//!
+//! [`Channel::transmit`] takes one encoded frame's wire bytes and
+//! returns what the far end receives: possibly bit-flipped at a
+//! configurable BER, truncated, duplicated, reordered with the next
+//! frame, or dropped outright. Faults are drawn from
+//! `Rng::for_stream(seed, frame_id)` — the same per-stream determinism
+//! contract as encoder dither and analog noise — so a fleet test
+//! corrupts exactly the same frames run after run, no matter how
+//! submission threads interleave.
+//!
+//! The model is intentionally wire-level only: it never interprets the
+//! bytes it damages. Whatever comes out the far end must be survived by
+//! [`super::codec::CompressedFrame::from_bytes`], which is the point.
+
+use crate::util::Rng;
+
+/// Fault probabilities for one simulated link. All probabilities are
+/// per frame except `ber`, which is per bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChannelConfig {
+    /// Bit error rate: each payload bit flips independently.
+    pub ber: f64,
+    /// Probability the frame is lost entirely.
+    pub drop_prob: f64,
+    /// Probability the frame is cut short at a random byte boundary.
+    pub truncate_prob: f64,
+    /// Probability the frame is delivered twice.
+    pub duplicate_prob: f64,
+    /// Probability the frame is held back and delivered after its
+    /// successor (pairwise reordering).
+    pub reorder_prob: f64,
+    /// Seed of the per-frame fault stream.
+    pub seed: u64,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        ChannelConfig {
+            ber: 0.0,
+            drop_prob: 0.0,
+            truncate_prob: 0.0,
+            duplicate_prob: 0.0,
+            reorder_prob: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// Reject NaN or out-of-range probabilities before they reach the
+    /// RNG (whose `bernoulli` treats NaN as never-true silently).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("ber", self.ber),
+            ("drop_prob", self.drop_prob),
+            ("truncate_prob", self.truncate_prob),
+            ("duplicate_prob", self.duplicate_prob),
+            ("reorder_prob", self.reorder_prob),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("channel {name} = {p} outside [0, 1]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Running per-link fault tally (what the channel *did*, for test
+/// assertions and demo output).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    /// Frames offered to the channel.
+    pub offered: u64,
+    /// Deliveries out the far end (duplicates count twice).
+    pub delivered: u64,
+    pub dropped: u64,
+    pub truncated: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+    /// Frames with at least one flipped bit.
+    pub corrupted: u64,
+    pub bits_flipped: u64,
+}
+
+impl std::fmt::Display for ChannelStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "channel: offered={} delivered={} dropped={} truncated={} \
+             duplicated={} reordered={} corrupted={} (bits={})",
+            self.offered,
+            self.delivered,
+            self.dropped,
+            self.truncated,
+            self.duplicated,
+            self.reordered,
+            self.corrupted,
+            self.bits_flipped
+        )
+    }
+}
+
+/// One simulated lossy link. Stateful only for pairwise reordering
+/// (at most one frame is ever held back); everything else is a pure
+/// function of `(config, frame_id, bytes)`.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    cfg: ChannelConfig,
+    stats: ChannelStats,
+    held: Option<(u64, Vec<u8>)>,
+}
+
+impl Channel {
+    pub fn new(cfg: ChannelConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        Ok(Channel { cfg, stats: ChannelStats::default(), held: None })
+    }
+
+    pub fn config(&self) -> ChannelConfig {
+        self.cfg
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.stats
+    }
+
+    /// Push one frame through the link; returns the `(frame_id, bytes)`
+    /// deliveries that come out the far end (possibly none, possibly
+    /// several once duplication/reordering get involved).
+    ///
+    /// Fault decisions are always drawn in the same fixed order —
+    /// drop, bit flips, truncation, duplication, reordering — so the
+    /// outcome for a frame id is independent of channel history.
+    pub fn transmit(&mut self, frame_id: u64, bytes: &[u8]) -> Vec<(u64, Vec<u8>)> {
+        self.stats.offered += 1;
+        let mut rng = Rng::for_stream(self.cfg.seed, frame_id);
+
+        if rng.bernoulli(self.cfg.drop_prob) {
+            self.stats.dropped += 1;
+            // A drop releases nothing: the held frame keeps waiting for
+            // the next successor.
+            return Vec::new();
+        }
+
+        let mut data = bytes.to_vec();
+        if self.cfg.ber > 0.0 {
+            let mut flips = 0u64;
+            for byte in data.iter_mut() {
+                for bit in 0..8 {
+                    if rng.bernoulli(self.cfg.ber) {
+                        *byte ^= 1 << bit;
+                        flips += 1;
+                    }
+                }
+            }
+            if flips > 0 {
+                self.stats.corrupted += 1;
+                self.stats.bits_flipped += flips;
+            }
+        }
+        if rng.bernoulli(self.cfg.truncate_prob) && !data.is_empty() {
+            data.truncate(rng.index(data.len()));
+            self.stats.truncated += 1;
+        }
+        let duplicate = rng.bernoulli(self.cfg.duplicate_prob);
+        let reorder = rng.bernoulli(self.cfg.reorder_prob);
+
+        let mut out = Vec::new();
+        if reorder && self.held.is_none() {
+            // Hold this frame back; it rides out behind its successor.
+            // (A duplication draw on a held frame is ignored — the
+            // decisions are still drawn in fixed order above so other
+            // frames' fault streams are unaffected.)
+            self.stats.reordered += 1;
+            self.held = Some((frame_id, data));
+            return out;
+        }
+        out.push((frame_id, data.clone()));
+        if duplicate {
+            self.stats.duplicated += 1;
+            out.push((frame_id, data));
+        }
+        if let Some(held) = self.held.take() {
+            out.push(held);
+        }
+        self.stats.delivered += out.len() as u64;
+        out
+    }
+
+    /// Release any held-back frame (end of stream).
+    pub fn flush(&mut self) -> Vec<(u64, Vec<u8>)> {
+        let out: Vec<_> = self.held.take().into_iter().collect();
+        self.stats.delivered += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChannelConfig {
+        ChannelConfig { seed: 0xc4a7, ..ChannelConfig::default() }
+    }
+
+    #[test]
+    fn clean_channel_is_identity() {
+        let mut ch = Channel::new(cfg()).unwrap();
+        let frame = vec![1u8, 2, 3, 4];
+        assert_eq!(ch.transmit(7, &frame), vec![(7, frame.clone())]);
+        assert_eq!(ch.flush(), Vec::new());
+        let s = ch.stats();
+        assert_eq!((s.offered, s.delivered, s.corrupted), (1, 1, 0));
+    }
+
+    #[test]
+    fn transmit_is_deterministic_per_frame_id() {
+        let noisy = ChannelConfig {
+            ber: 0.01,
+            drop_prob: 0.1,
+            truncate_prob: 0.1,
+            duplicate_prob: 0.1,
+            reorder_prob: 0.1,
+            ..cfg()
+        };
+        let payload: Vec<u8> = (0..64).collect();
+        let mut a = Channel::new(noisy).unwrap();
+        let mut b = Channel::new(noisy).unwrap();
+        for id in 0..200 {
+            assert_eq!(a.transmit(id, &payload), b.transmit(id, &payload), "frame {id}");
+        }
+        assert_eq!(a.flush(), b.flush());
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn drop_prob_one_drops_everything() {
+        let mut ch = Channel::new(ChannelConfig { drop_prob: 1.0, ..cfg() }).unwrap();
+        for id in 0..32 {
+            assert!(ch.transmit(id, &[0xAA; 16]).is_empty());
+        }
+        let s = ch.stats();
+        assert_eq!((s.offered, s.dropped, s.delivered), (32, 32, 0));
+    }
+
+    #[test]
+    fn ber_one_flips_every_bit() {
+        let mut ch = Channel::new(ChannelConfig { ber: 1.0, ..cfg() }).unwrap();
+        let out = ch.transmit(0, &[0x0F, 0xF0]);
+        assert_eq!(out, vec![(0, vec![0xF0, 0x0F])]);
+        let s = ch.stats();
+        assert_eq!((s.corrupted, s.bits_flipped), (1, 16));
+    }
+
+    #[test]
+    fn reordering_swaps_with_successor_and_flush_releases() {
+        let mut ch = Channel::new(ChannelConfig { reorder_prob: 1.0, ..cfg() }).unwrap();
+        // First frame is held; the second is also *drawn* reorder=true
+        // but the slot is taken, so it carries the held frame out.
+        assert!(ch.transmit(1, &[1]).is_empty());
+        assert_eq!(ch.transmit(2, &[2]), vec![(2, vec![2]), (1, vec![1])]);
+        // Third is held again; flush releases it.
+        assert!(ch.transmit(3, &[3]).is_empty());
+        assert_eq!(ch.flush(), vec![(3, vec![3])]);
+        assert_eq!(ch.stats().delivered, 3);
+    }
+
+    #[test]
+    fn duplicate_delivers_twice() {
+        let mut ch = Channel::new(ChannelConfig { duplicate_prob: 1.0, ..cfg() }).unwrap();
+        let out = ch.transmit(5, &[9, 9]);
+        assert_eq!(out, vec![(5, vec![9, 9]), (5, vec![9, 9])]);
+        assert_eq!(ch.stats().duplicated, 1);
+        assert_eq!(ch.stats().delivered, 2);
+    }
+
+    #[test]
+    fn truncation_never_panics_on_tiny_frames() {
+        let mut ch = Channel::new(ChannelConfig { truncate_prob: 1.0, ..cfg() }).unwrap();
+        for id in 0..16 {
+            for out in ch.transmit(id, &[7]) {
+                assert!(out.1.len() <= 1);
+            }
+            assert!(ch.transmit(1000 + id, &[]).len() <= 1);
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_probs() {
+        assert!(ChannelConfig { ber: -0.1, ..cfg() }.validate().is_err());
+        assert!(ChannelConfig { drop_prob: 1.5, ..cfg() }.validate().is_err());
+        assert!(ChannelConfig { reorder_prob: f64::NAN, ..cfg() }.validate().is_err());
+        assert!(cfg().validate().is_ok());
+        assert!(Channel::new(ChannelConfig { ber: 2.0, ..cfg() }).is_err());
+    }
+
+    #[test]
+    fn stats_display_is_stable() {
+        let mut ch = Channel::new(ChannelConfig { duplicate_prob: 1.0, ..cfg() }).unwrap();
+        let _ = ch.transmit(0, &[1, 2, 3]);
+        let line = ch.stats().to_string();
+        assert!(line.contains("offered=1"), "got: {line}");
+        assert!(line.contains("duplicated=1"), "got: {line}");
+    }
+}

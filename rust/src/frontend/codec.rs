@@ -21,6 +21,19 @@
 //! **bit-exact** (all butterfly intermediates are grid-unit integers
 //! below the f32 exact-integer bound — enforced by
 //! [`CodecParams::new`]).
+//!
+//! **Untrusted ingest**: frames cross node boundaries as the versioned
+//! wire format of [`CompressedFrame::to_bytes`] /
+//! [`CompressedFrame::from_bytes`] — a magic/version header, explicit
+//! field lengths, little-endian throughout. `from_bytes` is *total*
+//! over arbitrary bytes: every structural defect maps to a
+//! [`CodecError`], every declared length is cross-checked against the
+//! bytes actually received before anything is allocated, and a frame it
+//! accepts can be decoded by the infallible hot paths without panicking.
+//! The checked twins ([`BitReader::try_read`],
+//! [`CompressedFrame::try_for_each_coeff`],
+//! [`DecodeScratch::try_decode`]) keep hostile frames total end to end;
+//! the infallible variants remain for trusted in-process frames.
 
 use crate::wht::fwht::walsh_to_hadamard_index;
 use crate::wht::fwht_inplace;
@@ -31,10 +44,87 @@ pub const LOSSLESS: u8 = 0;
 /// Bands per channel for the quantizer's scale grouping.
 pub const BANDS_PER_CHANNEL: usize = 8;
 
-/// Fixed per-frame header cost charged by [`CompressedFrame::encoded_bytes`]:
-/// frame id (8) + channels (2) + samples (4) + sensor/codec bits (2) +
-/// kept count (4).
-pub const HEADER_BYTES: usize = 20;
+/// Wire-format magic: "Analog Compressed Frame", version suffix below.
+pub const WIRE_MAGIC: [u8; 4] = *b"ACF1";
+
+/// Wire-format version accepted by [`CompressedFrame::from_bytes`].
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed wire header size: magic (4) + version (1) + sensor bits (1) +
+/// codec bits (1) + reserved (1) + channels u16 + samples u16 +
+/// kept u32 + frame id u64 + scale count u16 + packed length u32, all
+/// little-endian. The encode-time triage scores (`retained_energy` …)
+/// are diagnostics, not wire payload.
+pub const WIRE_HEADER_BYTES: usize = 30;
+
+/// Hard cap on `channels`, enforced by [`CodecParams::new`]: together
+/// with the exactness bound (which caps `block` at 2048) it bounds
+/// every decoder-side allocation a hostile wire frame can request —
+/// dense output, band bitmap, scale table — and keeps `channels` /
+/// `samples` inside their u16 wire fields.
+pub const MAX_CHANNELS: usize = 4096;
+
+/// Why a byte stream was rejected by [`CompressedFrame::from_bytes`]
+/// (or a frame by the checked decode paths). Every variant is a
+/// *rejected input*, never a panic: the decoder is total over
+/// arbitrary bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecError {
+    /// Stream ends before the bytes the header promises.
+    Truncated { need: usize, have: usize },
+    /// First four bytes are not [`WIRE_MAGIC`].
+    BadMagic,
+    /// Unknown wire version.
+    BadVersion(u8),
+    /// Header geometry rejected by [`CodecParams::new`].
+    BadParams(String),
+    /// A declared count/length disagrees with what the header implies.
+    LengthOverflow { field: &'static str, declared: u64, expected: u64 },
+    /// Scale count does not match the band bitmap's population count.
+    BandScaleMismatch { declared: usize, expected: usize },
+    /// A band scale is NaN or infinite.
+    NonFiniteScale { index: usize },
+    /// A lossless coefficient value is NaN or infinite.
+    NonFiniteValue { index: usize },
+    /// A packed coefficient index falls outside the coefficient space.
+    IndexOutOfRange { index: usize, space: usize },
+    /// Structurally readable but not the canonical encoder output
+    /// (non-ascending indices, nonzero padding/reserved bits, trailing
+    /// bytes, …) — rejected so every accepted stream has exactly one
+    /// decoding and `to_bytes ∘ from_bytes` is the identity.
+    NonCanonical(&'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated stream: need {need} bytes, have {have}")
+            }
+            CodecError::BadMagic => write!(f, "bad magic (not a compressed frame)"),
+            CodecError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            CodecError::BadParams(msg) => write!(f, "invalid codec params: {msg}"),
+            CodecError::LengthOverflow { field, declared, expected } => {
+                write!(f, "declared {field} = {declared}, expected {expected}")
+            }
+            CodecError::BandScaleMismatch { declared, expected } => {
+                write!(f, "scale count {declared} != occupied band count {expected}")
+            }
+            CodecError::NonFiniteScale { index } => {
+                write!(f, "band scale {index} is not finite")
+            }
+            CodecError::NonFiniteValue { index } => {
+                write!(f, "lossless coefficient {index} is not finite")
+            }
+            CodecError::IndexOutOfRange { index, space } => {
+                write!(f, "coefficient index {index} outside space {space}")
+            }
+            CodecError::NonCanonical(what) => write!(f, "non-canonical encoding: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Geometry + precision of a frame codec. `samples` is the per-channel
 /// logical length; each channel transforms in one `block`-sized
@@ -64,6 +154,12 @@ impl CodecParams {
     ) -> Result<Self, String> {
         if channels == 0 || samples == 0 {
             return Err("codec needs at least one channel and one sample".to_string());
+        }
+        if channels > MAX_CHANNELS {
+            return Err(format!(
+                "channels {channels} exceeds the wire cap {MAX_CHANNELS} \
+                 (bounds decoder-side allocations for untrusted frames)"
+            ));
         }
         if !(1..=12).contains(&sensor_bits) {
             return Err(format!("sensor_bits {sensor_bits} outside 1..=12"));
@@ -207,9 +303,188 @@ impl CompressedFrame {
     }
 
     /// Wire size in bytes: header + band bitmap + per-band scales +
-    /// packed coefficient pairs.
+    /// packed coefficient pairs. Always equals `to_bytes().len()`.
     pub fn encoded_bytes(&self) -> usize {
-        HEADER_BYTES + self.band_map.len() + self.scales.len() * 4 + self.packed.len()
+        WIRE_HEADER_BYTES + self.band_map.len() + self.scales.len() * 4 + self.packed.len()
+    }
+
+    /// Serialize to the versioned wire format (see [`WIRE_HEADER_BYTES`]
+    /// for the layout). Infallible: [`CodecParams::new`] caps `channels`
+    /// and the exactness bound caps `block`, so every field fits its
+    /// wire width.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_bytes());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.push(WIRE_VERSION);
+        out.push(self.params.sensor_bits);
+        out.push(self.params.codec_bits);
+        out.push(0); // reserved
+        out.extend_from_slice(&(self.params.channels as u16).to_le_bytes());
+        out.extend_from_slice(&(self.params.samples as u16).to_le_bytes());
+        out.extend_from_slice(&(self.kept as u32).to_le_bytes());
+        out.extend_from_slice(&self.frame_id.to_le_bytes());
+        out.extend_from_slice(&(self.scales.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(self.packed.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.band_map);
+        for s in &self.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&self.packed);
+        out
+    }
+
+    /// Parse the wire format. Total over arbitrary bytes — every defect
+    /// maps to a [`CodecError`] — and allocation-bounded: declared
+    /// lengths are checked against both the header-implied values and
+    /// the bytes actually present *before* any buffer is sized from
+    /// them. An accepted frame is safe for the infallible decode paths
+    /// (the packed stream is fully validated here), and canonical:
+    /// `to_bytes(from_bytes(b)?) == b`.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, CodecError> {
+        if bytes.len() < 4 {
+            return Err(CodecError::Truncated { need: WIRE_HEADER_BYTES, have: bytes.len() });
+        }
+        if bytes[..4] != WIRE_MAGIC {
+            return Err(CodecError::BadMagic);
+        }
+        if bytes.len() < WIRE_HEADER_BYTES {
+            return Err(CodecError::Truncated { need: WIRE_HEADER_BYTES, have: bytes.len() });
+        }
+        if bytes[4] != WIRE_VERSION {
+            return Err(CodecError::BadVersion(bytes[4]));
+        }
+        let sensor_bits = bytes[5];
+        let codec_bits = bytes[6];
+        if bytes[7] != 0 {
+            return Err(CodecError::NonCanonical("nonzero reserved header byte"));
+        }
+        let channels = le_u16(bytes, 8) as usize;
+        let samples = le_u16(bytes, 10) as usize;
+        let kept = le_u32(bytes, 12) as usize;
+        let frame_id = le_u64(bytes, 16);
+        let n_scales = le_u16(bytes, 24) as usize;
+        let packed_len = le_u32(bytes, 26) as usize;
+
+        let params = CodecParams::new(channels, samples, sensor_bits, codec_bits)
+            .map_err(CodecError::BadParams)?;
+        let space = params.coeff_space();
+        if kept > space {
+            return Err(CodecError::LengthOverflow {
+                field: "kept",
+                declared: kept as u64,
+                expected: space as u64,
+            });
+        }
+        let lossless = codec_bits == LOSSLESS;
+        let n_bands = if lossless { 0 } else { channels * params.bands() };
+        let band_map_len = n_bands.div_ceil(8);
+        if n_scales > n_bands {
+            return Err(CodecError::LengthOverflow {
+                field: "scales",
+                declared: n_scales as u64,
+                expected: n_bands as u64,
+            });
+        }
+        // The packed length is implied by `kept`: reject any other
+        // declaration before trusting it for slicing.
+        let pair_bits = (params.index_bits() + params.value_bits()) as u64;
+        let expected_packed = (kept as u64 * pair_bits).div_ceil(8) as usize;
+        if packed_len != expected_packed {
+            return Err(CodecError::LengthOverflow {
+                field: "packed",
+                declared: packed_len as u64,
+                expected: expected_packed as u64,
+            });
+        }
+        let need = WIRE_HEADER_BYTES + band_map_len + n_scales * 4 + packed_len;
+        if bytes.len() < need {
+            return Err(CodecError::Truncated { need, have: bytes.len() });
+        }
+        if bytes.len() > need {
+            return Err(CodecError::NonCanonical("trailing bytes after frame"));
+        }
+
+        let band_map = bytes[WIRE_HEADER_BYTES..WIRE_HEADER_BYTES + band_map_len].to_vec();
+        let mut at = WIRE_HEADER_BYTES + band_map_len;
+        let mut scales = Vec::with_capacity(n_scales);
+        for i in 0..n_scales {
+            let s = f32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]]);
+            if !s.is_finite() {
+                return Err(CodecError::NonFiniteScale { index: i });
+            }
+            if s < 0.0 {
+                return Err(CodecError::NonCanonical("negative band scale"));
+            }
+            scales.push(s);
+            at += 4;
+        }
+        let packed = bytes[at..at + packed_len].to_vec();
+
+        if !lossless {
+            // Bitmap invariants: padding bits clear, population count
+            // equal to the scale table length.
+            let mut pop = 0usize;
+            for bit in 0..band_map_len * 8 {
+                if band_map_get(&band_map, bit) {
+                    if bit >= n_bands {
+                        return Err(CodecError::NonCanonical("band bitmap padding not zero"));
+                    }
+                    pop += 1;
+                }
+            }
+            if pop != n_scales {
+                return Err(CodecError::BandScaleMismatch { declared: n_scales, expected: pop });
+            }
+        }
+
+        let frame = CompressedFrame::from_parts(frame_id, params, kept, band_map, scales, packed);
+        frame.validate_packed()?;
+        Ok(frame)
+    }
+
+    /// Full scan of the packed pair stream: every index in range and
+    /// strictly ascending, lossy coefficients only in occupied bands,
+    /// lossless values finite, final-byte padding zero. After this
+    /// passes, the infallible decode paths cannot fail on the frame.
+    fn validate_packed(&self) -> Result<(), CodecError> {
+        let p = self.params;
+        let idx_bits = p.index_bits();
+        let val_bits = p.value_bits();
+        let space = p.coeff_space();
+        let block = p.block();
+        let lossless = p.codec_bits == LOSSLESS;
+        let exhausted =
+            CodecError::Truncated { need: self.packed.len() + 1, have: self.packed.len() };
+        let mut reader = BitReader::new(&self.packed);
+        let mut last: Option<usize> = None;
+        for k in 0..self.kept {
+            let idx = reader.try_read(idx_bits).ok_or(exhausted.clone())? as usize;
+            if idx >= space {
+                return Err(CodecError::IndexOutOfRange { index: idx, space });
+            }
+            if last.is_some_and(|l| idx <= l) {
+                return Err(CodecError::NonCanonical("coefficient indices must strictly ascend"));
+            }
+            last = Some(idx);
+            let raw = reader.try_read(val_bits).ok_or(exhausted.clone())?;
+            if lossless {
+                if !f32::from_bits(raw as u32).is_finite() {
+                    return Err(CodecError::NonFiniteValue { index: k });
+                }
+            } else {
+                let (ch, s) = (idx / block, idx % block);
+                if !band_map_get(&self.band_map, ch * p.bands() + p.band_of(s)) {
+                    return Err(CodecError::NonCanonical("kept coefficient in unoccupied band"));
+                }
+            }
+        }
+        // `packed.len()` was matched against ceil(kept·pair_bits/8), so
+        // fewer than 8 bits remain; they must be zero for canonicality.
+        let left = reader.remaining_bits();
+        if left > 0 && reader.try_read(left as u32) != Some(0) {
+            return Err(CodecError::NonCanonical("nonzero padding bits in packed stream"));
+        }
+        Ok(())
     }
 
     /// Visit every kept coefficient as `(channel, sequency, value)` in
@@ -253,12 +528,95 @@ impl CompressedFrame {
         }
     }
 
+    /// Checked twin of [`Self::for_each_coeff`] for frames that did not
+    /// come from this process's encoder: every bit read is
+    /// bounds-checked and every index validated, so a corrupt frame
+    /// yields a [`CodecError`] instead of a panic. The closure itself
+    /// is infallible — validation lives here.
+    pub fn try_for_each_coeff(
+        &self,
+        mut f: impl FnMut(usize, usize, f32),
+    ) -> Result<(), CodecError> {
+        let p = self.params;
+        let block = p.block();
+        let idx_bits = p.index_bits();
+        let val_bits = p.value_bits();
+        let space = p.coeff_space();
+        let lossless = p.codec_bits == LOSSLESS;
+        let max_level = if lossless { 0 } else { (1i64 << (p.codec_bits - 1)) - 1 };
+        let mut scale_of = Vec::new();
+        if !lossless {
+            let n_bands = p.channels * p.bands();
+            if self.band_map.len() * 8 < n_bands {
+                return Err(CodecError::Truncated {
+                    need: n_bands.div_ceil(8),
+                    have: self.band_map.len(),
+                });
+            }
+            let pop = self.band_map.iter().map(|b| b.count_ones() as usize).sum::<usize>();
+            if pop != self.scales.len() {
+                return Err(CodecError::BandScaleMismatch {
+                    declared: self.scales.len(),
+                    expected: pop,
+                });
+            }
+            scale_of.resize(n_bands, 0.0f32);
+            let mut rank = 0usize;
+            for (flat, slot) in scale_of.iter_mut().enumerate() {
+                if band_map_get(&self.band_map, flat) {
+                    *slot = self.scales[rank];
+                    rank += 1;
+                }
+            }
+        }
+        let exhausted =
+            CodecError::Truncated { need: self.packed.len() + 1, have: self.packed.len() };
+        let mut reader = BitReader::new(&self.packed);
+        for _ in 0..self.kept {
+            let idx = reader.try_read(idx_bits).ok_or(exhausted.clone())? as usize;
+            if idx >= space {
+                return Err(CodecError::IndexOutOfRange { index: idx, space });
+            }
+            let (ch, s) = (idx / block, idx % block);
+            let v = if lossless {
+                f32::from_bits(reader.try_read(32).ok_or(exhausted.clone())? as u32)
+            } else {
+                let stored = reader.try_read(val_bits).ok_or(exhausted.clone())? as i64;
+                let level = stored - max_level;
+                let scale = scale_of[ch * p.bands() + p.band_of(s)];
+                level as f32 * scale / max_level as f32
+            };
+            f(ch, s, v);
+        }
+        Ok(())
+    }
+
     /// Decode into a fresh dense frame (reference path; allocation-free
     /// serving uses [`DecodeScratch::decode`]).
     pub fn decode(&self) -> Vec<f32> {
         let mut scratch = DecodeScratch::default();
         scratch.decode(self).to_vec()
     }
+
+    /// Fallible [`Self::decode`] for frames from untrusted sources.
+    pub fn try_decode(&self) -> Result<Vec<f32>, CodecError> {
+        let mut scratch = DecodeScratch::default();
+        scratch.try_decode(self).map(<[f32]>::to_vec)
+    }
+}
+
+fn le_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(w)
 }
 
 #[inline]
@@ -281,13 +639,21 @@ pub struct DecodeScratch {
 }
 
 impl DecodeScratch {
-    /// Decode `frame` into the internal dense buffer and return it.
+    /// Decode `frame` into the internal dense buffer and return it
+    /// (trusted in-process frames; panics on a corrupt one).
+    pub fn decode(&mut self, frame: &CompressedFrame) -> &[f32] {
+        self.try_decode(frame).expect("corrupt CompressedFrame on the trusted decode path")
+    }
+
+    /// Decode `frame` into the internal dense buffer and return it,
+    /// reporting a [`CodecError`] instead of panicking when the frame
+    /// is corrupt (the untrusted-ingest path).
     ///
     /// Coefficients scatter directly into Hadamard order (one
     /// permutation lookup each), then each **non-empty** channel runs
     /// one inverse FWHT — fully-dropped channels skip the transform and
     /// stay zero.
-    pub fn decode(&mut self, frame: &CompressedFrame) -> &[f32] {
+    pub fn try_decode(&mut self, frame: &CompressedFrame) -> Result<&[f32], CodecError> {
         let p = frame.params;
         let block = p.block();
         let bits = block.trailing_zeros();
@@ -311,7 +677,7 @@ impl DecodeScratch {
             }
             buf.iter_mut().for_each(|v| *v = 0.0);
         };
-        frame.for_each_coeff(|ch, s, v| {
+        frame.try_for_each_coeff(|ch, s, v| {
             if let Some(cur) = open {
                 if cur != ch {
                     flush(cur, &mut *blk);
@@ -321,11 +687,11 @@ impl DecodeScratch {
                 open = Some(ch);
             }
             blk[walsh_to_hadamard_index(s, bits)] = v;
-        });
+        })?;
         if let Some(cur) = open {
             flush(cur, &mut *blk);
         }
-        &self.dense
+        Ok(&self.dense)
     }
 }
 
@@ -375,7 +741,18 @@ impl<'a> BitReader<'a> {
         BitReader { bytes, pos: 0 }
     }
 
-    pub fn read(&mut self, bits: u32) -> u64 {
+    /// Bits left to read.
+    pub fn remaining_bits(&self) -> usize {
+        self.bytes.len() * 8 - self.pos
+    }
+
+    /// Checked read for untrusted buffers: `None` when fewer than
+    /// `bits` remain; nothing is consumed on failure.
+    pub fn try_read(&mut self, bits: u32) -> Option<u64> {
+        debug_assert!(bits <= 64);
+        if self.remaining_bits() < bits as usize {
+            return None;
+        }
         let mut out = 0u64;
         let mut got = 0u32;
         while got < bits {
@@ -388,13 +765,215 @@ impl<'a> BitReader<'a> {
             self.pos += take as usize;
             got += take;
         }
-        out
+        Some(out)
+    }
+
+    /// Infallible read for trusted in-process buffers (the encoder's
+    /// own output). Over-reading is a caller bug: debug builds assert
+    /// on the remaining bits, and release builds panic cleanly through
+    /// the checked path instead of indexing out of bounds.
+    pub fn read(&mut self, bits: u32) -> u64 {
+        debug_assert!(
+            self.remaining_bits() >= bits as usize,
+            "BitReader over-read: {bits} bits requested, {} remain",
+            self.remaining_bits()
+        );
+        self.try_read(bits).expect("BitReader over-read on a trusted buffer")
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontend::encoder::{FrameEncoder, Selection};
+
+    fn enc(ch: usize, samples: usize, codec_bits: u8, sel: Selection, seed: u64) -> CompressedFrame {
+        let p = CodecParams::new(ch, samples, 8, codec_bits).unwrap();
+        let mut rng = crate::util::Rng::new(seed);
+        let frame: Vec<f32> = (0..p.dense_len()).map(|_| rng.uniform() as f32).collect();
+        FrameEncoder::new(p, sel).encode(&frame, seed)
+    }
+
+    #[test]
+    fn try_read_checks_remaining_bits() {
+        let bytes = [0xA5u8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.remaining_bits(), 8);
+        assert_eq!(r.try_read(5), Some(0b00101));
+        assert_eq!(r.try_read(4), None, "only 3 bits remain");
+        assert_eq!(r.remaining_bits(), 3, "a failed read consumes nothing");
+        assert_eq!(r.try_read(3), Some(0b101));
+        assert_eq!(r.try_read(1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-read")]
+    fn trusted_read_past_end_panics_cleanly() {
+        let bytes = [0u8];
+        let mut r = BitReader::new(&bytes);
+        let _ = r.read(9);
+    }
+
+    #[test]
+    fn wire_round_trip_is_identity_and_canonical() {
+        for (ch, samples, bits, sel) in [
+            (4usize, 64usize, 8u8, Selection::TopK(16)),
+            (3, 33, LOSSLESS, Selection::All),
+            (1, 1, 2, Selection::All),
+            (2, 256, 6, Selection::EnergyFrac(0.9)),
+        ] {
+            let f = enc(ch, samples, bits, sel, 7);
+            let b = f.to_bytes();
+            assert_eq!(b.len(), f.encoded_bytes(), "encoded_bytes must match the wire");
+            let g = CompressedFrame::from_bytes(&b).unwrap();
+            // The triage scores are diagnostics, not wire payload.
+            let mut want = f.clone();
+            want.retained_energy = 0.0;
+            want.ac_retained = 0.0;
+            want.peak_to_mean = 0.0;
+            want.ac_energy = 0.0;
+            assert_eq!(g, want, "ch={ch} samples={samples} bits={bits}");
+            assert_eq!(g.to_bytes(), b, "accepted frames re-encode canonically");
+            assert_eq!(g.try_decode().unwrap(), f.decode());
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_each_header_corruption() {
+        let f = enc(4, 64, 8, Selection::TopK(16), 11);
+        let b = f.to_bytes();
+
+        assert_eq!(
+            CompressedFrame::from_bytes(&[]),
+            Err(CodecError::Truncated { need: WIRE_HEADER_BYTES, have: 0 })
+        );
+        let mut m = b.clone();
+        m[0] ^= 0xff;
+        assert_eq!(CompressedFrame::from_bytes(&m), Err(CodecError::BadMagic));
+        assert!(matches!(
+            CompressedFrame::from_bytes(&b[..10]),
+            Err(CodecError::Truncated { need: WIRE_HEADER_BYTES, have: 10 })
+        ));
+        let mut m = b.clone();
+        m[4] = 9;
+        assert_eq!(CompressedFrame::from_bytes(&m), Err(CodecError::BadVersion(9)));
+        let mut m = b.clone();
+        m[7] = 1;
+        assert!(matches!(CompressedFrame::from_bytes(&m), Err(CodecError::NonCanonical(_))));
+        let mut m = b.clone();
+        m[5] = 0; // sensor_bits outside 1..=12
+        assert!(matches!(CompressedFrame::from_bytes(&m), Err(CodecError::BadParams(_))));
+        let mut m = b.clone();
+        m[12..16].copy_from_slice(&u32::MAX.to_le_bytes()); // kept
+        assert!(matches!(
+            CompressedFrame::from_bytes(&m),
+            Err(CodecError::LengthOverflow { field: "kept", .. })
+        ));
+        let mut m = b.clone();
+        m[26] ^= 1; // declared packed length
+        assert!(matches!(
+            CompressedFrame::from_bytes(&m),
+            Err(CodecError::LengthOverflow { field: "packed", .. })
+        ));
+        let mut m = b.clone();
+        m.pop();
+        assert!(matches!(CompressedFrame::from_bytes(&m), Err(CodecError::Truncated { .. })));
+        let mut m = b.clone();
+        m.push(0);
+        assert_eq!(
+            CompressedFrame::from_bytes(&m),
+            Err(CodecError::NonCanonical("trailing bytes after frame"))
+        );
+    }
+
+    #[test]
+    fn from_bytes_rejects_band_scale_corruption() {
+        let f = enc(4, 64, 8, Selection::TopK(4), 13);
+        let b = f.to_bytes();
+        let n_bands = 4 * 8; // channels · bands, exactly 4 bitmap bytes
+        let map_off = WIRE_HEADER_BYTES;
+
+        // Set a previously-clear band bit: the bitmap population no
+        // longer matches the scale count.
+        let mut m = b.clone();
+        let bit = (0..n_bands)
+            .find(|bit| m[map_off + bit / 8] & (1 << (bit % 8)) == 0)
+            .expect("TopK(4) cannot occupy all 32 bands");
+        m[map_off + bit / 8] |= 1 << (bit % 8);
+        assert!(matches!(
+            CompressedFrame::from_bytes(&m),
+            Err(CodecError::BandScaleMismatch { .. })
+        ));
+
+        // NaN band scale.
+        let mut m = b.clone();
+        let scale_off = map_off + n_bands / 8;
+        m[scale_off..scale_off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert_eq!(CompressedFrame::from_bytes(&m), Err(CodecError::NonFiniteScale { index: 0 }));
+    }
+
+    #[test]
+    fn packed_stream_corruption_is_rejected() {
+        // (3, 33): block 64, coefficient space 192, 8-bit indices —
+        // values 192..=255 are representable but out of range.
+        let p = CodecParams::new(3, 33, 8, LOSSLESS).unwrap();
+        let mut w = BitWriter::default();
+        w.push(200, 8);
+        w.push(0.5f32.to_bits() as u64, 32);
+        let f = CompressedFrame::from_parts(1, p, 1, Vec::new(), Vec::new(), w.into_bytes());
+        assert_eq!(
+            CompressedFrame::from_bytes(&f.to_bytes()),
+            Err(CodecError::IndexOutOfRange { index: 200, space: 192 })
+        );
+        assert_eq!(f.try_decode(), Err(CodecError::IndexOutOfRange { index: 200, space: 192 }));
+
+        let mut w = BitWriter::default();
+        w.push(3, 8);
+        w.push(f32::NAN.to_bits() as u64, 32);
+        let f = CompressedFrame::from_parts(1, p, 1, Vec::new(), Vec::new(), w.into_bytes());
+        assert_eq!(
+            CompressedFrame::from_bytes(&f.to_bytes()),
+            Err(CodecError::NonFiniteValue { index: 0 })
+        );
+
+        let mut w = BitWriter::default();
+        for idx in [5u64, 3] {
+            w.push(idx, 8);
+            w.push(0.5f32.to_bits() as u64, 32);
+        }
+        let f = CompressedFrame::from_parts(1, p, 2, Vec::new(), Vec::new(), w.into_bytes());
+        assert!(matches!(
+            CompressedFrame::from_bytes(&f.to_bytes()),
+            Err(CodecError::NonCanonical("coefficient indices must strictly ascend"))
+        ));
+
+        // A frame claiming more pairs than its packed bytes hold must
+        // fail the checked decode instead of panicking.
+        let f = CompressedFrame::from_parts(1, p, 5, Vec::new(), Vec::new(), Vec::new());
+        assert!(matches!(f.try_decode(), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn nonzero_packed_padding_is_rejected() {
+        // 18-bit pairs (10-bit index + 8-bit level), kept = 3 → 54 bits
+        // in 7 bytes: the top two bits of the last byte are padding.
+        let f = enc(4, 144, 8, Selection::TopK(3), 17);
+        assert_eq!(f.kept, 3);
+        let mut b = f.to_bytes();
+        let last = b.len() - 1;
+        b[last] |= 0x80;
+        assert_eq!(
+            CompressedFrame::from_bytes(&b),
+            Err(CodecError::NonCanonical("nonzero padding bits in packed stream"))
+        );
+    }
+
+    #[test]
+    fn params_reject_channel_cap() {
+        assert!(CodecParams::new(MAX_CHANNELS, 4, 8, 8).is_ok());
+        let err = CodecParams::new(MAX_CHANNELS + 1, 4, 8, 8).unwrap_err();
+        assert!(err.contains("wire cap"), "got: {err}");
+    }
 
     #[test]
     fn bit_io_round_trips_mixed_widths() {

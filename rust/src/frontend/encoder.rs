@@ -264,6 +264,12 @@ impl FrameEncoder {
         out.ac_energy = (ac_e / block as f64) as f32;
         out
     }
+
+    /// Encode straight to wire bytes (what a sensor node would put on
+    /// the link; the triage scores stay node-local).
+    pub fn encode_wire(&mut self, frame: &[f32], frame_id: u64) -> Vec<u8> {
+        self.encode(frame, frame_id).to_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -435,6 +441,38 @@ mod tests {
         let frame = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.5, 0.25, 0.0, 1.0, 0.75];
         let dec = enc.encode(&frame, 0).decode();
         assert_eq!(dec, vec![0.0, 0.0, 0.0, 0.5, 0.25, 0.0, 1.0, 0.75]);
+    }
+
+    /// `from_bytes(to_bytes(f))` across the codec parameter grid: the
+    /// wire carries everything serving needs (the decode is identical),
+    /// and re-serializing reproduces the exact bytes.
+    #[test]
+    fn wire_round_trip_across_parameter_grid() {
+        let mut id = 0u64;
+        for &(ch, samples) in &[(1usize, 144usize), (4, 64), (3, 33), (1, 1), (2, 256)] {
+            for &bits in &[LOSSLESS, 2, 6, 8, 16] {
+                for sel in [Selection::All, Selection::TopK(9), Selection::EnergyFrac(0.8)] {
+                    for dither in [false, true] {
+                        let p = params(ch, samples, bits);
+                        let mut enc = FrameEncoder::new(p, sel);
+                        enc.dither = dither;
+                        enc.seed = 0xabc;
+                        let frame = ramp_frame(p, 21 + id);
+                        id += 1;
+                        let cf = enc.encode(&frame, id);
+                        let wire = enc.encode_wire(&frame, id);
+                        assert_eq!(wire, cf.to_bytes());
+                        assert_eq!(wire.len(), cf.encoded_bytes());
+                        let back = crate::frontend::CompressedFrame::from_bytes(&wire)
+                            .unwrap_or_else(|e| {
+                                panic!("ch={ch} samples={samples} bits={bits}: {e}")
+                            });
+                        assert_eq!(back.to_bytes(), wire);
+                        assert_eq!(back.decode(), cf.decode());
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,11 +10,16 @@
 //!
 //! - [`codec`] — the [`CompressedFrame`] wire format: bit-packed sparse
 //!   `(index, value)` pairs with per-band quantization, a lossless f32
-//!   mode (bit-exact round trip on the sensor grid), and a zero-alloc
-//!   [`DecodeScratch`] decode that skips fully-dropped channels.
+//!   mode (bit-exact round trip on the sensor grid), a zero-alloc
+//!   [`DecodeScratch`] decode that skips fully-dropped channels, and a
+//!   versioned byte serialization (`to_bytes`/`from_bytes`) whose
+//!   checked decoder maps every malformed input to a [`CodecError`].
 //! - [`encoder`] — snap → per-channel sequency FWHT → global top-K /
 //!   energy-fraction [`Selection`], with deterministic per-frame-id
 //!   dither (`Rng::for_stream`, the serving path's own contract).
+//! - [`channel`] — a deterministic fault-injecting link model
+//!   ([`Channel`]): seeded bit flips, truncation, duplication,
+//!   reordering and drops between encoder and coordinator.
 //! - [`retention`] — [`RetentionPolicy`]: keep / summarize / drop,
 //!   scored by retained-energy and classifier-margin proxies.
 //! - [`stats`] — [`FrontendStats`], merged into the coordinator's
@@ -27,12 +32,17 @@
 //! either through the engine's exact decode fallback or the
 //! sequency-domain folded fast path (`coordinator::engine`).
 
+pub mod channel;
 pub mod codec;
 pub mod encoder;
 pub mod retention;
 pub mod stats;
 
-pub use codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
+pub use channel::{Channel, ChannelConfig, ChannelStats};
+pub use codec::{
+    CodecError, CodecParams, CompressedFrame, DecodeScratch, LOSSLESS, WIRE_HEADER_BYTES,
+    WIRE_MAGIC, WIRE_VERSION,
+};
 pub use encoder::{FrameEncoder, Selection};
 pub use retention::{FrameSummary, RetentionPolicy, Verdict};
 pub use stats::FrontendStats;

@@ -18,8 +18,8 @@ use adcim::coordinator::{
     AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
 };
 use adcim::frontend::{
-    CodecParams, FrameEncoder, FrameSummary, FrontendConfig, IngestDecision, RetentionPolicy,
-    Selection, SensorFrontend,
+    Channel, ChannelConfig, CodecParams, FrameEncoder, FrameSummary, FrontendConfig,
+    IngestDecision, RetentionPolicy, Selection, SensorFrontend,
 };
 use adcim::nn::dataset::Dataset;
 use adcim::nn::train::{train, TrainConfig};
@@ -33,7 +33,7 @@ const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
     "pool-threads", "topk", "codec-bits", "retain", "sensor-bits", "select", "frames",
-    "channels", "side", "classes",
+    "channels", "side", "classes", "channel-ber", "channel-drop",
 ];
 
 /// Parse a numeric flag *loudly*: an unparseable value is an error, not
@@ -66,6 +66,7 @@ fn main() -> Result<()> {
                  \x20       [--pool-threads T] [--fuse-batch]\n\
                  \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
                  \x20        --retain keep|triage]\n\
+                 \x20       [--channel-ber P --channel-drop P]\n\
                  \x20       (--pool N serves the analog BWHT stages through an N-array\n\
                  \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
                  \x20        --pool-threads T fans the pool's coupling groups across T persistent\n\
@@ -74,7 +75,11 @@ fn main() -> Result<()> {
                  \x20        into shared pool submissions (bit-identical results);\n\
                  \x20        --frontend ingests through the frequency-domain sensor frontend:\n\
                  \x20        frames are sequency-compressed to the top K coefficients at B\n\
-                 \x20        bits (0 = lossless) and triaged by the retention policy)\n\
+                 \x20        bits (0 = lossless) and triaged by the retention policy;\n\
+                 \x20        --channel-ber/--channel-drop push kept frames through a\n\
+                 \x20        deterministic fault-injecting wire channel — corrupted frames\n\
+                 \x20        are rejected at the validated ingest boundary, visible in the\n\
+                 \x20        metrics line)\n\
                  compress [--frames N --channels C --side S --classes K --codec-bits B]\n\
                  \x20       (standalone frontend over a synthetic multispectral deluge:\n\
                  \x20        compression-ratio / retained-energy / accuracy tables)\n\
@@ -229,6 +234,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(r) = args.get("retain") {
         server_cfg.retain = r.to_string();
     }
+    if let Some(p) = parse_flag::<f64>(args, "channel-ber")? {
+        server_cfg.channel_ber = p;
+    }
+    if let Some(p) = parse_flag::<f64>(args, "channel-drop")? {
+        server_cfg.channel_drop = p;
+    }
     let n_requests: usize = args.get_parse_or("requests", 256);
     let policy = match args.get_or("policy", "rr") {
         "ll" => RoutingPolicy::LeastLoaded,
@@ -333,6 +344,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
+    // Optional fault-injecting wire channel between the encoder and the
+    // coordinator's validated ingest boundary. Any nonzero (or invalid)
+    // setting builds a channel so bad values are rejected loudly.
+    let mut channel = if server_cfg.channel_ber != 0.0 || server_cfg.channel_drop != 0.0 {
+        if frontend.is_none() {
+            anyhow::bail!(
+                "--channel-ber/--channel-drop need --frontend: faults apply to \
+                 compressed wire frames"
+            );
+        }
+        let ch = Channel::new(ChannelConfig {
+            ber: server_cfg.channel_ber,
+            drop_prob: server_cfg.channel_drop,
+            seed: 0xc4a2,
+            ..ChannelConfig::default()
+        })
+        .map_err(|e| anyhow::anyhow!("invalid channel model: {e}"))?;
+        println!(
+            "fault-injecting channel: BER {:.2e}, drop {:.2e}",
+            server_cfg.channel_ber, server_cfg.channel_drop
+        );
+        Some(ch)
+    } else {
+        None
+    };
+
     let server = EdgeServer::start(&server_cfg, engines, policy)?;
     // Synthetic sensor load: digit frames from 4 streams.
     let data = Dataset::digits(n_requests, 12, 0x5e4e);
@@ -341,26 +378,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (i, img) in data.images.iter().enumerate() {
         let flat = img.clone().reshape(&[input_dim]);
         let stream = (i % 4) as u32;
-        let accepted = match &mut frontend {
+        match &mut frontend {
             Some(fe) => match fe.ingest(flat.data(), i as u64, stream) {
-                IngestDecision::Keep(cf) => {
-                    server.submit(InferenceRequest::compressed(i as u64, stream, cf))
-                }
+                IngestDecision::Keep(cf) => match &mut channel {
+                    // Kept frames cross the faulty wire as bytes and
+                    // re-enter through the validated ingest boundary;
+                    // corrupted deliveries bounce off `from_bytes` and
+                    // show up as wire rejections in the metrics.
+                    Some(ch) => {
+                        for (_, wire) in ch.transmit(i as u64, &cf.to_bytes()) {
+                            if server.submit_wire(stream, &wire).is_ok() {
+                                submitted += 1;
+                            }
+                        }
+                    }
+                    None => {
+                        if server
+                            .submit(InferenceRequest::compressed(i as u64, stream, cf))
+                            .is_ok()
+                        {
+                            submitted += 1;
+                        }
+                    }
+                },
                 // Summarized frames shed their pixels but their
                 // summaries survive (the bytes_out accounting);
                 // dropped frames never reach the queue at all.
-                IngestDecision::Summarize(s) => {
-                    summaries.push(s);
-                    false
-                }
-                IngestDecision::Drop => false,
+                IngestDecision::Summarize(s) => summaries.push(s),
+                IngestDecision::Drop => {}
             },
             None => {
-                server.submit(InferenceRequest::new(i as u64, stream, flat.data().to_vec()))
+                if server
+                    .submit(InferenceRequest::new(i as u64, stream, flat.data().to_vec()))
+                    .is_ok()
+                {
+                    submitted += 1;
+                }
             }
-        };
-        if accepted {
-            submitted += 1;
+        }
+    }
+    if let Some(ch) = &mut channel {
+        for (_, wire) in ch.flush() {
+            if server.submit_wire(0, &wire).is_ok() {
+                submitted += 1;
+            }
         }
     }
     if let Some(fe) = &mut frontend {
@@ -375,19 +436,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             mean_ac
         );
     }
-    // Collect.
+    // Collect. A corrupted-but-decodable frame may carry a hostile id,
+    // so the label lookup is checked; failure responses never score.
     let mut correct = 0usize;
     let mut got = 0u64;
     while got < submitted {
         match server.recv_response(std::time::Duration::from_secs(10)) {
             Some(r) => {
-                if r.class == data.labels[r.id as usize] {
+                if r.error.is_none()
+                    && data.labels.get(r.id as usize).is_some_and(|&l| l == r.class)
+                {
                     correct += 1;
                 }
                 got += 1;
             }
             None => break,
         }
+    }
+    if let Some(ch) = &channel {
+        println!("{}", ch.stats());
     }
     let shed = server.shed_count();
     let snap = server.shutdown();

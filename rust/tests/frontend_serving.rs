@@ -85,7 +85,7 @@ fn serve(
     let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
     let mut submitted = 0u64;
     for req in requests {
-        assert!(server.submit(req), "queue must admit the test load");
+        assert!(server.submit(req).is_ok(), "queue must admit the test load");
         submitted += 1;
     }
     let mut got = Vec::new();
@@ -257,7 +257,7 @@ fn retention_triage_contains_the_deluge_end_to_end() {
         let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(engine)];
         let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
         for req in requests {
-            assert!(server.submit(req));
+            assert!(server.submit(req).is_ok());
         }
         let mut got = Vec::new();
         while (got.len() as u64) < n {

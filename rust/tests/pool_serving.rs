@@ -119,7 +119,7 @@ fn four_array_pool_serves_end_to_end_in_every_mode() {
         let imgs = images(12);
         let mut submitted = 0u64;
         for (i, img) in imgs.iter().enumerate() {
-            if server.submit(InferenceRequest::new(i as u64, 0, img.clone())) {
+            if server.submit(InferenceRequest::new(i as u64, 0, img.clone())).is_ok() {
                 submitted += 1;
             }
         }

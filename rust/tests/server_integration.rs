@@ -55,11 +55,13 @@ fn analog_pool_serves_with_expected_accuracy() {
 
     let data = Dataset::digits(48, 12, 0xeda);
     for (i, img) in data.images.iter().enumerate() {
-        assert!(server.submit(InferenceRequest::new(
-            i as u64,
-            (i % 3) as u32,
-            img.clone().reshape(&[144]).data().to_vec()
-        )));
+        assert!(server
+            .submit(InferenceRequest::new(
+                i as u64,
+                (i % 3) as u32,
+                img.clone().reshape(&[144]).data().to_vec()
+            ))
+            .is_ok());
     }
     let got = collect(&server, 48);
     assert_eq!(got.len(), 48, "all responses arrive");
@@ -82,11 +84,13 @@ fn per_request_ids_preserved_through_pipeline() {
     let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
     let data = Dataset::digits(12, 12, 0x1d5);
     for (i, img) in data.images.iter().enumerate() {
-        server.submit(InferenceRequest::new(
-            1000 + i as u64,
-            0,
-            img.clone().reshape(&[144]).data().to_vec(),
-        ));
+        server
+            .submit(InferenceRequest::new(
+                1000 + i as u64,
+                0,
+                img.clone().reshape(&[144]).data().to_vec(),
+            ))
+            .unwrap();
     }
     let got = collect(&server, 12);
     let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
@@ -144,11 +148,13 @@ fn metrics_reflect_served_load() {
     let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
     let data = Dataset::digits(16, 12, 0x3e7);
     for (i, img) in data.images.iter().enumerate() {
-        server.submit(InferenceRequest::new(
-            i as u64,
-            0,
-            img.clone().reshape(&[144]).data().to_vec(),
-        ));
+        server
+            .submit(InferenceRequest::new(
+                i as u64,
+                0,
+                img.clone().reshape(&[144]).data().to_vec(),
+            ))
+            .unwrap();
     }
     let got = collect(&server, 16);
     assert_eq!(got.len(), 16);

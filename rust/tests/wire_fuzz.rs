@@ -1,0 +1,155 @@
+//! Deterministic wire-codec fuzz (ISSUE 6 acceptance: *no reachable
+//! panic from hostile frame bytes*).
+//!
+//! A pool of valid encodings spanning the codec parameter grid is
+//! mutated with seeded bit flips, truncations and splices; every
+//! mutant must either come back as a [`CodecError`] or decode as a
+//! well-formed frame — never panic. Runs ≥ 10k cases by default;
+//! `WIRE_FUZZ_CASES` overrides the budget (CI smoke uses the same
+//! count explicitly via `scripts/ci.sh --fuzz-smoke`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use adcim::frontend::{CodecParams, CompressedFrame, FrameEncoder, Selection, LOSSLESS};
+use adcim::prop_assert;
+use adcim::util::{prop, Rng};
+
+/// Fuzz budget: `WIRE_FUZZ_CASES` env override, else a fast smoke count
+/// under `BENCH_SMOKE`, else the full 12k (> the 10k acceptance floor).
+fn fuzz_cases() -> u64 {
+    if let Ok(v) = std::env::var("WIRE_FUZZ_CASES") {
+        if let Ok(n) = v.parse::<u64>() {
+            return n.max(1);
+        }
+    }
+    if adcim::util::bench::smoke_mode() {
+        1_500
+    } else {
+        12_000
+    }
+}
+
+/// Codec parameter grid: channel counts, non-power-of-two sample
+/// counts, the full codec-bits range including lossless, and the
+/// degenerate 1×1 frame. All satisfy the exactness bound.
+const GRID: &[(usize, usize, u8, u8)] = &[
+    (1, 64, 8, 8),
+    (4, 144, 8, 6),
+    (3, 33, 4, LOSSLESS),
+    (2, 256, 6, 2),
+    (8, 32, 10, 16),
+    (1, 1, 1, 2),
+];
+
+/// Valid wire encodings across the grid × selection × dither — the
+/// fuzz corpus.
+fn encoding_pool() -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(0xf0_22);
+    let mut pool = Vec::new();
+    for &(channels, samples, sensor_bits, codec_bits) in GRID {
+        let params = CodecParams::new(channels, samples, sensor_bits, codec_bits).unwrap();
+        for selection in [Selection::All, Selection::TopK(9), Selection::EnergyFrac(0.8)] {
+            for dither in [false, true] {
+                let mut enc = FrameEncoder::new(params, selection);
+                enc.dither = dither;
+                enc.seed = 7;
+                let frame: Vec<f32> =
+                    (0..channels * samples).map(|_| rng.uniform() as f32).collect();
+                pool.push(enc.encode_wire(&frame, pool.len() as u64));
+            }
+        }
+    }
+    pool
+}
+
+/// One seeded mutant: a pool encoding put through 1..=3 mutations drawn
+/// from {bit flips, truncation, foreign-chunk splice, delete/overwrite}.
+fn mutate(rng: &mut Rng, pool: &[Vec<u8>]) -> Vec<u8> {
+    let mut b = pool[rng.index(pool.len())].clone();
+    for _ in 0..1 + rng.index(3) {
+        match rng.index(4) {
+            0 => {
+                if b.is_empty() {
+                    continue;
+                }
+                for _ in 0..1 + rng.index(8) {
+                    let bit = rng.index(b.len() * 8);
+                    b[bit / 8] ^= 1 << (bit % 8);
+                }
+            }
+            1 => b.truncate(rng.index(b.len() + 1)),
+            2 => {
+                let src = &pool[rng.index(pool.len())];
+                let n = 1 + rng.index(16.min(src.len()));
+                let start = rng.index(src.len() - n + 1);
+                let at = rng.index(b.len() + 1);
+                for (k, &byte) in src[start..start + n].iter().enumerate() {
+                    b.insert(at + k, byte);
+                }
+            }
+            _ => {
+                if b.is_empty() {
+                    continue;
+                }
+                let n = 1 + rng.index(8.min(b.len()));
+                let at = rng.index(b.len() - n + 1);
+                if rng.bool() {
+                    b.drain(at..at + n);
+                } else {
+                    for byte in b.iter_mut().skip(at).take(n) {
+                        *byte = (rng.next_u64() & 0xff) as u8;
+                    }
+                }
+            }
+        }
+    }
+    b
+}
+
+/// Every mutant either errors or validates; a validated frame must also
+/// decode without panicking, to the declared dense length.
+#[test]
+fn mutated_wire_bytes_never_panic() {
+    let pool = encoding_pool();
+    let cases = fuzz_cases();
+    prop::check("wire-fuzz-no-panic", cases, |rng| {
+        let mutated = mutate(rng, &pool);
+        let parsed =
+            match catch_unwind(AssertUnwindSafe(|| CompressedFrame::from_bytes(&mutated))) {
+                Ok(r) => r,
+                Err(_) => return Err(format!("from_bytes panicked on {} bytes", mutated.len())),
+            };
+        if let Ok(frame) = parsed {
+            let dense = frame.params.channels * frame.params.samples;
+            match catch_unwind(AssertUnwindSafe(|| frame.try_decode())) {
+                Ok(Ok(out)) => {
+                    prop_assert!(
+                        out.len() == dense,
+                        "validated frame decoded to {} samples, declared {dense}",
+                        out.len()
+                    );
+                }
+                Ok(Err(e)) => return Err(format!("validated frame failed decode: {e}")),
+                Err(_) => return Err("try_decode panicked on a validated frame".to_string()),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Untouched corpus encodings survive the boundary byte-for-byte:
+/// `from_bytes` accepts them and `to_bytes` reproduces them exactly
+/// (the canonical-encoding contract the fuzz relies on).
+#[test]
+fn corpus_round_trips_byte_exact() {
+    for (i, wire) in encoding_pool().iter().enumerate() {
+        let frame = CompressedFrame::from_bytes(wire)
+            .unwrap_or_else(|e| panic!("corpus frame {i} rejected: {e}"));
+        assert_eq!(&frame.to_bytes(), wire, "corpus frame {i} is not canonical");
+        assert_eq!(
+            frame.try_decode().unwrap().len(),
+            frame.params.channels * frame.params.samples,
+            "corpus frame {i} decode length"
+        );
+    }
+}

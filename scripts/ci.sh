@@ -20,19 +20,27 @@
 #                        in the committed BENCH_hotpath.json — a perf
 #                        case silently dropped or a bench that no longer
 #                        builds/runs fails CI. Requires the toolchain.
+#   --fuzz-smoke         run the deterministic wire-codec fuzz target
+#                        (tests/wire_fuzz.rs) at a fixed seeded budget
+#                        (WIRE_FUZZ_CASES, default 12000 — the ISSUE 6
+#                        "no reachable panic from hostile frame bytes"
+#                        gate). Requires the toolchain.
 #
-# Usage: scripts/ci.sh [--require-toolchain] [--smoke-bench] [extra cargo test args...]
+# Usage: scripts/ci.sh [--require-toolchain] [--smoke-bench] [--fuzz-smoke]
+#        [extra cargo test args...]
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 
 REQUIRE_TOOLCHAIN=0
 SMOKE_BENCH=0
+FUZZ_SMOKE=0
 EXTRA_ARGS=()
 for arg in "$@"; do
   case "$arg" in
     --require-toolchain) REQUIRE_TOOLCHAIN=1 ;;
     --smoke-bench) SMOKE_BENCH=1 ;;
+    --fuzz-smoke) FUZZ_SMOKE=1 ;;
     *) EXTRA_ARGS+=("$arg") ;;
   esac
 done
@@ -44,6 +52,12 @@ if command -v cargo >/dev/null 2>&1; then
   # (rust/Cargo.toml [[example]]): build them so they can never rot.
   cargo build --release --examples
   cargo test -q "${EXTRA_ARGS[@]+"${EXTRA_ARGS[@]}"}"
+
+  if [[ "$FUZZ_SMOKE" == "1" ]]; then
+    FUZZ_BUDGET="${WIRE_FUZZ_CASES:-12000}"
+    echo "ci.sh: wire-codec fuzz (WIRE_FUZZ_CASES=$FUZZ_BUDGET, deterministic seeds)"
+    WIRE_FUZZ_CASES="$FUZZ_BUDGET" cargo test -q --release --test wire_fuzz
+  fi
 
   if [[ "$SMOKE_BENCH" == "1" ]]; then
     SMOKE_JSON="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
@@ -72,6 +86,9 @@ else
   echo "ci.sh: WARNING - no Rust toolchain on PATH; tier-1 gate skipped" >&2
   if [[ "$SMOKE_BENCH" == "1" ]]; then
     echo "ci.sh: WARNING - --smoke-bench needs cargo; skipped" >&2
+  fi
+  if [[ "$FUZZ_SMOKE" == "1" ]]; then
+    echo "ci.sh: WARNING - --fuzz-smoke needs cargo; skipped" >&2
   fi
 fi
 
