@@ -491,6 +491,50 @@ fn main() {
         });
     }
 
+    // Lockstep batched serving (ISSUE 7): a pooled fuse-batch engine
+    // serving whole request batches through ONE multi-sample forward —
+    // every sample's bitplanes across all BWHT blocks reach the pool in
+    // a single submission. The per-sample baseline runs the identical
+    // engine with the lockstep walk disabled (`with_lockstep(false)`):
+    // same logits and conversion accounting bit-for-bit
+    // (tests/batched_forward.rs), different pool occupancy.
+    {
+        let mk = |lockstep: bool| {
+            let mut model = bwht_mlp(144, 10, 32, &mut Rng::new(5));
+            model.for_each_bwht(|b| {
+                b.set_exec(BwhtExec::Analog {
+                    input_bits: 4,
+                    config: CrossbarConfig::default(),
+                    early_term: None,
+                    seed: 7,
+                    pool: Some(PoolSpec {
+                        n_arrays: 4,
+                        adc_bits: 5,
+                        mode: ImmersedMode::Sar,
+                        asymmetric: false,
+                        threads: 1,
+                        fuse_batch: true,
+                    }),
+                })
+            });
+            AnalogEngine::from_model(model, 144).with_lockstep(lockstep)
+        };
+        for b in [4usize, 16, 64] {
+            let mut engine = mk(true);
+            let images: Vec<Vec<f32>> =
+                (0..b).map(|i| vec![(i % 5) as f32 * 0.2; 144]).collect();
+            set.run(&format!("analog MLP serve-batch b={b} fused"), move || {
+                black_box(engine.infer_batch(&images).unwrap());
+            });
+        }
+        let mut engine = mk(false);
+        let images: Vec<Vec<f32>> =
+            (0..16).map(|i| vec![(i % 5) as f32 * 0.2; 144]).collect();
+        set.run("analog MLP serve-batch b=16 per-sample baseline", move || {
+            black_box(engine.infer_batch(&images).unwrap());
+        });
+    }
+
     let path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match set.write_json(&path) {

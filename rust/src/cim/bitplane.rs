@@ -482,8 +482,25 @@ impl BitplaneEngine {
 
     /// True when transforms route through a pool that requests
     /// cross-sample plane fusion.
-    fn fuses(&self) -> bool {
+    pub fn fuses(&self) -> bool {
         self.pool.as_ref().is_some_and(|p| p.spec().fuse_batch)
+    }
+
+    /// Public seeded entry to the fused cross-sample transform core,
+    /// for callers that draw each input's plane seed themselves (the
+    /// batched BWHT serving forward draws input `i`'s seed from sample
+    /// `i`'s stream generator, exactly where the sequential walk would
+    /// consume it). Input `i` is bit-identical to
+    /// [`BitplaneEngine::transform`] with a generator whose next
+    /// `next_u64` is `plane_seeds[i]`; outputs and deferred-stats
+    /// replay order match the sequential per-input walk.
+    pub fn transform_fused_seeded(
+        &mut self,
+        xs: &[&[u32]],
+        plane_seeds: &[u64],
+    ) -> Vec<BitplaneOutput> {
+        assert!(self.fuses(), "transform_fused_seeded requires a pool with fuse_batch");
+        self.transform_fused(xs, plane_seeds)
     }
 
     /// The fused (cross-sample) pooled transform core. Input `i` is the

@@ -89,11 +89,12 @@ pub struct ServerConfig {
     /// `engine_threads` without oversubscribing.
     pub pool_threads: usize,
     /// Plane fusion (`adcim serve --fuse-batch`, analog engine with a
-    /// pool): each served sample's bitplanes — all Hadamard blocks of
-    /// a pixel — reach the pool in one shared submission instead of
-    /// one per block; batch APIs (`BitplaneEngine::transform_batch`)
-    /// additionally fuse across samples. Bit-identical serving
-    /// results; off by default.
+    /// pool): the engine's lockstep batched forward routes EVERY
+    /// sample of a worker batch — all Hadamard blocks of all pixels of
+    /// all samples in a shard slice — to the pool as one shared
+    /// submission, so pool lanes stay busy across sample boundaries
+    /// (the `samples_fused` metric counts the fused samples).
+    /// Bit-identical serving results; off by default.
     pub fuse_batch: bool,
     /// Run ingest through the frequency-domain sensor frontend
     /// (`adcim serve --frontend`): frames are sequency-encoded,

@@ -50,6 +50,15 @@ pub trait InferenceEngine: Send {
     fn conversion_stats(&mut self) -> ConversionStats {
         ConversionStats::default()
     }
+    /// Cumulative count of samples served through a genuinely
+    /// multi-sample forward (the lockstep batched walk, or the AOT
+    /// module's fixed-batch call) rather than a per-sample loop —
+    /// monotone, like [`InferenceEngine::conversion_stats`]; the
+    /// serving loop records per-batch deltas into [`super::Metrics`]
+    /// as `samples_fused`. Engines without a batched path report 0.
+    fn samples_fused(&mut self) -> u64 {
+        0
+    }
     /// Logits for a batch of raw/compressed frame payloads. The default
     /// decodes every compressed frame to its dense form and defers to
     /// [`InferenceEngine::infer_batch`]; engines with a
@@ -76,6 +85,11 @@ pub struct DigitalEngine {
     model: LoadedModel,
     _runtime: Runtime,
     manifest: Manifest,
+    /// Flat input staging reused across chunks and batches (the AOT
+    /// module has a fixed batch dimension; re-zeroed per chunk).
+    flat: Vec<f32>,
+    /// Samples served through a multi-sample module call (monotone).
+    samples_fused: u64,
 }
 
 // SAFETY: all Rc handles into the PJRT client are confined to this
@@ -95,7 +109,13 @@ impl DigitalEngine {
         let manifest = artifacts.manifest()?;
         let name = if quant { "model_quant" } else { "model_float" };
         let model = runtime.load_hlo_text(&artifacts.hlo_path(name))?;
-        Ok(DigitalEngine { model, _runtime: runtime, manifest })
+        Ok(DigitalEngine {
+            model,
+            _runtime: runtime,
+            manifest,
+            flat: Vec::new(),
+            samples_fused: 0,
+        })
     }
 
     pub fn batch_size(&self) -> usize {
@@ -110,10 +130,14 @@ impl InferenceEngine for DigitalEngine {
         let d = self.manifest.input;
         let c = self.manifest.classes;
         let mut out = Vec::with_capacity(images.len());
-        // The AOT module has a fixed batch dimension: run in chunks,
-        // padding the tail with zeros.
+        // The AOT module has a fixed batch dimension: every chunk is
+        // already ONE multi-sample module call (the digital twin of the
+        // analog engine's lockstep forward) — stage into one reused
+        // flat buffer, padding the tail with zeros.
+        let mut flat = std::mem::take(&mut self.flat);
         for chunk in images.chunks(b) {
-            let mut flat = vec![0.0f32; b * d];
+            flat.clear();
+            flat.resize(b * d, 0.0);
             for (i, img) in chunk.iter().enumerate() {
                 anyhow::ensure!(img.len() == d, "image dim {} != {d}", img.len());
                 flat[i * d..(i + 1) * d].copy_from_slice(img);
@@ -123,7 +147,11 @@ impl InferenceEngine for DigitalEngine {
             for i in 0..chunk.len() {
                 out.push(logits[i * c..(i + 1) * c].to_vec());
             }
+            if chunk.len() > 1 {
+                self.samples_fused += chunk.len() as u64;
+            }
         }
+        self.flat = flat;
         Ok(out)
     }
 
@@ -134,6 +162,10 @@ impl InferenceEngine for DigitalEngine {
     fn input_dim(&self) -> usize {
         self.manifest.input
     }
+
+    fn samples_fused(&mut self) -> u64 {
+        self.samples_fused
+    }
 }
 
 /// CiM-simulator-backed analog engine (same trained weights).
@@ -141,7 +173,11 @@ impl InferenceEngine for DigitalEngine {
 /// `infer_batch` shards the batch across the engine's **persistent
 /// worker runtime** ([`Executor`]: long-lived workers built once per
 /// engine lifetime, one deep model clone per shard per batch) — thread
-/// spawn is off the per-request path entirely. The same runtime is
+/// spawn is off the per-request path entirely, and each shard executes
+/// its whole slice as ONE **lockstep batched forward**
+/// (`Sequential::forward_batch_inference`), so a `--fuse-batch` pool
+/// receives every sample's blocks in a single submission instead of
+/// draining between samples. The same runtime is
 /// injected into every BWHT layer's collaborative digitization pool,
 /// so `engine_threads × pool_threads` share one set of workers instead
 /// of oversubscribing. Determinism contract: sample `i` of a batch
@@ -176,6 +212,13 @@ pub struct AnalogEngine {
     /// Lazily folded first Dense layer, keyed by the frame geometry it
     /// was built for.
     folded: Option<(CodecParams, Arc<FoldedFirstLayer>)>,
+    /// Serve each shard slice through ONE lockstep batched forward
+    /// (default on). Off forces the legacy per-sample loop — the
+    /// bit-exactness baseline the equivalence tests compare against.
+    lockstep: bool,
+    /// Samples served through a multi-sample lockstep forward
+    /// (monotone; the serving loop records per-batch deltas).
+    samples_fused: u64,
 }
 
 /// The first Dense layer folded into the sequency domain.
@@ -243,6 +286,24 @@ impl FoldedFirstLayer {
             && cf.params.channels == self.params.channels
             && cf.params.samples == self.params.samples
     }
+
+    /// Fold one frame's kept coefficients into its layer-1 entry:
+    /// `bias + Σ_kept value · V[col]` — one `hidden`-long axpy per kept
+    /// coefficient, no reconstruction.
+    fn fold(&self, cf: &CompressedFrame) -> Result<Vec<f32>> {
+        let mut pre = self.bias.clone();
+        let block = self.params.block();
+        let hidden = self.hidden;
+        cf.try_for_each_coeff(|ch, s, value| {
+            let col = ch * block + self.had[s] as usize;
+            let wcol = &self.v[col * hidden..(col + 1) * hidden];
+            for (p, w) in pre.iter_mut().zip(wcol) {
+                *p += value * w;
+            }
+        })
+        .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
+        Ok(pre)
+    }
 }
 
 impl AnalogEngine {
@@ -278,7 +339,20 @@ impl AnalogEngine {
             decode_scratch: DecodeScratch::default(),
             compressed_fast_path: true,
             folded: None,
+            lockstep: true,
+            samples_fused: 0,
         }
+    }
+
+    /// Enable/disable the lockstep batched forward (default on): each
+    /// shard slice advances through the model as ONE multi-sample
+    /// forward, so `--fuse-batch` pools see every sample's blocks in a
+    /// single submission. Off restores the per-sample loop — results
+    /// are bit-identical either way (the per-sample stream contract),
+    /// which `tests/batched_forward.rs` pins.
+    pub fn with_lockstep(mut self, on: bool) -> Self {
+        self.lockstep = on;
+        self
     }
 
     /// Set the `infer_batch` worker-thread count (0 = auto-detect).
@@ -304,8 +378,10 @@ impl AnalogEngine {
     /// the engine's one persistent runtime and both are thread-count
     /// invariant, so logits never depend on either knob.
     /// `spec.fuse_batch` additionally turns on plane fusion inside
-    /// each BWHT layer — the sample's Hadamard blocks share one pool
-    /// submission (bit-identical by construction).
+    /// each BWHT layer — with the lockstep batched forward (default)
+    /// ALL samples of a shard slice share one pool submission; with
+    /// [`AnalogEngine::with_lockstep`] off, fusion still spans each
+    /// sample's Hadamard blocks (bit-identical either way).
     /// Validates the spec against each BWHT block's width up front, so
     /// an infeasible resolution is a clean error here instead of an
     /// assertion panic on a serving worker thread mid-batch.
@@ -371,18 +447,7 @@ impl AnalogEngine {
         stream: u64,
     ) -> Result<Vec<f32>> {
         model.for_each_bwht(|b| b.set_analog_stream(stream));
-        let mut pre = folded.bias.clone();
-        let block = folded.params.block();
-        let hidden = folded.hidden;
-        cf.try_for_each_coeff(|ch, s, value| {
-            let col = ch * block + folded.had[s] as usize;
-            let wcol = &folded.v[col * hidden..(col + 1) * hidden];
-            for (p, w) in pre.iter_mut().zip(wcol) {
-                *p += value * w;
-            }
-        })
-        .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
-        let mut cur = Tensor::vec1(&pre);
+        let mut cur = Tensor::vec1(&folded.fold(cf)?);
         for l in model.layers_mut()[1..].iter_mut() {
             cur = l.forward_inference(&cur);
         }
@@ -445,11 +510,16 @@ impl AnalogEngine {
     }
 
     /// Shard `items` across the persistent worker runtime (inline when
-    /// `threads == 1`), running `run` per item with the item's global
-    /// stream id — the engine's one batch loop, shared by the raw and
-    /// payload paths. Per-shard termination/conversion counters merge
-    /// back against the prototype baseline exactly as before; results
-    /// are thread-count invariant by the per-sample stream contract.
+    /// `threads == 1`), running `run` once per **shard slice** with the
+    /// slice's first global stream id — the engine's one batch loop,
+    /// shared by the raw and payload paths. Since PR 7 a shard is no
+    /// longer a per-item loop: `run` sees the whole slice and (with
+    /// lockstep on) executes it as ONE multi-sample forward, so
+    /// `--fuse-batch` pools receive every sample's blocks together.
+    /// Per-shard termination/conversion counters merge back against the
+    /// prototype baseline exactly as before; results are thread-count
+    /// invariant by the per-sample stream contract (sample `i`'s noise
+    /// is a pure function of `stream0 + i`, never of slice boundaries).
     /// One runtime serves both the batch shards submitted here and the
     /// pool plane lanes the shards submit from inside (nested-safe by
     /// the executor's caller-participation), so `engine_threads ×
@@ -457,7 +527,7 @@ impl AnalogEngine {
     fn infer_sharded<T, F>(&mut self, items: &[T], run: F) -> Result<Vec<Vec<f32>>>
     where
         T: Sync,
-        F: Fn(&mut Sequential, &mut DecodeScratch, &T, u64) -> Result<Vec<f32>> + Sync,
+        F: Fn(&mut Sequential, &mut DecodeScratch, &[T], u64) -> Result<Vec<Vec<f32>>> + Sync,
     {
         if items.is_empty() {
             return Ok(Vec::new());
@@ -468,21 +538,27 @@ impl AnalogEngine {
         self.next_stream += items.len() as u64;
 
         if threads == 1 {
-            // Sequential batch loop; pools may still fan planes out, so
-            // hand them the engine runtime (sized for their lanes) once
-            // instead of letting each build its own.
+            // One slice — the whole batch; pools may still fan planes
+            // out, so hand them the engine runtime (sized for their
+            // lanes) once instead of letting each build its own.
             if pool_lanes > 1 {
                 let exec = self.ensure_executor(pool_lanes);
                 self.model.for_each_bwht(|b| b.set_executor(Some(exec.clone())));
             }
             let mut scratch = std::mem::take(&mut self.decode_scratch);
-            let out: Result<Vec<Vec<f32>>> = items
-                .iter()
-                .enumerate()
-                .map(|(i, item)| run(&mut self.model, &mut scratch, item, stream0 + i as u64))
-                .collect();
+            let out = run(&mut self.model, &mut scratch, items, stream0);
             self.decode_scratch = scratch;
-            return out;
+            let out = out?;
+            anyhow::ensure!(
+                out.len() == items.len(),
+                "engine returned {} results for {} items",
+                out.len(),
+                items.len()
+            );
+            if self.lockstep && items.len() > 1 {
+                self.samples_fused += items.len() as u64;
+            }
+            return Ok(out);
         }
 
         // Contiguous shards, one deep model clone per runtime task.
@@ -508,10 +584,13 @@ impl AnalogEngine {
             let first_stream = stream0 + (shard * chunk) as u64;
             tasks.push(move || -> Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)> {
                 let mut scratch = DecodeScratch::default();
-                let mut out = Vec::with_capacity(shard_items.len());
-                for (i, item) in shard_items.iter().enumerate() {
-                    out.push(run(&mut shard_model, &mut scratch, item, first_stream + i as u64)?);
-                }
+                let out = run(&mut shard_model, &mut scratch, shard_items, first_stream)?;
+                anyhow::ensure!(
+                    out.len() == shard_items.len(),
+                    "engine returned {} results for {} items",
+                    out.len(),
+                    shard_items.len()
+                );
                 let mut processed = 0;
                 let mut skipped = 0;
                 let mut conv = ConversionStats::default();
@@ -547,15 +626,143 @@ impl AnalogEngine {
             self.shard_conv.merge(&conv.minus(&base_conv));
             all.extend(logits);
         }
+        if self.lockstep {
+            for shard_items in items.chunks(chunk) {
+                if shard_items.len() > 1 {
+                    self.samples_fused += shard_items.len() as u64;
+                }
+            }
+        }
         Ok(all)
+    }
+
+    /// Forward one slice of raw images. With lockstep on and more than
+    /// one image, this is ONE multi-sample forward: per-sample streams
+    /// are pinned first, then every layer advances the whole slice
+    /// together (`Sequential::forward_batch_inference`), which is what
+    /// lets `--fuse-batch` pools span sample boundaries.
+    fn forward_images(
+        model: &mut Sequential,
+        input: usize,
+        imgs: &[Vec<f32>],
+        first_stream: u64,
+        lockstep: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        if !lockstep || imgs.len() == 1 {
+            return imgs
+                .iter()
+                .enumerate()
+                .map(|(i, img)| Self::infer_one(model, input, img, first_stream + i as u64))
+                .collect();
+        }
+        for img in imgs {
+            anyhow::ensure!(img.len() == input, "image dim {} != {input}", img.len());
+        }
+        let streams: Vec<u64> = (0..imgs.len() as u64).map(|i| first_stream + i).collect();
+        model.for_each_bwht(|b| b.set_analog_streams(streams.clone()));
+        let xs: Vec<Tensor> = imgs.iter().map(|v| Tensor::vec1(v)).collect();
+        Ok(model
+            .forward_batch_inference(&xs)
+            .into_iter()
+            .map(|t| t.data().to_vec())
+            .collect())
+    }
+
+    /// Lockstep forward for one slice of mixed payloads. Every sample's
+    /// layer-1 entry is computed first, in sample order — folded lossy
+    /// frames via the transform-domain fold, everything else (raw
+    /// frames, lossless frames, geometry mismatches) through the
+    /// batched first layer on its decoded dense form — then the
+    /// remaining layers walk the whole slice together. Sample-order
+    /// entries keep the analog stream consumption and ConversionStats
+    /// merge order identical to the per-sample loop, so logits and
+    /// accounting are bit-identical to it.
+    fn forward_payload_slice(
+        model: &mut Sequential,
+        scratch: &mut DecodeScratch,
+        input: usize,
+        folded: Option<&FoldedFirstLayer>,
+        slice: &[FramePayload],
+        first_stream: u64,
+    ) -> Result<Vec<Vec<f32>>> {
+        let streams: Vec<u64> = (0..slice.len() as u64).map(|i| first_stream + i).collect();
+        let folds: Vec<Option<&CompressedFrame>> = slice
+            .iter()
+            .map(|p| match p {
+                FramePayload::Compressed(cf) if folded.is_some_and(|f| f.matches(cf)) => {
+                    Some(cf)
+                }
+                _ => None,
+            })
+            .collect();
+
+        // Dense a payload that the fold does not serve.
+        let to_dense = |payload: &FramePayload, scratch: &mut DecodeScratch| -> Result<Tensor> {
+            let dense: &[f32] = match payload {
+                FramePayload::Raw(img) => img,
+                FramePayload::Compressed(cf) => scratch
+                    .try_decode(cf)
+                    .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?,
+            };
+            anyhow::ensure!(dense.len() == input, "image dim {} != {input}", dense.len());
+            Ok(Tensor::vec1(dense))
+        };
+
+        if folds.iter().all(Option::is_none) {
+            // Uniform slice — no folded entries: lockstep from layer 0.
+            let mut xs = Vec::with_capacity(slice.len());
+            for payload in slice {
+                xs.push(to_dense(payload, scratch)?);
+            }
+            model.for_each_bwht(|b| b.set_analog_streams(streams.clone()));
+            return Ok(model
+                .forward_batch_inference(&xs)
+                .into_iter()
+                .map(|t| t.data().to_vec())
+                .collect());
+        }
+        let folded = folded.expect("a fold matched, so a fold exists");
+
+        // Mixed slice: batched first layer for the dense subset…
+        let mut dense_in = Vec::new();
+        let mut dense_pos = Vec::new();
+        for (i, payload) in slice.iter().enumerate() {
+            if folds[i].is_some() {
+                continue;
+            }
+            dense_pos.push(i);
+            dense_in.push(to_dense(payload, scratch)?);
+        }
+        let mut entries: Vec<Option<Tensor>> = vec![None; slice.len()];
+        if !dense_in.is_empty() {
+            let (first, _) =
+                model.layers_mut().split_first_mut().expect("fold implies a first layer");
+            for (pos, y) in dense_pos.iter().zip(first.forward_batch_inference(&dense_in)) {
+                entries[*pos] = Some(y);
+            }
+        }
+        // …folded entries for the rest…
+        for (i, cf) in folds.iter().enumerate() {
+            let Some(cf) = cf else { continue };
+            entries[i] = Some(Tensor::vec1(&folded.fold(cf)?));
+        }
+        // …then ONE lockstep walk of the remaining layers.
+        model.for_each_bwht(|b| b.set_analog_streams(streams.clone()));
+        let mut cur: Vec<Tensor> =
+            entries.into_iter().map(|e| e.expect("every sample has an entry")).collect();
+        for l in model.layers_mut()[1..].iter_mut() {
+            cur = l.forward_batch_inference(&cur);
+        }
+        Ok(cur.into_iter().map(|t| t.data().to_vec()).collect())
     }
 }
 
 impl InferenceEngine for AnalogEngine {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let input = self.input;
-        self.infer_sharded(images, |model, _scratch, img, stream| {
-            Self::infer_one(model, input, img, stream)
+        let lockstep = self.lockstep;
+        self.infer_sharded(images, move |model, _scratch, slice, first_stream| {
+            Self::forward_images(model, input, slice, first_stream, lockstep)
         })
     }
 
@@ -563,23 +770,46 @@ impl InferenceEngine for AnalogEngine {
     /// path (when the model starts with a matching Dense), everything
     /// else — raw frames and lossless compressed frames — goes through
     /// the zero-alloc decode fallback, which is bit-exact vs raw
-    /// serving at zero compression.
+    /// serving at zero compression. With lockstep on (default), every
+    /// shard slice is served by ONE multi-sample forward: folded
+    /// entries enter at layer 1 next to the dense subset's batched
+    /// first-layer outputs ([`AnalogEngine::forward_payload_slice`]).
     fn infer_payloads(&mut self, frames: &[FramePayload]) -> Result<Vec<Vec<f32>>> {
         let input = self.input;
         let folded = self.folded_for(frames);
-        self.infer_sharded(frames, move |model, scratch, payload, stream| match payload {
-            FramePayload::Raw(img) => Self::infer_one(model, input, img, stream),
-            FramePayload::Compressed(cf) => {
-                if let Some(f) = folded.as_deref() {
-                    if f.matches(cf) {
-                        return Self::infer_folded(model, f, cf, stream);
-                    }
-                }
-                let dense = scratch
-                    .try_decode(cf)
-                    .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
-                Self::infer_one(model, input, dense, stream)
+        let lockstep = self.lockstep;
+        self.infer_sharded(frames, move |model, scratch, slice, first_stream| {
+            if lockstep && slice.len() > 1 {
+                return Self::forward_payload_slice(
+                    model,
+                    scratch,
+                    input,
+                    folded.as_deref(),
+                    slice,
+                    first_stream,
+                );
             }
+            slice
+                .iter()
+                .enumerate()
+                .map(|(i, payload)| {
+                    let stream = first_stream + i as u64;
+                    match payload {
+                        FramePayload::Raw(img) => Self::infer_one(model, input, img, stream),
+                        FramePayload::Compressed(cf) => {
+                            if let Some(f) = folded.as_deref() {
+                                if f.matches(cf) {
+                                    return Self::infer_folded(model, f, cf, stream);
+                                }
+                            }
+                            let dense = scratch
+                                .try_decode(cf)
+                                .map_err(|e| anyhow::anyhow!("frame {}: {e}", cf.frame_id))?;
+                            Self::infer_one(model, input, dense, stream)
+                        }
+                    }
+                })
+                .collect()
         })
     }
 
@@ -598,6 +828,10 @@ impl InferenceEngine for AnalogEngine {
         let mut total = self.shard_conv;
         self.model.for_each_bwht(|b| total.merge(&b.conv_stats));
         total
+    }
+
+    fn samples_fused(&mut self) -> u64 {
+        self.samples_fused
     }
 }
 

@@ -17,15 +17,32 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Served-batch-size histogram bucket upper bounds (last bucket is
+/// everything above). Powers of two: the axis `--batch` is tuned on.
+pub const BATCH_BUCKET_BOUNDS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Bucket index for a served batch of `n` requests.
+fn batch_bucket(n: usize) -> usize {
+    BATCH_BUCKET_BOUNDS
+        .iter()
+        .position(|&b| n <= b)
+        .unwrap_or(BATCH_BUCKET_BOUNDS.len())
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     latency_us: Moments,
     batch_size: Moments,
+    /// Served-batch-size histogram (dispatched batches per bucket).
+    batch_hist: [u64; BATCH_BUCKET_BOUNDS.len() + 1],
     completed: u64,
     errors: u64,
     rejected_queue_full: u64,
     rejected_malformed: u64,
     panics_isolated: u64,
+    /// Samples the engines served through a genuinely multi-sample
+    /// forward (lockstep batched walk / fixed-batch module call).
+    samples_fused: u64,
     latencies: Vec<f64>,
     started: Option<Instant>,
     finished: Option<Instant>,
@@ -52,8 +69,18 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
+    pub p99_latency_us: f64,
     pub max_latency_us: f64,
     pub mean_batch: f64,
+    /// Served-batch-size histogram: dispatched batches whose size fell
+    /// in each [`BATCH_BUCKET_BOUNDS`] bucket (last = above the top
+    /// bound) — how well the batcher is actually filling batches.
+    pub batch_hist: [u64; BATCH_BUCKET_BOUNDS.len() + 1],
+    /// Samples served through a genuinely multi-sample engine forward
+    /// (the lockstep batched walk): the fusion the batcher's batches
+    /// actually bought, next to `mean_batch` which only measures what
+    /// was dispatched.
+    pub samples_fused: u64,
     pub throughput_per_s: f64,
     /// MAV→code conversions performed by the digitization pool (0 on
     /// the ADC-free path).
@@ -88,6 +115,17 @@ impl Metrics {
             g.started = Some(Instant::now());
         }
         g.batch_size.push(batch_size as f64);
+        g.batch_hist[batch_bucket(batch_size)] += 1;
+    }
+
+    /// Fold a per-batch delta of engine-fused samples into the totals
+    /// (workers call this after each engine invocation, same delta
+    /// discipline as [`Metrics::record_conversions`]).
+    pub fn record_samples_fused(&self, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().samples_fused += delta;
     }
 
     pub fn record_completion(&self, latency_us: u64) {
@@ -161,8 +199,11 @@ impl Metrics {
             mean_latency_us: g.latency_us.mean(),
             p50_latency_us: pct(50.0),
             p95_latency_us: pct(95.0),
+            p99_latency_us: pct(99.0),
             max_latency_us: g.latency_us.max(),
             mean_batch: g.batch_size.mean(),
+            batch_hist: g.batch_hist,
+            samples_fused: g.samples_fused,
             throughput_per_s: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
             conversions: g.conv.conversions,
             conversions_gated: g.conv.gated,
@@ -184,15 +225,33 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "completed={} errors={} p50={:.0}µs p95={:.0}µs mean={:.0}µs batch={:.1} rate={:.0}/s",
+            "completed={} errors={} p50={:.0}µs p95={:.0}µs p99={:.0}µs mean={:.0}µs \
+             batch={:.1} rate={:.0}/s",
             self.completed,
             self.errors,
             self.p50_latency_us,
             self.p95_latency_us,
+            self.p99_latency_us,
             self.mean_latency_us,
             self.mean_batch,
             self.throughput_per_s
         )?;
+        if self.samples_fused > 0 {
+            write!(f, " fused={}", self.samples_fused)?;
+        }
+        if self.batch_hist.iter().any(|&c| c > 0) {
+            write!(f, " batches=[")?;
+            for (i, &c) in self.batch_hist.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                match BATCH_BUCKET_BOUNDS.get(i) {
+                    Some(b) => write!(f, "≤{b}:{c}")?,
+                    None => write!(f, ">{}:{c}", BATCH_BUCKET_BOUNDS[i - 1])?,
+                }
+            }
+            write!(f, "]")?;
+        }
         if self.conversions > 0 || self.conversions_gated > 0 {
             write!(
                 f,
@@ -309,6 +368,32 @@ mod tests {
         let line = format!("{s}");
         assert!(line.contains("conv=128"), "{line}");
         assert!(line.contains("gated=32"), "{line}");
+    }
+
+    #[test]
+    fn batch_histogram_and_fused_counter_reach_snapshot_and_display() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        for size in [1usize, 2, 3, 8, 9, 64, 65, 1000] {
+            m.record_batch(size);
+        }
+        m.record_samples_fused(6);
+        m.record_samples_fused(0); // no-op delta
+        m.record_samples_fused(10);
+        let s = m.snapshot();
+        // Buckets: ≤1, ≤2, ≤4, ≤8, ≤16, ≤32, ≤64, >64.
+        assert_eq!(s.batch_hist, [1, 1, 1, 1, 1, 0, 1, 2]);
+        assert_eq!(s.samples_fused, 16);
+        assert!(s.p99_latency_us >= s.p95_latency_us);
+        let line = format!("{s}");
+        assert!(line.contains("fused=16"), "{line}");
+        assert!(line.contains("p99="), "{line}");
+        assert!(line.contains("batches=[≤1:1 ≤2:1 ≤4:1 ≤8:1 ≤16:1 ≤32:0 ≤64:1 >64:2]"), "{line}");
+        // A run with no batches/fusion keeps the summary line clean.
+        let empty = Metrics::new().snapshot();
+        let eline = format!("{empty}");
+        assert!(!eline.contains("fused"), "{eline}");
+        assert!(!eline.contains("batches"), "{eline}");
     }
 
     #[test]

@@ -234,8 +234,10 @@ fn worker_loop(
     admission: Arc<AdmissionControl>,
     depth: Arc<std::sync::atomic::AtomicUsize>,
 ) {
-    // Engine conversion counters are cumulative; record per-batch deltas.
+    // Engine conversion/fusion counters are cumulative; record
+    // per-batch deltas.
     let mut last_conv = engine.conversion_stats();
+    let mut last_fused = engine.samples_fused();
     while let Ok(batch) = rx.recv() {
         depth.fetch_sub(1, Ordering::AcqRel);
         // Payloads travel as-is: compressed frames reach the engine
@@ -279,6 +281,9 @@ fn worker_loop(
         let now = engine.conversion_stats();
         metrics.record_conversions(&now.minus(&last_conv));
         last_conv = now;
+        let fused = engine.samples_fused();
+        metrics.record_samples_fused(fused - last_fused);
+        last_fused = fused;
     }
 }
 

@@ -71,8 +71,9 @@ fn main() -> Result<()> {
                  \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
                  \x20        --pool-threads T fans the pool's coupling groups across T persistent\n\
                  \x20        workers, 0 = auto — results are thread-count invariant;\n\
-                 \x20        --fuse-batch fuses each sample's bitplanes (all BWHT blocks)\n\
-                 \x20        into shared pool submissions (bit-identical results);\n\
+                 \x20        --fuse-batch fuses the whole served batch — every sample's\n\
+                 \x20        bitplanes across all BWHT blocks — into shared pool submissions\n\
+                 \x20        via the lockstep batched forward (bit-identical results);\n\
                  \x20        --frontend ingests through the frequency-domain sensor frontend:\n\
                  \x20        frames are sequency-compressed to the top K coefficients at B\n\
                  \x20        bits (0 = lossless) and triaged by the retention policy;\n\

@@ -82,6 +82,10 @@ pub struct BwhtLayer {
     /// Pending per-sample noise stream (batch determinism contract):
     /// applied to `analog_rng` at the start of the next forward.
     analog_stream: Option<u64>,
+    /// Pending per-sample noise streams for the next **batched**
+    /// forward: sample `i` of the batch draws exactly as if
+    /// `set_analog_stream(streams[i])` preceded a per-sample forward.
+    analog_batch_streams: Option<Vec<u64>>,
     /// Shared persistent worker runtime injected by the serving engine
     /// (`AnalogEngine`): handed to the pool at `prepare_analog` so
     /// batch shards and pool plane lanes draw from one set of workers.
@@ -124,6 +128,7 @@ impl BwhtLayer {
             analog: None,
             analog_rng: None,
             analog_stream: None,
+            analog_batch_streams: None,
             executor: None,
             term_processed: 0,
             term_skipped: 0,
@@ -162,6 +167,7 @@ impl BwhtLayer {
         self.analog = None;
         self.analog_rng = None;
         self.analog_stream = None;
+        self.analog_batch_streams = None;
     }
 
     /// Pin the analog noise stream for the next forward pass to
@@ -173,6 +179,18 @@ impl BwhtLayer {
     /// count and shard boundaries. No-op outside `BwhtExec::Analog`.
     pub fn set_analog_stream(&mut self, stream: u64) {
         self.analog_stream = Some(stream);
+    }
+
+    /// Pin per-sample analog noise streams for the next
+    /// [`Layer::forward_batch_inference`] call: sample `i` draws from
+    /// `Rng::for_stream(layer_seed ^ …, streams[i])` exactly as if
+    /// [`BwhtLayer::set_analog_stream`] with `streams[i]` had preceded
+    /// a per-sample forward. Consumed by the next batched forward;
+    /// no-op outside `BwhtExec::Analog`. This is what lets the serving
+    /// engine's lockstep batch stay a pure function of
+    /// `(seed, global sample index)` regardless of batch boundaries.
+    pub fn set_analog_streams(&mut self, streams: Vec<u64>) {
+        self.analog_batch_streams = Some(streams);
     }
 
     /// Inject the serving engine's persistent worker runtime. Applied
@@ -372,6 +390,109 @@ impl BwhtLayer {
             }
         }
     }
+
+    /// Cross-sample fused batched forward: every (sample, pixel, block)
+    /// of the batch becomes one entry of a single pooled submission, so
+    /// pool lanes stay busy across sample boundaries instead of
+    /// draining between samples. Bit-identical to running
+    /// [`Layer::forward_inference`] per sample with
+    /// `set_analog_stream(streams[i])`: sample `i`'s plane seeds are
+    /// drawn from its own stream generator in exactly the order the
+    /// sequential walk consumes them (one `next_u64` per pooled
+    /// transform, pixel-major then block-major), and the engine replays
+    /// deferred per-plane `ConversionStats` input-major — the flat
+    /// sample-major order below, i.e. the sequential merge order.
+    fn forward_batch_fused(&mut self, xs: &[Tensor], streams: &[u64]) -> Vec<Tensor> {
+        let BwhtExec::Analog { input_bits, seed, .. } = self.exec else {
+            unreachable!("fused batched forward outside analog mode");
+        };
+        self.prepare_analog();
+        let q = UniformQuantizer::unsigned(input_bits, self.in_quant_hi);
+        let step = self.in_quant_hi / (q.levels() - 1) as f32;
+        let padded = self.layout.padded_len();
+        let bs = self.layout.block_size;
+        let blocks = self.layout.blocks;
+
+        // Stage 1: quantize and gather every (sample, pixel, block) in
+        // flat sample-major order, drawing each block's plane seed from
+        // the owning sample's stream generator.
+        let pixels: Vec<usize> = xs.iter().map(|x| Self::pixel_count(x.shape())).collect();
+        let total_blocks: usize = pixels.iter().map(|p| p * blocks).sum();
+        let mut flat = std::mem::take(&mut self.scratch_block);
+        flat.clear();
+        flat.reserve(total_blocks * bs);
+        let mut plane_seeds = Vec::with_capacity(total_blocks);
+        let mut xbuf = std::mem::take(&mut self.scratch_x);
+        xbuf.clear();
+        xbuf.resize(padded.max(self.channels), 0.0);
+        let mut levels = std::mem::take(&mut self.scratch_levels);
+        let mut last_rng = None;
+        for (s, x) in xs.iter().enumerate() {
+            let mut rng = Rng::for_stream(seed ^ 0xa5a5_5a5a, streams[s]);
+            for pix in 0..pixels[s] {
+                xbuf.iter_mut().for_each(|v| *v = 0.0);
+                Self::gather_pixel(x, pix, &mut xbuf);
+                q.levels_into(&xbuf[..self.channels], &mut levels);
+                for b in 0..blocks {
+                    plane_seeds.push(rng.next_u64());
+                    flat.extend((0..bs).map(|i| {
+                        let idx = b * bs + i;
+                        if idx < levels.len() {
+                            levels[idx]
+                        } else {
+                            0
+                        }
+                    }));
+                }
+            }
+            last_rng = Some(rng);
+        }
+
+        // Stage 2: ONE fused submission spanning the whole batch.
+        let eng = self.analog.as_mut().expect("prepare_analog builds the engine");
+        debug_assert!(eng.has_pool(), "fused batched forward requires a pool");
+        let scale = step; // pooled reconstruction is quantizer-exact
+        let refs: Vec<&[u32]> = flat.chunks(bs).collect();
+        let outs = eng.transform_fused_seeded(&refs, &plane_seeds);
+        drop(refs);
+
+        // Stage 3: per-sample epilogue — merge term/conv accounting in
+        // flat (= sequential) order, then threshold + inverse per pixel.
+        let mut ys = Vec::with_capacity(xs.len());
+        let mut z = std::mem::take(&mut self.scratch_z);
+        let mut cursor = 0usize;
+        for (s, x) in xs.iter().enumerate() {
+            let mut y = x.clone();
+            for pix in 0..pixels[s] {
+                z.clear();
+                z.resize(padded, 0.0);
+                for b in 0..blocks {
+                    let out = &outs[cursor];
+                    cursor += 1;
+                    self.term_processed += out.term.processed;
+                    self.term_skipped += out.term.skipped;
+                    self.conv_stats.merge(&out.conv);
+                    for i in 0..bs {
+                        z[b * bs + i] = out.values[i] * scale;
+                    }
+                }
+                for (v, &t) in z.iter_mut().zip(&self.t) {
+                    *v = crate::wht::soft_threshold(*v, t.abs());
+                }
+                self.bwht.inverse_padded_inplace(&mut z);
+                Self::scatter_pixel(&mut y, pix, &z[..self.channels]);
+            }
+            ys.push(y);
+        }
+        // Leave the layer's generator where the sequential walk would:
+        // the last sample's stream rng after its draws.
+        self.analog_rng = last_rng;
+        self.scratch_x = xbuf;
+        self.scratch_z = z;
+        self.scratch_levels = levels;
+        self.scratch_block = flat;
+        ys
+    }
 }
 
 impl Layer for BwhtLayer {
@@ -434,6 +555,38 @@ impl Layer for BwhtLayer {
         self.scratch_x = xbuf;
         self.scratch_z = z;
         y
+    }
+
+    /// Batched serving path. With per-sample streams pinned
+    /// ([`BwhtLayer::set_analog_streams`]) and an analog pool that
+    /// requests `fuse_batch`, all samples' Hadamard blocks go to the
+    /// pool as ONE fused submission ([`BwhtLayer::forward_batch_fused`]);
+    /// otherwise this is the per-sample loop with each sample's stream
+    /// pinned — both bit-identical to sequential per-sample serving.
+    fn forward_batch_inference(&mut self, xs: &[Tensor]) -> Vec<Tensor> {
+        let streams = self.analog_batch_streams.take();
+        if let Some(streams) = &streams {
+            assert_eq!(streams.len(), xs.len(), "stream count != batch size");
+        }
+        let fused = !xs.is_empty()
+            && streams.is_some()
+            && matches!(self.exec,
+                BwhtExec::Analog { pool: Some(spec), .. } if spec.fuse_batch);
+        if !fused {
+            return match streams {
+                Some(streams) => xs
+                    .iter()
+                    .zip(streams)
+                    .map(|(x, s)| {
+                        self.set_analog_stream(s);
+                        self.forward_inference(x)
+                    })
+                    .collect(),
+                None => xs.iter().map(|x| self.forward_inference(x)).collect(),
+            };
+        }
+        let streams = streams.expect("fused requires pinned streams");
+        self.forward_batch_fused(xs, &streams)
     }
 
     fn backward(&mut self, g: &Tensor) -> Tensor {
@@ -744,6 +897,100 @@ mod tests {
             (fused.term_processed, fused.term_skipped)
         );
         assert!(fused.conv_stats.conversions > 0);
+    }
+
+    #[test]
+    fn batched_fused_forward_matches_streamed_per_sample() {
+        use crate::adc::ImmersedMode;
+        // 32 channels over 16-wide blocks, 3 samples: the fused batched
+        // forward submits 6 blocks to the pool at once. Values AND
+        // accounting (conv stats incl. energy, term counters) must be
+        // bit-identical to per-sample serving with the same streams.
+        let mk = |early: Option<EarlyTermination>| {
+            let (mut l, _) = layer(32, 16, 15);
+            l.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: early,
+                seed: 51,
+                pool: Some(PoolSpec {
+                    n_arrays: 4,
+                    adc_bits: 4,
+                    mode: ImmersedMode::Sar,
+                    asymmetric: false,
+                    threads: 1,
+                    fuse_batch: true,
+                }),
+            });
+            l
+        };
+        for early in [None, Some(EarlyTermination::exact(8.0))] {
+            let mut seq = mk(early);
+            let mut bat = mk(early);
+            let xs: Vec<Tensor> = (0..3)
+                .map(|s| {
+                    Tensor::vec1(
+                        &(0..32).map(|i| ((i + s) % 5) as f32 * 0.7).collect::<Vec<_>>(),
+                    )
+                })
+                .collect();
+            let streams = vec![7u64, 8, 9];
+            let expect: Vec<Tensor> = xs
+                .iter()
+                .zip(&streams)
+                .map(|(x, &s)| {
+                    seq.set_analog_stream(s);
+                    seq.forward_inference(x)
+                })
+                .collect();
+            bat.set_analog_streams(streams.clone());
+            let got = bat.forward_batch_inference(&xs);
+            for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(a.data(), b.data(), "sample {i} (early={})", early.is_some());
+            }
+            assert_eq!(seq.conv_stats, bat.conv_stats);
+            assert_eq!(
+                (seq.term_processed, seq.term_skipped),
+                (bat.term_processed, bat.term_skipped)
+            );
+        }
+    }
+
+    #[test]
+    fn batched_forward_without_pool_falls_back_per_sample() {
+        // No pool → no fusion; the batched entry must still honour the
+        // pinned per-sample streams via the fallback loop.
+        let mk = || {
+            let (mut l, _) = layer(16, 16, 16);
+            l.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 13,
+                pool: None,
+            });
+            l
+        };
+        let mut seq = mk();
+        let mut bat = mk();
+        let xs: Vec<Tensor> = (0..2)
+            .map(|s| {
+                Tensor::vec1(&(0..16).map(|i| ((i + s) % 4) as f32).collect::<Vec<_>>())
+            })
+            .collect();
+        let expect: Vec<Tensor> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                seq.set_analog_stream(i as u64);
+                seq.forward_inference(x)
+            })
+            .collect();
+        bat.set_analog_streams(vec![0, 1]);
+        let got = bat.forward_batch_inference(&xs);
+        for (a, b) in expect.iter().zip(&got) {
+            assert_eq!(a.data(), b.data());
+        }
     }
 
     #[test]

@@ -22,6 +22,17 @@ pub trait Layer: Send {
     fn forward_inference(&mut self, x: &Tensor) -> Tensor {
         self.forward(x)
     }
+    /// Batched inference forward: every sample of the served batch
+    /// advances through this layer together (the lockstep walk of
+    /// `Sequential::forward_batch_inference`). The default is the
+    /// per-sample [`Layer::forward_inference`] loop — bit-exact by
+    /// construction for any layer. Hot layers override with genuinely
+    /// batched execution (`Dense`'s multi-RHS matvec, `BwhtLayer`'s
+    /// cross-sample plane fusion); overrides MUST return values
+    /// bit-identical to the default loop, sample order preserved.
+    fn forward_batch_inference(&mut self, xs: &[Tensor]) -> Vec<Tensor> {
+        xs.iter().map(|x| self.forward_inference(x)).collect()
+    }
     /// Backward pass: gradient w.r.t. input; accumulates param grads.
     fn backward(&mut self, grad_out: &Tensor) -> Tensor;
     /// Apply accumulated gradients (averaged over `batch`) and clear.
@@ -143,6 +154,26 @@ impl Layer for Dense {
     fn forward_inference(&mut self, x: &Tensor) -> Tensor {
         // No backward follows: skip the activation cache copy.
         self.matvec(x)
+    }
+
+    fn forward_batch_inference(&mut self, xs: &[Tensor]) -> Vec<Tensor> {
+        // Multi-RHS matvec: stream each weight row once across the
+        // whole batch (one pass over W instead of one per sample).
+        // Each slot is the same `b[o] + dot_f32(row, x)` as `matvec`,
+        // so values are bit-identical to the per-sample loop; only the
+        // W traffic is amortized (EXPERIMENTS.md §Perf, PR 7).
+        for x in xs {
+            assert_eq!(x.len(), self.in_dim, "Dense input size");
+        }
+        let mut ys = vec![vec![0.0f32; self.out_dim]; xs.len()];
+        for o in 0..self.out_dim {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            let b = self.b[o];
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                y[o] = b + dot_f32(row, x.data());
+            }
+        }
+        ys.into_iter().map(|y| Tensor::from_vec(&[self.out_dim], y)).collect()
     }
 
     fn backward(&mut self, g: &Tensor) -> Tensor {
@@ -763,6 +794,27 @@ mod tests {
         assert_eq!(r.forward(&x).data(), r.forward_inference(&x).data());
         let mut l = LeakyRelu::new(0.1);
         assert_eq!(l.forward(&x).data(), l.forward_inference(&x).data());
+    }
+
+    #[test]
+    fn dense_batched_inference_is_bit_exact() {
+        let mut rng = Rng::new(91);
+        let mut d = Dense::new(33, 11, &mut rng);
+        let xs: Vec<Tensor> =
+            (0..5).map(|_| Tensor::vec1(&rng.normal_vec(33))).collect();
+        let per_sample: Vec<Tensor> =
+            xs.iter().map(|x| d.forward_inference(x)).collect();
+        let batched = d.forward_batch_inference(&xs);
+        assert_eq!(per_sample.len(), batched.len());
+        for (a, b) in per_sample.iter().zip(&batched) {
+            assert_eq!(a.data(), b.data());
+        }
+        // Default trait loop (any layer) is the same thing by definition.
+        let mut r = Relu::new();
+        let lb = r.forward_batch_inference(&xs);
+        for (x, y) in xs.iter().zip(&lb) {
+            assert_eq!(r.forward_inference(x).data(), y.data());
+        }
     }
 
     #[test]

@@ -50,6 +50,24 @@ impl Sequential {
         cur
     }
 
+    /// Lockstep batched inference forward: every sample of `xs`
+    /// advances through each layer together via
+    /// [`Layer::forward_batch_inference`], so layers with a real
+    /// batched path (`Dense` multi-RHS matvec, `BwhtLayer` cross-sample
+    /// plane fusion) see the whole served batch at once. Bit-identical
+    /// to calling [`Sequential::forward_inference`] per sample in
+    /// order — for analog BWHT layers that contract holds when
+    /// per-sample noise streams are pinned with
+    /// `BwhtLayer::set_analog_streams` (the serving engine does; see
+    /// `coordinator::engine`).
+    pub fn forward_batch_inference(&mut self, xs: &[Tensor]) -> Vec<Tensor> {
+        let mut cur: Vec<Tensor> = xs.to_vec();
+        for l in &mut self.layers {
+            cur = l.forward_batch_inference(&cur);
+        }
+        cur
+    }
+
     pub fn backward(&mut self, g: &Tensor) -> Tensor {
         let mut cur = g.clone();
         for l in self.layers.iter_mut().rev() {
@@ -348,6 +366,23 @@ mod tests {
             let a = m.forward(&x);
             let b = m.forward_inference(&x);
             assert_eq!(a.data(), b.data(), "seed {s}");
+        }
+    }
+
+    #[test]
+    fn batched_inference_matches_per_sample() {
+        // Float-mode model (no analog noise streams involved): the
+        // lockstep walk must be bit-identical to per-sample inference.
+        let mut rng = Rng::new(11);
+        let mut m = bwht_mlp(144, 10, 32, &mut rng);
+        let mut xr = Rng::new(200);
+        let xs: Vec<Tensor> = (0..6).map(|_| Tensor::vec1(&xr.normal_vec(144))).collect();
+        let mut per = m.clone();
+        let expect: Vec<Tensor> = xs.iter().map(|x| per.forward_inference(x)).collect();
+        let got = m.forward_batch_inference(&xs);
+        assert_eq!(expect.len(), got.len());
+        for (a, b) in expect.iter().zip(&got) {
+            assert_eq!(a.data(), b.data());
         }
     }
 

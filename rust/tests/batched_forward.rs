@@ -1,0 +1,216 @@
+//! ISSUE 7 tentpole acceptance: the lockstep batched forward serves
+//! traffic bit-identically to the per-sample loop — logits AND
+//! conversion accounting (including f64 `energy_fj`) AND ET counters —
+//! across pool thread counts, engine shard counts, early termination
+//! on/off, and raw / compressed / mixed payload batches; and served
+//! `--fuse-batch` traffic actually takes the lockstep path, proven by
+//! the `samples_fused` metric end-to-end through the server.
+
+use std::time::Duration;
+
+use adcim::adc::ImmersedMode;
+use adcim::cim::{CrossbarConfig, EarlyTermination, PoolSpec};
+use adcim::config::ServerConfig;
+use adcim::coordinator::{
+    AnalogEngine, EdgeServer, FramePayload, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::frontend::{CodecParams, FrameEncoder, Selection, LOSSLESS};
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::util::Rng;
+
+/// Analog digit-MLP engine (64 → 4, one 16-wide BWHT block per pixel
+/// group) with every BWHT stage behind a fusing 4-array pool.
+fn fused_engine(pool_threads: usize, early_term: Option<EarlyTermination>) -> AnalogEngine {
+    let mut rng = Rng::new(1);
+    let mut model = bwht_mlp(64, 4, 16, &mut rng);
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term,
+            seed: 42,
+            pool: Some(PoolSpec {
+                n_arrays: 4,
+                adc_bits: 4,
+                mode: ImmersedMode::Sar,
+                asymmetric: false,
+                threads: pool_threads,
+                fuse_batch: true,
+            }),
+        })
+    });
+    AnalogEngine::from_model(model, 64)
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|i| (0..64).map(|j| ((i * j + 3 * i) % 9) as f32 / 9.0).collect()).collect()
+}
+
+/// Tentpole bit-exactness on raw images: one lockstep forward over the
+/// whole batch == the per-sample loop, at every pool thread count and
+/// with exact ET on or off — logits, `ConversionStats` (f64 energy
+/// included), and ET counters all `assert_eq!`-identical. Only the
+/// lockstep engine reports fused samples.
+#[test]
+fn lockstep_matches_per_sample_on_raw_images() {
+    let imgs = images(7);
+    for pool_threads in [1usize, 2, 4] {
+        for et in [None, Some(EarlyTermination::exact(8.0))] {
+            let tag = format!("pool_threads={pool_threads} et={}", et.is_some());
+            let mut seq = fused_engine(pool_threads, et).with_lockstep(false);
+            let want = seq.infer_batch(&imgs).unwrap();
+            let mut lock = fused_engine(pool_threads, et);
+            let got = lock.infer_batch(&imgs).unwrap();
+            assert_eq!(got, want, "{tag}: lockstep changed logits");
+            assert_eq!(
+                lock.conversion_stats(),
+                seq.conversion_stats(),
+                "{tag}: conversion accounting diverged"
+            );
+            assert_eq!(
+                lock.termination_stats(),
+                seq.termination_stats(),
+                "{tag}: ET counters diverged"
+            );
+            assert_eq!(lock.samples_fused(), imgs.len() as u64, "{tag}");
+            assert_eq!(seq.samples_fused(), 0, "{tag}: per-sample loop must not count");
+        }
+    }
+}
+
+/// The lockstep path composes with engine batch sharding: results and
+/// accounting are worker-thread-count invariant, and every sample of
+/// every multi-sample shard slice is counted as fused.
+#[test]
+fn lockstep_is_engine_thread_count_invariant() {
+    let imgs = images(9);
+    let mut base = fused_engine(1, None);
+    let want = base.infer_batch(&imgs).unwrap();
+    let want_stats = base.conversion_stats();
+    assert!(want_stats.conversions > 0);
+    for threads in [2usize, 4] {
+        let mut e = fused_engine(1, None).with_threads(threads);
+        let got = e.infer_batch(&imgs).unwrap();
+        assert_eq!(got, want, "threads={threads} changed lockstep logits");
+        assert_eq!(e.conversion_stats(), want_stats, "threads={threads}");
+        assert!(e.samples_fused() > 0, "threads={threads}");
+    }
+}
+
+/// Compressed serving: an all-lossy (folded fast path), an all-lossless
+/// (decode fallback), and a mixed raw/lossless/lossy batch each serve
+/// bit-identically through the lockstep payload path.
+#[test]
+fn lockstep_matches_per_sample_on_compressed_and_mixed_payloads() {
+    let lossy_params = CodecParams::new(1, 64, 8, 8).unwrap();
+    let lossless_params = CodecParams::new(1, 64, 8, LOSSLESS).unwrap();
+    let mut lossy_enc = FrameEncoder::new(lossy_params, Selection::TopK(24));
+    let mut lossless_enc = FrameEncoder::new(lossless_params, Selection::All);
+    let imgs = images(8);
+
+    let lossy: Vec<FramePayload> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, f)| FramePayload::Compressed(lossy_enc.encode(f, i as u64)))
+        .collect();
+    let lossless: Vec<FramePayload> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, f)| FramePayload::Compressed(lossless_enc.encode(f, i as u64)))
+        .collect();
+    let mixed: Vec<FramePayload> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, f)| match i % 3 {
+            0 => FramePayload::Raw(f.clone()),
+            1 => FramePayload::Compressed(lossless_enc.encode(f, i as u64)),
+            _ => FramePayload::Compressed(lossy_enc.encode(f, i as u64)),
+        })
+        .collect();
+
+    for (name, payloads) in [("lossy", &lossy), ("lossless", &lossless), ("mixed", &mixed)] {
+        let mut seq = fused_engine(1, None).with_lockstep(false);
+        let want = seq.infer_payloads(payloads).unwrap();
+        let mut lock = fused_engine(1, None);
+        let got = lock.infer_payloads(payloads).unwrap();
+        assert_eq!(got, want, "{name}: lockstep changed payload logits");
+        assert_eq!(lock.conversion_stats(), seq.conversion_stats(), "{name}");
+        assert_eq!(lock.samples_fused(), payloads.len() as u64, "{name}");
+        // Sharded payload serving agrees too.
+        let mut sharded = fused_engine(1, None).with_threads(3);
+        assert_eq!(sharded.infer_payloads(payloads).unwrap(), want, "{name} sharded");
+    }
+}
+
+/// Without a pool the lockstep walk still runs (Dense layers batch,
+/// BWHT falls back to its per-sample inner loop) and stays bit-exact
+/// with the per-sample engine.
+#[test]
+fn lockstep_without_pool_matches_per_sample() {
+    let mk = || {
+        let mut rng = Rng::new(1);
+        let mut model = bwht_mlp(64, 4, 16, &mut rng);
+        model.for_each_bwht(|b| {
+            b.set_exec(BwhtExec::Analog {
+                input_bits: 4,
+                config: CrossbarConfig::default(),
+                early_term: None,
+                seed: 42,
+                pool: None,
+            })
+        });
+        AnalogEngine::from_model(model, 64)
+    };
+    let imgs = images(6);
+    let mut seq = mk().with_lockstep(false);
+    let want = seq.infer_batch(&imgs).unwrap();
+    let mut lock = mk();
+    let got = lock.infer_batch(&imgs).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(lock.termination_stats(), seq.termination_stats());
+}
+
+/// ISSUE 7 acceptance: served `--fuse-batch` traffic takes the lockstep
+/// path — the worker's whole batch goes through one multi-sample
+/// forward, visible as `samples_fused` in the end-to-end metrics
+/// snapshot (and its Display line), with all requests answered.
+#[test]
+fn served_fuse_batch_traffic_reports_fused_samples() {
+    let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(fused_engine(1, None))];
+    let cfg = ServerConfig {
+        workers: 1,
+        batch: 8,
+        batch_deadline_us: 200_000,
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+    let imgs = images(8);
+    for (i, img) in imgs.iter().enumerate() {
+        server.submit(InferenceRequest::new(i as u64, 0, img.clone())).unwrap();
+    }
+    let mut got = 0u64;
+    while got < 8 {
+        match server.recv_response(Duration::from_secs(10)) {
+            Some(r) => {
+                assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+                got += 1;
+            }
+            None => break,
+        }
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.errors, 0);
+    // The 200ms deadline comfortably collects all 8 submissions into
+    // one batch, but even a split keeps every multi-sample slice fused.
+    assert!(
+        snap.samples_fused >= 2,
+        "served fuse-batch traffic must take the lockstep path: {snap}"
+    );
+    assert!(snap.samples_fused <= 8, "{snap}");
+    let line = snap.to_string();
+    assert!(line.contains("fused="), "snapshot Display must surface fusion: {line}");
+    assert!(line.contains("batches=["), "snapshot Display must surface batch sizes: {line}");
+    assert!(snap.batch_hist.iter().sum::<u64>() >= 1, "{snap}");
+}

@@ -19,7 +19,10 @@
 #                        the fresh run still covers every case recorded
 #                        in the committed BENCH_hotpath.json — a perf
 #                        case silently dropped or a bench that no longer
-#                        builds/runs fails CI. Requires the toolchain.
+#                        builds/runs fails CI. Also requires at least one
+#                        fused serve-batch case in the fresh run (the
+#                        ISSUE 7 lockstep serving path stays exercised).
+#                        Requires the toolchain.
 #   --fuzz-smoke         run the deterministic wire-codec fuzz target
 #                        (tests/wire_fuzz.rs) at a fixed seeded budget
 #                        (WIRE_FUZZ_CASES, default 12000 — the ISSUE 6
@@ -72,7 +75,12 @@ fresh = {r["name"] for r in json.load(open(sys.argv[2]))["results"]}
 missing = sorted(committed - fresh)
 if missing:
     sys.exit("ci.sh: smoke bench no longer covers committed cases: %s" % missing)
-print("ci.sh: smoke bench covers all %d committed cases" % len(committed))
+fused = [n for n in fresh if "serve-batch" in n and "fused" in n]
+if not fused:
+    sys.exit("ci.sh: smoke bench exercises no fused serve-batch case "
+             "(lockstep serving path, ISSUE 7)")
+print("ci.sh: smoke bench covers all %d committed cases "
+      "(incl. %d fused serve-batch)" % (len(committed), len(fused)))
 PY
     else
       echo "ci.sh: note - python3 unavailable, skipped smoke/committed case comparison" >&2
