@@ -136,6 +136,7 @@ impl AsymmetricSearch {
         self.expected
     }
 
+    /// Resolution of the search tree.
     pub fn bits(&self) -> u8 {
         self.bits
     }
@@ -211,10 +212,12 @@ impl AsymmetricAdc {
         AsymmetricAdc::new(adc, tree)
     }
 
+    /// The MAV-statistics-shaped search tree.
     pub fn tree(&self) -> &AsymmetricSearch {
         &self.tree
     }
 
+    /// The wrapped immersed ADC.
     pub fn inner(&self) -> &ImmersedAdc {
         &self.adc
     }

@@ -26,6 +26,7 @@ pub struct FlashAdc {
 }
 
 impl FlashAdc {
+    /// Draw a flash ADC instance with sampled comparator offsets.
     pub fn sample(bits: u8, vdd: f64, noise: &NoiseModel, rng: &mut Rng) -> Self {
         assert!((1..=10).contains(&bits));
         let levels = (1usize << bits) - 1;
@@ -41,6 +42,7 @@ impl FlashAdc {
         }
     }
 
+    /// Offset-free reference instance.
     pub fn ideal(bits: u8, vdd: f64) -> Self {
         let levels = (1usize << bits) - 1;
         FlashAdc {

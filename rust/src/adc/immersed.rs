@@ -130,6 +130,7 @@ impl ImmersedAdc {
         self
     }
 
+    /// The conversion mode (SAR / Flash / hybrid).
     pub fn mode(&self) -> ImmersedMode {
         self.mode
     }

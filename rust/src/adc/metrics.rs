@@ -30,10 +30,12 @@ pub struct Linearity {
 }
 
 impl Linearity {
+    /// Worst-case |DNL| in LSB.
     pub fn max_abs_dnl(&self) -> f64 {
         self.dnl.iter().fold(0.0, |a, d| a.max(d.abs()))
     }
 
+    /// Worst-case |INL| in LSB.
     pub fn max_abs_inl(&self) -> f64 {
         self.inl.iter().fold(0.0, |a, d| a.max(d.abs()))
     }

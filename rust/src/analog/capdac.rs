@@ -48,6 +48,7 @@ impl CapDac {
         self.units.len()
     }
 
+    /// True when the DAC has no unit capacitors.
     pub fn is_empty(&self) -> bool {
         self.units.is_empty()
     }
@@ -101,6 +102,7 @@ impl CapDac {
         self.switch_events
     }
 
+    /// Zero the switching-event counter.
     pub fn reset_events(&mut self) {
         self.switch_events = 0;
     }

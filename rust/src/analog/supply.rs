@@ -21,6 +21,7 @@ pub struct OperatingPoint {
 }
 
 impl OperatingPoint {
+    /// Operating point at `vdd` volts and `clock_ghz` GHz.
     pub fn new(vdd: f64, clock_ghz: f64) -> Self {
         assert!(vdd > 0.0 && clock_ghz > 0.0);
         OperatingPoint { vdd, clock_ghz }

@@ -22,9 +22,11 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// The four crossbar phases in execution order.
     pub const ALL: [Phase; 4] =
         [Phase::Precharge, Phase::LocalCompute, Phase::RowMergeSum, Phase::Compare];
 
+    /// Short display name of the phase.
     pub fn name(self) -> &'static str {
         match self {
             Phase::Precharge => "PCH",
@@ -50,7 +52,9 @@ impl Phase {
 /// Per-phase settle evaluation at an operating point.
 #[derive(Debug, Clone)]
 pub struct PhaseTimer {
+    /// Process/voltage scaling model.
     pub supply: SupplyModel,
+    /// Supply/frequency operating point being evaluated.
     pub op: OperatingPoint,
     /// Merge-signal boost voltage (paper: CM/RM boosted to 1.25 V to kill
     /// source degeneration — effectively raises the drive on merge phases).
@@ -58,6 +62,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Timer at the paper's 1.25 V merge-boost default.
     pub fn new(supply: SupplyModel, op: OperatingPoint) -> Self {
         PhaseTimer { supply, op, merge_boost_v: 1.25 }
     }
@@ -98,8 +103,11 @@ impl PhaseTimer {
 /// A named waveform sample for timing-diagram output.
 #[derive(Debug, Clone)]
 pub struct TracePoint {
+    /// Sample time, picoseconds.
     pub t_ps: f64,
+    /// Signal name (e.g. `CM`, `RM`).
     pub signal: &'static str,
+    /// Sampled voltage.
     pub volts: f64,
 }
 
@@ -110,14 +118,17 @@ pub struct SignalTrace {
 }
 
 impl SignalTrace {
+    /// Empty trace.
     pub fn new() -> Self {
         SignalTrace { points: Vec::new() }
     }
 
+    /// Append one waveform sample.
     pub fn record(&mut self, t_ps: f64, signal: &'static str, volts: f64) {
         self.points.push(TracePoint { t_ps, signal, volts });
     }
 
+    /// All samples in record order.
     pub fn points(&self) -> &[TracePoint] {
         &self.points
     }

@@ -266,6 +266,7 @@ pub struct BitplaneEngine {
 }
 
 impl BitplaneEngine {
+    /// Engine slicing inputs into `input_bits` bitplanes over `crossbar`.
     pub fn new(crossbar: Crossbar, input_bits: u8) -> Self {
         assert!((1..=16).contains(&input_bits));
         BitplaneEngine {
@@ -278,6 +279,7 @@ impl BitplaneEngine {
         }
     }
 
+    /// Enable MSB-first early termination.
     pub fn with_early_term(mut self, et: EarlyTermination) -> Self {
         self.early_term = Some(et);
         self
@@ -291,6 +293,7 @@ impl BitplaneEngine {
         self
     }
 
+    /// Attach (or detach) a collaborative digitization pool.
     pub fn set_pool(&mut self, pool: Option<CimArrayPool>) {
         if let Some(p) = &pool {
             assert_eq!(p.rows(), self.crossbar.rows(), "pool/crossbar row mismatch");
@@ -299,22 +302,27 @@ impl BitplaneEngine {
         self.pool = pool;
     }
 
+    /// The attached pool, if any.
     pub fn pool(&self) -> Option<&CimArrayPool> {
         self.pool.as_ref()
     }
 
+    /// Mutable access to the attached pool.
     pub fn pool_mut(&mut self) -> Option<&mut CimArrayPool> {
         self.pool.as_mut()
     }
 
+    /// True when a pool is attached.
     pub fn has_pool(&self) -> bool {
         self.pool.is_some()
     }
 
+    /// The underlying crossbar.
     pub fn crossbar(&self) -> &Crossbar {
         &self.crossbar
     }
 
+    /// Mutable access to the underlying crossbar.
     pub fn crossbar_mut(&mut self) -> &mut Crossbar {
         &mut self.crossbar
     }

@@ -38,22 +38,26 @@ impl BitVec {
     }
 
     #[inline]
+    /// Bit count.
     pub fn len(&self) -> usize {
         self.len
     }
 
     #[inline]
+    /// True when the vector holds no bits.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
     #[inline]
+    /// Read bit `i`.
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
     #[inline]
+    /// Write bit `i`.
     pub fn set(&mut self, i: usize, b: bool) {
         debug_assert!(i < self.len);
         let (w, s) = (i / 64, i % 64);
@@ -132,11 +136,13 @@ impl SignMatrix {
     }
 
     #[inline]
+    /// Matrix rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Matrix columns.
     pub fn cols(&self) -> usize {
         self.cols
     }

@@ -36,8 +36,11 @@ use super::bitvec::{BitVec, SignMatrix};
 /// Electrical configuration of a crossbar instance.
 #[derive(Debug, Clone, Copy)]
 pub struct CrossbarConfig {
+    /// Process/voltage scaling model.
     pub supply: SupplyModel,
+    /// Analog noise sources (thermal, offset).
     pub noise: NoiseModel,
+    /// Supply/frequency operating point.
     pub op: OperatingPoint,
     /// Per-cell local-node capacitance (fF).
     pub c_cell_ff: f64,
@@ -196,18 +199,22 @@ impl Crossbar {
         Crossbar::new(SignMatrix::walsh(m), cfg, rng)
     }
 
+    /// Weight-matrix rows (inputs).
     pub fn rows(&self) -> usize {
         self.matrix.rows()
     }
 
+    /// Weight-matrix columns (MAV outputs).
     pub fn cols(&self) -> usize {
         self.matrix.cols()
     }
 
+    /// The programmed ±1 weight matrix.
     pub fn matrix(&self) -> &SignMatrix {
         &self.matrix
     }
 
+    /// The electrical configuration.
     pub fn config(&self) -> &CrossbarConfig {
         &self.cfg
     }
@@ -362,10 +369,12 @@ impl Crossbar {
         self.energy_fj
     }
 
+    /// Crossbar operations executed since the last reset.
     pub fn ops(&self) -> u64 {
         self.ops
     }
 
+    /// Zero the energy/op counters.
     pub fn reset_counters(&mut self) {
         self.energy_fj = 0.0;
         self.ops = 0;

@@ -61,10 +61,12 @@ pub struct TermStats {
     pub planes_fully_skipped: u64,
     /// Total rows and planes (for normalisation).
     pub rows: usize,
+    /// Total bitplanes (for normalisation).
     pub planes: usize,
 }
 
 impl TermStats {
+    /// Zeroed counters over a `rows` x `planes` problem.
     pub fn new(rows: usize, planes: usize) -> Self {
         TermStats { rows, planes, ..Default::default() }
     }

@@ -322,7 +322,9 @@ pub struct PlaneRequest<'a> {
     /// Noise-stream seed; the plane's analog noise is drawn from
     /// `Rng::for_stream(seed, stream)`.
     pub seed: u64,
+    /// Noise sub-stream selector (sample x plane unique).
     pub stream: u64,
+    /// The input bitplane this lane computes MAVs for.
     pub plane: &'a BitVec,
     /// Per-row conversion-gating mask (rows early termination pruned).
     pub active: Option<&'a [bool]>,
@@ -497,6 +499,7 @@ impl CimArrayPool {
         }
     }
 
+    /// The spec the pool was built from.
     pub fn spec(&self) -> PoolSpec {
         self.spec
     }
@@ -524,26 +527,32 @@ impl CimArrayPool {
         self.executor.as_ref()
     }
 
+    /// Crossbar rows per array.
     pub fn rows(&self) -> usize {
         self.arrays[0].rows()
     }
 
+    /// Crossbar columns per array.
     pub fn cols(&self) -> usize {
         self.arrays[0].cols()
     }
 
+    /// Arrays in the pool.
     pub fn n_arrays(&self) -> usize {
         self.arrays.len()
     }
 
+    /// Coupling groups (compute/digitize pairs or triples).
     pub fn n_groups(&self) -> usize {
         self.groups.len()
     }
 
+    /// The neighbour-coupling topology.
     pub fn topology(&self) -> &Topology {
         &self.topology
     }
 
+    /// The compute/digitize interleave schedule.
     pub fn schedule(&self) -> &InterleaveSchedule {
         &self.schedule
     }
@@ -558,6 +567,7 @@ impl CimArrayPool {
         self.stats
     }
 
+    /// Zero the accumulated conversion statistics.
     pub fn reset_stats(&mut self) {
         self.stats = ConversionStats::default();
         self.mavs_produced = 0;

@@ -14,11 +14,17 @@ use crate::analog::OperatingPoint;
 /// Chip-level configuration (crossbar geometry + operating point).
 #[derive(Debug, Clone, Copy)]
 pub struct ChipConfig {
+    /// Crossbar rows per array.
     pub array_rows: usize,
+    /// Crossbar columns per array.
     pub array_cols: usize,
+    /// Arrays on the chip.
     pub n_arrays: usize,
+    /// Supply voltage (V).
     pub vdd: f64,
+    /// Clock frequency (GHz).
     pub clock_ghz: f64,
+    /// Immersed-ADC resolution (bits).
     pub adc_bits: u8,
 }
 
@@ -38,10 +44,12 @@ impl Default for ChipConfig {
 }
 
 impl ChipConfig {
+    /// The analog operating point this chip runs at.
     pub fn operating_point(&self) -> OperatingPoint {
         OperatingPoint::new(self.vdd, self.clock_ghz)
     }
 
+    /// Overlay `[chip]` keys from a parsed TOML file onto the defaults.
     pub fn from_toml(t: &TomlLite) -> Self {
         let d = ChipConfig::default();
         ChipConfig {
@@ -58,7 +66,9 @@ impl ChipConfig {
 /// Server-level configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Serving worker threads (one engine each).
     pub workers: usize,
+    /// Batch-size cap (close-when-full bound).
     pub batch: usize,
     /// Max time a batch waits before dispatch (microseconds).
     pub batch_deadline_us: u64,
@@ -121,6 +131,15 @@ pub struct ServerConfig {
     /// Fault-injection frame drop probability on the simulated link
     /// (`adcim serve --channel-drop`). 0 = clean.
     pub channel_drop: f64,
+    /// Adaptive batch close (`adcim serve --adaptive`): tune the
+    /// effective batch size / deadline from the live served-batch
+    /// histogram and the p99 target. Off = the static closer,
+    /// bit-identical to pre-adaptive serving.
+    pub adaptive: bool,
+    /// p99 completion-latency target in µs for the adaptive closer
+    /// (`--p99-target-us`). 0 disables the latency rule; the adaptive
+    /// closer then only walks toward the histogram knee.
+    pub p99_target_us: u64,
 }
 
 impl Default for ServerConfig {
@@ -146,11 +165,14 @@ impl Default for ServerConfig {
             retain: "keep".to_string(),
             channel_ber: 0.0,
             channel_drop: 0.0,
+            adaptive: false,
+            p99_target_us: 0,
         }
     }
 }
 
 impl ServerConfig {
+    /// Overlay `[server]` keys from a parsed TOML file onto the defaults.
     pub fn from_toml(t: &TomlLite) -> Self {
         let d = ServerConfig::default();
         ServerConfig {
@@ -223,6 +245,12 @@ impl ServerConfig {
             // out-of-range probabilities with a real diagnostic.
             channel_ber: t.get_float("server", "channel_ber").unwrap_or(d.channel_ber),
             channel_drop: t.get_float("server", "channel_drop").unwrap_or(d.channel_drop),
+            adaptive: t.get_bool("server", "adaptive").unwrap_or(d.adaptive),
+            // Negative targets mean "no latency rule" (0), not a wrap.
+            p99_target_us: t
+                .get_int("server", "p99_target_us")
+                .unwrap_or(d.p99_target_us as i64)
+                .max(0) as u64,
         }
     }
 }
@@ -294,6 +322,20 @@ mod tests {
         let s = ServerConfig::from_toml(&t);
         assert_eq!(s.codec_bits, u8::MAX);
         assert_eq!(s.frontend_topk, 0);
+    }
+
+    #[test]
+    fn from_toml_adaptive_settings() {
+        let t = TomlLite::parse("[server]\nadaptive = true\np99_target_us = 1500\n").unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert!(s.adaptive);
+        assert_eq!(s.p99_target_us, 1500);
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert!(!d.adaptive, "adaptive close defaults off (static batcher)");
+        assert_eq!(d.p99_target_us, 0, "latency rule defaults off");
+        // Negative targets mean "latency rule off", not a wrapped huge value.
+        let t = TomlLite::parse("[server]\np99_target_us = -5\n").unwrap();
+        assert_eq!(ServerConfig::from_toml(&t).p99_target_us, 0);
     }
 
     #[test]

@@ -10,9 +10,13 @@ use std::collections::BTreeMap;
 /// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Quoted string.
     Str(String),
 }
 
@@ -23,6 +27,7 @@ pub struct TomlLite {
 }
 
 impl TomlLite {
+    /// Parse `[section]\nkey = value` text (flat sections only).
     pub fn parse(text: &str) -> Result<TomlLite> {
         let mut doc = TomlLite::default();
         let mut section = String::new();
@@ -46,6 +51,7 @@ impl TomlLite {
         Ok(doc)
     }
 
+    /// Parse a file from disk.
     pub fn load(path: &str) -> Result<TomlLite> {
         TomlLite::parse(&std::fs::read_to_string(path)?)
     }
@@ -73,10 +79,12 @@ impl TomlLite {
         self.entries.extend(other.entries);
     }
 
+    /// Raw value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.entries.get(&(section.to_string(), key.to_string()))
     }
 
+    /// Integer lookup (None on absence or type mismatch).
     pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
         match self.get(section, key)? {
             Value::Int(i) => Some(*i),
@@ -84,6 +92,7 @@ impl TomlLite {
         }
     }
 
+    /// Float lookup; integer values coerce.
     pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key)? {
             Value::Float(f) => Some(*f),
@@ -92,6 +101,7 @@ impl TomlLite {
         }
     }
 
+    /// Boolean lookup (None on absence or type mismatch).
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         match self.get(section, key)? {
             Value::Bool(b) => Some(*b),
@@ -99,6 +109,7 @@ impl TomlLite {
         }
     }
 
+    /// String lookup (None on absence or type mismatch).
     pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
         match self.get(section, key)? {
             Value::Str(s) => Some(s.clone()),

@@ -1,11 +1,45 @@
-//! Admission control: bounded in-flight depth with load shedding.
+//! Admission control: bounded in-flight depth with graduated,
+//! priority-aware load shedding.
 //!
 //! Edge nodes cannot buffer an analog data deluge — when the queue is
 //! full the right move is to drop the frame (sensor data is perishable)
 //! and count it, not to grow memory. `AdmissionControl` is shared by
 //! the submitting side and the workers.
+//!
+//! Shedding is *graduated*: below half depth everything is admitted;
+//! from half depth to full depth the minimum admissible priority ramps
+//! linearly from 0 to 256, so low-priority (Summarize-class, see
+//! [`crate::frontend::retention::RetentionPolicy::priority`]) frames
+//! shed first while top-priority (Keep-class / raw) traffic is only
+//! refused when the queue is completely full. For priority-255 traffic
+//! the ramp is exactly the legacy full-queue check — `admit()` behavior
+//! is bit-identical to the pre-QoS admission control.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Pure graduated-shedding rule: may a frame of `priority` enter a
+/// queue currently at `depth` out of `max_depth`?
+///
+/// - `depth < max_depth / 2`: always admissible (no pressure).
+/// - `max_depth / 2 <= depth < max_depth`: admissible iff
+///   `priority >= (depth - start) * 256 / (max_depth - start)` where
+///   `start = max_depth / 2` — the bar rises linearly with depth.
+/// - `depth >= max_depth`: never admissible (hard cap).
+///
+/// Floor division keeps the bar at or below 255 for every
+/// `depth < max_depth`, so priority-255 traffic is only shed at the
+/// hard cap — exactly the legacy non-graduated behavior.
+pub fn admissible(priority: u8, depth: usize, max_depth: usize) -> bool {
+    if depth >= max_depth {
+        return false;
+    }
+    let start = max_depth / 2;
+    if depth < start {
+        return true;
+    }
+    let min_priority = ((depth - start) * 256) / (max_depth - start);
+    priority as usize >= min_priority
+}
 
 /// Shared admission state.
 #[derive(Debug, Default)]
@@ -17,6 +51,7 @@ pub struct AdmissionControl {
 }
 
 impl AdmissionControl {
+    /// Admission gate over at most `max_depth` in-flight requests.
     pub fn new(max_depth: usize) -> Self {
         assert!(max_depth > 0);
         AdmissionControl {
@@ -27,12 +62,20 @@ impl AdmissionControl {
         }
     }
 
-    /// Try to admit one request. True = admitted (caller must `release`
-    /// when the request completes).
+    /// Try to admit one top-priority request (legacy path: only a
+    /// completely full queue sheds). True = admitted (caller must
+    /// `release` when the request completes).
     pub fn admit(&self) -> bool {
+        self.admit_priority(u8::MAX)
+    }
+
+    /// Try to admit one request under the graduated-shedding rule
+    /// ([`admissible`]). True = admitted (caller must `release` when
+    /// the request completes).
+    pub fn admit_priority(&self, priority: u8) -> bool {
         let mut cur = self.depth.load(Ordering::Relaxed);
         loop {
-            if cur >= self.max_depth {
+            if !admissible(priority, cur, self.max_depth) {
                 self.shed.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
@@ -57,14 +100,17 @@ impl AdmissionControl {
         debug_assert!(prev > 0, "release without admit");
     }
 
+    /// Current in-flight depth.
     pub fn depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
 
+    /// Total requests refused admission (all priorities).
     pub fn shed_count(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
     }
 
+    /// Total requests admitted (all priorities).
     pub fn admitted_count(&self) -> u64 {
         self.admitted.load(Ordering::Relaxed)
     }
@@ -85,6 +131,87 @@ mod tests {
         ac.release();
         assert!(ac.admit());
         assert_eq!(ac.admitted_count(), 3);
+    }
+
+    /// For top-priority traffic the graduated rule is exactly the
+    /// legacy "shed iff full" check at every depth.
+    #[test]
+    fn top_priority_matches_legacy_full_queue_rule() {
+        for max_depth in 1..=300usize {
+            for depth in 0..=max_depth + 2 {
+                assert_eq!(
+                    admissible(u8::MAX, depth, max_depth),
+                    depth < max_depth,
+                    "max_depth={max_depth} depth={depth}"
+                );
+            }
+        }
+    }
+
+    /// The admissibility bar only rises with depth and only falls with
+    /// priority — no priority/depth combination inverts the ordering.
+    #[test]
+    fn admissibility_is_monotone_in_priority_and_depth() {
+        for max_depth in [1usize, 2, 5, 64, 256, 1000] {
+            for depth in 0..=max_depth {
+                for p in 0..255u8 {
+                    // p admitted implies p+1 admitted.
+                    assert!(
+                        !admissible(p, depth, max_depth) || admissible(p + 1, depth, max_depth),
+                        "priority inversion at max_depth={max_depth} depth={depth} p={p}"
+                    );
+                }
+                if depth > 0 {
+                    for p in [0u8, 64, 128, 192, 255] {
+                        // Shallower queue never sheds where deeper admits.
+                        assert!(
+                            admissible(p, depth - 1, max_depth) || !admissible(p, depth, max_depth),
+                            "depth inversion at max_depth={max_depth} depth={depth} p={p}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn graduated_shedding_drops_low_priority_first() {
+        let max_depth = 64usize;
+        // Below half depth everyone gets in.
+        assert!(admissible(0, 31, max_depth));
+        // At three-quarters depth the bar is at half scale: priority
+        // (48-32)*256/32 = 128.
+        assert!(!admissible(127, 48, max_depth));
+        assert!(admissible(128, 48, max_depth));
+        // Just below full, only near-top priorities remain: bar =
+        // (63-32)*256/32 = 248.
+        assert!(!admissible(247, 63, max_depth));
+        assert!(admissible(248, 63, max_depth));
+        assert!(admissible(255, 63, max_depth));
+        // Full queue sheds everyone.
+        assert!(!admissible(255, 64, max_depth));
+    }
+
+    #[test]
+    fn admit_priority_sheds_by_class_under_load() {
+        let ac = AdmissionControl::new(4);
+        // Fill to half depth (2 of 4) — free admission.
+        assert!(ac.admit_priority(0));
+        assert!(ac.admit_priority(0));
+        // depth=2 = start → bar 0: still admitted.
+        assert!(ac.admit_priority(0));
+        // depth=3 → bar (3-2)*256/2 = 128: Summarize-band priority
+        // sheds, Keep-band passes.
+        assert!(!ac.admit_priority(100));
+        assert!(ac.admit_priority(200));
+        // depth=4 = full → even top priority sheds.
+        assert!(!ac.admit_priority(255));
+        assert_eq!(ac.shed_count(), 2);
+        assert_eq!(ac.admitted_count(), 4);
+        for _ in 0..4 {
+            ac.release();
+        }
+        assert_eq!(ac.depth(), 0);
     }
 
     #[test]

@@ -1,24 +1,41 @@
 //! Dynamic batching: dispatch when full OR when the oldest request has
 //! waited past the deadline — the standard latency/throughput knob of
 //! serving systems (vLLM-style), sized here to the model's AOT batch.
+//!
+//! Two closers live here:
+//!
+//! - [`DynamicBatcher`] — the static `(max_batch, deadline)` pair; pure
+//!   logic, unchanged since PR 1 and still the default.
+//! - [`AdaptiveBatcher`] — wraps the same core but *tunes* the
+//!   effective batch size and close deadline from live signals: the
+//!   knee of the recently-sealed batch-size histogram (same
+//!   [`super::metrics::BATCH_BUCKET_BOUNDS`] buckets the metrics
+//!   export) and the observed p99 completion latency against a target
+//!   (`--p99-target-us`). With adaptation unable to trigger it is
+//!   bit-for-bit the static batcher, which is what `--adaptive` off
+//!   serves through.
 
 use std::time::{Duration, Instant};
 
+use super::metrics::BATCH_BUCKET_BOUNDS;
 use super::request::InferenceRequest;
 
 /// A dispatched batch.
 #[derive(Debug)]
 pub struct Batch {
+    /// Requests in submission order.
     pub requests: Vec<InferenceRequest>,
     /// When the batch was sealed.
     pub sealed_at: Instant,
 }
 
 impl Batch {
+    /// Requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when the batch holds no requests.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -34,13 +51,38 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Batcher sealing at `max_batch` or `deadline`, whichever first.
     pub fn new(max_batch: usize, deadline: Duration) -> Self {
         assert!(max_batch > 0);
         DynamicBatcher { max_batch, deadline, pending: Vec::new(), oldest: None }
     }
 
+    /// Requests currently waiting in the open batch.
     pub fn pending(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Current batch-size cap (the close-when-full bound).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Current close deadline.
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    /// Retune the batch-size cap in place ([`AdaptiveBatcher`]'s knob).
+    /// Takes effect on the next push/poll; an already-overfull pending
+    /// set seals on the next push.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        assert!(max_batch > 0);
+        self.max_batch = max_batch;
+    }
+
+    /// Retune the close deadline in place ([`AdaptiveBatcher`]'s knob).
+    pub fn set_deadline(&mut self, deadline: Duration) {
+        self.deadline = deadline;
     }
 
     /// Add a request; returns a sealed batch if it filled up.
@@ -82,6 +124,307 @@ impl DynamicBatcher {
     fn seal(&mut self, now: Instant) -> Option<Batch> {
         self.oldest = None;
         Some(Batch { requests: std::mem::take(&mut self.pending), sealed_at: now })
+    }
+}
+
+/// Tuning bounds and signals for [`AdaptiveBatcher`].
+///
+/// `max_batch`/`deadline_us` are the configured operating point (the
+/// same values the static batcher would run); adaptation only ever
+/// moves the *effective* knobs inside `[min_batch, max_batch]` ×
+/// `[min_deadline_us, deadline_us]`, so the configured pair stays the
+/// worst-case promise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Configured batch-size cap (adaptation walks below, never above).
+    pub max_batch: usize,
+    /// Floor for the effective batch size.
+    pub min_batch: usize,
+    /// Configured close deadline in microseconds (also the relax cap).
+    pub deadline_us: u64,
+    /// Floor for the effective close deadline (µs).
+    pub min_deadline_us: u64,
+    /// p99 completion-latency target in µs; 0 disables the latency
+    /// rule (the batcher then only walks toward the histogram knee).
+    pub p99_target_us: u64,
+    /// Sealed batches per adaptation step. Larger windows react slower
+    /// but resist noise; `usize::MAX` freezes adaptation entirely
+    /// (bit-for-bit the static batcher).
+    pub window: usize,
+    /// Hysteresis dead band as a fraction of `p99_target_us`: observed
+    /// p99 inside `[(1 - band) · target, target]` changes nothing, so
+    /// the knobs cannot oscillate around a steady operating point.
+    pub band: f64,
+}
+
+impl AdaptiveConfig {
+    /// Conventional operating point: floor batch 1, floor deadline
+    /// 50 µs, a 16-batch window and a 30 % hysteresis band.
+    pub fn new(max_batch: usize, deadline_us: u64, p99_target_us: u64) -> Self {
+        AdaptiveConfig {
+            max_batch,
+            min_batch: 1,
+            deadline_us,
+            min_deadline_us: 50.min(deadline_us.max(1)),
+            p99_target_us,
+            window: 16,
+            band: 0.3,
+        }
+    }
+}
+
+/// How a batch left the [`AdaptiveBatcher`] — the signal the knee walk
+/// feeds on (full seals mean demand saturates the effective cap;
+/// deadline seals mean the cap is above what traffic delivers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SealKind {
+    Full,
+    Deadline,
+}
+
+/// Self-tuning batch closer (ROADMAP direction 1, the policy half).
+///
+/// Wraps a [`DynamicBatcher`] core and, every [`AdaptiveConfig::window`]
+/// sealed batches, walks the *effective* `(batch, deadline)` pair:
+///
+/// 1. **Latency rule** (needs `p99_target_us > 0` and an observed p99
+///    from the caller): p99 over target → tighten, multiplicatively
+///    shrinking both the deadline (×¾) and the batch cap (−¼); p99
+///    under `(1 - band) · target` → relax the deadline (×5/4) and fall
+///    through to the knee rule; p99 inside the band → hold (hysteresis).
+/// 2. **Knee rule**: if ≤ ¼ of the window's seals closed full, the cap
+///    overshoots arrivals — walk it down to the histogram knee (the
+///    smallest [`BATCH_BUCKET_BOUNDS`] bound covering ≥ 90 % of the
+///    window's sealed sizes). If ≥ ¾ closed full *and* seals arrived
+///    faster than one per effective deadline (mean seal spacing ≤
+///    `eff_deadline`), demand genuinely saturates the cap — double it
+///    toward `max_batch`. The spacing guard is what keeps a trickle
+///    that instantly fills a small cap from flapping the cap back up:
+///    full seals alone are not evidence of pressure, full seals at
+///    sub-deadline spacing are. The middle band holds, again for
+///    hysteresis.
+///
+/// Everything is pure logic driven by `push`/`poll`/`maybe_adapt`; the
+/// server thread supplies observed p99 from the metrics' recent-latency
+/// ring. With `window: usize::MAX` (or simply never calling
+/// `maybe_adapt`) the wrapper is bit-for-bit the static batcher — the
+/// `--adaptive` off-switch relies on that identity.
+#[derive(Debug)]
+pub struct AdaptiveBatcher {
+    core: DynamicBatcher,
+    cfg: AdaptiveConfig,
+    eff_batch: usize,
+    eff_deadline_us: u64,
+    /// Sealed-size histogram for the current window (same buckets as
+    /// the metrics' served-batch histogram).
+    window_hist: [u64; BATCH_BUCKET_BOUNDS.len() + 1],
+    window_seals: usize,
+    window_full: usize,
+    /// First/last seal timestamps of the window (seal spacing is the
+    /// demand-rate signal the grow rule needs).
+    window_first: Option<Instant>,
+    window_last: Option<Instant>,
+    adaptations: u64,
+}
+
+impl AdaptiveBatcher {
+    /// Start at the configured operating point (effective = configured).
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        assert!(cfg.max_batch > 0 && cfg.min_batch > 0 && cfg.min_batch <= cfg.max_batch);
+        assert!(cfg.deadline_us > 0 && cfg.min_deadline_us <= cfg.deadline_us);
+        AdaptiveBatcher {
+            core: DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.deadline_us)),
+            cfg,
+            eff_batch: cfg.max_batch,
+            eff_deadline_us: cfg.deadline_us,
+            window_hist: [0; BATCH_BUCKET_BOUNDS.len() + 1],
+            window_seals: 0,
+            window_full: 0,
+            window_first: None,
+            window_last: None,
+            adaptations: 0,
+        }
+    }
+
+    /// Requests currently waiting in the open batch.
+    pub fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    /// Current effective batch-size cap.
+    pub fn eff_batch(&self) -> usize {
+        self.eff_batch
+    }
+
+    /// Current effective close deadline (µs).
+    pub fn eff_deadline_us(&self) -> u64 {
+        self.eff_deadline_us
+    }
+
+    /// Completed adaptation steps so far.
+    pub fn adaptations(&self) -> u64 {
+        self.adaptations
+    }
+
+    /// Add a request; a returned batch sealed because it filled the
+    /// effective cap.
+    pub fn push(&mut self, req: InferenceRequest, now: Instant) -> Option<Batch> {
+        let sealed = self.core.push(req, now);
+        if let Some(b) = &sealed {
+            self.note_seal(b.len(), SealKind::Full, now);
+        }
+        sealed
+    }
+
+    /// Deadline check; a returned batch sealed because its oldest
+    /// request aged past the effective deadline.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        let sealed = self.core.poll(now);
+        if let Some(b) = &sealed {
+            self.note_seal(b.len(), SealKind::Deadline, now);
+        }
+        sealed
+    }
+
+    /// Force-dispatch whatever is pending (shutdown path; does not
+    /// count toward the adaptation window).
+    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+        self.core.flush(now)
+    }
+
+    /// Time until the current effective deadline expires.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.core.time_to_deadline(now)
+    }
+
+    /// True once a full window of seals is waiting on [`Self::maybe_adapt`].
+    pub fn window_ready(&self) -> bool {
+        self.window_seals >= self.cfg.window
+    }
+
+    /// Run one adaptation step if a full window of sealed batches has
+    /// accumulated. `observed_p99_us` is the caller's recent p99
+    /// completion latency (`None` when too few completions exist).
+    /// Returns true when the step ran (the effective knobs may or may
+    /// not have moved).
+    pub fn maybe_adapt(&mut self, observed_p99_us: Option<f64>) -> bool {
+        if !self.window_ready() {
+            return false;
+        }
+        self.adapt(observed_p99_us);
+        true
+    }
+
+    fn note_seal(&mut self, size: usize, kind: SealKind, now: Instant) {
+        let bucket = BATCH_BUCKET_BOUNDS
+            .iter()
+            .position(|&b| size <= b)
+            .unwrap_or(BATCH_BUCKET_BOUNDS.len());
+        self.window_hist[bucket] += 1;
+        self.window_seals += 1;
+        if kind == SealKind::Full {
+            self.window_full += 1;
+        }
+        if self.window_first.is_none() {
+            self.window_first = Some(now);
+        }
+        self.window_last = Some(now);
+    }
+
+    /// True when the window's seals landed faster than one per
+    /// effective deadline — full batches under real arrival pressure,
+    /// not a trickle that happens to fill a small cap.
+    fn seals_outpace_deadline(&self) -> bool {
+        let (Some(first), Some(last)) = (self.window_first, self.window_last) else {
+            return false;
+        };
+        let intervals = self.window_seals.saturating_sub(1) as u64;
+        let elapsed_us = last.duration_since(first).as_micros() as u64;
+        elapsed_us <= intervals * self.eff_deadline_us
+    }
+
+    /// The histogram knee: smallest bucket bound covering ≥ 90 % of the
+    /// window's sealed batches (overflow bucket maps to `max_batch`).
+    fn window_knee(&self) -> usize {
+        let total: u64 = self.window_hist.iter().sum();
+        if total == 0 {
+            return self.eff_batch;
+        }
+        let need = total - total / 10; // ceil(0.9·total) without floats
+        let mut cum = 0u64;
+        for (i, &c) in self.window_hist.iter().enumerate() {
+            cum += c;
+            if cum >= need {
+                return match BATCH_BUCKET_BOUNDS.get(i) {
+                    Some(&b) => b,
+                    None => self.cfg.max_batch,
+                };
+            }
+        }
+        self.cfg.max_batch
+    }
+
+    fn adapt(&mut self, observed_p99_us: Option<f64>) {
+        self.adaptations += 1;
+        let full_frac_hi = self.window_full * 4 >= self.window_seals * 3; // ≥ ¾
+        let full_frac_lo = self.window_full * 4 <= self.window_seals; // ≤ ¼
+        let knee = self.window_knee();
+
+        let mut allow_relax = self.cfg.p99_target_us == 0;
+        if self.cfg.p99_target_us > 0 {
+            if let Some(p99) = observed_p99_us {
+                let target = self.cfg.p99_target_us as f64;
+                if p99 > target {
+                    // Over target: tighten both knobs and stop — latency
+                    // recovery outranks throughput this window.
+                    self.eff_deadline_us =
+                        (self.eff_deadline_us * 3 / 4).max(self.cfg.min_deadline_us);
+                    let step = (self.eff_batch / 4).max(1);
+                    self.eff_batch = self.eff_batch.saturating_sub(step).max(self.cfg.min_batch);
+                    self.apply();
+                    self.reset_window();
+                    return;
+                }
+                if p99 < target * (1.0 - self.cfg.band) {
+                    // Comfortably under target: the deadline may relax
+                    // back toward the configured cap.
+                    allow_relax = true;
+                } else {
+                    // Inside the hysteresis band: hold everything.
+                    self.reset_window();
+                    return;
+                }
+            }
+            // No p99 sample yet: fall through to the knee rule only.
+        }
+
+        if allow_relax && self.eff_deadline_us < self.cfg.deadline_us {
+            self.eff_deadline_us = (self.eff_deadline_us * 5 / 4 + 1).min(self.cfg.deadline_us);
+        }
+        if full_frac_hi && self.seals_outpace_deadline() {
+            // Demand saturates the cap at sub-deadline seal spacing:
+            // grow toward the configured max.
+            self.eff_batch = (self.eff_batch * 2).min(self.cfg.max_batch);
+        } else if full_frac_lo && knee < self.eff_batch {
+            // Deadline seals dominate and the histogram knee sits below
+            // the cap: walk down so full-closes fire instead of waiting.
+            self.eff_batch = knee.max(self.cfg.min_batch);
+        }
+        self.apply();
+        self.reset_window();
+    }
+
+    fn apply(&mut self) {
+        self.core.set_max_batch(self.eff_batch);
+        self.core.set_deadline(Duration::from_micros(self.eff_deadline_us));
+    }
+
+    fn reset_window(&mut self) {
+        self.window_hist = [0; BATCH_BUCKET_BOUNDS.len() + 1];
+        self.window_seals = 0;
+        self.window_full = 0;
+        self.window_first = None;
+        self.window_last = None;
     }
 }
 
@@ -143,5 +486,205 @@ mod tests {
         // New epoch: deadline measured from the new oldest.
         assert!(b.poll(t0 + Duration::from_millis(25)).is_none());
         assert!(b.poll(t0 + Duration::from_millis(31)).is_some());
+    }
+
+    #[test]
+    fn retuned_knobs_take_effect() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(req(1), t0);
+        b.set_max_batch(2);
+        assert_eq!(b.max_batch(), 2);
+        let batch = b.push(req(2), t0).expect("new cap seals at 2");
+        assert_eq!(batch.len(), 2);
+        b.set_deadline(Duration::from_millis(1));
+        assert_eq!(b.deadline(), Duration::from_millis(1));
+        b.push(req(3), t0);
+        assert!(b.poll(t0 + Duration::from_millis(2)).is_some(), "new deadline fires");
+    }
+
+    // ---- AdaptiveBatcher ----
+
+    fn acfg(max_batch: usize, deadline_us: u64, target_us: u64) -> AdaptiveConfig {
+        AdaptiveConfig::new(max_batch, deadline_us, target_us)
+    }
+
+    /// Frozen adaptation (window = usize::MAX) is bit-for-bit the
+    /// static batcher on an arbitrary push/poll trace — the identity
+    /// the `--adaptive` off-switch rests on.
+    #[test]
+    fn frozen_adaptive_matches_static_bit_for_bit() {
+        let cfg = AdaptiveConfig { window: usize::MAX, ..acfg(4, 5_000, 1_000) };
+        let mut adaptive = AdaptiveBatcher::new(cfg);
+        let mut fixed = DynamicBatcher::new(4, Duration::from_micros(5_000));
+        let t0 = Instant::now();
+        let mut seals_a: Vec<Vec<u64>> = Vec::new();
+        let mut seals_s: Vec<Vec<u64>> = Vec::new();
+        let ids = |b: Batch| b.requests.iter().map(|r| r.id).collect::<Vec<_>>();
+        for i in 0..23u64 {
+            let now = t0 + Duration::from_micros(i * 1_700);
+            if let Some(b) = adaptive.poll(now) {
+                seals_a.push(ids(b));
+            }
+            if let Some(b) = fixed.poll(now) {
+                seals_s.push(ids(b));
+            }
+            if let Some(b) = adaptive.push(req(i), now) {
+                seals_a.push(ids(b));
+            }
+            if let Some(b) = fixed.push(req(i), now) {
+                seals_s.push(ids(b));
+            }
+        }
+        let now = t0 + Duration::from_secs(1);
+        if let Some(b) = adaptive.flush(now) {
+            seals_a.push(ids(b));
+        }
+        if let Some(b) = fixed.flush(now) {
+            seals_s.push(ids(b));
+        }
+        assert_eq!(seals_a, seals_s);
+        assert_eq!(adaptive.adaptations(), 0);
+        assert_eq!((adaptive.eff_batch(), adaptive.eff_deadline_us()), (4, 5_000));
+    }
+
+    /// Sparse traffic (two frames per 10 ms, far apart against a 2 ms
+    /// deadline) walks the effective cap down to the histogram knee —
+    /// and *stays* there: once at the knee the pairs seal "full", but
+    /// their seal spacing is way past the deadline, so the grow rule
+    /// must not flap the cap back up.
+    #[test]
+    fn deadline_sealed_trickle_converges_to_knee_without_flapping() {
+        let mut ab = AdaptiveBatcher::new(acfg(64, 2_000, 0));
+        let t0 = Instant::now();
+        let mut id = 0u64;
+        let mut step = 0u64;
+        let mut caps = Vec::new();
+        for _round in 0..6 {
+            while !ab.window_ready() {
+                let now = t0 + Duration::from_micros(step * 10_000);
+                // Two requests arrive together, then quiet until the
+                // deadline (or the tightened cap) seals them.
+                ab.push(req(id), now);
+                id += 1;
+                ab.push(req(id), now);
+                id += 1;
+                ab.poll(now + Duration::from_micros(2_500));
+                step += 1;
+            }
+            ab.maybe_adapt(None);
+            caps.push(ab.eff_batch());
+        }
+        // Knee of all-size-2 seals is the ≤2 bucket.
+        assert_eq!(ab.eff_batch(), 2, "walked to the histogram knee: {caps:?}");
+        assert!(
+            caps.windows(2).all(|w| w[1] <= w[0]),
+            "cap must walk down monotonically, never flap: {caps:?}"
+        );
+        assert!(ab.adaptations() >= 2);
+    }
+
+    /// Saturating traffic (every batch seals full) grows the cap back
+    /// toward the configured maximum.
+    #[test]
+    fn full_seals_grow_cap_toward_max() {
+        let cfg = AdaptiveConfig { min_batch: 1, ..acfg(32, 2_000, 0) };
+        let mut ab = AdaptiveBatcher::new(cfg);
+        // Start from a tightened state.
+        ab.eff_batch = 4;
+        ab.apply();
+        let t0 = Instant::now();
+        let mut id = 0u64;
+        for round in 0..4 {
+            while !ab.window_ready() {
+                let now = t0 + Duration::from_micros(id * 100);
+                if ab.push(req(id), now).is_some() {
+                    // sealed full
+                }
+                id += 1;
+                let _ = round;
+            }
+            ab.maybe_adapt(None);
+        }
+        assert_eq!(ab.eff_batch(), 32, "doubled 4→8→16→32");
+    }
+
+    /// p99 over target tightens both knobs; p99 inside the hysteresis
+    /// band holds them; p99 far under target relaxes the deadline.
+    #[test]
+    fn latency_rule_tightens_holds_and_relaxes() {
+        let mut ab = AdaptiveBatcher::new(acfg(16, 4_000, 1_000));
+        let t0 = Instant::now();
+        let mut id = 0u64;
+        let mut fill_window = |ab: &mut AdaptiveBatcher, id: &mut u64| {
+            while !ab.window_ready() {
+                let now = t0 + Duration::from_micros(*id * 50);
+                ab.push(req(*id), now);
+                *id += 1;
+            }
+        };
+        // Overshoot: deadline ×¾, batch −¼.
+        fill_window(&mut ab, &mut id);
+        assert!(ab.maybe_adapt(Some(2_000.0)));
+        assert_eq!(ab.eff_deadline_us(), 3_000);
+        assert_eq!(ab.eff_batch(), 12);
+        // In-band (between 700 and 1000): hold exactly.
+        fill_window(&mut ab, &mut id);
+        assert!(ab.maybe_adapt(Some(900.0)));
+        assert_eq!((ab.eff_batch(), ab.eff_deadline_us()), (12, 3_000), "hysteresis holds");
+        // Far under target: deadline relaxes back toward the cap (and
+        // full seals keep growing the batch).
+        fill_window(&mut ab, &mut id);
+        assert!(ab.maybe_adapt(Some(100.0)));
+        assert_eq!(ab.eff_deadline_us(), 3_000 * 5 / 4 + 1);
+        assert_eq!(ab.eff_batch(), 16);
+    }
+
+    /// A steady in-band workload never oscillates: repeated adapt steps
+    /// leave the knobs exactly where they were.
+    #[test]
+    fn steady_state_is_stable_under_repeated_adaptation() {
+        let mut ab = AdaptiveBatcher::new(acfg(16, 4_000, 1_000));
+        let t0 = Instant::now();
+        let mut id = 0u64;
+        let mut history = Vec::new();
+        for step in 0..8 {
+            while !ab.window_ready() {
+                let now = t0 + Duration::from_micros(id * 50);
+                ab.push(req(id), now);
+                id += 1;
+            }
+            let _ = step;
+            ab.maybe_adapt(Some(850.0)); // inside the 30 % band
+            history.push((ab.eff_batch(), ab.eff_deadline_us()));
+        }
+        assert!(history.windows(2).all(|w| w[0] == w[1]), "no oscillation: {history:?}");
+    }
+
+    /// The relax cap: the deadline never exceeds the configured value,
+    /// the tighten floor never goes below `min_deadline_us`.
+    #[test]
+    fn knobs_stay_inside_configured_bounds() {
+        let mut ab = AdaptiveBatcher::new(acfg(8, 1_000, 500));
+        let t0 = Instant::now();
+        let mut id = 0u64;
+        for _ in 0..32 {
+            while !ab.window_ready() {
+                ab.push(req(id), t0 + Duration::from_micros(id * 10));
+                id += 1;
+            }
+            ab.maybe_adapt(Some(10_000.0)); // always over target
+        }
+        assert_eq!(ab.eff_deadline_us(), 50, "pinned at the floor");
+        assert_eq!(ab.eff_batch(), 1, "pinned at min_batch");
+        for _ in 0..32 {
+            while !ab.window_ready() {
+                ab.push(req(id), t0 + Duration::from_micros(id * 10));
+                id += 1;
+            }
+            ab.maybe_adapt(Some(1.0)); // always far under target
+        }
+        assert_eq!(ab.eff_deadline_us(), 1_000, "relaxed back to the configured cap, not past");
+        assert_eq!(ab.eff_batch(), 8);
     }
 }

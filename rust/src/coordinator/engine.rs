@@ -118,6 +118,7 @@ impl DigitalEngine {
         })
     }
 
+    /// The compiled HLO batch dimension.
     pub fn batch_size(&self) -> usize {
         self.manifest.batch
     }
@@ -838,8 +839,11 @@ impl InferenceEngine for AnalogEngine {
 /// Trivial engine for coordinator tests: echoes a one-hot of
 /// `image[0] as usize % classes` after an optional simulated delay.
 pub struct MockEngine {
+    /// Classes in the one-hot echo.
     pub classes: usize,
+    /// Declared input dimension.
     pub input: usize,
+    /// Simulated per-batch inference latency.
     pub delay: std::time::Duration,
 }
 

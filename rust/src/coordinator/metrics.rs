@@ -29,6 +29,26 @@ fn batch_bucket(n: usize) -> usize {
         .unwrap_or(BATCH_BUCKET_BOUNDS.len())
 }
 
+/// Number of QoS classes tracked per-priority-band
+/// (`priority >> 6`: Drop band, low/high Summarize, Keep band).
+pub const QOS_CLASSES: usize = 4;
+
+/// Completions the rolling-latency window holds for the adaptive
+/// batcher's p99 feedback signal ([`Metrics::recent_p99_us`]).
+pub const RECENT_LATENCY_WINDOW: usize = 256;
+
+/// Live state of the adaptive batch closer, mirrored into the snapshot
+/// so the serving summary shows where the knobs settled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveSnapshot {
+    /// Effective batch-size cap after adaptation.
+    pub eff_batch: usize,
+    /// Effective close deadline (µs) after adaptation.
+    pub eff_deadline_us: u64,
+    /// Windows that changed at least one knob.
+    pub adaptations: u64,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     latency_us: Moments,
@@ -44,6 +64,16 @@ struct Inner {
     /// forward (lockstep batched walk / fixed-batch module call).
     samples_fused: u64,
     latencies: Vec<f64>,
+    /// Rolling window of the most recent completion latencies (ring
+    /// buffer) — the adaptive batcher's p99 feedback signal.
+    recent_latency: Vec<f64>,
+    recent_idx: usize,
+    /// Admissions per QoS class (`priority >> 6`).
+    qos_admitted: [u64; QOS_CLASSES],
+    /// Graduated sheds per QoS class.
+    qos_shed: [u64; QOS_CLASSES],
+    /// Latest adaptive-batcher knob state, if adaptive close is on.
+    adaptive: Option<AdaptiveSnapshot>,
     started: Option<Instant>,
     finished: Option<Instant>,
     conv: ConversionStats,
@@ -53,7 +83,9 @@ struct Inner {
 /// Snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests answered (served or degraded).
     pub completed: u64,
+    /// Requests answered with an engine-error failure response.
     pub errors: u64,
     /// Requests refused at the door by backpressure (queue full).
     pub rejected_queue_full: u64,
@@ -66,11 +98,17 @@ pub struct MetricsSnapshot {
     /// Requests that got a degraded (failure) response instead of
     /// logits: engine errors + isolated panics.
     pub degraded: u64,
+    /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
+    /// Median end-to-end latency (µs).
     pub p50_latency_us: f64,
+    /// 95th-percentile end-to-end latency (µs).
     pub p95_latency_us: f64,
+    /// 99th-percentile end-to-end latency (µs).
     pub p99_latency_us: f64,
+    /// Worst observed end-to-end latency (µs).
     pub max_latency_us: f64,
+    /// Mean dispatched batch size.
     pub mean_batch: f64,
     /// Served-batch-size histogram: dispatched batches whose size fell
     /// in each [`BATCH_BUCKET_BOUNDS`] bucket (last = above the top
@@ -81,7 +119,16 @@ pub struct MetricsSnapshot {
     /// actually bought, next to `mean_batch` which only measures what
     /// was dispatched.
     pub samples_fused: u64,
+    /// Completions per wall-clock second over the run.
     pub throughput_per_s: f64,
+    /// Admissions per QoS class (`priority >> 6`; class 3 = Keep band).
+    pub qos_admitted: [u64; QOS_CLASSES],
+    /// Graduated sheds per QoS class — which traffic the admission ramp
+    /// actually refused under load.
+    pub qos_shed: [u64; QOS_CLASSES],
+    /// Adaptive batch-closer knob state (`None` when serving with the
+    /// static closer).
+    pub adaptive: Option<AdaptiveSnapshot>,
     /// MAV→code conversions performed by the digitization pool (0 on
     /// the ADC-free path).
     pub conversions: u64,
@@ -105,10 +152,12 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// One dispatched batch of `batch_size` requests.
     pub fn record_batch(&self, batch_size: usize) {
         let mut g = self.inner.lock().unwrap();
         if g.started.is_none() {
@@ -128,14 +177,55 @@ impl Metrics {
         self.inner.lock().unwrap().samples_fused += delta;
     }
 
+    /// One answered request with its end-to-end latency.
     pub fn record_completion(&self, latency_us: u64) {
         let mut g = self.inner.lock().unwrap();
         g.latency_us.push(latency_us as f64);
         g.latencies.push(latency_us as f64);
+        if g.recent_latency.len() < RECENT_LATENCY_WINDOW {
+            g.recent_latency.push(latency_us as f64);
+        } else {
+            let idx = g.recent_idx;
+            g.recent_latency[idx] = latency_us as f64;
+        }
+        g.recent_idx = (g.recent_idx + 1) % RECENT_LATENCY_WINDOW;
         g.completed += 1;
         g.finished = Some(Instant::now());
     }
 
+    /// p99 over the most recent [`RECENT_LATENCY_WINDOW`] completions —
+    /// the adaptive batcher's feedback signal. `None` before the first
+    /// completion.
+    pub fn recent_p99_us(&self) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        if g.recent_latency.is_empty() {
+            return None;
+        }
+        let mut sorted = g.recent_latency.clone();
+        drop(g);
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(crate::util::stats::percentile_sorted(&sorted, 99.0))
+    }
+
+    /// One admission decision bucketed by QoS class (`priority >> 6`):
+    /// `admitted = false` counts a graduated shed.
+    pub fn record_qos(&self, class: usize, admitted: bool) {
+        let mut g = self.inner.lock().unwrap();
+        let class = class.min(QOS_CLASSES - 1);
+        if admitted {
+            g.qos_admitted[class] += 1;
+        } else {
+            g.qos_shed[class] += 1;
+        }
+    }
+
+    /// Publish the adaptive batch closer's current knob state (the
+    /// batcher thread calls this after each adaptation window).
+    pub fn record_adaptive_state(&self, state: AdaptiveSnapshot) {
+        self.inner.lock().unwrap().adaptive = Some(state);
+    }
+
+    /// One request answered with an engine-error failure response.
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
@@ -174,6 +264,7 @@ impl Metrics {
         self.inner.lock().unwrap().frontend.merge(delta);
     }
 
+    /// Consistent copy of every counter for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mut sorted = g.latencies.clone();
@@ -205,6 +296,9 @@ impl Metrics {
             batch_hist: g.batch_hist,
             samples_fused: g.samples_fused,
             throughput_per_s: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
+            qos_admitted: g.qos_admitted,
+            qos_shed: g.qos_shed,
+            adaptive: g.adaptive,
             conversions: g.conv.conversions,
             conversions_gated: g.conv.gated,
             adc_comparisons: g.conv.comparisons,
@@ -263,12 +357,30 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.energy_per_req_fj
             )?;
         }
+        if let Some(a) = self.adaptive {
+            write!(
+                f,
+                " adaptive: batch={} deadline={}µs retunes={}",
+                a.eff_batch, a.eff_deadline_us, a.adaptations
+            )?;
+        }
         if self.rejected_queue_full > 0 || self.rejected_malformed > 0 {
             write!(
                 f,
                 " rejected: queue={} wire={}",
                 self.rejected_queue_full, self.rejected_malformed
             )?;
+        }
+        if self.qos_shed.iter().any(|&c| c > 0) {
+            write!(f, " qos shed=[")?;
+            for (c, &n) in self.qos_shed.iter().enumerate() {
+                write!(f, "{}c{c}:{n}", if c > 0 { " " } else { "" })?;
+            }
+            write!(f, "] admitted=[")?;
+            for (c, &n) in self.qos_admitted.iter().enumerate() {
+                write!(f, "{}c{c}:{n}", if c > 0 { " " } else { "" })?;
+            }
+            write!(f, "]")?;
         }
         if self.degraded > 0 {
             write!(f, " degraded={} (panics={})", self.degraded, self.panics_isolated)?;
@@ -335,6 +447,67 @@ mod tests {
         let line = format!("{s}");
         assert!(line.contains("rejected: queue=2 wire=1"), "{line}");
         assert!(line.contains("degraded=2 (panics=1)"), "{line}");
+    }
+
+    #[test]
+    fn qos_counters_reach_snapshot_and_display_only_under_shedding() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        m.record_qos(3, true);
+        m.record_qos(3, true);
+        m.record_qos(1, true);
+        // No sheds yet: the summary line stays clean.
+        let s = m.snapshot();
+        assert_eq!(s.qos_admitted, [0, 1, 0, 2]);
+        assert_eq!(s.qos_shed, [0; QOS_CLASSES]);
+        assert!(!format!("{s}").contains("qos"), "{s}");
+        // A shed turns the block on with the full class breakdown.
+        m.record_qos(1, false);
+        m.record_qos(0, false);
+        m.record_qos(0, false);
+        m.record_qos(9, false); // out-of-range class clamps to top
+        let s = m.snapshot();
+        assert_eq!(s.qos_shed, [2, 1, 0, 1]);
+        let line = format!("{s}");
+        assert!(line.contains("qos shed=[c0:2 c1:1 c2:0 c3:1]"), "{line}");
+        assert!(line.contains("admitted=[c0:0 c1:1 c2:0 c3:2]"), "{line}");
+    }
+
+    #[test]
+    fn adaptive_state_reaches_snapshot_and_display() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        assert!(m.snapshot().adaptive.is_none());
+        assert!(!format!("{}", m.snapshot()).contains("adaptive"));
+        m.record_adaptive_state(AdaptiveSnapshot {
+            eff_batch: 8,
+            eff_deadline_us: 1500,
+            adaptations: 3,
+        });
+        let s = m.snapshot();
+        assert_eq!(
+            s.adaptive,
+            Some(AdaptiveSnapshot { eff_batch: 8, eff_deadline_us: 1500, adaptations: 3 })
+        );
+        assert!(format!("{s}").contains("adaptive: batch=8 deadline=1500µs retunes=3"), "{s}");
+    }
+
+    #[test]
+    fn recent_p99_tracks_a_rolling_window() {
+        let m = Metrics::new();
+        assert!(m.recent_p99_us().is_none());
+        // Fill the whole window with slow completions…
+        for _ in 0..RECENT_LATENCY_WINDOW {
+            m.record_completion(10_000);
+        }
+        assert!(m.recent_p99_us().unwrap() >= 10_000.0 - 1e-9);
+        // …then overwrite it with fast ones: the rolling p99 must
+        // forget the old regime while the lifetime p99 cannot.
+        for _ in 0..RECENT_LATENCY_WINDOW {
+            m.record_completion(100);
+        }
+        assert!(m.recent_p99_us().unwrap() <= 100.0 + 1e-9);
+        assert!(m.snapshot().p99_latency_us >= 9_000.0);
     }
 
     #[test]

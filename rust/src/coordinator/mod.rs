@@ -12,10 +12,18 @@
 //!   [`FramePayload`] — a raw dense frame or a frontend-compressed
 //!   [`crate::frontend::CompressedFrame`] that rides the batcher/router
 //!   natively and is decoded (or served transform-domain) only at the
-//!   engine.
-//! - [`backpressure`] — bounded admission with load shedding.
-//! - [`batcher`] — deadline/size dynamic batcher (pure logic, testable
-//!   without threads).
+//!   engine — plus a QoS `priority` (derived from the frontend triage
+//!   score on the wire path; [`TOP_PRIORITY`] otherwise).
+//! - [`backpressure`] — bounded admission with *graduated* QoS
+//!   shedding: below half depth everything enters, then the minimum
+//!   admissible priority ramps linearly to the hard cap, so
+//!   Summarize-class frames shed first and Keep-class traffic sheds
+//!   last (the pure rule is [`admissible`]).
+//! - [`batcher`] — deadline/size batch close (pure logic, testable
+//!   without threads), in two flavors: the static [`DynamicBatcher`]
+//!   and the self-tuning [`AdaptiveBatcher`] that walks the effective
+//!   batch size toward the served-histogram knee and retunes the
+//!   deadline against a p99 target (`--adaptive` / `--p99-target-us`).
 //! - [`router`] — per-worker queues with round-robin / least-loaded
 //!   dispatch.
 //! - [`engine`] — the `InferenceEngine` trait + digital (PJRT) and
@@ -26,7 +34,9 @@
 //!   from worker shards.
 //! - [`metrics`] — latency/throughput accounting plus the pool's
 //!   per-request digitization energy, the ingest frontend's
-//!   deluge-triage counters, and the robustness tallies
+//!   deluge-triage counters, per-QoS-class admitted/shed tallies, the
+//!   adaptive closer's live knob state, a rolling-window p99 (the
+//!   adaptive feedback signal), and the robustness tallies
 //!   (rejected-at-the-door, malformed-wire, panic-isolated) in every
 //!   `MetricsSnapshot`.
 //! - [`server`] — thread-per-worker serving loop tying it together;
@@ -44,12 +54,12 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use backpressure::AdmissionControl;
-pub use batcher::{Batch, DynamicBatcher};
+pub use backpressure::{admissible, AdmissionControl};
+pub use batcher::{AdaptiveBatcher, AdaptiveConfig, Batch, DynamicBatcher};
 #[cfg(feature = "xla")]
 pub use engine::DigitalEngine;
 pub use engine::{AnalogEngine, InferenceEngine};
-pub use metrics::Metrics;
-pub use request::{FramePayload, InferenceRequest, InferenceResponse};
+pub use metrics::{AdaptiveSnapshot, Metrics, MetricsSnapshot};
+pub use request::{FramePayload, InferenceRequest, InferenceResponse, TOP_PRIORITY};
 pub use router::{Router, RoutingPolicy};
 pub use server::{EdgeServer, SubmitError};

@@ -53,6 +53,12 @@ impl FramePayload {
     }
 }
 
+/// Highest QoS priority: raw/lossless frames and anything the
+/// frontend's triage marked unambiguously worth keeping. Requests built
+/// without an explicit priority get this, so pre-QoS callers see the
+/// legacy shed-only-when-full admission behavior unchanged.
+pub const TOP_PRIORITY: u8 = u8::MAX;
+
 /// One inference request: a sensor frame (raw or compressed).
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
@@ -64,6 +70,12 @@ pub struct InferenceRequest {
     pub payload: FramePayload,
     /// Submission timestamp (latency accounting).
     pub submitted: Instant,
+    /// QoS priority for graduated admission (255 = never shed before
+    /// the queue is completely full; lower sheds earlier under load).
+    /// Derived from the frontend triage score for compressed frames
+    /// ([`crate::frontend::retention::RetentionPolicy::priority`]);
+    /// raw frames default to [`TOP_PRIORITY`].
+    pub priority: u8,
 }
 
 impl InferenceRequest {
@@ -74,6 +86,7 @@ impl InferenceRequest {
             stream,
             payload: FramePayload::Raw(image),
             submitted: Instant::now(),
+            priority: TOP_PRIORITY,
         }
     }
 
@@ -84,7 +97,21 @@ impl InferenceRequest {
             stream,
             payload: FramePayload::Compressed(frame),
             submitted: Instant::now(),
+            priority: TOP_PRIORITY,
         }
+    }
+
+    /// Same request with an explicit QoS priority (builder style).
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// QoS class for metrics bucketing: `priority >> 6`, so class 3 is
+    /// the Keep band (192..=255), classes 1–2 the Summarize band
+    /// (64..=191), class 0 the Drop band (0..=63).
+    pub fn qos_class(&self) -> usize {
+        (self.priority >> 6) as usize
     }
 }
 
@@ -93,7 +120,9 @@ impl InferenceRequest {
 /// answers, with the reason here and empty logits.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
+    /// Id of the request this answers.
     pub id: u64,
+    /// Stream of the originating request.
     pub stream: u32,
     /// Raw logits (empty on a failure response).
     pub logits: Vec<f32>,
@@ -108,6 +137,7 @@ pub struct InferenceResponse {
 }
 
 impl InferenceResponse {
+    /// A served answer: classify by total-order argmax over `logits`.
     pub fn from_logits(req: &InferenceRequest, logits: Vec<f32>, worker: usize) -> Self {
         // total_cmp keeps the argmax total even if a hostile frame
         // decodes to NaN logits — a wrong class beats a dead worker.
@@ -186,6 +216,18 @@ mod tests {
         assert_eq!(payload.try_to_dense().unwrap(), payload.to_dense());
         let raw = FramePayload::Raw(vec![0.5; 4]);
         assert_eq!(raw.try_to_dense().unwrap(), vec![0.5; 4]);
+    }
+
+    #[test]
+    fn default_priority_is_top_and_builder_overrides() {
+        let req = InferenceRequest::new(1, 0, vec![0.0; 4]);
+        assert_eq!(req.priority, TOP_PRIORITY);
+        assert_eq!(req.qos_class(), 3);
+        let req = req.with_priority(70);
+        assert_eq!(req.priority, 70);
+        assert_eq!(req.qos_class(), 1);
+        assert_eq!(req.clone().with_priority(0).qos_class(), 0);
+        assert_eq!(req.with_priority(191).qos_class(), 2);
     }
 
     #[test]

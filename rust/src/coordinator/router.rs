@@ -31,11 +31,13 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over per-worker channels with the given policy.
     pub fn new(senders: Vec<Sender<Batch>>, policy: RoutingPolicy) -> Self {
         let depths = (0..senders.len()).map(|_| Arc::new(AtomicUsize::new(0))).collect();
         Router { senders, depths, policy, next: AtomicUsize::new(0) }
     }
 
+    /// Number of worker queues.
     pub fn workers(&self) -> usize {
         self.senders.len()
     }
@@ -45,6 +47,7 @@ impl Router {
         self.depths[i].clone()
     }
 
+    /// Batches currently queued at worker `i`.
     pub fn queued(&self, i: usize) -> usize {
         self.depths[i].load(Ordering::Relaxed)
     }

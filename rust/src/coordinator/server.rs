@@ -1,16 +1,42 @@
-//! The serving loop: ingest → admission → batcher → router → workers.
+//! The serving loop: ingest → admission/QoS → batcher → router →
+//! workers.
 //!
 //! Thread layout (std threads; the node is CPU-bound anyway):
 //!
 //! ```text
-//!  submit()──▶ [admission] ──▶ ingest mpsc ──▶ batcher thread
-//!                                               │ (size/deadline)
-//!                                        router (policy)
-//!                                        ┌──────┴──────┐
-//!                                   worker 0 …    worker N-1   (one engine each)
-//!                                        └──────┬──────┘
-//!                                         response mpsc ──▶ take_responses()
+//!  submit(req)────────────────────┐
+//!  submit_wire(bytes)─▶ [codec    │   trusted InferenceRequest
+//!    (untrusted wire,    validate,│   (priority from triage score)
+//!     Channel-faulted)   priority]│
+//!                                 ▼
+//!                     [admission: graduated QoS shed]
+//!                                 │ admitted
+//!                                 ▼
+//!                          ingest mpsc ──▶ batcher thread
+//!                                           │ static (max_batch, deadline)
+//!                                           │ or adaptive (knee walk +
+//!                                           │ p99-target retune)
+//!                                    router (policy)
+//!                                    ┌──────┴──────┐
+//!                               worker 0 …    worker N-1   (one engine each,
+//!                                    │  panic-isolated,  │   lockstep-fused
+//!                                    └──────┬──────┘        multi-sample forward)
+//!                                     response mpsc ──▶ take_responses()
 //! ```
+//!
+//! The two ingest edges differ in trust: `submit` takes an in-process
+//! [`InferenceRequest`] as-is, `submit_wire` is the only path untrusted
+//! bytes enter (full [`crate::frontend::CompressedFrame::from_bytes`]
+//! validation, `Malformed` rejects counted). Both then pass graduated
+//! admission: each request's QoS priority (derived from the frontend
+//! triage score for wire frames; [`super::request::TOP_PRIORITY`] for
+//! plain submits) is checked against the queue-depth ramp in
+//! [`super::backpressure::admissible`], so under overload the
+//! least-valuable frames shed first. The batcher thread closes batches
+//! either statically or adaptively ([`super::batcher::AdaptiveBatcher`],
+//! `--adaptive`), and every dispatched batch reaches one panic-isolated
+//! worker that serves it through the engine's fused multi-sample
+//! forward.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,17 +47,71 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServerConfig;
+use crate::frontend::retention::RetentionPolicy;
 
 use super::backpressure::AdmissionControl;
-use super::batcher::DynamicBatcher;
+use super::batcher::{AdaptiveBatcher, AdaptiveConfig, Batch, DynamicBatcher};
 use super::engine::InferenceEngine;
-use super::metrics::Metrics;
+use super::metrics::{AdaptiveSnapshot, Metrics};
 use super::request::{InferenceRequest, InferenceResponse};
 use super::router::{Router, RoutingPolicy};
 
 enum Ingest {
     Req(InferenceRequest),
     Shutdown,
+}
+
+/// The batcher thread's close policy: the static `(max_batch, deadline)`
+/// pair, or the self-tuning wrapper. Static is the `--adaptive`-off
+/// path and stays bit-identical to the pre-adaptive server.
+enum Closer {
+    Static(DynamicBatcher),
+    Adaptive(AdaptiveBatcher),
+}
+
+impl Closer {
+    fn push(&mut self, req: InferenceRequest, now: Instant) -> Option<Batch> {
+        match self {
+            Closer::Static(b) => b.push(req, now),
+            Closer::Adaptive(b) => b.push(req, now),
+        }
+    }
+
+    fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self {
+            Closer::Static(b) => b.poll(now),
+            Closer::Adaptive(b) => b.poll(now),
+        }
+    }
+
+    fn flush(&mut self, now: Instant) -> Option<Batch> {
+        match self {
+            Closer::Static(b) => b.flush(now),
+            Closer::Adaptive(b) => b.flush(now),
+        }
+    }
+
+    fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        match self {
+            Closer::Static(b) => b.time_to_deadline(now),
+            Closer::Adaptive(b) => b.time_to_deadline(now),
+        }
+    }
+
+    /// Run one adaptation step if a window of seals is ready, feeding
+    /// the metrics' rolling p99 in and the retuned knobs back out.
+    /// No-op for the static closer.
+    fn adapt_if_ready(&mut self, metrics: &Metrics) {
+        if let Closer::Adaptive(b) = self {
+            if b.window_ready() && b.maybe_adapt(metrics.recent_p99_us()) {
+                metrics.record_adaptive_state(AdaptiveSnapshot {
+                    eff_batch: b.eff_batch(),
+                    eff_deadline_us: b.eff_deadline_us(),
+                    adaptations: b.adaptations(),
+                });
+            }
+        }
+    }
 }
 
 /// Why [`EdgeServer::submit`] refused a request. Callers can tell load
@@ -64,6 +144,9 @@ pub struct EdgeServer {
     response_rx: Receiver<InferenceResponse>,
     admission: Arc<AdmissionControl>,
     metrics: Arc<Metrics>,
+    /// Scores wire frames into QoS priorities (the same policy
+    /// `cfg.retain` names; `KeepAll` pins everything to top priority).
+    wire_policy: RetentionPolicy,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -101,27 +184,47 @@ impl EdgeServer {
             }));
         }
 
-        // Batcher thread.
+        // Batcher thread: static closer by default, adaptive when asked.
         {
             let router = router.clone();
             let metrics = metrics.clone();
-            let max_batch = cfg.batch;
-            let deadline = Duration::from_micros(cfg.batch_deadline_us);
-            threads.push(std::thread::spawn(move || {
-                batcher_loop(ingest_rx, router, metrics, max_batch, deadline)
-            }));
+            let closer = if cfg.adaptive {
+                let acfg = AdaptiveConfig::new(cfg.batch, cfg.batch_deadline_us, cfg.p99_target_us);
+                let b = AdaptiveBatcher::new(acfg);
+                metrics.record_adaptive_state(AdaptiveSnapshot {
+                    eff_batch: b.eff_batch(),
+                    eff_deadline_us: b.eff_deadline_us(),
+                    adaptations: 0,
+                });
+                Closer::Adaptive(b)
+            } else {
+                Closer::Static(DynamicBatcher::new(
+                    cfg.batch,
+                    Duration::from_micros(cfg.batch_deadline_us),
+                ))
+            };
+            threads
+                .push(std::thread::spawn(move || batcher_loop(ingest_rx, router, metrics, closer)));
         }
 
-        Ok(EdgeServer { ingest_tx, response_rx, admission, metrics, threads })
+        let wire_policy =
+            RetentionPolicy::parse(&cfg.retain).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(EdgeServer { ingest_tx, response_rx, admission, metrics, wire_policy, threads })
     }
 
     /// Submit a request; the error says *why* it was refused
-    /// (queue-full shedding vs hostile input vs shutdown).
+    /// (graduated QoS shedding vs hostile input vs shutdown). A request
+    /// built without an explicit priority carries
+    /// [`super::request::TOP_PRIORITY`] and is only shed when the queue
+    /// is completely full — the legacy admission behavior.
     pub fn submit(&self, req: InferenceRequest) -> Result<(), SubmitError> {
-        if !self.admission.admit() {
+        let class = req.qos_class();
+        if !self.admission.admit_priority(req.priority) {
             self.metrics.record_rejected_queue_full();
+            self.metrics.record_qos(class, false);
             return Err(SubmitError::QueueFull);
         }
+        self.metrics.record_qos(class, true);
         if self.ingest_tx.send(Ingest::Req(req)).is_err() {
             self.admission.release();
             return Err(SubmitError::Closed);
@@ -130,18 +233,24 @@ impl EdgeServer {
     }
 
     /// Submit one frame straight off the wire: validate the bytes at
-    /// the trust boundary, then enqueue the decoded frame. Returns the
-    /// frame's own id (the wire header's `frame_id` becomes the request
-    /// id). This is the only path untrusted bytes take into the server
-    /// — everything past it handles a `CompressedFrame` that
-    /// `from_bytes` fully vetted.
+    /// the trust boundary, score them into a QoS priority, then enqueue
+    /// the decoded frame. Returns the frame's own id (the wire header's
+    /// `frame_id` becomes the request id). This is the only path
+    /// untrusted bytes take into the server — everything past it
+    /// handles a `CompressedFrame` that `from_bytes` fully vetted.
+    ///
+    /// The priority comes from the server's retention policy
+    /// (`cfg.retain`) scoring the frame's triage statistics; with the
+    /// default `keep` policy every frame is top priority and admission
+    /// is the legacy full-queue check.
     pub fn submit_wire(&self, stream: u32, bytes: &[u8]) -> Result<u64, SubmitError> {
         let frame = crate::frontend::CompressedFrame::from_bytes(bytes).map_err(|e| {
             self.metrics.record_rejected_malformed();
             SubmitError::Malformed(e)
         })?;
         let id = frame.frame_id;
-        self.submit(InferenceRequest::compressed(id, stream, frame))?;
+        let priority = self.wire_policy.priority(&frame);
+        self.submit(InferenceRequest::compressed(id, stream, frame).with_priority(priority))?;
         Ok(id)
     }
 
@@ -155,6 +264,7 @@ impl EdgeServer {
         self.response_rx.recv_timeout(timeout).ok()
     }
 
+    /// Live metrics handle (snapshot any time; workers keep writing).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -166,6 +276,7 @@ impl EdgeServer {
         self.metrics.record_frontend(stats);
     }
 
+    /// Requests refused admission so far (all priorities).
     pub fn shed_count(&self) -> u64 {
         self.admission.shed_count()
     }
@@ -184,24 +295,23 @@ fn batcher_loop(
     rx: Receiver<Ingest>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
-    max_batch: usize,
-    deadline: Duration,
+    mut closer: Closer,
 ) {
-    let mut batcher = DynamicBatcher::new(max_batch, deadline);
     loop {
-        let wait = batcher
+        let wait = closer
             .time_to_deadline(Instant::now())
             .unwrap_or(Duration::from_millis(50))
             .max(Duration::from_micros(50));
         match rx.recv_timeout(wait) {
             Ok(Ingest::Req(req)) => {
-                if let Some(batch) = batcher.push(req, Instant::now()) {
+                if let Some(batch) = closer.push(req, Instant::now()) {
                     metrics.record_batch(batch.len());
                     let _ = router.dispatch(batch);
+                    closer.adapt_if_ready(&metrics);
                 }
             }
             Ok(Ingest::Shutdown) => {
-                if let Some(batch) = batcher.flush(Instant::now()) {
+                if let Some(batch) = closer.flush(Instant::now()) {
                     metrics.record_batch(batch.len());
                     let _ = router.dispatch(batch);
                 }
@@ -209,13 +319,14 @@ fn batcher_loop(
                 break;
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.poll(Instant::now()) {
+                if let Some(batch) = closer.poll(Instant::now()) {
                     metrics.record_batch(batch.len());
                     let _ = router.dispatch(batch);
+                    closer.adapt_if_ready(&metrics);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                if let Some(batch) = batcher.flush(Instant::now()) {
+                if let Some(batch) = closer.flush(Instant::now()) {
                     metrics.record_batch(batch.len());
                     let _ = router.dispatch(batch);
                 }
@@ -432,6 +543,84 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.completed, 12);
         assert_eq!(snap.errors, 0);
+    }
+
+    /// Adaptive close serves the same traffic correctly and publishes
+    /// its knob state into the snapshot.
+    #[test]
+    fn adaptive_closer_serves_and_reports_state() {
+        let cfg = ServerConfig {
+            workers: 2,
+            batch: 4,
+            batch_deadline_us: 500,
+            adaptive: true,
+            p99_target_us: 50_000,
+            ..Default::default()
+        };
+        let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
+        for i in 0..20u64 {
+            assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])).is_ok());
+        }
+        let mut got = Vec::new();
+        let t0 = Instant::now();
+        while got.len() < 20 && t0.elapsed() < Duration::from_secs(5) {
+            if let Some(r) = server.recv_response(Duration::from_millis(100)) {
+                got.push(r);
+            }
+        }
+        assert_eq!(got.len(), 20);
+        for r in &got {
+            assert_eq!(r.class, (r.id % 10) as usize);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 20);
+        let a = snap.adaptive.expect("adaptive state published");
+        assert!(a.eff_batch >= 1 && a.eff_batch <= 4);
+        assert!(a.eff_deadline_us <= 500);
+        assert!(format!("{snap}").contains("adaptive: batch="), "{snap}");
+    }
+
+    /// Static serving leaves no adaptive fingerprint in the snapshot —
+    /// the off-switch really is the old server.
+    #[test]
+    fn static_closer_reports_no_adaptive_state() {
+        let cfg =
+            ServerConfig { workers: 1, batch: 4, batch_deadline_us: 500, ..Default::default() };
+        let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::RoundRobin).unwrap();
+        server.submit(InferenceRequest::new(1, 0, vec![1.0; 4])).unwrap();
+        assert!(server.recv_response(Duration::from_secs(2)).is_some());
+        let snap = server.shutdown();
+        assert!(snap.adaptive.is_none());
+        assert!(!format!("{snap}").contains("adaptive"), "{snap}");
+    }
+
+    /// Under a stuffed queue, graduated admission sheds low-priority
+    /// requests while Keep-band traffic still gets in — and the
+    /// per-class counters account for both.
+    #[test]
+    fn graduated_shedding_prefers_high_priority() {
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 64,
+            batch_deadline_us: 500_000, // long deadline: queue fills
+            queue_depth: 16,
+            ..Default::default()
+        };
+        let server = EdgeServer::start(&cfg, mock(1), RoutingPolicy::RoundRobin).unwrap();
+        // Fill past the ramp start (depth 8 of 16) with top priority.
+        for i in 0..12u64 {
+            assert!(server.submit(InferenceRequest::new(i, 0, vec![0.0; 4])).is_ok());
+        }
+        // depth=12: bar = (12-8)*256/8 = 128. Low priority sheds…
+        let low = InferenceRequest::new(100, 0, vec![0.0; 4]).with_priority(60);
+        assert_eq!(server.submit(low), Err(SubmitError::QueueFull));
+        // …top priority still enters.
+        assert!(server.submit(InferenceRequest::new(101, 0, vec![0.0; 4])).is_ok());
+        let snap = server.shutdown();
+        assert_eq!(snap.qos_shed[0], 1, "priority-60 request shed");
+        assert_eq!(snap.qos_shed[3], 0, "Keep band never shed");
+        assert_eq!(snap.qos_admitted[3], 13);
+        assert!(format!("{snap}").contains("qos shed=[c0:1"), "{snap}");
     }
 
     #[test]

@@ -30,9 +30,11 @@ pub enum AdcStyle {
 }
 
 impl AdcStyle {
+    /// Every modelled digitization style.
     pub const ALL: [AdcStyle; 4] =
         [AdcStyle::Sar, AdcStyle::Flash, AdcStyle::InMemorySar, AdcStyle::InMemoryHybrid];
 
+    /// Display name of the style.
     pub fn name(&self) -> &'static str {
         match self {
             AdcStyle::Sar => "SAR (40nm, [34])",

@@ -77,12 +77,17 @@ pub struct ChannelStats {
     pub offered: u64,
     /// Deliveries out the far end (duplicates count twice).
     pub delivered: u64,
+    /// Frames the channel swallowed whole.
     pub dropped: u64,
+    /// Frames delivered short (tail cut).
     pub truncated: u64,
+    /// Extra copies delivered.
     pub duplicated: u64,
+    /// Frames delivered out of submission order.
     pub reordered: u64,
     /// Frames with at least one flipped bit.
     pub corrupted: u64,
+    /// Total bits flipped across all corrupted frames.
     pub bits_flipped: u64,
 }
 
@@ -115,15 +120,18 @@ pub struct Channel {
 }
 
 impl Channel {
+    /// Build a channel, validating the fault probabilities.
     pub fn new(cfg: ChannelConfig) -> Result<Self, String> {
         cfg.validate()?;
         Ok(Channel { cfg, stats: ChannelStats::default(), held: None })
     }
 
+    /// The validated configuration.
     pub fn config(&self) -> ChannelConfig {
         self.cfg
     }
 
+    /// Fault counters accumulated so far.
     pub fn stats(&self) -> ChannelStats {
         self.stats
     }

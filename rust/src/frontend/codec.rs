@@ -131,7 +131,9 @@ impl std::error::Error for CodecError {}
 /// (next power of two) Walsh–Hadamard block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CodecParams {
+    /// Spectral channels per frame.
     pub channels: usize,
+    /// Samples per channel.
     pub samples: usize,
     /// Sensor grid resolution: inputs snap to multiples of
     /// `2^-sensor_bits` in [0, 1] before the transform (the front ADC).
@@ -252,7 +254,9 @@ impl CodecParams {
 /// [`CompressedFrame::encoded_bytes`] excludes them.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressedFrame {
+    /// Caller-assigned frame identity (becomes the request id).
     pub frame_id: u64,
+    /// The codec the frame was encoded under.
     pub params: CodecParams,
     /// Number of packed coefficients.
     pub kept: usize,
@@ -706,6 +710,7 @@ pub(crate) struct BitWriter {
 }
 
 impl BitWriter {
+    /// Append the low `bits` of `value`, LSB first.
     pub fn push(&mut self, value: u64, bits: u32) {
         debug_assert!(bits <= 64);
         debug_assert!(bits == 64 || value < (1u64 << bits));
@@ -725,6 +730,7 @@ impl BitWriter {
         }
     }
 
+    /// Finish and take the packed bytes.
     pub fn into_bytes(self) -> Vec<u8> {
         self.bytes
     }
@@ -737,6 +743,7 @@ pub(crate) struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// Reader over packed bytes, starting at bit 0.
     pub fn new(bytes: &'a [u8]) -> Self {
         BitReader { bytes, pos: 0 }
     }

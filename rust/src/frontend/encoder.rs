@@ -65,6 +65,7 @@ impl Selection {
 #[derive(Debug, Clone)]
 pub struct FrameEncoder {
     params: CodecParams,
+    /// Which coefficients survive (All / TopK / EnergyFrac).
     pub selection: Selection,
     /// Add ±half-step uniform dither before rounding quantized levels
     /// (decorrelates quantization error across a stream). Lossless mode
@@ -78,6 +79,7 @@ pub struct FrameEncoder {
 }
 
 impl FrameEncoder {
+    /// Encoder with dither off.
     pub fn new(params: CodecParams, selection: Selection) -> Self {
         FrameEncoder {
             params,
@@ -89,6 +91,7 @@ impl FrameEncoder {
         }
     }
 
+    /// The codec geometry.
     pub fn params(&self) -> CodecParams {
         self.params
     }

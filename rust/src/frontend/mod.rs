@@ -50,8 +50,11 @@ pub use stats::FrontendStats;
 /// Frontend configuration: codec geometry + selection + policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FrontendConfig {
+    /// Codec geometry (channels, samples, bit widths).
     pub params: CodecParams,
+    /// Coefficient-selection rule.
     pub selection: Selection,
+    /// Keep/summarize/drop triage rule.
     pub policy: RetentionPolicy,
     /// Dither quantized coefficients (deterministic per frame id).
     pub dither: bool,
@@ -92,6 +95,7 @@ pub struct SensorFrontend {
 }
 
 impl SensorFrontend {
+    /// Frontend from a validated configuration.
     pub fn new(cfg: FrontendConfig) -> Self {
         let mut encoder = FrameEncoder::new(cfg.params, cfg.selection);
         encoder.dither = cfg.dither;
@@ -99,6 +103,7 @@ impl SensorFrontend {
         SensorFrontend { encoder, policy: cfg.policy, stats: FrontendStats::default() }
     }
 
+    /// The codec geometry in use.
     pub fn params(&self) -> CodecParams {
         self.encoder.params()
     }
@@ -129,6 +134,7 @@ impl SensorFrontend {
         }
     }
 
+    /// Triage counters accumulated so far.
     pub fn stats(&self) -> &FrontendStats {
         &self.stats
     }

@@ -24,8 +24,11 @@ use super::codec::CompressedFrame;
 /// What survives of a frame.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
+    /// Forward the full compressed frame to serving.
     Keep,
+    /// Retain only a tiny [`FrameSummary`]; shed the coefficients.
     Summarize,
+    /// Nothing survives.
     Drop,
 }
 
@@ -89,6 +92,39 @@ impl RetentionPolicy {
             }
         }
     }
+
+    /// QoS priority for graduated admission
+    /// ([`crate::coordinator::backpressure::admissible`]), derived from
+    /// the same scores [`Self::decide`] triages on. The verdict picks
+    /// the band — Keep ⇒ 192..=255, Summarize ⇒ 64..=191,
+    /// Drop ⇒ 0..=63 — and `ac_retained`'s position inside the
+    /// verdict's score interval picks the level within the band, so
+    /// under overload the least-structured frames shed first and
+    /// Keep-class traffic sheds last. `KeepAll` (the policy-disabled
+    /// baseline) pins everything to 255, which makes graduated
+    /// admission bit-identical to the legacy full-queue check.
+    pub fn priority(&self, f: &CompressedFrame) -> u8 {
+        // Linear position of `t` in [0,1] mapped onto lo..=hi; NaN and
+        // out-of-range scores clamp to the band edges.
+        fn band(lo: u8, hi: u8, t: f32) -> u8 {
+            let t = if t.is_finite() { t.clamp(0.0, 1.0) } else { 0.0 };
+            lo + (t * (hi - lo) as f32) as u8
+        }
+        match *self {
+            RetentionPolicy::KeepAll => u8::MAX,
+            RetentionPolicy::Triage { keep_above, drop_below, .. } => match self.decide(f) {
+                Verdict::Keep => {
+                    let span = (1.0 - keep_above).max(f32::EPSILON);
+                    band(192, 255, (f.ac_retained - keep_above) / span)
+                }
+                Verdict::Summarize => {
+                    let span = (keep_above - drop_below).max(f32::EPSILON);
+                    band(64, 191, (f.ac_retained - drop_below) / span)
+                }
+                Verdict::Drop => band(0, 63, f.ac_retained / drop_below.max(f32::EPSILON)),
+            },
+        }
+    }
 }
 
 /// The few bytes that survive a summarized frame: identity, per-channel
@@ -96,7 +132,9 @@ impl RetentionPolicy {
 /// without the pixels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrameSummary {
+    /// Id of the summarized frame.
     pub frame_id: u64,
+    /// Originating sensor stream.
     pub stream: u32,
     /// Mean level per channel (the DC the scene kept).
     pub channel_mean: Vec<f32>,
@@ -169,6 +207,33 @@ mod tests {
         let noise: Vec<f32> =
             (0..n).map(|_| (0.5 + 0.25 * rng.normal()) as f32).collect();
         assert_ne!(policy.decide(&encode(&noise, 1, n, 4)), Verdict::Keep);
+    }
+
+    /// Priorities land in the band their verdict dictates, so
+    /// graduated shedding orders frames the way triage would.
+    #[test]
+    fn priority_bands_follow_verdicts() {
+        let policy = RetentionPolicy::triage_default();
+        let n = 64usize;
+        let structured: Vec<f32> =
+            (0..n).map(|i| if (i / 4) % 2 == 0 { 0.9 } else { 0.1 }).collect();
+        let blank = vec![0.5f32; n];
+        let mut rng = Rng::new(5);
+        let noise: Vec<f32> = (0..n).map(|_| (0.5 + 0.25 * rng.normal()) as f32).collect();
+
+        for (frame, k) in [(&structured, 8usize), (&blank, 8), (&noise, 4)] {
+            let cf = encode(frame, 1, n, k);
+            let p = policy.priority(&cf);
+            match policy.decide(&cf) {
+                Verdict::Keep => assert!(p >= 192, "Keep frame priority {p} below band"),
+                Verdict::Summarize => {
+                    assert!((64..=191).contains(&p), "Summarize priority {p} out of band")
+                }
+                Verdict::Drop => assert!(p <= 63, "Drop frame priority {p} above band"),
+            }
+            // KeepAll pins top priority regardless of scores.
+            assert_eq!(RetentionPolicy::KeepAll.priority(&cf), u8::MAX);
+        }
     }
 
     #[test]

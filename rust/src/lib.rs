@@ -49,6 +49,8 @@
 //! lowers the L2 model (calling the L1 Pallas BWHT kernel) to HLO text and
 //! trains the reference weights. The serve path is pure rust.
 
+#![warn(missing_docs)]
+
 pub mod adc;
 pub mod analog;
 pub mod cim;

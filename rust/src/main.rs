@@ -1,7 +1,10 @@
-//! `adcim` — leader binary: serve, compress, report, characterize.
+//! `adcim` — leader binary: serve, load-test, compress, report,
+//! characterize.
 //!
 //! Subcommands:
 //!   serve     run the edge-inference server on a synthetic sensor load
+//!   loadgen   deterministic open/closed-loop load generator against a
+//!             freshly started server (QPS pacing, bursts, overload)
 //!   compress  run the sensor frontend standalone over a synthetic
 //!             multispectral deluge (ratio / accuracy tables)
 //!   report    regenerate paper tables/figures (--all or --id fig7)
@@ -26,6 +29,7 @@ use adcim::nn::train::{train, TrainConfig};
 use adcim::nn::{model, Tensor};
 use adcim::runtime::Artifacts;
 use adcim::util::cli::Args;
+use adcim::util::loadgen::{self, LoadMode, LoadSpec};
 use adcim::util::Rng;
 use anyhow::Result;
 
@@ -33,7 +37,8 @@ const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
     "pool-threads", "topk", "codec-bits", "retain", "sensor-bits", "select", "frames",
-    "channels", "side", "classes", "channel-ber", "channel-drop",
+    "channels", "side", "classes", "channel-ber", "channel-drop", "p99-target-us",
+    "qps", "burst", "concurrency",
 ];
 
 /// Parse a numeric flag *loudly*: an unparseable value is an error, not
@@ -53,17 +58,19 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), VALUE_KEYS);
     match args.positional().first().map(String::as_str) {
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("compress") => cmd_compress(&args),
         Some("report") => cmd_report(&args),
         Some("adc") => cmd_adc(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: adcim <serve|compress|report|adc|info> [--config file.toml]\n\
+                "usage: adcim <serve|loadgen|compress|report|adc|info> [--config file.toml]\n\
                  \n\
                  serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
                  \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
                  \x20       [--pool-threads T] [--fuse-batch]\n\
+                 \x20       [--adaptive --p99-target-us T]\n\
                  \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
                  \x20        --retain keep|triage]\n\
                  \x20       [--channel-ber P --channel-drop P]\n\
@@ -80,7 +87,19 @@ fn main() -> Result<()> {
                  \x20        --channel-ber/--channel-drop push kept frames through a\n\
                  \x20        deterministic fault-injecting wire channel — corrupted frames\n\
                  \x20        are rejected at the validated ingest boundary, visible in the\n\
-                 \x20        metrics line)\n\
+                 \x20        metrics line;\n\
+                 \x20        --adaptive replaces the static batch closer with the\n\
+                 \x20        self-tuning one: the effective batch size walks toward the\n\
+                 \x20        served-histogram knee and the close deadline is retuned\n\
+                 \x20        against --p99-target-us, 0 = size-only tuning)\n\
+                 loadgen [--qps N --burst B | --closed --concurrency C] [--requests N]\n\
+                 \x20       [--wire] [plus any serve engine/server flags above]\n\
+                 \x20       (deterministic load generator against a freshly started\n\
+                 \x20        server: the open loop paces offered traffic at --qps in\n\
+                 \x20        --burst-sized bursts without waiting on responses\n\
+                 \x20        (coordinated-omission honest); --closed keeps --concurrency\n\
+                 \x20        requests in flight instead; --wire drives the validated\n\
+                 \x20        ingest boundary with encoded frames, QoS-scored by --retain)\n\
                  compress [--frames N --channels C --side S --classes K --codec-bits B]\n\
                  \x20       (standalone frontend over a synthetic multispectral deluge:\n\
                  \x20        compression-ratio / retained-energy / accuracy tables)\n\
@@ -185,8 +204,10 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let (chip, mut server_cfg) = load_configs(args)?;
+/// Fold command-line overrides onto the TOML-derived [`ServerConfig`].
+/// Shared by `serve` and `loadgen` so both subcommands accept the same
+/// engine/server surface.
+fn apply_server_flags(args: &Args, server_cfg: &mut ServerConfig) -> Result<()> {
     if let Some(w) = args.get_parse::<usize>("workers") {
         server_cfg.workers = w;
     }
@@ -217,6 +238,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("fuse-batch") {
         server_cfg.fuse_batch = true;
     }
+    if args.flag("adaptive") {
+        server_cfg.adaptive = true;
+    }
+    if let Some(t) = parse_flag::<u64>(args, "p99-target-us")? {
+        server_cfg.p99_target_us = t;
+    }
     if args.flag("frontend") {
         server_cfg.frontend = true;
     }
@@ -241,18 +268,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = parse_flag::<f64>(args, "channel-drop")? {
         server_cfg.channel_drop = p;
     }
-    let n_requests: usize = args.get_parse_or("requests", 256);
-    let policy = match args.get_or("policy", "rr") {
-        "ll" => RoutingPolicy::LeastLoaded,
-        "affinity" => RoutingPolicy::StreamAffinity,
-        _ => RoutingPolicy::RoundRobin,
-    };
-    let dir = args.get("artifacts").map(String::from).unwrap_or_else(|| {
-        Artifacts::default_dir().to_string_lossy().into_owned()
-    });
-    let artifacts = Artifacts::open(&dir)?;
+    Ok(())
+}
 
-    // Build one engine per worker.
+/// Build one inference engine per configured worker (analog CiM, with
+/// an optional collaborative digitization pool, or the digital PJRT
+/// path when built with `--features xla`).
+fn build_engines(
+    chip: &ChipConfig,
+    server_cfg: &ServerConfig,
+    artifacts: &Artifacts,
+) -> Result<Vec<Box<dyn InferenceEngine>>> {
     let pool = PoolSpec::parse(
         server_cfg.pool_arrays,
         &server_cfg.adc_mode,
@@ -288,7 +314,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             for w in 0..server_cfg.workers {
                 engines.push(Box::new(
-                    AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?
+                    AnalogEngine::load(artifacts, cfg, None, 4, w as u64)?
                         .with_threads(server_cfg.engine_threads)
                         .with_pool(pool)?,
                 ));
@@ -297,7 +323,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         _ => {
             #[cfg(feature = "xla")]
             for _ in 0..server_cfg.workers {
-                engines.push(Box::new(DigitalEngine::load(&artifacts, false)?));
+                engines.push(Box::new(DigitalEngine::load(artifacts, false)?));
             }
             #[cfg(not(feature = "xla"))]
             anyhow::bail!(
@@ -306,6 +332,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(engines)
+}
+
+fn open_artifacts(args: &Args) -> Result<Artifacts> {
+    let dir = args.get("artifacts").map(String::from).unwrap_or_else(|| {
+        Artifacts::default_dir().to_string_lossy().into_owned()
+    });
+    Artifacts::open(&dir)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (chip, mut server_cfg) = load_configs(args)?;
+    apply_server_flags(args, &mut server_cfg)?;
+    let n_requests: usize = args.get_parse_or("requests", 256);
+    let policy = match args.get_or("policy", "rr") {
+        "ll" => RoutingPolicy::LeastLoaded,
+        "affinity" => RoutingPolicy::StreamAffinity,
+        _ => RoutingPolicy::RoundRobin,
+    };
+    let artifacts = open_artifacts(args)?;
+    let engines = build_engines(&chip, &server_cfg, &artifacts)?;
     let input_dim = engines[0].input_dim();
     println!(
         "serving {n_requests} synthetic frames on {} x {} engine (batch {}, policy {:?})",
@@ -464,6 +511,93 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "accuracy {:.3} ({correct}/{got}), shed {shed}",
         correct as f64 / got.max(1) as f64
     );
+    Ok(())
+}
+
+/// Deterministic load generator against a freshly started server.
+///
+/// Content is seed-stable: the generator cycles through a bank of at
+/// most 1024 distinct digit frames, so any `--requests` count offers
+/// the same byte-identical traffic. Timing is wall-clock (that is the
+/// point of a load test); the exact offered/admitted/shed/malformed
+/// accounting identity still holds on every run.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let (chip, mut server_cfg) = load_configs(args)?;
+    apply_server_flags(args, &mut server_cfg)?;
+    let total: u64 = args.get_parse_or("requests", 1024);
+    let mode = if args.flag("closed") {
+        LoadMode::Closed { concurrency: args.get_parse_or("concurrency", 32) }
+    } else {
+        LoadMode::Open {
+            qps: args.get_parse_or("qps", 2000),
+            burst: args.get_parse_or("burst", 1),
+        }
+    };
+    let policy = match args.get_or("policy", "rr") {
+        "ll" => RoutingPolicy::LeastLoaded,
+        "affinity" => RoutingPolicy::StreamAffinity,
+        _ => RoutingPolicy::RoundRobin,
+    };
+    let artifacts = open_artifacts(args)?;
+    let engines = build_engines(&chip, &server_cfg, &artifacts)?;
+    let input_dim = engines[0].input_dim();
+    println!(
+        "loadgen: {total} frames, {mode:?}, {} x {} engine (batch {}, adaptive {})",
+        server_cfg.workers,
+        engines[0].name(),
+        server_cfg.batch,
+        server_cfg.adaptive
+    );
+    let server = EdgeServer::start(&server_cfg, engines, policy)?;
+
+    // Deterministic frame bank the generator cycles through.
+    let distinct = (total as usize).clamp(1, 1024);
+    let data = Dataset::digits(distinct, 12, 0x10ad);
+    let frames: Vec<Vec<f32>> = data
+        .images
+        .iter()
+        .map(|img| img.clone().reshape(&[input_dim]).data().to_vec())
+        .collect();
+    let spec = LoadSpec { mode, total, drain: std::time::Duration::from_secs(10) };
+
+    let report = if args.flag("wire") {
+        // Drive the validated ingest boundary with encoded wire bytes;
+        // the server scores each frame's QoS priority from --retain.
+        let params =
+            CodecParams::new(1, input_dim, server_cfg.sensor_bits, server_cfg.codec_bits)
+                .map_err(|e| anyhow::anyhow!("invalid frontend codec: {e}"))?;
+        let mut enc = FrameEncoder::new(params, Selection::All);
+        let wires: Vec<Vec<u8>> = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| enc.encode_wire(f, i as u64))
+            .collect();
+        loadgen::run(&server, &spec, |i| {
+            server.submit_wire((i % 4) as u32, &wires[i as usize % distinct]).map(|_| ())
+        })
+    } else {
+        loadgen::run(&server, &spec, |i| {
+            let frame = frames[i as usize % distinct].clone();
+            server.submit(InferenceRequest::new(i, (i % 4) as u32, frame))
+        })
+    };
+
+    // Score completed responses against the bank's labels; failure
+    // responses never score.
+    let mut correct = 0usize;
+    let mut scored = 0usize;
+    for r in &report.responses {
+        if r.error.is_none() {
+            if data.labels.get(r.id as usize % distinct).is_some_and(|&l| l == r.class) {
+                correct += 1;
+            }
+            scored += 1;
+        }
+    }
+    let snap = server.shutdown();
+    println!("{report}");
+    println!("{snap}");
+    println!("accuracy {:.3} ({correct}/{scored})", correct as f64 / scored.max(1) as f64);
     Ok(())
 }
 

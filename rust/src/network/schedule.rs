@@ -66,10 +66,12 @@ impl InterleaveSchedule {
         InterleaveSchedule { roles }
     }
 
+    /// Phases in one full rotation.
     pub fn phases(&self) -> usize {
         self.roles.len()
     }
 
+    /// What `array` does during `phase`.
     pub fn role(&self, phase: usize, array: usize) -> Role {
         self.roles[phase][array]
     }

@@ -44,6 +44,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Topology over `n_arrays` coupled arrays (panics if too few).
     pub fn new(n_arrays: usize, mode: CouplingMode) -> Self {
         assert!(n_arrays >= mode.group_size(), "not enough arrays for one coupling group");
         Topology { n_arrays, mode }
@@ -54,10 +55,12 @@ impl Topology {
         Topology::new(4, CouplingMode::NearestNeighbour)
     }
 
+    /// Arrays in the network.
     pub fn n_arrays(&self) -> usize {
         self.n_arrays
     }
 
+    /// The coupling mode.
     pub fn mode(&self) -> CouplingMode {
         self.mode
     }

@@ -68,6 +68,7 @@ pub struct BwhtLayer {
     ggamma: f32,
     /// Input quantizer range for the quantized/analog paths.
     pub in_quant_hi: f32,
+    /// Which execution path `forward_inference` takes.
     pub exec: BwhtExec,
     /// L1-style pull on T (the paper's Fig 6 "unique loss" driving T
     /// outward to widen the dead band): dL/dT −= t_reg each step.
@@ -90,7 +91,9 @@ pub struct BwhtLayer {
     /// (`AnalogEngine`): handed to the pool at `prepare_analog` so
     /// batch shards and pool plane lanes draw from one set of workers.
     executor: Option<Arc<Executor>>,
+    /// Early-termination accounting: coefficient columns processed.
     pub term_processed: u64,
+    /// Early-termination accounting: coefficient columns skipped.
     pub term_skipped: u64,
     /// Collaborative-digitization accounting accumulated across analog
     /// forwards (all zeros unless the exec mode carries a pool).
@@ -140,10 +143,12 @@ impl BwhtLayer {
         }
     }
 
+    /// The block layout (block size, block count).
     pub fn layout(&self) -> BwhtLayout {
         self.layout
     }
 
+    /// Per-coefficient soft thresholds T.
     pub fn thresholds(&self) -> &[f32] {
         &self.t
     }
@@ -154,14 +159,17 @@ impl BwhtLayer {
         self.t = t;
     }
 
+    /// The output scale gamma.
     pub fn gamma(&self) -> f32 {
         self.gamma
     }
 
+    /// Override the output scale gamma.
     pub fn set_gamma(&mut self, g: f32) {
         self.gamma = g;
     }
 
+    /// Switch the inference execution path.
     pub fn set_exec(&mut self, exec: BwhtExec) {
         self.exec = exec;
         self.analog = None;

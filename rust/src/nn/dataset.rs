@@ -19,9 +19,13 @@ use super::tensor::Tensor;
 /// A labelled image-classification dataset (CHW tensors).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// CHW image tensors.
     pub images: Vec<Tensor>,
+    /// Class label per image.
     pub labels: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
+    /// Square image side length.
     pub side: usize,
 }
 
@@ -155,10 +159,12 @@ impl Dataset {
         Dataset { images, labels, classes: 10, side }
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// True when the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }

@@ -82,7 +82,9 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 /// Fully connected layer `y = Wx + b`.
 #[derive(Clone)]
 pub struct Dense {
+    /// Input width.
     pub in_dim: usize,
+    /// Output width.
     pub out_dim: usize,
     w: Vec<f32>,
     b: Vec<f32>,
@@ -116,6 +118,7 @@ impl Dense {
         self.b = b;
     }
 
+    /// Kaiming-initialized dense layer.
     pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
         let std = init_std(in_dim);
         Dense {
@@ -228,9 +231,13 @@ impl Layer for Dense {
 /// 2-D convolution, CHW, stride 1, same padding, odd kernel.
 #[derive(Clone)]
 pub struct Conv2d {
+    /// Input channels.
     pub in_ch: usize,
+    /// Output channels.
     pub out_ch: usize,
+    /// Kernel side (odd).
     pub k: usize,
+    /// Spatial height x width the layer operates on.
     pub hw: (usize, usize),
     w: Vec<f32>, // [out_ch, in_ch, k, k]
     b: Vec<f32>,
@@ -242,6 +249,7 @@ pub struct Conv2d {
 }
 
 impl Conv2d {
+    /// Kaiming-initialized convolution.
     pub fn new(in_ch: usize, out_ch: usize, k: usize, hw: (usize, usize), rng: &mut Rng) -> Self {
         assert!(k % 2 == 1, "odd kernels only");
         let n = out_ch * in_ch * k * k;
@@ -380,6 +388,7 @@ pub struct Relu {
 }
 
 impl Relu {
+    /// Fresh ReLU (mask filled on forward).
     pub fn new() -> Self {
         Relu { mask: Vec::new() }
     }
@@ -436,6 +445,7 @@ pub struct LeakyRelu {
 }
 
 impl LeakyRelu {
+    /// Leaky ReLU with the given negative-side slope.
     pub fn new(slope: f32) -> Self {
         LeakyRelu { slope, mask: Vec::new() }
     }
@@ -495,6 +505,7 @@ pub struct BatchScale {
 }
 
 impl BatchScale {
+    /// Identity-initialized per-channel scale/shift over `ch` channels.
     pub fn new(ch: usize) -> Self {
         BatchScale {
             ch,
@@ -573,6 +584,7 @@ pub struct GlobalAvgPool {
 }
 
 impl GlobalAvgPool {
+    /// Fresh pool (dims captured on forward).
     pub fn new() -> Self {
         GlobalAvgPool { dims: (0, 0, 0) }
     }
@@ -636,6 +648,7 @@ pub struct AvgPool2d {
 }
 
 impl AvgPool2d {
+    /// Fresh 2x2 average pool (dims captured on forward).
     pub fn new() -> Self {
         AvgPool2d { dims: (0, 0, 0) }
     }
@@ -705,6 +718,7 @@ pub struct Flatten {
 }
 
 impl Flatten {
+    /// Fresh flatten (input shape captured on forward).
     pub fn new() -> Self {
         Flatten { shape: Vec::new() }
     }

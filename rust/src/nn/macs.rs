@@ -18,6 +18,7 @@ use crate::wht::BwhtLayout;
 /// One counted layer of a published architecture.
 #[derive(Debug, Clone)]
 pub struct LayerCount {
+    /// Layer label (architecture position).
     pub name: String,
     /// Trainable parameters (weights + biases; BN folded as 2/ch).
     pub params: usize,
@@ -27,7 +28,9 @@ pub struct LayerCount {
     pub replaceable: bool,
     /// Spatial positions (H·W) the layer runs at.
     pub spatial: usize,
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
 }
 
@@ -161,13 +164,16 @@ pub fn resnet20_table() -> Vec<LayerCount> {
 /// Aggregate accounting for a table, with and without BWHT replacement.
 #[derive(Debug, Clone, Copy)]
 pub struct CompressionSummary {
+    /// Parameters of the unmodified architecture.
     pub params_base: usize,
+    /// Parameters after replaceable mixers go BWHT.
     pub params_bwht: usize,
     /// Fraction of parameters removed (all layers).
     pub reduction_total: f64,
     /// Fraction removed counting feature extractor only (no classifier) —
     /// the basis closest to the paper's "87% for MobileNetV2".
     pub reduction_features: f64,
+    /// MACs of the unmodified architecture.
     pub macs_base: usize,
     /// MACs with BWHT executed as dense ±1 crossbar matvec.
     pub macs_bwht_dense: usize,

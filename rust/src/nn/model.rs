@@ -18,15 +18,18 @@ pub struct Sequential {
 }
 
 impl Sequential {
+    /// Empty layer stack.
     pub fn new() -> Self {
         Sequential { layers: Vec::new() }
     }
 
+    /// Append a layer.
     pub fn push(&mut self, l: Box<dyn Layer>) -> &mut Self {
         self.layers.push(l);
         self
     }
 
+    /// Training-mode forward through every layer.
     pub fn forward(&mut self, x: &Tensor) -> Tensor {
         let mut cur = x.clone();
         for l in &mut self.layers {
@@ -68,6 +71,7 @@ impl Sequential {
         cur
     }
 
+    /// Backpropagate the loss gradient through every layer.
     pub fn backward(&mut self, g: &Tensor) -> Tensor {
         let mut cur = g.clone();
         for l in self.layers.iter_mut().rev() {
@@ -76,24 +80,29 @@ impl Sequential {
         cur
     }
 
+    /// SGD step on every layer's accumulated gradients.
     pub fn step(&mut self, lr: f32, batch: usize) {
         for l in &mut self.layers {
             l.step(lr, batch);
         }
     }
 
+    /// Total trainable parameters.
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.param_count()).sum()
     }
 
+    /// Total multiply-accumulates per forward pass.
     pub fn mac_count(&self) -> usize {
         self.layers.iter().map(|l| l.mac_count()).sum()
     }
 
+    /// The layer stack.
     pub fn layers(&self) -> &[Box<dyn Layer>] {
         &self.layers
     }
 
+    /// Mutable layer stack.
     pub fn layers_mut(&mut self) -> &mut [Box<dyn Layer>] {
         &mut self.layers
     }
@@ -145,7 +154,9 @@ impl Clone for Sequential {
 /// Dense over channels via Conv2d with k=1… we use Conv2d k=1) or the
 /// parameter-free BWHT layer — the swap the paper studies in Fig 1(c).
 pub enum Mixer {
+    /// Trainable 1x1 convolution mixer.
     Conv1x1,
+    /// Parameter-free blockwise WHT mixer.
     Bwht,
 }
 

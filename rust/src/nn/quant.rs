@@ -9,12 +9,16 @@
 /// Affine quantization of `x ∈ [lo, hi]` onto `{0 … 2^bits − 1}`.
 #[derive(Debug, Clone, Copy)]
 pub struct UniformQuantizer {
+    /// Code width, 1..=16.
     pub bits: u8,
+    /// Bottom of the input range.
     pub lo: f32,
+    /// Top of the input range.
     pub hi: f32,
 }
 
 impl UniformQuantizer {
+    /// Quantizer over `[lo, hi]` at `bits` (panics on a bad range).
     pub fn new(bits: u8, lo: f32, hi: f32) -> Self {
         assert!((1..=16).contains(&bits) && hi > lo);
         UniformQuantizer { bits, lo, hi }
@@ -26,6 +30,7 @@ impl UniformQuantizer {
     }
 
     #[inline]
+    /// Number of code levels, `2^bits`.
     pub fn levels(&self) -> u32 {
         1u32 << self.bits
     }

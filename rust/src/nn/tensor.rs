@@ -11,11 +11,13 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap a flat buffer (length must match the shape's product).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
@@ -27,26 +29,31 @@ impl Tensor {
     }
 
     #[inline]
+    /// Dimension sizes.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
     #[inline]
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
     #[inline]
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
     #[inline]
+    /// Flat row-major view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
     #[inline]
+    /// Mutable flat row-major view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
@@ -66,6 +73,7 @@ impl Tensor {
     }
 
     #[inline]
+    /// Write one CHW element.
     pub fn set3(&mut self, c: usize, h: usize, w: usize, v: f32) {
         let (_, hh, ww) = self.dims3();
         self.data[(c * hh + h) * ww + w] = v;
@@ -77,6 +85,7 @@ impl Tensor {
         (self.shape[0], self.shape[1], self.shape[2])
     }
 
+    /// Index of the largest element (0 when empty).
     pub fn argmax(&self) -> usize {
         self.data
             .iter()
@@ -86,6 +95,7 @@ impl Tensor {
             .unwrap_or(0)
     }
 
+    /// Elementwise map, consuming self.
     pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
         for v in &mut self.data {
             *v = f(*v);

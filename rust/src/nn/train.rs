@@ -25,9 +25,13 @@ pub fn softmax_ce(logits: &Tensor, label: usize) -> (f32, Tensor) {
 /// Training hyper-parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct TrainConfig {
+    /// Full passes over the training split.
     pub epochs: usize,
+    /// Initial learning rate.
     pub lr: f32,
+    /// Minibatch size.
     pub batch: usize,
+    /// Shuffle/init seed.
     pub seed: u64,
     /// LR decay factor applied each epoch.
     pub lr_decay: f32,
@@ -42,8 +46,11 @@ impl Default for TrainConfig {
 /// Per-epoch training record.
 #[derive(Debug, Clone)]
 pub struct TrainLog {
+    /// Mean training loss per epoch.
     pub epoch_loss: Vec<f32>,
+    /// Training-split accuracy per epoch.
     pub epoch_train_acc: Vec<f64>,
+    /// Test-split accuracy per epoch.
     pub epoch_test_acc: Vec<f64>,
 }
 

@@ -5,6 +5,7 @@ use crate::cim::{BitVec, Crossbar, CrossbarConfig};
 use crate::util::stats::{entropy_bits, Histogram};
 use crate::util::Rng;
 
+/// Render Fig 10: MAV distribution statistics and entropy.
 pub fn generate() -> String {
     let mut out = String::new();
     let bits = 5u8;

@@ -6,6 +6,7 @@ use crate::adc::{Adc, ImmersedAdc, ImmersedMode};
 use crate::analog::NoiseModel;
 use crate::util::Rng;
 
+/// Render Fig 12: collaborative-ADC linearity (DNL/INL).
 pub fn generate() -> String {
     let mut out = String::new();
     let bits = 5u8;

@@ -8,6 +8,7 @@ use crate::energy::{adc_area_um2, adc_latency_cycles, AdcStyle};
 
 use super::support::{analog_accuracy, trained_digit_mlp};
 
+/// Render Fig 13: end-to-end analog accuracy vs ADC configuration.
 pub fn generate() -> String {
     let mut out = String::new();
 

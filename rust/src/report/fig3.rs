@@ -4,6 +4,7 @@
 use crate::analog::timing::Phase;
 use crate::analog::{OperatingPoint, PhaseTimer, SignalTrace, SupplyModel};
 
+/// Render Fig 3: per-phase settle timing across operating points.
 pub fn generate() -> String {
     let op = OperatingPoint::crossbar_nominal();
     let timer = PhaseTimer::new(SupplyModel::default(), op);

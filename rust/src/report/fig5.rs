@@ -8,6 +8,7 @@ use crate::util::Rng;
 
 use super::support::digit_data;
 
+/// Render Fig 5: digit-classification accuracy vs input quantization.
 pub fn generate() -> String {
     let mut out = String::new();
     out.push_str("Fig 5 — training against 1-bit product-sum quantization\n");

@@ -7,6 +7,7 @@ use crate::util::stats::Histogram;
 
 use super::support::{analog_accuracy, trained_digit_mlp};
 
+/// Render Fig 6: soft-threshold (unique-loss) training sweep.
 pub fn generate() -> String {
     let mut out = String::new();
     out.push_str("Fig 6 — early termination via soft-threshold sparsity\n\n");

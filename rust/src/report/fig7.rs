@@ -14,6 +14,7 @@ fn power_uw(rows: usize, cols: usize, op: OperatingPoint) -> f64 {
     xb.power_uw()
 }
 
+/// Render Fig 7: crossbar power across supply/frequency points.
 pub fn generate() -> String {
     let mut out = String::new();
     out.push_str("Fig 7 — CIM architecture sweeps (digit workload through the analog path)\n\n");

@@ -4,6 +4,7 @@ use crate::adc::{Adc, ImmersedAdc, ImmersedMode};
 use crate::analog::NoiseModel;
 use crate::util::Rng;
 
+/// Render Fig 8: comparator offset/noise characterization.
 pub fn generate() -> String {
     let mut out = String::new();
     out.push_str("Fig 8 — SRAM-immersed SAR conversion (left array computes MAV,\n");

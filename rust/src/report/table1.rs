@@ -6,6 +6,7 @@ use crate::analog::NoiseModel;
 use crate::energy::{adc_area_um2, adc_energy_pj, AdcStyle};
 use crate::util::Rng;
 
+/// Render the paper's Table I: per-style ADC area/energy at matched bits.
 pub fn generate() -> String {
     let bits = 5u8;
     let mut out = String::new();

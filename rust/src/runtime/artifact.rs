@@ -10,11 +10,17 @@ use std::path::{Path, PathBuf};
 /// Parsed `model.manifest.txt`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Compiled batch dimension of the HLO executables.
     pub batch: usize,
+    /// Flattened input dimension per sample.
     pub input: usize,
+    /// Number of output classes.
     pub classes: usize,
+    /// Hidden width of the reference MLP.
     pub hidden: usize,
+    /// Input quantization bit width the model was trained at.
     pub input_bits: u8,
+    /// Total `f32` count of the flat weight blob.
     pub total_f32: usize,
     /// (name, shape, offset, len) per parameter, manifest order.
     pub params: Vec<(String, Vec<usize>, usize, usize)>,
@@ -53,6 +59,7 @@ fn scan_int_list(text: &str, key: &str, from: usize) -> Option<(Vec<usize>, usiz
 }
 
 impl Manifest {
+    /// Parse the `key: value` manifest text (loud on missing keys).
     pub fn parse(text: &str) -> Result<Manifest> {
         let get = |k: &str| -> Result<i64> {
             scan_int(text, k, 0).map(|(v, _)| v).with_context(|| format!("manifest key {k}"))
@@ -80,6 +87,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a parameter's (name, shape, offset, len) entry.
     pub fn param(&self, name: &str) -> Option<&(String, Vec<usize>, usize, usize)> {
         self.params.iter().find(|(n, _, _, _)| n == name)
     }
@@ -88,10 +96,12 @@ impl Manifest {
 /// An artifacts directory with typed accessors.
 #[derive(Debug, Clone)]
 pub struct Artifacts {
+    /// Directory holding the HLO text + weight blobs.
     pub dir: PathBuf,
 }
 
 impl Artifacts {
+    /// Open an artifacts directory, checking the manifest exists.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if !dir.join("model.manifest.txt").exists() {
@@ -108,11 +118,13 @@ impl Artifacts {
         })
     }
 
+    /// Read and parse `model.manifest.txt`.
     pub fn manifest(&self) -> Result<Manifest> {
         let text = std::fs::read_to_string(self.dir.join("model.manifest.txt"))?;
         Manifest::parse(&text)
     }
 
+    /// Path of the `<name>.hlo.txt` HLO text file.
     pub fn hlo_path(&self, name: &str) -> String {
         self.dir.join(format!("{name}.hlo.txt")).to_string_lossy().into_owned()
     }
@@ -129,18 +141,22 @@ impl Artifacts {
             .collect())
     }
 
+    /// The flat little-endian `f32` weight blob.
     pub fn weights(&self) -> Result<Vec<f32>> {
         self.read_f32("model.weights.bin")
     }
 
+    /// The held-out conformance input batch.
     pub fn test_batch(&self) -> Result<Vec<f32>> {
         self.read_f32("test_batch.bin")
     }
 
+    /// Reference logits the JAX model produced for [`Artifacts::test_batch`].
     pub fn expected_logits(&self) -> Result<Vec<f32>> {
         self.read_f32("expected_logits.bin")
     }
 
+    /// Labels for the conformance batch, one per line.
     pub fn test_labels(&self) -> Result<Vec<usize>> {
         let text = std::fs::read_to_string(self.dir.join("test_labels.txt"))?;
         Ok(text.split_whitespace().filter_map(|t| t.parse().ok()).collect())

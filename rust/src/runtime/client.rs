@@ -14,6 +14,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -35,6 +36,7 @@ pub struct LoadedModel {
 }
 
 impl LoadedModel {
+    /// Source HLO path the executable was compiled from.
     pub fn path(&self) -> &str {
         &self.path
     }

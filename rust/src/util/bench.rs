@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
     /// Median time per iteration.
     pub median: Duration,
@@ -23,6 +24,7 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Iterations per second at the median.
     pub fn per_sec(&self) -> f64 {
         1.0 / self.median.as_secs_f64()
     }
@@ -131,11 +133,13 @@ pub struct BenchSet {
 }
 
 impl BenchSet {
+    /// Start a titled group (prints the header).
     pub fn new(title: &str) -> Self {
         println!("\n=== {title} ===");
         BenchSet { title: title.to_string(), results: Vec::new() }
     }
 
+    /// Bench one closure and record its measurement.
     pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
         let m = bench_fn(name, f);
         println!("{m}");
@@ -143,10 +147,12 @@ impl BenchSet {
         self.results.last().unwrap()
     }
 
+    /// Measurements recorded so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
 
+    /// The group title.
     pub fn title(&self) -> &str {
         &self.title
     }

@@ -49,26 +49,32 @@ impl Args {
         out
     }
 
+    /// True when `--name` was passed bare.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--key value`.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(String::as_str)
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parsed value of `--key` (None on absence or parse failure).
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
         self.get(key).and_then(|v| v.parse().ok())
     }
 
+    /// Parsed value of `--key`, or `default`.
     pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.get_parse(key).unwrap_or(default)
     }
 
+    /// Non-flag arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

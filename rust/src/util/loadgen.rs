@@ -1,0 +1,360 @@
+//! Deterministic load generator for the serving path (`adcim loadgen`).
+//!
+//! Two classic modes drive an [`EdgeServer`]:
+//!
+//! - **Open loop** (`LoadMode::Open`): arrivals are paced at a target
+//!   QPS regardless of how the server keeps up — the honest way to
+//!   measure overload, shedding, and tail latency, because a slow
+//!   server cannot push back on the arrival process (coordinated
+//!   omission). `burst > 1` groups arrivals into back-to-back bursts
+//!   at the same average rate.
+//! - **Closed loop** (`LoadMode::Closed`): a fixed number of in-flight
+//!   requests; each response immediately triggers the next submit.
+//!   Throughput-seeking and self-clocking — the right mode for "how
+//!   fast can it go", useless for tail-latency-under-overload claims.
+//!
+//! Frame *content* is whatever the caller's `submit_one` closure
+//! builds (seed it for bit-reproducible runs); only arrival *timing*
+//! is wall-clock. Shed and malformed submissions are counted, never
+//! retried, so `offered = admitted + shed + malformed` holds exactly
+//! and the server's own per-class QoS counters can be checked against
+//! the report.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{EdgeServer, InferenceResponse, SubmitError};
+
+/// Arrival process for [`run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Paced arrivals at `qps` frames/second in groups of `burst`
+    /// (1 = smooth), independent of server progress.
+    Open {
+        /// Target offered rate, frames per second (≥ 1).
+        qps: u64,
+        /// Arrivals grouped back-to-back per pacing tick (≥ 1).
+        burst: usize,
+    },
+    /// `concurrency` requests in flight; a response triggers the next
+    /// submit.
+    Closed {
+        /// In-flight window size (≥ 1).
+        concurrency: usize,
+    },
+}
+
+/// One load-generation run.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Arrival process.
+    pub mode: LoadMode,
+    /// Total frames to offer.
+    pub total: u64,
+    /// How long to wait for in-flight responses after the last submit
+    /// (and per blocking receive in closed mode) before giving up.
+    pub drain: Duration,
+}
+
+/// What a [`run`] measured. `offered = admitted + shed + malformed`
+/// holds exactly; `completed` counts responses received (served +
+/// degraded) and can fall short of `admitted` only if the drain window
+/// expired.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Frames submitted to the server.
+    pub offered: u64,
+    /// Frames past admission (a response will arrive for each).
+    pub admitted: u64,
+    /// Frames refused by graduated admission (`QueueFull`).
+    pub shed: u64,
+    /// Wire frames refused by ingest validation (`Malformed`; only
+    /// nonzero when the submit closure drives `submit_wire`).
+    pub malformed: u64,
+    /// Responses received within the drain window.
+    pub completed: u64,
+    /// Responses that were failure answers (degraded), not logits.
+    pub degraded: u64,
+    /// Every response received, submission order not guaranteed.
+    pub responses: Vec<InferenceResponse>,
+    /// Wall clock from first submit to last response (or drain expiry).
+    pub wall: Duration,
+}
+
+impl LoadReport {
+    /// Completions per wall-clock second.
+    pub fn throughput_per_s(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.completed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "offered={} admitted={} shed={} malformed={} completed={} degraded={} \
+             wall={:.3}s rate={:.0}/s",
+            self.offered,
+            self.admitted,
+            self.shed,
+            self.malformed,
+            self.completed,
+            self.degraded,
+            self.wall.as_secs_f64(),
+            self.throughput_per_s()
+        )
+    }
+}
+
+/// Drive `server` with the arrival process in `spec`. `submit_one(i)`
+/// submits the i-th frame (0-based) — typically a closure over
+/// [`EdgeServer::submit`] or [`EdgeServer::submit_wire`] with seeded
+/// deterministic content; only arrival timing is wall-clock.
+pub fn run(
+    server: &EdgeServer,
+    spec: &LoadSpec,
+    mut submit_one: impl FnMut(u64) -> Result<(), SubmitError>,
+) -> LoadReport {
+    let start = Instant::now();
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    let mut malformed = 0u64;
+    let mut responses: Vec<InferenceResponse> = Vec::new();
+    let mut offered = 0u64;
+
+    // Returns false only when the server is shutting down (the run
+    // cannot make progress); sheds and malformed frames are counted
+    // and the offer process moves on.
+    let mut submit = |i: u64, admitted: &mut u64, shed: &mut u64, malformed: &mut u64| -> bool {
+        match submit_one(i) {
+            Ok(()) => {
+                *admitted += 1;
+                true
+            }
+            Err(SubmitError::QueueFull) => {
+                *shed += 1;
+                true
+            }
+            Err(SubmitError::Malformed(_)) => {
+                *malformed += 1;
+                true
+            }
+            Err(SubmitError::Closed) => false,
+        }
+    };
+
+    match spec.mode {
+        LoadMode::Open { qps, burst } => {
+            let qps = qps.max(1);
+            let burst = burst.max(1) as u64;
+            // One pacing tick delivers a whole burst; ticks are spaced
+            // so the average rate stays `qps`.
+            let tick = Duration::from_nanos(burst.saturating_mul(1_000_000_000) / qps);
+            let mut next = start;
+            'offer: while offered < spec.total {
+                let now = Instant::now();
+                if next > now {
+                    std::thread::sleep(next - now);
+                }
+                for _ in 0..burst.min(spec.total - offered) {
+                    if !submit(offered, &mut admitted, &mut shed, &mut malformed) {
+                        break 'offer;
+                    }
+                    offered += 1;
+                }
+                next += tick;
+                // Opportunistic drain keeps the response channel short.
+                responses.extend(server.take_responses());
+            }
+        }
+        LoadMode::Closed { concurrency } => {
+            let concurrency = concurrency.max(1) as u64;
+            let mut in_flight = 0u64;
+            'closed: loop {
+                // Fill the window; only admitted frames occupy a slot
+                // (a shed frame is gone, the loop moves to the next).
+                while offered < spec.total && in_flight < concurrency {
+                    let before = admitted;
+                    if !submit(offered, &mut admitted, &mut shed, &mut malformed) {
+                        break 'closed;
+                    }
+                    offered += 1;
+                    if admitted > before {
+                        in_flight += 1;
+                    }
+                }
+                if in_flight == 0 {
+                    break;
+                }
+                match server.recv_response(spec.drain) {
+                    Some(r) => {
+                        responses.push(r);
+                        in_flight -= 1;
+                    }
+                    None => break 'closed, // stalled server: report what we have
+                }
+            }
+        }
+    }
+
+    // Drain whatever is still in flight.
+    let drain_deadline = Instant::now() + spec.drain;
+    while (responses.len() as u64) < admitted && Instant::now() < drain_deadline {
+        if let Some(r) = server.recv_response(Duration::from_millis(50)) {
+            responses.push(r);
+        }
+    }
+    responses.extend(server.take_responses());
+    responses.truncate(admitted as usize);
+
+    let degraded = responses.iter().filter(|r| r.error.is_some()).count() as u64;
+    LoadReport {
+        offered,
+        admitted,
+        shed,
+        malformed,
+        completed: responses.len() as u64,
+        degraded,
+        wall: start.elapsed(),
+        responses,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::{InferenceEngine, InferenceRequest, RoutingPolicy};
+
+    fn mock_server(queue_depth: usize, deadline_us: u64) -> EdgeServer {
+        let cfg = ServerConfig {
+            workers: 2,
+            batch: 8,
+            batch_deadline_us: deadline_us,
+            queue_depth,
+            ..Default::default()
+        };
+        let engines: Vec<Box<dyn InferenceEngine>> = (0..2)
+            .map(|_| {
+                Box::new(MockEngine {
+                    classes: 10,
+                    input: 4,
+                    delay: Duration::from_micros(50),
+                }) as Box<dyn InferenceEngine>
+            })
+            .collect();
+        EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap()
+    }
+
+    fn req(i: u64) -> InferenceRequest {
+        InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])
+    }
+
+    #[test]
+    fn closed_loop_serves_every_frame() {
+        let server = mock_server(256, 500);
+        let spec = LoadSpec {
+            mode: LoadMode::Closed { concurrency: 8 },
+            total: 64,
+            drain: Duration::from_secs(5),
+        };
+        let report = run(&server, &spec, |i| server.submit(req(i)));
+        assert_eq!(report.offered, 64);
+        assert_eq!(report.admitted, 64, "closed loop under depth never sheds");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.completed, 64);
+        assert_eq!(report.degraded, 0);
+        assert_eq!(report.offered, report.admitted + report.shed);
+        // Content determinism: every response classifies its own id.
+        for r in &report.responses {
+            assert_eq!(r.class, (r.id % 10) as usize);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn open_loop_offers_everything_and_accounts_exactly() {
+        let server = mock_server(256, 500);
+        let spec = LoadSpec {
+            // Fast but paced: 64 frames in bursts of 16 at 50k qps.
+            mode: LoadMode::Open { qps: 50_000, burst: 16 },
+            total: 64,
+            drain: Duration::from_secs(5),
+        };
+        let report = run(&server, &spec, |i| server.submit(req(i)));
+        assert_eq!(report.offered, 64);
+        assert_eq!(report.offered, report.admitted + report.shed);
+        assert_eq!(report.completed, report.admitted);
+        let line = format!("{report}");
+        assert!(line.contains("offered=64"), "{line}");
+        server.shutdown();
+    }
+
+    /// An open loop into a tiny queue with a stalled batcher sheds —
+    /// and the report's accounting identity still holds exactly.
+    #[test]
+    fn open_loop_overload_sheds_exactly() {
+        // Long deadline + big batch: nothing completes during the
+        // offer phase, so the queue depth is a pure function of the
+        // submission sequence.
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 64,
+            batch_deadline_us: 500_000,
+            queue_depth: 8,
+            ..Default::default()
+        };
+        let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(MockEngine {
+            classes: 10,
+            input: 4,
+            delay: Duration::from_micros(50),
+        })];
+        let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+        let spec = LoadSpec {
+            mode: LoadMode::Open { qps: 1_000_000, burst: 32 },
+            total: 32,
+            drain: Duration::from_secs(5),
+        };
+        let report = run(&server, &spec, |i| server.submit(req(i)));
+        assert_eq!(report.offered, 32);
+        assert_eq!(report.admitted, 8, "exactly queue_depth admitted");
+        assert_eq!(report.shed, 24);
+        assert_eq!(report.completed, 8, "admitted frames still answer after the flush");
+        server.shutdown();
+    }
+
+    /// The closure can drive `submit_wire`: malformed bytes are counted
+    /// separately and the accounting identity still closes.
+    #[test]
+    fn wire_closure_counts_malformed() {
+        use crate::frontend::codec::{CodecParams, LOSSLESS};
+        use crate::frontend::encoder::{FrameEncoder, Selection};
+        let server = mock_server(256, 500);
+        let params = CodecParams::new(1, 4, 8, LOSSLESS).unwrap();
+        let mut enc = FrameEncoder::new(params, Selection::All);
+        let wires: Vec<Vec<u8>> =
+            (0..8u64).map(|i| enc.encode_wire(&[(i % 2) as f32, 0.5, 0.25, 0.75], i)).collect();
+        let spec = LoadSpec {
+            mode: LoadMode::Open { qps: 100_000, burst: 4 },
+            total: 8,
+            drain: Duration::from_secs(5),
+        };
+        // Every odd frame is truncated garbage.
+        let report = run(&server, &spec, |i| {
+            let bytes = &wires[i as usize];
+            let bytes = if i % 2 == 1 { &bytes[..bytes.len() - 2] } else { &bytes[..] };
+            server.submit_wire(0, bytes).map(|_| ())
+        });
+        assert_eq!(report.offered, 8);
+        assert_eq!(report.malformed, 4);
+        assert_eq!(report.admitted, 4);
+        assert_eq!(report.offered, report.admitted + report.shed + report.malformed);
+        assert_eq!(report.completed, 4);
+        server.shutdown();
+    }
+}

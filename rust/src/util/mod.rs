@@ -22,10 +22,15 @@
 //! - [`prop`] — seeded randomized-property driver (replaces `proptest`):
 //!   runs a closure over a few hundred generated cases and reports the
 //!   failing seed for replay.
+//! - [`loadgen`] — deterministic open/closed-loop load generator for
+//!   the serving path (replaces `wrk`-style external harnesses): paced
+//!   QPS with bursts or a fixed in-flight window, exact
+//!   offered/admitted/shed accounting.
 
 pub mod bench;
 pub mod cli;
 pub mod executor;
+pub mod loadgen;
 pub mod prop;
 pub mod rng;
 pub mod stats;

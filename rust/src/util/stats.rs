@@ -14,10 +14,12 @@ pub struct Moments {
 }
 
 impl Moments {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Moments { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -27,10 +29,12 @@ impl Moments {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -44,14 +48,17 @@ impl Moments {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -79,11 +86,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Uniform-bin histogram over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], total: 0 }
     }
 
+    /// Count one sample (out-of-range clamps to the edge bins).
     pub fn push(&mut self, x: f64) {
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -92,10 +101,12 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Per-bin counts.
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }
 
+    /// Total samples counted.
     pub fn total(&self) -> u64 {
         self.total
     }

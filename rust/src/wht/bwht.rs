@@ -61,6 +61,7 @@ pub struct Bwht {
 }
 
 impl Bwht {
+    /// Transform for the given block layout.
     pub fn new(layout: BwhtLayout) -> Self {
         Bwht { layout }
     }
@@ -71,6 +72,7 @@ impl Bwht {
     }
 
     #[inline]
+    /// The block layout.
     pub fn layout(&self) -> BwhtLayout {
         self.layout
     }

@@ -1,0 +1,202 @@
+//! Serving-policy integration: graduated QoS admission + the load
+//! generator, end to end over the coordinator (ISSUE 8).
+//!
+//! Three layers of guarantee:
+//!
+//! 1. A randomized property pins the stateful [`AdmissionControl`] to
+//!    the pure [`admissible`] rule and the rule to priority/depth
+//!    monotonicity — together: the server never sheds a frame while
+//!    admitting a *lower-priority* frame at the same queue depth.
+//! 2. A deterministic overload trace through [`loadgen`] checks the
+//!    exact shed arithmetic and that every Keep-class (top-band) frame
+//!    is admitted and answered correctly while low-band traffic sheds.
+//! 3. An adaptive-vs-static A/B over identical traffic checks the
+//!    batching policy can never change per-sample results (the
+//!    lockstep-forward contract), `assert_eq!` on every logit.
+
+use std::time::Duration;
+
+use adcim::config::ServerConfig;
+use adcim::coordinator::engine::MockEngine;
+use adcim::coordinator::{
+    admissible, AdmissionControl, EdgeServer, InferenceEngine, InferenceRequest,
+    InferenceResponse, RoutingPolicy,
+};
+use adcim::prop_assert;
+use adcim::util::loadgen::{self, LoadMode, LoadSpec};
+use adcim::util::prop;
+
+fn mock_engines(n: usize, delay_us: u64) -> Vec<Box<dyn InferenceEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(MockEngine {
+                classes: 10,
+                input: 4,
+                delay: Duration::from_micros(delay_us),
+            }) as Box<dyn InferenceEngine>
+        })
+        .collect()
+}
+
+/// The pure rule is monotone in priority (at fixed depth) and
+/// anti-monotone in depth (at fixed priority): a shed frame implies
+/// every lower-priority frame at the same or deeper queue is also
+/// shed, so graduated shedding can never invert the QoS order.
+#[test]
+fn admissibility_never_inverts_qos_order() {
+    prop::check("admission-monotone", 512, |rng| {
+        let max_depth = 1 + (rng.next_u64() % 256) as usize;
+        let depth = (rng.next_u64() % (max_depth as u64 + 1)) as usize;
+        let hi = (rng.next_u64() % 256) as u8;
+        let lo = (rng.next_u64() % (hi as u64 + 1)) as u8;
+        if admissible(lo, depth, max_depth) {
+            prop_assert!(
+                admissible(hi, depth, max_depth),
+                "priority inversion: lo={lo} admitted, hi={hi} shed \
+                 at depth {depth}/{max_depth}"
+            );
+        }
+        if depth > 0 && !admissible(hi, depth - 1, max_depth) {
+            prop_assert!(
+                !admissible(hi, depth, max_depth),
+                "depth inversion: priority {hi} shed at {} but admitted at {depth} \
+                 (max {max_depth})",
+                depth - 1
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The stateful window behaves exactly as the pure rule predicts from
+/// the depth observed before each submission — random priority
+/// sequences with random interleaved releases.
+#[test]
+fn admission_control_matches_pure_rule_under_random_traffic() {
+    prop::check("admission-stateful", 256, |rng| {
+        let max_depth = 1 + (rng.next_u64() % 64) as usize;
+        let ac = AdmissionControl::new(max_depth);
+        let mut outstanding = 0usize;
+        for _ in 0..128 {
+            if outstanding > 0 && rng.next_u64() % 4 == 0 {
+                ac.release();
+                outstanding -= 1;
+                continue;
+            }
+            let priority = (rng.next_u64() % 256) as u8;
+            let depth = ac.depth();
+            let expect = admissible(priority, depth, max_depth);
+            let got = ac.admit_priority(priority);
+            prop_assert!(
+                got == expect,
+                "admit_priority({priority}) at depth {depth}/{max_depth}: \
+                 got {got}, pure rule says {expect}"
+            );
+            if got {
+                outstanding += 1;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic overload through the real server: a stalled batcher
+/// (huge batch, long deadline, one worker) makes the queue depth a
+/// pure function of the submission sequence, so the shed tally is
+/// exact. Alternating Keep-band (255) and low-band (60) priorities
+/// against `queue_depth` 16: the linear ramp starts at depth 8 and
+/// sheds exactly the low-band frames offered at depth ≥ 11
+/// (min-priority bar 96 > 60) — 5 of 20 — while every Keep frame
+/// admits and answers its own label.
+#[test]
+fn overload_sheds_low_band_exactly_and_keeps_keep_band() {
+    let cfg = ServerConfig {
+        workers: 1,
+        batch: 64,
+        batch_deadline_us: 500_000,
+        queue_depth: 16,
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, mock_engines(1, 50), RoutingPolicy::RoundRobin).unwrap();
+    let spec = LoadSpec {
+        mode: LoadMode::Open { qps: 1_000_000, burst: 20 },
+        total: 20,
+        drain: Duration::from_secs(10),
+    };
+    let report = loadgen::run(&server, &spec, |i| {
+        let priority = if i % 2 == 0 { 255 } else { 60 };
+        server.submit(
+            InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4]).with_priority(priority),
+        )
+    });
+
+    assert_eq!(report.offered, 20);
+    assert_eq!(report.admitted, 15, "10 Keep + 5 low-band before the ramp bites");
+    assert_eq!(report.shed, 5, "low-band frames offered at depth >= 11");
+    assert_eq!(report.offered, report.admitted + report.shed + report.malformed);
+    assert_eq!(report.completed, 15, "every admitted frame answers after the flush");
+    assert_eq!(report.degraded, 0);
+
+    // Keep-class accuracy preserved: every even (Keep-band) id is
+    // present and classifies its own label.
+    let mut keep_ids: Vec<u64> = report
+        .responses
+        .iter()
+        .filter(|r| r.id % 2 == 0)
+        .map(|r| r.id)
+        .collect();
+    keep_ids.sort_unstable();
+    assert_eq!(keep_ids, (0..20).step_by(2).collect::<Vec<u64>>());
+    for r in &report.responses {
+        assert_eq!(r.class, (r.id % 10) as usize, "wrong answer for frame {}", r.id);
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.qos_shed, [5, 0, 0, 0], "only class 0 sheds");
+    assert_eq!(snap.qos_admitted[3], 10, "every Keep-band frame admitted");
+    assert_eq!(snap.qos_admitted[0], 5);
+    assert_eq!(snap.rejected_queue_full, 5);
+}
+
+fn serve_identical_load(adaptive: bool) -> Vec<InferenceResponse> {
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: 8,
+        batch_deadline_us: 400,
+        adaptive,
+        p99_target_us: if adaptive { 50_000 } else { 0 },
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, mock_engines(2, 30), RoutingPolicy::RoundRobin).unwrap();
+    let spec = LoadSpec {
+        mode: LoadMode::Closed { concurrency: 8 },
+        total: 96,
+        drain: Duration::from_secs(10),
+    };
+    let report = loadgen::run(&server, &spec, |i| {
+        server.submit(InferenceRequest::new(i, (i % 4) as u32, vec![(i % 10) as f32; 4]))
+    });
+    assert_eq!(report.admitted, 96);
+    assert_eq!(report.completed, 96);
+    let mut responses = report.responses;
+    responses.sort_unstable_by_key(|r| r.id);
+    server.shutdown();
+    responses
+}
+
+/// Adaptive-vs-static A/B over byte-identical traffic: whatever batch
+/// compositions the two closers produce, per-sample outputs must be
+/// bit-for-bit equal — batching policy is a latency knob, never a
+/// results knob.
+#[test]
+fn adaptive_and_static_serving_produce_identical_logits() {
+    let static_rs = serve_identical_load(false);
+    let adaptive_rs = serve_identical_load(true);
+    assert_eq!(static_rs.len(), adaptive_rs.len());
+    for (s, a) in static_rs.iter().zip(&adaptive_rs) {
+        assert_eq!(s.id, a.id);
+        assert_eq!(s.class, a.class);
+        assert_eq!(s.logits, a.logits, "logit drift on frame {}", s.id);
+        assert!(s.error.is_none() && a.error.is_none());
+    }
+}
