@@ -404,6 +404,13 @@ pub struct CimArrayPool {
     mavs_produced: u64,
     mavs_digitized: u64,
     mavs_gated: u64,
+    /// Planes dispatched through any path (telemetry counter, folded
+    /// at the same submission-order merge points as `stats`).
+    planes_dispatched: u64,
+    /// Planes submitted through the fused deferred-accounting path
+    /// ([`CimArrayPool::process_plane_requests`]) — the cross-sample
+    /// fusion share of `planes_dispatched`.
+    planes_fused: u64,
     /// Per-plane ledger for the public begin/digitize/end API.
     converted: Vec<u8>,
     plane_open: bool,
@@ -492,6 +499,8 @@ impl CimArrayPool {
             mavs_produced: 0,
             mavs_digitized: 0,
             mavs_gated: 0,
+            planes_dispatched: 0,
+            planes_fused: 0,
             converted: Vec::new(),
             plane_open: false,
             group_scratch,
@@ -573,6 +582,8 @@ impl CimArrayPool {
         self.mavs_produced = 0;
         self.mavs_digitized = 0;
         self.mavs_gated = 0;
+        self.planes_dispatched = 0;
+        self.planes_fused = 0;
     }
 
     /// MAVs produced by compute-role arrays so far.
@@ -592,6 +603,18 @@ impl CimArrayPool {
     /// early termination had already pruned).
     pub fn mavs_gated(&self) -> u64 {
         self.mavs_gated
+    }
+
+    /// Planes dispatched so far, through any path (telemetry counter).
+    pub fn planes_dispatched(&self) -> u64 {
+        self.planes_dispatched
+    }
+
+    /// Planes submitted through the fused deferred-accounting path so
+    /// far — how much of [`CimArrayPool::planes_dispatched`] the
+    /// cross-sample fusion (`--fuse-batch`) actually carried.
+    pub fn planes_fused(&self) -> u64 {
+        self.planes_fused
     }
 
     /// Total crossbar (compute-side) energy across the pool (fJ).
@@ -644,6 +667,7 @@ impl CimArrayPool {
         self.mavs_produced += rows;
         self.mavs_digitized += res.conversions;
         self.mavs_gated += res.gated;
+        self.planes_dispatched += 1;
         self.stats.merge(res);
     }
 
@@ -770,6 +794,7 @@ impl CimArrayPool {
         &mut self,
         requests: Vec<PlaneRequest<'_>>,
     ) -> Vec<ConversionStats> {
+        self.planes_fused += requests.len() as u64;
         self.run_requests(requests)
     }
 

@@ -140,6 +140,17 @@ pub struct ServerConfig {
     /// (`--p99-target-us`). 0 disables the latency rule; the adaptive
     /// closer then only walks toward the histogram knee.
     pub p99_target_us: u64,
+    /// Record per-request stage spans and executor/pool runtime deltas
+    /// into the metrics (on by default; `--no-telemetry` turns the
+    /// sampling off — serving results are bit-identical either way).
+    pub telemetry: bool,
+    /// Periodic telemetry export cadence in milliseconds
+    /// (`--metrics-interval-ms`). 0 = no streaming exporter; the final
+    /// summary still prints.
+    pub metrics_interval_ms: u64,
+    /// Where the streaming exporter writes its JSON-lines snapshots
+    /// (`--metrics-out PATH`); empty = stderr.
+    pub metrics_out: String,
 }
 
 impl Default for ServerConfig {
@@ -167,6 +178,9 @@ impl Default for ServerConfig {
             channel_drop: 0.0,
             adaptive: false,
             p99_target_us: 0,
+            telemetry: true,
+            metrics_interval_ms: 0,
+            metrics_out: String::new(),
         }
     }
 }
@@ -251,6 +265,13 @@ impl ServerConfig {
                 .get_int("server", "p99_target_us")
                 .unwrap_or(d.p99_target_us as i64)
                 .max(0) as u64,
+            telemetry: t.get_bool("server", "telemetry").unwrap_or(d.telemetry),
+            // Negative cadences mean "exporter off" (0), not a wrap.
+            metrics_interval_ms: t
+                .get_int("server", "metrics_interval_ms")
+                .unwrap_or(d.metrics_interval_ms as i64)
+                .max(0) as u64,
+            metrics_out: t.get_str("server", "metrics_out").unwrap_or(d.metrics_out),
         }
     }
 }
@@ -351,6 +372,26 @@ mod tests {
         // to reject loudly at server startup.
         let t = TomlLite::parse("[server]\nchannel_ber = 1.5\n").unwrap();
         assert_eq!(ServerConfig::from_toml(&t).channel_ber, 1.5);
+    }
+
+    #[test]
+    fn from_toml_telemetry_settings() {
+        let t = TomlLite::parse(
+            "[server]\ntelemetry = false\nmetrics_interval_ms = 250\n\
+             metrics_out = \"/tmp/m.jsonl\"\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert!(!s.telemetry);
+        assert_eq!(s.metrics_interval_ms, 250);
+        assert_eq!(s.metrics_out, "/tmp/m.jsonl");
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert!(d.telemetry, "stage telemetry defaults on");
+        assert_eq!(d.metrics_interval_ms, 0, "streaming exporter defaults off");
+        assert_eq!(d.metrics_out, "", "empty sink path means stderr");
+        // Negative cadences mean "exporter off", not a wrapped huge value.
+        let t = TomlLite::parse("[server]\nmetrics_interval_ms = -100\n").unwrap();
+        assert_eq!(ServerConfig::from_toml(&t).metrics_interval_ms, 0);
     }
 
     #[test]

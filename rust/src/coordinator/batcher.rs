@@ -123,7 +123,14 @@ impl DynamicBatcher {
 
     fn seal(&mut self, now: Instant) -> Option<Batch> {
         self.oldest = None;
-        Some(Batch { requests: std::mem::take(&mut self.pending), sealed_at: now })
+        let mut requests = std::mem::take(&mut self.pending);
+        // Stage-span stamp, one clock read per sealed batch (the
+        // adaptive closer seals through this same core). Telemetry
+        // only: nothing downstream schedules on it.
+        for r in &mut requests {
+            r.trace.sealed = Some(now);
+        }
+        Some(Batch { requests, sealed_at: now })
     }
 }
 

@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::cim::{ConversionStats, CrossbarConfig, EarlyTermination, PoolSpec};
 use crate::frontend::codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
 use crate::nn::bwht_layer::BwhtExec;
+use crate::util::telemetry::RuntimeCounters;
 use crate::util::Executor;
 use crate::nn::model::bwht_mlp_from_weights;
 use crate::nn::{Sequential, Tensor};
@@ -58,6 +59,14 @@ pub trait InferenceEngine: Send {
     /// as `samples_fused`. Engines without a batched path report 0.
     fn samples_fused(&mut self) -> u64 {
         0
+    }
+    /// Cumulative executor/pool runtime counters (monotone): tasks the
+    /// engine's worker runtime ran, per-lane busy time, queue-depth
+    /// high water, and CiM-pool planes dispatched/fused. The serving
+    /// loop records per-batch deltas into [`super::Metrics`]. Engines
+    /// without a worker runtime report zeros.
+    fn runtime_counters(&mut self) -> RuntimeCounters {
+        RuntimeCounters::default()
     }
     /// Logits for a batch of raw/compressed frame payloads. The default
     /// decodes every compressed frame to its dense form and defers to
@@ -200,6 +209,10 @@ pub struct AnalogEngine {
     shard_term: (u64, u64),
     /// Conversion accounting merged back from worker-shard model clones.
     shard_conv: ConversionStats,
+    /// Pool plane counters (dispatched, fused) merged back from
+    /// worker-shard model clones, same baseline discipline as
+    /// `shard_conv`.
+    shard_planes: (u64, u64),
     /// Next sample stream offset, advanced per inferred sample so
     /// repeated `infer_batch` calls keep drawing fresh noise.
     next_stream: u64,
@@ -307,6 +320,11 @@ impl FoldedFirstLayer {
     }
 }
 
+/// What one worker shard hands back: its slice's logits plus the
+/// clone's termination / conversion / pool-plane counters (merged
+/// against the prototype baseline by the caller).
+type ShardOutcome = (Vec<Vec<f32>>, u64, u64, ConversionStats, (u64, u64));
+
 impl AnalogEngine {
     /// Build from artifacts, executing every BWHT layer on the analog
     /// crossbar simulator with `config` (noise, VDD, clock) and optional
@@ -336,6 +354,7 @@ impl AnalogEngine {
             executor: None,
             shard_term: (0, 0),
             shard_conv: ConversionStats::default(),
+            shard_planes: (0, 0),
             next_stream: 0,
             decode_scratch: DecodeScratch::default(),
             compressed_fast_path: true,
@@ -583,7 +602,7 @@ impl AnalogEngine {
         for (shard, shard_items) in items.chunks(chunk).enumerate() {
             let mut shard_model = model.clone();
             let first_stream = stream0 + (shard * chunk) as u64;
-            tasks.push(move || -> Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)> {
+            tasks.push(move || -> Result<ShardOutcome> {
                 let mut scratch = DecodeScratch::default();
                 let out = run(&mut shard_model, &mut scratch, shard_items, first_stream)?;
                 anyhow::ensure!(
@@ -595,36 +614,45 @@ impl AnalogEngine {
                 let mut processed = 0;
                 let mut skipped = 0;
                 let mut conv = ConversionStats::default();
+                let mut planes = (0u64, 0u64);
                 shard_model.for_each_bwht(|b| {
                     processed += b.term_processed;
                     skipped += b.term_skipped;
                     conv.merge(&b.conv_stats);
+                    let (pd, pf) = b.pool_planes();
+                    planes.0 += pd;
+                    planes.1 += pf;
                 });
-                Ok((out, processed, skipped, conv))
+                Ok((out, processed, skipped, conv, planes))
             });
         }
-        let shard_results: Vec<Result<(Vec<Vec<f32>>, u64, u64, ConversionStats)>> =
-            exec.run(tasks);
+        let shard_results: Vec<Result<ShardOutcome>> = exec.run(tasks);
 
         // Shard clones inherit this model's counters at clone time; only
         // the delta beyond that baseline is work the shard itself did.
-        let (base_p, base_s, base_conv) = {
+        let (base_p, base_s, base_conv, base_planes) = {
             let mut p = 0;
             let mut s = 0;
             let mut c = ConversionStats::default();
+            let mut pl = (0u64, 0u64);
             self.model.for_each_bwht(|b| {
                 p += b.term_processed;
                 s += b.term_skipped;
                 c.merge(&b.conv_stats);
+                let (pd, pf) = b.pool_planes();
+                pl.0 += pd;
+                pl.1 += pf;
             });
-            (p, s, c)
+            (p, s, c, pl)
         };
         let mut all = Vec::with_capacity(items.len());
         for res in shard_results {
-            let (logits, processed, skipped, conv) = res?;
+            let (logits, processed, skipped, conv, planes) = res?;
             self.shard_term.0 += processed - base_p;
             self.shard_term.1 += skipped - base_s;
             self.shard_conv.merge(&conv.minus(&base_conv));
+            self.shard_planes.0 += planes.0 - base_planes.0;
+            self.shard_planes.1 += planes.1 - base_planes.1;
             all.extend(logits);
         }
         if self.lockstep {
@@ -833,6 +861,25 @@ impl InferenceEngine for AnalogEngine {
 
     fn samples_fused(&mut self) -> u64 {
         self.samples_fused
+    }
+
+    /// Executor runtime counters plus CiM-pool plane accounting:
+    /// prototype-model layers plus the merged worker-shard deltas
+    /// (same baseline discipline as the conversion stats).
+    fn runtime_counters(&mut self) -> RuntimeCounters {
+        let mut rc = match &self.executor {
+            Some(e) => RuntimeCounters::from_executor(&e.stats()),
+            None => RuntimeCounters::default(),
+        };
+        let mut planes = self.shard_planes;
+        self.model.for_each_bwht(|b| {
+            let (pd, pf) = b.pool_planes();
+            planes.0 += pd;
+            planes.1 += pf;
+        });
+        rc.planes_dispatched = planes.0;
+        rc.planes_fused = planes.1;
+        rc
     }
 }
 

@@ -1,8 +1,16 @@
 //! Serving metrics: latency distribution, throughput, batch shapes,
-//! collaborative-digitization accounting (conversions, comparator
-//! decisions, cycles and fJ from the CiM array pool, per request), and
-//! the ingest frontend's deluge-triage counters
-//! ([`crate::frontend::FrontendStats`]).
+//! per-stage latency spans (queue-wait / batch-wait / service, from
+//! [`RequestTrace`](crate::util::telemetry::RequestTrace) stamps),
+//! executor/pool runtime counters, collaborative-digitization
+//! accounting (conversions, comparator decisions, cycles and fJ from
+//! the CiM array pool, per request), and the ingest frontend's
+//! deluge-triage counters ([`crate::frontend::FrontendStats`]).
+//!
+//! All latency distributions live in fixed-size log-bucketed
+//! histograms ([`LatencyHistogram`]) — constant memory however long
+//! the run, ≤1% percentile quantization — so the periodic telemetry
+//! exporter can snapshot at any cadence without the old
+//! clone-and-sort-every-latency cost.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -10,6 +18,9 @@ use std::time::Instant;
 use crate::cim::ConversionStats;
 use crate::frontend::FrontendStats;
 use crate::util::stats::Moments;
+use crate::util::telemetry::{
+    LatencyHistogram, RuntimeCounters, StageBreakdown, StageSample, StageStats,
+};
 
 /// Shared metrics (interior mutability; cheap enough off the hot loop).
 #[derive(Debug, Default)]
@@ -63,7 +74,19 @@ struct Inner {
     /// Samples the engines served through a genuinely multi-sample
     /// forward (lockstep batched walk / fixed-batch module call).
     samples_fused: u64,
-    latencies: Vec<f64>,
+    /// End-to-end latency distribution (bounded log-bucketed buckets;
+    /// the unbounded per-completion `Vec` this replaced grew without
+    /// limit and cost a clone+sort per snapshot).
+    latency_hist: LatencyHistogram,
+    /// Queue-wait stage distribution (admission → batch seal).
+    stage_queue: LatencyHistogram,
+    /// Batch-wait stage distribution (batch seal → engine start).
+    stage_batch: LatencyHistogram,
+    /// Service stage distribution (engine start → engine end).
+    stage_service: LatencyHistogram,
+    /// Accumulated executor/pool runtime counters (per-batch deltas
+    /// folded in by the serving workers).
+    runtime: RuntimeCounters,
     /// Rolling window of the most recent completion latencies (ring
     /// buffer) — the adaptive batcher's p99 feedback signal.
     recent_latency: Vec<f64>,
@@ -74,6 +97,10 @@ struct Inner {
     qos_shed: [u64; QOS_CLASSES],
     /// Latest adaptive-batcher knob state, if adaptive close is on.
     adaptive: Option<AdaptiveSnapshot>,
+    /// Start of the throughput window: the first recorded metrics
+    /// event of any kind — admission, shed, malformed reject, batch or
+    /// completion — so overload runs that shed before the first batch
+    /// seal still measure their full wall time.
     started: Option<Instant>,
     finished: Option<Instant>,
     conv: ConversionStats,
@@ -149,6 +176,26 @@ pub struct MetricsSnapshot {
     /// Ingest-side frontend triage counters (all zero when serving
     /// without `--frontend`).
     pub frontend: FrontendStats,
+    /// Per-stage latency breakdown (queue-wait / batch-wait / service)
+    /// with the conversion energy attributed to the service stage.
+    /// All-zero when telemetry is disabled or nothing resolved stages.
+    pub stages: StageBreakdown,
+    /// Executor/pool runtime counters accumulated across the serving
+    /// workers (tasks, per-lane busy-ns, queue high water, planes).
+    pub runtime: RuntimeCounters,
+    /// The full end-to-end latency histogram behind the percentile
+    /// fields — the exporter diffs successive snapshots of it for
+    /// per-interval percentiles.
+    pub latency_hist: LatencyHistogram,
+}
+
+/// Open the throughput window at the first metrics event of any kind
+/// (see the `Inner::started` docs — admission/shed/reject included, so
+/// shed-only overload traces don't overstate `throughput_per_s`).
+fn touch_started(g: &mut Inner) {
+    if g.started.is_none() {
+        g.started = Some(Instant::now());
+    }
 }
 
 impl Metrics {
@@ -160,9 +207,7 @@ impl Metrics {
     /// One dispatched batch of `batch_size` requests.
     pub fn record_batch(&self, batch_size: usize) {
         let mut g = self.inner.lock().unwrap();
-        if g.started.is_none() {
-            g.started = Some(Instant::now());
-        }
+        touch_started(&mut g);
         g.batch_size.push(batch_size as f64);
         g.batch_hist[batch_bucket(batch_size)] += 1;
     }
@@ -180,8 +225,9 @@ impl Metrics {
     /// One answered request with its end-to-end latency.
     pub fn record_completion(&self, latency_us: u64) {
         let mut g = self.inner.lock().unwrap();
+        touch_started(&mut g);
         g.latency_us.push(latency_us as f64);
-        g.latencies.push(latency_us as f64);
+        g.latency_hist.record(latency_us);
         if g.recent_latency.len() < RECENT_LATENCY_WINDOW {
             g.recent_latency.push(latency_us as f64);
         } else {
@@ -211,12 +257,34 @@ impl Metrics {
     /// `admitted = false` counts a graduated shed.
     pub fn record_qos(&self, class: usize, admitted: bool) {
         let mut g = self.inner.lock().unwrap();
+        touch_started(&mut g);
         let class = class.min(QOS_CLASSES - 1);
         if admitted {
             g.qos_admitted[class] += 1;
         } else {
             g.qos_shed[class] += 1;
         }
+    }
+
+    /// One request's resolved stage spans (queue-wait / batch-wait /
+    /// service). Workers call this per served response when telemetry
+    /// is enabled; the end-to-end latency is recorded separately by
+    /// [`Metrics::record_completion`].
+    pub fn record_stages(&self, s: StageSample) {
+        let mut g = self.inner.lock().unwrap();
+        g.stage_queue.record(s.queue_wait_us);
+        g.stage_batch.record(s.batch_wait_us);
+        g.stage_service.record(s.service_us);
+    }
+
+    /// Fold a per-batch delta of executor/pool runtime counters into
+    /// the totals (same delta discipline as
+    /// [`Metrics::record_conversions`]).
+    pub fn record_runtime(&self, delta: &RuntimeCounters) {
+        if delta.is_zero() && delta.exec_lanes == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().runtime.merge(delta);
     }
 
     /// Publish the adaptive batch closer's current knob state (the
@@ -232,12 +300,16 @@ impl Metrics {
 
     /// A request shed at the door because the admission queue was full.
     pub fn record_rejected_queue_full(&self) {
-        self.inner.lock().unwrap().rejected_queue_full += 1;
+        let mut g = self.inner.lock().unwrap();
+        touch_started(&mut g);
+        g.rejected_queue_full += 1;
     }
 
     /// A wire frame refused by the validated ingest boundary.
     pub fn record_rejected_malformed(&self) {
-        self.inner.lock().unwrap().rejected_malformed += 1;
+        let mut g = self.inner.lock().unwrap();
+        touch_started(&mut g);
+        g.rejected_malformed += 1;
     }
 
     /// A request whose engine panicked inside a worker; the unwind was
@@ -267,13 +339,11 @@ impl Metrics {
     /// Consistent copy of every counter for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
-        let mut sorted = g.latencies.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| {
-            if sorted.is_empty() {
+            if g.latency_hist.is_empty() {
                 0.0
             } else {
-                crate::util::stats::percentile_sorted(&sorted, p)
+                g.latency_hist.percentile(p) as f64
             }
         };
         let wall = match (g.started, g.finished) {
@@ -311,6 +381,13 @@ impl Metrics {
                 0.0
             },
             frontend: g.frontend.clone(),
+            stages: StageBreakdown {
+                queue_wait: StageStats::from_histogram(&g.stage_queue, 0.0),
+                batch_wait: StageStats::from_histogram(&g.stage_batch, 0.0),
+                service: StageStats::from_histogram(&g.stage_service, g.conv.energy_fj),
+            },
+            runtime: g.runtime.clone(),
+            latency_hist: g.latency_hist.clone(),
         }
     }
 }
@@ -387,6 +464,31 @@ impl std::fmt::Display for MetricsSnapshot {
         }
         if self.frontend.frames_in > 0 {
             write!(f, " {}", self.frontend)?;
+        }
+        if self.stages.service.count > 0 {
+            write!(
+                f,
+                " stages: queue p50={}µs p99={}µs | wait p50={}µs p99={}µs \
+                 | service p50={}µs p99={}µs",
+                self.stages.queue_wait.p50_us,
+                self.stages.queue_wait.p99_us,
+                self.stages.batch_wait.p50_us,
+                self.stages.batch_wait.p99_us,
+                self.stages.service.p50_us,
+                self.stages.service.p99_us
+            )?;
+        }
+        if !self.runtime.is_zero() {
+            write!(
+                f,
+                " exec: tasks={} batches={} hw={} lanes={} planes={}/{}",
+                self.runtime.exec_tasks,
+                self.runtime.exec_batches,
+                self.runtime.exec_queue_high_water,
+                self.runtime.exec_lanes,
+                self.runtime.planes_fused,
+                self.runtime.planes_dispatched
+            )?;
         }
         Ok(())
     }
@@ -595,5 +697,103 @@ mod tests {
         // Without frontend traffic the line stays clean.
         let empty = Metrics::new().snapshot();
         assert!(!format!("{empty}").contains("frontend"), "{empty}");
+    }
+
+    /// The throughput window must open at the *first* metrics event —
+    /// not the first dispatched batch — or a run that sheds under
+    /// overload before its first batch seal reports an inflated rate.
+    #[test]
+    fn throughput_window_opens_at_first_event_not_first_batch() {
+        let m = Metrics::new();
+        // Overload preamble: sheds arrive well before anything serves.
+        m.record_qos(0, false);
+        m.record_qos(1, false);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        m.record_batch(1);
+        m.record_completion(100);
+        let s = m.snapshot();
+        // One completion over ≥60ms of wall clock: if the window had
+        // only opened at record_batch, this would read as hundreds/s.
+        assert!(
+            s.throughput_per_s <= 1000.0 / 60.0 + 1.0,
+            "window must cover the shed-only preamble: {}/s",
+            s.throughput_per_s
+        );
+        assert!(s.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn stage_samples_reach_snapshot_and_display() {
+        use crate::util::telemetry::StageSample;
+        let m = Metrics::new();
+        for (q, b, sv) in [(100u64, 50u64, 200u64), (120, 60, 220), (80, 40, 180)] {
+            m.record_completion(q + b + sv);
+            m.record_stages(StageSample {
+                queue_wait_us: q,
+                batch_wait_us: b,
+                service_us: sv,
+                end_to_end_us: q + b + sv,
+            });
+        }
+        let s = m.snapshot();
+        assert_eq!(s.stages.queue_wait.count, 3);
+        assert_eq!(s.stages.batch_wait.count, 3);
+        assert_eq!(s.stages.service.count, 3);
+        assert!((s.stages.queue_wait.mean_us - 100.0).abs() < 1e-9);
+        assert_eq!(s.stages.service.p99_us, 220);
+        // Stage sums telescope under the end-to-end distribution.
+        let sum_means = s.stages.queue_wait.mean_us
+            + s.stages.batch_wait.mean_us
+            + s.stages.service.mean_us;
+        assert!(sum_means <= s.mean_latency_us + 1e-9);
+        // Service energy attribution follows the conversion totals.
+        m.record_conversions(&ConversionStats {
+            conversions: 4,
+            comparisons: 20,
+            cycles: 20,
+            energy_fj: 42.0,
+            gated: 0,
+        });
+        let s = m.snapshot();
+        assert!((s.stages.service.energy_fj - 42.0).abs() < 1e-9);
+        assert_eq!(s.stages.queue_wait.energy_fj, 0.0);
+        let line = format!("{s}");
+        assert!(line.contains("stages: queue"), "{line}");
+        // A run without stage samples keeps the line clean.
+        let empty = Metrics::new().snapshot();
+        assert!(!format!("{empty}").contains("stages"), "{empty}");
+    }
+
+    #[test]
+    fn runtime_counter_deltas_accumulate() {
+        use crate::util::telemetry::RuntimeCounters;
+        let m = Metrics::new();
+        m.record_completion(100);
+        m.record_runtime(&RuntimeCounters::default()); // no-op delta
+        let d = RuntimeCounters {
+            exec_tasks: 8,
+            exec_batches: 2,
+            exec_queue_high_water: 3,
+            exec_lanes: 2,
+            exec_busy_ns: vec![1_000, 2_000],
+            planes_dispatched: 16,
+            planes_fused: 12,
+        };
+        m.record_runtime(&d);
+        m.record_runtime(&d);
+        let s = m.snapshot();
+        assert_eq!(s.runtime.exec_tasks, 16);
+        assert_eq!(s.runtime.exec_batches, 4);
+        assert_eq!(s.runtime.exec_queue_high_water, 3, "high water maxes, not sums");
+        assert_eq!(s.runtime.exec_lanes, 2);
+        assert_eq!(s.runtime.exec_busy_ns, vec![2_000, 4_000]);
+        assert_eq!(s.runtime.planes_dispatched, 32);
+        assert_eq!(s.runtime.planes_fused, 24);
+        let line = format!("{s}");
+        assert!(line.contains("exec: tasks=16"), "{line}");
+        assert!(line.contains("planes=24/32"), "{line}");
+        // A run without runtime deltas keeps the line clean.
+        let empty = Metrics::new().snapshot();
+        assert!(!format!("{empty}").contains("exec:"), "{empty}");
     }
 }

@@ -32,13 +32,17 @@
 //!   (`AnalogEngine::with_pool`): crossbar MAVs digitized by neighbour
 //!   arrays, with per-conversion energy/cycles/comparisons merged back
 //!   from worker shards.
-//! - [`metrics`] — latency/throughput accounting plus the pool's
-//!   per-request digitization energy, the ingest frontend's
-//!   deluge-triage counters, per-QoS-class admitted/shed tallies, the
-//!   adaptive closer's live knob state, a rolling-window p99 (the
-//!   adaptive feedback signal), and the robustness tallies
+//! - [`metrics`] — latency/throughput accounting (bounded log-bucketed
+//!   histograms) plus the pool's per-request digitization energy, the
+//!   ingest frontend's deluge-triage counters, per-QoS-class
+//!   admitted/shed tallies, the adaptive closer's live knob state, a
+//!   rolling-window p99 (the adaptive feedback signal), the per-request
+//!   stage breakdown (queue-wait / batch-wait / service, from
+//!   [`crate::util::telemetry::RequestTrace`] stamps), executor/pool
+//!   runtime counters, and the robustness tallies
 //!   (rejected-at-the-door, malformed-wire, panic-isolated) in every
-//!   `MetricsSnapshot`.
+//!   `MetricsSnapshot` — which the streaming exporter
+//!   ([`crate::util::telemetry::TelemetrySink`]) samples on a cadence.
 //! - [`server`] — thread-per-worker serving loop tying it together;
 //!   workers record per-batch conversion deltas into the metrics.
 //!   Untrusted wire bytes enter only through `EdgeServer::submit_wire`

@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use crate::frontend::codec::{CodecError, CompressedFrame};
+use crate::util::telemetry::RequestTrace;
 
 /// What a request carries: a dense sensor frame, or a frontend-encoded
 /// [`CompressedFrame`] that travels the batcher/router/worker path
@@ -76,6 +77,10 @@ pub struct InferenceRequest {
     /// ([`crate::frontend::retention::RetentionPolicy::priority`]);
     /// raw frames default to [`TOP_PRIORITY`].
     pub priority: u8,
+    /// Stage-span timestamps stamped by the serving pipeline
+    /// (admission → batch seal → engine start/end). Pure telemetry:
+    /// never read by scheduling, batching, or the engines.
+    pub trace: RequestTrace,
 }
 
 impl InferenceRequest {
@@ -87,6 +92,7 @@ impl InferenceRequest {
             payload: FramePayload::Raw(image),
             submitted: Instant::now(),
             priority: TOP_PRIORITY,
+            trace: RequestTrace::default(),
         }
     }
 
@@ -98,6 +104,7 @@ impl InferenceRequest {
             payload: FramePayload::Compressed(frame),
             submitted: Instant::now(),
             priority: TOP_PRIORITY,
+            trace: RequestTrace::default(),
         }
     }
 

@@ -174,13 +174,14 @@ impl EdgeServer {
             worker_rxs.push(rx);
         }
         let router = Arc::new(Router::new(worker_senders, policy));
+        let telemetry = cfg.telemetry;
         for (wid, (engine, rx)) in engines.into_iter().zip(worker_rxs).enumerate() {
             let response_tx = response_tx.clone();
             let metrics = metrics.clone();
             let admission = admission.clone();
             let depth = router.depth_handle(wid);
             threads.push(std::thread::spawn(move || {
-                worker_loop(wid, engine, rx, response_tx, metrics, admission, depth)
+                worker_loop(wid, engine, rx, response_tx, metrics, admission, depth, telemetry)
             }));
         }
 
@@ -217,7 +218,7 @@ impl EdgeServer {
     /// built without an explicit priority carries
     /// [`super::request::TOP_PRIORITY`] and is only shed when the queue
     /// is completely full — the legacy admission behavior.
-    pub fn submit(&self, req: InferenceRequest) -> Result<(), SubmitError> {
+    pub fn submit(&self, mut req: InferenceRequest) -> Result<(), SubmitError> {
         let class = req.qos_class();
         if !self.admission.admit_priority(req.priority) {
             self.metrics.record_rejected_queue_full();
@@ -225,6 +226,9 @@ impl EdgeServer {
             return Err(SubmitError::QueueFull);
         }
         self.metrics.record_qos(class, true);
+        // First stage stamp: the request is past admission. A cheap
+        // clock read, never consulted by scheduling — always on.
+        req.trace.admitted = Some(Instant::now());
         if self.ingest_tx.send(Ingest::Req(req)).is_err() {
             self.admission.release();
             return Err(SubmitError::Closed);
@@ -267,6 +271,13 @@ impl EdgeServer {
     /// Live metrics handle (snapshot any time; workers keep writing).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Consistent counter snapshot of the live run — what the periodic
+    /// telemetry exporter ([`crate::util::telemetry::TelemetrySink`])
+    /// samples on its cadence.
+    pub fn metrics_snapshot(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
     }
 
     /// Fold an ingest-side frontend's counters into this server's
@@ -336,6 +347,7 @@ fn batcher_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
     mut engine: Box<dyn InferenceEngine>,
@@ -344,11 +356,13 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     admission: Arc<AdmissionControl>,
     depth: Arc<std::sync::atomic::AtomicUsize>,
+    telemetry: bool,
 ) {
-    // Engine conversion/fusion counters are cumulative; record
+    // Engine conversion/fusion/runtime counters are cumulative; record
     // per-batch deltas.
     let mut last_conv = engine.conversion_stats();
     let mut last_fused = engine.samples_fused();
+    let mut last_runtime = engine.runtime_counters();
     while let Ok(batch) = rx.recv() {
         depth.fetch_sub(1, Ordering::AcqRel);
         // Payloads travel as-is: compressed frames reach the engine
@@ -360,14 +374,24 @@ fn worker_loop(
         // keep serving. (AssertUnwindSafe: on panic the engine's only
         // cross-batch state we still read is the monotone conversion
         // counters, and a torn batch's partial counts are acceptable.)
+        let engine_start = Instant::now();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             engine.infer_payloads(&payloads)
         }));
+        let engine_end = Instant::now();
         match outcome {
             Ok(Ok(all_logits)) => {
                 for (req, logits) in batch.requests.iter().zip(all_logits) {
                     let resp = InferenceResponse::from_logits(req, logits, wid);
                     metrics.record_completion(resp.latency_us);
+                    if telemetry {
+                        let mut trace = req.trace;
+                        trace.engine_start = Some(engine_start);
+                        trace.engine_end = Some(engine_end);
+                        if let Some(s) = trace.stages(req.submitted, Instant::now()) {
+                            metrics.record_stages(s);
+                        }
+                    }
                     admission.release();
                     let _ = response_tx.send(resp);
                 }
@@ -395,6 +419,11 @@ fn worker_loop(
         let fused = engine.samples_fused();
         metrics.record_samples_fused(fused - last_fused);
         last_fused = fused;
+        if telemetry {
+            let rc = engine.runtime_counters();
+            metrics.record_runtime(&rc.minus(&last_runtime));
+            last_runtime = rc;
+        }
     }
 }
 
@@ -621,6 +650,49 @@ mod tests {
         assert_eq!(snap.qos_shed[3], 0, "Keep band never shed");
         assert_eq!(snap.qos_admitted[3], 13);
         assert!(format!("{snap}").contains("qos shed=[c0:1"), "{snap}");
+    }
+
+    /// Every served request resolves its stage spans, and the spans
+    /// telescope under the end-to-end latency; `--no-telemetry` leaves
+    /// the stage histograms empty without changing what serves.
+    #[test]
+    fn stage_spans_resolve_and_telescope() {
+        let cfg =
+            ServerConfig { workers: 2, batch: 4, batch_deadline_us: 500, ..Default::default() };
+        assert!(cfg.telemetry, "telemetry defaults on");
+        let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
+        for i in 0..16u64 {
+            assert!(server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4])).is_ok());
+        }
+        let mut got = 0;
+        let t0 = Instant::now();
+        while got < 16 && t0.elapsed() < Duration::from_secs(5) {
+            if server.recv_response(Duration::from_millis(100)).is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 16);
+        let snap = server.shutdown();
+        assert_eq!(snap.stages.queue_wait.count, 16);
+        assert_eq!(snap.stages.batch_wait.count, 16);
+        assert_eq!(snap.stages.service.count, 16);
+        // The mock sleeps 200µs per batch: service dominates and the
+        // stage means telescope under the end-to-end mean.
+        assert!(snap.stages.service.mean_us >= 150.0, "{:?}", snap.stages.service);
+        let sum = snap.stages.queue_wait.mean_us
+            + snap.stages.batch_wait.mean_us
+            + snap.stages.service.mean_us;
+        assert!(sum <= snap.mean_latency_us + 1e-6, "{sum} vs {}", snap.mean_latency_us);
+
+        // Telemetry off: same serving, no stage samples.
+        let cfg = ServerConfig { telemetry: false, ..cfg };
+        let server = EdgeServer::start(&cfg, mock(2), RoutingPolicy::RoundRobin).unwrap();
+        server.submit(InferenceRequest::new(0, 0, vec![3.0; 4])).unwrap();
+        let r = server.recv_response(Duration::from_secs(2)).expect("still serves");
+        assert_eq!(r.class, 3);
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.stages.service.count, 0, "no stage samples when telemetry is off");
     }
 
     #[test]

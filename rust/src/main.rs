@@ -30,6 +30,7 @@ use adcim::nn::{model, Tensor};
 use adcim::runtime::Artifacts;
 use adcim::util::cli::Args;
 use adcim::util::loadgen::{self, LoadMode, LoadSpec};
+use adcim::util::telemetry::TelemetrySink;
 use adcim::util::Rng;
 use anyhow::Result;
 
@@ -38,7 +39,7 @@ const VALUE_KEYS: &[&str] = &[
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
     "pool-threads", "topk", "codec-bits", "retain", "sensor-bits", "select", "frames",
     "channels", "side", "classes", "channel-ber", "channel-drop", "p99-target-us",
-    "qps", "burst", "concurrency",
+    "qps", "burst", "concurrency", "metrics-interval-ms", "metrics-out",
 ];
 
 /// Parse a numeric flag *loudly*: an unparseable value is an error, not
@@ -67,10 +68,11 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: adcim <serve|loadgen|compress|report|adc|info> [--config file.toml]\n\
                  \n\
-                 serve  --engine digital|analog --workers N --requests N [--policy rr|ll|affinity]\n\
+                 serve  --engine digital|analog|mock --workers N --requests N [--policy rr|ll|affinity]\n\
                  \x20       [--pool N --adc-mode sar|flash|hybrid --adc-bits B --asym]\n\
                  \x20       [--pool-threads T] [--fuse-batch]\n\
                  \x20       [--adaptive --p99-target-us T]\n\
+                 \x20       [--metrics-interval-ms MS [--metrics-out PATH]] [--no-telemetry]\n\
                  \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
                  \x20        --retain keep|triage]\n\
                  \x20       [--channel-ber P --channel-drop P]\n\
@@ -91,7 +93,13 @@ fn main() -> Result<()> {
                  \x20        --adaptive replaces the static batch closer with the\n\
                  \x20        self-tuning one: the effective batch size walks toward the\n\
                  \x20        served-histogram knee and the close deadline is retuned\n\
-                 \x20        against --p99-target-us, 0 = size-only tuning)\n\
+                 \x20        against --p99-target-us, 0 = size-only tuning;\n\
+                 \x20        --metrics-interval-ms streams one JSON-lines metrics snapshot\n\
+                 \x20        per interval to --metrics-out (stderr if omitted), with\n\
+                 \x20        per-stage queue-wait/batch-wait/service breakdowns;\n\
+                 \x20        --no-telemetry turns stage-span sampling off;\n\
+                 \x20        --engine mock serves a trivial artifact-free engine —\n\
+                 \x20        hermetic pipeline/telemetry exercise, no trained model)\n\
                  loadgen [--qps N --burst B | --closed --concurrency C] [--requests N]\n\
                  \x20       [--wire] [plus any serve engine/server flags above]\n\
                  \x20       (deterministic load generator against a freshly started\n\
@@ -99,7 +107,9 @@ fn main() -> Result<()> {
                  \x20        --burst-sized bursts without waiting on responses\n\
                  \x20        (coordinated-omission honest); --closed keeps --concurrency\n\
                  \x20        requests in flight instead; --wire drives the validated\n\
-                 \x20        ingest boundary with encoded frames, QoS-scored by --retain)\n\
+                 \x20        ingest boundary with encoded frames, QoS-scored by --retain;\n\
+                 \x20        with --metrics-interval-ms the run also prints a per-interval\n\
+                 \x20        timeline table from the streamed snapshots)\n\
                  compress [--frames N --channels C --side S --classes K --codec-bits B]\n\
                  \x20       (standalone frontend over a synthetic multispectral deluge:\n\
                  \x20        compression-ratio / retained-energy / accuracy tables)\n\
@@ -268,16 +278,45 @@ fn apply_server_flags(args: &Args, server_cfg: &mut ServerConfig) -> Result<()> 
     if let Some(p) = parse_flag::<f64>(args, "channel-drop")? {
         server_cfg.channel_drop = p;
     }
+    if args.flag("no-telemetry") {
+        server_cfg.telemetry = false;
+    }
+    if let Some(ms) = parse_flag::<u64>(args, "metrics-interval-ms")? {
+        server_cfg.metrics_interval_ms = ms;
+    }
+    if let Some(path) = args.get("metrics-out") {
+        server_cfg.metrics_out = path.to_string();
+    }
     Ok(())
 }
 
+/// Build the periodic JSONL exporter from the server config, if a
+/// cadence was asked for: `--metrics-out PATH` streams to the file
+/// (truncating), empty streams to stderr, so stdout tables stay clean.
+fn build_sink(server_cfg: &ServerConfig, label: &str) -> Result<Option<TelemetrySink>> {
+    if server_cfg.metrics_interval_ms == 0 {
+        return Ok(None);
+    }
+    let out: Box<dyn std::io::Write + Send> = if server_cfg.metrics_out.is_empty() {
+        Box::new(std::io::stderr())
+    } else {
+        Box::new(std::fs::File::create(&server_cfg.metrics_out).map_err(|e| {
+            anyhow::anyhow!("cannot open --metrics-out {}: {e}", server_cfg.metrics_out)
+        })?)
+    };
+    Ok(Some(TelemetrySink::new(out, server_cfg.metrics_interval_ms).with_label(label)))
+}
+
 /// Build one inference engine per configured worker (analog CiM, with
-/// an optional collaborative digitization pool, or the digital PJRT
-/// path when built with `--features xla`).
+/// an optional collaborative digitization pool; the digital PJRT path
+/// when built with `--features xla`; or `--engine mock` — a trivial
+/// artifact-free engine for hermetic pipeline/telemetry exercises).
+/// Artifacts are opened per-arm: the mock needs none, so CI can drive
+/// the full serving pipeline on a machine with no trained model.
 fn build_engines(
+    args: &Args,
     chip: &ChipConfig,
     server_cfg: &ServerConfig,
-    artifacts: &Artifacts,
 ) -> Result<Vec<Box<dyn InferenceEngine>>> {
     let pool = PoolSpec::parse(
         server_cfg.pool_arrays,
@@ -298,7 +337,17 @@ fn build_engines(
     }
     let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
     match server_cfg.engine.as_str() {
+        "mock" => {
+            for _ in 0..server_cfg.workers {
+                engines.push(Box::new(adcim::coordinator::engine::MockEngine {
+                    classes: 10,
+                    input: 64,
+                    delay: std::time::Duration::from_micros(200),
+                }));
+            }
+        }
         "analog" => {
+            let artifacts = open_artifacts(args)?;
             let cfg = CrossbarConfig { op: chip.operating_point(), ..Default::default() };
             if let Some(spec) = &pool {
                 println!(
@@ -314,7 +363,7 @@ fn build_engines(
             }
             for w in 0..server_cfg.workers {
                 engines.push(Box::new(
-                    AnalogEngine::load(artifacts, cfg, None, 4, w as u64)?
+                    AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?
                         .with_threads(server_cfg.engine_threads)
                         .with_pool(pool)?,
                 ));
@@ -322,13 +371,16 @@ fn build_engines(
         }
         _ => {
             #[cfg(feature = "xla")]
-            for _ in 0..server_cfg.workers {
-                engines.push(Box::new(DigitalEngine::load(artifacts, false)?));
+            {
+                let artifacts = open_artifacts(args)?;
+                for _ in 0..server_cfg.workers {
+                    engines.push(Box::new(DigitalEngine::load(&artifacts, false)?));
+                }
             }
             #[cfg(not(feature = "xla"))]
             anyhow::bail!(
                 "the digital (PJRT) engine requires building with --features xla; \
-                 this offline build serves with --engine analog"
+                 this offline build serves with --engine analog (or --engine mock)"
             );
         }
     }
@@ -351,8 +403,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "affinity" => RoutingPolicy::StreamAffinity,
         _ => RoutingPolicy::RoundRobin,
     };
-    let artifacts = open_artifacts(args)?;
-    let engines = build_engines(&chip, &server_cfg, &artifacts)?;
+    let engines = build_engines(args, &chip, &server_cfg)?;
     let input_dim = engines[0].input_dim();
     println!(
         "serving {n_requests} synthetic frames on {} x {} engine (batch {}, policy {:?})",
@@ -418,6 +469,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
+    let engine_name = engines[0].name();
+    let mut sink = build_sink(&server_cfg, engine_name)?;
     let server = EdgeServer::start(&server_cfg, engines, policy)?;
     // Synthetic sensor load: digit frames from 4 streams.
     let data = Dataset::digits(n_requests, 12, 0x5e4e);
@@ -486,10 +539,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // Collect. A corrupted-but-decodable frame may carry a hostile id,
     // so the label lookup is checked; failure responses never score.
+    // Short receive slices keep the telemetry sink on cadence; the run
+    // still gives up after 10 idle seconds like before.
     let mut correct = 0usize;
     let mut got = 0u64;
+    let mut last_progress = std::time::Instant::now();
     while got < submitted {
-        match server.recv_response(std::time::Duration::from_secs(10)) {
+        if let Some(s) = sink.as_mut() {
+            s.maybe_flush_with(|| server.metrics_snapshot());
+        }
+        match server.recv_response(std::time::Duration::from_millis(50)) {
             Some(r) => {
                 if r.error.is_none()
                     && data.labels.get(r.id as usize).is_some_and(|&l| l == r.class)
@@ -497,8 +556,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     correct += 1;
                 }
                 got += 1;
+                last_progress = std::time::Instant::now();
             }
-            None => break,
+            None => {
+                if last_progress.elapsed() >= std::time::Duration::from_secs(10) {
+                    break;
+                }
+            }
         }
     }
     if let Some(ch) = &channel {
@@ -506,6 +570,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let shed = server.shed_count();
     let snap = server.shutdown();
+    if let Some(s) = sink.as_mut() {
+        s.flush_final(&snap);
+    }
     println!("{snap}");
     println!(
         "accuracy {:.3} ({correct}/{got}), shed {shed}",
@@ -538,8 +605,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "affinity" => RoutingPolicy::StreamAffinity,
         _ => RoutingPolicy::RoundRobin,
     };
-    let artifacts = open_artifacts(args)?;
-    let engines = build_engines(&chip, &server_cfg, &artifacts)?;
+    let engines = build_engines(args, &chip, &server_cfg)?;
     let input_dim = engines[0].input_dim();
     println!(
         "loadgen: {total} frames, {mode:?}, {} x {} engine (batch {}, adaptive {})",
@@ -548,6 +614,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         server_cfg.batch,
         server_cfg.adaptive
     );
+    let engine_name = engines[0].name();
+    let mut sink = build_sink(&server_cfg, engine_name)?;
     let server = EdgeServer::start(&server_cfg, engines, policy)?;
 
     // Deterministic frame bank the generator cycles through.
@@ -572,14 +640,30 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .enumerate()
             .map(|(i, f)| enc.encode_wire(f, i as u64))
             .collect();
-        loadgen::run(&server, &spec, |i| {
-            server.submit_wire((i % 4) as u32, &wires[i as usize % distinct]).map(|_| ())
-        })
+        loadgen::run_with_tick(
+            &server,
+            &spec,
+            |i| server.submit_wire((i % 4) as u32, &wires[i as usize % distinct]).map(|_| ()),
+            || {
+                if let Some(s) = sink.as_mut() {
+                    s.maybe_flush_with(|| server.metrics_snapshot());
+                }
+            },
+        )
     } else {
-        loadgen::run(&server, &spec, |i| {
-            let frame = frames[i as usize % distinct].clone();
-            server.submit(InferenceRequest::new(i, (i % 4) as u32, frame))
-        })
+        loadgen::run_with_tick(
+            &server,
+            &spec,
+            |i| {
+                let frame = frames[i as usize % distinct].clone();
+                server.submit(InferenceRequest::new(i, (i % 4) as u32, frame))
+            },
+            || {
+                if let Some(s) = sink.as_mut() {
+                    s.maybe_flush_with(|| server.metrics_snapshot());
+                }
+            },
+        )
     };
 
     // Score completed responses against the bank's labels; failure
@@ -595,10 +679,35 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
     }
     let snap = server.shutdown();
+    if let Some(s) = sink.as_mut() {
+        s.flush_final(&snap);
+        print_timeline(s);
+    }
     println!("{report}");
     println!("{snap}");
     println!("accuracy {:.3} ({correct}/{scored})", correct as f64 / scored.max(1) as f64);
     Ok(())
+}
+
+/// Per-interval timeline table from the exporter's retained rows: what
+/// the run looked like over time, not just in aggregate — when the
+/// admission ramp started shedding, where the p99 spiked, how much the
+/// engines fused.
+fn print_timeline(sink: &TelemetrySink) {
+    let rows = sink.rows();
+    if rows.is_empty() {
+        return;
+    }
+    println!(
+        "{:>9} {:>8} {:>9} {:>6} {:>6} {:>10} {:>8} {:>6}",
+        "t_ms", "offered", "admitted", "shed", "bad", "completed", "p99_us", "fused"
+    );
+    for r in rows {
+        println!(
+            "{:>9.1} {:>8} {:>9} {:>6} {:>6} {:>10} {:>8} {:>6}",
+            r.t_ms, r.offered, r.admitted, r.shed, r.malformed, r.completed, r.p99_us, r.fused
+        );
+    }
 }
 
 /// Standalone frontend demo: encode a synthetic multispectral deluge at

@@ -216,6 +216,18 @@ impl BwhtLayer {
         }
     }
 
+    /// Telemetry read of this layer's pool plane counters:
+    /// `(planes_dispatched, planes_fused)`, zeros when the layer has no
+    /// built pool. Serving engines aggregate this across layers (and
+    /// worker-shard clones, delta-merged like `conv_stats`) into the
+    /// metrics snapshots.
+    pub fn pool_planes(&self) -> (u64, u64) {
+        self.analog
+            .as_ref()
+            .and_then(|e| e.pool())
+            .map_or((0, 0), |p| (p.planes_dispatched(), p.planes_fused()))
+    }
+
     /// Build the lazily-constructed analog engine and apply any pending
     /// stream pin. Idempotent; no-op outside `BwhtExec::Analog`. Runs at
     /// the start of every forward, and batch engines call it explicitly

@@ -193,7 +193,7 @@ impl BenchSet {
 }
 
 /// Escape a string for JSON.
-fn json_string(s: &str) -> String {
+pub(crate) fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

@@ -45,9 +45,10 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A lifetime-erased queued task.
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -57,6 +58,47 @@ struct Queue {
     state: Mutex<QueueState>,
     /// Signalled when jobs arrive or shutdown is requested.
     work: Condvar,
+    /// Cheap monotone counters (relaxed atomics, bumped per task/batch
+    /// — never per row, and never read by scheduling decisions, so
+    /// they cannot perturb determinism). Surfaced by
+    /// [`Executor::stats`] for the telemetry layer.
+    counters: QueueCounters,
+}
+
+/// The executor's telemetry counters (see [`ExecutorStats`]).
+struct QueueCounters {
+    tasks_run: AtomicU64,
+    batches: AtomicU64,
+    queue_high_water: AtomicU64,
+    /// Busy nanoseconds per lane: index 0 aggregates every submitting
+    /// caller's participation, indices 1.. are the spawned workers.
+    busy_ns: Vec<AtomicU64>,
+}
+
+/// Execute one queued job on `lane`, timing it into the counters.
+fn run_job(queue: &Queue, lane: usize, job: Job) {
+    let t0 = Instant::now();
+    job();
+    let c = &queue.counters;
+    c.busy_ns[lane].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    c.tasks_run.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot of an [`Executor`]'s cumulative runtime counters: how much
+/// work the lanes actually did and how deep the shared queue got —
+/// the oversubscription / utilization signal the telemetry snapshots
+/// carry. All counters are monotone since construction.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecutorStats {
+    /// Tasks executed across all lanes.
+    pub tasks_run: u64,
+    /// [`Executor::run`] batches submitted.
+    pub batches: u64,
+    /// Deepest the shared job queue has ever been (at enqueue time).
+    pub queue_high_water: u64,
+    /// Busy nanoseconds per lane: index 0 aggregates every submitting
+    /// caller's participation, indices 1.. are the spawned workers.
+    pub busy_ns: Vec<u64>,
 }
 
 struct QueueState {
@@ -113,11 +155,17 @@ impl Executor {
         let queue = Arc::new(Queue {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             work: Condvar::new(),
+            counters: QueueCounters {
+                tasks_run: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+                queue_high_water: AtomicU64::new(0),
+                busy_ns: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            },
         });
         let workers = (1..lanes)
-            .map(|_| {
+            .map(|lane| {
                 let queue = queue.clone();
-                std::thread::spawn(move || worker_loop(&queue))
+                std::thread::spawn(move || worker_loop(&queue, lane))
             })
             .collect();
         Executor { queue, workers, lanes }
@@ -127,6 +175,18 @@ impl Executor {
     /// caller).
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Snapshot the cumulative runtime counters (cheap relaxed loads;
+    /// safe to call from any thread at any time).
+    pub fn stats(&self) -> ExecutorStats {
+        let c = &self.queue.counters;
+        ExecutorStats {
+            tasks_run: c.tasks_run.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            queue_high_water: c.queue_high_water.load(Ordering::Relaxed),
+            busy_ns: c.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
     }
 
     /// Execute `tasks`, returning their results **in submission order**.
@@ -178,7 +238,14 @@ impl Executor {
             {
                 let mut q = lock(&self.queue.state);
                 q.jobs.extend(jobs);
+                // High-water mark while still under the queue lock, so
+                // the depth reading is exact, not racy.
+                self.queue
+                    .counters
+                    .queue_high_water
+                    .fetch_max(q.jobs.len() as u64, Ordering::Relaxed);
             }
+            self.queue.counters.batches.fetch_add(1, Ordering::Relaxed);
             self.queue.work.notify_all();
 
             // Caller participation: drain queue work (ours or anyone
@@ -192,7 +259,9 @@ impl Executor {
                 }
                 let job = lock(&self.queue.state).jobs.pop_front();
                 match job {
-                    Some(job) => job(),
+                    // Caller participation accounts its busy time on
+                    // lane 0 (shared by every submitting thread).
+                    Some(job) => run_job(&self.queue, 0, job),
                     None => {
                         let remaining = lock(&batch.remaining);
                         if *remaining == 0 {
@@ -247,7 +316,7 @@ unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
     std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
 }
 
-fn worker_loop(queue: &Queue) {
+fn worker_loop(queue: &Queue, lane: usize) {
     loop {
         let job = {
             let mut state = lock(&queue.state);
@@ -261,7 +330,7 @@ fn worker_loop(queue: &Queue) {
                 state = queue.work.wait(state).unwrap_or_else(PoisonError::into_inner);
             }
         };
-        job();
+        run_job(queue, lane, job);
     }
 }
 
@@ -372,6 +441,25 @@ mod tests {
         let exec = Executor::new(4);
         let _ = exec.run((0..8usize).map(|i| move || i).collect::<Vec<_>>());
         drop(exec); // must not hang
+    }
+
+    #[test]
+    fn stats_count_tasks_batches_and_busy_time() {
+        let exec = Executor::new(2);
+        assert_eq!(exec.stats(), ExecutorStats { busy_ns: vec![0, 0], ..Default::default() });
+        for _ in 0..3 {
+            let tasks: Vec<_> = (0..4u64)
+                .map(|i| move || std::thread::sleep(Duration::from_micros(50 + i)))
+                .collect();
+            exec.run(tasks);
+        }
+        let s = exec.stats();
+        assert_eq!(s.tasks_run, 12);
+        assert_eq!(s.batches, 3);
+        assert!(s.queue_high_water >= 1 && s.queue_high_water <= 4, "{s:?}");
+        assert_eq!(s.busy_ns.len(), 2, "one slot per lane");
+        // Every task slept ≥50µs somewhere; total busy time must show it.
+        assert!(s.busy_ns.iter().sum::<u64>() >= 12 * 50_000, "{s:?}");
     }
 
     #[test]

@@ -117,7 +117,21 @@ impl std::fmt::Display for LoadReport {
 pub fn run(
     server: &EdgeServer,
     spec: &LoadSpec,
+    submit_one: impl FnMut(u64) -> Result<(), SubmitError>,
+) -> LoadReport {
+    run_with_tick(server, spec, submit_one, || {})
+}
+
+/// [`run`] with a periodic hook: `tick()` fires once per pacing
+/// iteration (open loop), per response wait (closed loop), and per
+/// drain poll — frequently enough for a cadence-gated observer like
+/// [`crate::util::telemetry::TelemetrySink`] to flush on time, without
+/// ever sitting on the per-submit fast path.
+pub fn run_with_tick(
+    server: &EdgeServer,
+    spec: &LoadSpec,
     mut submit_one: impl FnMut(u64) -> Result<(), SubmitError>,
+    mut tick: impl FnMut(),
 ) -> LoadReport {
     let start = Instant::now();
     let mut admitted = 0u64;
@@ -153,7 +167,7 @@ pub fn run(
             let burst = burst.max(1) as u64;
             // One pacing tick delivers a whole burst; ticks are spaced
             // so the average rate stays `qps`.
-            let tick = Duration::from_nanos(burst.saturating_mul(1_000_000_000) / qps);
+            let pace = Duration::from_nanos(burst.saturating_mul(1_000_000_000) / qps);
             let mut next = start;
             'offer: while offered < spec.total {
                 let now = Instant::now();
@@ -166,9 +180,10 @@ pub fn run(
                     }
                     offered += 1;
                 }
-                next += tick;
+                next += pace;
                 // Opportunistic drain keeps the response channel short.
                 responses.extend(server.take_responses());
+                tick();
             }
         }
         LoadMode::Closed { concurrency } => {
@@ -190,6 +205,7 @@ pub fn run(
                 if in_flight == 0 {
                     break;
                 }
+                tick();
                 match server.recv_response(spec.drain) {
                     Some(r) => {
                         responses.push(r);
@@ -204,6 +220,7 @@ pub fn run(
     // Drain whatever is still in flight.
     let drain_deadline = Instant::now() + spec.drain;
     while (responses.len() as u64) < admitted && Instant::now() < drain_deadline {
+        tick();
         if let Some(r) = server.recv_response(Duration::from_millis(50)) {
             responses.push(r);
         }
@@ -325,6 +342,24 @@ mod tests {
         assert_eq!(report.admitted, 8, "exactly queue_depth admitted");
         assert_eq!(report.shed, 24);
         assert_eq!(report.completed, 8, "admitted frames still answer after the flush");
+        server.shutdown();
+    }
+
+    /// The tick hook fires on every pacing iteration — often enough
+    /// for a cadence-gated exporter — and never changes the report.
+    #[test]
+    fn tick_hook_fires_per_pacing_iteration() {
+        let server = mock_server(256, 500);
+        let spec = LoadSpec {
+            mode: LoadMode::Open { qps: 50_000, burst: 8 },
+            total: 32,
+            drain: Duration::from_secs(5),
+        };
+        let mut ticks = 0u64;
+        let report = run_with_tick(&server, &spec, |i| server.submit(req(i)), || ticks += 1);
+        assert!(ticks >= 4, "one tick per burst at minimum, got {ticks}");
+        assert_eq!(report.offered, 32);
+        assert_eq!(report.offered, report.admitted + report.shed);
         server.shutdown();
     }
 

@@ -26,6 +26,11 @@
 //!   the serving path (replaces `wrk`-style external harnesses): paced
 //!   QPS with bursts or a fixed in-flight window, exact
 //!   offered/admitted/shed accounting.
+//! - [`telemetry`] — stage-level serving observability (replaces
+//!   `metrics`/`tracing`-style crates): bounded log-bucketed latency
+//!   histograms, per-request stage spans, executor/pool runtime
+//!   counters, and a streaming JSON-lines exporter validated by the
+//!   in-house checker.
 
 pub mod bench;
 pub mod cli;
@@ -34,6 +39,7 @@ pub mod loadgen;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;
 
 pub use executor::Executor;
 pub use rng::Rng;

@@ -1,0 +1,889 @@
+//! Stage-level serving telemetry: bounded latency histograms,
+//! per-request stage spans, executor/pool runtime counters, and a
+//! streaming JSON-lines metrics exporter.
+//!
+//! Four pieces, all off the bit-exact hot loops:
+//!
+//! - [`LatencyHistogram`] — a fixed-size log-bucketed (HDR-style)
+//!   histogram: values below 256 µs record exactly, larger values land
+//!   in 128 linear sub-buckets per power-of-two decade, bounding the
+//!   relative quantization error to 1/128 < 1%. Memory is constant
+//!   (~7.4k buckets) however long the run, replacing the unbounded
+//!   per-completion `Vec` the metrics used to keep. Percentiles use the
+//!   same nearest-rank convention as
+//!   [`crate::util::stats::percentile_sorted`], so small exact runs
+//!   agree bit-for-bit with the old sort-based path.
+//! - [`RequestTrace`] — monotonic stage timestamps carried on each
+//!   [`crate::coordinator::InferenceRequest`] (admission, batch seal,
+//!   engine start/end), turned into a [`StageSample`] at response time:
+//!   queue-wait vs batch-wait vs service, telescoping so their sum can
+//!   never exceed the end-to-end latency.
+//! - [`RuntimeCounters`] — cheap monotone counters from the persistent
+//!   [`crate::util::executor::Executor`] (tasks run, per-lane busy-ns,
+//!   queue-depth high water) and the collaborative digitization pool
+//!   (planes dispatched / fused), sampled at batch granularity by the
+//!   serving workers.
+//! - [`TelemetrySink`] — a streaming exporter: every
+//!   `--metrics-interval-ms` it writes one JSON object per line
+//!   (cumulative counters + per-interval deltas) to a file or stderr,
+//!   validated by the in-house checker
+//!   ([`crate::util::bench::json_is_well_formed`]). Interval rows are
+//!   also retained in memory for `adcim loadgen`'s timeline table.
+//!
+//! Telemetry never feeds scheduling or RNG decisions, so logits are
+//! bit-identical with it on or off (pinned by
+//! `tests/telemetry_export.rs`).
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::MetricsSnapshot;
+use crate::util::bench::json_string;
+use crate::util::executor::ExecutorStats;
+
+/// Values below this bound (µs) occupy one exact bucket each.
+const EXACT_LIMIT: u64 = 256;
+
+/// Linear sub-buckets per power-of-two decade above [`EXACT_LIMIT`];
+/// bounds the histogram's relative error to `1/SUBBUCKETS`.
+const SUBBUCKETS: u64 = 128;
+
+/// Total bucket count: 256 exact + 128 per decade for decades 8..=63.
+const NUM_BUCKETS: usize = (EXACT_LIMIT + 56 * SUBBUCKETS) as usize;
+
+/// Bucket index for value `v` (µs).
+fn bucket_index(v: u64) -> usize {
+    if v < EXACT_LIMIT {
+        return v as usize;
+    }
+    // Decade k = floor(log2 v) in 8..=63; top 8 significant bits pick
+    // the linear sub-bucket inside the decade.
+    let k = 63 - u64::from(v.leading_zeros());
+    let shift = k - 7;
+    (EXACT_LIMIT + (k - 8) * SUBBUCKETS + ((v >> shift) - SUBBUCKETS)) as usize
+}
+
+/// Smallest value mapping to bucket `idx` — the value the histogram
+/// reports for any member of the bucket (exact below [`EXACT_LIMIT`],
+/// within 1/128 relative error above).
+fn bucket_floor(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < EXACT_LIMIT {
+        return idx;
+    }
+    let b = idx - EXACT_LIMIT;
+    let k = b / SUBBUCKETS + 8;
+    let off = b % SUBBUCKETS;
+    (SUBBUCKETS + off) << (k - 7)
+}
+
+/// Fixed-size log-bucketed latency histogram (HDR-style): constant
+/// memory for any run length, ≤1% relative quantization error, exact
+/// mean/max, and nearest-rank percentiles matching
+/// [`crate::util::stats::percentile_sorted`]. See the module docs.
+#[derive(Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+    min: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count)
+            .field("min", &self.min_us())
+            .field("max", &self.max)
+            .field("mean", &self.mean_us())
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    /// Fresh, empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value (µs).
+    pub fn record(&mut self, us: u64) {
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum += us as u128;
+        self.max = self.max.max(us);
+        self.min = self.min.min(us);
+    }
+
+    /// Recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of recorded values (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Nearest-rank percentile (µs): same rank convention as
+    /// [`crate::util::stats::percentile_sorted`], quantized to the
+    /// bucket floor (exact below 256 µs, ≤1% relative error above).
+    /// Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_floor(idx);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram's contents into this one.
+    pub fn merge(&mut self, other: &Self) {
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    /// Bucket-wise difference against an earlier snapshot of the same
+    /// histogram — the interval view the exporter's per-interval p99
+    /// is computed from. `min`/`max` of the difference are bucket
+    /// floors (quantized), not the exact interval extrema.
+    pub fn minus(&self, prev: &Self) -> Self {
+        let mut out = Self::new();
+        for (idx, (&cur, &old)) in self.buckets.iter().zip(&prev.buckets).enumerate() {
+            let d = cur.saturating_sub(old);
+            if d > 0 {
+                out.buckets[idx] = d;
+                out.count += d;
+                let floor = bucket_floor(idx);
+                out.sum += d as u128 * floor as u128;
+                out.max = out.max.max(floor);
+                out.min = out.min.min(floor);
+            }
+        }
+        out
+    }
+}
+
+/// Monotonic stage timestamps carried through the coordinator on each
+/// request. Stamped by the serving pipeline (admission → batch seal →
+/// engine start/end); all `None` until the request passes the stage.
+/// Timestamps never feed scheduling or RNG, so serving output is
+/// bit-identical whether or not anyone reads them.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTrace {
+    /// Passed admission control (about to enter the ingest queue).
+    pub admitted: Option<Instant>,
+    /// Sealed into a dispatched batch (one stamp per batch).
+    pub sealed: Option<Instant>,
+    /// Engine forward started for the request's batch.
+    pub engine_start: Option<Instant>,
+    /// Engine forward finished for the request's batch.
+    pub engine_end: Option<Instant>,
+}
+
+/// Saturating microseconds from `a` to `b` (0 if `b` precedes `a`).
+fn us_between(a: Instant, b: Instant) -> u64 {
+    b.saturating_duration_since(a).as_micros() as u64
+}
+
+impl RequestTrace {
+    /// Resolve the trace into per-stage durations, given the request's
+    /// submit time and the response time. `None` unless every stage
+    /// stamp is present (e.g. failure responses synthesized before the
+    /// engine ran). The three stages telescope from admission to engine
+    /// end, so `queue_wait + batch_wait + service ≤ end_to_end` holds
+    /// per sample by construction.
+    pub fn stages(&self, submitted: Instant, responded: Instant) -> Option<StageSample> {
+        let (admitted, sealed) = (self.admitted?, self.sealed?);
+        let (start, end) = (self.engine_start?, self.engine_end?);
+        Some(StageSample {
+            queue_wait_us: us_between(admitted, sealed),
+            batch_wait_us: us_between(sealed, start),
+            service_us: us_between(start, end),
+            end_to_end_us: us_between(submitted, responded),
+        })
+    }
+}
+
+/// One request's resolved stage durations (µs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSample {
+    /// Admission → batch seal: time spent queued for a batch slot.
+    pub queue_wait_us: u64,
+    /// Batch seal → engine start: routing + worker-queue wait.
+    pub batch_wait_us: u64,
+    /// Engine start → engine end: the forward itself.
+    pub service_us: u64,
+    /// Submit → response: the end-to-end latency the SLO sees.
+    pub end_to_end_us: u64,
+}
+
+/// Summary of one pipeline stage's latency distribution plus the
+/// conversion energy attributed to it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageStats {
+    /// Samples that resolved this stage.
+    pub count: u64,
+    /// Exact mean (µs).
+    pub mean_us: f64,
+    /// Median (µs, histogram-quantized).
+    pub p50_us: u64,
+    /// 95th percentile (µs, histogram-quantized).
+    pub p95_us: u64,
+    /// 99th percentile (µs, histogram-quantized).
+    pub p99_us: u64,
+    /// Exact worst case (µs).
+    pub max_us: u64,
+    /// Pool conversion energy attributed to this stage (fJ). All ADC
+    /// work happens inside the engine forward, so the full
+    /// `ConversionStats` energy lands on the service stage and the
+    /// wait stages carry 0.
+    pub energy_fj: f64,
+}
+
+impl StageStats {
+    /// Summarize a stage histogram, attributing `energy_fj` to it.
+    pub fn from_histogram(h: &LatencyHistogram, energy_fj: f64) -> Self {
+        StageStats {
+            count: h.count(),
+            mean_us: h.mean_us(),
+            p50_us: h.percentile(50.0),
+            p95_us: h.percentile(95.0),
+            p99_us: h.percentile(99.0),
+            max_us: h.max_us(),
+            energy_fj,
+        }
+    }
+}
+
+/// The queue-wait / batch-wait / service breakdown reported next to the
+/// end-to-end numbers in [`MetricsSnapshot`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    /// Admission → batch seal.
+    pub queue_wait: StageStats,
+    /// Batch seal → engine start.
+    pub batch_wait: StageStats,
+    /// Engine start → engine end (carries the conversion energy).
+    pub service: StageStats,
+}
+
+/// Monotone executor/pool runtime counters, sampled per served batch
+/// (workers fold the delta since their previous sample into the shared
+/// metrics, the same discipline as `ConversionStats`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RuntimeCounters {
+    /// Executor tasks executed (shard forwards, pool plane lanes).
+    pub exec_tasks: u64,
+    /// `Executor::run` batches submitted.
+    pub exec_batches: u64,
+    /// Deepest the executor's shared job queue has ever been.
+    pub exec_queue_high_water: u64,
+    /// Execution lanes (spawned workers + the participating caller).
+    pub exec_lanes: u64,
+    /// Per-lane busy nanoseconds (lane 0 aggregates every submitting
+    /// caller's participation; lanes 1.. are the spawned workers).
+    pub exec_busy_ns: Vec<u64>,
+    /// Planes the digitization pool dispatched (all paths).
+    pub planes_dispatched: u64,
+    /// Planes that went through the fused (deferred-accounting)
+    /// cross-sample submission path.
+    pub planes_fused: u64,
+}
+
+impl RuntimeCounters {
+    /// Lift an executor's counter snapshot (pool counters stay 0).
+    pub fn from_executor(s: &ExecutorStats) -> Self {
+        RuntimeCounters {
+            exec_tasks: s.tasks_run,
+            exec_batches: s.batches,
+            exec_queue_high_water: s.queue_high_water,
+            exec_lanes: s.busy_ns.len() as u64,
+            exec_busy_ns: s.busy_ns.clone(),
+            planes_dispatched: 0,
+            planes_fused: 0,
+        }
+    }
+
+    /// Delta since an earlier sample of the same counters: monotone
+    /// counts subtract (saturating); high-water and lane width keep the
+    /// current value (they are levels, not rates).
+    pub fn minus(&self, prev: &Self) -> Self {
+        let busy = self
+            .exec_busy_ns
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| b.saturating_sub(prev.exec_busy_ns.get(i).copied().unwrap_or(0)))
+            .collect();
+        RuntimeCounters {
+            exec_tasks: self.exec_tasks.saturating_sub(prev.exec_tasks),
+            exec_batches: self.exec_batches.saturating_sub(prev.exec_batches),
+            exec_queue_high_water: self.exec_queue_high_water,
+            exec_lanes: self.exec_lanes,
+            exec_busy_ns: busy,
+            planes_dispatched: self.planes_dispatched.saturating_sub(prev.planes_dispatched),
+            planes_fused: self.planes_fused.saturating_sub(prev.planes_fused),
+        }
+    }
+
+    /// Fold a delta into accumulated totals: monotone counts add,
+    /// high-water and lane width take the max (several workers each
+    /// own an executor; the snapshot reports the widest/deepest).
+    pub fn merge(&mut self, d: &Self) {
+        self.exec_tasks += d.exec_tasks;
+        self.exec_batches += d.exec_batches;
+        self.exec_queue_high_water = self.exec_queue_high_water.max(d.exec_queue_high_water);
+        self.exec_lanes = self.exec_lanes.max(d.exec_lanes);
+        if self.exec_busy_ns.len() < d.exec_busy_ns.len() {
+            self.exec_busy_ns.resize(d.exec_busy_ns.len(), 0);
+        }
+        for (b, &o) in self.exec_busy_ns.iter_mut().zip(&d.exec_busy_ns) {
+            *b += o;
+        }
+        self.planes_dispatched += d.planes_dispatched;
+        self.planes_fused += d.planes_fused;
+    }
+
+    /// Total busy nanoseconds across all lanes.
+    pub fn busy_total_ns(&self) -> u64 {
+        self.exec_busy_ns.iter().sum()
+    }
+
+    /// True when every counter is zero (nothing to report).
+    pub fn is_zero(&self) -> bool {
+        self.exec_tasks == 0
+            && self.exec_batches == 0
+            && self.planes_dispatched == 0
+            && self.planes_fused == 0
+            && self.busy_total_ns() == 0
+    }
+}
+
+/// One exported interval, retained in memory for the loadgen timeline
+/// table (the same numbers the JSONL line's `"interval"` object
+/// carries).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IntervalRow {
+    /// Milliseconds since the sink was created.
+    pub t_ms: f64,
+    /// Requests offered this interval (admitted + shed + malformed).
+    pub offered: u64,
+    /// Requests admitted this interval.
+    pub admitted: u64,
+    /// Requests shed by admission control this interval.
+    pub shed: u64,
+    /// Wire frames rejected as malformed this interval.
+    pub malformed: u64,
+    /// Responses delivered this interval.
+    pub completed: u64,
+    /// Samples served through fused multi-sample forwards this interval.
+    pub fused: u64,
+    /// p99 end-to-end latency over this interval's completions alone
+    /// (µs, from the histogram difference; 0 with no completions).
+    pub p99_us: u64,
+}
+
+/// Streaming JSON-lines metrics exporter (see the module docs): one
+/// self-contained JSON object per flush, cumulative counters plus
+/// per-interval deltas, written to any `Write + Send` (file, stderr,
+/// an in-memory buffer in tests). Writes are best-effort: a full disk
+/// or closed pipe degrades telemetry, never serving.
+pub struct TelemetrySink {
+    out: Box<dyn Write + Send>,
+    interval: Duration,
+    label: String,
+    started: Instant,
+    last_flush: Instant,
+    last_t_ms: f64,
+    seq: u64,
+    prev: Option<MetricsSnapshot>,
+    rows: Vec<IntervalRow>,
+}
+
+impl std::fmt::Debug for TelemetrySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetrySink")
+            .field("interval", &self.interval)
+            .field("label", &self.label)
+            .field("seq", &self.seq)
+            .finish()
+    }
+}
+
+/// Format a float as a JSON number (non-finite values, which JSON
+/// cannot carry, degrade to 0).
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Format a `[u64]` slice as a JSON array.
+fn jarr(xs: &[u64]) -> String {
+    let mut s = String::from("[");
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&x.to_string());
+    }
+    s.push(']');
+    s
+}
+
+/// One stage's JSON object for the `"stages"` block.
+fn stage_json(s: &StageStats) -> String {
+    format!(
+        "{{\"count\":{},\"mean_us\":{},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\
+         \"max_us\":{},\"energy_fj\":{}}}",
+        s.count,
+        jf(s.mean_us),
+        s.p50_us,
+        s.p95_us,
+        s.p99_us,
+        s.max_us,
+        jf(s.energy_fj)
+    )
+}
+
+impl TelemetrySink {
+    /// Build a sink flushing every `interval_ms` (clamped to ≥ 1 ms)
+    /// to `out`.
+    pub fn new(out: Box<dyn Write + Send>, interval_ms: u64) -> Self {
+        let now = Instant::now();
+        TelemetrySink {
+            out,
+            interval: Duration::from_millis(interval_ms.max(1)),
+            label: String::new(),
+            started: now,
+            last_flush: now,
+            last_t_ms: 0.0,
+            seq: 0,
+            prev: None,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Attach a free-form run label carried on every line (e.g. the
+    /// engine name) — escaped through the same in-house JSON writer
+    /// the validator checks.
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// The configured flush cadence in milliseconds.
+    pub fn interval_ms(&self) -> u64 {
+        self.interval.as_millis() as u64
+    }
+
+    /// True when the flush cadence has elapsed since the last line.
+    pub fn due(&self) -> bool {
+        self.last_flush.elapsed() >= self.interval
+    }
+
+    /// Flush one line if the cadence has elapsed, taking the snapshot
+    /// only when actually due (snapshots clone histograms — callers
+    /// poll this cheaply from their serving loops). Returns whether a
+    /// line was written.
+    pub fn maybe_flush_with(&mut self, snap: impl FnOnce() -> MetricsSnapshot) -> bool {
+        if !self.due() {
+            return false;
+        }
+        let s = snap();
+        self.emit(&s, false);
+        true
+    }
+
+    /// Write the closing line (`"final":true`) with the run's complete
+    /// cumulative counters — summed interval deltas across all lines
+    /// reconcile exactly against it.
+    pub fn flush_final(&mut self, snap: &MetricsSnapshot) {
+        self.emit(snap, true);
+    }
+
+    /// Interval rows exported so far (one per line written).
+    pub fn rows(&self) -> &[IntervalRow] {
+        &self.rows
+    }
+
+    /// Lines written so far.
+    pub fn lines_written(&self) -> u64 {
+        self.seq
+    }
+
+    fn emit(&mut self, snap: &MetricsSnapshot, is_final: bool) {
+        let now = Instant::now();
+        // Strictly increasing export clock even for back-to-back lines.
+        let mut t_ms = now.duration_since(self.started).as_secs_f64() * 1e3;
+        if t_ms <= self.last_t_ms {
+            t_ms = self.last_t_ms + 0.001;
+        }
+
+        let admitted: u64 = snap.qos_admitted.iter().sum();
+        let shed: u64 = snap.qos_shed.iter().sum();
+        let malformed = snap.rejected_malformed;
+        let offered = admitted + shed + malformed;
+
+        // Interval deltas against the previously exported snapshot.
+        let (p_adm, p_shed, p_mal, p_done, p_err, p_fused) = match &self.prev {
+            Some(p) => (
+                p.qos_admitted.iter().sum::<u64>(),
+                p.qos_shed.iter().sum::<u64>(),
+                p.rejected_malformed,
+                p.completed,
+                p.errors,
+                p.samples_fused,
+            ),
+            None => (0, 0, 0, 0, 0, 0),
+        };
+        let d_adm = admitted.saturating_sub(p_adm);
+        let d_shed = shed.saturating_sub(p_shed);
+        let d_mal = malformed.saturating_sub(p_mal);
+        let d_done = snap.completed.saturating_sub(p_done);
+        let d_err = snap.errors.saturating_sub(p_err);
+        let d_fused = snap.samples_fused.saturating_sub(p_fused);
+        let d_p99 = match &self.prev {
+            Some(p) => snap.latency_hist.minus(&p.latency_hist).percentile(99.0),
+            None => snap.latency_hist.percentile(99.0),
+        };
+
+        let line = format!(
+            "{{\"schema\":\"adcim.telemetry.v1\",\"seq\":{},\"final\":{},\"label\":{},\
+             \"t_ms\":{},\"interval_ms\":{},\
+             \"completed\":{},\"errors\":{},\"degraded\":{},\"panics\":{},\
+             \"rejected_queue\":{},\"rejected_malformed\":{},\
+             \"admitted\":{},\"shed\":{},\"offered\":{},\
+             \"mean_us\":{},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{},\
+             \"throughput_per_s\":{},\"mean_batch\":{},\"fused\":{},\
+             \"conversions\":{},\"gated\":{},\"adc_energy_fj\":{},\
+             \"qos_admitted\":{},\"qos_shed\":{},\
+             \"stages\":{{\"queue_wait\":{},\"batch_wait\":{},\"service\":{}}},\
+             \"exec\":{{\"tasks\":{},\"batches\":{},\"queue_high_water\":{},\"lanes\":{},\
+             \"busy_ns\":{}}},\
+             \"pool\":{{\"planes_dispatched\":{},\"planes_fused\":{}}},\
+             \"interval\":{{\"offered\":{},\"admitted\":{},\"shed\":{},\"malformed\":{},\
+             \"completed\":{},\"errors\":{},\"fused\":{},\"p99_us\":{}}}}}",
+            self.seq,
+            is_final,
+            json_string(&self.label),
+            jf(t_ms),
+            self.interval.as_millis(),
+            snap.completed,
+            snap.errors,
+            snap.degraded,
+            snap.panics_isolated,
+            snap.rejected_queue_full,
+            snap.rejected_malformed,
+            admitted,
+            shed,
+            offered,
+            jf(snap.mean_latency_us),
+            jf(snap.p50_latency_us),
+            jf(snap.p95_latency_us),
+            jf(snap.p99_latency_us),
+            jf(snap.max_latency_us),
+            jf(snap.throughput_per_s),
+            jf(snap.mean_batch),
+            snap.samples_fused,
+            snap.conversions,
+            snap.conversions_gated,
+            jf(snap.adc_energy_fj),
+            jarr(&snap.qos_admitted),
+            jarr(&snap.qos_shed),
+            stage_json(&snap.stages.queue_wait),
+            stage_json(&snap.stages.batch_wait),
+            stage_json(&snap.stages.service),
+            snap.runtime.exec_tasks,
+            snap.runtime.exec_batches,
+            snap.runtime.exec_queue_high_water,
+            snap.runtime.exec_lanes,
+            jarr(&snap.runtime.exec_busy_ns),
+            snap.runtime.planes_dispatched,
+            snap.runtime.planes_fused,
+            d_adm + d_shed + d_mal,
+            d_adm,
+            d_shed,
+            d_mal,
+            d_done,
+            d_err,
+            d_fused,
+            d_p99,
+        );
+        let _ = writeln!(self.out, "{line}");
+        let _ = self.out.flush();
+
+        self.rows.push(IntervalRow {
+            t_ms,
+            offered: d_adm + d_shed + d_mal,
+            admitted: d_adm,
+            shed: d_shed,
+            malformed: d_mal,
+            completed: d_done,
+            fused: d_fused,
+            p99_us: d_p99,
+        });
+        self.prev = Some(snap.clone());
+        self.seq += 1;
+        self.last_flush = now;
+        self.last_t_ms = t_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::util::bench::json_is_well_formed;
+    use crate::util::stats::percentile_sorted;
+    use crate::util::Rng;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn histogram_is_exact_below_256us() {
+        let mut h = LatencyHistogram::new();
+        let vals = [0u64, 1, 7, 100, 200, 255];
+        for &v in &vals {
+            h.record(v);
+        }
+        let sorted: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+        for p in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p) as f64, percentile_sorted(&sorted, p), "p{p}");
+        }
+        assert_eq!(h.max_us(), 255);
+        assert_eq!(h.min_us(), 0);
+        assert!((h.mean_us() - sorted.iter().sum::<f64>() / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentile_parity_within_one_percent() {
+        // S1 parity gate: against the exact sort-based percentile on a
+        // seeded spread spanning every decade the serving path sees.
+        let mut rng = Rng::new(0x7e1e);
+        let mut h = LatencyHistogram::new();
+        let mut vals = Vec::new();
+        for _ in 0..4000 {
+            // Log-uniform over [1, ~2^30) µs.
+            let exp = rng.next_u64() % 30;
+            let v = (1u64 << exp) + rng.next_u64() % (1u64 << exp);
+            h.record(v);
+            vals.push(v as f64);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 95.0, 99.0, 99.9] {
+            let exact = percentile_sorted(&vals, p);
+            let approx = h.percentile(p) as f64;
+            assert!(approx <= exact, "p{p}: floor {approx} above exact {exact}");
+            let rel = (exact - approx) / exact.max(1.0);
+            assert!(rel <= 1.0 / 128.0 + 1e-12, "p{p}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_and_minus_roundtrip() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for v in [10u64, 20, 5000] {
+            a.record(v);
+        }
+        for v in [30u64, 70_000] {
+            b.record(v);
+        }
+        let mut both = a.clone();
+        both.merge(&b);
+        assert_eq!(both.count(), 5);
+        let diff = both.minus(&a);
+        assert_eq!(diff.count(), b.count());
+        assert_eq!(diff.percentile(50.0), b.percentile(50.0));
+        // Interval of an unchanged histogram is empty.
+        assert!(both.minus(&both).is_empty());
+    }
+
+    #[test]
+    fn bucket_index_floor_are_consistent() {
+        // floor(index(v)) ≤ v with ≤1/128 relative error, all decades.
+        let mut rng = Rng::new(0xb0b);
+        for _ in 0..20_000 {
+            let exp = rng.next_u64() % 63;
+            let v = (1u64 << exp) + rng.next_u64() % (1u64 << exp).max(1);
+            let f = bucket_floor(bucket_index(v));
+            assert!(f <= v, "floor {f} above {v}");
+            assert!(v - f <= v / 128, "floor {f} too far below {v}");
+        }
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn trace_stages_telescope_under_end_to_end() {
+        let t0 = Instant::now();
+        let step = Duration::from_micros(100);
+        let trace = RequestTrace {
+            admitted: Some(t0 + step),
+            sealed: Some(t0 + 2 * step),
+            engine_start: Some(t0 + 3 * step),
+            engine_end: Some(t0 + 5 * step),
+        };
+        let s = trace.stages(t0, t0 + 6 * step).expect("all stamps present");
+        assert_eq!(s.queue_wait_us, 100);
+        assert_eq!(s.batch_wait_us, 100);
+        assert_eq!(s.service_us, 200);
+        assert_eq!(s.end_to_end_us, 600);
+        assert!(s.queue_wait_us + s.batch_wait_us + s.service_us <= s.end_to_end_us);
+        // Missing stamps (degraded responses) resolve to None.
+        assert!(RequestTrace::default().stages(t0, t0 + step).is_none());
+    }
+
+    #[test]
+    fn runtime_counters_minus_merge() {
+        let mut cur = RuntimeCounters {
+            exec_tasks: 10,
+            exec_batches: 4,
+            exec_queue_high_water: 7,
+            exec_lanes: 2,
+            exec_busy_ns: vec![500, 300],
+            planes_dispatched: 20,
+            planes_fused: 8,
+        };
+        let prev = RuntimeCounters {
+            exec_tasks: 6,
+            exec_batches: 2,
+            exec_queue_high_water: 5,
+            exec_lanes: 2,
+            exec_busy_ns: vec![200, 100],
+            planes_dispatched: 12,
+            planes_fused: 8,
+        };
+        let d = cur.minus(&prev);
+        assert_eq!(d.exec_tasks, 4);
+        assert_eq!(d.exec_busy_ns, vec![300, 200]);
+        assert_eq!(d.exec_queue_high_water, 7, "high water is a level");
+        assert_eq!(d.planes_dispatched, 8);
+        assert_eq!(d.planes_fused, 0);
+        let mut tot = RuntimeCounters::default();
+        tot.merge(&d);
+        tot.merge(&d);
+        assert_eq!(tot.exec_tasks, 8);
+        assert_eq!(tot.busy_total_ns(), 1000);
+        assert_eq!(tot.exec_queue_high_water, 7);
+        assert!(!tot.is_zero());
+        cur.merge(&RuntimeCounters::default());
+        assert_eq!(cur.exec_tasks, 10);
+    }
+
+    /// `Write` handle into a shared buffer, for asserting on emitted
+    /// lines.
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sink_emits_validator_clean_reconciling_lines() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut sink =
+            TelemetrySink::new(Box::new(SharedBuf(buf.clone())), 1).with_label("unit \"test\"");
+        let m = Metrics::new();
+        m.record_qos(3, true);
+        m.record_qos(3, true);
+        m.record_qos(0, false);
+        m.record_batch(2);
+        m.record_completion(120);
+        m.record_completion(300);
+        sink.emit(&m.snapshot(), false);
+        m.record_qos(2, true);
+        m.record_completion(90);
+        sink.flush_final(&m.snapshot());
+
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            assert!(json_is_well_formed(l), "bad JSON line: {l}");
+        }
+        assert!(lines[0].contains("\"final\":false"));
+        assert!(lines[1].contains("\"final\":true"));
+        assert!(lines[1].contains("\"label\":\"unit \\\"test\\\"\""));
+        // Interval deltas reconcile: rows sum to final cumulative.
+        let rows = sink.rows();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].t_ms > rows[0].t_ms, "strictly time-ordered");
+        assert_eq!(rows.iter().map(|r| r.offered).sum::<u64>(), 4);
+        assert_eq!(rows.iter().map(|r| r.admitted).sum::<u64>(), 3);
+        assert_eq!(rows.iter().map(|r| r.shed).sum::<u64>(), 1);
+        assert_eq!(rows.iter().map(|r| r.completed).sum::<u64>(), 3);
+        for r in rows {
+            assert_eq!(r.offered, r.admitted + r.shed + r.malformed);
+        }
+    }
+
+    #[test]
+    fn sink_flushes_on_cadence_only() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut sink = TelemetrySink::new(Box::new(SharedBuf(buf.clone())), 1_000);
+        let m = Metrics::new();
+        // Immediately after construction the cadence has not elapsed:
+        // the closure must not even be evaluated.
+        assert!(!sink.maybe_flush_with(|| unreachable!("sink not due")));
+        assert_eq!(sink.lines_written(), 0);
+        // A final flush always writes.
+        sink.flush_final(&m.snapshot());
+        assert_eq!(sink.lines_written(), 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Telemetry-exporter integration: the streaming JSONL sink over a
+//! live serving loop (ISSUE 9, satellite S3).
+//!
+//! Three layers of guarantee:
+//!
+//! 1. **Golden schema** — every line the sink emits during a real
+//!    mixed-traffic run (plain submits + malformed wire frames) passes
+//!    the in-house JSON well-formedness checker, carries the schema
+//!    tag, and the export clock is strictly increasing.
+//! 2. **Reconciliation** — per-interval rows satisfy
+//!    `offered = admitted + shed + malformed`, and the summed interval
+//!    deltas reproduce the final cumulative snapshot exactly
+//!    (admitted / shed / malformed / completed / fused).
+//! 3. **Determinism** — serving identical traffic with telemetry on
+//!    and off yields bit-identical logits: stage stamping and counter
+//!    sampling are observers, never participants.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use adcim::config::ServerConfig;
+use adcim::coordinator::engine::MockEngine;
+use adcim::coordinator::{EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy};
+use adcim::util::bench::json_is_well_formed;
+use adcim::util::loadgen::{self, LoadMode, LoadSpec};
+use adcim::util::telemetry::TelemetrySink;
+
+fn mock_engines(n: usize, delay_us: u64) -> Vec<Box<dyn InferenceEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(MockEngine {
+                classes: 10,
+                input: 4,
+                delay: Duration::from_micros(delay_us),
+            }) as Box<dyn InferenceEngine>
+        })
+        .collect()
+}
+
+/// `Write` handle into a shared buffer so the test can read back what
+/// the sink wrote after the sink consumed the boxed writer.
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A paced open-loop run with malformed wire frames sprinkled in,
+/// sampled by the sink on a 25 ms cadence: every emitted line is
+/// validator-clean, time-ordered, satisfies the offered identity per
+/// interval, and the interval deltas sum back to the final cumulative
+/// snapshot. Stage breakdown telescopes under end-to-end latency.
+#[test]
+fn exporter_emits_validator_clean_reconciling_jsonl() {
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: 4,
+        batch_deadline_us: 300,
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, mock_engines(2, 300), RoutingPolicy::RoundRobin).unwrap();
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let mut sink = TelemetrySink::new(Box::new(SharedBuf(buf.clone())), 25).with_label("it");
+
+    // 120 offers at ~1500 qps stretches the run across several export
+    // intervals; every 10th offer is junk wire bytes (malformed).
+    let spec = LoadSpec {
+        mode: LoadMode::Open { qps: 1_500, burst: 4 },
+        total: 120,
+        drain: Duration::from_secs(10),
+    };
+    let report = loadgen::run_with_tick(
+        &server,
+        &spec,
+        |i| {
+            if i % 10 == 9 {
+                server.submit_wire(0, &[0xde, 0xad, 0xbe]).map(|_| ())
+            } else {
+                server.submit(InferenceRequest::new(i, 0, vec![(i % 10) as f32; 4]))
+            }
+        },
+        || {
+            sink.maybe_flush_with(|| server.metrics_snapshot());
+        },
+    );
+    assert_eq!(report.offered, 120);
+    assert_eq!(report.malformed, 12);
+    assert_eq!(report.completed, report.admitted, "drain window must not expire");
+
+    // Guarantee at least one non-final line even on a very slow box.
+    for _ in 0..200 {
+        if sink.lines_written() >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        sink.maybe_flush_with(|| server.metrics_snapshot());
+    }
+    assert!(sink.lines_written() >= 1, "no interval line emitted during the run");
+
+    let snap = server.shutdown();
+    sink.flush_final(&snap);
+
+    // 1. Golden schema: every line is validator-clean JSONL.
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 2, "want >= 2 snapshots, got {}", lines.len());
+    assert_eq!(lines.len() as u64, sink.lines_written());
+    for l in &lines {
+        assert!(json_is_well_formed(l), "bad JSON line: {l}");
+        assert!(l.contains("\"schema\":\"adcim.telemetry.v1\""));
+        assert!(l.contains("\"label\":\"it\""));
+    }
+    let finals = lines.iter().filter(|l| l.contains("\"final\":true")).count();
+    assert_eq!(finals, 1, "exactly one final line");
+    assert!(lines.last().unwrap().contains("\"final\":true"));
+
+    // 2. Reconciliation over the structured rows behind the lines.
+    let rows = sink.rows();
+    assert_eq!(rows.len(), lines.len());
+    for w in rows.windows(2) {
+        assert!(w[1].t_ms > w[0].t_ms, "export clock not strictly increasing");
+    }
+    let mut sums = (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    for r in rows {
+        assert_eq!(r.offered, r.admitted + r.shed + r.malformed, "offered identity per row");
+        sums.0 += r.offered;
+        sums.1 += r.admitted;
+        sums.2 += r.shed;
+        sums.3 += r.malformed;
+        sums.4 += r.completed;
+        sums.5 += r.fused;
+    }
+    let admitted: u64 = snap.qos_admitted.iter().sum();
+    let shed: u64 = snap.qos_shed.iter().sum();
+    assert_eq!(sums.1, admitted, "interval admitted deltas sum to cumulative");
+    assert_eq!(sums.2, shed, "interval shed deltas sum to cumulative");
+    assert_eq!(sums.3, snap.rejected_malformed, "interval malformed deltas sum to cumulative");
+    assert_eq!(sums.0, admitted + shed + snap.rejected_malformed);
+    assert_eq!(sums.4, snap.completed, "interval completed deltas sum to cumulative");
+    assert_eq!(sums.5, snap.samples_fused, "interval fused deltas sum to cumulative");
+    assert_eq!(sums.3, 12);
+    assert_eq!(sums.0, 120);
+
+    // 3. Stage breakdown: one resolved span per completion, each stage
+    //    telescoping under end-to-end (small slack for the histogram's
+    //    1/128 floor quantization and clock-read skew).
+    assert_eq!(snap.stages.service.count, snap.completed);
+    assert_eq!(snap.stages.queue_wait.count, snap.completed);
+    assert_eq!(snap.stages.batch_wait.count, snap.completed);
+    assert!(
+        snap.stages.service.mean_us >= 200.0,
+        "service stage must cover the 300us mock engine delay, got {}",
+        snap.stages.service.mean_us
+    );
+    let stage_sum = snap.stages.queue_wait.mean_us
+        + snap.stages.batch_wait.mean_us
+        + snap.stages.service.mean_us;
+    assert!(
+        stage_sum <= snap.mean_latency_us * 1.02 + 50.0,
+        "stage means {stage_sum} exceed end-to-end mean {}",
+        snap.mean_latency_us
+    );
+    let p99_sum = snap.stages.queue_wait.p99_us
+        + snap.stages.batch_wait.p99_us
+        + snap.stages.service.p99_us;
+    assert!(
+        p99_sum as f64 <= snap.p99_latency_us * 3.0 + 150.0,
+        "stage p99s {p99_sum} wildly exceed end-to-end p99 {}",
+        snap.p99_latency_us
+    );
+    // Conversion energy is attributed to the service stage only (zero
+    // on the ADC-free mock path, but the attribution must agree).
+    assert_eq!(snap.stages.service.energy_fj, snap.adc_energy_fj);
+    assert_eq!(snap.stages.queue_wait.energy_fj, 0.0);
+    assert_eq!(snap.stages.batch_wait.energy_fj, 0.0);
+}
+
+fn serve_fixed_load(telemetry: bool) -> (Vec<adcim::coordinator::InferenceResponse>, u64) {
+    let cfg = ServerConfig {
+        workers: 2,
+        batch: 8,
+        batch_deadline_us: 400,
+        telemetry,
+        ..Default::default()
+    };
+    let server = EdgeServer::start(&cfg, mock_engines(2, 100), RoutingPolicy::RoundRobin).unwrap();
+    let spec = LoadSpec {
+        mode: LoadMode::Closed { concurrency: 8 },
+        total: 96,
+        drain: Duration::from_secs(10),
+    };
+    let report = loadgen::run(&server, &spec, |i| {
+        server.submit(InferenceRequest::new(i, (i % 4) as u32, vec![(i % 10) as f32; 4]))
+    });
+    assert_eq!(report.completed, 96);
+    let mut responses = report.responses;
+    responses.sort_unstable_by_key(|r| r.id);
+    let snap = server.shutdown();
+    if telemetry {
+        assert_eq!(snap.stages.service.count, 96, "telemetry on: every span resolves");
+    } else {
+        assert_eq!(snap.stages.service.count, 0, "telemetry off: no spans recorded");
+        assert_eq!(snap.stages.queue_wait.count, 0);
+    }
+    (responses, snap.completed)
+}
+
+/// Telemetry is an observer: identical traffic served with stage
+/// spans + runtime sampling on vs. off must produce bit-identical
+/// logits and classes for every frame.
+#[test]
+fn telemetry_toggle_never_changes_results() {
+    let (on, on_completed) = serve_fixed_load(true);
+    let (off, off_completed) = serve_fixed_load(false);
+    assert_eq!(on_completed, off_completed);
+    assert_eq!(on.len(), off.len());
+    for (a, b) in on.iter().zip(&off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.logits, b.logits, "logit drift on frame {}", a.id);
+        assert!(a.error.is_none() && b.error.is_none());
+    }
+}

@@ -28,9 +28,18 @@
 #                        (WIRE_FUZZ_CASES, default 12000 — the ISSUE 6
 #                        "no reachable panic from hostile frame bytes"
 #                        gate). Requires the toolchain.
+#   --telemetry-smoke    run a short artifact-free loadgen
+#                        (`--engine mock`) with the streaming JSONL
+#                        exporter on and validate the emitted file
+#                        (python3): >= 2 lines, every line parses,
+#                        strictly increasing t_ms, exactly the last
+#                        line final, offered = admitted+shed+malformed
+#                        per line and per interval, and interval
+#                        deltas reconciling to the final cumulative
+#                        counters (ISSUE 9). Requires the toolchain.
 #
 # Usage: scripts/ci.sh [--require-toolchain] [--smoke-bench] [--fuzz-smoke]
-#        [extra cargo test args...]
+#        [--telemetry-smoke] [extra cargo test args...]
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -38,15 +47,25 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 REQUIRE_TOOLCHAIN=0
 SMOKE_BENCH=0
 FUZZ_SMOKE=0
+TELEMETRY_SMOKE=0
 EXTRA_ARGS=()
 for arg in "$@"; do
   case "$arg" in
     --require-toolchain) REQUIRE_TOOLCHAIN=1 ;;
     --smoke-bench) SMOKE_BENCH=1 ;;
     --fuzz-smoke) FUZZ_SMOKE=1 ;;
+    --telemetry-smoke) TELEMETRY_SMOKE=1 ;;
     *) EXTRA_ARGS+=("$arg") ;;
   esac
 done
+
+TMP_FILES=()
+cleanup() {
+  if [[ ${#TMP_FILES[@]} -gt 0 ]]; then
+    rm -f "${TMP_FILES[@]}"
+  fi
+}
+trap cleanup EXIT
 
 if command -v cargo >/dev/null 2>&1; then
   cd "$ROOT/rust"
@@ -62,9 +81,56 @@ if command -v cargo >/dev/null 2>&1; then
     WIRE_FUZZ_CASES="$FUZZ_BUDGET" cargo test -q --release --test wire_fuzz
   fi
 
+  if [[ "$TELEMETRY_SMOKE" == "1" ]]; then
+    TELEM_JSONL="$(mktemp "${TMPDIR:-/tmp}/telemetry_smoke.XXXXXX.jsonl")"
+    TMP_FILES+=("$TELEM_JSONL")
+    echo "ci.sh: telemetry smoke (mock engine loadgen, JSONL -> $TELEM_JSONL)"
+    cargo run --release --quiet -- loadgen --engine mock --requests 400 --qps 2000 \
+      --metrics-interval-ms 40 --metrics-out "$TELEM_JSONL"
+    if command -v python3 >/dev/null 2>&1; then
+      python3 - "$TELEM_JSONL" <<'PY'
+import json, sys
+lines = [l for l in open(sys.argv[1]).read().splitlines() if l.strip()]
+if len(lines) < 2:
+    sys.exit("ci.sh: telemetry smoke emitted %d line(s), want >= 2" % len(lines))
+rows, prev_t = [], -1.0
+for i, l in enumerate(lines):
+    try:
+        row = json.loads(l)
+    except ValueError as e:
+        sys.exit("ci.sh: telemetry line %d is not valid JSON (%s): %s" % (i, e, l))
+    if row.get("schema") != "adcim.telemetry.v1":
+        sys.exit("ci.sh: telemetry line %d has wrong schema tag" % i)
+    if row["t_ms"] <= prev_t:
+        sys.exit("ci.sh: t_ms not strictly increasing at line %d" % i)
+    prev_t = row["t_ms"]
+    if row["final"] != (i == len(lines) - 1):
+        sys.exit("ci.sh: 'final' must mark exactly the last line (line %d)" % i)
+    if row["offered"] != row["admitted"] + row["shed"] + row["rejected_malformed"]:
+        sys.exit("ci.sh: cumulative offered identity broken at line %d" % i)
+    iv = row["interval"]
+    if iv["offered"] != iv["admitted"] + iv["shed"] + iv["malformed"]:
+        sys.exit("ci.sh: interval offered identity broken at line %d" % i)
+    rows.append(row)
+last = rows[-1]
+for key, total in (("admitted", last["admitted"]), ("shed", last["shed"]),
+                   ("malformed", last["rejected_malformed"]),
+                   ("completed", last["completed"])):
+    delta_sum = sum(r["interval"][key] for r in rows)
+    if delta_sum != total:
+        sys.exit("ci.sh: interval %s deltas sum to %d, final cumulative is %d"
+                 % (key, delta_sum, total))
+print("ci.sh: telemetry smoke - %d validator-clean lines, deltas reconcile"
+      % len(lines))
+PY
+    else
+      echo "ci.sh: note - python3 unavailable, skipped telemetry JSONL validation" >&2
+    fi
+  fi
+
   if [[ "$SMOKE_BENCH" == "1" ]]; then
     SMOKE_JSON="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
-    trap 'rm -f "$SMOKE_JSON"' EXIT
+    TMP_FILES+=("$SMOKE_JSON")
     echo "ci.sh: smoke bench (BENCH_SMOKE=1, JSON -> $SMOKE_JSON)"
     BENCH_SMOKE=1 BENCH_JSON="$SMOKE_JSON" cargo bench --bench hotpath
     if command -v python3 >/dev/null 2>&1; then
@@ -97,6 +163,9 @@ else
   fi
   if [[ "$FUZZ_SMOKE" == "1" ]]; then
     echo "ci.sh: WARNING - --fuzz-smoke needs cargo; skipped" >&2
+  fi
+  if [[ "$TELEMETRY_SMOKE" == "1" ]]; then
+    echo "ci.sh: WARNING - --telemetry-smoke needs cargo; skipped" >&2
   fi
 fi
 
