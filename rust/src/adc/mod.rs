@@ -76,6 +76,26 @@ pub fn ideal_code(v: f64, vdd: f64, bits: u8) -> u32 {
     (t.max(0.0) as u32).min(n - 1)
 }
 
+/// Apply a converter gain/offset drift fault to an input voltage:
+/// `v' = gain·v + offset·vdd`, clamped back to the rails. The second
+/// return is `true` when the pre-clamp value left `[0, vdd]` — the
+/// pool's per-converter MAV sanity bound counts those excursions
+/// (`FaultStats::mav_out_of_bounds`).
+pub fn drifted(v: f64, gain: f64, offset: f64, vdd: f64) -> (f64, bool) {
+    let raw = gain * v + offset * vdd;
+    let oob = !(0.0..=vdd).contains(&raw);
+    (raw.clamp(0.0, vdd), oob)
+}
+
+/// Mid-bin calibration voltage for code `2^(bits−1)`: the centre of the
+/// mid-scale code bin, so a healthy converter's probe code is maximally
+/// robust to sub-LSB noise (the probe oracle compares against
+/// [`ideal_code`] within a tolerance).
+pub fn probe_voltage(vdd: f64, bits: u8) -> f64 {
+    let n = (1u32 << bits) as f64;
+    vdd * (n / 2.0 + 0.5) / n
+}
+
 /// Any converter style behind one clonable value — the construction-time
 /// choice point of [`crate::cim::pool::CimArrayPool`] and the subject of
 /// the trait-conformance property tests (`tests/adc_conformance.rs`).
@@ -153,5 +173,28 @@ mod tests {
     #[test]
     fn ideal_code_scales_with_vdd() {
         assert_eq!(ideal_code(0.425, 0.85, 5), 16);
+    }
+
+    #[test]
+    fn drift_clamps_and_flags_excursions() {
+        // Identity drift: untouched, in bounds.
+        assert_eq!(drifted(0.4, 1.0, 0.0, 1.0), (0.4, false));
+        // Gain pushes past the rail: clamped + flagged.
+        assert_eq!(drifted(0.8, 2.0, 0.0, 1.0), (1.0, true));
+        // Negative offset under the rail: clamped + flagged.
+        assert_eq!(drifted(0.1, 1.0, -0.5, 1.0), (0.0, true));
+        // In-range drift is not an excursion.
+        let (v, oob) = drifted(0.4, 1.1, 0.05, 1.0);
+        assert!((v - 0.49).abs() < 1e-12 && !oob);
+    }
+
+    #[test]
+    fn probe_voltage_sits_mid_bin() {
+        // 5 bits: centre of code-16 bin of 32 → ideal code 16 with
+        // half-LSB slack on both sides.
+        let v = probe_voltage(1.0, 5);
+        assert_eq!(ideal_code(v, 1.0, 5), 16);
+        assert_eq!(ideal_code(v - 0.4 / 32.0, 1.0, 5), 16);
+        assert_eq!(ideal_code(v + 0.4 / 32.0, 1.0, 5), 16);
     }
 }

@@ -158,6 +158,21 @@ impl SignMatrix {
         }
     }
 
+    /// Write entry (r, c): `plus == true` ⇒ +1, else −1. Used by the
+    /// fault layer to apply (and revert) stuck-cell injections around a
+    /// plane dispatch; the crossbar's derived constants do not depend
+    /// on matrix content, so no recomputation is needed.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, plus: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = r * self.words_per_row + c / 64;
+        if plus {
+            self.plus[w] |= 1 << (c % 64);
+        } else {
+            self.plus[w] &= !(1 << (c % 64));
+        }
+    }
+
     /// Exact row dot product with a {0,1} input vector:
     /// `Σ_c M[r,c]·x[c] = 2·|plus ∩ x| − |x|`.
     ///
@@ -238,6 +253,19 @@ mod tests {
                 assert_eq!(m.get(r, c), dense[r * 4 + c]);
             }
         }
+    }
+
+    #[test]
+    fn sign_matrix_set_flips_and_restores() {
+        let mut m = SignMatrix::hadamard(8);
+        let orig = m.get(3, 5);
+        m.set(3, 5, orig < 0);
+        assert_eq!(m.get(3, 5), -orig, "set flips the entry");
+        // Neighbours in the same packed word are untouched.
+        assert_eq!(m.get(3, 4), SignMatrix::hadamard(8).get(3, 4));
+        assert_eq!(m.get(3, 6), SignMatrix::hadamard(8).get(3, 6));
+        m.set(3, 5, orig > 0);
+        assert_eq!(m.get(3, 5), orig, "set restores the entry");
     }
 
     #[test]

@@ -219,6 +219,14 @@ impl Crossbar {
         &self.cfg
     }
 
+    /// Overwrite one programmed weight (`plus == true` ⇒ +1). The fault
+    /// layer uses this to apply and revert stuck-cell injections around
+    /// a plane dispatch; [`OpConstants`] depend only on geometry and
+    /// operating point, so nothing needs recomputation.
+    pub fn set_weight(&mut self, r: usize, c: usize, plus: bool) {
+        self.matrix.set(r, c, plus);
+    }
+
     /// Re-bias the array to a new operating point (Fig 7 sweeps).
     pub fn set_operating_point(&mut self, op: OperatingPoint) {
         self.cfg.op = op;

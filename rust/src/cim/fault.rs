@@ -1,0 +1,852 @@
+//! Deterministic analog fault injection and pool self-healing.
+//!
+//! Real analog fabrics degrade continuously: crossbar cells stick,
+//! memory-immersed converters drift, whole arrays die. Because the
+//! paper's area argument *shares* converters across coupling groups, a
+//! single faulty converter or array silently corrupts every group
+//! member's digitization — so this module gives the serving stack three
+//! layers of defence:
+//!
+//! 1. **Injection** — a [`FaultPlan`] of typed faults
+//!    ([`FaultKind::StuckCell`], [`FaultKind::ConverterDrift`],
+//!    [`FaultKind::ConverterDead`], [`FaultKind::ArrayDown`]) with each
+//!    onset expressed on the pool's **plane-slot clock** (the dispatch
+//!    cursor that [`super::pool::CimArrayPool::begin_transform`]
+//!    resets). Every effect is a pure function of a dispatch's slot
+//!    value and the static plan, so fused, batched and multi-threaded
+//!    paths replay bit-identically.
+//! 2. **Detection** — periodic calibration probes at every
+//!    `probe_interval`-th slot: each group's converter digitizes a
+//!    known mid-bin voltage whose exact code is precomputed
+//!    ([`crate::adc::probe_voltage`] + [`crate::adc::ideal_code`],
+//!    the PR-2 aligned-ideal property), and each array answers a
+//!    liveness ping. Failures feed a [`HealthLedger`] with debounced
+//!    per-unit state transitions ([`HealthStatus`]).
+//! 3. **Healing** — a quarantined converter's group reroutes its
+//!    conversions (healthy-peer / intra-array SAR fallback, one extra
+//!    cycle per conversion); a quarantined array is idled out of a
+//!    recomputed degraded [`InterleaveSchedule`]; a fully-dead group's
+//!    planes remap onto the next healthy group. [`FaultStats`] counts
+//!    the blast radius for metrics and JSONL telemetry.
+//!
+//! Probes are evaluated lazily but **monotonically** in slot order, and
+//! quarantine latches record the probe slot they fired at
+//! (`quarantined_at`), so a dispatch at slot `s` observes exactly the
+//! health state as of `s` regardless of the order submissions arrive —
+//! the arrival-order-independence half of the determinism contract.
+
+use crate::adc::{drifted, probe_voltage, Adc, AnyAdc};
+use crate::network::{InterleaveSchedule, Role, Topology};
+use crate::util::Rng;
+
+use super::crossbar::Crossbar;
+
+/// Stream salt separating probe noise draws from every serving stream.
+const PROBE_SEED_SALT: u64 = 0x50_52_4f_42_45; // "PROBE"
+
+/// One typed hardware fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A crossbar cell in `array`'s sign matrix stuck at `plus`
+    /// (`true` = +1, `false` = −1) from the onset slot onward.
+    StuckCell {
+        /// Pool array holding the faulty cell.
+        array: usize,
+        /// Matrix row of the cell.
+        row: usize,
+        /// Matrix column of the cell.
+        col: usize,
+        /// Stuck polarity: `true` sticks the cell at +1.
+        plus: bool,
+    },
+    /// `group`'s memory-immersed converter develops gain/offset error:
+    /// inputs become `gain·v + offset·vdd` (clamped to the rails).
+    ConverterDrift {
+        /// Coupling group whose converter drifts.
+        group: usize,
+        /// Multiplicative gain error (1.0 = none).
+        gain: f64,
+        /// Additive offset in units of `vdd`.
+        offset: f64,
+    },
+    /// `group`'s converter dies outright: every input reads 0 V.
+    ConverterDead {
+        /// Coupling group whose converter dies.
+        group: usize,
+    },
+    /// `array` stops computing: its MAVs read 0 V until the health
+    /// probes quarantine it out of the schedule.
+    ArrayDown {
+        /// Pool array that goes down.
+        array: usize,
+    },
+}
+
+/// A fault plus its onset on the plane-slot clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// First plane slot the fault affects. The slot clock restarts at
+    /// `begin_transform`, so onset `s` spares the first `s` plane
+    /// dispatches of every transform; onset 0 makes the fault
+    /// unconditional.
+    pub onset: u64,
+    /// What breaks.
+    pub kind: FaultKind,
+}
+
+/// A validated, seeded set of faults plus probe cadence knobs — the
+/// whole configuration of the fault layer. Construct via
+/// [`FaultPlan::parse`] or field-by-field, then hand to
+/// [`super::pool::CimArrayPool::set_fault_plan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for probe conversion noise (`Rng::for_stream` keyed per
+    /// probe slot × unit, salted away from every serving stream).
+    pub seed: u64,
+    /// The injected faults.
+    pub faults: Vec<Fault>,
+    /// Calibration probes fire at every slot divisible by this
+    /// interval; 0 disables probing (faults inject but never heal).
+    pub probe_interval: u64,
+    /// Probe failure threshold in output codes: a probe fails when
+    /// `|code − expected| > probe_tolerance`.
+    pub probe_tolerance: u32,
+    /// Consecutive probe failures before a unit is quarantined.
+    pub probe_debounce: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0xfa17,
+            faults: Vec::new(),
+            probe_interval: 2,
+            probe_tolerance: 1,
+            probe_debounce: 2,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a semicolon-separated fault list:
+    ///
+    /// - `stuck@SLOT=ARRAY,ROW,COL,+` (or `-`) — stuck cell,
+    /// - `drift@SLOT=GROUP,GAIN,OFFSET` — converter drift,
+    /// - `dead@SLOT=GROUP` — converter dead,
+    /// - `down@SLOT=ARRAY` — array down.
+    ///
+    /// e.g. `"dead@0=1;stuck@2=0,3,17,+"`. Whitespace around entries is
+    /// ignored; an empty string yields an empty plan (probes only).
+    /// Probe knobs keep their [`FaultPlan::default`] values.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            plan.faults.push(parse_entry(entry)?);
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Validate parameter ranges (index bounds are checked against the
+    /// pool's geometry at install time): drift gain finite in `[0, 4]`,
+    /// drift offset finite in `[−1, 1]`, probe debounce ≥ 1.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.probe_debounce == 0 {
+            return Err("fault plan: probe_debounce must be >= 1".into());
+        }
+        for f in &self.faults {
+            if let FaultKind::ConverterDrift { group, gain, offset } = f.kind {
+                if !gain.is_finite() || !(0.0..=4.0).contains(&gain) {
+                    return Err(format!(
+                        "fault plan: drift gain {gain} on group {group} outside [0, 4]"
+                    ));
+                }
+                if !offset.is_finite() || !(-1.0..=1.0).contains(&offset) {
+                    return Err(format!(
+                        "fault plan: drift offset {offset} on group {group} outside [-1, 1]"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate fault indices against a pool geometry.
+    pub fn validate_for(
+        &self,
+        n_arrays: usize,
+        n_groups: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Result<(), String> {
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::StuckCell { array, row, col, .. } => {
+                    if array >= n_arrays {
+                        return Err(format!("stuck cell array {array} >= {n_arrays} arrays"));
+                    }
+                    if row >= rows || col >= cols {
+                        return Err(format!(
+                            "stuck cell ({row}, {col}) outside {rows}x{cols} matrix"
+                        ));
+                    }
+                }
+                FaultKind::ConverterDrift { group, .. } | FaultKind::ConverterDead { group } => {
+                    if group >= n_groups {
+                        return Err(format!("converter fault group {group} >= {n_groups} groups"));
+                    }
+                }
+                FaultKind::ArrayDown { array } => {
+                    if array >= n_arrays {
+                        return Err(format!("array-down index {array} >= {n_arrays} arrays"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_entry(entry: &str) -> Result<Fault, String> {
+    let bad = |why: &str| format!("fault plan entry '{entry}': {why}");
+    let (head, args) = entry.split_once('=').ok_or_else(|| bad("missing '='"))?;
+    let (kind, onset) = head.split_once('@').ok_or_else(|| bad("missing '@SLOT'"))?;
+    let onset: u64 = onset.trim().parse().map_err(|_| bad("onset is not an integer"))?;
+    let parts: Vec<&str> = args.split(',').map(str::trim).collect();
+    let int = |s: &str| s.parse::<usize>().map_err(|_| bad("index is not an integer"));
+    let num = |s: &str| s.parse::<f64>().map_err(|_| bad("value is not a number"));
+    let kind = match kind.trim() {
+        "stuck" => {
+            if parts.len() != 4 {
+                return Err(bad("stuck needs ARRAY,ROW,COL,SIGN"));
+            }
+            let plus = match parts[3] {
+                "+" => true,
+                "-" => false,
+                _ => return Err(bad("stuck sign must be '+' or '-'")),
+            };
+            FaultKind::StuckCell {
+                array: int(parts[0])?,
+                row: int(parts[1])?,
+                col: int(parts[2])?,
+                plus,
+            }
+        }
+        "drift" => {
+            if parts.len() != 3 {
+                return Err(bad("drift needs GROUP,GAIN,OFFSET"));
+            }
+            FaultKind::ConverterDrift {
+                group: int(parts[0])?,
+                gain: num(parts[1])?,
+                offset: num(parts[2])?,
+            }
+        }
+        "dead" => {
+            if parts.len() != 1 {
+                return Err(bad("dead needs GROUP"));
+            }
+            FaultKind::ConverterDead { group: int(parts[0])? }
+        }
+        "down" => {
+            if parts.len() != 1 {
+                return Err(bad("down needs ARRAY"));
+            }
+            FaultKind::ArrayDown { array: int(parts[0])? }
+        }
+        other => return Err(bad(&format!("unknown fault kind '{other}'"))),
+    };
+    Ok(Fault { onset, kind })
+}
+
+/// Blast-radius accounting for the fault layer. Every field is a
+/// monotone count; `faults_injected` always equals the sum of the four
+/// per-type counters (they increment together).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults whose onset slot has been reached (each counted once).
+    pub faults_injected: u64,
+    /// Injected faults of kind [`FaultKind::StuckCell`].
+    pub stuck_cells: u64,
+    /// Injected faults of kind [`FaultKind::ConverterDrift`].
+    pub converters_drifting: u64,
+    /// Injected faults of kind [`FaultKind::ConverterDead`].
+    pub converters_dead: u64,
+    /// Injected faults of kind [`FaultKind::ArrayDown`].
+    pub arrays_down: u64,
+    /// Calibration probes evaluated (converter probes + array pings).
+    pub probes_run: u64,
+    /// Probes whose code missed the precomputed expectation.
+    pub probes_failed: u64,
+    /// Units (converters or arrays) quarantined by debounced failures.
+    pub quarantined: u64,
+    /// Plane dispatches that ran in any degraded mode (zeroed MAVs,
+    /// drifting/dead converter, reroute, or group remap).
+    pub degraded_planes: u64,
+    /// Conversions rerouted away from a quarantined converter.
+    pub conversions_rerouted: u64,
+    /// Digitized MAVs whose pre-clamp voltage left `[0, vdd]` — the
+    /// per-converter sanity bound (advisory; never triggers
+    /// quarantine, so lane timing cannot affect health transitions).
+    pub mav_out_of_bounds: u64,
+}
+
+impl FaultStats {
+    /// Accumulate `other` into `self`.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.faults_injected += other.faults_injected;
+        self.stuck_cells += other.stuck_cells;
+        self.converters_drifting += other.converters_drifting;
+        self.converters_dead += other.converters_dead;
+        self.arrays_down += other.arrays_down;
+        self.probes_run += other.probes_run;
+        self.probes_failed += other.probes_failed;
+        self.quarantined += other.quarantined;
+        self.degraded_planes += other.degraded_planes;
+        self.conversions_rerouted += other.conversions_rerouted;
+        self.mav_out_of_bounds += other.mav_out_of_bounds;
+    }
+
+    /// Counter-wise difference vs an earlier snapshot of the same
+    /// accumulator (all fields are monotone).
+    pub fn minus(&self, base: &FaultStats) -> FaultStats {
+        FaultStats {
+            faults_injected: self.faults_injected - base.faults_injected,
+            stuck_cells: self.stuck_cells - base.stuck_cells,
+            converters_drifting: self.converters_drifting - base.converters_drifting,
+            converters_dead: self.converters_dead - base.converters_dead,
+            arrays_down: self.arrays_down - base.arrays_down,
+            probes_run: self.probes_run - base.probes_run,
+            probes_failed: self.probes_failed - base.probes_failed,
+            quarantined: self.quarantined - base.quarantined,
+            degraded_planes: self.degraded_planes - base.degraded_planes,
+            conversions_rerouted: self.conversions_rerouted - base.conversions_rerouted,
+            mav_out_of_bounds: self.mav_out_of_bounds - base.mav_out_of_bounds,
+        }
+    }
+
+    /// True when every counter is zero (the inert-layer signature).
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
+    }
+
+    /// Sum of the four per-type injection counters — always equal to
+    /// `faults_injected` (asserted by tests and the CI fault smoke).
+    pub fn injected_by_type(&self) -> u64 {
+        self.stuck_cells + self.converters_drifting + self.converters_dead + self.arrays_down
+    }
+}
+
+/// Debounced health of one unit (converter or array).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// No outstanding probe failures.
+    Healthy,
+    /// `n` consecutive probe failures, below the debounce threshold.
+    Suspect(u32),
+    /// Debounce threshold reached; the unit is out of service.
+    Quarantined,
+}
+
+/// Per-unit debounce state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct UnitHealth {
+    streak: u32,
+    quarantined_at: Option<u64>,
+}
+
+impl UnitHealth {
+    /// Record one probe outcome at probe slot `p`; returns `true` on
+    /// the transition into quarantine.
+    fn note(&mut self, ok: bool, debounce: u32, p: u64) -> bool {
+        if self.quarantined_at.is_some() {
+            return false;
+        }
+        if ok {
+            self.streak = 0;
+            return false;
+        }
+        self.streak += 1;
+        if self.streak >= debounce {
+            self.quarantined_at = Some(p);
+            return true;
+        }
+        false
+    }
+
+    fn status(&self) -> HealthStatus {
+        match (self.quarantined_at, self.streak) {
+            (Some(_), _) => HealthStatus::Quarantined,
+            (None, 0) => HealthStatus::Healthy,
+            (None, n) => HealthStatus::Suspect(n),
+        }
+    }
+
+    /// Quarantine active for dispatches at `slot`?
+    fn quarantined_for(&self, slot: u64) -> bool {
+        self.quarantined_at.is_some_and(|q| q <= slot)
+    }
+}
+
+/// Per-converter and per-array health, fed by the calibration probes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthLedger {
+    converters: Vec<UnitHealth>,
+    arrays: Vec<UnitHealth>,
+}
+
+impl HealthLedger {
+    fn new(n_groups: usize, n_arrays: usize) -> Self {
+        HealthLedger {
+            converters: vec![UnitHealth::default(); n_groups],
+            arrays: vec![UnitHealth::default(); n_arrays],
+        }
+    }
+
+    /// Health of group `g`'s converter as of the latest evaluated probe.
+    pub fn converter_status(&self, g: usize) -> HealthStatus {
+        self.converters[g].status()
+    }
+
+    /// Health of array `a` as of the latest evaluated probe.
+    pub fn array_status(&self, a: usize) -> HealthStatus {
+        self.arrays[a].status()
+    }
+
+    /// Total units currently quarantined.
+    pub fn quarantined(&self) -> usize {
+        self.converters
+            .iter()
+            .chain(&self.arrays)
+            .filter(|u| u.quarantined_at.is_some())
+            .count()
+    }
+}
+
+/// Fault context of one plane dispatch — a pure function of the slot.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub(crate) struct SlotFault {
+    /// The computing array is down: its MAVs read 0 V.
+    pub computer_down: bool,
+    /// The serving converter is dead (pre-quarantine): inputs read 0 V.
+    pub dead: bool,
+    /// Composed active drift `(gain, offset)` on the serving converter.
+    pub drift: Option<(f64, f64)>,
+    /// The serving converter is quarantined: conversions reroute to the
+    /// healthy-peer / intra-array fallback at +1 cycle each.
+    pub reroute: bool,
+}
+
+impl SlotFault {
+    /// Any effect set (used for degraded-plane accounting).
+    fn any(&self) -> bool {
+        self.computer_down || self.dead || self.drift.is_some() || self.reroute
+    }
+}
+
+/// One stuck-cell application scoped to a single dispatch: applied to
+/// the computing array before the plane runs and reverted after, so
+/// effects stay pure per slot under any submission interleaving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct StuckApply {
+    /// Matrix row of the cell.
+    pub row: usize,
+    /// Matrix column of the cell.
+    pub col: usize,
+    /// Faulty polarity while the dispatch runs.
+    pub plus: bool,
+    /// Programmed polarity to restore afterwards.
+    pub orig: bool,
+}
+
+/// Everything the fault layer decided about one dispatch.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub(crate) struct Resolution {
+    /// Group whose lane (arrays + converter) serves this dispatch —
+    /// differs from `slot % n_groups` only after a full-group loss.
+    pub group: usize,
+    /// Absolute index of the computing array.
+    pub computer: usize,
+    /// Converter/array effects for this slot.
+    pub fault: SlotFault,
+    /// Stuck cells to apply around the computer's plane op.
+    pub stuck: Vec<StuckApply>,
+}
+
+/// A health epoch: the degraded schedule and group remap in force from
+/// `from_slot` onward (epoch 0 is the pristine schedule from slot 0).
+#[derive(Debug, Clone)]
+struct Epoch {
+    from_slot: u64,
+    schedule: InterleaveSchedule,
+    /// `serving[g]` = group whose lane serves group `g`'s slots.
+    serving: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct StuckInfo {
+    onset: u64,
+    array: usize,
+    apply: StuckApply,
+}
+
+/// The installed fault layer: static plan + lazily evaluated health
+/// timeline. Lives inside [`super::pool::CimArrayPool`].
+#[derive(Debug, Clone)]
+pub(crate) struct FaultLayer {
+    plan: FaultPlan,
+    topology: Topology,
+    phases: usize,
+    group_size: usize,
+    n_groups: usize,
+    stuck: Vec<StuckInfo>,
+    /// Per plan fault: onset reached and counted as injected.
+    applied: Vec<bool>,
+    ledger: HealthLedger,
+    epochs: Vec<Epoch>,
+    next_probe: u64,
+    stats: FaultStats,
+}
+
+impl FaultLayer {
+    /// Validate the plan against the pool geometry, capture the
+    /// programmed polarity of every stuck cell, and start the health
+    /// timeline at the pristine schedule.
+    pub(crate) fn install(
+        plan: FaultPlan,
+        arrays: &[Crossbar],
+        topology: &Topology,
+        phases: usize,
+    ) -> Result<Self, String> {
+        plan.validate()?;
+        let n_groups = topology.groups().len();
+        let rows = arrays.first().map_or(0, |a| a.rows());
+        let cols = arrays.first().map_or(0, |a| a.cols());
+        plan.validate_for(arrays.len(), n_groups, rows, cols)?;
+        let stuck = plan
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::StuckCell { array, row, col, plus } => Some(StuckInfo {
+                    onset: f.onset,
+                    array,
+                    apply: StuckApply {
+                        row,
+                        col,
+                        plus,
+                        orig: arrays[array].matrix().get(row, col) > 0,
+                    },
+                }),
+                _ => None,
+            })
+            .collect();
+        let applied = vec![false; plan.faults.len()];
+        let epochs = vec![Epoch {
+            from_slot: 0,
+            schedule: InterleaveSchedule::build(topology, phases),
+            serving: (0..n_groups).collect(),
+        }];
+        Ok(FaultLayer {
+            ledger: HealthLedger::new(n_groups, arrays.len()),
+            topology: topology.clone(),
+            phases,
+            group_size: topology.mode().group_size(),
+            n_groups,
+            stuck,
+            applied,
+            epochs,
+            next_probe: 0,
+            stats: FaultStats::default(),
+            plan,
+        })
+    }
+
+    /// Running blast-radius counters.
+    pub(crate) fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// The health ledger (latest evaluated probe state).
+    pub(crate) fn ledger(&self) -> &HealthLedger {
+        &self.ledger
+    }
+
+    /// Advance the health timeline to `slot` and resolve the dispatch
+    /// context for the slot's coupling group. Called on the coordinator
+    /// for every dispatch, in submission order; all returned effects
+    /// are pure functions of `slot`, so submission order cannot change
+    /// any outcome.
+    pub(crate) fn on_dispatch(&mut self, slot: u64, converters: &mut [AnyAdc]) -> Resolution {
+        self.advance_probes(slot, converters);
+        self.count_activations(slot);
+        let g = (slot as usize) % self.n_groups;
+        let phase = ((slot as usize) / self.n_groups) % self.phases;
+        let e = self.epoch_for(slot);
+        let serving = self.epochs[e].serving[g];
+        let pristine =
+            self.computer_for(0, phase, serving).expect("pristine schedule covers every group");
+        let (computer, orphaned) = match self.computer_for(e, phase, serving) {
+            Some(c) => (c, false),
+            // Every array of every group is quarantined: fall back to
+            // the pristine computer and zero its MAVs.
+            None => (pristine, true),
+        };
+        let computer_down = orphaned || self.down_active(computer, slot);
+        let mut fault = SlotFault { computer_down, ..SlotFault::default() };
+        if self.ledger.converters[serving].quarantined_for(slot) {
+            fault.reroute = true;
+        } else {
+            let (dead, drift) = self.converter_faults(serving, slot);
+            fault.dead = dead;
+            fault.drift = if dead { None } else { drift };
+        }
+        // Degraded when any converter/array effect is live, the group
+        // was remapped, or a health epoch moved the compute role off
+        // the pristine schedule's array.
+        if fault.any() || serving != g || computer != pristine {
+            self.stats.degraded_planes += 1;
+        }
+        let stuck: Vec<StuckApply> = self
+            .stuck
+            .iter()
+            .filter(|s| s.array == computer && slot >= s.onset)
+            .map(|s| s.apply)
+            .collect();
+        Resolution { group: serving, computer, fault, stuck }
+    }
+
+    /// Fold one dispatch's lane-side outcome back into the counters:
+    /// conversions that ran rerouted, and MAV sanity-bound excursions.
+    pub(crate) fn record_outcome(&mut self, fault: &SlotFault, conversions: u64, oob: u64) {
+        if fault.reroute {
+            self.stats.conversions_rerouted += conversions;
+        }
+        self.stats.mav_out_of_bounds += oob;
+    }
+
+    fn advance_probes(&mut self, slot: u64, converters: &mut [AnyAdc]) {
+        if self.plan.probe_interval == 0 {
+            return;
+        }
+        while self.next_probe <= slot {
+            let p = self.next_probe;
+            self.probe_round(p, converters);
+            self.next_probe += self.plan.probe_interval;
+        }
+    }
+
+    /// One probe round at probe slot `p`: every non-quarantined
+    /// converter digitizes the known mid-bin voltage (under whatever
+    /// faults are active at `p`), every non-quarantined array answers a
+    /// liveness ping, and debounced failures latch quarantines dated at
+    /// `p`. An array transition rebuilds the degraded schedule epoch.
+    fn probe_round(&mut self, p: u64, converters: &mut [AnyAdc]) {
+        let units = (self.n_groups + self.topology.n_arrays()) as u64;
+        for (g, adc) in converters.iter_mut().enumerate().take(self.n_groups) {
+            if self.ledger.converters[g].quarantined_at.is_some() {
+                continue;
+            }
+            let vdd = adc.vdd();
+            let mut v = probe_voltage(vdd, adc.bits());
+            let expected = adc.ideal_code(v);
+            let (dead, drift) = self.converter_faults(g, p);
+            if dead {
+                v = 0.0;
+            } else if let Some((gain, offset)) = drift {
+                v = drifted(v, gain, offset, vdd).0;
+            }
+            let mut rng = Rng::for_stream(self.plan.seed ^ PROBE_SEED_SALT, p * units + g as u64);
+            let code = adc.convert(v, &mut rng).code;
+            let ok = code.abs_diff(expected) <= self.plan.probe_tolerance;
+            self.stats.probes_run += 1;
+            if !ok {
+                self.stats.probes_failed += 1;
+            }
+            if self.ledger.converters[g].note(ok, self.plan.probe_debounce, p) {
+                self.stats.quarantined += 1;
+            }
+        }
+        let mut rebuilt = false;
+        for a in 0..self.topology.n_arrays() {
+            if self.ledger.arrays[a].quarantined_at.is_some() {
+                continue;
+            }
+            let ok = !self.down_active(a, p);
+            self.stats.probes_run += 1;
+            if !ok {
+                self.stats.probes_failed += 1;
+            }
+            if self.ledger.arrays[a].note(ok, self.plan.probe_debounce, p) {
+                self.stats.quarantined += 1;
+                rebuilt = true;
+            }
+        }
+        if rebuilt {
+            self.push_epoch(p);
+        }
+    }
+
+    /// Record a new health epoch at probe slot `p` from the current
+    /// set of quarantined arrays.
+    fn push_epoch(&mut self, p: u64) {
+        let down: Vec<bool> =
+            self.ledger.arrays.iter().map(|u| u.quarantined_at.is_some()).collect();
+        let schedule = InterleaveSchedule::build_degraded(&self.topology, self.phases, &down);
+        let groups = self.topology.groups();
+        let healthy: Vec<bool> =
+            groups.iter().map(|g| g.iter().any(|&a| !down[a])).collect();
+        let serving = (0..self.n_groups)
+            .map(|g| {
+                if healthy[g] {
+                    g
+                } else {
+                    (1..self.n_groups)
+                        .map(|k| (g + k) % self.n_groups)
+                        .find(|&h| healthy[h])
+                        .unwrap_or(g)
+                }
+            })
+            .collect();
+        self.epochs.push(Epoch { from_slot: p, schedule, serving });
+    }
+
+    fn count_activations(&mut self, slot: u64) {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.applied[i] || slot < f.onset {
+                continue;
+            }
+            self.applied[i] = true;
+            self.stats.faults_injected += 1;
+            match f.kind {
+                FaultKind::StuckCell { .. } => self.stats.stuck_cells += 1,
+                FaultKind::ConverterDrift { .. } => self.stats.converters_drifting += 1,
+                FaultKind::ConverterDead { .. } => self.stats.converters_dead += 1,
+                FaultKind::ArrayDown { .. } => self.stats.arrays_down += 1,
+            }
+        }
+    }
+
+    /// Latest epoch in force at `slot`.
+    fn epoch_for(&self, slot: u64) -> usize {
+        self.epochs.iter().rposition(|e| e.from_slot <= slot).expect("epoch 0 covers slot 0")
+    }
+
+    /// The compute-role member of `group` in epoch `e` at `phase`.
+    fn computer_for(&self, e: usize, phase: usize, group: usize) -> Option<usize> {
+        let base = group * self.group_size;
+        (base..base + self.group_size)
+            .find(|&a| self.epochs[e].schedule.role(phase, a) == Role::Compute)
+    }
+
+    /// Is an [`FaultKind::ArrayDown`] fault on `array` active at `slot`?
+    fn down_active(&self, array: usize, slot: u64) -> bool {
+        self.plan.faults.iter().any(|f| {
+            slot >= f.onset && matches!(f.kind, FaultKind::ArrayDown { array: a } if a == array)
+        })
+    }
+
+    /// Active converter faults on `group` at `slot`: dead flag plus the
+    /// composition of every active drift, folded in plan order
+    /// (`v → gain·v + offset·vdd` each).
+    fn converter_faults(&self, group: usize, slot: u64) -> (bool, Option<(f64, f64)>) {
+        let mut dead = false;
+        let mut drift: Option<(f64, f64)> = None;
+        for f in &self.plan.faults {
+            if slot < f.onset {
+                continue;
+            }
+            match f.kind {
+                FaultKind::ConverterDead { group: g } if g == group => dead = true,
+                FaultKind::ConverterDrift { group: g, gain, offset } if g == group => {
+                    let (pg, po) = drift.unwrap_or((1.0, 0.0));
+                    drift = Some((gain * pg, gain * po + offset));
+                }
+                _ => {}
+            }
+        }
+        (dead, drift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_kind() {
+        let p = FaultPlan::parse("stuck@2=0,3,17,+; drift@0=1,1.5,-0.25; dead@4=0; down@1=2")
+            .unwrap();
+        assert_eq!(p.faults.len(), 4);
+        assert_eq!(
+            p.faults[0],
+            Fault { onset: 2, kind: FaultKind::StuckCell { array: 0, row: 3, col: 17, plus: true } }
+        );
+        assert_eq!(
+            p.faults[1],
+            Fault {
+                onset: 0,
+                kind: FaultKind::ConverterDrift { group: 1, gain: 1.5, offset: -0.25 }
+            }
+        );
+        assert_eq!(p.faults[2], Fault { onset: 4, kind: FaultKind::ConverterDead { group: 0 } });
+        assert_eq!(p.faults[3], Fault { onset: 1, kind: FaultKind::ArrayDown { array: 2 } });
+        assert!(FaultPlan::parse("").unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "stuck@2=0,3,17",         // missing sign
+            "stuck@2=0,3,17,x",       // bad sign
+            "drift@=0,1.0,0.0",       // empty onset
+            "drift@0=0,nan,0.0",      // non-finite gain fails validate
+            "wobble@0=1",             // unknown kind
+            "dead@0",                 // missing '='
+            "down=3",                 // missing '@SLOT'
+            "drift@0=0,9.0,0.0",      // gain out of range
+            "drift@0=0,1.0,2.0",      // offset out of range
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn stats_invariant_and_merge_minus() {
+        let mut a = FaultStats {
+            faults_injected: 3,
+            stuck_cells: 1,
+            converters_drifting: 1,
+            converters_dead: 0,
+            arrays_down: 1,
+            probes_run: 10,
+            probes_failed: 4,
+            quarantined: 1,
+            degraded_planes: 7,
+            conversions_rerouted: 64,
+            mav_out_of_bounds: 2,
+        };
+        assert_eq!(a.injected_by_type(), a.faults_injected);
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.minus(&b), b);
+        assert_eq!(a.injected_by_type(), a.faults_injected);
+        assert!(FaultStats::default().is_zero());
+        assert!(!a.is_zero());
+    }
+
+    #[test]
+    fn debounce_latches_after_consecutive_failures_only() {
+        let mut u = UnitHealth::default();
+        assert!(!u.note(false, 3, 0));
+        assert_eq!(u.status(), HealthStatus::Suspect(1));
+        assert!(!u.note(true, 3, 2)); // success resets the streak
+        assert_eq!(u.status(), HealthStatus::Healthy);
+        assert!(!u.note(false, 3, 4));
+        assert!(!u.note(false, 3, 6));
+        assert!(u.note(false, 3, 8));
+        assert_eq!(u.status(), HealthStatus::Quarantined);
+        assert!(u.quarantined_for(8) && !u.quarantined_for(7));
+        // Already-quarantined units never transition again.
+        assert!(!u.note(false, 3, 10));
+    }
+}

@@ -32,6 +32,7 @@ pub mod bitplane;
 pub mod bitvec;
 pub mod crossbar;
 pub mod early_term;
+pub mod fault;
 pub mod pool;
 
 pub use bitplane::{
@@ -40,4 +41,5 @@ pub use bitplane::{
 pub use bitvec::{BitVec, SignMatrix};
 pub use crossbar::{Crossbar, CrossbarConfig};
 pub use early_term::{EarlyTermination, TermStats};
+pub use fault::{Fault, FaultKind, FaultPlan, FaultStats, HealthLedger, HealthStatus};
 pub use pool::{CimArrayPool, ConversionStats, PlaneRequest, PoolSpec};

@@ -48,15 +48,26 @@
 //! Per-conversion energy/cycles/comparisons accumulate in
 //! [`ConversionStats`] and thread up through the engines into
 //! [`crate::coordinator::Metrics`].
+//!
+//! A deterministic analog fault-injection and self-healing layer
+//! ([`super::fault`]) installs via [`CimArrayPool::set_fault_plan`]:
+//! each dispatch then resolves stuck cells, converter drift/death,
+//! array loss, calibration probes and quarantine reroutes as pure
+//! functions of its plane slot, so faulty runs remain bit-identical at
+//! any thread count, fused or sequential. Without a plan the layer is
+//! fully inert — the dispatch paths run the exact pre-fault code.
 
 use std::sync::Arc;
 
-use crate::adc::{Adc, AnyAdc, AsymmetricAdc, Conversion, ImmersedAdc, ImmersedMode};
+use crate::adc::{drifted, Adc, AnyAdc, AsymmetricAdc, Conversion, ImmersedAdc, ImmersedMode};
 use crate::network::{CouplingMode, InterleaveSchedule, Role, Topology};
 use crate::util::{Executor, Rng};
 
 use super::bitvec::{BitVec, SignMatrix};
 use super::crossbar::{Crossbar, CrossbarConfig};
+use super::fault::{
+    FaultLayer, FaultPlan, FaultStats, HealthLedger, Resolution, SlotFault, StuckApply,
+};
 
 /// Pool shape: how many arrays, what converter networking, how many
 /// output bits, whether the Fig 10 asymmetric comparison tree drives
@@ -275,22 +286,38 @@ fn decode_mav(
 /// *active* row; rows the `active` mask has pruned are gated (their
 /// slot reads 0.0, never consumed — the walk skips them). Exactly-once
 /// is structural here: the single pass converts or gates each row.
+///
+/// `fault` is the slot's resolved fault context (all-default when the
+/// fault layer is uninstalled, in which case the arithmetic below is
+/// exactly the pre-fault-layer path): a down computer skips the crossbar
+/// op and reads 0 V MAVs; a dead converter reads 0 V inputs; drift maps
+/// each MAV through `gain·v + offset·vdd` (rail-clamped, excursions
+/// counted in the returned out-of-bounds tally); reroute digitizes via
+/// the healthy fallback path at one extra cycle per conversion.
+#[allow(clippy::too_many_arguments)]
 fn run_plane_task(
     computer: &mut Crossbar,
     adc: &mut AnyAdc,
     mavs: &mut Vec<f64>,
     plane: &BitVec,
     active: Option<&[bool]>,
+    fault: SlotFault,
     rng: &mut Rng,
     out: &mut [f64],
-) -> ConversionStats {
+) -> (ConversionStats, u64) {
     let rows = computer.rows();
     debug_assert_eq!(out.len(), rows);
     mavs.resize(rows, 0.0);
-    computer.compute_mav_into(plane, rng, mavs);
+    if fault.computer_down {
+        mavs.fill(0.0);
+    } else {
+        computer.compute_mav_into(plane, rng, mavs);
+    }
     let ones = plane.count_ones() as f64;
     let per_count = computer.mav_volts_per_count();
+    let vdd = adc.vdd();
     let mut stats = ConversionStats::default();
+    let mut oob = 0u64;
     for (r, slot) in out.iter_mut().enumerate() {
         if active.is_some_and(|m| !m[r]) {
             // Per-row conversion gating (ISSUE 3): the schedule skips
@@ -299,11 +326,23 @@ fn run_plane_task(
             stats.gated += 1;
             continue;
         }
-        let (v, c) = decode_mav(per_count, adc, mavs[r], ones, rng);
+        let v_row = if fault.dead {
+            0.0
+        } else if let Some((gain, offset)) = fault.drift {
+            let (v, excursion) = drifted(mavs[r], gain, offset, vdd);
+            oob += u64::from(excursion);
+            v
+        } else {
+            mavs[r]
+        };
+        let (v, mut c) = decode_mav(per_count, adc, v_row, ones, rng);
+        if fault.reroute {
+            c.cycles += 1;
+        }
         *slot = v;
         stats.record(&c);
     }
-    stats
+    (stats, oob)
 }
 
 /// One fully-described plane dispatch — the unit of the fused batch
@@ -342,6 +381,12 @@ struct PlaneJob<'a> {
     stream: u64,
     plane: &'a BitVec,
     active: Option<&'a [bool]>,
+    /// Resolved fault context for this slot (default when no plan).
+    fault: SlotFault,
+    /// Stuck cells applied to the computer around this job and
+    /// reverted after — scoped per dispatch so effects stay a pure
+    /// function of the slot under any lane interleaving.
+    stuck: Vec<StuckApply>,
     out: &'a mut [f64],
 }
 
@@ -361,21 +406,30 @@ struct GroupLane<'a> {
 impl GroupLane<'_> {
     /// Run this lane's jobs in submission order — the only ordering
     /// that matters, since jobs in different lanes share no state.
-    fn run(self) -> Vec<(usize, ConversionStats)> {
+    /// Returns `(idx, stats, out_of_bounds)` per job.
+    fn run(self) -> Vec<(usize, ConversionStats, u64)> {
         let GroupLane { group, adc, mavs, jobs } = self;
         jobs.into_iter()
             .map(|job| {
                 let mut rng = Rng::for_stream(job.seed, job.stream);
-                let stats = run_plane_task(
-                    &mut group[job.computer],
+                let computer = &mut group[job.computer];
+                for s in &job.stuck {
+                    computer.set_weight(s.row, s.col, s.plus);
+                }
+                let (stats, oob) = run_plane_task(
+                    computer,
                     adc,
                     mavs,
                     job.plane,
                     job.active,
+                    job.fault,
                     &mut rng,
                     job.out,
                 );
-                (job.idx, stats)
+                for s in &job.stuck {
+                    computer.set_weight(s.row, s.col, s.orig);
+                }
+                (job.idx, stats, oob)
             })
             .collect()
     }
@@ -423,6 +477,10 @@ pub struct CimArrayPool {
     /// built at first parallel use otherwise. Cloned pools (worker-shard
     /// model clones) share the same runtime through the `Arc`.
     executor: Option<Arc<Executor>>,
+    /// Installed fault-injection/self-healing layer
+    /// ([`CimArrayPool::set_fault_plan`]); `None` leaves every dispatch
+    /// path exactly as fault-free (the inert guarantee).
+    fault: Option<FaultLayer>,
 }
 
 impl CimArrayPool {
@@ -505,6 +563,7 @@ impl CimArrayPool {
             plane_open: false,
             group_scratch,
             executor: None,
+            fault: None,
         }
     }
 
@@ -534,6 +593,46 @@ impl CimArrayPool {
     /// The runtime currently backing the parallel fan-out, if any.
     pub fn executor(&self) -> Option<&Arc<Executor>> {
         self.executor.as_ref()
+    }
+
+    /// Install (or clear, with `None`) a fault-injection plan. The plan
+    /// is validated against the pool geometry before anything changes;
+    /// on error the previous layer stays in place. With a plan
+    /// installed every plane dispatch resolves its fault context from
+    /// the pure per-slot clock (see [`super::fault`]); without one the
+    /// dispatch paths are bit-identical to a build without this module.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) -> Result<(), String> {
+        self.fault = match plan {
+            None => None,
+            Some(p) => Some(FaultLayer::install(
+                p,
+                &self.arrays,
+                &self.topology,
+                self.schedule.phases(),
+            )?),
+        };
+        Ok(())
+    }
+
+    /// Blast-radius counters of the installed fault layer — all zero
+    /// when no plan is installed (the inert signature telemetry keys
+    /// off).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault.as_ref().map(FaultLayer::stats).unwrap_or_default()
+    }
+
+    /// Health ledger of the installed fault layer (latest evaluated
+    /// probe state), if any.
+    pub fn health(&self) -> Option<&HealthLedger> {
+        self.fault.as_ref().map(FaultLayer::ledger)
+    }
+
+    /// Resolve the fault context for one dispatch slot, if a plan is
+    /// installed. Borrows the fault layer and the converters disjointly
+    /// (probe rounds digitize through the live converters).
+    fn resolve_slot(&mut self, slot: usize) -> Option<Resolution> {
+        let CimArrayPool { fault, converters, .. } = self;
+        fault.as_mut().map(|fl| fl.on_dispatch(slot as u64, converters))
     }
 
     /// Crossbar rows per array.
@@ -685,17 +784,36 @@ impl CimArrayPool {
         let rows = self.rows();
         assert_eq!(out.len(), rows, "output length != array rows");
         let n_groups = self.groups.len();
-        let phase = (self.cursor / n_groups) % self.schedule.phases();
-        let g = self.cursor % n_groups;
+        let slot = self.cursor;
         self.cursor += 1;
-        let computer = self.derive_computer(phase, g);
         let size = self.topology.mode().group_size();
+        // With a fault plan installed the layer resolves the slot's
+        // serving group/computer (possibly remapped by a health epoch)
+        // and effects; otherwise take the original schedule-only path.
+        let (g, computer, fault, stuck) = match self.resolve_slot(slot) {
+            Some(r) => (r.group, r.computer, r.fault, r.stuck),
+            None => {
+                let phase = (slot / n_groups) % self.schedule.phases();
+                let g = slot % n_groups;
+                (g, self.derive_computer(phase, g), SlotFault::default(), Vec::new())
+            }
+        };
         let local = computer - g * size;
         let group = &mut self.arrays[g * size..(g + 1) * size];
         let mut mavs = std::mem::take(&mut self.group_scratch[g]);
         let adc = &mut self.converters[g];
-        let res = run_plane_task(&mut group[local], adc, &mut mavs, x, active, rng, out);
+        for s in &stuck {
+            group[local].set_weight(s.row, s.col, s.plus);
+        }
+        let (res, oob) =
+            run_plane_task(&mut group[local], adc, &mut mavs, x, active, fault, rng, out);
+        for s in &stuck {
+            group[local].set_weight(s.row, s.col, s.orig);
+        }
         self.group_scratch[g] = mavs;
+        if let Some(fl) = self.fault.as_mut() {
+            fl.record_outcome(&fault, res.conversions, oob);
+        }
         self.apply_plane_result(rows as u64, &res);
     }
 
@@ -824,14 +942,26 @@ impl CimArrayPool {
         let threads = crate::util::executor::resolve_lanes(self.spec.threads);
 
         let mut queues: Vec<Vec<PlaneJob<'_>>> = (0..n_groups).map(|_| Vec::new()).collect();
+        // Per-submission fault contexts, kept for the post-run outcome
+        // fold (empty when no plan — the inert path allocates nothing).
+        let mut slot_faults: Vec<SlotFault> =
+            if self.fault.is_some() { Vec::with_capacity(n) } else { Vec::new() };
         for (i, req) in requests.into_iter().enumerate() {
             assert_eq!(req.out.len(), rows, "request output length != array rows");
             if let Some(mask) = req.active {
                 assert_eq!(mask.len(), rows, "active mask length != rows");
             }
-            let g = req.slot % n_groups;
-            let phase = (req.slot / n_groups) % phases;
-            let computer = self.derive_computer(phase, g) - g * size;
+            let (g, computer, fault, stuck) = match self.resolve_slot(req.slot) {
+                Some(r) => (r.group, r.computer - r.group * size, r.fault, r.stuck),
+                None => {
+                    let g = req.slot % n_groups;
+                    let phase = (req.slot / n_groups) % phases;
+                    (g, self.derive_computer(phase, g) - g * size, SlotFault::default(), Vec::new())
+                }
+            };
+            if self.fault.is_some() {
+                slot_faults.push(fault);
+            }
             queues[g].push(PlaneJob {
                 idx: i,
                 computer,
@@ -839,6 +969,8 @@ impl CimArrayPool {
                 stream: req.stream,
                 plane: req.plane,
                 active: req.active,
+                fault,
+                stuck,
                 out: req.out,
             });
         }
@@ -864,7 +996,7 @@ impl CimArrayPool {
             .map(|(((group, adc), mavs), jobs)| GroupLane { group, adc, mavs, jobs })
             .collect();
 
-        let results: Vec<(usize, ConversionStats)> = match executor {
+        let results: Vec<(usize, ConversionStats, u64)> = match executor {
             None => lanes.into_iter().flat_map(GroupLane::run).collect(),
             Some(exec) => {
                 // PR-1 shard pattern on the persistent runtime: lanes
@@ -895,8 +1027,17 @@ impl CimArrayPool {
 
         // Submission-order merge, whatever worker ran what.
         let mut ordered = vec![ConversionStats::default(); n];
-        for (idx, stats) in results {
+        let mut oob = vec![0u64; n];
+        for (idx, stats, o) in results {
             ordered[idx] = stats;
+            oob[idx] = o;
+        }
+        // Fold lane-side fault outcomes in submission order (pure u64
+        // sums — order-free totals, ordered anyway for uniformity).
+        if let Some(fl) = self.fault.as_mut() {
+            for (i, fault) in slot_faults.iter().enumerate() {
+                fl.record_outcome(fault, ordered[i].conversions, oob[i]);
+            }
         }
         ordered
     }
@@ -983,6 +1124,7 @@ impl CimArrayPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cim::fault::HealthStatus;
 
     fn plane(cols: usize, seed: u64, density: f64) -> BitVec {
         let mut rng = Rng::new(seed);
@@ -1404,5 +1546,254 @@ mod tests {
         // not an attempt to fabricate usize::MAX crossbars.
         let e = PoolSpec::parse(usize::MAX, "sar", 0, false).unwrap_err();
         assert!(e.contains("4096"), "{e}");
+    }
+
+    #[test]
+    fn dead_converter_zeroes_decodes_and_counts() {
+        // Group 0's converter dies at slot 0 with probing disabled
+        // (inject only, never heal): its planes decode from code 0
+        // (−|x| after the signed-sum decode), group 1 is untouched, and
+        // the blast radius is accounted.
+        let mut faulty = ideal_pool(ImmersedMode::Sar, 5);
+        let mut healthy = ideal_pool(ImmersedMode::Sar, 5);
+        let plan = FaultPlan { probe_interval: 0, ..FaultPlan::parse("dead@0=0").unwrap() };
+        faulty.set_fault_plan(Some(plan)).unwrap();
+        let x = plane(32, 3, 0.5);
+        let ones = x.count_ones() as f64;
+        let mut out_f = vec![0.0; 32];
+        let mut out_h = vec![0.0; 32];
+        let mut rf = Rng::new(2);
+        let mut rh = Rng::new(2);
+        // Slot 0 → group 0 (dead converter), slot 1 → group 1 (healthy).
+        faulty.process_plane(&x, &mut rf, &mut out_f);
+        healthy.process_plane(&x, &mut rh, &mut out_h);
+        assert!(out_f.iter().all(|&v| v == -ones), "dead converter decodes code 0");
+        faulty.process_plane(&x, &mut rf, &mut out_f);
+        healthy.process_plane(&x, &mut rh, &mut out_h);
+        assert_eq!(out_f, out_h, "the other group is unaffected");
+        let fs = faulty.fault_stats();
+        assert_eq!(fs.faults_injected, 1);
+        assert_eq!(fs.converters_dead, 1);
+        assert_eq!(fs.injected_by_type(), fs.faults_injected);
+        assert_eq!(fs.degraded_planes, 1);
+        assert_eq!(fs.probes_run, 0);
+        assert_eq!(healthy.fault_stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn stuck_cell_perturbs_one_row_and_restores_the_matrix() {
+        let mut faulty = ideal_pool(ImmersedMode::Sar, 5);
+        let mut healthy = ideal_pool(ImmersedMode::Sar, 5);
+        // Slot 0 is (phase 0, group 0): find its compute-role array and
+        // stick one of its cells at the inverted polarity.
+        let computer = (0..2)
+            .find(|&a| faulty.schedule().role(0, a) == crate::network::Role::Compute)
+            .unwrap();
+        let orig = faulty.arrays()[computer].matrix().get(2, 3);
+        let sign = if orig > 0 { '-' } else { '+' };
+        let plan = FaultPlan {
+            probe_interval: 0,
+            ..FaultPlan::parse(&format!("stuck@0={computer},2,3,{sign}")).unwrap()
+        };
+        faulty.set_fault_plan(Some(plan)).unwrap();
+        // 31 of 32 bits set (|x| < cols keeps the ideal decode exact),
+        // including column 3, so the stuck cell must show in row 2.
+        let x = BitVec::from_bits(&(0..32).map(|i| i != 5).collect::<Vec<_>>());
+        let mut out_f = vec![0.0; 32];
+        let mut out_h = vec![0.0; 32];
+        faulty.process_plane(&x, &mut Rng::new(4), &mut out_f);
+        healthy.process_plane(&x, &mut Rng::new(4), &mut out_h);
+        for r in 0..32 {
+            if r == 2 {
+                assert_eq!(
+                    (out_f[r] - out_h[r]).abs(),
+                    2.0,
+                    "stuck cell flips exactly one ±1 weight"
+                );
+            } else {
+                assert_eq!(out_f[r], out_h[r], "row {r} untouched");
+            }
+        }
+        assert_eq!(
+            faulty.arrays()[computer].matrix().get(2, 3),
+            orig,
+            "programmed polarity restored after the dispatch"
+        );
+        assert_eq!(faulty.fault_stats().stuck_cells, 1);
+    }
+
+    #[test]
+    fn probes_quarantine_a_dead_converter_and_reroute_restores_decodes() {
+        // Probe timeline for a dead converter on group 0 (interval 1,
+        // debounce 2): fail at p=0 (suspect), fail at p=1 (quarantined
+        // at 1). Slot 0 still reads zeros; slot 2 reroutes and decodes
+        // healthy values at +1 cycle per conversion.
+        let mut faulty = ideal_pool(ImmersedMode::Sar, 5);
+        let mut healthy = ideal_pool(ImmersedMode::Sar, 5);
+        let plan = FaultPlan {
+            probe_interval: 1,
+            probe_debounce: 2,
+            ..FaultPlan::parse("dead@0=0").unwrap()
+        };
+        faulty.set_fault_plan(Some(plan)).unwrap();
+        let x = plane(32, 7, 0.4);
+        let ones = x.count_ones() as f64;
+        let mut rf = Rng::new(5);
+        let mut rh = Rng::new(5);
+        let mut out_f = vec![0.0; 32];
+        let mut out_h = vec![0.0; 32];
+        for slot in 0..4 {
+            faulty.process_plane(&x, &mut rf, &mut out_f);
+            healthy.process_plane(&x, &mut rh, &mut out_h);
+            if slot == 0 {
+                assert!(out_f.iter().all(|&v| v == -ones), "pre-quarantine slot reads code 0");
+            } else {
+                assert_eq!(out_f, out_h, "slot {slot} decodes healthy values");
+            }
+        }
+        let fs = faulty.fault_stats();
+        assert_eq!(fs.quarantined, 1);
+        assert!(fs.probes_failed >= 2);
+        assert_eq!(fs.conversions_rerouted, 32, "slot 2 rerouted all 32 rows");
+        assert_eq!(
+            faulty.stats().cycles,
+            healthy.stats().cycles + 32,
+            "reroute costs one extra cycle per conversion"
+        );
+        let ledger = faulty.health().unwrap();
+        assert_eq!(ledger.converter_status(0), HealthStatus::Quarantined);
+        assert_eq!(ledger.converter_status(1), HealthStatus::Healthy);
+        assert_eq!(ledger.quarantined(), 1);
+    }
+
+    #[test]
+    fn array_down_is_scheduled_out_by_the_degraded_epoch() {
+        // Array 0 is down from slot 0; probe p=0 (interval 1, debounce
+        // 1) quarantines it before the first dispatch resolves, so the
+        // degraded epoch hands group 0's compute role to array 1 and
+        // the decode stays exact — the line never stops.
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let plan = FaultPlan {
+            probe_interval: 1,
+            probe_debounce: 1,
+            ..FaultPlan::parse("down@0=0").unwrap()
+        };
+        pool.set_fault_plan(Some(plan)).unwrap();
+        let x = plane(32, 9, 0.5);
+        assert!((x.count_ones() as usize) < 32, "exact-decode precondition");
+        let exact = pool.arrays()[0].matrix().matvec(&x);
+        let mut rng = Rng::new(6);
+        let mut out = vec![0.0; 32];
+        for slot in 0..4 {
+            pool.process_plane(&x, &mut rng, &mut out);
+            if slot % 2 == 0 {
+                // Group 0 slots: computed by the surviving array 1.
+                for (r, e) in exact.iter().enumerate() {
+                    assert_eq!(out[r], *e as f64, "slot {slot} row {r}");
+                }
+            }
+        }
+        let ops: Vec<u64> = pool.arrays().iter().map(|a| a.ops()).collect();
+        assert_eq!(ops, vec![0, 2, 1, 1], "down array never computes; partner covers");
+        assert_eq!(pool.health().unwrap().array_status(0), HealthStatus::Quarantined);
+        let fs = pool.fault_stats();
+        assert_eq!(fs.arrays_down, 1);
+        assert_eq!(fs.quarantined, 1);
+        assert!(fs.degraded_planes >= 1, "epoch-remapped compute role counts as degraded");
+    }
+
+    #[test]
+    fn empty_plan_probes_only_leaves_serving_untouched() {
+        // A plan with no faults runs calibration probes off their own
+        // salted noise streams: serving outputs, stats and noise draws
+        // are bit-identical to a pool with no plan at all.
+        let mut probed = noisy_pool(4, 1);
+        let mut plain = noisy_pool(4, 1);
+        probed.set_fault_plan(Some(FaultPlan::default())).unwrap();
+        let planes: Vec<BitVec> = (0..6).map(|s| plane(32, 60 + s, 0.5)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..6).collect();
+        let mut out_p = vec![0.0; 6 * 32];
+        let mut out_n = vec![0.0; 6 * 32];
+        probed.process_planes(&refs, &streams, 0xbeef, None, &mut out_p);
+        plain.process_planes(&refs, &streams, 0xbeef, None, &mut out_n);
+        assert_eq!(out_p, out_n);
+        assert_eq!(probed.stats(), plain.stats());
+        let fs = probed.fault_stats();
+        assert!(fs.probes_run > 0);
+        assert_eq!(fs.quarantined, 0);
+        assert_eq!(fs.faults_injected, 0);
+        assert_eq!(fs.degraded_planes, 0);
+        assert_eq!(plain.fault_stats(), FaultStats::default());
+        // Clearing the plan returns to the inert signature.
+        probed.set_fault_plan(None).unwrap();
+        assert_eq!(probed.fault_stats(), FaultStats::default());
+        assert!(probed.health().is_none());
+    }
+
+    #[test]
+    fn install_rejects_out_of_range_indices() {
+        let mut pool = ideal_pool(ImmersedMode::Sar, 5);
+        let e = pool.set_fault_plan(Some(FaultPlan::parse("down@0=9").unwrap())).unwrap_err();
+        assert!(e.contains("arrays"), "{e}");
+        let e = pool.set_fault_plan(Some(FaultPlan::parse("dead@0=5").unwrap())).unwrap_err();
+        assert!(e.contains("groups"), "{e}");
+        let e = pool
+            .set_fault_plan(Some(FaultPlan::parse("stuck@0=0,99,0,+").unwrap()))
+            .unwrap_err();
+        assert!(e.contains("matrix"), "{e}");
+        // A failed install leaves no layer behind.
+        assert!(pool.health().is_none());
+        assert_eq!(pool.fault_stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn faulty_requests_match_sequential_dispatch_bit_for_bit() {
+        // The determinism contract under an active plan covering every
+        // fault kind: the fused deferred-accounting path on a threaded
+        // pool replays the sequential walk bit for bit — outputs,
+        // conversion stats, and the fault layer's own counters.
+        let make = |threads: usize| {
+            let mut p = noisy_pool(4, threads);
+            let plan = FaultPlan {
+                probe_interval: 2,
+                ..FaultPlan::parse("dead@0=0; drift@1=1,1.3,0.1; stuck@0=2,1,1,+; down@2=3")
+                    .unwrap()
+            };
+            p.set_fault_plan(Some(plan)).unwrap();
+            p
+        };
+        let planes: Vec<BitVec> = (0..10).map(|s| plane(32, 70 + s, 0.5)).collect();
+        let refs: Vec<&BitVec> = planes.iter().collect();
+        let streams: Vec<u64> = (0..10).collect();
+        let seed = 0x5eed;
+        let mut seq = make(1);
+        let mut out_s = vec![0.0; 10 * 32];
+        seq.process_planes(&refs, &streams, seed, None, &mut out_s);
+        let mut fused = make(4);
+        let mut out_f = vec![0.0; 10 * 32];
+        let requests: Vec<PlaneRequest<'_>> = out_f
+            .chunks_mut(32)
+            .enumerate()
+            .map(|(i, chunk)| PlaneRequest {
+                slot: i,
+                seed,
+                stream: streams[i],
+                plane: refs[i],
+                active: None,
+                out: chunk,
+            })
+            .collect();
+        let per = fused.process_plane_requests(requests);
+        for s in &per {
+            fused.apply_plane_stats(s);
+        }
+        assert_eq!(out_f, out_s);
+        assert_eq!(fused.stats(), seq.stats());
+        assert_eq!(fused.fault_stats(), seq.fault_stats());
+        let fs = seq.fault_stats();
+        assert_eq!(fs.faults_injected, 4, "every planned fault reached its onset");
+        assert_eq!(fs.injected_by_type(), fs.faults_injected);
+        assert!(fs.degraded_planes > 0);
     }
 }

@@ -131,6 +131,34 @@ pub struct ServerConfig {
     /// Fault-injection frame drop probability on the simulated link
     /// (`adcim serve --channel-drop`). 0 = clean.
     pub channel_drop: f64,
+    /// Frame truncation probability on the simulated link
+    /// (`--channel-truncate`). 0 = clean.
+    pub channel_truncate: f64,
+    /// Frame duplication probability on the simulated link
+    /// (`--channel-duplicate`). 0 = clean.
+    pub channel_duplicate: f64,
+    /// Pairwise frame reorder probability on the simulated link
+    /// (`--channel-reorder`). 0 = in-order.
+    pub channel_reorder: f64,
+    /// Analog fault-injection plan for the digitization pool
+    /// (`--fault-plan`, `[fault] plan`): semicolon-separated spec per
+    /// [`crate::cim::FaultPlan::parse`]; empty = no fault layer (the
+    /// serving path is byte-identical to a build without it).
+    pub fault_plan: String,
+    /// Calibration probe cadence in plane slots (`[fault]
+    /// probe_interval`); 0 = faults inject but never heal.
+    pub fault_probe_interval: u64,
+    /// Probe failure threshold in output codes (`[fault]
+    /// probe_tolerance`).
+    pub fault_probe_tolerance: u32,
+    /// Consecutive probe failures before quarantine (`[fault]
+    /// probe_debounce`; must be ≥ 1).
+    pub fault_probe_debounce: u32,
+    /// Shutdown join deadline in milliseconds
+    /// (`--shutdown-timeout-ms`): workers that outlive it are detached
+    /// and counted in the `shutdown_forced` metric. 0 = wait forever
+    /// (the legacy unconditional join).
+    pub shutdown_timeout_ms: u64,
     /// Adaptive batch close (`adcim serve --adaptive`): tune the
     /// effective batch size / deadline from the live served-batch
     /// histogram and the p99 target. Off = the static closer,
@@ -155,6 +183,9 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        // Probe-knob defaults mirror `FaultPlan::default` so a bare
+        // `--fault-plan` spec behaves like a hand-built default plan.
+        let fp = crate::cim::FaultPlan::default();
         ServerConfig {
             workers: 2,
             batch: 16,
@@ -176,6 +207,14 @@ impl Default for ServerConfig {
             retain: "keep".to_string(),
             channel_ber: 0.0,
             channel_drop: 0.0,
+            channel_truncate: 0.0,
+            channel_duplicate: 0.0,
+            channel_reorder: 0.0,
+            fault_plan: String::new(),
+            fault_probe_interval: fp.probe_interval,
+            fault_probe_tolerance: fp.probe_tolerance,
+            fault_probe_debounce: fp.probe_debounce,
+            shutdown_timeout_ms: 5000,
             adaptive: false,
             p99_target_us: 0,
             telemetry: true,
@@ -259,6 +298,40 @@ impl ServerConfig {
             // out-of-range probabilities with a real diagnostic.
             channel_ber: t.get_float("server", "channel_ber").unwrap_or(d.channel_ber),
             channel_drop: t.get_float("server", "channel_drop").unwrap_or(d.channel_drop),
+            channel_truncate: t
+                .get_float("server", "channel_truncate")
+                .unwrap_or(d.channel_truncate),
+            channel_duplicate: t
+                .get_float("server", "channel_duplicate")
+                .unwrap_or(d.channel_duplicate),
+            channel_reorder: t
+                .get_float("server", "channel_reorder")
+                .unwrap_or(d.channel_reorder),
+            // The `[fault]` table: the plan spec itself plus probe
+            // cadence knobs. The spec string passes through raw —
+            // FaultPlan::parse rejects bad entries with a real
+            // diagnostic at engine construction.
+            fault_plan: t.get_str("fault", "plan").unwrap_or(d.fault_plan),
+            // Negative cadences mean "probing off" (0), not a wrap.
+            fault_probe_interval: t
+                .get_int("fault", "probe_interval")
+                .unwrap_or(d.fault_probe_interval as i64)
+                .max(0) as u64,
+            // Out-of-range values pin to the extreme; FaultPlan's own
+            // validation rejects a zero debounce loudly.
+            fault_probe_tolerance: t
+                .get_int("fault", "probe_tolerance")
+                .unwrap_or(d.fault_probe_tolerance as i64)
+                .clamp(0, u32::MAX as i64) as u32,
+            fault_probe_debounce: t
+                .get_int("fault", "probe_debounce")
+                .unwrap_or(d.fault_probe_debounce as i64)
+                .clamp(0, u32::MAX as i64) as u32,
+            // Negative deadlines mean "wait forever" (0), not a wrap.
+            shutdown_timeout_ms: t
+                .get_int("server", "shutdown_timeout_ms")
+                .unwrap_or(d.shutdown_timeout_ms as i64)
+                .max(0) as u64,
             adaptive: t.get_bool("server", "adaptive").unwrap_or(d.adaptive),
             // Negative targets mean "no latency rule" (0), not a wrap.
             p99_target_us: t
@@ -372,6 +445,41 @@ mod tests {
         // to reject loudly at server startup.
         let t = TomlLite::parse("[server]\nchannel_ber = 1.5\n").unwrap();
         assert_eq!(ServerConfig::from_toml(&t).channel_ber, 1.5);
+    }
+
+    #[test]
+    fn from_toml_fault_and_shutdown_settings() {
+        let t = TomlLite::parse(
+            "[server]\nchannel_truncate = 0.02\nchannel_duplicate = 0.03\n\
+             channel_reorder = 0.04\nshutdown_timeout_ms = 750\n\
+             [fault]\nplan = \"dead@0=1;down@4=2\"\nprobe_interval = 8\n\
+             probe_tolerance = 2\nprobe_debounce = 3\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.channel_truncate, 0.02);
+        assert_eq!(s.channel_duplicate, 0.03);
+        assert_eq!(s.channel_reorder, 0.04);
+        assert_eq!(s.shutdown_timeout_ms, 750);
+        assert_eq!(s.fault_plan, "dead@0=1;down@4=2");
+        assert_eq!(s.fault_probe_interval, 8);
+        assert_eq!(s.fault_probe_tolerance, 2);
+        assert_eq!(s.fault_probe_debounce, 3);
+        let d = ServerConfig::from_toml(&TomlLite::default());
+        assert_eq!(d.fault_plan, "", "fault layer defaults off");
+        assert_eq!(d.shutdown_timeout_ms, 5000, "bounded shutdown defaults on");
+        let fp = crate::cim::FaultPlan::default();
+        assert_eq!(d.fault_probe_interval, fp.probe_interval);
+        assert_eq!(d.fault_probe_tolerance, fp.probe_tolerance);
+        assert_eq!(d.fault_probe_debounce, fp.probe_debounce);
+        // Negative cadences/deadlines mean "off", not a wrap.
+        let t = TomlLite::parse(
+            "[server]\nshutdown_timeout_ms = -1\n[fault]\nprobe_interval = -4\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_toml(&t);
+        assert_eq!(s.shutdown_timeout_ms, 0);
+        assert_eq!(s.fault_probe_interval, 0);
     }
 
     #[test]

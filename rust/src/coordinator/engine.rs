@@ -23,7 +23,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cim::{ConversionStats, CrossbarConfig, EarlyTermination, PoolSpec};
+use crate::cim::{
+    ConversionStats, CrossbarConfig, EarlyTermination, FaultPlan, FaultStats, HealthLedger,
+    PoolSpec,
+};
 use crate::frontend::codec::{CodecParams, CompressedFrame, DecodeScratch, LOSSLESS};
 use crate::nn::bwht_layer::BwhtExec;
 use crate::util::telemetry::RuntimeCounters;
@@ -67,6 +70,16 @@ pub trait InferenceEngine: Send {
     /// without a worker runtime report zeros.
     fn runtime_counters(&mut self) -> RuntimeCounters {
         RuntimeCounters::default()
+    }
+    /// Cumulative analog fault-injection / self-healing accounting
+    /// (monotone, like [`InferenceEngine::conversion_stats`]): faults
+    /// activated, probes run/failed, quarantines, degraded planes,
+    /// rerouted conversions. All zeros unless a
+    /// [`crate::cim::FaultPlan`] is installed — the serving loop
+    /// records per-batch deltas into [`super::Metrics`] only when they
+    /// are nonzero, so fault-free serving stays byte-identical.
+    fn fault_stats(&mut self) -> FaultStats {
+        FaultStats::default()
     }
     /// Logits for a batch of raw/compressed frame payloads. The default
     /// decodes every compressed frame to its dense form and defers to
@@ -213,6 +226,10 @@ pub struct AnalogEngine {
     /// worker-shard model clones, same baseline discipline as
     /// `shard_conv`.
     shard_planes: (u64, u64),
+    /// Fault-injection accounting merged back from worker-shard model
+    /// clones, same baseline discipline as `shard_conv`. Stays zero
+    /// (and untouched) without an installed fault plan.
+    shard_faults: FaultStats,
     /// Next sample stream offset, advanced per inferred sample so
     /// repeated `infer_batch` calls keep drawing fresh noise.
     next_stream: u64,
@@ -321,9 +338,9 @@ impl FoldedFirstLayer {
 }
 
 /// What one worker shard hands back: its slice's logits plus the
-/// clone's termination / conversion / pool-plane counters (merged
-/// against the prototype baseline by the caller).
-type ShardOutcome = (Vec<Vec<f32>>, u64, u64, ConversionStats, (u64, u64));
+/// clone's termination / conversion / pool-plane / fault counters
+/// (merged against the prototype baseline by the caller).
+type ShardOutcome = (Vec<Vec<f32>>, u64, u64, ConversionStats, (u64, u64), FaultStats);
 
 impl AnalogEngine {
     /// Build from artifacts, executing every BWHT layer on the analog
@@ -355,6 +372,7 @@ impl AnalogEngine {
             shard_term: (0, 0),
             shard_conv: ConversionStats::default(),
             shard_planes: (0, 0),
+            shard_faults: FaultStats::default(),
             next_stream: 0,
             decode_scratch: DecodeScratch::default(),
             compressed_fast_path: true,
@@ -429,6 +447,51 @@ impl AnalogEngine {
             }
         });
         Ok(self)
+    }
+
+    /// Install (or clear) an analog fault-injection plan on every BWHT
+    /// stage's digitization pool (`None` restores fault-free serving).
+    /// The plan's fault indices are validated against each pool's
+    /// geometry **here** — the layers' pools are built eagerly first —
+    /// so an out-of-range array or group is a clean error at engine
+    /// construction instead of a panic on a serving worker mid-batch.
+    /// Requires the pool to be configured first
+    /// ([`AnalogEngine::with_pool`]); without a pool the plan has
+    /// nothing to fault and this is a clean error too.
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Result<Self> {
+        if plan.is_some() {
+            let mut pooled = false;
+            self.model.for_each_bwht(|b| {
+                pooled |= matches!(b.exec, BwhtExec::Analog { pool: Some(_), .. });
+            });
+            anyhow::ensure!(
+                pooled,
+                "a fault plan targets the digitization pool; configure one first"
+            );
+        }
+        let mut err: Option<String> = None;
+        self.model.for_each_bwht(|b| {
+            b.prepare_analog();
+            if let Err(e) = b.set_fault_plan(plan.clone()) {
+                err.get_or_insert(e);
+            }
+        });
+        if let Some(e) = err {
+            anyhow::bail!("invalid fault plan: {e}");
+        }
+        Ok(self)
+    }
+
+    /// Visit the health ledger of every pooled BWHT stage carrying an
+    /// installed fault layer. Reads the prototype model — the state
+    /// single-threaded serving mutates in place; worker-shard clones
+    /// replay the same slot-pure timeline, so their ledgers agree.
+    pub fn for_each_health(&mut self, mut f: impl FnMut(&HealthLedger)) {
+        self.model.for_each_bwht(|b| {
+            if let Some(h) = b.health() {
+                f(h);
+            }
+        });
     }
 
     /// Access early-termination counters accumulated by the BWHT layers
@@ -615,6 +678,7 @@ impl AnalogEngine {
                 let mut skipped = 0;
                 let mut conv = ConversionStats::default();
                 let mut planes = (0u64, 0u64);
+                let mut faults = FaultStats::default();
                 shard_model.for_each_bwht(|b| {
                     processed += b.term_processed;
                     skipped += b.term_skipped;
@@ -622,19 +686,21 @@ impl AnalogEngine {
                     let (pd, pf) = b.pool_planes();
                     planes.0 += pd;
                     planes.1 += pf;
+                    faults.merge(&b.fault_stats());
                 });
-                Ok((out, processed, skipped, conv, planes))
+                Ok((out, processed, skipped, conv, planes, faults))
             });
         }
         let shard_results: Vec<Result<ShardOutcome>> = exec.run(tasks);
 
         // Shard clones inherit this model's counters at clone time; only
         // the delta beyond that baseline is work the shard itself did.
-        let (base_p, base_s, base_conv, base_planes) = {
+        let (base_p, base_s, base_conv, base_planes, base_faults) = {
             let mut p = 0;
             let mut s = 0;
             let mut c = ConversionStats::default();
             let mut pl = (0u64, 0u64);
+            let mut f = FaultStats::default();
             self.model.for_each_bwht(|b| {
                 p += b.term_processed;
                 s += b.term_skipped;
@@ -642,17 +708,19 @@ impl AnalogEngine {
                 let (pd, pf) = b.pool_planes();
                 pl.0 += pd;
                 pl.1 += pf;
+                f.merge(&b.fault_stats());
             });
-            (p, s, c, pl)
+            (p, s, c, pl, f)
         };
         let mut all = Vec::with_capacity(items.len());
         for res in shard_results {
-            let (logits, processed, skipped, conv, planes) = res?;
+            let (logits, processed, skipped, conv, planes, faults) = res?;
             self.shard_term.0 += processed - base_p;
             self.shard_term.1 += skipped - base_s;
             self.shard_conv.merge(&conv.minus(&base_conv));
             self.shard_planes.0 += planes.0 - base_planes.0;
             self.shard_planes.1 += planes.1 - base_planes.1;
+            self.shard_faults.merge(&faults.minus(&base_faults));
             all.extend(logits);
         }
         if self.lockstep {
@@ -861,6 +929,15 @@ impl InferenceEngine for AnalogEngine {
 
     fn samples_fused(&mut self) -> u64 {
         self.samples_fused
+    }
+
+    /// Fault-injection accounting: prototype-model layers plus the
+    /// merged worker-shard deltas (same baseline discipline as
+    /// [`AnalogEngine::conversion_stats`]). Zeros without a plan.
+    fn fault_stats(&mut self) -> FaultStats {
+        let mut total = self.shard_faults;
+        self.model.for_each_bwht(|b| total.merge(&b.fault_stats()));
+        total
     }
 
     /// Executor runtime counters plus CiM-pool plane accounting:

@@ -15,7 +15,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::cim::ConversionStats;
+use crate::cim::{ConversionStats, FaultStats};
 use crate::frontend::FrontendStats;
 use crate::util::stats::Moments;
 use crate::util::telemetry::{
@@ -105,6 +105,13 @@ struct Inner {
     finished: Option<Instant>,
     conv: ConversionStats,
     frontend: FrontendStats,
+    /// Accumulated fault-injection / self-healing counters (per-batch
+    /// deltas folded in by the serving workers; all zero without an
+    /// installed [`crate::cim::FaultPlan`]).
+    faults: FaultStats,
+    /// Workers abandoned at shutdown because they outlived the
+    /// configured join deadline (detached, not joined).
+    shutdown_forced: u64,
 }
 
 /// Snapshot for reporting.
@@ -187,6 +194,14 @@ pub struct MetricsSnapshot {
     /// fields — the exporter diffs successive snapshots of it for
     /// per-interval percentiles.
     pub latency_hist: LatencyHistogram,
+    /// Fault-injection / self-healing counters (blast radius of the
+    /// installed fault plan: injections by type, probe outcomes,
+    /// quarantines, degraded planes, rerouted conversions). All zero —
+    /// and absent from the summary line — without a plan.
+    pub faults: FaultStats,
+    /// Worker threads detached at shutdown after the join deadline
+    /// expired (0 when every worker joined in time).
+    pub shutdown_forced: u64,
 }
 
 /// Open the throughput window at the first metrics event of any kind
@@ -327,6 +342,26 @@ impl Metrics {
         self.inner.lock().unwrap().conv.merge(delta);
     }
 
+    /// Fold a per-batch delta of fault-injection counters into the
+    /// totals (same delta discipline as [`Metrics::record_conversions`];
+    /// workers skip the lock entirely on the all-zero deltas a
+    /// fault-free run produces).
+    pub fn record_faults(&self, delta: &FaultStats) {
+        if delta.is_zero() {
+            return;
+        }
+        self.inner.lock().unwrap().faults.merge(delta);
+    }
+
+    /// Count worker threads detached at shutdown after the join
+    /// deadline expired.
+    pub fn record_shutdown_forced(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().shutdown_forced += n;
+    }
+
     /// Fold frontend triage counters into the totals (the ingest side
     /// reports deltas, e.g. via [`super::EdgeServer::record_frontend`]).
     pub fn record_frontend(&self, delta: &FrontendStats) {
@@ -388,6 +423,8 @@ impl Metrics {
             },
             runtime: g.runtime.clone(),
             latency_hist: g.latency_hist.clone(),
+            faults: g.faults,
+            shutdown_forced: g.shutdown_forced,
         }
     }
 }
@@ -477,6 +514,21 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.stages.service.p50_us,
                 self.stages.service.p99_us
             )?;
+        }
+        if !self.faults.is_zero() {
+            write!(
+                f,
+                " faults: injected={} probes={}/{} quarantined={} degraded={} rerouted={}",
+                self.faults.faults_injected,
+                self.faults.probes_failed,
+                self.faults.probes_run,
+                self.faults.quarantined,
+                self.faults.degraded_planes,
+                self.faults.conversions_rerouted
+            )?;
+        }
+        if self.shutdown_forced > 0 {
+            write!(f, " shutdown_forced={}", self.shutdown_forced)?;
         }
         if !self.runtime.is_zero() {
             write!(
@@ -762,6 +814,45 @@ mod tests {
         // A run without stage samples keeps the line clean.
         let empty = Metrics::new().snapshot();
         assert!(!format!("{empty}").contains("stages"), "{empty}");
+    }
+
+    #[test]
+    fn fault_and_shutdown_counters_reach_snapshot_and_display() {
+        let m = Metrics::new();
+        m.record_completion(100);
+        m.record_faults(&FaultStats::default()); // no-op: lock-free path
+        let d = FaultStats {
+            faults_injected: 3,
+            converters_dead: 2,
+            arrays_down: 1,
+            probes_run: 8,
+            probes_failed: 2,
+            quarantined: 1,
+            degraded_planes: 5,
+            conversions_rerouted: 32,
+            ..Default::default()
+        };
+        m.record_faults(&d);
+        m.record_faults(&d);
+        m.record_shutdown_forced(0); // no-op
+        m.record_shutdown_forced(1);
+        let s = m.snapshot();
+        assert_eq!(s.faults.faults_injected, 6);
+        assert_eq!(s.faults.probes_run, 16);
+        assert_eq!(s.faults.degraded_planes, 10);
+        assert_eq!(s.shutdown_forced, 1);
+        let line = format!("{s}");
+        assert!(
+            line.contains("faults: injected=6 probes=4/16 quarantined=2 degraded=10 rerouted=64"),
+            "{line}"
+        );
+        assert!(line.contains("shutdown_forced=1"), "{line}");
+        // Fault-free runs keep the summary line clean.
+        let empty = Metrics::new().snapshot();
+        assert!(empty.faults.is_zero());
+        let eline = format!("{empty}");
+        assert!(!eline.contains("faults"), "{eline}");
+        assert!(!eline.contains("shutdown_forced"), "{eline}");
     }
 
     #[test]

@@ -148,6 +148,8 @@ pub struct EdgeServer {
     /// `cfg.retain` names; `KeepAll` pins everything to top priority).
     wire_policy: RetentionPolicy,
     threads: Vec<JoinHandle<()>>,
+    /// Shutdown join deadline (ms); 0 joins unconditionally.
+    shutdown_timeout_ms: u64,
 }
 
 impl EdgeServer {
@@ -210,7 +212,15 @@ impl EdgeServer {
 
         let wire_policy =
             RetentionPolicy::parse(&cfg.retain).map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok(EdgeServer { ingest_tx, response_rx, admission, metrics, wire_policy, threads })
+        Ok(EdgeServer {
+            ingest_tx,
+            response_rx,
+            admission,
+            metrics,
+            wire_policy,
+            threads,
+            shutdown_timeout_ms: cfg.shutdown_timeout_ms,
+        })
     }
 
     /// Submit a request; the error says *why* it was refused
@@ -293,11 +303,48 @@ impl EdgeServer {
     }
 
     /// Flush, stop all threads, return final metrics.
+    ///
+    /// Joining is bounded by `cfg.shutdown_timeout_ms`: a worker stuck
+    /// inside a wedged engine forward (the one thing panic isolation
+    /// can't catch) would otherwise hang the whole process on exit.
+    /// Workers that outlive the deadline are **detached** — their
+    /// handles dropped, the threads left to die with the process — and
+    /// counted in the snapshot's `shutdown_forced`. A timeout of 0
+    /// restores the legacy unconditional join.
     pub fn shutdown(self) -> super::metrics::MetricsSnapshot {
         let _ = self.ingest_tx.send(Ingest::Shutdown);
-        for t in self.threads {
-            let _ = t.join();
+        if self.shutdown_timeout_ms == 0 {
+            for t in self.threads {
+                let _ = t.join();
+            }
+            return self.metrics.snapshot();
         }
+        let deadline = Instant::now() + Duration::from_millis(self.shutdown_timeout_ms);
+        let mut pending = self.threads;
+        let forced = loop {
+            // Reap every thread that has already exited (join cannot
+            // block on a finished thread), keep waiting on the rest.
+            let mut still = Vec::with_capacity(pending.len());
+            for t in pending {
+                if t.is_finished() {
+                    let _ = t.join();
+                } else {
+                    still.push(t);
+                }
+            }
+            pending = still;
+            if pending.is_empty() {
+                break 0;
+            }
+            if Instant::now() >= deadline {
+                // Detach the stragglers: dropping a JoinHandle leaves
+                // the thread running, so shutdown returns instead of
+                // hanging; the count lands in the metrics.
+                break pending.len() as u64;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        self.metrics.record_shutdown_forced(forced);
         self.metrics.snapshot()
     }
 }
@@ -363,6 +410,7 @@ fn worker_loop(
     let mut last_conv = engine.conversion_stats();
     let mut last_fused = engine.samples_fused();
     let mut last_runtime = engine.runtime_counters();
+    let mut last_faults = engine.fault_stats();
     while let Ok(batch) = rx.recv() {
         depth.fetch_sub(1, Ordering::AcqRel);
         // Payloads travel as-is: compressed frames reach the engine
@@ -419,6 +467,12 @@ fn worker_loop(
         let fused = engine.samples_fused();
         metrics.record_samples_fused(fused - last_fused);
         last_fused = fused;
+        // Fault-free engines report all-zero deltas and the recorder
+        // skips the metrics lock entirely — this stays off the clean
+        // path's cost profile.
+        let faults = engine.fault_stats();
+        metrics.record_faults(&faults.minus(&last_faults));
+        last_faults = faults;
         if telemetry {
             let rc = engine.runtime_counters();
             metrics.record_runtime(&rc.minus(&last_runtime));
@@ -479,6 +533,40 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.completed, 20);
         assert_eq!(snap.errors, 0);
+        assert_eq!(snap.shutdown_forced, 0, "healthy workers join in time");
+        assert!(snap.faults.is_zero(), "no fault plan, no fault counters");
+    }
+
+    /// A worker wedged inside a long engine forward cannot hang
+    /// shutdown: the join deadline expires, the straggler is detached
+    /// and counted, and the caller gets its snapshot back promptly.
+    #[test]
+    fn bounded_shutdown_detaches_stuck_workers() {
+        let cfg = ServerConfig {
+            workers: 1,
+            batch: 1,
+            batch_deadline_us: 100,
+            shutdown_timeout_ms: 100,
+            ..Default::default()
+        };
+        let slow: Vec<Box<dyn InferenceEngine>> = vec![Box::new(MockEngine {
+            classes: 10,
+            input: 4,
+            delay: Duration::from_secs(10),
+        })];
+        let server = EdgeServer::start(&cfg, slow, RoutingPolicy::RoundRobin).unwrap();
+        server.submit(InferenceRequest::new(0, 0, vec![1.0; 4])).unwrap();
+        // Give the batcher time to seal and dispatch the batch so the
+        // worker is genuinely inside the 10 s forward.
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        let snap = server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown must not wait out the wedged forward"
+        );
+        assert_eq!(snap.shutdown_forced, 1, "the stuck worker was detached");
+        assert!(format!("{snap}").contains("shutdown_forced=1"), "{snap}");
     }
 
     #[test]

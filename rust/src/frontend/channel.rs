@@ -207,6 +207,23 @@ impl Channel {
     }
 }
 
+/// Dropping a channel with a frame still in the reorder holdback slot
+/// means a call site forgot `flush()` at end of stream — that frame was
+/// silently lost, which reads as a phantom drop in loss accounting.
+/// Debug builds refuse; release builds stay permissive (a lossy link
+/// losing one more frame is degraded telemetry, not corruption).
+impl Drop for Channel {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            debug_assert!(
+                self.held.is_none(),
+                "channel dropped holding reordered frame {:?}: call flush() at end of stream",
+                self.held.as_ref().map(|(id, _)| *id)
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

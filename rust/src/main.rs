@@ -13,7 +13,7 @@
 
 use adcim::adc::{Adc, ImmersedAdc, ImmersedMode};
 use adcim::analog::NoiseModel;
-use adcim::cim::{CrossbarConfig, PoolSpec};
+use adcim::cim::{CrossbarConfig, FaultPlan, PoolSpec};
 use adcim::config::{ChipConfig, ServerConfig, TomlLite};
 #[cfg(feature = "xla")]
 use adcim::coordinator::DigitalEngine;
@@ -38,8 +38,10 @@ const VALUE_KEYS: &[&str] = &[
     "id", "out-dir", "config", "engine", "workers", "requests", "batch", "vdd", "clock",
     "bits", "mode", "artifacts", "policy", "threads", "pool", "adc-mode", "adc-bits",
     "pool-threads", "topk", "codec-bits", "retain", "sensor-bits", "select", "frames",
-    "channels", "side", "classes", "channel-ber", "channel-drop", "p99-target-us",
-    "qps", "burst", "concurrency", "metrics-interval-ms", "metrics-out",
+    "channels", "side", "classes", "channel-ber", "channel-drop", "channel-truncate",
+    "channel-duplicate", "channel-reorder", "p99-target-us", "qps", "burst",
+    "concurrency", "metrics-interval-ms", "metrics-out", "fault-plan", "probe-interval",
+    "probe-tolerance", "probe-debounce", "shutdown-timeout-ms",
 ];
 
 /// Parse a numeric flag *loudly*: an unparseable value is an error, not
@@ -75,7 +77,10 @@ fn main() -> Result<()> {
                  \x20       [--metrics-interval-ms MS [--metrics-out PATH]] [--no-telemetry]\n\
                  \x20       [--frontend --topk K --select all|topK|eF --codec-bits B\n\
                  \x20        --retain keep|triage]\n\
-                 \x20       [--channel-ber P --channel-drop P]\n\
+                 \x20       [--channel-ber P --channel-drop P --channel-truncate P\n\
+                 \x20        --channel-duplicate P --channel-reorder P]\n\
+                 \x20       [--fault-plan SPEC --probe-interval N --probe-tolerance LSB\n\
+                 \x20        --probe-debounce N] [--shutdown-timeout-ms MS]\n\
                  \x20       (--pool N serves the analog BWHT stages through an N-array\n\
                  \x20        collaborative digitization pool; 0/omitted = ADC-free 1-bit path;\n\
                  \x20        --pool-threads T fans the pool's coupling groups across T persistent\n\
@@ -86,10 +91,19 @@ fn main() -> Result<()> {
                  \x20        --frontend ingests through the frequency-domain sensor frontend:\n\
                  \x20        frames are sequency-compressed to the top K coefficients at B\n\
                  \x20        bits (0 = lossless) and triaged by the retention policy;\n\
-                 \x20        --channel-ber/--channel-drop push kept frames through a\n\
-                 \x20        deterministic fault-injecting wire channel — corrupted frames\n\
-                 \x20        are rejected at the validated ingest boundary, visible in the\n\
+                 \x20        --channel-* knobs push kept frames through a deterministic\n\
+                 \x20        fault-injecting wire channel (bit flips, drops, truncation,\n\
+                 \x20        duplication, pairwise reordering) — corrupted frames are\n\
+                 \x20        rejected at the validated ingest boundary, visible in the\n\
                  \x20        metrics line;\n\
+                 \x20        --fault-plan injects seeded analog faults into the pool\n\
+                 \x20        (stuck@SLOT=ARRAY,ROW,COL,+|- drift@SLOT=GROUP,GAIN,OFFSET\n\
+                 \x20        dead@SLOT=GROUP down@SLOT=ARRAY, ';'-separated); calibration\n\
+                 \x20        probes every --probe-interval slots quarantine faulty\n\
+                 \x20        converters/arrays after --probe-debounce failures beyond\n\
+                 \x20        --probe-tolerance LSB, and serving degrades without stopping;\n\
+                 \x20        --shutdown-timeout-ms bounds shutdown — unresponsive workers\n\
+                 \x20        are detached and counted (0 waits forever);\n\
                  \x20        --adaptive replaces the static batch closer with the\n\
                  \x20        self-tuning one: the effective batch size walks toward the\n\
                  \x20        served-histogram knee and the close deadline is retuned\n\
@@ -107,7 +121,8 @@ fn main() -> Result<()> {
                  \x20        --burst-sized bursts without waiting on responses\n\
                  \x20        (coordinated-omission honest); --closed keeps --concurrency\n\
                  \x20        requests in flight instead; --wire drives the validated\n\
-                 \x20        ingest boundary with encoded frames, QoS-scored by --retain;\n\
+                 \x20        ingest boundary with encoded frames, QoS-scored by --retain,\n\
+                 \x20        optionally through the lossy --channel-* wire model;\n\
                  \x20        with --metrics-interval-ms the run also prints a per-interval\n\
                  \x20        timeline table from the streamed snapshots)\n\
                  compress [--frames N --channels C --side S --classes K --codec-bits B]\n\
@@ -278,6 +293,30 @@ fn apply_server_flags(args: &Args, server_cfg: &mut ServerConfig) -> Result<()> 
     if let Some(p) = parse_flag::<f64>(args, "channel-drop")? {
         server_cfg.channel_drop = p;
     }
+    if let Some(p) = parse_flag::<f64>(args, "channel-truncate")? {
+        server_cfg.channel_truncate = p;
+    }
+    if let Some(p) = parse_flag::<f64>(args, "channel-duplicate")? {
+        server_cfg.channel_duplicate = p;
+    }
+    if let Some(p) = parse_flag::<f64>(args, "channel-reorder")? {
+        server_cfg.channel_reorder = p;
+    }
+    if let Some(plan) = args.get("fault-plan") {
+        server_cfg.fault_plan = plan.to_string();
+    }
+    if let Some(i) = parse_flag::<u64>(args, "probe-interval")? {
+        server_cfg.fault_probe_interval = i;
+    }
+    if let Some(t) = parse_flag::<u32>(args, "probe-tolerance")? {
+        server_cfg.fault_probe_tolerance = t;
+    }
+    if let Some(d) = parse_flag::<u32>(args, "probe-debounce")? {
+        server_cfg.fault_probe_debounce = d;
+    }
+    if let Some(ms) = parse_flag::<u64>(args, "shutdown-timeout-ms")? {
+        server_cfg.shutdown_timeout_ms = ms;
+    }
     if args.flag("no-telemetry") {
         server_cfg.telemetry = false;
     }
@@ -305,6 +344,34 @@ fn build_sink(server_cfg: &ServerConfig, label: &str) -> Result<Option<Telemetry
         })?)
     };
     Ok(Some(TelemetrySink::new(out, server_cfg.metrics_interval_ms).with_label(label)))
+}
+
+/// Build the optional fault-injecting wire channel between the encoder
+/// and the coordinator's validated ingest boundary. Any nonzero (or
+/// invalid) knob builds a channel so bad values are rejected loudly;
+/// all-zero knobs mean no channel at all (the wire path stays a plain
+/// function call). Shared by `serve` and `loadgen --wire` so both drive
+/// the same lossy link model.
+fn build_channel(server_cfg: &ServerConfig) -> Result<Option<Channel>> {
+    let cfg = ChannelConfig {
+        ber: server_cfg.channel_ber,
+        drop_prob: server_cfg.channel_drop,
+        truncate_prob: server_cfg.channel_truncate,
+        duplicate_prob: server_cfg.channel_duplicate,
+        reorder_prob: server_cfg.channel_reorder,
+        seed: 0xc4a2,
+    };
+    let quiet = ChannelConfig { seed: cfg.seed, ..ChannelConfig::default() };
+    if cfg == quiet {
+        return Ok(None);
+    }
+    let ch = Channel::new(cfg).map_err(|e| anyhow::anyhow!("invalid channel model: {e}"))?;
+    println!(
+        "fault-injecting channel: BER {:.2e}, drop {:.2e}, truncate {:.2e}, \
+         duplicate {:.2e}, reorder {:.2e}",
+        cfg.ber, cfg.drop_prob, cfg.truncate_prob, cfg.duplicate_prob, cfg.reorder_prob
+    );
+    Ok(Some(ch))
 }
 
 /// Build one inference engine per configured worker (analog CiM, with
@@ -335,6 +402,34 @@ fn build_engines(
             "--pool requires --engine analog (the digital PJRT path has no CiM array pool)"
         );
     }
+    // Parse the fault plan once, outside the per-worker loop: an
+    // unparseable plan is a configuration error, reported before any
+    // engine spins up. Probe cadence knobs overlay the parsed plan.
+    let fault_plan = if server_cfg.fault_plan.is_empty() {
+        None
+    } else {
+        if pool.is_none() {
+            anyhow::bail!(
+                "--fault-plan injects into the collaborative digitization pool: \
+                 add --pool N (and --engine analog)"
+            );
+        }
+        let mut plan = FaultPlan::parse(&server_cfg.fault_plan)
+            .map_err(|e| anyhow::anyhow!("invalid fault plan: {e}"))?;
+        plan.probe_interval = server_cfg.fault_probe_interval;
+        plan.probe_tolerance = server_cfg.fault_probe_tolerance;
+        plan.probe_debounce = server_cfg.fault_probe_debounce;
+        plan.validate().map_err(|e| anyhow::anyhow!("invalid fault plan: {e}"))?;
+        println!(
+            "fault plan: {} injected fault(s), probe every {} slot(s) \
+             (tolerance {} LSB, debounce {})",
+            plan.faults.len(),
+            plan.probe_interval,
+            plan.probe_tolerance,
+            plan.probe_debounce
+        );
+        Some(plan)
+    };
     let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
     match server_cfg.engine.as_str() {
         "mock" => {
@@ -365,7 +460,8 @@ fn build_engines(
                 engines.push(Box::new(
                     AnalogEngine::load(&artifacts, cfg, None, 4, w as u64)?
                         .with_threads(server_cfg.engine_threads)
-                        .with_pool(pool)?,
+                        .with_pool(pool)?
+                        .with_fault_plan(fault_plan.clone())?,
                 ));
             }
         }
@@ -444,29 +540,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     // Optional fault-injecting wire channel between the encoder and the
-    // coordinator's validated ingest boundary. Any nonzero (or invalid)
-    // setting builds a channel so bad values are rejected loudly.
-    let mut channel = if server_cfg.channel_ber != 0.0 || server_cfg.channel_drop != 0.0 {
-        if frontend.is_none() {
-            anyhow::bail!(
-                "--channel-ber/--channel-drop need --frontend: faults apply to \
-                 compressed wire frames"
-            );
+    // coordinator's validated ingest boundary.
+    let mut channel = match build_channel(&server_cfg)? {
+        Some(ch) => {
+            if frontend.is_none() {
+                anyhow::bail!(
+                    "--channel-ber/--channel-drop (and friends) need --frontend: \
+                     faults apply to compressed wire frames"
+                );
+            }
+            Some(ch)
         }
-        let ch = Channel::new(ChannelConfig {
-            ber: server_cfg.channel_ber,
-            drop_prob: server_cfg.channel_drop,
-            seed: 0xc4a2,
-            ..ChannelConfig::default()
-        })
-        .map_err(|e| anyhow::anyhow!("invalid channel model: {e}"))?;
-        println!(
-            "fault-injecting channel: BER {:.2e}, drop {:.2e}",
-            server_cfg.channel_ber, server_cfg.channel_drop
-        );
-        Some(ch)
-    } else {
-        None
+        None => None,
     };
 
     let engine_name = engines[0].name();
@@ -631,6 +716,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let report = if args.flag("wire") {
         // Drive the validated ingest boundary with encoded wire bytes;
         // the server scores each frame's QoS priority from --retain.
+        // With any --channel-* knob set, the bytes cross the lossy link
+        // first: corrupted deliveries bounce off ingest as malformed,
+        // wire-dropped frames count as admitted here (the generator
+        // offered them; the channel stats line owns the loss).
         let params =
             CodecParams::new(1, input_dim, server_cfg.sensor_bits, server_cfg.codec_bits)
                 .map_err(|e| anyhow::anyhow!("invalid frontend codec: {e}"))?;
@@ -640,16 +729,42 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .enumerate()
             .map(|(i, f)| enc.encode_wire(f, i as u64))
             .collect();
-        loadgen::run_with_tick(
+        let mut channel = build_channel(&server_cfg)?;
+        let report = loadgen::run_with_tick(
             &server,
             &spec,
-            |i| server.submit_wire((i % 4) as u32, &wires[i as usize % distinct]).map(|_| ()),
+            |i| {
+                let stream = (i % 4) as u32;
+                let wire = &wires[i as usize % distinct];
+                match channel.as_mut() {
+                    Some(ch) => {
+                        let mut res = Ok(());
+                        for (_, bytes) in ch.transmit(i, wire) {
+                            if let Err(e) = server.submit_wire(stream, &bytes) {
+                                res = Err(e);
+                            }
+                        }
+                        res
+                    }
+                    None => server.submit_wire(stream, wire).map(|_| ()),
+                }
+            },
             || {
                 if let Some(s) = sink.as_mut() {
                     s.maybe_flush_with(|| server.metrics_snapshot());
                 }
             },
-        )
+        );
+        if let Some(ch) = &mut channel {
+            // Release a held-back reordered frame; its response (if any)
+            // lands outside the report's drain window, which is honest
+            // for a frame the link delivered after end of stream.
+            for (_, bytes) in ch.flush() {
+                let _ = server.submit_wire(0, &bytes);
+            }
+            println!("{}", ch.stats());
+        }
+        report
     } else {
         loadgen::run_with_tick(
             &server,

@@ -66,6 +66,39 @@ impl InterleaveSchedule {
         InterleaveSchedule { roles }
     }
 
+    /// Build a degraded schedule over only the *healthy* members of
+    /// each coupling group: arrays with `down[array] == true` are
+    /// pinned to [`Role::Idle`], the compute role rotates through the
+    /// survivors (the remaining healthy members serve as references),
+    /// and a group with no healthy member goes fully idle — the pool's
+    /// fault layer remaps its planes onto another group. With an
+    /// all-false mask this produces exactly
+    /// [`InterleaveSchedule::build`].
+    ///
+    /// Degraded schedules deliberately relax the reference-count
+    /// invariant of [`InterleaveSchedule::validate`] (a nearest
+    /// neighbour pair that lost one member computes every phase with
+    /// no digitize partner), so they are consumed by the fault-aware
+    /// dispatch path only and are never `validate`d.
+    pub fn build_degraded(topology: &Topology, phases: usize, down: &[bool]) -> Self {
+        assert_eq!(down.len(), topology.n_arrays(), "down-mask length != arrays");
+        let n = topology.n_arrays();
+        let mut roles = vec![vec![Role::Idle; n]; phases];
+        for group in topology.groups() {
+            let healthy: Vec<usize> = group.iter().copied().filter(|&a| !down[a]).collect();
+            if healthy.is_empty() {
+                continue;
+            }
+            for (ph, row) in roles.iter_mut().enumerate() {
+                let computer = healthy[ph % healthy.len()];
+                for &arr in &healthy {
+                    row[arr] = if arr == computer { Role::Compute } else { Role::Digitize };
+                }
+            }
+        }
+        InterleaveSchedule { roles }
+    }
+
     /// Phases in one full rotation.
     pub fn phases(&self) -> usize {
         self.roles.len()
@@ -201,6 +234,48 @@ mod tests {
             let s = InterleaveSchedule::build(&t, 1 + rng.index(12));
             s.validate(&t)
         });
+    }
+
+    #[test]
+    fn degraded_schedule_idles_down_arrays_and_matches_build_when_healthy() {
+        let t = Topology::new(4, CouplingMode::FlashGroup { refs: 3 });
+        let full = InterleaveSchedule::build(&t, 8);
+        let same = InterleaveSchedule::build_degraded(&t, 8, &[false; 4]);
+        for ph in 0..8 {
+            for a in 0..4 {
+                assert_eq!(full.role(ph, a), same.role(ph, a), "phase {ph} array {a}");
+            }
+        }
+        let degraded = InterleaveSchedule::build_degraded(&t, 8, &[false, true, false, false]);
+        for ph in 0..8 {
+            assert_eq!(degraded.role(ph, 1), Role::Idle, "down array must idle");
+            let computes =
+                (0..4).filter(|&a| degraded.role(ph, a) == Role::Compute).count();
+            assert_eq!(computes, 1, "phase {ph}: compute rotates through survivors");
+        }
+        // Compute rotation covers exactly the healthy members.
+        let computers: Vec<usize> = (0..3)
+            .map(|ph| (0..4).find(|&a| degraded.role(ph, a) == Role::Compute).unwrap())
+            .collect();
+        assert_eq!(computers, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn degraded_schedule_idles_fully_down_group() {
+        let t = Topology::new(4, CouplingMode::NearestNeighbour);
+        let s = InterleaveSchedule::build_degraded(&t, 4, &[true, true, false, false]);
+        for ph in 0..4 {
+            assert_eq!(s.role(ph, 0), Role::Idle);
+            assert_eq!(s.role(ph, 1), Role::Idle);
+            let live =
+                (2..4).filter(|&a| s.role(ph, a) == Role::Compute).count();
+            assert_eq!(live, 1, "healthy pair keeps alternating");
+        }
+        // A solo survivor computes every phase (no digitize partner).
+        let solo = InterleaveSchedule::build_degraded(&t, 4, &[false, true, true, true]);
+        for ph in 0..4 {
+            assert_eq!(solo.role(ph, 0), Role::Compute);
+        }
     }
 
     #[test]

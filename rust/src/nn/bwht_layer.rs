@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::cim::{
     BitplaneEngine, CimArrayPool, ConversionStats, Crossbar, CrossbarConfig, EarlyTermination,
-    PoolSpec,
+    FaultPlan, FaultStats, PoolSpec,
 };
 use crate::util::{Executor, Rng};
 use crate::wht::{fwht_inplace, Bwht, BwhtLayout};
@@ -91,6 +91,12 @@ pub struct BwhtLayer {
     /// (`AnalogEngine`): handed to the pool at `prepare_analog` so
     /// batch shards and pool plane lanes draw from one set of workers.
     executor: Option<Arc<Executor>>,
+    /// Analog fault-injection plan (robustness harness): handed to the
+    /// pool at `prepare_analog` like the executor, so worker-shard
+    /// clones inherit the identical plan. `None` (the default) leaves
+    /// the pool's fault layer uninstalled — serving is byte-identical
+    /// to a build without the fault module.
+    fault_plan: Option<FaultPlan>,
     /// Early-termination accounting: coefficient columns processed.
     pub term_processed: u64,
     /// Early-termination accounting: coefficient columns skipped.
@@ -133,6 +139,7 @@ impl BwhtLayer {
             analog_stream: None,
             analog_batch_streams: None,
             executor: None,
+            fault_plan: None,
             term_processed: 0,
             term_skipped: 0,
             conv_stats: ConversionStats::default(),
@@ -216,6 +223,40 @@ impl BwhtLayer {
         }
     }
 
+    /// Install (or clear) an analog fault-injection plan. Stored on the
+    /// layer so a pool rebuilt after [`BwhtLayer::set_exec`] re-installs
+    /// it, and applied immediately when the pool is already built — the
+    /// same lifecycle as [`BwhtLayer::set_executor`]. Validation needs
+    /// the pool geometry: with a built pool the plan is validated here
+    /// (clean error), otherwise it is checked at the next
+    /// [`BwhtLayer::prepare_analog`]. No-op outside `BwhtExec::Analog`
+    /// with a pool (the plan simply never reaches a pool).
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) -> Result<(), String> {
+        if let Some(pool) = self.analog.as_mut().and_then(|e| e.pool_mut()) {
+            pool.set_fault_plan(plan.clone())?;
+        }
+        self.fault_plan = plan;
+        Ok(())
+    }
+
+    /// Telemetry read of this layer's pool fault counters (injection,
+    /// probe, quarantine, degraded-plane accounting) — zeros when the
+    /// layer has no built pool or no plan is installed. Serving engines
+    /// aggregate this across layers and worker-shard clones exactly
+    /// like [`BwhtLayer::pool_planes`].
+    pub fn fault_stats(&self) -> FaultStats {
+        self.analog
+            .as_ref()
+            .and_then(|e| e.pool())
+            .map_or(FaultStats::default(), CimArrayPool::fault_stats)
+    }
+
+    /// This layer's pool health ledger (per-converter and per-array
+    /// debounced probe state), if a fault layer is installed.
+    pub fn health(&self) -> Option<&crate::cim::HealthLedger> {
+        self.analog.as_ref().and_then(|e| e.pool()).and_then(CimArrayPool::health)
+    }
+
     /// Telemetry read of this layer's pool plane counters:
     /// `(planes_dispatched, planes_fused)`, zeros when the layer has no
     /// built pool. Serving engines aggregate this across layers (and
@@ -252,6 +293,14 @@ impl BwhtLayer {
                 // Share the serving engine's persistent runtime when one
                 // was injected (one worker set for shards + lanes).
                 built.set_executor(self.executor.clone());
+                // Re-install any stored fault plan on the fresh pool.
+                // Plans reaching this point were either validated when
+                // set (pool already built) or are validated now; an
+                // infeasible plan against a *rebuilt* geometry is a
+                // configuration bug worth stopping the line for.
+                built
+                    .set_fault_plan(self.fault_plan.clone())
+                    .expect("stored fault plan must fit the pool geometry");
                 eng.set_pool(Some(built));
             }
             self.analog = Some(eng);

@@ -612,6 +612,10 @@ impl TelemetrySink {
              \"exec\":{{\"tasks\":{},\"batches\":{},\"queue_high_water\":{},\"lanes\":{},\
              \"busy_ns\":{}}},\
              \"pool\":{{\"planes_dispatched\":{},\"planes_fused\":{}}},\
+             \"faults\":{{\"injected\":{},\"stuck_cells\":{},\"drifting\":{},\"dead\":{},\
+             \"arrays_down\":{},\"probes_run\":{},\"probes_failed\":{},\"quarantined\":{},\
+             \"degraded_planes\":{},\"rerouted\":{},\"mav_oob\":{}}},\
+             \"shutdown_forced\":{},\
              \"interval\":{{\"offered\":{},\"admitted\":{},\"shed\":{},\"malformed\":{},\
              \"completed\":{},\"errors\":{},\"fused\":{},\"p99_us\":{}}}}}",
             self.seq,
@@ -651,6 +655,18 @@ impl TelemetrySink {
             jarr(&snap.runtime.exec_busy_ns),
             snap.runtime.planes_dispatched,
             snap.runtime.planes_fused,
+            snap.faults.faults_injected,
+            snap.faults.stuck_cells,
+            snap.faults.converters_drifting,
+            snap.faults.converters_dead,
+            snap.faults.arrays_down,
+            snap.faults.probes_run,
+            snap.faults.probes_failed,
+            snap.faults.quarantined,
+            snap.faults.degraded_planes,
+            snap.faults.conversions_rerouted,
+            snap.faults.mav_out_of_bounds,
+            snap.shutdown_forced,
             d_adm + d_shed + d_mal,
             d_adm,
             d_shed,
@@ -859,6 +875,10 @@ mod tests {
         }
         assert!(lines[0].contains("\"final\":false"));
         assert!(lines[1].contains("\"final\":true"));
+        // Fault-free runs still carry the (all-zero) faults block, so
+        // downstream parsers see a stable schema.
+        assert!(lines[0].contains("\"faults\":{\"injected\":0"), "{}", lines[0]);
+        assert!(lines[0].contains("\"shutdown_forced\":0"), "{}", lines[0]);
         assert!(lines[1].contains("\"label\":\"unit \\\"test\\\"\""));
         // Interval deltas reconcile: rows sum to final cumulative.
         let rows = sink.rows();

@@ -1,0 +1,282 @@
+//! ISSUE 10 acceptance: the analog fault layer's determinism and
+//! accounting contracts.
+//!
+//! 1. With an active [`FaultPlan`], served results and every
+//!    [`FaultStats`] counter are **bit-identical** across the pool's
+//!    plane fan-out thread counts and the fused batched forward —
+//!    fault effects are pure functions of the plane-slot clock, so no
+//!    execution strategy can change an outcome.
+//! 2. Quarantine transitions are arrival-order independent: chunking
+//!    the same sample stream differently changes nothing.
+//! 3. The layer is fully inert when unconfigured: a pool that never saw
+//!    a plan and a pool whose plan was cleared serve identical bits and
+//!    report all-zero fault stats.
+//! 4. Every injected fault is accounted: `faults_injected` equals the
+//!    sum of the per-type counters, quarantines latch exactly once per
+//!    unit, and the degraded-plane count is exact.
+
+use std::time::Duration;
+
+use adcim::adc::ImmersedMode;
+use adcim::cim::{CrossbarConfig, FaultPlan, FaultStats, HealthStatus, PoolSpec};
+use adcim::config::ServerConfig;
+use adcim::coordinator::{
+    AnalogEngine, EdgeServer, InferenceEngine, InferenceRequest, RoutingPolicy,
+};
+use adcim::nn::bwht_layer::BwhtExec;
+use adcim::nn::model::bwht_mlp;
+use adcim::util::Rng;
+
+/// Analog digit-MLP engine with every BWHT stage behind a 4-array SAR
+/// pool (synthetic weights; no artifacts needed). Four arrays pair into
+/// two coupling groups, and each 16-wide transform dispatches 4 plane
+/// slots — enough geometry for every fault kind to land somewhere real.
+fn pooled_engine(pool_threads: usize, fuse_batch: bool) -> AnalogEngine {
+    let mut rng = Rng::new(1);
+    let mut model = bwht_mlp(36, 4, 16, &mut rng);
+    model.for_each_bwht(|b| {
+        b.set_exec(BwhtExec::Analog {
+            input_bits: 4,
+            config: CrossbarConfig::default(),
+            early_term: None,
+            seed: 42,
+            pool: Some(PoolSpec {
+                n_arrays: 4,
+                adc_bits: 4,
+                mode: ImmersedMode::Sar,
+                asymmetric: false,
+                threads: pool_threads,
+                fuse_batch,
+            }),
+        })
+    });
+    AnalogEngine::from_model(model, 36).with_threads(1)
+}
+
+/// One fault of every kind, all landing inside the first transform's
+/// slot range (0..4) so the whole lifecycle — injection, probe failure,
+/// debounced quarantine, reroute, degraded schedule — plays out:
+///
+/// - group 0's converter dies at slot 0 (probes at 0 and 2 both fail,
+///   so debounce 2 quarantines it at probe slot 2 → slot-2 dispatches
+///   reroute from then on),
+/// - group 1's converter drifts from slot 1 (fails only the slot-2
+///   probe → stays Suspect, never quarantined),
+/// - array 3 goes down at slot 0 (quarantined at probe slot 2 → the
+///   degraded schedule idles it out of group 1's rotation),
+/// - one cell of array 1 sticks at +1.
+fn plan() -> FaultPlan {
+    let mut p = FaultPlan::parse("dead@0=0; drift@1=1,1.2,0.1; down@0=3; stuck@0=1,2,5,+")
+        .expect("valid plan");
+    p.probe_interval = 2;
+    p.probe_tolerance = 1;
+    p.probe_debounce = 2;
+    p
+}
+
+fn faulty_engine(pool_threads: usize, fuse_batch: bool) -> AnalogEngine {
+    pooled_engine(pool_threads, fuse_batch)
+        .with_fault_plan(Some(plan()))
+        .expect("plan fits the pool geometry")
+}
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..36).map(|j| ((i * j + i) % 7) as f32 * 0.3).collect())
+        .collect()
+}
+
+/// Tentpole determinism contract: with faults active, logits and every
+/// fault counter are bit-identical at any pool thread count, fused or
+/// not.
+#[test]
+fn faulty_serving_is_pool_thread_and_fusion_invariant() {
+    let imgs = images(8);
+    let mut base = faulty_engine(1, false);
+    let want = base.infer_batch(&imgs).unwrap();
+    let want_faults = base.fault_stats();
+    let want_conv = base.conversion_stats();
+    assert!(want_faults.faults_injected > 0, "plan must actually fire");
+    for (threads, fuse) in [(2, false), (4, false), (1, true), (2, true), (4, true)] {
+        let mut e = faulty_engine(threads, fuse);
+        let got = e.infer_batch(&imgs).unwrap();
+        assert_eq!(got, want, "pool_threads={threads} fuse={fuse} changed faulty logits");
+        assert_eq!(
+            e.fault_stats(),
+            want_faults,
+            "pool_threads={threads} fuse={fuse} changed fault accounting"
+        );
+        assert_eq!(
+            e.conversion_stats().conversions,
+            want_conv.conversions,
+            "pool_threads={threads} fuse={fuse} changed conversion count"
+        );
+    }
+}
+
+/// Quarantine transitions (and everything downstream of them) are
+/// arrival-order independent: the same stream served in one batch, two
+/// chunks, or one sample at a time produces the same bits and the same
+/// final health/fault state.
+#[test]
+fn quarantine_is_chunking_invariant() {
+    let imgs = images(8);
+    let mut whole = faulty_engine(1, false);
+    let want = whole.infer_batch(&imgs).unwrap();
+    let want_faults = whole.fault_stats();
+
+    let mut halves = faulty_engine(1, false);
+    let mut got = halves.infer_batch(&imgs[..4]).unwrap();
+    got.extend(halves.infer_batch(&imgs[4..]).unwrap());
+    assert_eq!(got, want, "4+4 chunking changed faulty logits");
+    assert_eq!(halves.fault_stats(), want_faults, "4+4 chunking changed fault accounting");
+
+    let mut single = faulty_engine(1, false);
+    let mut got = Vec::new();
+    for img in &imgs {
+        got.extend(single.infer_batch(std::slice::from_ref(img)).unwrap());
+    }
+    assert_eq!(got, want, "per-sample serving changed faulty logits");
+    assert_eq!(single.fault_stats(), want_faults, "per-sample serving changed accounting");
+}
+
+/// Inertness: an engine whose plan was installed then cleared serves
+/// the same bits as one that never had a fault layer, and fault-free
+/// engines report all-zero stats.
+#[test]
+fn unconfigured_fault_layer_is_fully_inert() {
+    let imgs = images(6);
+    let mut never = pooled_engine(1, false);
+    let want = never.infer_batch(&imgs).unwrap();
+    assert!(never.fault_stats().is_zero());
+
+    let mut cleared = pooled_engine(1, false)
+        .with_fault_plan(Some(plan()))
+        .unwrap()
+        .with_fault_plan(None)
+        .unwrap();
+    let got = cleared.infer_batch(&imgs).unwrap();
+    assert_eq!(got, want, "cleared fault plan left residue in the serving path");
+    assert!(cleared.fault_stats().is_zero());
+
+    // An *empty* plan (probes only) must not perturb serving either:
+    // healthy probes pass, nothing degrades, outputs stay identical.
+    let empty = FaultPlan { faults: Vec::new(), ..plan() };
+    let mut probed = pooled_engine(1, false).with_fault_plan(Some(empty)).unwrap();
+    let got = probed.infer_batch(&imgs).unwrap();
+    assert_eq!(got, want, "healthy calibration probes changed served bits");
+    let s = probed.fault_stats();
+    assert!(s.probes_run > 0, "probing was configured on");
+    assert_eq!(s.probes_failed, 0);
+    assert_eq!(s.faults_injected, 0);
+    assert_eq!(s.quarantined, 0);
+    assert_eq!(s.degraded_planes, 0);
+    assert_eq!(s.conversions_rerouted, 0);
+}
+
+/// Exact blast-radius accounting for the canonical plan: one injection
+/// per kind, two debounced quarantines (dead converter + down array),
+/// the drifting converter held at Suspect, every plane of every
+/// transform degraded (each slot carries some active effect), and
+/// slot-2 conversions rerouted off the quarantined converter.
+#[test]
+fn every_injected_fault_is_accounted() {
+    let n = 8usize;
+    let mut e = faulty_engine(1, false);
+    let _ = e.infer_batch(&images(n)).unwrap();
+    let s = e.fault_stats();
+    assert_eq!(s.faults_injected, 4);
+    assert_eq!(s.injected_by_type(), s.faults_injected, "per-type counters must reconcile");
+    assert_eq!(
+        (s.stuck_cells, s.converters_drifting, s.converters_dead, s.arrays_down),
+        (1, 1, 1, 1)
+    );
+    assert_eq!(s.quarantined, 2, "dead converter + down array");
+    assert!(s.probes_run > 0);
+    assert!(s.probes_failed > 0);
+    // 4 plane slots per transform, all degraded: slot 0 dead converter,
+    // slot 1 drift, slot 2 reroute (post-quarantine), slot 3 drift.
+    assert_eq!(s.degraded_planes, 4 * n as u64);
+    // Slot-2 dispatches (16 rows each) reroute once per transform.
+    assert_eq!(s.conversions_rerouted, 16 * n as u64);
+}
+
+/// The health ledger exposes the debounced per-unit state machine:
+/// quarantined dead converter, Suspect drifting converter, quarantined
+/// down array, healthy everything else.
+#[test]
+fn health_ledger_reflects_probe_outcomes() {
+    let mut e = faulty_engine(1, false);
+    let _ = e.infer_batch(&images(2)).unwrap();
+    let mut statuses = Vec::new();
+    e.for_each_health(|h| {
+        statuses.push((
+            h.converter_status(0),
+            h.converter_status(1),
+            h.array_status(3),
+            h.array_status(0),
+            h.quarantined(),
+        ));
+    });
+    assert!(!statuses.is_empty(), "pooled stage must expose its ledger");
+    for (dead, drifting, down, fine, total) in statuses {
+        assert_eq!(dead, HealthStatus::Quarantined);
+        assert_eq!(drifting, HealthStatus::Suspect(1));
+        assert_eq!(down, HealthStatus::Quarantined);
+        assert_eq!(fine, HealthStatus::Healthy);
+        assert_eq!(total, 2);
+    }
+}
+
+/// End-to-end: a server whose only engine carries an active fault plan
+/// completes every request with zero panics and zero errors, and the
+/// blast radius reaches the metrics snapshot (and its Display line).
+#[test]
+fn faulty_serving_completes_end_to_end() {
+    let engines: Vec<Box<dyn InferenceEngine>> = vec![Box::new(faulty_engine(1, false))];
+    let cfg = ServerConfig { workers: 1, batch: 4, batch_deadline_us: 500, ..Default::default() };
+    let server = EdgeServer::start(&cfg, engines, RoutingPolicy::RoundRobin).unwrap();
+    let imgs = images(12);
+    let mut submitted = 0u64;
+    for (i, img) in imgs.iter().enumerate() {
+        if server.submit(InferenceRequest::new(i as u64, 0, img.clone())).is_ok() {
+            submitted += 1;
+        }
+    }
+    let mut got = 0u64;
+    while got < submitted {
+        match server.recv_response(Duration::from_secs(10)) {
+            Some(r) => {
+                assert!(r.error.is_none(), "faulty serving must degrade, not error");
+                got += 1;
+            }
+            None => break,
+        }
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, submitted);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.faults.faults_injected, 4);
+    assert_eq!(snap.faults.injected_by_type(), snap.faults.faults_injected);
+    assert_eq!(snap.faults.quarantined, 2);
+    assert_eq!(snap.faults.degraded_planes, 4 * submitted);
+    assert!(snap.to_string().contains("faults: injected=4"), "snapshot line: {snap}");
+    assert_eq!(snap.shutdown_forced, 0);
+}
+
+/// The stats algebra the shard-merge and telemetry layers lean on.
+#[test]
+fn fault_stats_algebra_reconciles() {
+    let mut e = faulty_engine(1, false);
+    let _ = e.infer_batch(&images(3)).unwrap();
+    let first = e.fault_stats();
+    let _ = e.infer_batch(&images(5)).unwrap();
+    let total = e.fault_stats();
+    let delta = total.minus(&first);
+    let mut recombined = first;
+    recombined.merge(&delta);
+    assert_eq!(recombined, total);
+    assert_eq!(delta.faults_injected, 0, "injections are latched once, not re-counted");
+    assert!(delta.degraded_planes > 0, "later transforms still run degraded");
+    assert_eq!(FaultStats::default().minus(&FaultStats::default()), FaultStats::default());
+}

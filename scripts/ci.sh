@@ -37,9 +37,22 @@
 #                        per line and per interval, and interval
 #                        deltas reconciling to the final cumulative
 #                        counters (ISSUE 9). Requires the toolchain.
+#   --fault-smoke        the ISSUE 10 robustness gate, two halves:
+#                        (a) the seeded fault-plan serving runs in
+#                        tests/fault_determinism.rs (synthetic-weight
+#                        pooled engines through the full EdgeServer —
+#                        the hosted runner has no trained artifacts):
+#                        zero panics, bit-identical results across
+#                        pool threads x fusion, and *exact*
+#                        degraded_planes / faults_injected accounting;
+#                        (b) a fault-free mock loadgen whose JSONL
+#                        lines must carry a well-formed, reconciling,
+#                        all-zero "faults" block + shutdown_forced
+#                        (the inert-layer signature). Requires the
+#                        toolchain.
 #
 # Usage: scripts/ci.sh [--require-toolchain] [--smoke-bench] [--fuzz-smoke]
-#        [--telemetry-smoke] [extra cargo test args...]
+#        [--telemetry-smoke] [--fault-smoke] [extra cargo test args...]
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -48,6 +61,7 @@ REQUIRE_TOOLCHAIN=0
 SMOKE_BENCH=0
 FUZZ_SMOKE=0
 TELEMETRY_SMOKE=0
+FAULT_SMOKE=0
 EXTRA_ARGS=()
 for arg in "$@"; do
   case "$arg" in
@@ -55,6 +69,7 @@ for arg in "$@"; do
     --smoke-bench) SMOKE_BENCH=1 ;;
     --fuzz-smoke) FUZZ_SMOKE=1 ;;
     --telemetry-smoke) TELEMETRY_SMOKE=1 ;;
+    --fault-smoke) FAULT_SMOKE=1 ;;
     *) EXTRA_ARGS+=("$arg") ;;
   esac
 done
@@ -128,6 +143,47 @@ PY
     fi
   fi
 
+  if [[ "$FAULT_SMOKE" == "1" ]]; then
+    echo "ci.sh: fault smoke (seeded fault-plan serving, exact blast-radius accounting)"
+    cargo test -q --release --test fault_determinism
+    FAULT_JSONL="$(mktemp "${TMPDIR:-/tmp}/fault_smoke.XXXXXX.jsonl")"
+    TMP_FILES+=("$FAULT_JSONL")
+    echo "ci.sh: fault smoke (fault-free JSONL faults block -> $FAULT_JSONL)"
+    cargo run --release --quiet -- loadgen --engine mock --requests 200 --qps 2000 \
+      --metrics-interval-ms 40 --metrics-out "$FAULT_JSONL"
+    if command -v python3 >/dev/null 2>&1; then
+      python3 - "$FAULT_JSONL" <<'PY'
+import json, sys
+KEYS = ("injected", "stuck_cells", "drifting", "dead", "arrays_down", "probes_run",
+        "probes_failed", "quarantined", "degraded_planes", "rerouted", "mav_oob")
+lines = [l for l in open(sys.argv[1]).read().splitlines() if l.strip()]
+if not lines:
+    sys.exit("ci.sh: fault smoke emitted no telemetry lines")
+for i, l in enumerate(lines):
+    row = json.loads(l)
+    ft = row.get("faults")
+    if ft is None:
+        sys.exit("ci.sh: line %d has no 'faults' block (stable-schema contract)" % i)
+    missing = [k for k in KEYS if k not in ft]
+    if missing:
+        sys.exit("ci.sh: line %d faults block missing keys %s" % (i, missing))
+    by_type = ft["stuck_cells"] + ft["drifting"] + ft["dead"] + ft["arrays_down"]
+    if ft["injected"] != by_type:
+        sys.exit("ci.sh: line %d injected=%d but per-type counters sum to %d"
+                 % (i, ft["injected"], by_type))
+    if "shutdown_forced" not in row:
+        sys.exit("ci.sh: line %d has no shutdown_forced counter" % i)
+    if any(ft[k] for k in KEYS) or row["shutdown_forced"]:
+        sys.exit("ci.sh: fault-free run reported nonzero fault/shutdown counters "
+                 "at line %d: %s" % (i, l))
+print("ci.sh: fault smoke - %d lines, faults block well-formed, reconciling, inert"
+      % len(lines))
+PY
+    else
+      echo "ci.sh: note - python3 unavailable, skipped fault JSONL validation" >&2
+    fi
+  fi
+
   if [[ "$SMOKE_BENCH" == "1" ]]; then
     SMOKE_JSON="$(mktemp "${TMPDIR:-/tmp}/bench_smoke.XXXXXX.json")"
     TMP_FILES+=("$SMOKE_JSON")
@@ -166,6 +222,9 @@ else
   fi
   if [[ "$TELEMETRY_SMOKE" == "1" ]]; then
     echo "ci.sh: WARNING - --telemetry-smoke needs cargo; skipped" >&2
+  fi
+  if [[ "$FAULT_SMOKE" == "1" ]]; then
+    echo "ci.sh: WARNING - --fault-smoke needs cargo; skipped" >&2
   fi
 fi
 
